@@ -1,0 +1,4 @@
+"""Build-time Python: L2 JAX programs + L1 Pallas kernels, AOT-lowered to HLO.
+
+Never imported at runtime — the Rust binary consumes artifacts/ only.
+"""

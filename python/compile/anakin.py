@@ -1,0 +1,159 @@
+"""The Anakin program: environment + action selection + update, one XLA program.
+
+This is the paper's Figure 2 realised for AOT export:
+
+    def step_and_update(...):   # 1) step agent+env T times (vmapped over B)
+                                # 2) compute the A2C/GAE objective (L1 kernel)
+                                # 3) differentiate through the loop, update
+    iterated = lax.scan(step_and_update, K)   # stay on device for K updates
+    # replication across cores happens in the Rust driver (see DESIGN.md §1:
+    # simulated cores are separate PJRT clients, so the cross-core pmean is
+    # performed by the Rust collective between program invocations).
+
+Two export modes:
+  * ``bundled`` — K updates in-graph, parameters returned after K steps
+    (the Colab-style self-contained Anakin unit; Rust averages *parameters*
+    across cores every outer call).
+  * ``psum``   — a single update returning *gradients* (plus a separate
+    ``apply`` program); Rust all-reduces the gradients between the two,
+    which is bit-exact synchronous data-parallelism — exactly where the
+    paper's in-graph ``psum`` sits.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import envs_jax, losses, optim
+
+
+@dataclass(frozen=True)
+class AnakinConfig:
+    batch: int = 64  # environments per core (vmap width)
+    unroll: int = 16  # T: steps per update
+    iters: int = 8  # K: updates per program invocation (bundled mode)
+    discount: float = 0.99
+    gae_lambda: float = 0.95
+    entropy_cost: float = 0.01
+    baseline_cost: float = 0.5
+
+
+def init_env_states(env, batch: int, seed: int) -> jax.Array:
+    """[B, state_size] initial states, deterministically derived from seed."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), batch)
+    return jax.vmap(env.reset)(keys)
+
+
+def _rollout_and_update(env, net, opt: optim.Optimiser, cfg: AnakinConfig):
+    """Returns f(params, opt_state, env_states, key) -> (..., grads, metrics).
+
+    The rollout uses the *current* parameters (on-policy); the loss re-applies
+    the network to the collected observations so the update differentiates
+    through the same forward computation (XLA fuses/CSEs the two uses — the
+    paper's "reuse the forward pass" point).
+    """
+    loss_cfg = losses.A2CConfig(
+        discount=cfg.discount,
+        gae_lambda=cfg.gae_lambda,
+        baseline_cost=cfg.baseline_cost,
+        entropy_cost=cfg.entropy_cost,
+        block_b=cfg.batch,
+    )
+
+    def rollout(params, env_states, key):
+        def step_fn(carry, step_key):
+            states = carry
+            obs = jax.vmap(env.observe)(states)  # [B, obs]
+            logits, _ = net.apply(params, obs)
+            k_act, k_env = jax.random.split(step_key)
+            actions = jax.random.categorical(k_act, logits)  # [B]
+            env_keys = jax.random.split(k_env, cfg.batch)
+            next_states, rewards, discs = jax.vmap(
+                lambda s, a, k: envs_jax.auto_reset_step(env, s, a, k, cfg.discount)
+            )(states, actions, env_keys)
+            return next_states, (obs, actions, rewards, discs)
+
+        step_keys = jax.random.split(key, cfg.unroll)
+        final_states, traj = jax.lax.scan(step_fn, env_states, step_keys)
+        return final_states, traj
+
+    def loss_fn(params, traj, final_obs):
+        obs, actions, rewards, discs = traj  # [T, B, ...]
+        t_len, batch = actions.shape
+        logits, values = net.apply(params, obs.reshape(t_len * batch, -1))
+        logits = logits.reshape(t_len, batch, -1)
+        values = values.reshape(t_len, batch)
+        _, bootstrap = net.apply(params, final_obs)
+        return losses.a2c_loss(
+            logits, values, bootstrap, actions, rewards, discs, loss_cfg
+        )
+
+    def one_update(params, opt_state, env_states, key):
+        k_roll, k_next = jax.random.split(key)
+        final_states, traj = rollout(params, env_states, k_roll)
+        final_obs = jax.vmap(env.observe)(final_states)
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, traj, final_obs
+        )
+        rewards = traj[2]
+        ep_reward = jnp.sum(rewards) / jnp.maximum(1.0, jnp.sum(traj[3] == 0.0))
+        metrics = jnp.concatenate([metrics, ep_reward[None]])  # [5]
+        return grads, metrics, final_states, k_next
+
+    return one_update
+
+
+def make_bundled(env, net, opt: optim.Optimiser, cfg: AnakinConfig):
+    """(params, opt_state, env_states [B,S], seed i32) ->
+    (params', opt_state', env_states', metrics [K,5])."""
+    one_update = _rollout_and_update(env, net, opt, cfg)
+
+    def program(params, opt_state, env_states, seed):
+        key = jax.random.PRNGKey(seed)
+
+        def body(carry, _):
+            params, opt_state, env_states, key = carry
+            grads, metrics, env_states, key = one_update(
+                params, opt_state, env_states, key
+            )
+            params, opt_state = opt.apply(params, opt_state, grads)
+            return (params, opt_state, env_states, key), metrics
+
+        (params, opt_state, env_states, _), metrics = jax.lax.scan(
+            body, (params, opt_state, env_states, key), None, length=cfg.iters
+        )
+        return params, opt_state, env_states, metrics
+
+    return program
+
+
+def make_psum_grad(env, net, opt: optim.Optimiser, cfg: AnakinConfig):
+    """(params, opt_state, env_states, seed) -> (grads, env_states', metrics [5]).
+
+    One update's gradients, to be all-reduced by the Rust collective and then
+    applied with the shared ``apply`` program (see sebulba.make_apply)."""
+    one_update = _rollout_and_update(env, net, opt, cfg)
+
+    def program(params, opt_state, env_states, seed):
+        key = jax.random.PRNGKey(seed)
+        grads, metrics, env_states, _ = one_update(params, opt_state, env_states, key)
+        return grads, env_states, metrics
+
+    return program
+
+
+def make_init(env, net, opt: optim.Optimiser, cfg: AnakinConfig):
+    """(seed i32) -> (params, opt_state, env_states) initialiser program."""
+
+    def program(seed):
+        key = jax.random.PRNGKey(seed)
+        k_par, k_env = jax.random.split(key)
+        params = net.spec.init_flat(k_par)
+        opt_state = opt.init_state(net.param_size)
+        env_keys = jax.random.split(k_env, cfg.batch)
+        env_states = jax.vmap(env.reset)(env_keys)
+        return params, opt_state, env_states
+
+    return program

@@ -1,0 +1,390 @@
+"""AOT driver: lower every exported program to HLO text + write the manifest.
+
+Usage (from the repo root, via `make artifacts`):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange format is **HLO text** (stablehlo -> XlaComputation ->
+``as_hlo_text()``), not a serialized ``HloModuleProto``: jax >= 0.5 emits
+protos with 64-bit instruction ids that the crate's xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md). Programs are lowered with ``return_tuple=True``
+so every artifact returns a tuple the Rust side unpacks uniformly.
+
+The manifest (``manifest.json``) records, per program: file name, input and
+output specs (name/dtype/shape); and per agent: network + optimiser + env
+metadata the Rust coordinator needs (flat param/opt sizes, obs shape, action
+count, trajectory geometry).
+
+XLA programs are shape-specialized, so bench sweeps (actor batch, trajectory
+length, learner shards) are materialised as explicit variants here —
+mirroring "recompile per config" on a real TPU pod.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import anakin, envs_jax, muzero, networks, optim, sebulba
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(fn, in_specs) -> str:
+    # keep_unused=True: the HLO signature must match the manifest even when a
+    # program ignores an input (e.g. psum_grad takes opt_state for interface
+    # symmetry but never reads it).
+    lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+_DTYPE_NAMES = {"float32": "f32", "int32": "i32", "uint32": "u32"}
+
+
+def _spec_json(name, s):
+    return {
+        "name": name,
+        "dtype": _DTYPE_NAMES[str(s.dtype)],
+        "shape": [int(d) for d in s.shape],
+    }
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.programs = {}
+        self.agents = {}
+
+    def export(self, name: str, fn, in_specs, in_names):
+        """Lower `fn` at `in_specs`, write `<name>.hlo.txt`, record manifest."""
+        out_specs = jax.eval_shape(fn, *in_specs)
+        if not isinstance(out_specs, (tuple, list)):
+            out_specs = (out_specs,)
+        text = to_hlo_text(fn, in_specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.programs[name] = {
+            "file": fname,
+            "inputs": [_spec_json(n, s) for n, s in zip(in_names, in_specs)],
+            "outputs": [_spec_json(f"out{i}", s) for i, s in enumerate(out_specs)],
+        }
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    def write_manifest(self):
+        manifest = {
+            "version": 1,
+            "jax_version": jax.__version__,
+            "programs": self.programs,
+            "agents": self.agents,
+        }
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+        print(f"  wrote manifest.json ({len(self.programs)} programs)")
+
+
+# ---------------------------------------------------------------------------
+# Agent definitions
+# ---------------------------------------------------------------------------
+
+
+def export_sebulba_mlp(ex: Exporter, tag: str, obs_dim: int, num_actions: int,
+                       infer_batches, grad_geoms, hidden=(64, 64),
+                       opt_kind="rmsprop", lr=2e-3):
+    """A Sebulba model-free agent on flat observations (catch/cartpole/chain).
+
+    grad_geoms: list of (T, B_shard) learner-program variants.
+    """
+    net = networks.MLPActorCritic(obs_dim=obs_dim, num_actions=num_actions, hidden=hidden)
+    opt = optim.Optimiser(kind=opt_kind, lr=lr, decay=0.99, eps=1e-5, max_grad_norm=40.0)
+    cfg = sebulba.SebulbaConfig()
+    p, o = net.param_size, opt.state_size(net.param_size)
+
+    ex.export(f"{tag}_init", sebulba.make_init(net, opt), (spec((), I32),), ("seed",))
+    for b in infer_batches:
+        ex.export(
+            f"{tag}_infer_b{b}",
+            sebulba.make_infer(net, cfg),
+            (spec((p,)), spec((b, obs_dim)), spec((), I32)),
+            ("params", "obs", "seed"),
+        )
+    ex.export(
+        f"{tag}_eval_b1",
+        sebulba.make_eval(net),
+        (spec((p,)), spec((1, obs_dim))),
+        ("params", "obs"),
+    )
+    for t, b in grad_geoms:
+        ex.export(
+            f"{tag}_grad_t{t}_b{b}",
+            sebulba.make_grad(net, cfg),
+            (
+                spec((p,)),
+                spec((t + 1, b, obs_dim)),
+                spec((t, b), I32),
+                spec((t, b)),
+                spec((t, b)),
+                spec((t, b, num_actions)),
+            ),
+            ("params", "obs", "actions", "rewards", "discounts", "behaviour_logits"),
+        )
+    ex.export(
+        f"{tag}_apply",
+        sebulba.make_apply(opt),
+        (spec((p,)), spec((o,)), spec((p,))),
+        ("params", "opt_state", "grads"),
+    )
+    ex.agents[tag] = {
+        "kind": "sebulba",
+        "net": "mlp",
+        "param_size": p,
+        "opt_size": o,
+        "obs_shape": [obs_dim],
+        "num_actions": num_actions,
+        "infer_batches": list(infer_batches),
+        "grad_geoms": [[t, b] for t, b in grad_geoms],
+    }
+
+
+def export_sebulba_conv(ex: Exporter, tag: str, height: int, width: int,
+                        in_channels: int, num_actions: int,
+                        infer_batches, grad_geoms,
+                        channels=(8, 16), dense=128, opt_kind="rmsprop", lr=1e-3):
+    """A Sebulba model-free agent on pixel observations (atari_like)."""
+    net = networks.ConvActorCritic(
+        height=height, width=width, in_channels=in_channels,
+        num_actions=num_actions, channels=channels, dense=dense,
+    )
+    opt = optim.Optimiser(kind=opt_kind, lr=lr, decay=0.99, eps=1e-5, max_grad_norm=40.0)
+    cfg = sebulba.SebulbaConfig()
+    p, o = net.param_size, opt.state_size(net.param_size)
+    obs_shape = (height, width, in_channels)
+
+    ex.export(f"{tag}_init", sebulba.make_init(net, opt), (spec((), I32),), ("seed",))
+    for b in infer_batches:
+        ex.export(
+            f"{tag}_infer_b{b}",
+            sebulba.make_infer(net, cfg),
+            (spec((p,)), spec((b,) + obs_shape), spec((), I32)),
+            ("params", "obs", "seed"),
+        )
+    ex.export(
+        f"{tag}_eval_b1",
+        sebulba.make_eval(net),
+        (spec((p,)), spec((1,) + obs_shape)),
+        ("params", "obs"),
+    )
+    for t, b in grad_geoms:
+        ex.export(
+            f"{tag}_grad_t{t}_b{b}",
+            sebulba.make_grad(net, cfg),
+            (
+                spec((p,)),
+                spec((t + 1, b) + obs_shape),
+                spec((t, b), I32),
+                spec((t, b)),
+                spec((t, b)),
+                spec((t, b, num_actions)),
+            ),
+            ("params", "obs", "actions", "rewards", "discounts", "behaviour_logits"),
+        )
+    ex.export(
+        f"{tag}_apply",
+        sebulba.make_apply(opt),
+        (spec((p,)), spec((o,)), spec((p,))),
+        ("params", "opt_state", "grads"),
+    )
+    ex.agents[tag] = {
+        "kind": "sebulba",
+        "net": "conv",
+        "param_size": p,
+        "opt_size": o,
+        "obs_shape": list(obs_shape),
+        "num_actions": num_actions,
+        "infer_batches": list(infer_batches),
+        "grad_geoms": [[t, b] for t, b in grad_geoms],
+    }
+
+
+def export_anakin(ex: Exporter, tag: str, env_kind: str, batch: int, unroll: int,
+                  iters: int, hidden=(64, 64), opt_kind="rmsprop", lr=3e-3, **env_kw):
+    """An Anakin agent on a pure-JAX environment (catch/gridworld)."""
+    env = envs_jax.make_env(env_kind, **env_kw)
+    net = networks.MLPActorCritic(obs_dim=env.obs_dim, num_actions=env.num_actions, hidden=hidden)
+    opt = optim.Optimiser(kind=opt_kind, lr=lr, decay=0.99, eps=1e-5, max_grad_norm=40.0)
+    cfg = anakin.AnakinConfig(batch=batch, unroll=unroll, iters=iters)
+    p, o = net.param_size, opt.state_size(net.param_size)
+    s = env.state_size
+
+    ex.export(
+        f"{tag}_init",
+        anakin.make_init(env, net, opt, cfg),
+        (spec((), I32),),
+        ("seed",),
+    )
+    ex.export(
+        f"{tag}_bundled",
+        anakin.make_bundled(env, net, opt, cfg),
+        (spec((p,)), spec((o,)), spec((batch, s)), spec((), I32)),
+        ("params", "opt_state", "env_states", "seed"),
+    )
+    ex.export(
+        f"{tag}_psum_grad",
+        anakin.make_psum_grad(env, net, opt, cfg),
+        (spec((p,)), spec((o,)), spec((batch, s)), spec((), I32)),
+        ("params", "opt_state", "env_states", "seed"),
+    )
+    ex.export(
+        f"{tag}_apply",
+        sebulba.make_apply(opt),
+        (spec((p,)), spec((o,)), spec((p,))),
+        ("params", "opt_state", "grads"),
+    )
+    ex.agents[tag] = {
+        "kind": "anakin",
+        "net": "mlp",
+        "env": env_kind,
+        "param_size": p,
+        "opt_size": o,
+        "obs_shape": [env.obs_dim],
+        "num_actions": env.num_actions,
+        "state_size": s,
+        "batch": batch,
+        "unroll": unroll,
+        "iters": iters,
+        "steps_per_call": batch * unroll * iters,
+    }
+
+
+def export_muzero(ex: Exporter, tag: str, obs_dim: int, num_actions: int,
+                  batch: int, unroll: int, grad_shards, latent=32, hidden=64,
+                  opt_kind="adam", lr=3e-4):
+    """The MuZero-lite agent (Rust MCTS drives repr/dynamics/predict)."""
+    net = networks.MuZeroNet(obs_dim=obs_dim, num_actions=num_actions, latent=latent, hidden=hidden)
+    opt = optim.Optimiser(kind=opt_kind, lr=lr, max_grad_norm=40.0)
+    cfg = muzero.MuZeroProgConfig(batch=batch, unroll=unroll)
+    p, o = net.param_size, opt.state_size(net.param_size)
+
+    ex.export(f"{tag}_init", muzero.make_init(net, opt), (spec((), I32),), ("seed",))
+    ex.export(
+        f"{tag}_represent_b{batch}",
+        muzero.make_represent(net),
+        (spec((p,)), spec((batch, obs_dim))),
+        ("params", "obs"),
+    )
+    ex.export(
+        f"{tag}_dynamics_b{batch}",
+        muzero.make_dynamics(net),
+        (spec((p,)), spec((batch, latent)), spec((batch,), I32)),
+        ("params", "latent", "actions"),
+    )
+    ex.export(
+        f"{tag}_predict_b{batch}",
+        muzero.make_predict(net),
+        (spec((p,)), spec((batch, latent))),
+        ("params", "latent"),
+    )
+    ex.export(
+        f"{tag}_dynpred_b{batch}",
+        muzero.make_dynamics_predict(net),
+        (spec((p,)), spec((batch, latent)), spec((batch,), I32)),
+        ("params", "latent", "actions"),
+    )
+    for b in grad_shards:
+        ex.export(
+            f"{tag}_grad_t{unroll}_b{b}",
+            muzero.make_grad(net, cfg),
+            (
+                spec((p,)),
+                spec((unroll + 1, b, obs_dim)),
+                spec((unroll, b), I32),
+                spec((unroll, b)),
+                spec((unroll, b)),
+                spec((unroll, b, num_actions)),
+            ),
+            ("params", "obs", "actions", "rewards", "discounts", "search_policies"),
+        )
+    ex.export(
+        f"{tag}_apply",
+        sebulba.make_apply(opt),
+        (spec((p,)), spec((o,)), spec((p,))),
+        ("params", "opt_state", "grads"),
+    )
+    ex.agents[tag] = {
+        "kind": "muzero",
+        "net": "muzero",
+        "param_size": p,
+        "opt_size": o,
+        "obs_shape": [obs_dim],
+        "num_actions": num_actions,
+        "latent": latent,
+        "batch": batch,
+        "unroll": unroll,
+        "grad_shards": list(grad_shards),
+    }
+
+
+# ---------------------------------------------------------------------------
+# The default artifact set (see DESIGN.md §4/§5 for the experiment mapping)
+# ---------------------------------------------------------------------------
+
+
+def build_all(out_dir: str, profile: str = "full") -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    ex = Exporter(out_dir)
+
+    print("[aot] sebulba catch (quickstart + core-split/traj-len ablations)")
+    export_sebulba_mlp(
+        ex, "seb_catch", obs_dim=50, num_actions=3,
+        infer_batches=[32, 64],
+        grad_geoms=[(20, 4), (20, 8), (20, 16), (20, 32), (60, 8), (120, 8)],
+    )
+
+    print("[aot] sebulba atari_like conv (fig4b actor-batch sweep + e2e)")
+    export_sebulba_conv(
+        ex, "seb_atari", height=42, width=42, in_channels=2, num_actions=6,
+        infer_batches=[32, 64, 96, 128],
+        grad_geoms=[(20, 8), (20, 16), (20, 32), (60, 8), (60, 16), (60, 24), (60, 32)],
+    )
+
+    print("[aot] anakin catch + gridworld (fig4a scaling, smallnet fps)")
+    export_anakin(ex, "anakin_catch", "catch", batch=64, unroll=16, iters=8)
+    export_anakin(ex, "anakin_grid", "gridworld", batch=64, unroll=16, iters=8)
+
+    print("[aot] muzero catch (fig4c)")
+    export_muzero(
+        ex, "mz_catch", obs_dim=50, num_actions=3,
+        batch=16, unroll=16, grad_shards=[8, 16],
+    )
+
+    ex.write_manifest()
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    parser.add_argument("--profile", default="full", choices=["full"])
+    args = parser.parse_args()
+    build_all(args.out, args.profile)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

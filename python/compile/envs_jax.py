@@ -1,0 +1,143 @@
+"""Pure-JAX environments for the Anakin architecture.
+
+Anakin requires the environment itself to be a JAX pure function so that
+environment stepping, action selection and the update compile into a single
+XLA program (paper §"Online Learning with Anakin"). Each environment is:
+
+  * ``state_size``: the state is a flat ``f32[state_size]`` vector (so the
+    Rust driver can hold it as one buffer per core);
+  * ``reset(key) -> state``;
+  * ``observe(state) -> f32[obs_dim]``;
+  * ``step(state, action, key) -> (next_state, reward, done)``.
+
+``auto_reset_step`` composes reset+step into the standard Anakin transition
+(discount = 0 at terminals, next state freshly reset).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Catch:
+    """bsuite Catch: a ball falls down a `rows` x `cols` board; move the
+    paddle on the bottom row to catch it. Actions: left / stay / right.
+    State: [ball_row, ball_col, paddle_col]."""
+
+    rows: int = 10
+    cols: int = 5
+
+    @property
+    def state_size(self) -> int:
+        return 3
+
+    @property
+    def obs_dim(self) -> int:
+        return self.rows * self.cols
+
+    @property
+    def num_actions(self) -> int:
+        return 3
+
+    def reset(self, key: jax.Array) -> jax.Array:
+        ball_col = jax.random.randint(key, (), 0, self.cols)
+        return jnp.array([0.0, 0.0, 0.0]).at[1].set(ball_col.astype(jnp.float32)).at[2].set(
+            (self.cols // 2) * 1.0
+        )
+
+    def observe(self, state: jax.Array) -> jax.Array:
+        ball_row = state[0].astype(jnp.int32)
+        ball_col = state[1].astype(jnp.int32)
+        paddle_col = state[2].astype(jnp.int32)
+        board = jnp.zeros((self.rows, self.cols), jnp.float32)
+        board = board.at[ball_row, ball_col].set(1.0)
+        board = board.at[self.rows - 1, paddle_col].set(1.0)
+        return board.reshape(-1)
+
+    def step(self, state: jax.Array, action: jax.Array, key: jax.Array):
+        del key  # catch dynamics are deterministic after reset
+        move = action.astype(jnp.float32) - 1.0  # {0,1,2} -> {-1,0,1}
+        paddle = jnp.clip(state[2] + move, 0.0, self.cols - 1.0)
+        ball_row = state[0] + 1.0
+        done = ball_row >= self.rows - 1
+        caught = jnp.abs(state[1] - paddle) < 0.5
+        reward = jnp.where(done, jnp.where(caught, 1.0, -1.0), 0.0)
+        next_state = jnp.stack([ball_row, state[1], paddle])
+        return next_state, reward, done
+
+
+@dataclass(frozen=True)
+class GridWorld:
+    """Empty-room gridworld: reach a random goal. Actions: up/down/left/right.
+    Reward 1 at the goal; episodes also time out after ``horizon`` steps.
+    State: [row, col, goal_row, goal_col, t]."""
+
+    size: int = 8
+    horizon: int = 50
+
+    @property
+    def state_size(self) -> int:
+        return 5
+
+    @property
+    def obs_dim(self) -> int:
+        return 2 * self.size * self.size
+
+    @property
+    def num_actions(self) -> int:
+        return 4
+
+    def reset(self, key: jax.Array) -> jax.Array:
+        k1, k2 = jax.random.split(key)
+        pos = jax.random.randint(k1, (2,), 0, self.size).astype(jnp.float32)
+        goal = jax.random.randint(k2, (2,), 0, self.size).astype(jnp.float32)
+        return jnp.concatenate([pos, goal, jnp.zeros((1,), jnp.float32)])
+
+    def observe(self, state: jax.Array) -> jax.Array:
+        n = self.size
+        pos_idx = (state[0] * n + state[1]).astype(jnp.int32)
+        goal_idx = (state[2] * n + state[3]).astype(jnp.int32)
+        pos_oh = jax.nn.one_hot(pos_idx, n * n, dtype=jnp.float32)
+        goal_oh = jax.nn.one_hot(goal_idx, n * n, dtype=jnp.float32)
+        return jnp.concatenate([pos_oh, goal_oh])
+
+    def step(self, state: jax.Array, action: jax.Array, key: jax.Array):
+        del key
+        n = float(self.size)
+        # 0: up, 1: down, 2: left, 3: right
+        drow = jnp.where(action == 0, -1.0, jnp.where(action == 1, 1.0, 0.0))
+        dcol = jnp.where(action == 2, -1.0, jnp.where(action == 3, 1.0, 0.0))
+        row = jnp.clip(state[0] + drow, 0.0, n - 1.0)
+        col = jnp.clip(state[1] + dcol, 0.0, n - 1.0)
+        t = state[4] + 1.0
+        at_goal = jnp.logical_and(row == state[2], col == state[3])
+        done = jnp.logical_or(at_goal, t >= self.horizon)
+        reward = jnp.where(at_goal, 1.0, 0.0)
+        next_state = jnp.stack([row, col, state[2], state[3], t])
+        return next_state, reward, done
+
+
+def auto_reset_step(env, state, action, key, discount: float):
+    """Standard Anakin transition: step, then reset in-graph if terminal.
+
+    Returns ``(next_state, reward, disc)`` where ``disc`` is 0 at episode
+    boundaries and ``discount`` elsewhere (the shape the V-trace/GAE kernels
+    expect).
+    """
+    k_step, k_reset = jax.random.split(key)
+    stepped, reward, done = env.step(state, action, k_step)
+    fresh = env.reset(k_reset)
+    next_state = jnp.where(done, fresh, stepped)
+    disc = jnp.where(done, 0.0, discount)
+    return next_state, reward, disc
+
+
+def make_env(kind: str, **kw):
+    if kind == "catch":
+        return Catch(**kw)
+    if kind == "gridworld":
+        return GridWorld(**kw)
+    raise ValueError(f"unknown jax env {kind!r}")

@@ -1,0 +1,2 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles (`ref`)."""
+from . import gae, ref, returns, vtrace  # noqa: F401

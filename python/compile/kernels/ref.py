@@ -1,0 +1,130 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are straight-line `lax.scan` implementations of the credit-assignment
+recurrences used by the Podracer losses. They are the single source of truth
+for correctness: pytest + hypothesis compare every Pallas kernel against the
+function of the same name in this module (see python/tests/test_kernels.py).
+
+Shapes follow the IMPALA/Sebulba convention: time-major `[T, B]`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class VTraceOutput(NamedTuple):
+    """V-trace targets `vs` and policy-gradient advantages, both `[T, B]`."""
+
+    vs: jax.Array
+    pg_advantages: jax.Array
+
+
+def vtrace(
+    log_rhos: jax.Array,
+    discounts: jax.Array,
+    rewards: jax.Array,
+    values: jax.Array,
+    bootstrap_value: jax.Array,
+    *,
+    clip_rho_threshold: float = 1.0,
+    clip_c_threshold: float = 1.0,
+) -> VTraceOutput:
+    """V-trace targets (Espeholt et al. 2018), the IMPALA off-policy correction.
+
+    Args:
+      log_rhos: log importance ratios ``log pi(a|s) - log mu(a|s)``, ``[T, B]``.
+      discounts: per-step discounts (0 at episode boundaries), ``[T, B]``.
+      rewards: ``[T, B]``.
+      values: baseline estimates ``V(x_t)``, ``[T, B]``.
+      bootstrap_value: ``V(x_T)``, ``[B]``.
+      clip_rho_threshold: ``rho_bar`` clipping for the TD error.
+      clip_c_threshold: ``c_bar`` clipping for the trace cutting coefficients.
+
+    Returns:
+      ``VTraceOutput(vs, pg_advantages)``; both should be treated as
+      non-differentiable targets (the exported programs stop gradients).
+    """
+    rhos = jnp.exp(log_rhos)
+    clipped_rhos = jnp.minimum(clip_rho_threshold, rhos)
+    clipped_cs = jnp.minimum(clip_c_threshold, rhos)
+
+    values_tp1 = jnp.concatenate([values[1:], bootstrap_value[None]], axis=0)
+    deltas = clipped_rhos * (rewards + discounts * values_tp1 - values)
+
+    def scan_fn(acc, xs):
+        delta_t, discount_t, c_t = xs
+        acc = delta_t + discount_t * c_t * acc
+        return acc, acc
+
+    _, vs_minus_v = jax.lax.scan(
+        scan_fn,
+        jnp.zeros_like(bootstrap_value),
+        (deltas, discounts, clipped_cs),
+        reverse=True,
+    )
+    vs = vs_minus_v + values
+
+    vs_tp1 = jnp.concatenate([vs[1:], bootstrap_value[None]], axis=0)
+    pg_advantages = clipped_rhos * (rewards + discounts * vs_tp1 - values)
+    return VTraceOutput(vs=vs, pg_advantages=pg_advantages)
+
+
+def gae(
+    rewards: jax.Array,
+    discounts: jax.Array,
+    values: jax.Array,
+    bootstrap_value: jax.Array,
+    *,
+    lambda_: float = 0.95,
+) -> jax.Array:
+    """Generalized Advantage Estimation (Schulman et al. 2016), ``[T, B]``.
+
+    ``A_t = delta_t + gamma_t * lambda * A_{t+1}`` with
+    ``delta_t = r_t + gamma_t V(x_{t+1}) - V(x_t)``.
+    """
+    values_tp1 = jnp.concatenate([values[1:], bootstrap_value[None]], axis=0)
+    deltas = rewards + discounts * values_tp1 - values
+
+    def scan_fn(acc, xs):
+        delta_t, discount_t = xs
+        acc = delta_t + discount_t * lambda_ * acc
+        return acc, acc
+
+    _, advantages = jax.lax.scan(
+        scan_fn,
+        jnp.zeros_like(bootstrap_value),
+        (deltas, discounts),
+        reverse=True,
+    )
+    return advantages
+
+
+def lambda_returns(
+    rewards: jax.Array,
+    discounts: jax.Array,
+    values_tp1: jax.Array,
+    *,
+    lambda_: float = 1.0,
+) -> jax.Array:
+    """TD(lambda) returns ``[T, B]`` (Sutton & Barto), used by MuZero-lite.
+
+    ``G_t = r_t + gamma_t * ((1 - lambda) * V(x_{t+1}) + lambda * G_{t+1})``,
+    with ``G_T = V(x_T)`` bootstrapping (``values_tp1[t] = V(x_{t+1})``).
+    """
+    bootstrap = values_tp1[-1]
+
+    def scan_fn(g_next, xs):
+        r_t, discount_t, v_tp1 = xs
+        g = r_t + discount_t * ((1.0 - lambda_) * v_tp1 + lambda_ * g_next)
+        return g, g
+
+    _, returns = jax.lax.scan(
+        scan_fn,
+        bootstrap,
+        (rewards, discounts, values_tp1),
+        reverse=True,
+    )
+    return returns

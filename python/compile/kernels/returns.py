@@ -1,0 +1,62 @@
+"""Pallas TD(lambda)-returns kernel — value targets for MuZero-lite.
+
+``values_tp1[t] = V(x_{t+1})`` (so the last row is the bootstrap), matching
+:func:`compile.kernels.ref.lambda_returns`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+
+
+def _returns_kernel(rewards_ref, discounts_ref, values_tp1_ref, out_ref, *, lambda_: float):
+    rewards = rewards_ref[...]
+    discounts = discounts_ref[...]
+    values_tp1 = values_tp1_ref[...]
+
+    def scan_fn(g_next, xs):
+        r_t, discount_t, v_tp1 = xs
+        g = r_t + discount_t * ((1.0 - lambda_) * v_tp1 + lambda_ * g_next)
+        return g, g
+
+    _, returns = jax.lax.scan(
+        scan_fn, values_tp1[-1], (rewards, discounts, values_tp1), reverse=True
+    )
+    out_ref[...] = returns
+
+
+def lambda_returns(
+    rewards: jax.Array,
+    discounts: jax.Array,
+    values_tp1: jax.Array,
+    *,
+    lambda_: float = 1.0,
+    block_b: int = DEFAULT_BLOCK_B,
+) -> jax.Array:
+    """Blocked Pallas lambda-returns; drop-in for :func:`ref.lambda_returns`."""
+    t_len, batch = rewards.shape
+    block_b = max(1, min(block_b, batch))
+    padded = (batch + block_b - 1) // block_b * block_b
+    pad = padded - batch
+
+    def pad_b(x):
+        return jnp.pad(x, [(0, 0), (0, pad)]) if pad else x
+
+    grid = (padded // block_b,)
+    tb_spec = pl.BlockSpec((t_len, block_b), lambda i: (0, i))
+
+    returns = pl.pallas_call(
+        functools.partial(_returns_kernel, lambda_=lambda_),
+        grid=grid,
+        in_specs=[tb_spec, tb_spec, tb_spec],
+        out_specs=tb_spec,
+        out_shape=jax.ShapeDtypeStruct((t_len, padded), rewards.dtype),
+        interpret=True,
+    )(pad_b(rewards), pad_b(discounts), pad_b(values_tp1))
+
+    return returns[:, :batch] if pad else returns

@@ -1,0 +1,212 @@
+"""RL losses calling the L1 Pallas kernels.
+
+All losses operate on time-major ``[T, B]`` trajectories and flat parameter
+vectors; targets from the credit-assignment kernels are wrapped in
+``stop_gradient`` (IMPALA treats vs/advantages as fixed targets).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gae as gae_kernel
+from .kernels import returns as returns_kernel
+from .kernels import vtrace as vtrace_kernel
+
+
+def softmax_entropy(logits: jax.Array) -> jax.Array:
+    """Entropy of a categorical distribution from logits, over the last axis."""
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+
+
+def log_prob(logits: jax.Array, actions: jax.Array) -> jax.Array:
+    """log pi(a|s) for integer actions (last axis of logits = actions)."""
+    logp = jax.nn.log_softmax(logits)
+    return jnp.take_along_axis(logp, actions[..., None].astype(jnp.int32), axis=-1)[..., 0]
+
+
+@dataclass(frozen=True)
+class VTraceConfig:
+    discount: float = 0.99
+    clip_rho: float = 1.0
+    clip_c: float = 1.0
+    baseline_cost: float = 0.5
+    entropy_cost: float = 0.01
+    block_b: int = 128
+
+
+def vtrace_loss(
+    learner_logits: jax.Array,  # [T+1, B, A] (the T+1'th row gives bootstrap value)
+    learner_values: jax.Array,  # [T+1, B]
+    behaviour_logits: jax.Array,  # [T, B, A]
+    actions: jax.Array,  # [T, B] int32
+    rewards: jax.Array,  # [T, B]
+    discounts: jax.Array,  # [T, B] (0 at terminals, else cfg.discount)
+    cfg: VTraceConfig,
+):
+    """IMPALA V-trace actor-critic loss; returns (scalar loss, metrics [4])."""
+    logits_t = learner_logits[:-1]
+    values_t = learner_values[:-1]
+    bootstrap = learner_values[-1]
+
+    target_logp = log_prob(logits_t, actions)
+    behaviour_logp = log_prob(behaviour_logits, actions)
+    log_rhos = target_logp - behaviour_logp
+
+    out = vtrace_kernel.vtrace(
+        jax.lax.stop_gradient(log_rhos),
+        discounts,
+        rewards,
+        jax.lax.stop_gradient(values_t),
+        jax.lax.stop_gradient(bootstrap),
+        clip_rho_threshold=cfg.clip_rho,
+        clip_c_threshold=cfg.clip_c,
+        block_b=cfg.block_b,
+    )
+    vs = jax.lax.stop_gradient(out.vs)
+    pg_adv = jax.lax.stop_gradient(out.pg_advantages)
+
+    pg_loss = -jnp.mean(target_logp * pg_adv)
+    baseline_loss = 0.5 * jnp.mean(jnp.square(vs - values_t))
+    entropy = jnp.mean(softmax_entropy(logits_t))
+
+    loss = pg_loss + cfg.baseline_cost * baseline_loss - cfg.entropy_cost * entropy
+    metrics = jnp.stack([loss, pg_loss, baseline_loss, entropy])
+    return loss, metrics
+
+
+@dataclass(frozen=True)
+class A2CConfig:
+    discount: float = 0.99
+    gae_lambda: float = 0.95
+    baseline_cost: float = 0.5
+    entropy_cost: float = 0.01
+    block_b: int = 128
+
+
+def a2c_loss(
+    logits: jax.Array,  # [T, B, A]
+    values: jax.Array,  # [T, B]
+    bootstrap_value: jax.Array,  # [B]
+    actions: jax.Array,  # [T, B]
+    rewards: jax.Array,  # [T, B]
+    discounts: jax.Array,  # [T, B]
+    cfg: A2CConfig,
+):
+    """On-policy advantage actor-critic with GAE (Anakin's default loss)."""
+    adv = gae_kernel.gae(
+        rewards,
+        discounts,
+        jax.lax.stop_gradient(values),
+        jax.lax.stop_gradient(bootstrap_value),
+        lambda_=cfg.gae_lambda,
+        block_b=cfg.block_b,
+    )
+    adv = jax.lax.stop_gradient(adv)
+    returns = adv + jax.lax.stop_gradient(values)
+
+    logp = log_prob(logits, actions)
+    pg_loss = -jnp.mean(logp * adv)
+    baseline_loss = 0.5 * jnp.mean(jnp.square(returns - values))
+    entropy = jnp.mean(softmax_entropy(logits))
+
+    loss = pg_loss + cfg.baseline_cost * baseline_loss - cfg.entropy_cost * entropy
+    metrics = jnp.stack([loss, pg_loss, baseline_loss, entropy])
+    return loss, metrics
+
+
+@dataclass(frozen=True)
+class MuZeroConfig:
+    discount: float = 0.99
+    td_lambda: float = 0.9
+    unroll: int = 4
+    reward_cost: float = 1.0
+    value_cost: float = 0.25
+    policy_cost: float = 1.0
+    block_b: int = 128
+
+
+def muzero_loss(
+    net,
+    flat_params: jax.Array,
+    obs: jax.Array,  # [T+1, B, obs_dim]
+    actions: jax.Array,  # [T, B] int32
+    rewards: jax.Array,  # [T, B]
+    discounts: jax.Array,  # [T, B]
+    search_policies: jax.Array,  # [T, B, A] visit-count targets from MCTS
+    cfg: MuZeroConfig,
+):
+    """MuZero-lite loss: unroll the learned model `unroll` steps from every
+    root position and regress reward / value / policy targets.
+
+    Value targets are TD(lambda) returns over the *observed* trajectory
+    (no reanalyse), computed with the L1 returns kernel.
+    """
+    t_len, batch = actions.shape
+    u = cfg.unroll
+
+    # Value targets from observed data: V(x_{t+1}) comes from the frozen
+    # current network evaluated on real observations.
+    root_latents = net.represent(flat_params, obs.reshape(-1, obs.shape[-1]))
+    _, values_all = net.predict(flat_params, root_latents)
+    values_all = values_all.reshape(t_len + 1, batch)
+    value_targets = returns_kernel.lambda_returns(
+        rewards,
+        discounts,
+        jax.lax.stop_gradient(values_all[1:]),
+        lambda_=cfg.td_lambda,
+        block_b=cfg.block_b,
+    )
+    value_targets = jax.lax.stop_gradient(value_targets)
+
+    # Only roots with a full unroll window contribute: t in [0, T-u).
+    n_roots = t_len - u
+    latent = net.represent(flat_params, obs[:n_roots].reshape(-1, obs.shape[-1]))
+    latent = latent.reshape(n_roots, batch, -1)
+
+    total_reward_loss = 0.0
+    total_value_loss = 0.0
+    total_policy_loss = 0.0
+    for k in range(u):
+        logits, value = net.predict(
+            flat_params, latent.reshape(n_roots * batch, -1)
+        )
+        logits = logits.reshape(n_roots, batch, -1)
+        value = value.reshape(n_roots, batch)
+
+        # Targets at absolute time t+k for root t.
+        pol_tgt = jax.lax.dynamic_slice_in_dim(search_policies, k, n_roots, axis=0)
+        val_tgt = jax.lax.dynamic_slice_in_dim(value_targets, k, n_roots, axis=0)
+        act_k = jax.lax.dynamic_slice_in_dim(actions, k, n_roots, axis=0)
+        rew_tgt = jax.lax.dynamic_slice_in_dim(rewards, k, n_roots, axis=0)
+
+        logp = jax.nn.log_softmax(logits)
+        total_policy_loss += -jnp.mean(jnp.sum(pol_tgt * logp, axis=-1))
+        total_value_loss += 0.5 * jnp.mean(jnp.square(val_tgt - value))
+
+        onehot = jax.nn.one_hot(act_k, logits.shape[-1], dtype=jnp.float32)
+        latent, pred_reward = net.dynamics(
+            flat_params,
+            latent.reshape(n_roots * batch, -1),
+            onehot.reshape(n_roots * batch, -1),
+        )
+        latent = latent.reshape(n_roots, batch, -1)
+        pred_reward = pred_reward.reshape(n_roots, batch)
+        total_reward_loss += 0.5 * jnp.mean(jnp.square(rew_tgt - pred_reward))
+        # Scale gradients flowing back through the unroll (MuZero appendix G).
+        latent = latent * 0.5 + jax.lax.stop_gradient(latent) * 0.5
+
+    inv_u = 1.0 / float(u)
+    reward_loss = total_reward_loss * inv_u
+    value_loss = total_value_loss * inv_u
+    policy_loss = total_policy_loss * inv_u
+    loss = (
+        cfg.reward_cost * reward_loss
+        + cfg.value_cost * value_loss
+        + cfg.policy_cost * policy_loss
+    )
+    metrics = jnp.stack([loss, reward_loss, value_loss, policy_loss])
+    return loss, metrics

@@ -1,0 +1,103 @@
+"""MuZero-lite programs for the search-based Sebulba agent.
+
+Action selection on the actor cores is MCTS (implemented in Rust,
+``search::mcts``) driven by three small network programs; learning regresses
+reward / value / policy targets through an unrolled model (losses.muzero_loss,
+which uses the L1 lambda-returns kernel for value targets).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import losses, optim
+
+
+@dataclass(frozen=True)
+class MuZeroProgConfig:
+    batch: int = 16  # actor batch size
+    unroll: int = 16  # T: trajectory length
+    model_unroll: int = 4  # U: model unroll in the loss
+    discount: float = 0.997
+    td_lambda: float = 0.9
+
+
+def make_represent(net):
+    """(params, obs [B, D]) -> latent [B, L] — root embedding for MCTS."""
+
+    def program(params, obs):
+        return net.represent(params, obs)
+
+    return program
+
+
+def make_dynamics(net):
+    """(params, latent [B, L], actions i32[B]) -> (latent' [B, L], reward [B])."""
+
+    def program(params, latent, actions):
+        onehot = jax.nn.one_hot(actions, net.num_actions, dtype=jnp.float32)
+        return net.dynamics(params, latent, onehot)
+
+    return program
+
+
+def make_predict(net):
+    """(params, latent [B, L]) -> (logits [B, A], value [B]) — MCTS priors."""
+
+    def program(params, latent):
+        return net.predict(params, latent)
+
+    return program
+
+
+def make_dynamics_predict(net):
+    """(params, latent [B, L], actions i32[B]) ->
+    (latent' [B, L], reward [B], logits [B, A], value [B]).
+
+    Fused dynamics+prediction: one device call per MCTS simulation instead
+    of two (perf: halves per-simulation dispatch overhead on the actor core;
+    XLA also fuses the shared latent producer/consumer)."""
+
+    def program(params, latent, actions):
+        onehot = jax.nn.one_hot(actions, net.num_actions, dtype=jnp.float32)
+        next_latent, reward = net.dynamics(params, latent, onehot)
+        logits, value = net.predict(params, next_latent)
+        return next_latent, reward, logits, value
+
+    return program
+
+
+def make_grad(net, cfg: MuZeroProgConfig):
+    """(params, obs [T+1,B,D], actions [T,B], rewards, discounts,
+    search_policies [T,B,A]) -> (grads, metrics [4])."""
+    loss_cfg = losses.MuZeroConfig(
+        discount=cfg.discount,
+        td_lambda=cfg.td_lambda,
+        unroll=cfg.model_unroll,
+        block_b=128,
+    )
+
+    def loss_fn(params, obs, actions, rewards, discounts, search_policies):
+        return losses.muzero_loss(
+            net, params, obs, actions, rewards, discounts, search_policies, loss_cfg
+        )
+
+    def program(params, obs, actions, rewards, discounts, search_policies):
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, obs, actions, rewards, discounts, search_policies
+        )
+        return grads, metrics
+
+    return program
+
+
+def make_init(net, opt: optim.Optimiser):
+    def program(seed):
+        key = jax.random.PRNGKey(seed)
+        params = net.spec.init_flat(key)
+        opt_state = opt.init_state(net.param_size)
+        return params, opt_state
+
+    return program

@@ -1,0 +1,259 @@
+"""Pure-functional networks with a *flat* parameter layout.
+
+Everything that crosses the Rust<->XLA boundary is a single flat f32 vector
+(see DESIGN.md §2 "Parameter interchange"): the Rust parameter store, the
+collectives and the actor-core broadcast all operate on one contiguous
+buffer. Each network here is described by a list of ``(shape, init)`` leaf
+specs; ``ParamSpec`` maps the flat vector to the leaves with static slices
+(free at XLA compile time).
+
+No haiku/flax — a reproduction should not hide the parameter layout that the
+coordination layer depends on.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class LeafSpec:
+    name: str
+    shape: tuple
+    init: str  # "orthogonal" | "zeros" | "lecun"
+    scale: float = 1.0
+
+
+@dataclass
+class ParamSpec:
+    """Static description of a flat parameter vector."""
+
+    leaves: list = field(default_factory=list)
+
+    def add(self, name: str, shape: Sequence[int], init: str = "lecun", scale: float = 1.0) -> None:
+        self.leaves.append(LeafSpec(name, tuple(shape), init, scale))
+
+    @property
+    def size(self) -> int:
+        return sum(int(math.prod(l.shape)) for l in self.leaves)
+
+    def init_flat(self, key: jax.Array) -> jax.Array:
+        """Initialise the flat vector (scaled normal for weights, zeros for
+        biases).
+
+        Note: "orthogonal" is realised as gain-scaled normal rather than a QR
+        decomposition — QR lowers to LAPACK typed-FFI custom-calls that the
+        runtime's xla_extension 0.5.1 cannot compile (the init program must
+        stay pure HLO). The gain matches the orthogonal initializer's, which
+        preserves the variance behaviour the paper's agents rely on.
+        """
+        chunks = []
+        for leaf in self.leaves:
+            key, sub = jax.random.split(key)
+            if leaf.init == "zeros":
+                w = jnp.zeros(leaf.shape, jnp.float32)
+            else:  # "orthogonal" (gain-scaled) / "lecun"
+                fan_in = int(math.prod(leaf.shape[:-1])) or 1
+                w = jax.random.normal(sub, leaf.shape, jnp.float32) * leaf.scale / math.sqrt(fan_in)
+            chunks.append(w.reshape(-1))
+        return jnp.concatenate(chunks) if chunks else jnp.zeros((0,), jnp.float32)
+
+    def unflatten(self, flat: jax.Array) -> dict:
+        """Static-slice the flat vector into a ``{name: array}`` dict."""
+        out, off = {}, 0
+        for leaf in self.leaves:
+            n = int(math.prod(leaf.shape))
+            out[leaf.name] = jax.lax.slice(flat, (off,), (off + n,)).reshape(leaf.shape)
+            off += n
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Actor-critic MLP (Catch / GridWorld / CartPole / Chain)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MLPActorCritic:
+    """MLP torso + (policy, value) heads over flat observations."""
+
+    obs_dim: int
+    num_actions: int
+    hidden: tuple = (64, 64)
+
+    def __post_init__(self) -> None:
+        spec = ParamSpec()
+        prev = self.obs_dim
+        for i, h in enumerate(self.hidden):
+            spec.add(f"w{i}", (prev, h), "orthogonal", math.sqrt(2.0))
+            spec.add(f"b{i}", (h,), "zeros")
+            prev = h
+        spec.add("w_pi", (prev, self.num_actions), "orthogonal", 0.01)
+        spec.add("b_pi", (self.num_actions,), "zeros")
+        spec.add("w_v", (prev, 1), "orthogonal", 1.0)
+        spec.add("b_v", (1,), "zeros")
+        self.spec = spec
+
+    @property
+    def param_size(self) -> int:
+        return self.spec.size
+
+    def apply(self, flat: jax.Array, obs: jax.Array):
+        """obs [..., obs_dim] -> (logits [..., A], value [...])."""
+        p = self.spec.unflatten(flat)
+        x = obs
+        for i in range(len(self.hidden)):
+            x = jax.nn.relu(x @ p[f"w{i}"] + p[f"b{i}"])
+        logits = x @ p["w_pi"] + p["b_pi"]
+        value = (x @ p["w_v"] + p["b_v"])[..., 0]
+        return logits, value
+
+
+# ---------------------------------------------------------------------------
+# Conv actor-critic (atari_like pixel observations)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ConvActorCritic:
+    """DQN-style conv torso + (policy, value) heads over stacked frames.
+
+    Observations are ``[..., H, W, C]`` f32 in [0, 1] (frame stack in C).
+    ``channels``/``dense`` scale the network — the paper's "scale by width"
+    knob for the data-efficiency experiments.
+    """
+
+    height: int
+    width: int
+    in_channels: int
+    num_actions: int
+    channels: tuple = (16, 32)
+    kernels: tuple = ((8, 4), (4, 2))  # (kernel, stride) per conv layer
+    dense: int = 256
+
+    def __post_init__(self) -> None:
+        spec = ParamSpec()
+        h, w, cin = self.height, self.width, self.in_channels
+        for i, (cout, (k, s)) in enumerate(zip(self.channels, self.kernels)):
+            spec.add(f"conv_w{i}", (k, k, cin, cout), "lecun", 1.0)
+            spec.add(f"conv_b{i}", (cout,), "zeros")
+            h = (h - k) // s + 1
+            w = (w - k) // s + 1
+            cin = cout
+        self._flat_dim = h * w * cin
+        spec.add("w_d", (self._flat_dim, self.dense), "orthogonal", math.sqrt(2.0))
+        spec.add("b_d", (self.dense,), "zeros")
+        spec.add("w_pi", (self.dense, self.num_actions), "orthogonal", 0.01)
+        spec.add("b_pi", (self.num_actions,), "zeros")
+        spec.add("w_v", (self.dense, 1), "orthogonal", 1.0)
+        spec.add("b_v", (1,), "zeros")
+        self.spec = spec
+
+    @property
+    def param_size(self) -> int:
+        return self.spec.size
+
+    def apply(self, flat: jax.Array, obs: jax.Array):
+        """obs [B, H, W, C] -> (logits [B, A], value [B])."""
+        p = self.spec.unflatten(flat)
+        x = obs
+        for i, (k, s) in enumerate(self.kernels):
+            x = jax.lax.conv_general_dilated(
+                x,
+                p[f"conv_w{i}"],
+                window_strides=(s, s),
+                padding="VALID",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            x = jax.nn.relu(x + p[f"conv_b{i}"])
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ p["w_d"] + p["b_d"])
+        logits = x @ p["w_pi"] + p["b_pi"]
+        value = (x @ p["w_v"] + p["b_v"])[..., 0]
+        return logits, value
+
+
+# ---------------------------------------------------------------------------
+# MuZero-lite model: representation / dynamics / prediction
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MuZeroNet:
+    """Small latent model (Schrittwieser et al. 2020, no reanalyse).
+
+    * representation: obs -> latent [L]
+    * dynamics: (latent, one-hot action) -> (latent', reward)
+    * prediction: latent -> (policy logits, value)
+
+    All three share one flat parameter vector so the coordination layer
+    treats MuZero exactly like the model-free agents.
+    """
+
+    obs_dim: int
+    num_actions: int
+    latent: int = 64
+    hidden: int = 128
+
+    def __post_init__(self) -> None:
+        spec = ParamSpec()
+        # representation
+        spec.add("r_w0", (self.obs_dim, self.hidden), "orthogonal", math.sqrt(2.0))
+        spec.add("r_b0", (self.hidden,), "zeros")
+        spec.add("r_w1", (self.hidden, self.latent), "orthogonal", 1.0)
+        spec.add("r_b1", (self.latent,), "zeros")
+        # dynamics
+        spec.add("d_w0", (self.latent + self.num_actions, self.hidden), "orthogonal", math.sqrt(2.0))
+        spec.add("d_b0", (self.hidden,), "zeros")
+        spec.add("d_wl", (self.hidden, self.latent), "orthogonal", 1.0)
+        spec.add("d_bl", (self.latent,), "zeros")
+        spec.add("d_wr", (self.hidden, 1), "orthogonal", 1.0)
+        spec.add("d_br", (1,), "zeros")
+        # prediction
+        spec.add("p_w0", (self.latent, self.hidden), "orthogonal", math.sqrt(2.0))
+        spec.add("p_b0", (self.hidden,), "zeros")
+        spec.add("p_wpi", (self.hidden, self.num_actions), "orthogonal", 0.01)
+        spec.add("p_bpi", (self.num_actions,), "zeros")
+        spec.add("p_wv", (self.hidden, 1), "orthogonal", 1.0)
+        spec.add("p_bv", (1,), "zeros")
+        self.spec = spec
+
+    @property
+    def param_size(self) -> int:
+        return self.spec.size
+
+    def represent(self, flat: jax.Array, obs: jax.Array) -> jax.Array:
+        p = self.spec.unflatten(flat)
+        x = jax.nn.relu(obs @ p["r_w0"] + p["r_b0"])
+        h = jnp.tanh(x @ p["r_w1"] + p["r_b1"])  # bounded latent, standard trick
+        return h
+
+    def dynamics(self, flat: jax.Array, latent: jax.Array, action_onehot: jax.Array):
+        p = self.spec.unflatten(flat)
+        x = jnp.concatenate([latent, action_onehot], axis=-1)
+        x = jax.nn.relu(x @ p["d_w0"] + p["d_b0"])
+        next_latent = jnp.tanh(x @ p["d_wl"] + p["d_bl"])
+        reward = (x @ p["d_wr"] + p["d_br"])[..., 0]
+        return next_latent, reward
+
+    def predict(self, flat: jax.Array, latent: jax.Array):
+        p = self.spec.unflatten(flat)
+        x = jax.nn.relu(latent @ p["p_w0"] + p["p_b0"])
+        logits = x @ p["p_wpi"] + p["p_bpi"]
+        value = (x @ p["p_wv"] + p["p_bv"])[..., 0]
+        return logits, value
+
+
+def make_network(kind: str, **kw):
+    """Factory used by the AOT driver ("mlp" | "conv" | "muzero")."""
+    if kind == "mlp":
+        return MLPActorCritic(**kw)
+    if kind == "conv":
+        return ConvActorCritic(**kw)
+    if kind == "muzero":
+        return MuZeroNet(**kw)
+    raise ValueError(f"unknown network kind {kind!r}")

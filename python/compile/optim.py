@@ -1,0 +1,74 @@
+"""Optimisers over flat parameter vectors (no optax — explicit state layout).
+
+The optimiser state is itself a flat f32 vector so the Rust coordinator can
+hold, checkpoint and ship it like the parameters. The layout is recorded in
+the artifact manifest (``opt_size``).
+
+Layouts:
+  * sgd:     ``[momentum (n)]``                       -> size n
+  * rmsprop: ``[ms (n)]``                             -> size n   (IMPALA's choice)
+  * adam:    ``[m (n), v (n), step (1)]``             -> size 2n+1
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimiser:
+    kind: str  # "sgd" | "rmsprop" | "adam"
+    lr: float = 1e-3
+    momentum: float = 0.0  # sgd
+    decay: float = 0.99  # rmsprop
+    eps: float = 1e-5
+    b1: float = 0.9  # adam
+    b2: float = 0.999
+    max_grad_norm: float = 0.0  # 0 = no clipping
+
+    def state_size(self, n: int) -> int:
+        if self.kind == "sgd":
+            return n
+        if self.kind == "rmsprop":
+            return n
+        if self.kind == "adam":
+            return 2 * n + 1
+        raise ValueError(self.kind)
+
+    def init_state(self, n: int) -> jax.Array:
+        return jnp.zeros((self.state_size(n),), jnp.float32)
+
+    def clip(self, grads: jax.Array) -> jax.Array:
+        if self.max_grad_norm <= 0.0:
+            return grads
+        norm = jnp.sqrt(jnp.sum(grads * grads) + 1e-12)
+        scale = jnp.minimum(1.0, self.max_grad_norm / norm)
+        return grads * scale
+
+    def apply(self, params: jax.Array, state: jax.Array, grads: jax.Array):
+        """One update step: returns ``(new_params, new_state)``."""
+        grads = self.clip(grads)
+        n = params.shape[0]
+        if self.kind == "sgd":
+            mom = state
+            mom = self.momentum * mom + grads
+            return params - self.lr * mom, mom
+        if self.kind == "rmsprop":
+            ms = state
+            ms = self.decay * ms + (1.0 - self.decay) * grads * grads
+            upd = grads / (jnp.sqrt(ms) + self.eps)
+            return params - self.lr * upd, ms
+        if self.kind == "adam":
+            m = jax.lax.slice(state, (0,), (n,))
+            v = jax.lax.slice(state, (n,), (2 * n,))
+            step = jax.lax.slice(state, (2 * n,), (2 * n + 1,))[0] + 1.0
+            m = self.b1 * m + (1.0 - self.b1) * grads
+            v = self.b2 * v + (1.0 - self.b2) * grads * grads
+            mhat = m / (1.0 - self.b1**step)
+            vhat = v / (1.0 - self.b2**step)
+            upd = mhat / (jnp.sqrt(vhat) + self.eps)
+            new_state = jnp.concatenate([m, v, step[None]])
+            return params - self.lr * upd, new_state
+        raise ValueError(self.kind)

@@ -1,0 +1,109 @@
+"""Sebulba programs: inference (actor cores), gradient + apply (learner cores).
+
+The split between ``grad`` and ``apply`` is the paper's `psum` seam: the Rust
+collective all-reduces gradients across learner cores (and across replicas)
+*between* the two programs, so parameters on every learner core stay in sync
+without further transfers (paper §"Decomposed Actors and Learners").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import losses, optim
+
+
+@dataclass(frozen=True)
+class SebulbaConfig:
+    batch: int = 32  # actor batch size (environments per actor thread)
+    unroll: int = 20  # T: trajectory length
+    discount: float = 0.99
+    clip_rho: float = 1.0
+    clip_c: float = 1.0
+    baseline_cost: float = 0.5
+    entropy_cost: float = 0.01
+
+
+def make_infer(net, cfg: SebulbaConfig):
+    """(params, obs [B, ...], seed i32) -> (actions i32[B], logits, values).
+
+    One batched inference step on an actor core: sample actions from the
+    policy, and return logits (needed later for the V-trace importance
+    ratios) and values (diagnostics)."""
+
+    def program(params, obs, seed):
+        logits, values = net.apply(params, obs)
+        key = jax.random.PRNGKey(seed)
+        actions = jax.random.categorical(key, logits).astype(jnp.int32)
+        return actions, logits, values
+
+    return program
+
+
+def make_eval(net):
+    """(params, obs [B, ...]) -> greedy actions i32[B] (evaluation policy)."""
+
+    def program(params, obs):
+        logits, _ = net.apply(params, obs)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    return program
+
+
+def make_grad(net, cfg: SebulbaConfig):
+    """(params, obs [T+1,B,...], actions [T,B], rewards, discounts,
+    behaviour_logits [T,B,A]) -> (grads [P], metrics [4]).
+
+    The V-trace loss (L1 Pallas kernel inside) over one learner shard."""
+    loss_cfg = losses.VTraceConfig(
+        discount=cfg.discount,
+        clip_rho=cfg.clip_rho,
+        clip_c=cfg.clip_c,
+        baseline_cost=cfg.baseline_cost,
+        entropy_cost=cfg.entropy_cost,
+        block_b=128,
+    )
+
+    def loss_fn(params, obs, actions, rewards, discounts, behaviour_logits):
+        tp1, batch = obs.shape[0], obs.shape[1]
+        flat_obs = obs.reshape((tp1 * batch,) + obs.shape[2:])
+        logits, values = net.apply(params, flat_obs)
+        logits = logits.reshape(tp1, batch, -1)
+        values = values.reshape(tp1, batch)
+        return losses.vtrace_loss(
+            logits, values, behaviour_logits, actions, rewards, discounts, loss_cfg
+        )
+
+    def program(params, obs, actions, rewards, discounts, behaviour_logits):
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, obs, actions, rewards, discounts, behaviour_logits
+        )
+        return grads, metrics
+
+    return program
+
+
+def make_apply(opt: optim.Optimiser):
+    """(params, opt_state, grads) -> (params', opt_state').
+
+    Runs *after* the Rust collective has averaged gradients; shared by
+    Sebulba, Anakin-psum and MuZero learners."""
+
+    def program(params, opt_state, grads):
+        return opt.apply(params, opt_state, grads)
+
+    return program
+
+
+def make_init(net, opt: optim.Optimiser):
+    """(seed i32) -> (params, opt_state)."""
+
+    def program(seed):
+        key = jax.random.PRNGKey(seed)
+        params = net.spec.init_flat(key)
+        opt_state = opt.init_state(net.param_size)
+        return params, opt_state
+
+    return program

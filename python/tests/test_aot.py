@@ -1,0 +1,75 @@
+"""AOT pipeline tests: lowering produces parseable HLO text + sane manifest."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, networks, optim, sebulba
+
+
+class TestLowering:
+    def test_hlo_text_structure(self):
+        """Lowered text must be an HloModule with an ENTRY computation
+        returning a tuple (the contract the Rust loader relies on)."""
+        net = networks.MLPActorCritic(obs_dim=4, num_actions=2, hidden=(4,))
+        cfg = sebulba.SebulbaConfig()
+        fn = sebulba.make_infer(net, cfg)
+        text = aot.to_hlo_text(
+            fn,
+            (
+                aot.spec((net.param_size,)),
+                aot.spec((3, 4)),
+                aot.spec((), jnp.int32),
+            ),
+        )
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        # return_tuple=True: root is a tuple of the three outputs
+        assert "(s32[3]" in text.replace(" ", "")[: len(text)] or "tuple" in text
+
+    def test_spec_json_dtypes(self):
+        s = aot._spec_json("x", jax.ShapeDtypeStruct((2, 3), jnp.float32))
+        assert s == {"name": "x", "dtype": "f32", "shape": [2, 3]}
+        s = aot._spec_json("a", jax.ShapeDtypeStruct((), jnp.int32))
+        assert s == {"name": "a", "dtype": "i32", "shape": []}
+
+
+class TestExporter:
+    def test_export_and_manifest(self, tmp_path):
+        ex = aot.Exporter(str(tmp_path))
+        net = networks.MLPActorCritic(obs_dim=4, num_actions=2, hidden=(4,))
+        opt = optim.Optimiser(kind="sgd", lr=0.1)
+        ex.export(
+            "toy_init",
+            sebulba.make_init(net, opt),
+            (aot.spec((), jnp.int32),),
+            ("seed",),
+        )
+        ex.agents["toy"] = {"param_size": net.param_size}
+        ex.write_manifest()
+
+        assert (tmp_path / "toy_init.hlo.txt").exists()
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        prog = manifest["programs"]["toy_init"]
+        assert prog["file"] == "toy_init.hlo.txt"
+        assert prog["inputs"] == [{"name": "seed", "dtype": "i32", "shape": []}]
+        assert len(prog["outputs"]) == 2  # params, opt_state
+        assert prog["outputs"][0]["shape"] == [net.param_size]
+        assert manifest["agents"]["toy"]["param_size"] == net.param_size
+
+    def test_output_shape_inference_matches_eval_shape(self, tmp_path):
+        ex = aot.Exporter(str(tmp_path))
+        net = networks.MLPActorCritic(obs_dim=6, num_actions=3, hidden=(8,))
+        cfg = sebulba.SebulbaConfig()
+        ex.export(
+            "toy_infer",
+            sebulba.make_infer(net, cfg),
+            (aot.spec((net.param_size,)), aot.spec((5, 6)), aot.spec((), jnp.int32)),
+            ("params", "obs", "seed"),
+        )
+        outs = ex.programs["toy_infer"]["outputs"]
+        assert outs[0]["shape"] == [5] and outs[0]["dtype"] == "i32"  # actions
+        assert outs[1]["shape"] == [5, 3]  # logits
+        assert outs[2]["shape"] == [5]  # values

@@ -1,0 +1,195 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+Hypothesis sweeps shapes, block sizes and value ranges; the oracle in
+`compile.kernels.ref` is the ground truth (itself unit-tested against
+hand-computed recurrences below).
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import gae, ref, returns, vtrace
+
+hypothesis.settings.register_profile(
+    "kernels", max_examples=25, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def _traj(seed, t_len, batch, rho_scale=0.5):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    log_rhos = jax.random.normal(ks[0], (t_len, batch)) * rho_scale
+    # ~10% episode boundaries
+    discounts = jnp.where(jax.random.uniform(ks[1], (t_len, batch)) > 0.1, 0.99, 0.0)
+    rewards = jax.random.normal(ks[2], (t_len, batch))
+    values = jax.random.normal(ks[3], (t_len, batch))
+    bootstrap = jax.random.normal(ks[4], (batch,))
+    return log_rhos, discounts, rewards, values, bootstrap
+
+
+# ---------------------------------------------------------------------------
+# Oracle sanity: hand-computed micro-cases
+# ---------------------------------------------------------------------------
+
+
+class TestOracle:
+    def test_vtrace_on_policy_equals_td_lambda1(self):
+        """With rho=1 (on-policy) and no clipping active, vs - v telescopes to
+        the full Monte-Carlo correction: vs_t = sum of discounted deltas."""
+        t_len, batch = 5, 3
+        _, discounts, rewards, values, bootstrap = _traj(0, t_len, batch)
+        discounts = jnp.full_like(discounts, 0.9)
+        out = ref.vtrace(jnp.zeros((t_len, batch)), discounts, rewards, values, bootstrap)
+        # manual backwards recursion
+        vtp1 = np.concatenate([np.asarray(values)[1:], np.asarray(bootstrap)[None]], 0)
+        deltas = np.asarray(rewards) + 0.9 * vtp1 - np.asarray(values)
+        acc = np.zeros(batch)
+        expected = np.zeros((t_len, batch))
+        for t in reversed(range(t_len)):
+            acc = deltas[t] + 0.9 * acc
+            expected[t] = acc + np.asarray(values)[t]
+        np.testing.assert_allclose(out.vs, expected, rtol=1e-5)
+
+    def test_vtrace_zero_discount_isolates_steps(self):
+        """discount==0 everywhere => vs_t = rho_t-corrected one-step target."""
+        t_len, batch = 4, 2
+        log_rhos, _, rewards, values, bootstrap = _traj(1, t_len, batch)
+        zeros = jnp.zeros((t_len, batch))
+        out = ref.vtrace(log_rhos, zeros, rewards, values, bootstrap)
+        clipped = np.minimum(1.0, np.exp(np.asarray(log_rhos)))
+        expected = np.asarray(values) + clipped * (np.asarray(rewards) - np.asarray(values))
+        np.testing.assert_allclose(out.vs, expected, rtol=1e-5)
+
+    def test_gae_lambda0_is_td_error(self):
+        t_len, batch = 6, 2
+        _, discounts, rewards, values, bootstrap = _traj(2, t_len, batch)
+        adv = ref.gae(rewards, discounts, values, bootstrap, lambda_=0.0)
+        vtp1 = np.concatenate([np.asarray(values)[1:], np.asarray(bootstrap)[None]], 0)
+        deltas = np.asarray(rewards) + np.asarray(discounts) * vtp1 - np.asarray(values)
+        np.testing.assert_allclose(adv, deltas, rtol=1e-5)
+
+    def test_lambda_returns_lambda0_is_one_step(self):
+        t_len, batch = 6, 2
+        _, discounts, rewards, values, bootstrap = _traj(3, t_len, batch)
+        vtp1 = jnp.concatenate([values[1:], bootstrap[None]], axis=0)
+        g = ref.lambda_returns(rewards, discounts, vtp1, lambda_=0.0)
+        expected = np.asarray(rewards) + np.asarray(discounts) * np.asarray(vtp1)
+        np.testing.assert_allclose(g, expected, rtol=1e-5)
+
+    def test_lambda_returns_lambda1_is_discounted_sum(self):
+        """lambda=1 returns are the discounted reward sum + bootstrap."""
+        t_len, batch = 5, 2
+        _, _, rewards, values, bootstrap = _traj(4, t_len, batch)
+        discounts = jnp.full((t_len, batch), 0.9)
+        vtp1 = jnp.concatenate([values[1:], bootstrap[None]], axis=0)
+        g = ref.lambda_returns(rewards, discounts, vtp1, lambda_=1.0)
+        acc = np.asarray(bootstrap)
+        expected = np.zeros((t_len, batch))
+        for t in reversed(range(t_len)):
+            acc = np.asarray(rewards)[t] + 0.9 * acc
+            expected[t] = acc
+        np.testing.assert_allclose(g, expected, rtol=1e-5)
+
+    def test_vtrace_pg_advantage_definition(self):
+        t_len, batch = 5, 3
+        log_rhos, discounts, rewards, values, bootstrap = _traj(5, t_len, batch)
+        out = ref.vtrace(log_rhos, discounts, rewards, values, bootstrap)
+        vs_tp1 = np.concatenate([np.asarray(out.vs)[1:], np.asarray(bootstrap)[None]], 0)
+        clipped = np.minimum(1.0, np.exp(np.asarray(log_rhos)))
+        expected = clipped * (
+            np.asarray(rewards) + np.asarray(discounts) * vs_tp1 - np.asarray(values)
+        )
+        np.testing.assert_allclose(out.pg_advantages, expected, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels vs oracle (hypothesis shape/value sweeps)
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(
+    t_len=st.integers(1, 24),
+    batch=st.integers(1, 33),
+    block_b=st.sampled_from([1, 2, 5, 8, 128]),
+    seed=st.integers(0, 2**16),
+    rho_clip=st.sampled_from([0.5, 1.0, 2.0]),
+)
+def test_vtrace_kernel_matches_ref(t_len, batch, block_b, seed, rho_clip):
+    log_rhos, discounts, rewards, values, bootstrap = _traj(seed, t_len, batch)
+    want = ref.vtrace(log_rhos, discounts, rewards, values, bootstrap,
+                      clip_rho_threshold=rho_clip)
+    got = vtrace.vtrace(log_rhos, discounts, rewards, values, bootstrap,
+                        clip_rho_threshold=rho_clip, block_b=block_b)
+    np.testing.assert_allclose(got.vs, want.vs, rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(got.pg_advantages, want.pg_advantages, rtol=2e-5, atol=1e-5)
+
+
+@hypothesis.given(
+    t_len=st.integers(1, 24),
+    batch=st.integers(1, 33),
+    block_b=st.sampled_from([1, 3, 8, 128]),
+    lam=st.sampled_from([0.0, 0.5, 0.95, 1.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_gae_kernel_matches_ref(t_len, batch, block_b, lam, seed):
+    _, discounts, rewards, values, bootstrap = _traj(seed, t_len, batch)
+    want = ref.gae(rewards, discounts, values, bootstrap, lambda_=lam)
+    got = gae.gae(rewards, discounts, values, bootstrap, lambda_=lam, block_b=block_b)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-5)
+
+
+@hypothesis.given(
+    t_len=st.integers(1, 24),
+    batch=st.integers(1, 33),
+    block_b=st.sampled_from([1, 4, 128]),
+    lam=st.sampled_from([0.0, 0.9, 1.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_returns_kernel_matches_ref(t_len, batch, block_b, lam, seed):
+    _, discounts, rewards, values, bootstrap = _traj(seed, t_len, batch)
+    vtp1 = jnp.concatenate([values[1:], bootstrap[None]], axis=0)
+    want = ref.lambda_returns(rewards, discounts, vtp1, lambda_=lam)
+    got = returns.lambda_returns(rewards, discounts, vtp1, lambda_=lam, block_b=block_b)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Edge cases & jit/compile behaviour
+# ---------------------------------------------------------------------------
+
+
+class TestEdgeCases:
+    def test_t1_b1(self):
+        args = _traj(7, 1, 1)
+        want = ref.vtrace(*args)
+        got = vtrace.vtrace(*args)
+        np.testing.assert_allclose(got.vs, want.vs, rtol=1e-5)
+
+    def test_large_negative_log_rhos(self):
+        """Extremely off-policy data must not produce NaNs (rho -> 0)."""
+        t_len, batch = 8, 4
+        _, discounts, rewards, values, bootstrap = _traj(8, t_len, batch)
+        log_rhos = jnp.full((t_len, batch), -50.0)
+        got = vtrace.vtrace(log_rhos, discounts, rewards, values, bootstrap)
+        assert np.isfinite(np.asarray(got.vs)).all()
+        # rho == 0 => vs == values exactly
+        np.testing.assert_allclose(got.vs, values, rtol=1e-5)
+
+    def test_kernel_is_jittable(self):
+        args = _traj(9, 12, 16)
+        f = jax.jit(lambda *a: vtrace.vtrace(*a))
+        want = ref.vtrace(*args)
+        got = f(*args)
+        np.testing.assert_allclose(got.vs, want.vs, rtol=2e-5, atol=1e-5)
+
+    def test_vtrace_batch_padding_exact(self):
+        """Batch not divisible by block: padded lanes must not leak."""
+        args = _traj(10, 9, 7)
+        want = ref.vtrace(*args)
+        got = vtrace.vtrace(*args, block_b=4)
+        np.testing.assert_allclose(got.vs, want.vs, rtol=2e-5, atol=1e-5)
+        np.testing.assert_allclose(got.pg_advantages, want.pg_advantages, rtol=2e-5, atol=1e-5)

@@ -1,0 +1,189 @@
+"""L2 unit tests: losses and pure-JAX environments."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import envs_jax, losses, networks
+
+
+def _fake_traj(seed, t_len, batch, num_actions):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    learner_logits = jax.random.normal(ks[0], (t_len + 1, batch, num_actions))
+    learner_values = jax.random.normal(ks[1], (t_len + 1, batch))
+    behaviour_logits = jax.random.normal(ks[2], (t_len, batch, num_actions))
+    actions = jax.random.randint(ks[3], (t_len, batch), 0, num_actions)
+    rewards = jax.random.normal(ks[4], (t_len, batch))
+    discounts = jnp.where(jax.random.uniform(ks[5], (t_len, batch)) > 0.1, 0.99, 0.0)
+    return learner_logits, learner_values, behaviour_logits, actions, rewards, discounts
+
+
+class TestVTraceLoss:
+    def test_finite_and_shapes(self):
+        args = _fake_traj(0, 10, 4, 3)
+        loss, metrics = losses.vtrace_loss(*args, losses.VTraceConfig())
+        assert loss.shape == ()
+        assert metrics.shape == (4,)
+        assert np.isfinite(float(loss))
+
+    def test_entropy_term_sign(self):
+        """Raising entropy_cost must lower the loss (entropy is subtracted)."""
+        args = _fake_traj(1, 8, 4, 5)
+        l0, _ = losses.vtrace_loss(*args, losses.VTraceConfig(entropy_cost=0.0))
+        l1, _ = losses.vtrace_loss(*args, losses.VTraceConfig(entropy_cost=1.0))
+        m = losses.vtrace_loss(*args, losses.VTraceConfig(entropy_cost=0.0))[1]
+        assert float(l1) < float(l0)
+
+    def test_gradient_nonzero_and_finite(self):
+        net = networks.MLPActorCritic(obs_dim=6, num_actions=3, hidden=(8,))
+        flat = net.spec.init_flat(jax.random.PRNGKey(0))
+        t_len, batch = 5, 4
+        obs = jax.random.normal(jax.random.PRNGKey(1), (t_len + 1, batch, 6))
+        _, _, behaviour_logits, actions, rewards, discounts = _fake_traj(2, t_len, batch, 3)
+
+        def loss_fn(p):
+            logits, values = net.apply(p, obs.reshape(-1, 6))
+            logits = logits.reshape(t_len + 1, batch, 3)
+            values = values.reshape(t_len + 1, batch)
+            return losses.vtrace_loss(
+                logits, values, behaviour_logits, actions, rewards, discounts,
+                losses.VTraceConfig(),
+            )[0]
+
+        g = jax.grad(loss_fn)(flat)
+        assert np.isfinite(np.asarray(g)).all()
+        assert float(jnp.sum(jnp.abs(g))) > 0.0
+
+
+class TestA2CLoss:
+    def test_finite_and_shapes(self):
+        key = jax.random.PRNGKey(0)
+        ks = jax.random.split(key, 6)
+        t_len, batch, a = 7, 3, 4
+        logits = jax.random.normal(ks[0], (t_len, batch, a))
+        values = jax.random.normal(ks[1], (t_len, batch))
+        bootstrap = jax.random.normal(ks[2], (batch,))
+        actions = jax.random.randint(ks[3], (t_len, batch), 0, a)
+        rewards = jax.random.normal(ks[4], (t_len, batch))
+        discounts = jnp.full((t_len, batch), 0.99)
+        loss, metrics = losses.a2c_loss(
+            logits, values, bootstrap, actions, rewards, discounts, losses.A2CConfig()
+        )
+        assert np.isfinite(float(loss)) and metrics.shape == (4,)
+
+
+class TestMuZeroLoss:
+    def test_finite_and_grads(self):
+        net = networks.MuZeroNet(obs_dim=10, num_actions=3, latent=8, hidden=16)
+        flat = net.spec.init_flat(jax.random.PRNGKey(0))
+        t_len, batch = 8, 4
+        key = jax.random.PRNGKey(1)
+        ks = jax.random.split(key, 5)
+        obs = jax.random.normal(ks[0], (t_len + 1, batch, 10))
+        actions = jax.random.randint(ks[1], (t_len, batch), 0, 3)
+        rewards = jax.random.normal(ks[2], (t_len, batch))
+        discounts = jnp.full((t_len, batch), 0.99)
+        pol = jax.nn.softmax(jax.random.normal(ks[3], (t_len, batch, 3)))
+        cfg = losses.MuZeroConfig(unroll=3)
+
+        def loss_fn(p):
+            return losses.muzero_loss(net, p, obs, actions, rewards, discounts, pol, cfg)[0]
+
+        loss = loss_fn(flat)
+        assert np.isfinite(float(loss))
+        g = jax.grad(loss_fn)(flat)
+        assert np.isfinite(np.asarray(g)).all()
+        assert float(jnp.sum(jnp.abs(g))) > 0.0
+
+
+class TestCatch:
+    def test_episode_length_and_reward(self):
+        env = envs_jax.Catch()
+        state = env.reset(jax.random.PRNGKey(0))
+        total_steps = 0
+        done = False
+        # always stay: ball starts at row 0, terminal at row rows-1
+        while not done and total_steps < 20:
+            state, reward, done = env.step(state, jnp.array(1), jax.random.PRNGKey(1))
+            total_steps += 1
+        assert total_steps == env.rows - 1
+        assert float(reward) in (1.0, -1.0)
+
+    def test_catching_gives_plus_one(self):
+        env = envs_jax.Catch()
+        # construct state: ball about to land in column 2, paddle at 2
+        state = jnp.array([float(env.rows - 2), 2.0, 2.0])
+        _, reward, done = env.step(state, jnp.array(1), jax.random.PRNGKey(0))
+        assert bool(done) and float(reward) == 1.0
+
+    def test_missing_gives_minus_one(self):
+        env = envs_jax.Catch()
+        state = jnp.array([float(env.rows - 2), 2.0, 0.0])
+        _, reward, done = env.step(state, jnp.array(1), jax.random.PRNGKey(0))
+        assert bool(done) and float(reward) == -1.0
+
+    def test_paddle_clipped_to_board(self):
+        env = envs_jax.Catch()
+        state = jnp.array([0.0, 2.0, 0.0])
+        next_state, _, _ = env.step(state, jnp.array(0), jax.random.PRNGKey(0))  # left
+        assert float(next_state[2]) == 0.0
+
+    def test_observation_has_two_pixels(self):
+        env = envs_jax.Catch()
+        state = env.reset(jax.random.PRNGKey(3))
+        obs = env.observe(state)
+        assert obs.shape == (env.obs_dim,)
+        assert float(jnp.sum(obs)) == 2.0  # ball + paddle
+
+
+class TestGridWorld:
+    def test_reaching_goal(self):
+        env = envs_jax.GridWorld(size=4)
+        # agent at (0,0), goal at (0,1): move right
+        state = jnp.array([0.0, 0.0, 0.0, 1.0, 0.0])
+        next_state, reward, done = env.step(state, jnp.array(3), jax.random.PRNGKey(0))
+        assert bool(done) and float(reward) == 1.0
+
+    def test_timeout(self):
+        env = envs_jax.GridWorld(size=4, horizon=3)
+        state = jnp.array([0.0, 0.0, 3.0, 3.0, 0.0])
+        done = False
+        steps = 0
+        while not done:
+            state, reward, done = env.step(state, jnp.array(0), jax.random.PRNGKey(0))
+            steps += 1
+            assert steps <= 3
+        assert steps == 3 and float(reward) == 0.0
+
+    def test_walls_clip(self):
+        env = envs_jax.GridWorld(size=4)
+        state = jnp.array([0.0, 0.0, 3.0, 3.0, 0.0])
+        next_state, _, _ = env.step(state, jnp.array(0), jax.random.PRNGKey(0))  # up
+        assert float(next_state[0]) == 0.0
+
+    def test_observation_onehot(self):
+        env = envs_jax.GridWorld(size=4)
+        state = env.reset(jax.random.PRNGKey(0))
+        obs = env.observe(state)
+        assert obs.shape == (32,)
+        assert float(jnp.sum(obs)) == 2.0  # position + goal one-hots
+
+
+class TestAutoReset:
+    def test_terminal_resets_and_zero_discount(self):
+        env = envs_jax.Catch()
+        state = jnp.array([float(env.rows - 2), 2.0, 2.0])  # ball lands next step
+        next_state, reward, disc = envs_jax.auto_reset_step(
+            env, state, jnp.array(1), jax.random.PRNGKey(0), 0.99
+        )
+        assert float(disc) == 0.0
+        assert float(next_state[0]) == 0.0  # fresh episode: ball back at top
+
+    def test_nonterminal_keeps_discount(self):
+        env = envs_jax.Catch()
+        state = env.reset(jax.random.PRNGKey(0))
+        _, _, disc = envs_jax.auto_reset_step(
+            env, state, jnp.array(1), jax.random.PRNGKey(1), 0.99
+        )
+        assert float(disc) == pytest.approx(0.99)

@@ -1,0 +1,166 @@
+"""L2 unit tests: flat-parameter networks and optimisers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import networks, optim
+
+
+class TestParamSpec:
+    def test_size_and_unflatten_roundtrip(self):
+        net = networks.MLPActorCritic(obs_dim=10, num_actions=4, hidden=(8, 8))
+        flat = net.spec.init_flat(jax.random.PRNGKey(0))
+        assert flat.shape == (net.param_size,)
+        leaves = net.spec.unflatten(flat)
+        total = sum(int(np.prod(v.shape)) for v in leaves.values())
+        assert total == net.param_size
+        # re-flatten in leaf order reproduces the input
+        reflat = jnp.concatenate([leaves[l.name].reshape(-1) for l in net.spec.leaves])
+        np.testing.assert_array_equal(flat, reflat)
+
+    def test_init_deterministic(self):
+        net = networks.MLPActorCritic(obs_dim=6, num_actions=3)
+        a = net.spec.init_flat(jax.random.PRNGKey(42))
+        b = net.spec.init_flat(jax.random.PRNGKey(42))
+        np.testing.assert_array_equal(a, b)
+        c = net.spec.init_flat(jax.random.PRNGKey(43))
+        assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+    def test_bias_leaves_zero_init(self):
+        net = networks.MLPActorCritic(obs_dim=6, num_actions=3, hidden=(4,))
+        flat = net.spec.init_flat(jax.random.PRNGKey(0))
+        leaves = net.spec.unflatten(flat)
+        np.testing.assert_array_equal(leaves["b0"], np.zeros(4))
+
+
+class TestMLP:
+    def test_output_shapes(self):
+        net = networks.MLPActorCritic(obs_dim=12, num_actions=5, hidden=(16,))
+        flat = net.spec.init_flat(jax.random.PRNGKey(0))
+        obs = jax.random.normal(jax.random.PRNGKey(1), (7, 12))
+        logits, value = net.apply(flat, obs)
+        assert logits.shape == (7, 5)
+        assert value.shape == (7,)
+
+    def test_batch_independence(self):
+        """Each row's output depends only on that row's input."""
+        net = networks.MLPActorCritic(obs_dim=4, num_actions=2)
+        flat = net.spec.init_flat(jax.random.PRNGKey(0))
+        obs = jax.random.normal(jax.random.PRNGKey(1), (3, 4))
+        logits_all, _ = net.apply(flat, obs)
+        logits_row, _ = net.apply(flat, obs[1:2])
+        np.testing.assert_allclose(logits_all[1:2], logits_row, rtol=1e-6)
+
+
+class TestConv:
+    def test_output_shapes_and_param_count(self):
+        net = networks.ConvActorCritic(
+            height=42, width=42, in_channels=2, num_actions=6,
+            channels=(8, 16), dense=128,
+        )
+        flat = net.spec.init_flat(jax.random.PRNGKey(0))
+        assert flat.shape == (net.param_size,)
+        obs = jax.random.uniform(jax.random.PRNGKey(1), (3, 42, 42, 2))
+        logits, value = net.apply(flat, obs)
+        assert logits.shape == (3, 6)
+        assert value.shape == (3,)
+
+    def test_gradients_flow_to_all_leaves(self):
+        net = networks.ConvActorCritic(
+            height=20, width=20, in_channels=1, num_actions=3,
+            channels=(4,), kernels=((5, 2),), dense=16,
+        )
+        flat = net.spec.init_flat(jax.random.PRNGKey(0))
+        obs = jax.random.uniform(jax.random.PRNGKey(1), (2, 20, 20, 1))
+
+        def loss(p):
+            logits, value = net.apply(p, obs)
+            return jnp.sum(logits**2) + jnp.sum(value**2)
+
+        g = jax.grad(loss)(flat)
+        assert np.isfinite(np.asarray(g)).all()
+        assert float(jnp.sum(jnp.abs(g))) > 0.0
+
+
+class TestMuZeroNet:
+    def test_shapes(self):
+        net = networks.MuZeroNet(obs_dim=50, num_actions=3, latent=8, hidden=16)
+        flat = net.spec.init_flat(jax.random.PRNGKey(0))
+        obs = jax.random.normal(jax.random.PRNGKey(1), (4, 50))
+        h = net.represent(flat, obs)
+        assert h.shape == (4, 8)
+        assert float(jnp.max(jnp.abs(h))) <= 1.0 + 1e-6  # tanh-bounded
+        a = jax.nn.one_hot(jnp.array([0, 1, 2, 0]), 3)
+        h2, r = net.dynamics(flat, h, a)
+        assert h2.shape == (4, 8) and r.shape == (4,)
+        logits, v = net.predict(flat, h2)
+        assert logits.shape == (4, 3) and v.shape == (4,)
+
+
+class TestOptim:
+    def _setup(self, kind, **kw):
+        opt = optim.Optimiser(kind=kind, lr=0.1, **kw)
+        params = jnp.array([1.0, -2.0, 3.0])
+        state = opt.init_state(3)
+        grads = jnp.array([0.5, -0.5, 1.0])
+        return opt, params, state, grads
+
+    def test_sgd_step(self):
+        opt, p, s, g = self._setup("sgd")
+        p2, s2 = opt.apply(p, s, g)
+        np.testing.assert_allclose(p2, p - 0.1 * g, rtol=1e-6)
+
+    def test_sgd_momentum_accumulates(self):
+        opt, p, s, g = self._setup("sgd", momentum=0.9)
+        p1, s1 = opt.apply(p, s, g)
+        p2, s2 = opt.apply(p1, s1, g)
+        # second step uses mom = 0.9*g + g = 1.9 g
+        np.testing.assert_allclose(p2, p1 - 0.1 * 1.9 * g, rtol=1e-6)
+
+    def test_rmsprop_matches_manual(self):
+        opt, p, s, g = self._setup("rmsprop", decay=0.9, eps=1e-5)
+        p1, s1 = opt.apply(p, s, g)
+        ms = 0.1 * np.asarray(g) ** 2
+        expected = np.asarray(p) - 0.1 * np.asarray(g) / (np.sqrt(ms) + 1e-5)
+        np.testing.assert_allclose(p1, expected, rtol=1e-5)
+        np.testing.assert_allclose(s1, ms, rtol=1e-6)
+
+    def test_adam_first_step_is_lr_signed(self):
+        opt, p, s, g = self._setup("adam", eps=0.0)
+        p1, _ = opt.apply(p, s, g)
+        # bias-corrected first Adam step == lr * sign(g) when eps=0
+        np.testing.assert_allclose(p1, p - 0.1 * np.sign(np.asarray(g)), rtol=1e-4)
+
+    def test_adam_state_layout(self):
+        opt = optim.Optimiser(kind="adam", lr=0.1)
+        assert opt.state_size(10) == 21
+        s = opt.init_state(10)
+        _, s1 = opt.apply(jnp.zeros(10), s, jnp.ones(10))
+        assert float(s1[-1]) == 1.0  # step counter is the last element
+        _, s2 = opt.apply(jnp.zeros(10), s1, jnp.ones(10))
+        assert float(s2[-1]) == 2.0
+
+    def test_grad_clipping(self):
+        opt = optim.Optimiser(kind="sgd", lr=1.0, max_grad_norm=1.0)
+        g = jnp.array([3.0, 4.0])  # norm 5
+        clipped = opt.clip(g)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(clipped)), 1.0, rtol=1e-5
+        )
+        # under the threshold: untouched
+        g_small = jnp.array([0.3, 0.4])
+        np.testing.assert_allclose(opt.clip(g_small), g_small, rtol=1e-6)
+
+    @pytest.mark.parametrize("kind", ["sgd", "rmsprop", "adam"])
+    def test_descends_quadratic(self, kind):
+        """Every optimiser must reduce f(x) = ||x||^2 over 50 steps."""
+        opt = optim.Optimiser(kind=kind, lr=0.05)
+        params = jnp.array([5.0, -3.0, 2.0])
+        state = opt.init_state(3)
+        f = lambda x: jnp.sum(x * x)
+        start = float(f(params))
+        for _ in range(250):
+            g = jax.grad(f)(params)
+            params, state = opt.apply(params, state, g)
+        assert float(f(params)) < 0.1 * start

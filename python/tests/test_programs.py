@@ -1,0 +1,202 @@
+"""Integration tests over the exported L2 programs (pre-lowering semantics).
+
+These run the exact functions that aot.py lowers, at small sizes, and check
+the contracts the Rust coordinator depends on: shapes, determinism, learning
+signal, and the grad/apply psum seam.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import anakin, envs_jax, muzero, networks, optim, sebulba
+
+
+@pytest.fixture(scope="module")
+def catch_setup():
+    net = networks.MLPActorCritic(obs_dim=50, num_actions=3, hidden=(32, 32))
+    opt = optim.Optimiser(kind="rmsprop", lr=5e-4, max_grad_norm=40.0)
+    cfg = sebulba.SebulbaConfig(batch=8, unroll=10)
+    return net, opt, cfg
+
+
+class TestSebulbaPrograms:
+    def test_init_shapes(self, catch_setup):
+        net, opt, cfg = catch_setup
+        params, opt_state = sebulba.make_init(net, opt)(jnp.int32(7))
+        assert params.shape == (net.param_size,)
+        assert opt_state.shape == (opt.state_size(net.param_size),)
+
+    def test_infer_contract(self, catch_setup):
+        net, opt, cfg = catch_setup
+        params, _ = sebulba.make_init(net, opt)(jnp.int32(0))
+        obs = jax.random.normal(jax.random.PRNGKey(1), (8, 50))
+        actions, logits, values = sebulba.make_infer(net, cfg)(params, obs, jnp.int32(3))
+        assert actions.shape == (8,) and actions.dtype == jnp.int32
+        assert logits.shape == (8, 3) and values.shape == (8,)
+        assert int(jnp.min(actions)) >= 0 and int(jnp.max(actions)) < 3
+
+    def test_infer_deterministic_in_seed(self, catch_setup):
+        net, opt, cfg = catch_setup
+        params, _ = sebulba.make_init(net, opt)(jnp.int32(0))
+        obs = jax.random.normal(jax.random.PRNGKey(1), (8, 50))
+        infer = sebulba.make_infer(net, cfg)
+        a1, _, _ = infer(params, obs, jnp.int32(5))
+        a2, _, _ = infer(params, obs, jnp.int32(5))
+        np.testing.assert_array_equal(a1, a2)
+
+    def test_grad_apply_learns_synthetic(self, catch_setup):
+        """Repeated grad+apply on a fixed batch must reduce the loss —
+        the end-to-end learning signal of the Sebulba learner path."""
+        net, opt, cfg = catch_setup
+        t_len, batch = 10, 8
+        params, opt_state = sebulba.make_init(net, opt)(jnp.int32(0))
+        key = jax.random.PRNGKey(2)
+        ks = jax.random.split(key, 5)
+        obs = jax.random.normal(ks[0], (t_len + 1, batch, 50))
+        actions = jax.random.randint(ks[1], (t_len, batch), 0, 3)
+        rewards = jax.random.normal(ks[2], (t_len, batch))
+        discounts = jnp.full((t_len, batch), 0.99)
+        behaviour_logits = jax.random.normal(ks[3], (t_len, batch, 3)) * 0.1
+
+        grad_fn = jax.jit(sebulba.make_grad(net, cfg))
+        apply_fn = jax.jit(sebulba.make_apply(opt))
+        losses_seen = []
+        for _ in range(30):
+            grads, metrics = grad_fn(params, obs, actions, rewards, discounts, behaviour_logits)
+            params, opt_state = apply_fn(params, opt_state, grads)
+            losses_seen.append(float(metrics[0]))
+        assert losses_seen[-1] < losses_seen[0]
+
+    def test_psum_seam_equivalence(self, catch_setup):
+        """Averaging two half-batch gradients == one full-batch gradient
+        (the invariant the Rust collective relies on)."""
+        net, opt, cfg = catch_setup
+        t_len, batch = 6, 8
+        params, _ = sebulba.make_init(net, opt)(jnp.int32(0))
+        key = jax.random.PRNGKey(3)
+        ks = jax.random.split(key, 5)
+        obs = jax.random.normal(ks[0], (t_len + 1, batch, 50))
+        actions = jax.random.randint(ks[1], (t_len, batch), 0, 3)
+        rewards = jax.random.normal(ks[2], (t_len, batch))
+        discounts = jnp.full((t_len, batch), 0.99)
+        behaviour_logits = jax.random.normal(ks[3], (t_len, batch, 3)) * 0.1
+
+        grad_fn = sebulba.make_grad(net, cfg)
+        g_full, _ = grad_fn(params, obs, actions, rewards, discounts, behaviour_logits)
+        g_a, _ = grad_fn(params, obs[:, :4], actions[:, :4], rewards[:, :4],
+                         discounts[:, :4], behaviour_logits[:, :4])
+        g_b, _ = grad_fn(params, obs[:, 4:], actions[:, 4:], rewards[:, 4:],
+                         discounts[:, 4:], behaviour_logits[:, 4:])
+        np.testing.assert_allclose((g_a + g_b) / 2.0, g_full, rtol=1e-4, atol=1e-6)
+
+    def test_eval_greedy(self, catch_setup):
+        net, opt, cfg = catch_setup
+        params, _ = sebulba.make_init(net, opt)(jnp.int32(0))
+        obs = jax.random.normal(jax.random.PRNGKey(1), (1, 50))
+        a = sebulba.make_eval(net)(params, obs)
+        logits, _ = net.apply(params, obs)
+        assert int(a[0]) == int(jnp.argmax(logits[0]))
+
+
+class TestAnakinPrograms:
+    def _setup(self, iters=4):
+        env = envs_jax.Catch()
+        net = networks.MLPActorCritic(obs_dim=env.obs_dim, num_actions=3, hidden=(32,))
+        opt = optim.Optimiser(kind="rmsprop", lr=3e-3, max_grad_norm=40.0)
+        cfg = anakin.AnakinConfig(batch=16, unroll=9, iters=iters)
+        return env, net, opt, cfg
+
+    def test_init_and_bundled_shapes(self):
+        env, net, opt, cfg = self._setup()
+        init = anakin.make_init(env, net, opt, cfg)
+        params, opt_state, env_states = init(jnp.int32(0))
+        assert env_states.shape == (cfg.batch, env.state_size)
+        prog = jax.jit(anakin.make_bundled(env, net, opt, cfg))
+        p2, o2, s2, metrics = prog(params, opt_state, env_states, jnp.int32(1))
+        assert p2.shape == params.shape
+        assert metrics.shape == (cfg.iters, 5)
+        assert np.isfinite(np.asarray(metrics)).all()
+        # parameters actually moved
+        assert float(jnp.sum(jnp.abs(p2 - params))) > 0.0
+
+    def test_bundled_deterministic(self):
+        """Anakin's 'self contained and deterministic' claim."""
+        env, net, opt, cfg = self._setup()
+        init = anakin.make_init(env, net, opt, cfg)
+        params, opt_state, env_states = init(jnp.int32(0))
+        prog = jax.jit(anakin.make_bundled(env, net, opt, cfg))
+        out1 = prog(params, opt_state, env_states, jnp.int32(9))
+        out2 = prog(params, opt_state, env_states, jnp.int32(9))
+        np.testing.assert_array_equal(out1[0], out2[0])
+
+    def test_psum_grad_matches_bundled_first_step(self):
+        """psum-mode grads applied once == bundled with iters=1."""
+        env, net, opt, cfg1 = self._setup(iters=1)
+        init = anakin.make_init(env, net, opt, cfg1)
+        params, opt_state, env_states = init(jnp.int32(0))
+        grads, env_states2, metrics = anakin.make_psum_grad(env, net, opt, cfg1)(
+            params, opt_state, env_states, jnp.int32(5)
+        )
+        p_psum, o_psum = sebulba.make_apply(opt)(params, opt_state, grads)
+        p_bund, o_bund, _, _ = anakin.make_bundled(env, net, opt, cfg1)(
+            params, opt_state, env_states, jnp.int32(5)
+        )
+        np.testing.assert_allclose(p_psum, p_bund, rtol=1e-5, atol=1e-7)
+
+    def test_anakin_learns_catch(self):
+        """A few hundred in-graph updates must beat the random-policy return
+        on Catch (random ~= -0.6 expected; learned should be > 0)."""
+        env, net, opt, cfg = self._setup(iters=50)
+        init = anakin.make_init(env, net, opt, cfg)
+        params, opt_state, env_states = init(jnp.int32(0))
+        prog = jax.jit(anakin.make_bundled(env, net, opt, cfg))
+        for i in range(6):  # 300 updates total
+            params, opt_state, env_states, metrics = prog(
+                params, opt_state, env_states, jnp.int32(i)
+            )
+        # mean per-episode reward over the last chunk of updates
+        final_reward = float(jnp.mean(metrics[-10:, 4]))
+        assert final_reward > 0.0, f"did not learn: {final_reward}"
+
+
+class TestMuZeroPrograms:
+    def _setup(self):
+        net = networks.MuZeroNet(obs_dim=50, num_actions=3, latent=16, hidden=32)
+        opt = optim.Optimiser(kind="adam", lr=3e-4, max_grad_norm=40.0)
+        cfg = muzero.MuZeroProgConfig(batch=4, unroll=8, model_unroll=3)
+        return net, opt, cfg
+
+    def test_model_programs_contract(self):
+        net, opt, cfg = self._setup()
+        params, _ = muzero.make_init(net, opt)(jnp.int32(0))
+        obs = jax.random.normal(jax.random.PRNGKey(1), (4, 50))
+        h = muzero.make_represent(net)(params, obs)
+        assert h.shape == (4, 16)
+        h2, r = muzero.make_dynamics(net)(params, h, jnp.array([0, 1, 2, 1], jnp.int32))
+        assert h2.shape == (4, 16) and r.shape == (4,)
+        logits, v = muzero.make_predict(net)(params, h2)
+        assert logits.shape == (4, 3) and v.shape == (4,)
+
+    def test_grad_apply_reduces_loss(self):
+        net, opt, cfg = self._setup()
+        params, opt_state = muzero.make_init(net, opt)(jnp.int32(0))
+        t_len, batch = 8, 4
+        key = jax.random.PRNGKey(2)
+        ks = jax.random.split(key, 4)
+        obs = jax.random.normal(ks[0], (t_len + 1, batch, 50))
+        actions = jax.random.randint(ks[1], (t_len, batch), 0, 3)
+        rewards = jax.random.normal(ks[2], (t_len, batch)) * 0.5
+        discounts = jnp.full((t_len, batch), 0.99)
+        pol = jax.nn.softmax(jax.random.normal(ks[3], (t_len, batch, 3)))
+
+        grad_fn = jax.jit(muzero.make_grad(net, cfg))
+        apply_fn = jax.jit(sebulba.make_apply(opt))
+        first = last = None
+        for i in range(40):
+            grads, metrics = grad_fn(params, obs, actions, rewards, discounts, pol)
+            params, opt_state = apply_fn(params, opt_state, grads)
+            if i == 0:
+                first = float(metrics[0])
+            last = float(metrics[0])
+        assert last < first

@@ -1,0 +1,67 @@
+//! Ablation: the actor/learner core split.
+//!
+//! Paper: "For simple model-free agents we often find it convenient to have
+//! 3x as many learner cores as actor cores (since the backward pass is
+//! slower than the forward pass)." This sweep varies A:L over an 8-core
+//! host on the atari_like conv agent and reports throughput plus the
+//! actor/learner busy-time balance that explains the optimum.
+
+use podracer::benchkit::Bench;
+use podracer::coordinator::{Sebulba, SebulbaConfig};
+use podracer::runtime::Pod;
+
+fn main() -> anyhow::Result<()> {
+    podracer::util::logging::init();
+    let artifacts = podracer::artifacts_dir();
+    let fast = std::env::var("PODRACER_BENCH_FAST").is_ok();
+    let updates = if fast { 3 } else { 8 };
+
+    // (actor cores, learner cores) with actor_batch=32 => shard 32/L
+    // (grad programs lowered for b in {8, 16, 32})
+    let splits = [(1usize, 4usize), (2, 4), (4, 4), (4, 2), (6, 2), (4, 1)];
+
+    let mut bench = Bench::new("ablation: actor:learner core split (paper: 1:3 for model-free)");
+    let max_cores = splits.iter().map(|&(a, l)| a + l).max().unwrap();
+    let mut pod = Pod::new(&artifacts, max_cores)?;
+    let mut rows = Vec::new();
+
+    for &(a, l) in &splits {
+        let cfg = SebulbaConfig {
+            agent: "seb_atari".into(),
+            env_kind: "atari_like",
+            actor_cores: a,
+            learner_cores: l,
+            threads_per_actor_core: 1,
+            actor_batch: 32,
+            unroll: 20,
+            micro_batches: 1,
+            discount: 0.99,
+            queue_capacity: 2,
+            env_workers: 2,
+            replicas: 1,
+            total_updates: updates,
+            seed: 5,
+        };
+        let mut out = (0.0, 0.0, 0.0);
+        bench.case(&format!("{a}A:{l}L"), "frames/s", || {
+            let r = Sebulba::run_on(&mut pod, &cfg).unwrap();
+            out = (r.fps, r.actor_busy_seconds, r.learner_busy_seconds);
+            r.fps
+        });
+        rows.push((a, l, out.0, out.1, out.2));
+    }
+
+    println!("\n| split (A:L) | frames/s | actor busy (s) | learner busy (s) | learner/actor compute |");
+    println!("|---|---|---|---|---|");
+    for &(a, l, fps, ab, lb) in &rows {
+        println!("| {a}:{l} | {fps:.0} | {ab:.2} | {lb:.2} | {:.2}x |", lb / ab.max(1e-9));
+    }
+    println!(
+        "\nshape check (paper: backward pass slower than forward => learner-heavy split wins):\n\
+         the learner/actor compute ratio above shows how much device time the update needs\n\
+         relative to inference for the same frames — >1 supports the paper's 1:3 guidance."
+    );
+
+    bench.finish();
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Headline: "When using small neural networks and grid-world environments
+//! an Anakin architecture can easily perform 5 million steps per second,
+//! even on the 8-core TPU accessible for free through Google Colab."
+//!
+//! This bench measures our Anakin steps/sec on both exported agents at the
+//! Colab-like 8-core configuration, plus the single-core rate that anchors
+//! the projection. The gap to the paper's 5M/s is the TPU-vs-1-CPU hardware
+//! gap (documented in EXPERIMENTS.md), not an architecture gap: the
+//! in-graph fori_loop keeps Python/Rust off the step path in both.
+
+use podracer::anakin::{Anakin, AnakinConfig, Mode};
+use podracer::benchkit::Bench;
+use podracer::runtime::Pod;
+
+fn main() -> anyhow::Result<()> {
+    podracer::util::logging::init();
+    let artifacts = podracer::artifacts_dir();
+    let fast = std::env::var("PODRACER_BENCH_FAST").is_ok();
+    let outer = if fast { 2 } else { 8 };
+
+    let mut bench = Bench::new("anakin small-net steps/sec (paper: 5M/s on free Colab TPU)");
+    let mut pod = Pod::new(&artifacts, 8)?;
+    let mut results = Vec::new();
+
+    for (agent, cores) in [
+        ("anakin_catch", 1usize),
+        ("anakin_catch", 8),
+        ("anakin_grid", 1),
+        ("anakin_grid", 8),
+    ] {
+        let cfg = AnakinConfig {
+            agent: agent.into(),
+            cores,
+            outer_iters: outer,
+            mode: Mode::Bundled,
+            seed: 3,
+        };
+        let mut sps = 0.0;
+        bench.case(&format!("{agent} cores={cores}"), "steps/s", || {
+            let r = Anakin::run_on(&mut pod, &cfg).unwrap();
+            sps = r.sps;
+            r.sps
+        });
+        results.push((agent, cores, sps));
+    }
+
+    println!("\n| agent | cores | measured steps/s | paper (8-core TPU v2) |");
+    println!("|---|---|---|---|");
+    for &(agent, cores, sps) in &results {
+        let paper = if cores == 8 { "5,000,000" } else { "—" };
+        println!("| {agent} | {cores} | {sps:.0} | {paper} |");
+    }
+    println!(
+        "\ncontext: one TPUv2 core ≈ 22.5 TFLOP/s bf16 vs this CPU's ~50 GFLOP/s f32 —\n\
+         a ~450x per-core compute gap; the architecture (single fused XLA program, zero\n\
+         host involvement between outer calls) is identical. Per-step work here is ~60\n\
+         kFLOP (2x 64-unit MLP on 50-dim obs), so the CPU roofline is ~1M steps/s; the\n\
+         measured number vs that roofline is the efficiency figure (EXPERIMENTS.md §T-anakin-5m)."
+    );
+
+    bench.finish();
+    Ok(())
+}

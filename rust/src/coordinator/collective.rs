@@ -1,0 +1,229 @@
+//! Simulated collectives: the paper's `psum`/`pmean` over learner cores and
+//! replicas, performed by the coordinator between the `grad` and `apply`
+//! programs (DESIGN.md §4 "the psum seam").
+//!
+//! Two pieces:
+//! * [`all_reduce_mean`] — deterministic in-place tree reduction over the
+//!   gradient buffers a single learner thread collected from its cores.
+//! * [`GradientBus`] — the cross-replica collective: R learner threads post
+//!   their replica-mean gradients, the last to arrive computes the global
+//!   mean (in fixed replica order => deterministic), everyone picks it up.
+
+use std::sync::{Condvar, Mutex};
+
+use anyhow::{bail, Result};
+
+/// Deterministic pairwise-tree mean over `n` equal-length buffers, in place:
+/// on return, `bufs[0]` holds the mean. Tree order is fixed by index, so the
+/// result is bit-stable regardless of which core finished first.
+pub fn all_reduce_mean(bufs: &mut [Vec<f32>]) -> Result<()> {
+    let n = bufs.len();
+    if n == 0 {
+        bail!("all_reduce over zero buffers");
+    }
+    let len = bufs[0].len();
+    if bufs.iter().any(|b| b.len() != len) {
+        bail!("all_reduce over unequal buffer lengths");
+    }
+    // pairwise tree: stride doubling
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            let (a, b) = bufs.split_at_mut(i + stride);
+            let dst = &mut a[i];
+            let src = &b[0];
+            for k in 0..len {
+                dst[k] += src[k];
+            }
+            i += stride * 2;
+        }
+        stride *= 2;
+    }
+    let inv = 1.0 / n as f32;
+    for v in bufs[0].iter_mut() {
+        *v *= inv;
+    }
+    Ok(())
+}
+
+/// Cross-replica gradient all-reduce with barrier semantics.
+///
+/// Each of `n` participants calls `all_reduce(id, grads)` once per round;
+/// the call blocks until every participant of the round has posted, then all
+/// return the same global mean. Rounds are generation-counted, so repeated
+/// use is safe. `shutdown()` unblocks everyone with an error.
+pub struct GradientBus {
+    n: usize,
+    state: Mutex<BusState>,
+    cv: Condvar,
+}
+
+struct BusState {
+    generation: u64,
+    posted: Vec<Option<Vec<f32>>>,
+    result: Option<Vec<f32>>,
+    collected: usize,
+    shutdown: bool,
+}
+
+impl GradientBus {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        Self {
+            n,
+            state: Mutex::new(BusState {
+                generation: 0,
+                posted: vec![None; n],
+                result: None,
+                collected: 0,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn participants(&self) -> usize {
+        self.n
+    }
+
+    pub fn shutdown(&self) {
+        self.state.lock().unwrap().shutdown = true;
+        self.cv.notify_all();
+    }
+
+    /// Post `grads` for `id` and wait for the round's global mean.
+    pub fn all_reduce(&self, id: usize, grads: Vec<f32>) -> Result<Vec<f32>> {
+        if id >= self.n {
+            bail!("participant {id} out of range {}", self.n);
+        }
+        if self.n == 1 {
+            return Ok(grads); // fast path: single replica
+        }
+        let mut g = self.state.lock().unwrap();
+        let my_gen = g.generation;
+        if g.posted[id].is_some() {
+            bail!("participant {id} posted twice in one round");
+        }
+        g.posted[id] = Some(grads);
+
+        let all_posted = g.posted.iter().all(Option::is_some);
+        if all_posted {
+            // last one in computes the mean, in fixed id order
+            let mut bufs: Vec<Vec<f32>> =
+                g.posted.iter_mut().map(|o| o.take().unwrap()).collect();
+            all_reduce_mean(&mut bufs)?;
+            g.result = Some(bufs.swap_remove(0));
+            g.collected = 0;
+            self.cv.notify_all();
+        } else {
+            while g.generation == my_gen && g.result.is_none() && !g.shutdown {
+                g = self.cv.wait(g).unwrap();
+            }
+        }
+        if g.shutdown {
+            bail!("gradient bus shut down");
+        }
+        let result = g
+            .result
+            .as_ref()
+            .expect("round result missing")
+            .clone();
+        g.collected += 1;
+        if g.collected == self.n {
+            // round complete: reset for the next generation
+            g.result = None;
+            g.generation += 1;
+            self.cv.notify_all();
+        }
+        Ok(result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn mean_of_three() {
+        let mut bufs = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        all_reduce_mean(&mut bufs).unwrap();
+        assert_eq!(bufs[0], vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn single_buffer_identity() {
+        let mut bufs = vec![vec![7.0, -1.0]];
+        all_reduce_mean(&mut bufs).unwrap();
+        assert_eq!(bufs[0], vec![7.0, -1.0]);
+    }
+
+    #[test]
+    fn matches_sequential_sum() {
+        // deterministic tree == plain left-to-right mean for these values
+        for n in 1..9 {
+            let mut bufs: Vec<Vec<f32>> =
+                (0..n).map(|i| vec![i as f32, (i * i) as f32]).collect();
+            let want0: f32 = (0..n).map(|i| i as f32).sum::<f32>() / n as f32;
+            let want1: f32 = (0..n).map(|i| (i * i) as f32).sum::<f32>() / n as f32;
+            all_reduce_mean(&mut bufs).unwrap();
+            assert!((bufs[0][0] - want0).abs() < 1e-5);
+            assert!((bufs[0][1] - want1).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn unequal_lengths_rejected() {
+        let mut bufs = vec![vec![1.0], vec![1.0, 2.0]];
+        assert!(all_reduce_mean(&mut bufs).is_err());
+        let mut empty: Vec<Vec<f32>> = vec![];
+        assert!(all_reduce_mean(&mut empty).is_err());
+    }
+
+    #[test]
+    fn bus_single_participant_passthrough() {
+        let bus = GradientBus::new(1);
+        let out = bus.all_reduce(0, vec![1.0, 2.0]).unwrap();
+        assert_eq!(out, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn bus_three_replicas_agree() {
+        let bus = Arc::new(GradientBus::new(3));
+        let mut handles = Vec::new();
+        for id in 0..3 {
+            let bus = bus.clone();
+            handles.push(std::thread::spawn(move || {
+                bus.all_reduce(id, vec![id as f32 * 3.0]).unwrap()
+            }));
+        }
+        let results: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for r in &results {
+            assert_eq!(r, &vec![3.0]); // mean of 0, 3, 6
+        }
+    }
+
+    #[test]
+    fn bus_multiple_rounds() {
+        let bus = Arc::new(GradientBus::new(2));
+        for round in 0..5 {
+            let b1 = bus.clone();
+            let t = std::thread::spawn(move || b1.all_reduce(1, vec![round as f32 + 1.0]).unwrap());
+            let r0 = bus.all_reduce(0, vec![round as f32]).unwrap();
+            let r1 = t.join().unwrap();
+            assert_eq!(r0, r1);
+            assert!((r0[0] - (round as f32 + 0.5)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn bus_shutdown_unblocks() {
+        let bus = Arc::new(GradientBus::new(2));
+        let b = bus.clone();
+        let t = std::thread::spawn(move || b.all_reduce(0, vec![1.0]));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        bus.shutdown();
+        assert!(t.join().unwrap().is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! Sebulba run configuration.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+pub struct SebulbaConfig {
+    /// Agent tag in the artifact manifest (e.g. "seb_catch", "seb_atari").
+    pub agent: String,
+    /// Host environment kind (see `envs::make_factory`).
+    pub env_kind: &'static str,
+    /// Actor cores per replica (paper: `A`).
+    pub actor_cores: usize,
+    /// Learner cores per replica (paper: `8 - A`).
+    pub learner_cores: usize,
+    /// Python-thread analogue: actor threads per actor core (paper: ≥1 to
+    /// hide env stepping behind device compute).
+    pub threads_per_actor_core: usize,
+    /// Environments per actor thread (the "actor batch size" of Fig 4b).
+    pub actor_batch: usize,
+    /// Trajectory length T (paper: 20 IMPALA, 60 Sebulba).
+    pub unroll: usize,
+    /// Split each trajectory into `micro_batches` sequential updates
+    /// (the MuZero "N updates instead of a single larger one" trick).
+    pub micro_batches: usize,
+    /// Discount factor (must match the lowered loss config).
+    pub discount: f32,
+    /// Trajectory-queue capacity per replica (backpressure bound).
+    pub queue_capacity: usize,
+    /// Worker threads in the shared env-stepping pool, per replica.
+    pub env_workers: usize,
+    /// Replicas (each gets its own actor/learner cores + host state; the
+    /// cross-replica gradient mean runs on the GradientBus).
+    pub replicas: usize,
+    /// Stop after this many learner updates per replica.
+    pub total_updates: u64,
+    pub seed: u64,
+}
+
+impl Default for SebulbaConfig {
+    fn default() -> Self {
+        Self {
+            agent: "seb_catch".into(),
+            env_kind: "catch",
+            actor_cores: 2,
+            learner_cores: 2,
+            threads_per_actor_core: 2,
+            actor_batch: 32,
+            unroll: 20,
+            micro_batches: 1,
+            discount: 0.99,
+            queue_capacity: 4,
+            env_workers: 2,
+            replicas: 1,
+            total_updates: 50,
+            seed: 42,
+        }
+    }
+}
+
+impl SebulbaConfig {
+    pub fn cores_per_replica(&self) -> usize {
+        self.actor_cores + self.learner_cores
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.cores_per_replica() * self.replicas
+    }
+
+    /// Learner-shard batch size (what the grad program was lowered for).
+    pub fn shard_batch(&self) -> usize {
+        self.actor_batch / (self.learner_cores * self.micro_batches)
+    }
+
+    pub fn infer_program(&self) -> String {
+        format!("{}_infer_b{}", self.agent, self.actor_batch)
+    }
+
+    pub fn grad_program(&self) -> String {
+        format!("{}_grad_t{}_b{}", self.agent, self.unroll, self.shard_batch())
+    }
+
+    pub fn apply_program(&self) -> String {
+        format!("{}_apply", self.agent)
+    }
+
+    pub fn init_program(&self) -> String {
+        format!("{}_init", self.agent)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.actor_cores == 0 || self.learner_cores == 0 {
+            bail!("need at least one actor core and one learner core");
+        }
+        if self.threads_per_actor_core == 0 {
+            bail!("threads_per_actor_core must be >= 1");
+        }
+        if self.micro_batches == 0 {
+            bail!("micro_batches must be >= 1");
+        }
+        let shards = self.learner_cores * self.micro_batches;
+        if self.actor_batch % shards != 0 {
+            bail!(
+                "actor_batch {} must divide into learner_cores*micro_batches = {}",
+                self.actor_batch,
+                shards
+            );
+        }
+        if self.replicas == 0 {
+            bail!("replicas must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        SebulbaConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn program_names() {
+        let cfg = SebulbaConfig {
+            agent: "seb_atari".into(),
+            actor_batch: 64,
+            unroll: 60,
+            learner_cores: 4,
+            ..Default::default()
+        };
+        assert_eq!(cfg.infer_program(), "seb_atari_infer_b64");
+        assert_eq!(cfg.grad_program(), "seb_atari_grad_t60_b16");
+        assert_eq!(cfg.apply_program(), "seb_atari_apply");
+    }
+
+    #[test]
+    fn micro_batches_shrink_shards() {
+        let cfg = SebulbaConfig {
+            actor_batch: 32,
+            learner_cores: 2,
+            micro_batches: 2,
+            ..Default::default()
+        };
+        assert_eq!(cfg.shard_batch(), 8);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let bad = SebulbaConfig { actor_batch: 30, learner_cores: 4, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = SebulbaConfig { learner_cores: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = SebulbaConfig { threads_per_actor_core: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+    }
+}

@@ -1,0 +1,94 @@
+//! Versioned parameter store — the host-side stand-in for "updated
+//! parameters are sent directly to the actor devices".
+//!
+//! The learner publishes a new snapshot after every update; actor threads
+//! grab the latest snapshot before each inference step ("switch to using the
+//! latest parameters before each new inference step"). Snapshots are
+//! `Arc`-shared, so publishing never blocks actors and actors never copy.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+#[derive(Debug)]
+pub struct ParamSnapshot {
+    pub version: u64,
+    pub params: Vec<f32>,
+}
+
+pub struct ParamStore {
+    current: RwLock<Arc<ParamSnapshot>>,
+    version: AtomicU64,
+}
+
+impl ParamStore {
+    pub fn new(initial: Vec<f32>) -> Self {
+        Self {
+            current: RwLock::new(Arc::new(ParamSnapshot { version: 0, params: initial })),
+            version: AtomicU64::new(0),
+        }
+    }
+
+    /// Latest snapshot (cheap: one RwLock read + Arc clone).
+    pub fn latest(&self) -> Arc<ParamSnapshot> {
+        self.current.read().unwrap().clone()
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Publish new parameters; returns the new version.
+    pub fn publish(&self, params: Vec<f32>) -> u64 {
+        let v = self.version.fetch_add(1, Ordering::AcqRel) + 1;
+        let snap = Arc::new(ParamSnapshot { version: v, params });
+        *self.current.write().unwrap() = snap;
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn versions_are_monotonic() {
+        let store = ParamStore::new(vec![0.0; 4]);
+        assert_eq!(store.latest().version, 0);
+        let v1 = store.publish(vec![1.0; 4]);
+        let v2 = store.publish(vec![2.0; 4]);
+        assert_eq!((v1, v2), (1, 2));
+        assert_eq!(store.latest().version, 2);
+        assert_eq!(store.latest().params[0], 2.0);
+    }
+
+    #[test]
+    fn old_snapshots_stay_valid() {
+        let store = ParamStore::new(vec![0.0]);
+        let old = store.latest();
+        store.publish(vec![9.0]);
+        assert_eq!(old.params[0], 0.0); // actor holding the old Arc is fine
+        assert_eq!(store.latest().params[0], 9.0);
+    }
+
+    #[test]
+    fn concurrent_readers_see_some_version() {
+        let store = Arc::new(ParamStore::new(vec![0.0]));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let s = store.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    let snap = s.latest();
+                    // params value must always equal its version
+                    assert_eq!(snap.params[0] as u64, snap.version);
+                }
+            }));
+        }
+        for i in 1..=100u64 {
+            store.publish(vec![i as f32]);
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! Bounded trajectory queue with backpressure — the actor->learner seam.
+//!
+//! The paper's actors "place the Python reference to this tensor data onto a
+//! Python queue"; a bounded queue is what keeps actors from racing ahead of
+//! the learner (off-policy staleness control). `push` blocks when full
+//! (backpressure), `pop` blocks when empty; both wake on shutdown. Depth and
+//! block-time counters feed the run stats.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+    // metrics
+    pushed: AtomicU64,
+    popped: AtomicU64,
+    push_block_nanos: AtomicU64,
+    pop_block_nanos: AtomicU64,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    shutdown: bool,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum QueueError {
+    Shutdown,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            inner: Mutex::new(Inner { items: VecDeque::with_capacity(capacity), shutdown: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+            pushed: AtomicU64::new(0),
+            popped: AtomicU64::new(0),
+            push_block_nanos: AtomicU64::new(0),
+            pop_block_nanos: AtomicU64::new(0),
+        }
+    }
+
+    /// Blocking push (backpressure). Errors only on shutdown.
+    pub fn push(&self, item: T) -> Result<(), QueueError> {
+        let t0 = Instant::now();
+        let mut g = self.inner.lock().unwrap();
+        while g.items.len() >= self.capacity && !g.shutdown {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.shutdown {
+            return Err(QueueError::Shutdown);
+        }
+        g.items.push_back(item);
+        self.pushed.fetch_add(1, Ordering::Relaxed);
+        self.push_block_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop. Errors on shutdown *after* the queue is drained, so
+    /// in-flight work is not lost.
+    pub fn pop(&self) -> Result<T, QueueError> {
+        let t0 = Instant::now();
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                self.popped.fetch_add(1, Ordering::Relaxed);
+                self.pop_block_nanos
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                drop(g);
+                self.not_full.notify_one();
+                return Ok(item);
+            }
+            if g.shutdown {
+                return Err(QueueError::Shutdown);
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Pop with a timeout; `Ok(None)` on timeout.
+    pub fn pop_timeout(&self, dur: Duration) -> Result<Option<T>, QueueError> {
+        let deadline = Instant::now() + dur;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                self.popped.fetch_add(1, Ordering::Relaxed);
+                drop(g);
+                self.not_full.notify_one();
+                return Ok(Some(item));
+            }
+            if g.shutdown {
+                return Err(QueueError::Shutdown);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let (guard, _timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Wake all blocked producers/consumers with a shutdown error.
+    pub fn shutdown(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.shutdown = true;
+        drop(g);
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn total_pushed(&self) -> u64 {
+        self.pushed.load(Ordering::Relaxed)
+    }
+
+    pub fn total_popped(&self) -> u64 {
+        self.popped.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative seconds producers spent blocked in push (backpressure).
+    pub fn push_block_seconds(&self) -> f64 {
+        self.push_block_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Cumulative seconds consumers spent blocked in pop (starvation).
+    pub fn pop_block_seconds(&self) -> f64 {
+        self.pop_block_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(10);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn capacity_blocks_producer() {
+        let q = Arc::new(BoundedQueue::new(2));
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.push(3));
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(q.len(), 2, "producer should be blocked at capacity");
+        assert_eq!(q.pop().unwrap(), 1);
+        t.join().unwrap().unwrap();
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn pop_blocks_until_push() {
+        let q = Arc::new(BoundedQueue::new(2));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.pop().unwrap());
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(42).unwrap();
+        assert_eq!(t.join().unwrap(), 42);
+    }
+
+    #[test]
+    fn shutdown_wakes_everyone() {
+        let q = Arc::new(BoundedQueue::<i32>::new(1));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || q2.pop());
+        let q3 = q.clone();
+        q3.push(1).unwrap();
+        let q4 = q.clone();
+        let producer = std::thread::spawn(move || {
+            // queue is full after the consumer takes one and we re-fill:
+            let _ = q4.push(2);
+            q4.push(3) // will block until shutdown
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        q.shutdown();
+        let c = consumer.join().unwrap();
+        assert!(c.is_ok()); // got item 1
+        let p = producer.join().unwrap();
+        assert_eq!(p, Err(QueueError::Shutdown));
+    }
+
+    #[test]
+    fn pop_drains_after_shutdown() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.shutdown();
+        assert_eq!(q.pop().unwrap(), 1);
+        assert_eq!(q.pop().unwrap(), 2);
+        assert_eq!(q.pop(), Err(QueueError::Shutdown));
+    }
+
+    #[test]
+    fn pop_timeout_returns_none() {
+        let q: BoundedQueue<i32> = BoundedQueue::new(1);
+        let r = q.pop_timeout(Duration::from_millis(10)).unwrap();
+        assert!(r.is_none());
+    }
+
+    #[test]
+    fn counters_track_traffic() {
+        let q = BoundedQueue::new(8);
+        for i in 0..6 {
+            q.push(i).unwrap();
+        }
+        for _ in 0..4 {
+            q.pop().unwrap();
+        }
+        assert_eq!(q.total_pushed(), 6);
+        assert_eq!(q.total_popped(), 4);
+        assert_eq!(q.len(), 2);
+    }
+}

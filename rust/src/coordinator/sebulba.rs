@@ -1,0 +1,272 @@
+//! Top-level Sebulba orchestration: wire the pod, spawn actors + learners,
+//! run to the update target, shut down cleanly, report.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::envs::{make_factory, WorkerPool};
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::{DeviceHandle, Pod};
+
+use super::actor::{spawn_actor, ActorConfig, ShardBundle};
+use super::collective::GradientBus;
+use super::config::SebulbaConfig;
+use super::learner::{learner_main, LearnerConfig, LearnerHandles};
+use super::param_store::ParamStore;
+use super::queue::BoundedQueue;
+use super::stats::RunStats;
+
+/// What a run produced (numbers feed the benches and EXPERIMENTS.md).
+#[derive(Debug)]
+pub struct RunReport {
+    pub frames: u64,
+    pub updates: u64,
+    pub elapsed: f64,
+    /// Wall-clock frames/sec (single-CPU testbed: all cores time-share).
+    pub fps: f64,
+    /// Projected frames/sec if the simulated cores ran truly in parallel
+    /// (frames / critical-path busy time). This is the number comparable
+    /// across core counts on the 1-CPU testbed — see DESIGN.md §1.
+    pub projected_fps: f64,
+    pub mean_staleness: f64,
+    pub mean_episode_reward: f64,
+    pub episodes: u64,
+    pub last_loss: f32,
+    pub actor_busy_seconds: f64,
+    pub learner_busy_seconds: f64,
+    pub queue_push_block_seconds: f64,
+    pub queue_pop_block_seconds: f64,
+    pub final_params: Vec<f32>,
+    /// Optimiser state of replica 0's learner (for warm-starting).
+    pub final_opt_state: Vec<f32>,
+}
+
+pub struct Sebulba;
+
+impl Sebulba {
+    /// Build a pod sized for `cfg` and run to completion.
+    pub fn run(artifacts: &std::path::Path, cfg: &SebulbaConfig) -> Result<RunReport> {
+        cfg.validate()?;
+        let mut pod = Pod::new(artifacts, cfg.total_cores())?;
+        Self::run_on(&mut pod, cfg)
+    }
+
+    /// Run on an existing pod (must have >= cfg.total_cores() cores).
+    pub fn run_on(pod: &mut Pod, cfg: &SebulbaConfig) -> Result<RunReport> {
+        Self::run_on_with(pod, cfg, None)
+    }
+
+    /// Like [`Self::run_on`], but optionally warm-starting from
+    /// `(params, opt_state)` of a previous run — lets drivers stage long
+    /// trainings and report intermediate curves.
+    pub fn run_on_with(
+        pod: &mut Pod,
+        cfg: &SebulbaConfig,
+        warm: Option<(Vec<f32>, Vec<f32>)>,
+    ) -> Result<RunReport> {
+        cfg.validate()?;
+        let agent = pod.manifest.agent(&cfg.agent)?.clone();
+        let obs_shape = agent.obs_shape.clone();
+        let num_actions = agent.num_actions;
+
+        let n_per = cfg.cores_per_replica();
+        anyhow::ensure!(
+            pod.n_cores() >= cfg.total_cores(),
+            "pod has {} cores, config wants {}",
+            pod.n_cores(),
+            cfg.total_cores()
+        );
+
+        // ---- program loading ------------------------------------------------
+        let infer = cfg.infer_program();
+        let grad = cfg.grad_program();
+        let apply = cfg.apply_program();
+        let init = cfg.init_program();
+
+        let mut actor_core_ids = Vec::new();
+        let mut learner_core_ids = Vec::new();
+        let mut learner0_ids = Vec::new();
+        for r in 0..cfg.replicas {
+            let base = r * n_per;
+            actor_core_ids.extend(base..base + cfg.actor_cores);
+            learner_core_ids
+                .extend(base + cfg.actor_cores..base + cfg.actor_cores + cfg.learner_cores);
+            learner0_ids.push(base + cfg.actor_cores);
+        }
+        pod.load_program(&infer, &actor_core_ids)
+            .with_context(|| format!("loading {infer}"))?;
+        pod.load_program(&grad, &learner_core_ids)
+            .with_context(|| format!("loading {grad}"))?;
+        pod.load_program(&apply, &learner0_ids)?;
+        pod.load_program(&init, &[learner0_ids[0]])?;
+
+        // ---- init params (or warm start) -------------------------------------
+        let (params0, opt0) = match warm {
+            Some((p, o)) => (p, o),
+            None => {
+                let outs = pod
+                    .core(learner0_ids[0])?
+                    .execute(&init, vec![HostTensor::scalar_i32(cfg.seed as i32)])?;
+                (outs[0].clone().into_f32()?, outs[1].clone().into_f32()?)
+            }
+        };
+        log::info!(
+            "sebulba[{}]: params={} opt={} replicas={} cores={}A+{}L batch={} T={}",
+            cfg.agent,
+            params0.len(),
+            opt0.len(),
+            cfg.replicas,
+            cfg.actor_cores,
+            cfg.learner_cores,
+            cfg.actor_batch,
+            cfg.unroll
+        );
+
+        // ---- shared state ----------------------------------------------------
+        let stats = Arc::new(RunStats::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let bus = Arc::new(GradientBus::new(cfg.replicas));
+        let factory: Arc<crate::envs::EnvFactory> =
+            Arc::new(make_factory(cfg.env_kind, cfg.seed));
+
+        let mut actor_joins = Vec::new();
+        let mut learner_joins = Vec::new();
+        let mut queues: Vec<Arc<BoundedQueue<ShardBundle>>> = Vec::new();
+        let t_start = Instant::now();
+
+        for r in 0..cfg.replicas {
+            let base = r * n_per;
+            let store = Arc::new(ParamStore::new(params0.clone()));
+            let queue = Arc::new(BoundedQueue::<ShardBundle>::new(cfg.queue_capacity));
+            queues.push(queue.clone());
+            let pool = WorkerPool::new(cfg.env_workers);
+
+            // actors: threads_per_actor_core per actor core
+            for ac in 0..cfg.actor_cores {
+                let core = pod.core(base + ac)?;
+                for th in 0..cfg.threads_per_actor_core {
+                    let actor_id = (r * cfg.actor_cores + ac) * cfg.threads_per_actor_core + th;
+                    let acfg = ActorConfig {
+                        actor_id,
+                        batch: cfg.actor_batch,
+                        unroll: cfg.unroll,
+                        discount: cfg.discount,
+                        num_shards: cfg.learner_cores * cfg.micro_batches,
+                        infer_program: infer.clone(),
+                        obs_shape: obs_shape.clone(),
+                        num_actions,
+                        seed: cfg.seed,
+                    };
+                    actor_joins.push(spawn_actor(
+                        acfg,
+                        core.clone(),
+                        factory.clone(),
+                        pool.clone(),
+                        store.clone(),
+                        queue.clone(),
+                        stats.clone(),
+                        stop.clone(),
+                    ));
+                }
+            }
+
+            // learner thread per replica
+            let lcfg = LearnerConfig {
+                replica_id: r,
+                grad_program: grad.clone(),
+                apply_program: apply.clone(),
+                shards_per_round: cfg.learner_cores,
+                total_updates: cfg.total_updates,
+            };
+            let cores: Vec<DeviceHandle> = (0..cfg.learner_cores)
+                .map(|i| pod.core(base + cfg.actor_cores + i))
+                .collect::<Result<_>>()?;
+            let handles = LearnerHandles {
+                cores,
+                store: store.clone(),
+                queue: queue.clone(),
+                stats: stats.clone(),
+                bus: bus.clone(),
+            };
+            let opt = opt0.clone();
+            learner_joins.push(
+                std::thread::Builder::new()
+                    .name(format!("learner-{r}"))
+                    .spawn(move || learner_main(&lcfg, &handles, opt))
+                    .expect("spawn learner"),
+            );
+        }
+
+        // ---- wait for learners, then tear down actors ------------------------
+        let mut final_params = params0;
+        let mut final_opt_state = opt0;
+        for (r, j) in learner_joins.into_iter().enumerate() {
+            match j.join() {
+                Ok(Ok((params, opt))) => {
+                    if r == 0 {
+                        final_params = params;
+                        final_opt_state = opt;
+                    }
+                }
+                Ok(Err(e)) => {
+                    stop.store(true, Ordering::Relaxed);
+                    for q in &queues {
+                        q.shutdown();
+                    }
+                    return Err(e.context(format!("learner {r} failed")));
+                }
+                Err(_) => anyhow::bail!("learner {r} panicked"),
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        for q in &queues {
+            q.shutdown();
+        }
+        for j in actor_joins {
+            match j.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => return Err(e.context("actor failed")),
+                Err(_) => anyhow::bail!("actor panicked"),
+            }
+        }
+        bus.shutdown();
+
+        // ---- report ----------------------------------------------------------
+        let elapsed = t_start.elapsed().as_secs_f64();
+        let mut actor_busy = 0.0;
+        for &cid in &actor_core_ids {
+            actor_busy += pod.core(cid)?.busy_seconds();
+        }
+        let mut learner_busy = 0.0;
+        let mut critical_path: f64 = 1e-12;
+        for &cid in &learner_core_ids {
+            learner_busy += pod.core(cid)?.busy_seconds();
+        }
+        for cid in 0..cfg.total_cores() {
+            critical_path = critical_path.max(pod.core(cid)?.busy_seconds());
+        }
+        let frames = stats.env_frames.frames();
+        let report = RunReport {
+            frames,
+            updates: stats.updates.load(Ordering::Relaxed),
+            elapsed,
+            fps: frames as f64 / elapsed.max(1e-12),
+            projected_fps: frames as f64 / critical_path,
+            mean_staleness: stats.mean_staleness(),
+            mean_episode_reward: stats.mean_episode_reward(),
+            episodes: stats.episodes.load(Ordering::Relaxed),
+            last_loss: stats.last_loss(),
+            actor_busy_seconds: actor_busy,
+            learner_busy_seconds: learner_busy,
+            queue_push_block_seconds: queues.iter().map(|q| q.push_block_seconds()).sum(),
+            queue_pop_block_seconds: queues.iter().map(|q| q.pop_block_seconds()).sum(),
+            final_params,
+            final_opt_state,
+        };
+        log::info!("sebulba done: {}", stats.summary());
+        Ok(report)
+    }
+}

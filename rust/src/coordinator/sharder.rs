@@ -1,0 +1,181 @@
+//! Trajectory sharding: split a batch of trajectories along the batch
+//! dimension, one shard per learner core (paper: "splits the batch of
+//! trajectories along the batch dimension, sends each shard directly to one
+//! of the learners").
+
+use anyhow::{bail, Result};
+
+use super::trajectory::Trajectory;
+
+/// Split `traj` into `n` equal shards along the batch dimension.
+/// Requires `traj.batch % n == 0` (the geometry the artifacts were lowered
+/// for); the caller picks compatible actor batch / learner counts.
+pub fn shard(traj: &Trajectory, n: usize) -> Result<Vec<Trajectory>> {
+    if n == 0 {
+        bail!("cannot shard into 0 parts");
+    }
+    if traj.batch % n != 0 {
+        bail!("batch {} not divisible by {} learners", traj.batch, n);
+    }
+    let bs = traj.batch / n; // shard batch
+    let d = traj.obs_numel();
+    let a = traj.num_actions;
+    let t = traj.t_len;
+
+    let mut shards = Vec::with_capacity(n);
+    for s in 0..n {
+        let col0 = s * bs;
+        let mut out = Trajectory {
+            t_len: t,
+            batch: bs,
+            obs_shape: traj.obs_shape.clone(),
+            num_actions: a,
+            obs: Vec::with_capacity((t + 1) * bs * d),
+            actions: Vec::with_capacity(t * bs),
+            rewards: Vec::with_capacity(t * bs),
+            discounts: Vec::with_capacity(t * bs),
+            behaviour_logits: Vec::with_capacity(t * bs * a),
+            param_version: traj.param_version,
+            actor_id: traj.actor_id,
+        };
+        // time-major copies: row t, columns [col0, col0+bs)
+        for ti in 0..=t {
+            let row = ti * traj.batch * d;
+            out.obs
+                .extend_from_slice(&traj.obs[row + col0 * d..row + (col0 + bs) * d]);
+        }
+        for ti in 0..t {
+            let row = ti * traj.batch;
+            out.actions
+                .extend_from_slice(&traj.actions[row + col0..row + col0 + bs]);
+            out.rewards
+                .extend_from_slice(&traj.rewards[row + col0..row + col0 + bs]);
+            out.discounts
+                .extend_from_slice(&traj.discounts[row + col0..row + col0 + bs]);
+            let lrow = ti * traj.batch * a;
+            out.behaviour_logits.extend_from_slice(
+                &traj.behaviour_logits[lrow + col0 * a..lrow + (col0 + bs) * a],
+            );
+        }
+        shards.push(out);
+    }
+    Ok(shards)
+}
+
+/// Reassemble shards into one trajectory (test/verification helper —
+/// the inverse of `shard`).
+pub fn unshard(shards: &[Trajectory]) -> Result<Trajectory> {
+    if shards.is_empty() {
+        bail!("no shards");
+    }
+    let t = shards[0].t_len;
+    let bs = shards[0].batch;
+    let d = shards[0].obs_numel();
+    let a = shards[0].num_actions;
+    let total_b = bs * shards.len();
+    let mut out = Trajectory {
+        t_len: t,
+        batch: total_b,
+        obs_shape: shards[0].obs_shape.clone(),
+        num_actions: a,
+        obs: vec![0.0; (t + 1) * total_b * d],
+        actions: vec![0; t * total_b],
+        rewards: vec![0.0; t * total_b],
+        discounts: vec![0.0; t * total_b],
+        behaviour_logits: vec![0.0; t * total_b * a],
+        param_version: shards[0].param_version,
+        actor_id: shards[0].actor_id,
+    };
+    for (s, sh) in shards.iter().enumerate() {
+        if sh.t_len != t || sh.batch != bs || sh.num_actions != a {
+            bail!("inconsistent shard geometry");
+        }
+        let col0 = s * bs;
+        for ti in 0..=t {
+            let src = ti * bs * d;
+            let dst = ti * total_b * d + col0 * d;
+            out.obs[dst..dst + bs * d].copy_from_slice(&sh.obs[src..src + bs * d]);
+        }
+        for ti in 0..t {
+            let src = ti * bs;
+            let dst = ti * total_b + col0;
+            out.actions[dst..dst + bs].copy_from_slice(&sh.actions[src..src + bs]);
+            out.rewards[dst..dst + bs].copy_from_slice(&sh.rewards[src..src + bs]);
+            out.discounts[dst..dst + bs].copy_from_slice(&sh.discounts[src..src + bs]);
+            let lsrc = ti * bs * a;
+            let ldst = ti * total_b * a + col0 * a;
+            out.behaviour_logits[ldst..ldst + bs * a]
+                .copy_from_slice(&sh.behaviour_logits[lsrc..lsrc + bs * a]);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trajectory::TrajectoryBuilder;
+
+    fn make_traj(t: usize, b: usize, d: usize, a: usize) -> Trajectory {
+        let mut builder = TrajectoryBuilder::new(t, b, &[d], a);
+        for ti in 0..t {
+            let obs: Vec<f32> = (0..b * d).map(|i| (ti * 1000 + i) as f32).collect();
+            let actions: Vec<i32> = (0..b).map(|i| (ti + i) as i32).collect();
+            let logits: Vec<f32> = (0..b * a).map(|i| (ti * 7 + i) as f32 * 0.1).collect();
+            let rewards: Vec<f32> = (0..b).map(|i| i as f32).collect();
+            let discounts = vec![0.99; b];
+            builder.push_step(&obs, &actions, &logits, &rewards, &discounts).unwrap();
+        }
+        let final_obs: Vec<f32> = (0..b * d).map(|i| -(i as f32)).collect();
+        builder.finish(&final_obs, 3, 0).unwrap()
+    }
+
+    #[test]
+    fn shard_unshard_roundtrip() {
+        let traj = make_traj(4, 6, 3, 2);
+        let shards = shard(&traj, 3).unwrap();
+        assert_eq!(shards.len(), 3);
+        assert!(shards.iter().all(|s| s.batch == 2));
+        let back = unshard(&shards).unwrap();
+        assert_eq!(back.obs, traj.obs);
+        assert_eq!(back.actions, traj.actions);
+        assert_eq!(back.rewards, traj.rewards);
+        assert_eq!(back.discounts, traj.discounts);
+        assert_eq!(back.behaviour_logits, traj.behaviour_logits);
+    }
+
+    #[test]
+    fn shard_columns_are_contiguous_envs() {
+        let traj = make_traj(2, 4, 1, 2);
+        let shards = shard(&traj, 2).unwrap();
+        // shard 0 gets envs {0,1}: at t=0 obs are [0,1]
+        assert_eq!(shards[0].obs[..2], [0.0, 1.0]);
+        // shard 1 gets envs {2,3}
+        assert_eq!(shards[1].obs[..2], [2.0, 3.0]);
+        // actions at t=1 for shard 1: (1+2, 1+3)
+        assert_eq!(shards[1].actions[2..], [3, 4]);
+    }
+
+    #[test]
+    fn indivisible_batch_rejected() {
+        let traj = make_traj(2, 5, 1, 2);
+        assert!(shard(&traj, 2).is_err());
+        assert!(shard(&traj, 0).is_err());
+        assert!(shard(&traj, 5).is_ok());
+    }
+
+    #[test]
+    fn single_shard_is_identity() {
+        let traj = make_traj(3, 4, 2, 3);
+        let shards = shard(&traj, 1).unwrap();
+        assert_eq!(shards[0].obs, traj.obs);
+        assert_eq!(shards[0].actions, traj.actions);
+    }
+
+    #[test]
+    fn metadata_propagates() {
+        let traj = make_traj(2, 4, 1, 2);
+        let shards = shard(&traj, 2).unwrap();
+        assert!(shards.iter().all(|s| s.param_version == 3));
+    }
+}

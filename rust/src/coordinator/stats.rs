@@ -1,0 +1,247 @@
+//! Run statistics: FPS meters, update counters, staleness, latency
+//! histograms. Everything is atomic so actor/learner threads update freely.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Counts environment frames and reports frames/sec.
+pub struct FpsMeter {
+    frames: AtomicU64,
+    start: Instant,
+}
+
+impl Default for FpsMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FpsMeter {
+    pub fn new() -> Self {
+        Self { frames: AtomicU64::new(0), start: Instant::now() }
+    }
+
+    pub fn add(&self, frames: u64) {
+        self.frames.fetch_add(frames, Ordering::Relaxed);
+    }
+
+    pub fn frames(&self) -> u64 {
+        self.frames.load(Ordering::Relaxed)
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn fps(&self) -> f64 {
+        let e = self.elapsed();
+        if e > 0.0 {
+            self.frames() as f64 / e
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Fixed-bucket latency histogram (log-spaced, microseconds to seconds).
+pub struct LatencyHistogram {
+    // bucket i covers [2^i, 2^(i+1)) microseconds; 24 buckets ≈ up to 16s
+    buckets: [AtomicU64; 24],
+    count: AtomicU64,
+    total_nanos: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            total_nanos: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, dur: std::time::Duration) {
+        let micros = dur.as_micros().max(1) as u64;
+        let bucket = (63 - micros.leading_zeros() as usize).min(23);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.total_nanos
+            .fetch_add(dur.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_seconds(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.total_nanos.load(Ordering::Relaxed) as f64 * 1e-9 / c as f64
+    }
+
+    /// Approximate percentile from bucket boundaries (upper bound).
+    pub fn percentile_seconds(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return (1u64 << (i + 1)) as f64 * 1e-6;
+            }
+        }
+        (1u64 << 24) as f64 * 1e-6
+    }
+}
+
+/// Everything the coordinator reports at the end of a run.
+#[derive(Default)]
+pub struct RunStats {
+    pub env_frames: FpsMeter,
+    pub updates: AtomicU64,
+    pub trajectories: AtomicU64,
+    /// Sum of (current_version - trajectory_version) over updates.
+    pub staleness_sum: AtomicU64,
+    pub inference_latency: LatencyHistogram,
+    pub grad_latency: LatencyHistogram,
+    pub apply_latency: LatencyHistogram,
+    pub env_step_latency: LatencyHistogram,
+    /// Sum over metric vector entries reported by the learner (loss etc.).
+    pub last_loss_bits: AtomicU64,
+    pub episodes: AtomicU64,
+    pub episode_reward_sum_bits: AtomicU64,
+}
+
+impl RunStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_update(&self, staleness: u64, loss: f32) {
+        self.updates.fetch_add(1, Ordering::Relaxed);
+        self.staleness_sum.fetch_add(staleness, Ordering::Relaxed);
+        self.last_loss_bits
+            .store(loss.to_bits() as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_episodes(&self, n: u64, reward_sum: f64) {
+        if n == 0 {
+            return;
+        }
+        self.episodes.fetch_add(n, Ordering::Relaxed);
+        // accumulate f64 reward via compare-and-swap on bits
+        let mut cur = self.episode_reward_sum_bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + reward_sum).to_bits();
+            match self.episode_reward_sum_bits.compare_exchange_weak(
+                cur,
+                new,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    pub fn last_loss(&self) -> f32 {
+        f32::from_bits(self.last_loss_bits.load(Ordering::Relaxed) as u32)
+    }
+
+    pub fn mean_staleness(&self) -> f64 {
+        let u = self.updates.load(Ordering::Relaxed);
+        if u == 0 {
+            return 0.0;
+        }
+        self.staleness_sum.load(Ordering::Relaxed) as f64 / u as f64
+    }
+
+    pub fn mean_episode_reward(&self) -> f64 {
+        let n = self.episodes.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        f64::from_bits(self.episode_reward_sum_bits.load(Ordering::Relaxed)) / n as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "frames={} fps={:.0} updates={} traj={} staleness={:.2} loss={:.4} episodes={} ep_reward={:.3} | infer p50={:.1}ms grad p50={:.1}ms",
+            self.env_frames.frames(),
+            self.env_frames.fps(),
+            self.updates.load(Ordering::Relaxed),
+            self.trajectories.load(Ordering::Relaxed),
+            self.mean_staleness(),
+            self.last_loss(),
+            self.episodes.load(Ordering::Relaxed),
+            self.mean_episode_reward(),
+            self.inference_latency.percentile_seconds(50.0) * 1e3,
+            self.grad_latency.percentile_seconds(50.0) * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn fps_counts() {
+        let m = FpsMeter::new();
+        m.add(100);
+        m.add(50);
+        assert_eq!(m.frames(), 150);
+        assert!(m.fps() > 0.0);
+    }
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = LatencyHistogram::new();
+        for ms in [1u64, 2, 4, 8, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        let p50 = h.percentile_seconds(50.0);
+        let p95 = h.percentile_seconds(95.0);
+        assert!(p50 <= p95);
+        assert!(h.mean_seconds() > 0.0);
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile_seconds(99.0), 0.0);
+        assert_eq!(h.mean_seconds(), 0.0);
+    }
+
+    #[test]
+    fn staleness_mean() {
+        let s = RunStats::new();
+        s.record_update(2, 0.5);
+        s.record_update(4, 0.25);
+        assert_eq!(s.mean_staleness(), 3.0);
+        assert_eq!(s.last_loss(), 0.25);
+    }
+
+    #[test]
+    fn episode_rewards_accumulate() {
+        let s = RunStats::new();
+        s.record_episodes(2, 3.0);
+        s.record_episodes(1, -1.0);
+        assert_eq!(s.episodes.load(Ordering::Relaxed), 3);
+        assert!((s.mean_episode_reward() - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

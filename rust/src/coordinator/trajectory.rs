@@ -1,0 +1,288 @@
+//! Trajectories: fixed-geometry, time-major experience buffers.
+//!
+//! Layouts match the exported grad programs exactly:
+//! `obs [T+1, B, obs...]`, `actions/rewards/discounts [T, B]`,
+//! `behaviour_logits [T, B, A]` — all flat row-major `Vec`s, so shipping a
+//! trajectory to a learner core is a single buffer per field.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::tensor::HostTensor;
+
+#[derive(Clone, Debug)]
+pub struct Trajectory {
+    pub t_len: usize,
+    pub batch: usize,
+    pub obs_shape: Vec<usize>,
+    pub num_actions: usize,
+    /// `[T+1, B, obs...]`
+    pub obs: Vec<f32>,
+    /// `[T, B]`
+    pub actions: Vec<i32>,
+    /// `[T, B]`
+    pub rewards: Vec<f32>,
+    /// `[T, B]` — 0 at episode boundaries, else the discount factor.
+    pub discounts: Vec<f32>,
+    /// `[T, B, A]` — logits of the policy that acted (for V-trace), or MCTS
+    /// visit distributions (for MuZero, where they are the policy targets).
+    pub behaviour_logits: Vec<f32>,
+    /// Version of the parameters that generated this data (staleness stats).
+    pub param_version: u64,
+    /// Which actor thread produced it.
+    pub actor_id: usize,
+}
+
+impl Trajectory {
+    pub fn obs_numel(&self) -> usize {
+        self.obs_shape.iter().product()
+    }
+
+    /// Total environment frames represented (T * B).
+    pub fn frames(&self) -> usize {
+        self.t_len * self.batch
+    }
+
+    /// Package as grad-program inputs (after the params tensor), consuming
+    /// the trajectory — zero buffer copies (§Perf L3-2). Pixel trajectories
+    /// are tens of MB, so the copy this avoids is material.
+    pub fn into_tensors(self) -> Result<Vec<HostTensor>> {
+        let d = self.obs_numel();
+        let mut obs_shape = vec![self.t_len + 1, self.batch];
+        obs_shape.extend_from_slice(&self.obs_shape);
+        debug_assert_eq!(self.obs.len(), (self.t_len + 1) * self.batch * d);
+        Ok(vec![
+            HostTensor::f32(obs_shape, self.obs)?,
+            HostTensor::i32(vec![self.t_len, self.batch], self.actions)?,
+            HostTensor::f32(vec![self.t_len, self.batch], self.rewards)?,
+            HostTensor::f32(vec![self.t_len, self.batch], self.discounts)?,
+            HostTensor::f32(
+                vec![self.t_len, self.batch, self.num_actions],
+                self.behaviour_logits,
+            )?,
+        ])
+    }
+
+    /// Package as grad-program inputs (after the params tensor).
+    pub fn to_tensors(&self) -> Result<Vec<HostTensor>> {
+        let d = self.obs_numel();
+        let mut obs_shape = vec![self.t_len + 1, self.batch];
+        obs_shape.extend_from_slice(&self.obs_shape);
+        Ok(vec![
+            HostTensor::f32(obs_shape, self.obs.clone())?,
+            HostTensor::i32(vec![self.t_len, self.batch], self.actions.clone())?,
+            HostTensor::f32(vec![self.t_len, self.batch], self.rewards.clone())?,
+            HostTensor::f32(vec![self.t_len, self.batch], self.discounts.clone())?,
+            HostTensor::f32(
+                vec![self.t_len, self.batch, self.num_actions],
+                self.behaviour_logits.clone(),
+            )?,
+        ])
+        .and_then(|v: Vec<HostTensor>| {
+            debug_assert_eq!(v[0].len(), (self.t_len + 1) * self.batch * d);
+            Ok(v)
+        })
+    }
+
+    /// Mean reward per frame (diagnostics).
+    pub fn mean_reward(&self) -> f32 {
+        if self.rewards.is_empty() {
+            return 0.0;
+        }
+        self.rewards.iter().sum::<f32>() / self.rewards.len() as f32
+    }
+
+    /// Number of episode boundaries in the window.
+    pub fn episodes_ended(&self) -> usize {
+        self.discounts.iter().filter(|&&d| d == 0.0).count()
+    }
+}
+
+/// Accumulates one trajectory, step by step, on the actor thread.
+pub struct TrajectoryBuilder {
+    t_len: usize,
+    batch: usize,
+    obs_shape: Vec<usize>,
+    num_actions: usize,
+    steps_pushed: usize,
+    traj: Trajectory,
+}
+
+impl TrajectoryBuilder {
+    pub fn new(t_len: usize, batch: usize, obs_shape: &[usize], num_actions: usize) -> Self {
+        let d: usize = obs_shape.iter().product();
+        Self {
+            t_len,
+            batch,
+            obs_shape: obs_shape.to_vec(),
+            num_actions,
+            steps_pushed: 0,
+            traj: Trajectory {
+                t_len,
+                batch,
+                obs_shape: obs_shape.to_vec(),
+                num_actions,
+                obs: Vec::with_capacity((t_len + 1) * batch * d),
+                actions: Vec::with_capacity(t_len * batch),
+                rewards: Vec::with_capacity(t_len * batch),
+                discounts: Vec::with_capacity(t_len * batch),
+                behaviour_logits: Vec::with_capacity(t_len * batch * num_actions),
+                param_version: 0,
+                actor_id: 0,
+            },
+        }
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.steps_pushed == self.t_len
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps_pushed
+    }
+
+    /// Push one step: the observation the policy saw, the actions/logits it
+    /// chose, and the env's reward/discount response.
+    pub fn push_step(
+        &mut self,
+        obs: &[f32],
+        actions: &[i32],
+        behaviour_logits: &[f32],
+        rewards: &[f32],
+        discounts: &[f32],
+    ) -> Result<()> {
+        let d = self.traj.obs_numel();
+        if self.is_full() {
+            bail!("trajectory already has {} steps", self.t_len);
+        }
+        if obs.len() != self.batch * d
+            || actions.len() != self.batch
+            || behaviour_logits.len() != self.batch * self.num_actions
+            || rewards.len() != self.batch
+            || discounts.len() != self.batch
+        {
+            bail!("push_step: size mismatch");
+        }
+        self.traj.obs.extend_from_slice(obs);
+        self.traj.actions.extend_from_slice(actions);
+        self.traj.behaviour_logits.extend_from_slice(behaviour_logits);
+        self.traj.rewards.extend_from_slice(rewards);
+        self.traj.discounts.extend_from_slice(discounts);
+        self.steps_pushed += 1;
+        Ok(())
+    }
+
+    /// Finish with the bootstrap observation (the T+1'th), producing the
+    /// trajectory and resetting the builder for the next window.
+    pub fn finish(&mut self, final_obs: &[f32], param_version: u64, actor_id: usize) -> Result<Trajectory> {
+        let d = self.traj.obs_numel();
+        if !self.is_full() {
+            bail!("trajectory has {}/{} steps", self.steps_pushed, self.t_len);
+        }
+        if final_obs.len() != self.batch * d {
+            bail!("finish: obs size mismatch");
+        }
+        self.traj.obs.extend_from_slice(final_obs);
+        self.traj.param_version = param_version;
+        self.traj.actor_id = actor_id;
+        self.steps_pushed = 0;
+        let fresh = TrajectoryBuilder::new(self.t_len, self.batch, &self.obs_shape, self.num_actions);
+        Ok(std::mem::replace(&mut self.traj, fresh.traj))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn push_n(b: &mut TrajectoryBuilder, n: usize, batch: usize, d: usize, a: usize) {
+        for t in 0..n {
+            let obs = vec![t as f32; batch * d];
+            let actions = vec![t as i32; batch];
+            let logits = vec![0.1; batch * a];
+            let rewards = vec![1.0; batch];
+            let discounts = vec![0.99; batch];
+            b.push_step(&obs, &actions, &logits, &rewards, &discounts).unwrap();
+        }
+    }
+
+    #[test]
+    fn builder_produces_correct_layout() {
+        let (t, bsz, d, a) = (3, 2, 4, 3);
+        let mut b = TrajectoryBuilder::new(t, bsz, &[d], a);
+        push_n(&mut b, 3, bsz, d, a);
+        assert!(b.is_full());
+        let traj = b.finish(&vec![9.0; bsz * d], 7, 1).unwrap();
+        assert_eq!(traj.obs.len(), (t + 1) * bsz * d);
+        assert_eq!(traj.actions.len(), t * bsz);
+        assert_eq!(traj.behaviour_logits.len(), t * bsz * a);
+        assert_eq!(traj.param_version, 7);
+        assert_eq!(traj.actor_id, 1);
+        // time-major: step 1's obs sit in the second B*d block
+        assert_eq!(traj.obs[bsz * d], 1.0);
+        assert_eq!(traj.obs[t * bsz * d], 9.0); // bootstrap obs last
+        assert_eq!(traj.frames(), 6);
+    }
+
+    #[test]
+    fn builder_resets_after_finish() {
+        let mut b = TrajectoryBuilder::new(2, 1, &[2], 2);
+        push_n(&mut b, 2, 1, 2, 2);
+        let _ = b.finish(&[0.0, 0.0], 0, 0).unwrap();
+        assert_eq!(b.steps(), 0);
+        push_n(&mut b, 2, 1, 2, 2);
+        let t2 = b.finish(&[0.0, 0.0], 1, 0).unwrap();
+        assert_eq!(t2.obs.len(), 3 * 2);
+    }
+
+    #[test]
+    fn overfull_and_underfull_rejected() {
+        let mut b = TrajectoryBuilder::new(1, 1, &[1], 2);
+        assert!(b.finish(&[0.0], 0, 0).is_err()); // underfull
+        push_n(&mut b, 1, 1, 1, 2);
+        let obs = [0.0];
+        let act = [0];
+        let log = [0.0, 0.0];
+        let r = [0.0];
+        let disc = [0.0];
+        assert!(b.push_step(&obs, &act, &log, &r, &disc).is_err()); // overfull
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let mut b = TrajectoryBuilder::new(2, 2, &[3], 2);
+        let bad_obs = vec![0.0; 5];
+        assert!(b
+            .push_step(&bad_obs, &[0, 0], &[0.0; 4], &[0.0; 2], &[0.0; 2])
+            .is_err());
+    }
+
+    #[test]
+    fn to_tensors_shapes() {
+        let mut b = TrajectoryBuilder::new(2, 3, &[4, 4, 1], 5);
+        for _ in 0..2 {
+            b.push_step(
+                &vec![0.0; 3 * 16],
+                &[0, 1, 2],
+                &vec![0.0; 15],
+                &[0.0; 3],
+                &[0.9; 3],
+            )
+            .unwrap();
+        }
+        let traj = b.finish(&vec![0.0; 48], 0, 0).unwrap();
+        let tensors = traj.to_tensors().unwrap();
+        assert_eq!(tensors[0].shape, vec![3, 3, 4, 4, 1]);
+        assert_eq!(tensors[1].shape, vec![2, 3]);
+        assert_eq!(tensors[4].shape, vec![2, 3, 5]);
+    }
+
+    #[test]
+    fn episode_stats() {
+        let mut b = TrajectoryBuilder::new(2, 2, &[1], 2);
+        b.push_step(&[0.0, 0.0], &[0, 0], &[0.0; 4], &[1.0, 0.0], &[0.99, 0.0]).unwrap();
+        b.push_step(&[0.0, 0.0], &[0, 0], &[0.0; 4], &[0.0, 3.0], &[0.0, 0.99]).unwrap();
+        let t = b.finish(&[0.0, 0.0], 0, 0).unwrap();
+        assert_eq!(t.episodes_ended(), 2);
+        assert!((t.mean_reward() - 1.0).abs() < 1e-6);
+    }
+}

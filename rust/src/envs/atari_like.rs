@@ -1,0 +1,372 @@
+//! `atari_like`: the Atari-2600 substitute (see DESIGN.md §1).
+//!
+//! A paddle-and-ball game rendered to greyscale pixel frames, wrapped with
+//! the standard ALE protocol features that Sebulba's host-side pipeline has
+//! to handle: frame skip, frame stacking, sticky actions, episodic lives and
+//! a frame limit. The point is not the game — it is that the coordinator
+//! exercises exactly the code path of "arbitrary environments (such as Atari
+//! video games) that run on the CPU hosts": per-step pixel rendering on the
+//! host, batched stepping through the thread pool, and pixel-tensor
+//! marshalling to the actor cores.
+//!
+//! Observation layout is NHWC (`[H, W, C]`, C = stacked frames) to match
+//! `ConvActorCritic` in the exported programs.
+
+use super::{Environment, StepResult};
+use crate::util::rng::Xoshiro256;
+
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub height: usize,
+    pub width: usize,
+    pub frame_stack: usize,
+    pub frame_skip: usize,
+    /// Probability of repeating the previous action (ALE sticky actions).
+    pub sticky: f64,
+    pub lives: usize,
+    /// Episode frame limit (post-skip agent steps).
+    pub max_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            height: 42,
+            width: 42,
+            frame_stack: 2,
+            frame_skip: 4,
+            sticky: 0.25,
+            lives: 3,
+            max_steps: 2_000,
+        }
+    }
+}
+
+pub struct AtariLike {
+    cfg: Config,
+    // game state (float pixel coordinates)
+    ball_x: f32,
+    ball_y: f32,
+    vel_x: f32,
+    vel_y: f32,
+    paddle_x: f32,
+    lives_left: usize,
+    t: usize,
+    prev_action: usize,
+    // frame ring buffer: frame_stack frames of H*W each
+    frames: Vec<f32>,
+    frame_head: usize,
+    rng: Xoshiro256,
+}
+
+const PADDLE_W: f32 = 7.0;
+const PADDLE_SPEED: f32 = 2.0;
+const BALL_R: f32 = 1.0;
+
+impl AtariLike {
+    pub fn new(cfg: Config, rng: Xoshiro256) -> Self {
+        let hw = cfg.height * cfg.width;
+        let mut env = Self {
+            frames: vec![0.0; hw * cfg.frame_stack],
+            frame_head: 0,
+            ball_x: 0.0,
+            ball_y: 0.0,
+            vel_x: 0.0,
+            vel_y: 0.0,
+            paddle_x: 0.0,
+            lives_left: cfg.lives,
+            t: 0,
+            prev_action: 0,
+            cfg,
+            rng,
+        };
+        env.serve();
+        env
+    }
+
+    fn serve(&mut self) {
+        let w = self.cfg.width as f32;
+        self.ball_x = w * (0.25 + 0.5 * self.rng.next_f32());
+        self.ball_y = self.cfg.height as f32 * 0.25;
+        let angle = (self.rng.next_f32() - 0.5) * 1.2; // radians around straight-down
+        let speed = 1.3;
+        self.vel_x = speed * angle.sin();
+        self.vel_y = speed * angle.cos();
+        self.paddle_x = w / 2.0;
+    }
+
+    fn reset_episode(&mut self) {
+        self.lives_left = self.cfg.lives;
+        self.t = 0;
+        self.prev_action = 0;
+        self.serve();
+        self.frames.fill(0.0);
+        self.render_into_current();
+    }
+
+    /// Advance the game by one *physics* frame; returns (reward, life_lost).
+    fn tick(&mut self, action: usize) -> (f32, bool) {
+        let w = self.cfg.width as f32;
+        let h = self.cfg.height as f32;
+        // actions: 0 NOOP, 1 FIRE, 2 LEFT, 3 RIGHT, 4 LEFT+FIRE, 5 RIGHT+FIRE
+        let dx = match action {
+            2 | 4 => -PADDLE_SPEED,
+            3 | 5 => PADDLE_SPEED,
+            _ => 0.0,
+        };
+        self.paddle_x = (self.paddle_x + dx).clamp(PADDLE_W / 2.0, w - PADDLE_W / 2.0);
+
+        self.ball_x += self.vel_x;
+        self.ball_y += self.vel_y;
+        // side walls
+        if self.ball_x < BALL_R {
+            self.ball_x = BALL_R;
+            self.vel_x = -self.vel_x;
+        } else if self.ball_x > w - BALL_R {
+            self.ball_x = w - BALL_R;
+            self.vel_x = -self.vel_x;
+        }
+        // ceiling
+        if self.ball_y < BALL_R {
+            self.ball_y = BALL_R;
+            self.vel_y = -self.vel_y;
+        }
+        // paddle line is at h - 2
+        if self.ball_y >= h - 3.0 && self.vel_y > 0.0 {
+            let offset = self.ball_x - self.paddle_x;
+            if offset.abs() <= PADDLE_W / 2.0 + BALL_R {
+                // hit: bounce with english proportional to hit offset
+                self.vel_y = -self.vel_y.abs();
+                self.vel_x += 0.35 * (offset / (PADDLE_W / 2.0));
+                self.vel_x = self.vel_x.clamp(-1.6, 1.6);
+                // slight speed-up, capped (keeps episodes finite & hard)
+                self.vel_y = (self.vel_y * 1.03).clamp(-2.0, -0.8);
+                return (1.0, false);
+            } else if self.ball_y >= h - 1.0 {
+                // miss: life lost, re-serve
+                self.serve();
+                return (0.0, true);
+            }
+        }
+        (0.0, false)
+    }
+
+    fn render_into_current(&mut self) {
+        let (h, w) = (self.cfg.height, self.cfg.width);
+        let hw = h * w;
+        let start = self.frame_head * hw;
+        let frame = &mut self.frames[start..start + hw];
+        frame.fill(0.0);
+        // walls (faint)
+        for x in 0..w {
+            frame[x] = 0.3;
+        }
+        for y in 0..h {
+            frame[y * w] = 0.3;
+            frame[y * w + (w - 1)] = 0.3;
+        }
+        // ball: 2x2 bright block
+        let bx = (self.ball_x as usize).min(w - 2);
+        let by = (self.ball_y as usize).min(h - 2);
+        for dy in 0..2 {
+            for dx in 0..2 {
+                frame[(by + dy) * w + bx + dx] = 1.0;
+            }
+        }
+        // paddle: 1 x PADDLE_W bar near the bottom
+        let py = h - 2;
+        let half = (PADDLE_W / 2.0) as usize;
+        let px0 = (self.paddle_x as usize).saturating_sub(half).min(w - 1);
+        let px1 = ((self.paddle_x + PADDLE_W / 2.0) as usize).min(w - 1);
+        for x in px0..=px1 {
+            frame[py * w + x] = 0.8;
+        }
+    }
+
+    /// Write the stacked observation (NHWC, newest frame last channel).
+    fn write_obs(&self, obs: &mut [f32]) {
+        let (h, w, c) = (self.cfg.height, self.cfg.width, self.cfg.frame_stack);
+        let hw = h * w;
+        for ci in 0..c {
+            // channel c-1 = newest (frame_head), channel 0 = oldest
+            let age = c - 1 - ci;
+            let slot = (self.frame_head + c - age % c) % c;
+            let frame = &self.frames[slot * hw..(slot + 1) * hw];
+            for i in 0..hw {
+                obs[i * c + ci] = frame[i];
+            }
+        }
+    }
+}
+
+impl Environment for AtariLike {
+    fn obs_dim(&self) -> usize {
+        self.cfg.height * self.cfg.width * self.cfg.frame_stack
+    }
+
+    fn num_actions(&self) -> usize {
+        6
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.reset_episode();
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, mut action: usize, obs: &mut [f32]) -> StepResult {
+        debug_assert!(action < 6);
+        // sticky actions
+        if self.rng.next_f64() < self.cfg.sticky {
+            action = self.prev_action;
+        }
+        self.prev_action = action;
+
+        let mut reward = 0.0;
+        let mut life_lost = false;
+        for _ in 0..self.cfg.frame_skip {
+            let (r, lost) = self.tick(action);
+            reward += r;
+            life_lost |= lost;
+            if lost {
+                break;
+            }
+        }
+        if life_lost {
+            self.lives_left = self.lives_left.saturating_sub(1);
+        }
+        self.t += 1;
+
+        // advance the frame ring and render the post-step frame
+        self.frame_head = (self.frame_head + 1) % self.cfg.frame_stack;
+        self.render_into_current();
+
+        let done = self.lives_left == 0 || self.t >= self.cfg.max_steps;
+        if done {
+            self.reset_episode();
+        }
+        self.write_obs(obs);
+        StepResult { reward, done }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(seed: u64) -> AtariLike {
+        AtariLike::new(Config::default(), Xoshiro256::new(seed))
+    }
+
+    #[test]
+    fn obs_dim_matches_layout() {
+        let e = env(0);
+        assert_eq!(e.obs_dim(), 42 * 42 * 2);
+    }
+
+    #[test]
+    fn obs_values_in_unit_range() {
+        let mut e = env(1);
+        let mut obs = vec![0.0; e.obs_dim()];
+        e.reset(&mut obs);
+        let mut rng = Xoshiro256::new(2);
+        for _ in 0..200 {
+            e.step(rng.next_below(6) as usize, &mut obs);
+            assert!(obs.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn episode_terminates() {
+        let mut e = AtariLike::new(
+            Config { lives: 1, max_steps: 10_000, ..Config::default() },
+            Xoshiro256::new(3),
+        );
+        let mut obs = vec![0.0; e.obs_dim()];
+        e.reset(&mut obs);
+        let mut done = false;
+        for _ in 0..10_000 {
+            // NOOP forever: ball must eventually be missed
+            if e.step(0, &mut obs).done {
+                done = true;
+                break;
+            }
+        }
+        assert!(done, "episode with a NOOP policy never ended");
+    }
+
+    #[test]
+    fn frame_limit_terminates() {
+        let mut e = AtariLike::new(
+            Config { max_steps: 25, lives: 99, ..Config::default() },
+            Xoshiro256::new(4),
+        );
+        let mut obs = vec![0.0; e.obs_dim()];
+        e.reset(&mut obs);
+        let mut steps = 0;
+        loop {
+            steps += 1;
+            if e.step(0, &mut obs).done {
+                break;
+            }
+            assert!(steps <= 25);
+        }
+        assert_eq!(steps, 25);
+    }
+
+    #[test]
+    fn tracking_policy_scores() {
+        // A paddle that follows the ball should collect rewards.
+        let mut e = AtariLike::new(
+            Config { sticky: 0.0, ..Config::default() },
+            Xoshiro256::new(5),
+        );
+        let mut obs = vec![0.0; e.obs_dim()];
+        e.reset(&mut obs);
+        let (h, w, c) = (42, 42, 2);
+        let mut total = 0.0;
+        for _ in 0..600 {
+            // decode ball and paddle x from the newest channel
+            let mut ball_x = 0usize;
+            let mut paddle_x = 0usize;
+            for y in 0..h - 2 {
+                for x in 0..w {
+                    if obs[(y * w + x) * c + (c - 1)] == 1.0 {
+                        ball_x = x;
+                    }
+                }
+            }
+            for x in 0..w {
+                if obs[((h - 2) * w + x) * c + (c - 1)] == 0.8 {
+                    paddle_x = x;
+                    break;
+                }
+            }
+            let paddle_center = paddle_x + 3;
+            let action = if ball_x > paddle_center + 1 {
+                3
+            } else if ball_x + 1 < paddle_center {
+                2
+            } else {
+                0
+            };
+            total += e.step(action, &mut obs).reward as f64;
+        }
+        assert!(total >= 3.0, "tracking policy only scored {total}");
+    }
+
+    #[test]
+    fn sticky_actions_are_seed_deterministic() {
+        let mut a = env(7);
+        let mut b = env(7);
+        let mut oa = vec![0.0; a.obs_dim()];
+        let mut ob = vec![0.0; b.obs_dim()];
+        a.reset(&mut oa);
+        b.reset(&mut ob);
+        for i in 0..100 {
+            let ra = a.step(i % 6, &mut oa);
+            let rb = b.step(i % 6, &mut ob);
+            assert_eq!(ra, rb);
+        }
+        assert_eq!(oa, ob);
+    }
+}

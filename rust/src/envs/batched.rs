@@ -1,0 +1,228 @@
+//! Batched environment: the paper's "special batched environment ... exposed
+//! to Python as a single environment that takes a batch of actions and
+//! returns a batch of observations", stepped in parallel by the shared
+//! worker pool.
+//!
+//! Slots are chunked over pool workers (contiguous ranges), so a step costs
+//! one `run_batch` of `min(pool, batch)` jobs regardless of batch size.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::pool::WorkerPool;
+use super::{EnvFactory, Environment};
+
+struct Slot {
+    env: Box<dyn Environment>,
+    obs: Vec<f32>,
+    reward: f32,
+    done: bool,
+}
+
+pub struct BatchedEnv {
+    slots: Vec<Arc<Mutex<Slot>>>,
+    pool: Arc<WorkerPool>,
+    obs_dim: usize,
+    num_actions: usize,
+}
+
+impl BatchedEnv {
+    pub fn new(factory: &EnvFactory, batch: usize, pool: Arc<WorkerPool>) -> Result<Self> {
+        anyhow::ensure!(batch > 0, "batch must be positive");
+        let mut slots = Vec::with_capacity(batch);
+        let mut obs_dim = 0;
+        let mut num_actions = 0;
+        for i in 0..batch {
+            let env = factory(i);
+            obs_dim = env.obs_dim();
+            num_actions = env.num_actions();
+            slots.push(Arc::new(Mutex::new(Slot {
+                obs: vec![0.0; obs_dim],
+                env,
+                reward: 0.0,
+                done: false,
+            })));
+        }
+        Ok(Self { slots, pool, obs_dim, num_actions })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    pub fn num_actions(&self) -> usize {
+        self.num_actions
+    }
+
+    /// Reset every environment; `obs_out` is `[B * obs_dim]`.
+    pub fn reset(&self, obs_out: &mut [f32]) {
+        assert_eq!(obs_out.len(), self.batch() * self.obs_dim);
+        let chunks = self.chunk_ranges();
+        self.pool.run_batch(chunks.len(), |ci| {
+            let range = chunks[ci].clone();
+            let slots: Vec<_> = self.slots[range].iter().map(Arc::clone).collect();
+            Box::new(move || {
+                for slot in &slots {
+                    let mut s = slot.lock().unwrap();
+                    let Slot { env, obs, .. } = &mut *s;
+                    env.reset(obs);
+                }
+            })
+        });
+        self.copy_out(obs_out);
+    }
+
+    /// Step every environment with `actions` (`[B]`); writes the batched
+    /// next-observations, rewards and done flags.
+    pub fn step(
+        &self,
+        actions: &[i32],
+        obs_out: &mut [f32],
+        rewards: &mut [f32],
+        dones: &mut [bool],
+    ) {
+        let b = self.batch();
+        assert_eq!(actions.len(), b);
+        assert_eq!(obs_out.len(), b * self.obs_dim);
+        assert_eq!(rewards.len(), b);
+        assert_eq!(dones.len(), b);
+
+        let chunks = self.chunk_ranges();
+        self.pool.run_batch(chunks.len(), |ci| {
+            let range = chunks[ci].clone();
+            let slots: Vec<_> = self.slots[range.clone()].iter().map(Arc::clone).collect();
+            let acts: Vec<i32> = actions[range].to_vec();
+            Box::new(move || {
+                for (slot, &a) in slots.iter().zip(&acts) {
+                    let mut s = slot.lock().unwrap();
+                    let Slot { env, obs, reward, done } = &mut *s;
+                    let r = env.step(a as usize, obs);
+                    *reward = r.reward;
+                    *done = r.done;
+                }
+            })
+        });
+
+        for (i, slot) in self.slots.iter().enumerate() {
+            let s = slot.lock().unwrap();
+            obs_out[i * self.obs_dim..(i + 1) * self.obs_dim].copy_from_slice(&s.obs);
+            rewards[i] = s.reward;
+            dones[i] = s.done;
+        }
+    }
+
+    fn chunk_ranges(&self) -> Vec<std::ops::Range<usize>> {
+        let b = self.batch();
+        let n_chunks = self.pool.size().min(b);
+        let per = b.div_ceil(n_chunks);
+        (0..n_chunks)
+            .map(|c| (c * per)..((c + 1) * per).min(b))
+            .filter(|r| !r.is_empty())
+            .collect()
+    }
+
+    fn copy_out(&self, obs_out: &mut [f32]) {
+        for (i, slot) in self.slots.iter().enumerate() {
+            let s = slot.lock().unwrap();
+            obs_out[i * self.obs_dim..(i + 1) * self.obs_dim].copy_from_slice(&s.obs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::make_factory;
+
+    fn batched(kind: &'static str, batch: usize, workers: usize) -> BatchedEnv {
+        let pool = WorkerPool::new(workers);
+        BatchedEnv::new(&make_factory(kind, 42), batch, pool).unwrap()
+    }
+
+    #[test]
+    fn reset_fills_all_observations() {
+        let be = batched("catch", 8, 3);
+        let mut obs = vec![0.0; 8 * be.obs_dim()];
+        be.reset(&mut obs);
+        for b in 0..8 {
+            let o = &obs[b * 50..(b + 1) * 50];
+            assert_eq!(o.iter().filter(|&&x| x == 1.0).count(), 2, "env {b}");
+        }
+    }
+
+    #[test]
+    fn step_writes_disjoint_slots() {
+        let be = batched("catch", 5, 2);
+        let mut obs = vec![0.0; 5 * 50];
+        be.reset(&mut obs);
+        let actions = vec![0, 1, 2, 1, 0];
+        let mut rewards = vec![0.0; 5];
+        let mut dones = vec![false; 5];
+        be.step(&actions, &mut obs, &mut rewards, &mut dones);
+        for b in 0..5 {
+            let o = &obs[b * 50..(b + 1) * 50];
+            assert_eq!(o.iter().filter(|&&x| x == 1.0).count(), 2, "env {b}");
+        }
+    }
+
+    #[test]
+    fn batched_equals_serial() {
+        // The batched env must be observationally identical to stepping the
+        // same seeded envs one by one (the property the paper's batched C++
+        // env preserves).
+        let factory = make_factory("catch", 99);
+        let pool = WorkerPool::new(4);
+        let be = BatchedEnv::new(&factory, 6, pool).unwrap();
+        let mut serial: Vec<_> = (0..6).map(|i| factory(i)).collect();
+
+        let mut obs_b = vec![0.0; 6 * 50];
+        be.reset(&mut obs_b);
+        let mut obs_s = vec![0.0; 6 * 50];
+        for (i, env) in serial.iter_mut().enumerate() {
+            env.reset(&mut obs_s[i * 50..(i + 1) * 50]);
+        }
+        assert_eq!(obs_b, obs_s);
+
+        let mut rewards = vec![0.0; 6];
+        let mut dones = vec![false; 6];
+        for round in 0..30 {
+            let actions: Vec<i32> = (0..6).map(|i| ((round + i) % 3) as i32).collect();
+            be.step(&actions, &mut obs_b, &mut rewards, &mut dones);
+            for (i, env) in serial.iter_mut().enumerate() {
+                let r = env.step(actions[i] as usize, &mut obs_s[i * 50..(i + 1) * 50]);
+                assert_eq!(r.reward, rewards[i], "round {round} env {i}");
+                assert_eq!(r.done, dones[i]);
+            }
+            assert_eq!(obs_b, obs_s, "round {round}");
+        }
+    }
+
+    #[test]
+    fn more_workers_than_envs_is_fine() {
+        let be = batched("chain", 2, 8);
+        let mut obs = vec![0.0; 2 * 10];
+        be.reset(&mut obs);
+        let mut rewards = vec![0.0; 2];
+        let mut dones = vec![false; 2];
+        be.step(&[1, 1], &mut obs, &mut rewards, &mut dones);
+    }
+
+    #[test]
+    fn atari_like_batched_smoke() {
+        let be = batched("atari_like", 4, 4);
+        let mut obs = vec![0.0; 4 * be.obs_dim()];
+        be.reset(&mut obs);
+        let mut rewards = vec![0.0; 4];
+        let mut dones = vec![false; 4];
+        for i in 0..10 {
+            let actions = vec![(i % 6) as i32; 4];
+            be.step(&actions, &mut obs, &mut rewards, &mut dones);
+        }
+        assert!(obs.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+}

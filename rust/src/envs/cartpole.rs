@@ -1,0 +1,152 @@
+//! CartPole (Barto, Sutton & Anderson 1983): the classic continuous-state
+//! control benchmark, Euler-integrated like the Gym implementation.
+
+use super::{Environment, StepResult};
+use crate::util::rng::Xoshiro256;
+
+const GRAVITY: f32 = 9.8;
+const CART_MASS: f32 = 1.0;
+const POLE_MASS: f32 = 0.1;
+const TOTAL_MASS: f32 = CART_MASS + POLE_MASS;
+const POLE_HALF_LEN: f32 = 0.5;
+const FORCE_MAG: f32 = 10.0;
+const TAU: f32 = 0.02;
+const X_LIMIT: f32 = 2.4;
+const THETA_LIMIT: f32 = 12.0 * std::f32::consts::PI / 180.0;
+
+pub struct CartPole {
+    x: f32,
+    x_dot: f32,
+    theta: f32,
+    theta_dot: f32,
+    t: usize,
+    max_steps: usize,
+    rng: Xoshiro256,
+}
+
+impl CartPole {
+    pub fn new(rng: Xoshiro256) -> Self {
+        let mut env = Self { x: 0.0, x_dot: 0.0, theta: 0.0, theta_dot: 0.0, t: 0, max_steps: 500, rng };
+        env.reset_state();
+        env
+    }
+
+    fn reset_state(&mut self) {
+        let mut u = || (self.rng.next_f32() - 0.5) * 0.1;
+        self.x = u();
+        self.x_dot = u();
+        self.theta = u();
+        self.theta_dot = u();
+        self.t = 0;
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        obs[0] = self.x;
+        obs[1] = self.x_dot;
+        obs[2] = self.theta;
+        obs[3] = self.theta_dot;
+    }
+}
+
+impl Environment for CartPole {
+    fn obs_dim(&self) -> usize {
+        4
+    }
+
+    fn num_actions(&self) -> usize {
+        2
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.reset_state();
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: usize, obs: &mut [f32]) -> StepResult {
+        let force = if action == 1 { FORCE_MAG } else { -FORCE_MAG };
+        let cos = self.theta.cos();
+        let sin = self.theta.sin();
+        let temp =
+            (force + POLE_MASS * POLE_HALF_LEN * self.theta_dot * self.theta_dot * sin) / TOTAL_MASS;
+        let theta_acc = (GRAVITY * sin - cos * temp)
+            / (POLE_HALF_LEN * (4.0 / 3.0 - POLE_MASS * cos * cos / TOTAL_MASS));
+        let x_acc = temp - POLE_MASS * POLE_HALF_LEN * theta_acc * cos / TOTAL_MASS;
+
+        self.x += TAU * self.x_dot;
+        self.x_dot += TAU * x_acc;
+        self.theta += TAU * self.theta_dot;
+        self.theta_dot += TAU * theta_acc;
+        self.t += 1;
+
+        let failed = self.x.abs() > X_LIMIT || self.theta.abs() > THETA_LIMIT;
+        let done = failed || self.t >= self.max_steps;
+        if done {
+            self.reset_state();
+        }
+        self.write_obs(obs);
+        StepResult { reward: 1.0, done }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_policy_fails_eventually() {
+        let mut e = CartPole::new(Xoshiro256::new(0));
+        let mut obs = vec![0.0; 4];
+        e.reset(&mut obs);
+        let mut rng = Xoshiro256::new(1);
+        let mut steps = 0;
+        loop {
+            let r = e.step(rng.next_below(2) as usize, &mut obs);
+            steps += 1;
+            if r.done {
+                break;
+            }
+            assert!(steps <= 500);
+        }
+        assert!(steps < 500, "random policy should fail before timeout");
+    }
+
+    #[test]
+    fn reward_is_one_per_step() {
+        let mut e = CartPole::new(Xoshiro256::new(2));
+        let mut obs = vec![0.0; 4];
+        e.reset(&mut obs);
+        let r = e.step(0, &mut obs);
+        assert_eq!(r.reward, 1.0);
+    }
+
+    #[test]
+    fn reset_bounds_state() {
+        let mut e = CartPole::new(Xoshiro256::new(3));
+        let mut obs = vec![0.0; 4];
+        for _ in 0..20 {
+            e.reset(&mut obs);
+            assert!(obs.iter().all(|&x| x.abs() <= 0.05 + 1e-6));
+        }
+    }
+
+    #[test]
+    fn balancing_policy_beats_random() {
+        // simple PD-ish policy: push in the direction the pole is falling
+        let mut e = CartPole::new(Xoshiro256::new(4));
+        let mut obs = vec![0.0; 4];
+        e.reset(&mut obs);
+        let mut lens = Vec::new();
+        let mut len = 0;
+        for _ in 0..3000 {
+            let action = if obs[2] + 0.5 * obs[3] > 0.0 { 1 } else { 0 };
+            let r = e.step(action, &mut obs);
+            len += 1;
+            if r.done {
+                lens.push(len);
+                len = 0;
+            }
+        }
+        let mean: f64 = lens.iter().map(|&l| l as f64).sum::<f64>() / lens.len().max(1) as f64;
+        assert!(mean > 100.0, "PD policy mean episode {mean}");
+    }
+}

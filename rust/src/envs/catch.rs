@@ -1,0 +1,163 @@
+//! Catch (bsuite): identical dynamics to the JAX version in
+//! `python/compile/envs_jax.py`, so the same exported MLP programs drive
+//! both the Anakin (on-device) and Sebulba (host-side) variants.
+
+use super::{Environment, StepResult};
+use crate::util::rng::Xoshiro256;
+
+pub struct Catch {
+    rows: usize,
+    cols: usize,
+    ball_row: usize,
+    ball_col: usize,
+    paddle_col: usize,
+    rng: Xoshiro256,
+}
+
+impl Catch {
+    pub fn new(rows: usize, cols: usize, rng: Xoshiro256) -> Self {
+        let mut env = Self { rows, cols, ball_row: 0, ball_col: 0, paddle_col: cols / 2, rng };
+        env.reset_state();
+        env
+    }
+
+    fn reset_state(&mut self) {
+        self.ball_row = 0;
+        self.ball_col = self.rng.next_below(self.cols as u32) as usize;
+        self.paddle_col = self.cols / 2;
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        obs.fill(0.0);
+        obs[self.ball_row * self.cols + self.ball_col] = 1.0;
+        obs[(self.rows - 1) * self.cols + self.paddle_col] = 1.0;
+    }
+}
+
+impl Environment for Catch {
+    fn obs_dim(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    fn num_actions(&self) -> usize {
+        3
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.reset_state();
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: usize, obs: &mut [f32]) -> StepResult {
+        debug_assert!(action < 3);
+        // {0,1,2} -> {-1,0,+1}
+        let delta: isize = action as isize - 1;
+        let p = self.paddle_col as isize + delta;
+        self.paddle_col = p.clamp(0, self.cols as isize - 1) as usize;
+        self.ball_row += 1;
+
+        if self.ball_row >= self.rows - 1 {
+            let caught = self.ball_col == self.paddle_col;
+            let reward = if caught { 1.0 } else { -1.0 };
+            self.reset_state();
+            self.write_obs(obs);
+            StepResult { reward, done: true }
+        } else {
+            self.write_obs(obs);
+            StepResult { reward: 0.0, done: false }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> Catch {
+        Catch::new(10, 5, Xoshiro256::new(0))
+    }
+
+    #[test]
+    fn obs_has_two_pixels() {
+        let mut e = env();
+        let mut obs = vec![0.0; e.obs_dim()];
+        e.reset(&mut obs);
+        assert_eq!(obs.iter().filter(|&&x| x == 1.0).count(), 2);
+        assert_eq!(obs.iter().filter(|&&x| x == 0.0).count(), 48);
+    }
+
+    #[test]
+    fn episode_lasts_rows_minus_one_steps() {
+        let mut e = env();
+        let mut obs = vec![0.0; e.obs_dim()];
+        e.reset(&mut obs);
+        for step in 1..=9 {
+            let r = e.step(1, &mut obs);
+            if step < 9 {
+                assert!(!r.done, "ended early at {step}");
+                assert_eq!(r.reward, 0.0);
+            } else {
+                assert!(r.done);
+                assert!(r.reward == 1.0 || r.reward == -1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn tracking_ball_always_catches() {
+        let mut e = env();
+        let mut obs = vec![0.0; e.obs_dim()];
+        e.reset(&mut obs);
+        let mut caught = 0;
+        for _ in 0..20 {
+            loop {
+                // read positions from the observation itself (tests the obs too)
+                let ball = obs.iter().position(|&x| x == 1.0).unwrap();
+                let ball_col = ball % 5;
+                let paddle = obs[45..50].iter().position(|&x| x == 1.0).unwrap();
+                let action = match ball_col.cmp(&paddle) {
+                    std::cmp::Ordering::Less => 0,
+                    std::cmp::Ordering::Equal => 1,
+                    std::cmp::Ordering::Greater => 2,
+                };
+                let r = e.step(action, &mut obs);
+                if r.done {
+                    assert_eq!(r.reward, 1.0, "perfect policy must catch");
+                    caught += 1;
+                    break;
+                }
+            }
+        }
+        assert_eq!(caught, 20);
+    }
+
+    #[test]
+    fn auto_reset_returns_fresh_obs() {
+        let mut e = env();
+        let mut obs = vec![0.0; e.obs_dim()];
+        e.reset(&mut obs);
+        for _ in 0..9 {
+            e.step(1, &mut obs);
+        }
+        // after terminal, obs must show ball back on row 0
+        let ball = obs.iter().position(|&x| x == 1.0).unwrap();
+        assert!(ball < 5, "ball not at top after auto-reset");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Catch::new(10, 5, Xoshiro256::new(7));
+        let mut b = Catch::new(10, 5, Xoshiro256::new(7));
+        let mut oa = vec![0.0; 50];
+        let mut ob = vec![0.0; 50];
+        a.reset(&mut oa);
+        b.reset(&mut ob);
+        assert_eq!(oa, ob);
+        for i in 0..100 {
+            let ra = a.step(i % 3, &mut oa);
+            let rb = b.step(i % 3, &mut ob);
+            assert_eq!(ra, rb);
+            assert_eq!(oa, ob);
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Empty-room gridworld with a random goal (host-side twin of the JAX env).
+
+use super::{Environment, StepResult};
+use crate::util::rng::Xoshiro256;
+
+pub struct GridWorld {
+    size: usize,
+    horizon: usize,
+    row: usize,
+    col: usize,
+    goal_row: usize,
+    goal_col: usize,
+    t: usize,
+    rng: Xoshiro256,
+}
+
+impl GridWorld {
+    pub fn new(size: usize, horizon: usize, rng: Xoshiro256) -> Self {
+        let mut env = Self { size, horizon, row: 0, col: 0, goal_row: 0, goal_col: 0, t: 0, rng };
+        env.reset_state();
+        env
+    }
+
+    fn reset_state(&mut self) {
+        self.row = self.rng.next_below(self.size as u32) as usize;
+        self.col = self.rng.next_below(self.size as u32) as usize;
+        self.goal_row = self.rng.next_below(self.size as u32) as usize;
+        self.goal_col = self.rng.next_below(self.size as u32) as usize;
+        self.t = 0;
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        obs.fill(0.0);
+        let n = self.size * self.size;
+        obs[self.row * self.size + self.col] = 1.0;
+        obs[n + self.goal_row * self.size + self.goal_col] = 1.0;
+    }
+}
+
+impl Environment for GridWorld {
+    fn obs_dim(&self) -> usize {
+        2 * self.size * self.size
+    }
+
+    fn num_actions(&self) -> usize {
+        4
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.reset_state();
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: usize, obs: &mut [f32]) -> StepResult {
+        // 0: up, 1: down, 2: left, 3: right (matches envs_jax.GridWorld)
+        match action {
+            0 => self.row = self.row.saturating_sub(1),
+            1 => self.row = (self.row + 1).min(self.size - 1),
+            2 => self.col = self.col.saturating_sub(1),
+            3 => self.col = (self.col + 1).min(self.size - 1),
+            _ => {}
+        }
+        self.t += 1;
+        let at_goal = self.row == self.goal_row && self.col == self.goal_col;
+        let done = at_goal || self.t >= self.horizon;
+        let reward = if at_goal { 1.0 } else { 0.0 };
+        if done {
+            self.reset_state();
+        }
+        self.write_obs(obs);
+        StepResult { reward, done }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeout_ends_episode() {
+        let mut e = GridWorld::new(4, 5, Xoshiro256::new(1));
+        let mut obs = vec![0.0; e.obs_dim()];
+        e.reset(&mut obs);
+        // force agent away from goal by bouncing into a wall corner
+        let mut steps = 0;
+        loop {
+            let r = e.step(0, &mut obs); // keep moving up
+            steps += 1;
+            if r.done {
+                break;
+            }
+            assert!(steps <= 5, "no terminal by horizon");
+        }
+        assert!(steps <= 5);
+    }
+
+    #[test]
+    fn walls_clip_position() {
+        let mut e = GridWorld::new(3, 100, Xoshiro256::new(2));
+        let mut obs = vec![0.0; e.obs_dim()];
+        e.reset(&mut obs);
+        for _ in 0..5 {
+            e.step(0, &mut obs); // up
+        }
+        // agent one-hot must still be inside the grid
+        let pos = obs[..9].iter().position(|&x| x == 1.0).unwrap();
+        assert!(pos < 3, "agent should be pinned to the top row, got cell {pos}");
+    }
+
+    #[test]
+    fn reaching_goal_rewards() {
+        // scan seeds for a (start != goal) instance reachable by going right
+        let mut e = GridWorld::new(4, 50, Xoshiro256::new(3));
+        let mut obs = vec![0.0; e.obs_dim()];
+        e.reset(&mut obs);
+        let mut found_reward = false;
+        'outer: for _ in 0..50 {
+            // naive policy: walk toward the goal via obs decoding
+            for _ in 0..50 {
+                let pos = obs[..16].iter().position(|&x| x == 1.0).unwrap();
+                let goal = obs[16..].iter().position(|&x| x == 1.0).unwrap();
+                let (pr, pc) = (pos / 4, pos % 4);
+                let (gr, gc) = (goal / 4, goal % 4);
+                let action = if pr > gr {
+                    0
+                } else if pr < gr {
+                    1
+                } else if pc > gc {
+                    2
+                } else if pc < gc {
+                    3
+                } else {
+                    0
+                };
+                let r = e.step(action, &mut obs);
+                if r.done {
+                    if r.reward == 1.0 {
+                        found_reward = true;
+                        break 'outer;
+                    }
+                    break;
+                }
+            }
+        }
+        assert!(found_reward, "goal-seeking policy never rewarded");
+    }
+
+    #[test]
+    fn obs_has_exactly_two_ones() {
+        let mut e = GridWorld::new(5, 50, Xoshiro256::new(4));
+        let mut obs = vec![0.0; e.obs_dim()];
+        e.reset(&mut obs);
+        for i in 0..200 {
+            e.step(i % 4, &mut obs);
+            assert_eq!(obs.iter().filter(|&&x| x == 1.0).count(), 2);
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Host-side environments for Sebulba (the paper's "arbitrary environments
+//! that run on the CPU hosts").
+//!
+//! The substrate mirrors what the paper relies on: single environments with
+//! a `reset/step` interface, and a *batched* environment (`BatchedEnv`) that
+//! "is exposed ... as a single environment that takes a batch of actions and
+//! returns a batch of observations; behind the scenes it steps each
+//! environment in the batch in parallel using a shared pool of C++ threads"
+//! — here, a shared pool of Rust threads (`pool::WorkerPool`).
+//!
+//! Observations are flat `f32` buffers written into caller-provided slices
+//! (no allocation on the hot path); `atari_like` is the Atari substitute
+//! (pixel rendering, frame stack, sticky actions, episodic lives).
+
+pub mod atari_like;
+pub mod batched;
+pub mod cartpole;
+pub mod catch;
+pub mod chain;
+pub mod gridworld;
+pub mod pool;
+
+pub use batched::BatchedEnv;
+pub use pool::WorkerPool;
+
+use crate::util::rng::Xoshiro256;
+
+/// One transition's results (the observation is written separately).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepResult {
+    pub reward: f32,
+    /// True if this step *ended* an episode (the returned observation is
+    /// then the first observation of a fresh episode — auto-reset).
+    pub done: bool,
+}
+
+/// A host-side environment. Implementations must be deterministic given the
+/// RNG stream passed at construction.
+pub trait Environment: Send {
+    /// Flat observation size (what the exported programs expect).
+    fn obs_dim(&self) -> usize;
+    fn num_actions(&self) -> usize;
+
+    /// Start a new episode; write the initial observation into `obs`.
+    fn reset(&mut self, obs: &mut [f32]);
+
+    /// Step with `action`; write the *next* observation into `obs`
+    /// (auto-reset: on `done`, `obs` is the fresh episode's first frame).
+    fn step(&mut self, action: usize, obs: &mut [f32]) -> StepResult;
+}
+
+/// Environment constructors by name (used by the CLI and benches).
+pub fn make_env(kind: &str, seed: u64) -> anyhow::Result<Box<dyn Environment>> {
+    let rng = Xoshiro256::from_stream(seed, 0x517);
+    Ok(match kind {
+        "catch" => Box::new(catch::Catch::new(10, 5, rng)),
+        "gridworld" => Box::new(gridworld::GridWorld::new(8, 50, rng)),
+        "cartpole" => Box::new(cartpole::CartPole::new(rng)),
+        "chain" => Box::new(chain::Chain::new(10, rng)),
+        "atari_like" => Box::new(atari_like::AtariLike::new(
+            atari_like::Config::default(),
+            rng,
+        )),
+        other => anyhow::bail!("unknown environment {other:?}"),
+    })
+}
+
+/// The environment factory type used by `BatchedEnv` (one env per slot).
+pub type EnvFactory = Box<dyn Fn(usize) -> Box<dyn Environment> + Send + Sync>;
+
+/// Factory for `kind`, deriving each slot's RNG stream from `seed`.
+pub fn make_factory(kind: &'static str, seed: u64) -> EnvFactory {
+    Box::new(move |slot| {
+        let rng = Xoshiro256::from_stream(seed, 0x9E00 + slot as u64);
+        let env: Box<dyn Environment> = match kind {
+            "catch" => Box::new(catch::Catch::new(10, 5, rng)),
+            "gridworld" => Box::new(gridworld::GridWorld::new(8, 50, rng)),
+            "cartpole" => Box::new(cartpole::CartPole::new(rng)),
+            "chain" => Box::new(chain::Chain::new(10, rng)),
+            "atari_like" => Box::new(atari_like::AtariLike::new(
+                atari_like::Config::default(),
+                rng,
+            )),
+            other => panic!("unknown environment {other:?}"),
+        };
+        env
+    })
+}

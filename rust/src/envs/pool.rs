@@ -1,0 +1,142 @@
+//! Shared worker-thread pool — the Rust analogue of the paper's "shared pool
+//! of C++ threads" that steps batched environments behind the Python facade.
+//!
+//! Deliberately minimal: FIFO job queue, fixed worker count, completion
+//! signalled through per-batch channels by the submitter.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct WorkerPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl WorkerPool {
+    pub fn new(size: usize) -> Arc<Self> {
+        assert!(size > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("env-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // all senders dropped
+                        }
+                    })
+                    .expect("spawn env worker")
+            })
+            .collect();
+        Arc::new(Self { tx: Some(tx), workers, size })
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn submit(&self, job: Job) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(job)
+            .expect("worker pool died");
+    }
+
+    /// Run `n` jobs produced by `make_job` and wait for all of them.
+    pub fn run_batch<F>(&self, n: usize, make_job: F)
+    where
+        F: Fn(usize) -> Job,
+    {
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        for i in 0..n {
+            let job = make_job(i);
+            let done = done_tx.clone();
+            self.submit(Box::new(move || {
+                job();
+                let _ = done.send(());
+            }));
+        }
+        drop(done_tx);
+        for _ in 0..n {
+            done_rx.recv().expect("worker panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the queue; workers exit on recv Err
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = counter.clone();
+        pool.run_batch(100, move |_| {
+            let c = c.clone();
+            Box::new(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            })
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn batch_blocks_until_done() {
+        let pool = WorkerPool::new(2);
+        let flag = Arc::new(AtomicUsize::new(0));
+        let f = flag.clone();
+        pool.run_batch(8, move |_| {
+            let f = f.clone();
+            Box::new(move || {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                f.fetch_add(1, Ordering::SeqCst);
+            })
+        });
+        // run_batch returned, so every job must have finished
+        assert_eq!(flag.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn pool_survives_many_batches() {
+        let pool = WorkerPool::new(3);
+        for _ in 0..50 {
+            let counter = Arc::new(AtomicUsize::new(0));
+            let c = counter.clone();
+            pool.run_batch(7, move |_| {
+                let c = c.clone();
+                Box::new(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                })
+            });
+            assert_eq!(counter.load(Ordering::SeqCst), 7);
+        }
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = WorkerPool::new(2);
+        drop(pool); // must not hang
+    }
+}

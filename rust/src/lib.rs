@@ -1,0 +1,61 @@
+//! # Podracer — scalable RL architectures (Anakin & Sebulba) in Rust + JAX
+//!
+//! A reproduction of *"Podracer architectures for scalable Reinforcement
+//! Learning"* (Hessel et al., DeepMind 2021) as a three-layer system:
+//!
+//! * **L1** — Pallas kernels (V-trace / GAE / λ-returns) compiled at build
+//!   time (`python/compile/kernels/`).
+//! * **L2** — JAX programs (networks, losses, the Anakin on-device loop, the
+//!   Sebulba inference/grad/apply programs), AOT-lowered to HLO text in
+//!   `artifacts/` (`python/compile/aot.py`).
+//! * **L3** — this crate: the coordination architectures themselves. Python
+//!   never runs on the request path; the binary consumes `artifacts/` only.
+//!
+//! ## Layout
+//!
+//! * [`runtime`] — the simulated TPU pod: device cores (threads owning PJRT
+//!   CPU clients), host tensors, the artifact manifest.
+//! * [`envs`] — host-side environments (Catch, GridWorld, CartPole, Chain,
+//!   the Atari-like pixel game) + the batched environment / worker pool.
+//! * [`coordinator`] — **Sebulba**: actor threads, learner thread, trajectory
+//!   queues, gradient collective, parameter store, replicas.
+//! * [`anakin`] — **Anakin**: the replicated on-device loop driver.
+//! * [`search`] — MCTS for the MuZero-style search agent.
+//! * [`benchkit`] / [`testkit`] — bench harness and property-test support.
+//!
+//! ## Quickstart
+//!
+//! ```bash
+//! make artifacts                      # python: AOT-lower the XLA programs
+//! cargo run --release --example quickstart
+//! ```
+
+pub mod anakin;
+pub mod benchkit;
+pub mod coordinator;
+pub mod envs;
+pub mod runtime;
+pub mod search;
+pub mod testkit;
+pub mod util;
+
+/// Default artifacts directory (relative to the repo root).
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$PODRACER_ARTIFACTS`, or walk up from
+/// the current directory looking for `artifacts/manifest.json`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("PODRACER_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join(DEFAULT_ARTIFACTS);
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return DEFAULT_ARTIFACTS.into();
+        }
+    }
+}

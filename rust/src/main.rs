@@ -1,0 +1,146 @@
+//! `podracer` CLI: train Anakin / Sebulba / MuZero agents from the terminal.
+//!
+//! ```text
+//! podracer anakin   [--agent anakin_catch] [--cores 4] [--outer-iters 20] [--mode bundled|psum]
+//! podracer sebulba  [--agent seb_catch] [--env catch] [--actor-cores 2] [--learner-cores 2]
+//!                   [--batch 32] [--unroll 20] [--updates 100] [--replicas 1] [--threads 2]
+//! podracer muzero   [--updates 20] [--simulations 16]
+//! podracer info     # list artifacts & agents
+//! ```
+
+use anyhow::Result;
+use podracer::anakin::{Anakin, AnakinConfig, Mode};
+use podracer::coordinator::{Sebulba, SebulbaConfig};
+use podracer::runtime::Pod;
+use podracer::search::{run_muzero, MuZeroRunConfig};
+use podracer::util::cli::Args;
+
+fn main() {
+    podracer::util::logging::init();
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn env_kind_static(name: &str) -> &'static str {
+    match name {
+        "catch" => "catch",
+        "gridworld" => "gridworld",
+        "cartpole" => "cartpole",
+        "chain" => "chain",
+        "atari_like" => "atari_like",
+        _ => "catch",
+    }
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    let artifacts = podracer::artifacts_dir();
+    match cmd {
+        "anakin" => {
+            let cfg = AnakinConfig {
+                agent: args.get_str("agent", "anakin_catch"),
+                cores: args.get_usize("cores", 4)?,
+                outer_iters: args.get_u64("outer-iters", 20)?,
+                mode: if args.get_str("mode", "bundled") == "psum" {
+                    Mode::Psum
+                } else {
+                    Mode::Bundled
+                },
+                seed: args.get_u64("seed", 7)?,
+            };
+            let report = Anakin::run(&artifacts, &cfg)?;
+            println!(
+                "anakin: steps={} updates={} elapsed={:.2}s sps={:.0} projected_sps={:.0}",
+                report.steps, report.updates, report.elapsed, report.sps, report.projected_sps
+            );
+            if let (Some(first), Some(last)) = (report.metrics.first(), report.metrics.last()) {
+                println!(
+                    "  reward: {:.3} -> {:.3} | loss: {:.4} -> {:.4}",
+                    first[4], last[4], first[0], last[0]
+                );
+            }
+            Ok(())
+        }
+        "sebulba" => {
+            let cfg = SebulbaConfig {
+                agent: args.get_str("agent", "seb_catch"),
+                env_kind: env_kind_static(&args.get_str("env", "catch")),
+                actor_cores: args.get_usize("actor-cores", 2)?,
+                learner_cores: args.get_usize("learner-cores", 2)?,
+                threads_per_actor_core: args.get_usize("threads", 2)?,
+                actor_batch: args.get_usize("batch", 32)?,
+                unroll: args.get_usize("unroll", 20)?,
+                micro_batches: args.get_usize("micro-batches", 1)?,
+                discount: args.get_f64("discount", 0.99)? as f32,
+                queue_capacity: args.get_usize("queue", 4)?,
+                env_workers: args.get_usize("env-workers", 2)?,
+                replicas: args.get_usize("replicas", 1)?,
+                total_updates: args.get_u64("updates", 100)?,
+                seed: args.get_u64("seed", 42)?,
+            };
+            let report = Sebulba::run(&artifacts, &cfg)?;
+            println!(
+                "sebulba: frames={} updates={} elapsed={:.2}s fps={:.0} projected_fps={:.0}",
+                report.frames, report.updates, report.elapsed, report.fps, report.projected_fps
+            );
+            println!(
+                "  episodes={} mean_reward={:.3} staleness={:.2} last_loss={:.4}",
+                report.episodes, report.mean_episode_reward, report.mean_staleness, report.last_loss
+            );
+            Ok(())
+        }
+        "muzero" => {
+            let cfg = MuZeroRunConfig {
+                agent: args.get_str("agent", "mz_catch"),
+                env_kind: env_kind_static(&args.get_str("env", "catch")),
+                actor_cores: args.get_usize("actor-cores", 2)?,
+                learner_cores: args.get_usize("learner-cores", 2)?,
+                threads_per_actor_core: args.get_usize("threads", 1)?,
+                num_simulations: args.get_usize("simulations", 16)?,
+                discount: args.get_f64("discount", 0.997)? as f32,
+                queue_capacity: args.get_usize("queue", 4)?,
+                env_workers: args.get_usize("env-workers", 2)?,
+                replicas: args.get_usize("replicas", 1)?,
+                total_updates: args.get_u64("updates", 20)?,
+                seed: args.get_u64("seed", 11)?,
+            };
+            let mut pod = Pod::new(&artifacts, cfg.total_cores())?;
+            let report = run_muzero(&mut pod, &cfg)?;
+            println!(
+                "muzero: frames={} updates={} elapsed={:.2}s fps={:.0} mean_reward={:.3}",
+                report.frames, report.updates, report.elapsed, report.fps, report.mean_episode_reward
+            );
+            Ok(())
+        }
+        "info" => {
+            let manifest = podracer::runtime::Manifest::load(&artifacts)?;
+            println!("artifacts: {}", artifacts.display());
+            println!("agents:");
+            for (name, a) in &manifest.agents {
+                println!(
+                    "  {name}: kind={} params={} opt={} obs={:?} actions={}",
+                    a.kind, a.param_size, a.opt_size, a.obs_shape, a.num_actions
+                );
+            }
+            println!("programs: {}", manifest.programs.len());
+            for name in manifest.programs.keys() {
+                println!("  {name}");
+            }
+            Ok(())
+        }
+        _ => {
+            println!(
+                "usage: podracer <anakin|sebulba|muzero|info> [--flags]\n\
+                 run `podracer info` to list available agents/artifacts"
+            );
+            Ok(())
+        }
+    }
+}

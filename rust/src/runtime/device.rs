@@ -1,0 +1,308 @@
+//! Simulated TPU core: a dedicated OS thread owning a PJRT client.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), which forces —
+//! and conveniently models — the paper's device semantics: one program
+//! running at a time per core, per-core program/memory state, explicit
+//! transfers. A `DeviceCore` thread compiles HLO-text programs on demand and
+//! executes them serially; `DeviceHandle` is the cloneable, `Send` handle
+//! the coordinator threads use.
+//!
+//! Occupancy accounting (busy-time) feeds the actor/learner utilisation
+//! stats that the paper's core-split ablation is about.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::tensor::HostTensor;
+
+enum Command {
+    /// Load + compile an HLO-text program under a string key.
+    Compile { key: String, path: PathBuf, reply: mpsc::Sender<Result<()>> },
+    /// Upload a tensor to device-resident memory under a named slot
+    /// (e.g. parameters: uploaded once per version, reused every step —
+    /// the paper's "parameters stay on device"; §Perf L3-1).
+    Cache { slot: String, tensor: HostTensor, reply: mpsc::Sender<Result<()>> },
+    /// Execute a compiled program. `cached` lists (input position, slot)
+    /// pairs satisfied from device-resident cache instead of `inputs`.
+    Execute {
+        key: String,
+        inputs: Vec<HostTensor>,
+        cached: Vec<(usize, String)>,
+        reply: mpsc::Sender<Result<Vec<HostTensor>>>,
+    },
+    Shutdown,
+}
+
+/// Busy-time counters shared with handles (read side of the occupancy stats).
+#[derive(Default)]
+struct CoreStats {
+    busy_nanos: AtomicU64,
+    executions: AtomicU64,
+}
+
+/// Cloneable, `Send` handle to a device core.
+#[derive(Clone)]
+pub struct DeviceHandle {
+    pub core_id: usize,
+    tx: mpsc::Sender<Command>,
+    stats: Arc<CoreStats>,
+    spawned_at: Instant,
+}
+
+impl DeviceHandle {
+    /// Compile the HLO file under `key`; blocks until done.
+    pub fn compile(&self, key: &str, path: PathBuf) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Command::Compile { key: key.to_string(), path, reply })
+            .map_err(|_| anyhow!("core {} is down", self.core_id))?;
+        rx.recv().map_err(|_| anyhow!("core {} died compiling {key}", self.core_id))?
+    }
+
+    /// Start compilation without waiting; returns the receiver to join on.
+    pub fn compile_async(&self, key: &str, path: PathBuf) -> Result<mpsc::Receiver<Result<()>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Command::Compile { key: key.to_string(), path, reply })
+            .map_err(|_| anyhow!("core {} is down", self.core_id))?;
+        Ok(rx)
+    }
+
+    /// Execute `key` with `inputs`; blocks until the result is back on host.
+    pub fn execute(&self, key: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Command::Execute { key: key.to_string(), inputs, cached: Vec::new(), reply })
+            .map_err(|_| anyhow!("core {} is down", self.core_id))?;
+        rx.recv().map_err(|_| anyhow!("core {} died executing {key}", self.core_id))?
+    }
+
+    /// Upload `tensor` to a device-resident cache slot (blocks until done).
+    pub fn cache(&self, slot: &str, tensor: HostTensor) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Command::Cache { slot: slot.to_string(), tensor, reply })
+            .map_err(|_| anyhow!("core {} is down", self.core_id))?;
+        rx.recv().map_err(|_| anyhow!("core {} died caching {slot}", self.core_id))?
+    }
+
+    /// Execute with some inputs taken from device-resident cache slots:
+    /// `cached` is a list of (input position, slot); `inputs` supplies the
+    /// remaining positions in order.
+    pub fn execute_cached(
+        &self,
+        key: &str,
+        inputs: Vec<HostTensor>,
+        cached: Vec<(usize, String)>,
+    ) -> Result<Vec<HostTensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Command::Execute { key: key.to_string(), inputs, cached, reply })
+            .map_err(|_| anyhow!("core {} is down", self.core_id))?;
+        rx.recv().map_err(|_| anyhow!("core {} died executing {key}", self.core_id))?
+    }
+
+    /// Fire an execution and return a receiver for the result — lets an
+    /// actor thread overlap env stepping with device compute (the paper's
+    /// multiple-threads-per-core trick relies on this shape).
+    pub fn execute_async(
+        &self,
+        key: &str,
+        inputs: Vec<HostTensor>,
+    ) -> Result<mpsc::Receiver<Result<Vec<HostTensor>>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Command::Execute { key: key.to_string(), inputs, cached: Vec::new(), reply })
+            .map_err(|_| anyhow!("core {} is down", self.core_id))?;
+        Ok(rx)
+    }
+
+    /// Fraction of wall-time this core spent executing programs.
+    pub fn occupancy(&self) -> f64 {
+        let busy = self.stats.busy_nanos.load(Ordering::Relaxed) as f64;
+        let total = self.spawned_at.elapsed().as_nanos() as f64;
+        if total > 0.0 {
+            busy / total
+        } else {
+            0.0
+        }
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.stats.executions.load(Ordering::Relaxed)
+    }
+
+    pub fn busy_seconds(&self) -> f64 {
+        self.stats.busy_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+}
+
+/// A running device-core thread. Dropping shuts the core down and joins it.
+pub struct DeviceCore {
+    pub handle: DeviceHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+    tx: mpsc::Sender<Command>,
+}
+
+impl DeviceCore {
+    /// Spawn a core thread with its own PJRT CPU client.
+    pub fn spawn(core_id: usize) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Command>();
+        let stats = Arc::new(CoreStats::default());
+        let stats_thread = stats.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+
+        let join = std::thread::Builder::new()
+            .name(format!("core-{core_id}"))
+            .spawn(move || core_main(core_id, rx, stats_thread, ready_tx))
+            .context("spawning core thread")?;
+
+        // Wait for the PJRT client to come up so failures surface here.
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("core {core_id} thread died during startup"))??;
+
+        let handle = DeviceHandle {
+            core_id,
+            tx: tx.clone(),
+            stats,
+            spawned_at: Instant::now(),
+        };
+        Ok(Self { handle, join: Some(join), tx })
+    }
+}
+
+impl Drop for DeviceCore {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Command::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn core_main(
+    core_id: usize,
+    rx: mpsc::Receiver<Command>,
+    stats: Arc<CoreStats>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("PjRtClient::cpu failed: {e:?}")));
+            return;
+        }
+    };
+    let mut programs: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    let mut slots: HashMap<String, xla::PjRtBuffer> = HashMap::new();
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Command::Shutdown => break,
+            Command::Cache { slot, tensor, reply } => {
+                let res = (|| -> Result<()> {
+                    let buf = match &tensor.data {
+                        crate::runtime::tensor::Data::F32(v) => client
+                            .buffer_from_host_buffer(v, &tensor.shape, None)
+                            .map_err(|e| anyhow!("cache {slot}: {e:?}"))?,
+                        crate::runtime::tensor::Data::I32(v) => client
+                            .buffer_from_host_buffer(v, &tensor.shape, None)
+                            .map_err(|e| anyhow!("cache {slot}: {e:?}"))?,
+                    };
+                    slots.insert(slot, buf);
+                    Ok(())
+                })();
+                let _ = reply.send(res);
+            }
+            Command::Compile { key, path, reply } => {
+                let res = (|| -> Result<()> {
+                    let proto = xla::HloModuleProto::from_text_file(
+                        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                    )
+                    .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = client
+                        .compile(&comp)
+                        .map_err(|e| anyhow!("compile {key}: {e:?}"))?;
+                    programs.insert(key, exe);
+                    Ok(())
+                })();
+                let _ = reply.send(res);
+            }
+            Command::Execute { key, inputs, cached, reply } => {
+                let t0 = Instant::now();
+                let res = (|| -> Result<Vec<HostTensor>> {
+                    let exe = programs
+                        .get(&key)
+                        .ok_or_else(|| anyhow!("core {core_id}: program {key:?} not compiled"))?;
+                    let mut out = if cached.is_empty() {
+                        // host -> device, then execute (programs return one tuple)
+                        let literals: Vec<xla::Literal> = inputs
+                            .iter()
+                            .map(|t| t.to_literal())
+                            .collect::<Result<_>>()?;
+                        exe.execute::<xla::Literal>(&literals)
+                            .map_err(|e| anyhow!("execute {key}: {e:?}"))?
+                    } else {
+                        // buffer path: fresh inputs become device buffers; the
+                        // cached positions reuse device-resident slots.
+                        let total = inputs.len() + cached.len();
+                        let fresh: Vec<xla::PjRtBuffer> = inputs
+                            .iter()
+                            .map(|t| match &t.data {
+                                crate::runtime::tensor::Data::F32(v) => client
+                                    .buffer_from_host_buffer(v, &t.shape, None)
+                                    .map_err(|e| anyhow!("h2d {key}: {e:?}")),
+                                crate::runtime::tensor::Data::I32(v) => client
+                                    .buffer_from_host_buffer(v, &t.shape, None)
+                                    .map_err(|e| anyhow!("h2d {key}: {e:?}")),
+                            })
+                            .collect::<Result<_>>()?;
+                        let mut ordered: Vec<Option<&xla::PjRtBuffer>> = vec![None; total];
+                        for (pos, slot) in &cached {
+                            let buf = slots.get(slot).ok_or_else(|| {
+                                anyhow!("core {core_id}: cache slot {slot:?} empty")
+                            })?;
+                            ordered[*pos] = Some(buf);
+                        }
+                        let mut it = fresh.iter();
+                        for o in ordered.iter_mut() {
+                            if o.is_none() {
+                                *o = Some(it.next().expect("fresh input count"));
+                            }
+                        }
+                        let args: Vec<&xla::PjRtBuffer> =
+                            ordered.into_iter().map(|o| o.unwrap()).collect();
+                        exe.execute_b(&args)
+                            .map_err(|e| anyhow!("execute_b {key}: {e:?}"))?
+                    };
+                    let buf = out
+                        .pop()
+                        .and_then(|mut reps| reps.pop())
+                        .ok_or_else(|| anyhow!("execute {key}: empty result"))?;
+                    let lit = buf
+                        .to_literal_sync()
+                        .map_err(|e| anyhow!("d2h {key}: {e:?}"))?;
+                    let parts = lit
+                        .to_tuple()
+                        .map_err(|e| anyhow!("untuple {key}: {e:?}"))?;
+                    parts.iter().map(HostTensor::from_literal).collect()
+                })();
+                stats
+                    .busy_nanos
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                stats.executions.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(res);
+            }
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Artifact manifest: what `python -m compile.aot` produced.
+//!
+//! The manifest is the contract between the build path (L1/L2 python) and
+//! the runtime (L3 rust): program files, input/output specs, and per-agent
+//! metadata (flat parameter sizes, observation geometry, trajectory shapes).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String, // "f32" | "i32" | "u32"
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.req("name")?.as_str().ok_or_else(|| anyhow!("name"))?.to_string(),
+            dtype: j.req("dtype")?.as_str().ok_or_else(|| anyhow!("dtype"))?.to_string(),
+            shape: j.req("shape")?.as_usize_vec()?,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ProgramSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Per-agent metadata (see aot.py `ex.agents[...]`).
+#[derive(Clone, Debug)]
+pub struct AgentMeta {
+    pub name: String,
+    pub kind: String, // "sebulba" | "anakin" | "muzero"
+    pub param_size: usize,
+    pub opt_size: usize,
+    pub obs_shape: Vec<usize>,
+    pub num_actions: usize,
+    pub raw: Json,
+}
+
+impl AgentMeta {
+    pub fn obs_numel(&self) -> usize {
+        self.obs_shape.iter().product()
+    }
+
+    /// Extra integer field from the raw metadata (e.g. "batch", "unroll").
+    pub fn extra_usize(&self, key: &str) -> Result<usize> {
+        self.raw
+            .req(key)?
+            .as_usize()
+            .ok_or_else(|| anyhow!("agent {}: {key} not an integer", self.name))
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub programs: BTreeMap<String, ProgramSpec>,
+    pub agents: BTreeMap<String, AgentMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let mut programs = BTreeMap::new();
+        for (name, pj) in j.req("programs")?.as_obj().ok_or_else(|| anyhow!("programs"))? {
+            let file = dir.join(
+                pj.req("file")?.as_str().ok_or_else(|| anyhow!("file"))?,
+            );
+            let inputs = pj
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("inputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = pj
+                .req("outputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("outputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            programs.insert(
+                name.clone(),
+                ProgramSpec { name: name.clone(), file, inputs, outputs },
+            );
+        }
+        let mut agents = BTreeMap::new();
+        for (name, aj) in j.req("agents")?.as_obj().ok_or_else(|| anyhow!("agents"))? {
+            agents.insert(
+                name.clone(),
+                AgentMeta {
+                    name: name.clone(),
+                    kind: aj.req("kind")?.as_str().unwrap_or("").to_string(),
+                    param_size: aj
+                        .req("param_size")?
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("param_size"))?,
+                    opt_size: aj
+                        .req("opt_size")?
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("opt_size"))?,
+                    obs_shape: aj.req("obs_shape")?.as_usize_vec()?,
+                    num_actions: aj
+                        .req("num_actions")?
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("num_actions"))?,
+                    raw: aj.clone(),
+                },
+            );
+        }
+        Ok(Self { dir: dir.to_path_buf(), programs, agents })
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramSpec> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| anyhow!("program {name:?} not in manifest (have: {:?})",
+                self.programs.keys().take(8).collect::<Vec<_>>()))
+    }
+
+    pub fn agent(&self, name: &str) -> Result<&AgentMeta> {
+        self.agents
+            .get(name)
+            .ok_or_else(|| anyhow!("agent {name:?} not in manifest"))
+    }
+
+    /// Validate a set of host tensors against a program's input specs.
+    pub fn check_inputs(
+        &self,
+        program: &str,
+        inputs: &[crate::runtime::tensor::HostTensor],
+    ) -> Result<()> {
+        let spec = self.program(program)?;
+        if spec.inputs.len() != inputs.len() {
+            bail!(
+                "{program}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (s, t) in spec.inputs.iter().zip(inputs) {
+            if s.shape != t.shape {
+                bail!("{program}: input {:?} shape {:?} != {:?}", s.name, s.shape, t.shape);
+            }
+            if s.dtype != t.dtype_name() {
+                bail!("{program}: input {:?} dtype {} != {}", s.name, s.dtype, t.dtype_name());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "programs": {
+        "toy_infer": {
+          "file": "toy_infer.hlo.txt",
+          "inputs": [
+            {"name": "params", "dtype": "f32", "shape": [10]},
+            {"name": "obs", "dtype": "f32", "shape": [4, 5]},
+            {"name": "seed", "dtype": "i32", "shape": []}
+          ],
+          "outputs": [{"name": "out0", "dtype": "i32", "shape": [4]}]
+        }
+      },
+      "agents": {
+        "toy": {"kind": "sebulba", "param_size": 10, "opt_size": 10,
+                 "obs_shape": [5], "num_actions": 3, "batch": 4}
+      }
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        let p = m.program("toy_infer").unwrap();
+        assert_eq!(p.inputs.len(), 3);
+        assert_eq!(p.inputs[1].shape, vec![4, 5]);
+        assert_eq!(p.inputs[1].numel(), 20);
+        assert_eq!(p.file, Path::new("/tmp/a/toy_infer.hlo.txt"));
+        let a = m.agent("toy").unwrap();
+        assert_eq!(a.param_size, 10);
+        assert_eq!(a.extra_usize("batch").unwrap(), 4);
+        assert!(a.extra_usize("nope").is_err());
+    }
+
+    #[test]
+    fn missing_program_is_error() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert!(m.program("nope").is_err());
+    }
+
+    #[test]
+    fn check_inputs_validates() {
+        use crate::runtime::tensor::HostTensor;
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let good = vec![
+            HostTensor::zeros_f32(vec![10]),
+            HostTensor::zeros_f32(vec![4, 5]),
+            HostTensor::scalar_i32(1),
+        ];
+        m.check_inputs("toy_infer", &good).unwrap();
+        let bad_shape = vec![
+            HostTensor::zeros_f32(vec![10]),
+            HostTensor::zeros_f32(vec![4, 6]),
+            HostTensor::scalar_i32(1),
+        ];
+        assert!(m.check_inputs("toy_infer", &bad_shape).is_err());
+        let bad_dtype = vec![
+            HostTensor::zeros_f32(vec![10]),
+            HostTensor::zeros_f32(vec![4, 5]),
+            HostTensor::scalar_f32(1.0),
+        ];
+        assert!(m.check_inputs("toy_infer", &bad_dtype).is_err());
+        assert!(m.check_inputs("toy_infer", &good[..2]).is_err());
+    }
+
+    #[test]
+    fn bad_manifest_is_error() {
+        assert!(Manifest::parse(Path::new("/"), "{}").is_err());
+        assert!(Manifest::parse(Path::new("/"), "not json").is_err());
+    }
+}

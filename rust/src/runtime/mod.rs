@@ -1,0 +1,13 @@
+//! Runtime: the simulated TPU pod (PJRT CPU clients on dedicated threads),
+//! host tensors, and the artifact manifest. See DESIGN.md §1 for how this
+//! maps onto the paper's TPU topology.
+
+pub mod device;
+pub mod manifest;
+pub mod pod;
+pub mod tensor;
+
+pub use device::{DeviceCore, DeviceHandle};
+pub use manifest::{AgentMeta, Manifest, ProgramSpec, TensorSpec};
+pub use pod::Pod;
+pub use tensor::{Data, HostTensor};

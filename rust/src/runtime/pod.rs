@@ -1,0 +1,101 @@
+//! A simulated TPU pod slice: N device cores + the artifact manifest.
+//!
+//! `Pod::new(artifacts_dir, n_cores)` spawns the core threads;
+//! `load_program(keys, cores)` compiles a program onto a set of cores in
+//! parallel (each core owns its own client, so compilation is concurrent —
+//! just like per-device program loading on a real pod).
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use super::device::{DeviceCore, DeviceHandle};
+use super::manifest::Manifest;
+
+pub struct Pod {
+    pub manifest: Manifest,
+    cores: Vec<DeviceCore>,
+    loaded: BTreeSet<(usize, String)>,
+}
+
+impl Pod {
+    pub fn new(artifacts_dir: &Path, n_cores: usize) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let mut cores = Vec::with_capacity(n_cores);
+        for i in 0..n_cores {
+            cores.push(DeviceCore::spawn(i)?);
+        }
+        Ok(Self { manifest, cores, loaded: BTreeSet::new() })
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.cores.len()
+    }
+
+    pub fn core(&self, i: usize) -> Result<DeviceHandle> {
+        self.cores
+            .get(i)
+            .map(|c| c.handle.clone())
+            .ok_or_else(|| anyhow!("core {i} out of range ({} cores)", self.cores.len()))
+    }
+
+    pub fn cores(&self) -> Vec<DeviceHandle> {
+        self.cores.iter().map(|c| c.handle.clone()).collect()
+    }
+
+    /// Compile `program` (manifest name) onto the given cores, in parallel.
+    pub fn load_program(&mut self, program: &str, core_ids: &[usize]) -> Result<()> {
+        let spec = self.manifest.program(program)?.clone();
+        let mut waits = Vec::new();
+        for &cid in core_ids {
+            if self.loaded.contains(&(cid, program.to_string())) {
+                continue;
+            }
+            let handle = self.core(cid)?;
+            waits.push((cid, handle.compile_async(program, spec.file.clone())?));
+        }
+        for (cid, rx) in waits {
+            rx.recv()
+                .map_err(|_| anyhow!("core {cid} died compiling {program}"))??;
+            self.loaded.insert((cid, program.to_string()));
+        }
+        log::debug!("loaded {program} on cores {core_ids:?}");
+        Ok(())
+    }
+
+    /// Compile several programs onto the same set of cores.
+    pub fn load_programs(&mut self, programs: &[&str], core_ids: &[usize]) -> Result<()> {
+        // Issue all compiles first (they queue per-core and run concurrently
+        // across cores), then join.
+        let mut waits = Vec::new();
+        for &program in programs {
+            let spec = self.manifest.program(program)?.clone();
+            for &cid in core_ids {
+                if self.loaded.contains(&(cid, program.to_string())) {
+                    continue;
+                }
+                let handle = self.core(cid)?;
+                waits.push((cid, program.to_string(), handle.compile_async(program, spec.file.clone())?));
+            }
+        }
+        for (cid, program, rx) in waits {
+            rx.recv()
+                .map_err(|_| anyhow!("core {cid} died compiling {program}"))??;
+            self.loaded.insert((cid, program));
+        }
+        Ok(())
+    }
+
+    /// Validated execute: checks inputs against the manifest spec first.
+    /// The hot paths skip this and call `DeviceHandle::execute` directly.
+    pub fn execute_checked(
+        &self,
+        core_id: usize,
+        program: &str,
+        inputs: Vec<super::tensor::HostTensor>,
+    ) -> Result<Vec<super::tensor::HostTensor>> {
+        self.manifest.check_inputs(program, &inputs)?;
+        self.core(core_id)?.execute(program, inputs)
+    }
+}

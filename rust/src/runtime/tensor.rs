@@ -1,0 +1,180 @@
+//! Host-side tensors crossing the Rust <-> XLA boundary.
+//!
+//! `HostTensor` is the only currency between the coordinator and the device
+//! cores: a shape plus f32 or i32 data (the two dtypes the exported programs
+//! use). Conversion to/from `xla::Literal` happens on the device-core thread
+//! (the "host->device transfer" of the simulated TPU).
+
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Self { shape, data: Data::F32(data) })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Self { shape, data: Data::I32(data) })
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Self { shape: vec![], data: Data::I32(vec![v]) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self { shape: vec![], data: Data::F32(vec![v]) }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape, data: Data::F32(vec![0.0; n]) }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match &self.data {
+            Data::F32(_) => "f32",
+            Data::I32(_) => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => Err(anyhow!("expected f32 tensor, got {}", self.dtype_name())),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => Err(anyhow!("expected f32 tensor, got i32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => Err(anyhow!("expected i32 tensor, got {}", self.dtype_name())),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self.data {
+            Data::F32(v) => Ok(v),
+            _ => Err(anyhow!("expected f32 tensor")),
+        }
+    }
+
+    pub fn into_i32(self) -> Result<Vec<i32>> {
+        match self.data {
+            Data::I32(v) => Ok(v),
+            _ => Err(anyhow!("expected i32 tensor")),
+        }
+    }
+
+    /// Scalar f32 value (shape []).
+    pub fn scalar_value_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("expected scalar, shape {:?}", self.shape);
+        }
+        Ok(v[0])
+    }
+
+    // -- Literal marshalling (called on device-core threads only) ---------
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            Data::F32(v) => {
+                if self.shape.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v).reshape(&dims).context("reshape f32 literal")?
+                }
+            }
+            Data::I32(v) => {
+                if self.shape.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v).reshape(&dims).context("reshape i32 literal")?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Self { shape: dims, data: Data::F32(lit.to_vec()?) }),
+            xla::ElementType::S32 => Ok(Self { shape: dims, data: Data::I32(lit.to_vec()?) }),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+    }
+
+    #[test]
+    fn dtype_accessors() {
+        let t = HostTensor::i32(vec![2], vec![1, 2]).unwrap();
+        assert!(t.as_f32().is_err());
+        assert_eq!(t.as_i32().unwrap(), &[1, 2]);
+        assert_eq!(t.dtype_name(), "i32");
+    }
+
+    #[test]
+    fn scalar_value() {
+        let t = HostTensor::scalar_f32(4.5);
+        assert_eq!(t.scalar_value_f32().unwrap(), 4.5);
+        let bad = HostTensor::f32(vec![2], vec![1.0, 2.0]).unwrap();
+        assert!(bad.scalar_value_f32().is_err());
+    }
+
+    #[test]
+    fn zeros_helper() {
+        let t = HostTensor::zeros_f32(vec![3, 4]);
+        assert_eq!(t.len(), 12);
+        assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,16 @@
+//! Search: MCTS for the MuZero-style Sebulba agent.
+//!
+//! The paper: "we could reproduce results from MuZero (no Reanalyse) ...
+//! using Sebulba and a pure JAX implementation of MCTS". Here the search
+//! tree lives in Rust (the coordinator side), and the three network heads
+//! (representation / dynamics / prediction) are XLA programs executed on the
+//! actor core — so action selection stays batched on the device while tree
+//! bookkeeping stays on the host, preserving the workload shape that makes
+//! MuZero's actor cores the bottleneck (Fig 4c).
+
+pub mod mcts;
+pub mod muzero_actor;
+pub mod muzero_run;
+
+pub use mcts::{Mcts, MctsConfig, SearchResult};
+pub use muzero_run::{run_muzero, MuZeroRunConfig};

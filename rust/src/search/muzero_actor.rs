@@ -1,0 +1,211 @@
+//! The MuZero actor thread: MCTS-driven action selection on the actor core.
+//!
+//! Identical plumbing to the model-free actor (batched env, trajectory
+//! builder, sharding, queue) but action selection runs a full batched MCTS
+//! per step, with representation/dynamics/prediction as device programs.
+//! The trajectory's `behaviour_logits` field carries the MCTS visit
+//! distributions — the policy targets of the MuZero loss.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::actor::ShardBundle;
+use crate::coordinator::param_store::ParamStore;
+use crate::coordinator::queue::BoundedQueue;
+use crate::coordinator::sharder::shard;
+use crate::coordinator::stats::RunStats;
+use crate::coordinator::trajectory::TrajectoryBuilder;
+use crate::envs::{BatchedEnv, EnvFactory, WorkerPool};
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::DeviceHandle;
+use crate::util::rng::Xoshiro256;
+
+use super::mcts::{Mcts, MctsConfig, ModelEval};
+
+pub struct MuZeroActorConfig {
+    pub actor_id: usize,
+    pub batch: usize,
+    pub unroll: usize,
+    pub discount: f32,
+    pub num_shards: usize,
+    pub obs_shape: Vec<usize>,
+    pub mcts: MctsConfig,
+    /// Program names (from the manifest agent tag).
+    pub represent: String,
+    /// Fused dynamics+prediction program (one call per simulation).
+    pub dynpred: String,
+    pub predict: String,
+    pub seed: u64,
+}
+
+/// Device-backed ModelEval: the fused dynamics+prediction program — one
+/// device call per MCTS simulation for the whole batch (perf: §Perf L2-1).
+struct DeviceModel<'a> {
+    core: &'a DeviceHandle,
+    param_slot: &'a str,
+    dynpred: &'a str,
+    latent_dim: usize,
+    batch: usize,
+}
+
+impl ModelEval for DeviceModel<'_> {
+    fn dynamics_predict(
+        &mut self,
+        latents: &[f32],
+        actions: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let lat = HostTensor::f32(vec![self.batch, self.latent_dim], latents.to_vec())?;
+        let act = HostTensor::i32(vec![self.batch], actions.to_vec())?;
+        let mut outs = self
+            .core
+            .execute_cached(
+                self.dynpred,
+                vec![lat, act],
+                vec![(0, self.param_slot.to_string())],
+            )
+            .context("dynamics_predict")?;
+        // outputs: latent', reward, logits, value — take ownership, no copies
+        let values = outs.pop().unwrap().into_f32()?;
+        let logits = outs.pop().unwrap().into_f32()?;
+        let rewards = outs.pop().unwrap().into_f32()?;
+        let next_latents = outs.pop().unwrap().into_f32()?;
+        Ok((next_latents, rewards, logits, values))
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn spawn_muzero_actor(
+    cfg: MuZeroActorConfig,
+    core: DeviceHandle,
+    factory: Arc<EnvFactory>,
+    pool: Arc<WorkerPool>,
+    store: Arc<ParamStore>,
+    queue: Arc<BoundedQueue<ShardBundle>>,
+    stats: Arc<RunStats>,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<Result<()>> {
+    std::thread::Builder::new()
+        .name(format!("mz-actor-{}", cfg.actor_id))
+        .spawn(move || muzero_actor_main(cfg, core, factory, pool, store, queue, stats, stop))
+        .expect("spawn muzero actor")
+}
+
+#[allow(clippy::too_many_arguments)]
+fn muzero_actor_main(
+    cfg: MuZeroActorConfig,
+    core: DeviceHandle,
+    factory: Arc<EnvFactory>,
+    pool: Arc<WorkerPool>,
+    store: Arc<ParamStore>,
+    queue: Arc<BoundedQueue<ShardBundle>>,
+    stats: Arc<RunStats>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let b = cfg.batch;
+    let d: usize = cfg.obs_shape.iter().product();
+    let a = cfg.mcts.num_actions;
+    let l = cfg.mcts.latent_dim;
+    let mcts = Mcts::new(cfg.mcts.clone());
+    let mut rng = Xoshiro256::from_stream(cfg.seed, 0x3D5 + cfg.actor_id as u64);
+
+    let env = BatchedEnv::new(&factory, b, pool)?;
+    let mut obs = vec![0.0f32; b * d];
+    env.reset(&mut obs);
+
+    let mut builder = TrajectoryBuilder::new(cfg.unroll, b, &cfg.obs_shape, a);
+    let mut rewards = vec![0.0f32; b];
+    let mut dones = vec![false; b];
+    let mut discounts = vec![0.0f32; b];
+    let mut episode_reward = vec![0.0f64; b];
+
+    // device-resident parameter cache (§Perf L3-1), slot per actor thread
+    let param_slot = format!("mz-params#{}", cfg.actor_id);
+    let mut cached_version = u64::MAX;
+
+    while !stop.load(Ordering::Relaxed) {
+        for _t in 0..cfg.unroll {
+            if stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            let snap = store.latest();
+            if snap.version != cached_version {
+                core.cache(
+                    &param_slot,
+                    HostTensor::f32(vec![snap.params.len()], snap.params.clone())?,
+                )?;
+                cached_version = snap.version;
+            }
+
+            // root inference: represent + predict (cached params)
+            let t0 = Instant::now();
+            let obs_t = HostTensor::f32(vec![b, d], obs.clone())?;
+            let mut outs = core.execute_cached(
+                &cfg.represent,
+                vec![obs_t],
+                vec![(0, param_slot.clone())],
+            )?;
+            let root_latents = outs.swap_remove(0).into_f32()?;
+            let lat_t = HostTensor::f32(vec![b, l], root_latents.clone())?;
+            let mut outs = core.execute_cached(
+                &cfg.predict,
+                vec![lat_t],
+                vec![(0, param_slot.clone())],
+            )?;
+            let root_values = outs.swap_remove(1).into_f32()?;
+            let root_logits = outs.swap_remove(0).into_f32()?;
+
+            // batched tree search (device calls inside)
+            let mut model = DeviceModel {
+                core: &core,
+                param_slot: &param_slot,
+                dynpred: &cfg.dynpred,
+                latent_dim: l,
+                batch: b,
+            };
+            let result =
+                mcts.search(&root_latents, &root_logits, &root_values, &mut model, &mut rng)?;
+            stats.inference_latency.record(t0.elapsed());
+
+            // env step
+            let t1 = Instant::now();
+            let prev_obs = obs.clone();
+            env.step(&result.actions, &mut obs, &mut rewards, &mut dones);
+            stats.env_step_latency.record(t1.elapsed());
+
+            let mut ended = 0u64;
+            let mut ended_reward = 0.0f64;
+            for i in 0..b {
+                episode_reward[i] += rewards[i] as f64;
+                if dones[i] {
+                    ended += 1;
+                    ended_reward += episode_reward[i];
+                    episode_reward[i] = 0.0;
+                    discounts[i] = 0.0;
+                } else {
+                    discounts[i] = cfg.discount;
+                }
+            }
+            stats.record_episodes(ended, ended_reward);
+            builder.push_step(
+                &prev_obs,
+                &result.actions,
+                &result.visit_policies, // policy targets ride the logits slot
+                &rewards,
+                &discounts,
+            )?;
+        }
+
+        let version = store.version();
+        let traj = builder.finish(&obs, version, cfg.actor_id)?;
+        stats.env_frames.add(traj.frames() as u64);
+        stats.trajectories.fetch_add(1, Ordering::Relaxed);
+        let shards = shard(&traj, cfg.num_shards)?;
+        if queue.push(shards).is_err() {
+            return Ok(());
+        }
+    }
+    Ok(())
+}

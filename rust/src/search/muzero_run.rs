@@ -1,0 +1,257 @@
+//! Top-level MuZero-Sebulba run: like `Sebulba::run`, with MCTS actors.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::actor::ShardBundle;
+use crate::coordinator::collective::GradientBus;
+use crate::coordinator::learner::{learner_main, LearnerConfig, LearnerHandles};
+use crate::coordinator::param_store::ParamStore;
+use crate::coordinator::queue::BoundedQueue;
+use crate::coordinator::sebulba::RunReport;
+use crate::coordinator::stats::RunStats;
+use crate::envs::{make_factory, WorkerPool};
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::{DeviceHandle, Pod};
+
+use super::mcts::MctsConfig;
+use super::muzero_actor::{spawn_muzero_actor, MuZeroActorConfig};
+
+#[derive(Clone, Debug)]
+pub struct MuZeroRunConfig {
+    /// Manifest agent tag ("mz_catch").
+    pub agent: String,
+    pub env_kind: &'static str,
+    pub actor_cores: usize,
+    pub learner_cores: usize,
+    pub threads_per_actor_core: usize,
+    pub num_simulations: usize,
+    pub discount: f32,
+    pub queue_capacity: usize,
+    pub env_workers: usize,
+    pub replicas: usize,
+    pub total_updates: u64,
+    pub seed: u64,
+}
+
+impl Default for MuZeroRunConfig {
+    fn default() -> Self {
+        Self {
+            agent: "mz_catch".into(),
+            env_kind: "catch",
+            actor_cores: 2,
+            learner_cores: 2,
+            threads_per_actor_core: 1,
+            num_simulations: 16,
+            discount: 0.997,
+            queue_capacity: 4,
+            env_workers: 2,
+            replicas: 1,
+            total_updates: 20,
+            seed: 11,
+        }
+    }
+}
+
+impl MuZeroRunConfig {
+    pub fn cores_per_replica(&self) -> usize {
+        self.actor_cores + self.learner_cores
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.cores_per_replica() * self.replicas
+    }
+}
+
+pub fn run_muzero(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<RunReport> {
+    let agent = pod.manifest.agent(&cfg.agent)?.clone();
+    let batch = agent.extra_usize("batch")?;
+    let unroll = agent.extra_usize("unroll")?;
+    let latent = agent.extra_usize("latent")?;
+    let num_actions = agent.num_actions;
+    let obs_shape = agent.obs_shape.clone();
+    let shard_b = batch / cfg.learner_cores;
+
+    let represent = format!("{}_represent_b{batch}", cfg.agent);
+    let dynpred = format!("{}_dynpred_b{batch}", cfg.agent);
+    let predict = format!("{}_predict_b{batch}", cfg.agent);
+    let grad = format!("{}_grad_t{unroll}_b{shard_b}", cfg.agent);
+    let apply = format!("{}_apply", cfg.agent);
+    let init = format!("{}_init", cfg.agent);
+
+    let n_per = cfg.cores_per_replica();
+    anyhow::ensure!(pod.n_cores() >= cfg.total_cores(), "pod too small");
+    anyhow::ensure!(batch % cfg.learner_cores == 0, "batch must divide learner cores");
+
+    let mut actor_core_ids = Vec::new();
+    let mut learner_core_ids = Vec::new();
+    let mut learner0_ids = Vec::new();
+    for r in 0..cfg.replicas {
+        let base = r * n_per;
+        actor_core_ids.extend(base..base + cfg.actor_cores);
+        learner_core_ids
+            .extend(base + cfg.actor_cores..base + cfg.actor_cores + cfg.learner_cores);
+        learner0_ids.push(base + cfg.actor_cores);
+    }
+    pod.load_programs(
+        &[represent.as_str(), dynpred.as_str(), predict.as_str()],
+        &actor_core_ids,
+    )?;
+    pod.load_program(&grad, &learner_core_ids)?;
+    pod.load_program(&apply, &learner0_ids)?;
+    pod.load_program(&init, &[learner0_ids[0]])?;
+
+    let outs = pod
+        .core(learner0_ids[0])?
+        .execute(&init, vec![HostTensor::scalar_i32(cfg.seed as i32)])
+        .context("muzero init")?;
+    let params0 = outs[0].clone().into_f32()?;
+    let opt0 = outs[1].clone().into_f32()?;
+
+    let stats = Arc::new(RunStats::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let bus = Arc::new(GradientBus::new(cfg.replicas));
+    let factory: Arc<crate::envs::EnvFactory> = Arc::new(make_factory(cfg.env_kind, cfg.seed));
+
+    let mut actor_joins = Vec::new();
+    let mut learner_joins = Vec::new();
+    let mut queues = Vec::new();
+    let t_start = Instant::now();
+
+    for r in 0..cfg.replicas {
+        let base = r * n_per;
+        let store = Arc::new(ParamStore::new(params0.clone()));
+        let queue = Arc::new(BoundedQueue::<ShardBundle>::new(cfg.queue_capacity));
+        queues.push(queue.clone());
+        let pool = WorkerPool::new(cfg.env_workers);
+
+        for ac in 0..cfg.actor_cores {
+            let core = pod.core(base + ac)?;
+            for th in 0..cfg.threads_per_actor_core {
+                let actor_id = (r * cfg.actor_cores + ac) * cfg.threads_per_actor_core + th;
+                let mcfg = MuZeroActorConfig {
+                    actor_id,
+                    batch,
+                    unroll,
+                    discount: cfg.discount,
+                    num_shards: cfg.learner_cores,
+                    obs_shape: obs_shape.clone(),
+                    mcts: MctsConfig {
+                        num_actions,
+                        latent_dim: latent,
+                        num_simulations: cfg.num_simulations,
+                        discount: cfg.discount,
+                        ..Default::default()
+                    },
+                    represent: represent.clone(),
+                    dynpred: dynpred.clone(),
+                    predict: predict.clone(),
+                    seed: cfg.seed,
+                };
+                actor_joins.push(spawn_muzero_actor(
+                    mcfg,
+                    core.clone(),
+                    factory.clone(),
+                    pool.clone(),
+                    store.clone(),
+                    queue.clone(),
+                    stats.clone(),
+                    stop.clone(),
+                ));
+            }
+        }
+
+        let lcfg = LearnerConfig {
+            replica_id: r,
+            grad_program: grad.clone(),
+            apply_program: apply.clone(),
+            shards_per_round: cfg.learner_cores,
+            total_updates: cfg.total_updates,
+        };
+        let cores: Vec<DeviceHandle> = (0..cfg.learner_cores)
+            .map(|i| pod.core(base + cfg.actor_cores + i))
+            .collect::<Result<_>>()?;
+        let handles = LearnerHandles {
+            cores,
+            store: store.clone(),
+            queue: queue.clone(),
+            stats: stats.clone(),
+            bus: bus.clone(),
+        };
+        let opt = opt0.clone();
+        learner_joins.push(
+            std::thread::Builder::new()
+                .name(format!("mz-learner-{r}"))
+                .spawn(move || learner_main(&lcfg, &handles, opt))
+                .expect("spawn learner"),
+        );
+    }
+
+    let mut final_params = params0;
+    let mut final_opt_state = opt0.clone();
+    for (r, j) in learner_joins.into_iter().enumerate() {
+        match j.join() {
+            Ok(Ok((params, opt))) => {
+                if r == 0 {
+                    final_params = params;
+                    final_opt_state = opt;
+                }
+            }
+            Ok(Err(e)) => {
+                stop.store(true, Ordering::Relaxed);
+                for q in &queues {
+                    q.shutdown();
+                }
+                return Err(e.context(format!("muzero learner {r}")));
+            }
+            Err(_) => anyhow::bail!("muzero learner {r} panicked"),
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    for q in &queues {
+        q.shutdown();
+    }
+    for j in actor_joins {
+        match j.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(e.context("muzero actor")),
+            Err(_) => anyhow::bail!("muzero actor panicked"),
+        }
+    }
+    bus.shutdown();
+
+    let elapsed = t_start.elapsed().as_secs_f64();
+    let mut critical: f64 = 1e-12;
+    for cid in 0..cfg.total_cores() {
+        critical = critical.max(pod.core(cid)?.busy_seconds());
+    }
+    let mut actor_busy = 0.0;
+    for &cid in &actor_core_ids {
+        actor_busy += pod.core(cid)?.busy_seconds();
+    }
+    let mut learner_busy = 0.0;
+    for &cid in &learner_core_ids {
+        learner_busy += pod.core(cid)?.busy_seconds();
+    }
+    let frames = stats.env_frames.frames();
+    Ok(RunReport {
+        frames,
+        updates: stats.updates.load(Ordering::Relaxed),
+        elapsed,
+        fps: frames as f64 / elapsed.max(1e-12),
+        projected_fps: frames as f64 / critical,
+        mean_staleness: stats.mean_staleness(),
+        mean_episode_reward: stats.mean_episode_reward(),
+        episodes: stats.episodes.load(Ordering::Relaxed),
+        last_loss: stats.last_loss(),
+        actor_busy_seconds: actor_busy,
+        learner_busy_seconds: learner_busy,
+        queue_push_block_seconds: queues.iter().map(|q| q.push_block_seconds()).sum(),
+        queue_pop_block_seconds: queues.iter().map(|q| q.pop_block_seconds()).sum(),
+        final_params,
+        final_opt_state,
+    })
+}

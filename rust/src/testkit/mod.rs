@@ -1,0 +1,140 @@
+//! Property-testing mini-framework (the vendored crate set has no proptest).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` generated inputs;
+//! on failure it retries with simpler inputs from the same generator
+//! (shrink-lite: generators are size-parameterised, and the runner replays
+//! at decreasing sizes) and reports the seed so the case can be replayed
+//! deterministically.
+//!
+//! ```no_run
+//! use podracer::testkit::{check, Gen};
+//! check("sum is commutative", 100, |g| (g.usize(0, 100), g.usize(0, 100)),
+//!       |&(a, b)| if a + b == b + a { Ok(()) } else { Err("nope".into()) });
+//! ```
+
+use crate::util::rng::Xoshiro256;
+
+/// Size-aware generator context handed to generator closures.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Size hint in [0.0, 1.0]; generators should scale ranges by it so the
+    /// shrink pass can retry failures with smaller inputs.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Self {
+        Self { rng: Xoshiro256::new(seed), size }
+    }
+
+    /// Integer in [lo, hi] (inclusive), scaled toward `lo` at small sizes.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        lo + self.rng.next_below(span as u32 + 1) as usize
+    }
+
+    pub fn i32(&mut self, lo: i32, hi: i32) -> i32 {
+        assert!(hi >= lo);
+        let span = ((hi - lo) as f64 * self.size).round() as u32;
+        lo + self.rng.next_below(span + 1) as i32
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * (self.size as f32) * self.rng.next_f32()
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.size * self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32(lo, hi)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.next_below(xs.len() as u32) as usize]
+    }
+}
+
+/// Run a property over `cases` generated inputs. Panics with a replayable
+/// seed + the failure message on the smallest failing size found.
+pub fn check<T, G, P>(name: &str, cases: u64, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Gen) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let base_seed = match std::env::var("PODRACER_PROPTEST_SEED") {
+        Ok(s) => s.parse().unwrap_or(0xC0FFEE),
+        Err(_) => 0xC0FFEE,
+    };
+    for case in 0..cases {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen::new(seed, 1.0);
+        let input = gen(&mut g);
+        if let Err(msg) = prop(&input) {
+            // shrink-lite: replay the same seed at smaller sizes; report the
+            // smallest size that still fails.
+            let mut smallest = (1.0, format!("{input:?}"), msg);
+            for &size in &[0.5, 0.25, 0.1, 0.02] {
+                let mut g = Gen::new(seed, size);
+                let small = gen(&mut g);
+                if let Err(m) = prop(&small) {
+                    smallest = (size, format!("{small:?}"), m);
+                }
+            }
+            panic!(
+                "property {name:?} failed (seed={seed:#x}, case={case}, size={}):\n  input: {}\n  error: {}\n  replay with PODRACER_PROPTEST_SEED={base_seed}",
+                smallest.0, smallest.1, smallest.2
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", 50, |g| (g.usize(0, 1000), g.usize(0, 1000)), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always fails")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |g| g.usize(0, 10), |_| Err("always fails".into()));
+    }
+
+    #[test]
+    fn generator_respects_bounds() {
+        let mut g = Gen::new(1, 1.0);
+        for _ in 0..1000 {
+            let v = g.usize(3, 17);
+            assert!((3..=17).contains(&v));
+            let f = g.f32(-2.0, 2.0);
+            assert!((-2.0..=2.0).contains(&f));
+            let i = g.i32(-5, 5);
+            assert!((-5..=5).contains(&i));
+        }
+    }
+
+    #[test]
+    fn small_size_shrinks_ranges() {
+        let mut g = Gen::new(2, 0.02);
+        for _ in 0..100 {
+            assert!(g.usize(0, 1000) <= 20);
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Shared substrates: JSON, PRNG, CLI parsing, logging, small math helpers.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod math;
+pub mod rng;

@@ -1,0 +1,287 @@
+//! Deterministic PRNG substrate (no `rand` crate in the vendored set).
+//!
+//! `SplitMix64` seeds streams; `Xoshiro256` (xoshiro256++) is the workhorse
+//! generator. Distribution helpers cover everything the coordinator needs:
+//! uniform, normal (Box–Muller), gamma (Marsaglia–Tsang) and Dirichlet
+//! (for MCTS root exploration noise).
+//!
+//! Every thread in the system derives its stream as
+//! `Xoshiro256::from_stream(run_seed, stream_id)`, so whole runs are
+//! reproducible from a single seed (see DESIGN.md §7).
+
+/// SplitMix64: tiny, full-period seeder (Steele et al. 2014).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ (Blackman & Vigna 2019): fast, high-quality 64-bit PRNG.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed via SplitMix64 (the canonical initialisation).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()] }
+    }
+
+    /// Derive an independent stream: hash (seed, stream) through SplitMix64.
+    pub fn from_stream(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let a = sm.next_u64();
+        let mut sm2 = SplitMix64::new(a ^ stream.wrapping_mul(0xA24BAED4963EE407));
+        Self { s: [sm2.next_u64(), sm2.next_u64(), sm2.next_u64(), sm2.next_u64()] }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire).
+    #[inline]
+    pub fn next_below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64() as u32 as u64;
+        let mut m = x.wrapping_mul(n as u64);
+        let mut l = m as u32;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64() as u32 as u64;
+                m = x.wrapping_mul(n as u64);
+                l = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// i32 seed for an XLA program invocation.
+    #[inline]
+    pub fn next_program_seed(&mut self) -> i32 {
+        (self.next_u64() & 0x7FFF_FFFF) as i32
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn next_normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang (2000); shape > 0.
+    pub fn next_gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.next_gamma(shape + 1.0);
+            let u = self.next_f64().max(1e-300);
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.next_normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v;
+            }
+            if u > 1e-300 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Symmetric Dirichlet(alpha) sample of dimension `n`.
+    pub fn next_dirichlet(&mut self, alpha: f64, n: usize) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..n).map(|_| self.next_gamma(alpha)).collect();
+        let sum: f64 = g.iter().sum();
+        if sum > 0.0 {
+            for v in &mut g {
+                *v /= sum;
+            }
+        } else {
+            for v in &mut g {
+                *v = 1.0 / n as f64;
+            }
+        }
+        g
+    }
+
+    /// Sample an index from unnormalised non-negative weights.
+    pub fn next_weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            return self.next_below(weights.len() as u32) as usize;
+        }
+        let mut u = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_deterministic() {
+        let mut a = SplitMix64::new(7);
+        let mut b = SplitMix64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn xoshiro_streams_differ() {
+        let mut a = Xoshiro256::from_stream(1, 0);
+        let mut b = Xoshiro256::from_stream(1, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2, "streams should be effectively independent");
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Xoshiro256::new(3);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut r = Xoshiro256::new(4);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = r.next_below(7);
+            assert!(v < 7);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256::new(5);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.next_normal();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Xoshiro256::new(6);
+        for &shape in &[0.3, 1.0, 4.5] {
+            let n = 30_000;
+            let mut sum = 0.0;
+            for _ in 0..n {
+                let g = r.next_gamma(shape);
+                assert!(g >= 0.0);
+                sum += g;
+            }
+            let mean = sum / n as f64;
+            assert!(
+                (mean - shape).abs() < 0.1 * shape.max(0.5),
+                "shape {shape}: mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Xoshiro256::new(7);
+        let d = r.next_dirichlet(0.3, 5);
+        assert_eq!(d.len(), 5);
+        let sum: f64 = d.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        assert!(d.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn weighted_sampling_distribution() {
+        let mut r = Xoshiro256::new(8);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[r.next_weighted(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn program_seed_non_negative() {
+        let mut r = Xoshiro256::new(9);
+        for _ in 0..1000 {
+            assert!(r.next_program_seed() >= 0);
+        }
+    }
+}

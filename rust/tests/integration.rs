@@ -1,0 +1,139 @@
+//! Cross-module integration: MuZero end-to-end, envs through the batched
+//! pipeline, and coordinator pieces composed without a device.
+
+use podracer::coordinator::config::SebulbaConfig;
+use podracer::coordinator::queue::BoundedQueue;
+use podracer::coordinator::sharder::{shard, unshard};
+use podracer::coordinator::trajectory::TrajectoryBuilder;
+use podracer::envs::{make_factory, BatchedEnv, WorkerPool};
+use podracer::runtime::Pod;
+use podracer::search::{run_muzero, MuZeroRunConfig};
+use std::sync::Arc;
+
+fn artifacts() -> std::path::PathBuf {
+    let dir = podracer::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    dir
+}
+
+#[test]
+fn muzero_end_to_end_smoke() {
+    let cfg = MuZeroRunConfig {
+        actor_cores: 1,
+        learner_cores: 1,
+        num_simulations: 6,
+        total_updates: 3,
+        ..Default::default()
+    };
+    let mut pod = Pod::new(&artifacts(), cfg.total_cores()).unwrap();
+    let report = run_muzero(&mut pod, &cfg).unwrap();
+    assert_eq!(report.updates, 3);
+    assert!(report.frames > 0);
+    assert!(report.last_loss.is_finite());
+    assert!(report.final_params.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn muzero_two_learner_cores() {
+    let cfg = MuZeroRunConfig {
+        actor_cores: 1,
+        learner_cores: 2, // shard batch 8 (mz_catch_grad_t16_b8)
+        num_simulations: 4,
+        total_updates: 2,
+        ..Default::default()
+    };
+    let mut pod = Pod::new(&artifacts(), cfg.total_cores()).unwrap();
+    let report = run_muzero(&mut pod, &cfg).unwrap();
+    assert_eq!(report.updates, 2);
+}
+
+#[test]
+fn actor_pipeline_without_device() {
+    // env -> builder -> shard -> queue -> unshard: the full host-side data
+    // path, checked for content preservation.
+    let factory = make_factory("catch", 7);
+    let pool = WorkerPool::new(2);
+    let env = BatchedEnv::new(&factory, 4, pool).unwrap();
+    let (t_len, b, d, a) = (5, 4, 50, 3);
+
+    let mut obs = vec![0.0; b * d];
+    env.reset(&mut obs);
+    let mut builder = TrajectoryBuilder::new(t_len, b, &[d], a);
+    let mut rewards = vec![0.0; b];
+    let mut dones = vec![false; b];
+    for step in 0..t_len {
+        let actions: Vec<i32> = (0..b as i32).map(|i| (i + step as i32) % 3).collect();
+        let prev = obs.clone();
+        env.step(&actions, &mut obs, &mut rewards, &mut dones);
+        let discounts: Vec<f32> =
+            dones.iter().map(|&done| if done { 0.0 } else { 0.99 }).collect();
+        let logits = vec![0.1; b * a];
+        builder.push_step(&prev, &actions, &logits, &rewards, &discounts).unwrap();
+    }
+    let traj = builder.finish(&obs, 1, 0).unwrap();
+
+    let queue = Arc::new(BoundedQueue::new(2));
+    queue.push(shard(&traj, 2).unwrap()).unwrap();
+    let bundle = queue.pop().unwrap();
+    let back = unshard(&bundle).unwrap();
+    assert_eq!(back.obs, traj.obs);
+    assert_eq!(back.actions, traj.actions);
+    assert_eq!(back.rewards, traj.rewards);
+}
+
+#[test]
+fn config_program_names_resolve_in_manifest() {
+    // Every program name the default configs derive must exist in the
+    // manifest — catches config/aot drift.
+    let m = podracer::runtime::Manifest::load(&artifacts()).unwrap();
+    let cfg = SebulbaConfig::default();
+    for name in [cfg.infer_program(), cfg.grad_program(), cfg.apply_program(), cfg.init_program()] {
+        assert!(m.programs.contains_key(&name), "config wants missing program {name}");
+    }
+    // fig4b geometries
+    for b in [32, 64, 96, 128] {
+        let cfg = SebulbaConfig {
+            agent: "seb_atari".into(),
+            actor_batch: b,
+            unroll: 60,
+            learner_cores: 4,
+            ..Default::default()
+        };
+        for name in [cfg.infer_program(), cfg.grad_program()] {
+            assert!(m.programs.contains_key(&name), "fig4b needs missing program {name}");
+        }
+    }
+}
+
+#[test]
+fn all_envs_step_through_batched_pipeline() {
+    for kind in ["catch", "gridworld", "cartpole", "chain", "atari_like"] {
+        let factory = make_factory(
+            match kind {
+                "catch" => "catch",
+                "gridworld" => "gridworld",
+                "cartpole" => "cartpole",
+                "chain" => "chain",
+                _ => "atari_like",
+            },
+            3,
+        );
+        let pool = WorkerPool::new(2);
+        let env = BatchedEnv::new(&factory, 3, pool).unwrap();
+        let d = env.obs_dim();
+        let mut obs = vec![0.0; 3 * d];
+        env.reset(&mut obs);
+        let mut rewards = vec![0.0; 3];
+        let mut dones = vec![false; 3];
+        for i in 0..20 {
+            let actions = vec![(i % env.num_actions()) as i32; 3];
+            env.step(&actions, &mut obs, &mut rewards, &mut dones);
+        }
+        assert!(
+            obs.iter().all(|x| x.is_finite()),
+            "{kind} produced non-finite observations"
+        );
+    }
+}

@@ -1,0 +1,275 @@
+//! Property tests over coordinator invariants (testkit — see DESIGN.md §1
+//! for the proptest substitution; python uses real hypothesis).
+
+use podracer::coordinator::collective::all_reduce_mean;
+use podracer::coordinator::queue::BoundedQueue;
+use podracer::coordinator::sharder::{shard, unshard};
+use podracer::coordinator::trajectory::{Trajectory, TrajectoryBuilder};
+use podracer::envs::{make_factory, BatchedEnv, WorkerPool};
+use podracer::testkit::{check, Gen};
+use podracer::util::math::softmax;
+use podracer::util::rng::Xoshiro256;
+use std::sync::Arc;
+
+fn random_traj(g: &mut Gen) -> Trajectory {
+    let t = g.usize(1, 8).max(1);
+    let divisors = [1usize, 2, 3, 4, 6];
+    let b_base = *g.pick(&divisors);
+    let b = b_base * g.usize(1, 4).max(1);
+    let d = g.usize(1, 5).max(1);
+    let a = g.usize(2, 4).max(2);
+    let mut builder = TrajectoryBuilder::new(t, b, &[d], a);
+    for _ in 0..t {
+        let obs = g.vec_f32(b * d, -2.0, 2.0);
+        let actions: Vec<i32> = (0..b).map(|_| g.i32(0, a as i32 - 1)).collect();
+        let logits = g.vec_f32(b * a, -3.0, 3.0);
+        let rewards = g.vec_f32(b, -1.0, 1.0);
+        let discounts: Vec<f32> =
+            (0..b).map(|_| if g.bool() { 0.99 } else { 0.0 }).collect();
+        builder.push_step(&obs, &actions, &logits, &rewards, &discounts).unwrap();
+    }
+    let final_obs = g.vec_f32(b * d, -2.0, 2.0);
+    builder.finish(&final_obs, 0, 0).unwrap()
+}
+
+#[test]
+fn prop_shard_unshard_roundtrip() {
+    check("shard/unshard roundtrip", 60, random_traj, |traj| {
+        // find all valid shard counts and verify each round-trips
+        for n in 1..=traj.batch {
+            if traj.batch % n != 0 {
+                continue;
+            }
+            let shards = shard(traj, n).map_err(|e| e.to_string())?;
+            if shards.len() != n {
+                return Err(format!("expected {n} shards, got {}", shards.len()));
+            }
+            let back = unshard(&shards).map_err(|e| e.to_string())?;
+            if back.obs != traj.obs
+                || back.actions != traj.actions
+                || back.rewards != traj.rewards
+                || back.discounts != traj.discounts
+                || back.behaviour_logits != traj.behaviour_logits
+            {
+                return Err(format!("roundtrip mismatch at n={n}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shard_preserves_frames_and_rewards() {
+    check("shard preserves totals", 60, random_traj, |traj| {
+        let n = (1..=traj.batch).rev().find(|n| traj.batch % n == 0).unwrap();
+        let shards = shard(traj, n).map_err(|e| e.to_string())?;
+        let total_frames: usize = shards.iter().map(|s| s.frames()).sum();
+        if total_frames != traj.frames() {
+            return Err("frame count changed".into());
+        }
+        let sum: f32 = shards.iter().flat_map(|s| s.rewards.iter()).sum();
+        let want: f32 = traj.rewards.iter().sum();
+        if (sum - want).abs() > 1e-3 {
+            return Err(format!("reward mass changed {sum} vs {want}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_reduce_equals_scalar_mean() {
+    check(
+        "all_reduce == per-element mean",
+        80,
+        |g| {
+            let n = g.usize(1, 9).max(1);
+            let len = g.usize(1, 40).max(1);
+            let bufs: Vec<Vec<f32>> = (0..n).map(|_| g.vec_f32(len, -10.0, 10.0)).collect();
+            bufs
+        },
+        |bufs| {
+            let mut work = bufs.clone();
+            all_reduce_mean(&mut work).map_err(|e| e.to_string())?;
+            let n = bufs.len();
+            let len = bufs[0].len();
+            for k in 0..len {
+                let want: f64 =
+                    bufs.iter().map(|b| b[k] as f64).sum::<f64>() / n as f64;
+                let got = work[0][k] as f64;
+                if (got - want).abs() > 1e-4 * want.abs().max(1.0) {
+                    return Err(format!("element {k}: {got} != {want}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_all_reduce_is_deterministic() {
+    check(
+        "all_reduce deterministic",
+        40,
+        |g| {
+            let n = g.usize(2, 8).max(2);
+            let len = g.usize(1, 16).max(1);
+            (0..n).map(|_| g.vec_f32(len, -1.0, 1.0)).collect::<Vec<_>>()
+        },
+        |bufs| {
+            let mut a = bufs.clone();
+            let mut b = bufs.clone();
+            all_reduce_mean(&mut a).map_err(|e| e.to_string())?;
+            all_reduce_mean(&mut b).map_err(|e| e.to_string())?;
+            if a[0] != b[0] {
+                return Err("two identical reductions differ bit-wise".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_queue_never_exceeds_capacity_and_loses_nothing() {
+    check(
+        "queue capacity + conservation",
+        25,
+        |g| {
+            let cap = g.usize(1, 6).max(1);
+            let items = g.usize(1, 60).max(1);
+            let producers = g.usize(1, 3).max(1);
+            (cap, items, producers)
+        },
+        |&(cap, items, producers)| {
+            let q = Arc::new(BoundedQueue::<usize>::new(cap));
+            let mut joins = Vec::new();
+            for p in 0..producers {
+                let q = q.clone();
+                joins.push(std::thread::spawn(move || {
+                    for i in 0..items {
+                        q.push(p * 10_000 + i).unwrap();
+                    }
+                }));
+            }
+            let mut seen = Vec::new();
+            for _ in 0..items * producers {
+                let v = q.pop().map_err(|_| "early shutdown")?;
+                if q.len() > cap {
+                    return Err(format!("queue depth {} > capacity {cap}", q.len()));
+                }
+                seen.push(v);
+            }
+            for j in joins {
+                j.join().map_err(|_| "producer panicked")?;
+            }
+            seen.sort_unstable();
+            seen.dedup();
+            if seen.len() != items * producers {
+                return Err("items lost or duplicated".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batched_env_equals_serial_stepping() {
+    check(
+        "batched == serial envs",
+        10,
+        |g| {
+            let batch = g.usize(1, 6).max(1);
+            let steps = g.usize(1, 25).max(1);
+            let seed = g.usize(0, 10_000) as u64;
+            let workers = g.usize(1, 4).max(1);
+            (batch, steps, seed, workers)
+        },
+        |&(batch, steps, seed, workers)| {
+            let factory = make_factory("catch", seed);
+            let pool = WorkerPool::new(workers);
+            let be = BatchedEnv::new(&factory, batch, pool).map_err(|e| e.to_string())?;
+            let mut serial: Vec<_> = (0..batch).map(|i| factory(i)).collect();
+            let d = be.obs_dim();
+
+            let mut obs_b = vec![0.0; batch * d];
+            be.reset(&mut obs_b);
+            let mut obs_s = vec![0.0; batch * d];
+            for (i, env) in serial.iter_mut().enumerate() {
+                env.reset(&mut obs_s[i * d..(i + 1) * d]);
+            }
+            if obs_b != obs_s {
+                return Err("reset observations differ".into());
+            }
+            let mut rng = Xoshiro256::new(seed ^ 0x5A5A);
+            let mut rewards = vec![0.0; batch];
+            let mut dones = vec![false; batch];
+            for step in 0..steps {
+                let actions: Vec<i32> =
+                    (0..batch).map(|_| rng.next_below(3) as i32).collect();
+                be.step(&actions, &mut obs_b, &mut rewards, &mut dones);
+                for (i, env) in serial.iter_mut().enumerate() {
+                    let r = env.step(actions[i] as usize, &mut obs_s[i * d..(i + 1) * d]);
+                    if (r.reward - rewards[i]).abs() > 0.0 || r.done != dones[i] {
+                        return Err(format!("step {step} env {i}: transition differs"));
+                    }
+                }
+                if obs_b != obs_s {
+                    return Err(format!("step {step}: observations differ"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_softmax_is_distribution() {
+    check(
+        "softmax sums to 1 and is monotone",
+        100,
+        |g| {
+            let n = g.usize(1, 10).max(1);
+            g.vec_f32(n, -30.0, 30.0)
+        },
+        |logits| {
+            let p = softmax(logits);
+            let sum: f32 = p.iter().sum();
+            if (sum - 1.0).abs() > 1e-4 {
+                return Err(format!("sum {sum}"));
+            }
+            if p.iter().any(|&x| !(0.0..=1.0).contains(&x)) {
+                return Err("probability out of range".into());
+            }
+            // argmax preservation
+            let am_l = podracer::util::math::argmax(logits);
+            let am_p = podracer::util::math::argmax(&p);
+            if am_l != am_p {
+                return Err("softmax moved the argmax".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rng_streams_are_reproducible() {
+    check(
+        "rng stream reproducibility",
+        50,
+        |g| (g.usize(0, 1_000_000) as u64, g.usize(0, 64) as u64),
+        |&(seed, stream)| {
+            let mut a = Xoshiro256::from_stream(seed, stream);
+            let mut b = Xoshiro256::from_stream(seed, stream);
+            for _ in 0..100 {
+                if a.next_u64() != b.next_u64() {
+                    return Err("same stream diverged".into());
+                }
+            }
+            let mut c = Xoshiro256::from_stream(seed, stream + 1);
+            let collisions = (0..64).filter(|_| b.next_u64() == c.next_u64()).count();
+            if collisions > 2 {
+                return Err(format!("{collisions} collisions between streams"));
+            }
+            Ok(())
+        },
+    );
+}

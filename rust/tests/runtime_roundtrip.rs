@@ -1,0 +1,192 @@
+//! Runtime integration: artifacts load, compile and execute correctly from
+//! device-core threads, and the manifest matches what actually runs.
+//!
+//! Requires `make artifacts` (panics with a clear message otherwise).
+
+use podracer::runtime::{HostTensor, Manifest, Pod};
+
+fn artifacts() -> std::path::PathBuf {
+    let dir = podracer::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    dir
+}
+
+#[test]
+fn manifest_loads_and_lists_agents() {
+    let m = Manifest::load(&artifacts()).unwrap();
+    for agent in ["seb_catch", "seb_atari", "anakin_catch", "anakin_grid", "mz_catch"] {
+        assert!(m.agents.contains_key(agent), "missing agent {agent}");
+    }
+    // every program's file exists on disk
+    for (name, p) in &m.programs {
+        assert!(p.file.exists(), "artifact file missing for {name}");
+        assert!(!p.outputs.is_empty(), "{name} has no outputs");
+    }
+}
+
+#[test]
+fn init_program_respects_manifest_shapes() {
+    let mut pod = Pod::new(&artifacts(), 1).unwrap();
+    pod.load_program("seb_catch_init", &[0]).unwrap();
+    let outs = pod
+        .execute_checked(0, "seb_catch_init", vec![HostTensor::scalar_i32(3)])
+        .unwrap();
+    let agent = pod.manifest.agent("seb_catch").unwrap();
+    assert_eq!(outs[0].shape, vec![agent.param_size]);
+    assert_eq!(outs[1].shape, vec![agent.opt_size]);
+    // params should be initialised (non-zero weights somewhere)
+    let params = outs[0].as_f32().unwrap();
+    assert!(params.iter().any(|&x| x != 0.0));
+}
+
+#[test]
+fn init_is_deterministic_in_seed() {
+    let mut pod = Pod::new(&artifacts(), 2).unwrap();
+    pod.load_program("seb_catch_init", &[0, 1]).unwrap();
+    let a = pod
+        .core(0)
+        .unwrap()
+        .execute("seb_catch_init", vec![HostTensor::scalar_i32(5)])
+        .unwrap();
+    let b = pod
+        .core(1)
+        .unwrap()
+        .execute("seb_catch_init", vec![HostTensor::scalar_i32(5)])
+        .unwrap();
+    assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap(), "same seed, different cores");
+    let c = pod
+        .core(0)
+        .unwrap()
+        .execute("seb_catch_init", vec![HostTensor::scalar_i32(6)])
+        .unwrap();
+    assert_ne!(a[0].as_f32().unwrap(), c[0].as_f32().unwrap(), "different seed");
+}
+
+#[test]
+fn infer_program_full_contract() {
+    let mut pod = Pod::new(&artifacts(), 1).unwrap();
+    pod.load_programs(&["seb_catch_init", "seb_catch_infer_b32"], &[0]).unwrap();
+    let core = pod.core(0).unwrap();
+    let init = core.execute("seb_catch_init", vec![HostTensor::scalar_i32(0)]).unwrap();
+    let params = init[0].clone();
+
+    let obs = HostTensor::f32(vec![32, 50], vec![0.1; 32 * 50]).unwrap();
+    let outs = core
+        .execute(
+            "seb_catch_infer_b32",
+            vec![params.clone(), obs.clone(), HostTensor::scalar_i32(1)],
+        )
+        .unwrap();
+    // actions i32[32] in [0, 3)
+    let actions = outs[0].as_i32().unwrap();
+    assert_eq!(outs[0].shape, vec![32]);
+    assert!(actions.iter().all(|&a| (0..3).contains(&a)));
+    // logits [32, 3], values [32]
+    assert_eq!(outs[1].shape, vec![32, 3]);
+    assert_eq!(outs[2].shape, vec![32]);
+    assert!(outs[1].as_f32().unwrap().iter().all(|x| x.is_finite()));
+
+    // identical obs rows => identical logits rows (batch independence)
+    let logits = outs[1].as_f32().unwrap();
+    assert_eq!(logits[..3], logits[3..6]);
+
+    // same seed => same actions (program-visible RNG determinism)
+    let outs2 = core
+        .execute(
+            "seb_catch_infer_b32",
+            vec![params.clone(), obs.clone(), HostTensor::scalar_i32(1)],
+        )
+        .unwrap();
+    assert_eq!(outs[0].as_i32().unwrap(), outs2[0].as_i32().unwrap());
+}
+
+#[test]
+fn grad_apply_cycle_moves_params() {
+    let mut pod = Pod::new(&artifacts(), 1).unwrap();
+    pod.load_programs(
+        &["seb_catch_init", "seb_catch_grad_t20_b8", "seb_catch_apply"],
+        &[0],
+    )
+    .unwrap();
+    let core = pod.core(0).unwrap();
+    let init = core.execute("seb_catch_init", vec![HostTensor::scalar_i32(0)]).unwrap();
+    let params = init[0].clone();
+    let opt = init[1].clone();
+
+    let (t, b, d, a) = (20usize, 8usize, 50usize, 3usize);
+    let obs = HostTensor::f32(vec![t + 1, b, d], vec![0.05; (t + 1) * b * d]).unwrap();
+    let actions = HostTensor::i32(vec![t, b], vec![1; t * b]).unwrap();
+    let rewards = HostTensor::f32(vec![t, b], vec![0.5; t * b]).unwrap();
+    let discounts = HostTensor::f32(vec![t, b], vec![0.99; t * b]).unwrap();
+    let logits = HostTensor::f32(vec![t, b, a], vec![0.0; t * b * a]).unwrap();
+
+    let gout = core
+        .execute(
+            "seb_catch_grad_t20_b8",
+            vec![params.clone(), obs, actions, rewards, discounts, logits],
+        )
+        .unwrap();
+    assert_eq!(gout[0].shape, params.shape);
+    assert_eq!(gout[1].shape, vec![4]); // metrics
+    let grads = gout[0].as_f32().unwrap();
+    assert!(grads.iter().all(|x| x.is_finite()));
+    assert!(grads.iter().any(|&x| x != 0.0), "gradient is identically zero");
+
+    let aout = core
+        .execute("seb_catch_apply", vec![params.clone(), opt, gout[0].clone()])
+        .unwrap();
+    let new_params = aout[0].as_f32().unwrap();
+    let old_params = params.as_f32().unwrap();
+    assert_ne!(new_params, old_params, "apply did not move parameters");
+}
+
+#[test]
+fn executing_unloaded_program_errors_cleanly() {
+    let pod = Pod::new(&artifacts(), 1).unwrap();
+    let err = pod
+        .core(0)
+        .unwrap()
+        .execute("seb_catch_init", vec![HostTensor::scalar_i32(0)])
+        .unwrap_err();
+    assert!(format!("{err}").contains("not compiled"));
+}
+
+#[test]
+fn check_inputs_catches_bad_shapes() {
+    let pod = Pod::new(&artifacts(), 1).unwrap();
+    let bad = vec![HostTensor::scalar_f32(0.0)]; // wrong dtype for seed
+    assert!(pod.manifest.check_inputs("seb_catch_init", &bad).is_err());
+}
+
+#[test]
+fn concurrent_execution_from_many_threads() {
+    // Two cores, four submitting threads: the per-core serialization must
+    // not deadlock or cross results.
+    let mut pod = Pod::new(&artifacts(), 2).unwrap();
+    pod.load_programs(&["seb_catch_init"], &[0, 1]).unwrap();
+    let mut joins = Vec::new();
+    for i in 0..4u64 {
+        let core = pod.core((i % 2) as usize).unwrap();
+        joins.push(std::thread::spawn(move || {
+            let outs = core
+                .execute("seb_catch_init", vec![HostTensor::scalar_i32(i as i32)])
+                .unwrap();
+            outs[0].as_f32().unwrap()[0]
+        }));
+    }
+    let vals: Vec<f32> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    assert!(vals.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn occupancy_accounting_increases() {
+    let mut pod = Pod::new(&artifacts(), 1).unwrap();
+    pod.load_program("seb_catch_init", &[0]).unwrap();
+    let core = pod.core(0).unwrap();
+    assert_eq!(core.executions(), 0);
+    core.execute("seb_catch_init", vec![HostTensor::scalar_i32(0)]).unwrap();
+    assert_eq!(core.executions(), 1);
+    assert!(core.busy_seconds() > 0.0);
+}
