@@ -1,0 +1,36 @@
+# Podracer build/bench entry points. `make artifacts` is the one step the
+# Rust side cannot do for itself (L2 lowering needs python + jax).
+
+ARTIFACTS := artifacts
+BENCHES   := $(notdir $(basename $(wildcard rust/benches/*.rs)))
+
+.PHONY: all artifacts build test quickstart bench fmt clippy
+
+all: artifacts build
+
+# AOT-lower every exported program variant + write the manifest (L1/L2).
+artifacts:
+	cd python && python3 -m compile.aot --out ../$(ARTIFACTS)
+
+build:
+	cargo build --release
+
+# The tier-1 gate.
+test: build
+	cargo test -q
+
+quickstart: artifacts
+	cargo run --release --example quickstart
+
+# Full bench suite (set PODRACER_BENCH_FAST=1 for a smoke pass).
+bench:
+	@for b in $(BENCHES); do \
+		echo "== $$b =="; \
+		cargo bench --bench $$b || exit 1; \
+	done
+
+fmt:
+	cargo fmt --all -- --check
+
+clippy:
+	cargo clippy --all-targets -- -D warnings

@@ -26,6 +26,7 @@ fn main() -> anyhow::Result<()> {
         learner_cores: 2,
         threads_per_actor_core: 2,
         actor_batch: 32,
+        pipeline_stages: 2, // double-buffered actors: infer one half-batch, step the other
         unroll: 20,
         micro_batches: 1,
         discount: 0.99,

@@ -34,6 +34,7 @@ fn main() -> anyhow::Result<()> {
         learner_cores: 4, // 1:2 actor:learner — backward pass dominates (paper §Sebulba)
         threads_per_actor_core: 2,
         actor_batch: args.get_usize("batch", 32)?,
+        pipeline_stages: args.get_usize("pipeline-stages", 2)?,
         unroll: 20,
         micro_batches: 1,
         discount: 0.99,

@@ -342,7 +342,7 @@ def export_muzero(ex: Exporter, tag: str, obs_dim: int, num_actions: int,
 
 
 # ---------------------------------------------------------------------------
-# The default artifact set (see DESIGN.md §4/§5 for the experiment mapping)
+# The default artifact set (see DESIGN.md §5 for the experiment mapping)
 # ---------------------------------------------------------------------------
 
 
@@ -350,18 +350,21 @@ def build_all(out_dir: str, profile: str = "full") -> None:
     os.makedirs(out_dir, exist_ok=True)
     ex = Exporter(out_dir)
 
-    print("[aot] sebulba catch (quickstart + core-split/traj-len ablations)")
+    # Sub-batch infer variants (8/16): the split-batch pipelined actor infers
+    # one stage (= actor_batch / pipeline_stages) at a time — DESIGN.md §2.
+    print("[aot] sebulba catch (quickstart + core-split/traj-len/pipeline ablations)")
     export_sebulba_mlp(
         ex, "seb_catch", obs_dim=50, num_actions=3,
-        infer_batches=[32, 64],
+        infer_batches=[8, 16, 32, 64],
         grad_geoms=[(20, 4), (20, 8), (20, 16), (20, 32), (60, 8), (120, 8)],
     )
 
-    print("[aot] sebulba atari_like conv (fig4b actor-batch sweep + e2e)")
+    print("[aot] sebulba atari_like conv (fig4b actor-batch sweep + pipeline ablation + e2e)")
     export_sebulba_conv(
         ex, "seb_atari", height=42, width=42, in_channels=2, num_actions=6,
-        infer_batches=[32, 64, 96, 128],
-        grad_geoms=[(20, 8), (20, 16), (20, 32), (60, 8), (60, 16), (60, 24), (60, 32)],
+        infer_batches=[8, 16, 32, 64, 96, 128],
+        grad_geoms=[(20, 4), (20, 8), (20, 16), (20, 32),
+                    (60, 4), (60, 8), (60, 16), (60, 24), (60, 32)],
     )
 
     print("[aot] anakin catch + gridworld (fig4a scaling, smallnet fps)")

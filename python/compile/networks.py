@@ -1,7 +1,7 @@
 """Pure-functional networks with a *flat* parameter layout.
 
 Everything that crosses the Rust<->XLA boundary is a single flat f32 vector
-(see DESIGN.md §2 "Parameter interchange"): the Rust parameter store, the
+(see DESIGN.md §3 "Parameter interchange"): the Rust parameter store, the
 collectives and the actor-core broadcast all operate on one contiguous
 buffer. Each network here is described by a list of ``(shape, init)`` leaf
 specs; ``ParamSpec`` maps the flat vector to the leaves with static slices

@@ -30,6 +30,7 @@ fn main() -> anyhow::Result<()> {
             learner_cores: 4,
             threads_per_actor_core: threads,
             actor_batch: 32,
+            pipeline_stages: 1, // thread-level overlap only: isolate the ablation
             unroll: 20,
             micro_batches: 1,
             discount: 0.99,

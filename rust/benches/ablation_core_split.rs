@@ -33,6 +33,7 @@ fn main() -> anyhow::Result<()> {
             learner_cores: l,
             threads_per_actor_core: 1,
             actor_batch: 32,
+            pipeline_stages: 1, // keep the seed geometry: this sweep is about the core split
             unroll: 20,
             micro_batches: 1,
             discount: 0.99,

@@ -25,6 +25,7 @@ fn main() -> anyhow::Result<()> {
             learner_cores: 4, // shard 8: grads lowered for t in {20, 60, 120}
             threads_per_actor_core: 2,
             actor_batch: 32,
+            pipeline_stages: 1, // keep the seed geometry: this sweep is about T
             unroll: t,
             micro_batches: 1,
             discount: 0.99,

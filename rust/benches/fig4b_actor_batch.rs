@@ -31,6 +31,7 @@ fn main() -> anyhow::Result<()> {
             learner_cores: 4, // shard = batch/4 (grad programs lowered for 8..32)
             threads_per_actor_core: 1,
             actor_batch: batch,
+            pipeline_stages: 1, // grad/infer variants are lowered for the full batch sweep
             unroll: 60,
             micro_batches: 1,
             discount: 0.99,

@@ -1,20 +1,25 @@
-//! Actor threads: the Sebulba experience generators.
+//! Actor threads: the Sebulba experience generators, pipelined.
 //!
-//! Each actor thread owns a batched environment and talks to one actor core
-//! (several threads may share a core — the paper's GIL-hiding trick: while
-//! one thread steps its environments, the core runs another thread's
-//! inference). Per step: grab the latest parameters, run batched inference
-//! on the core, step the batched env, accumulate the trajectory; after T
-//! steps, shard along the batch dimension and queue the bundle for the
-//! learners.
+//! Each actor thread owns `pipeline_stages` sub-batches of environments and
+//! talks to one actor core (several threads may share a core — the paper's
+//! GIL-hiding trick). Within a thread the sub-batches round-robin through
+//! the infer→step cycle: while the core runs inference on sub-batch *k*,
+//! the worker pool steps sub-batch *k−1*'s environments on the host, so env
+//! latency hides behind device time (the paper: actors "split their batch
+//! of environments in two"; schedule diagram in DESIGN.md §2).
+//!
+//! With `pipeline_stages = 1` the loop degenerates to the fully synchronous
+//! schedule (infer, step, accumulate — bit-for-bit the pre-pipeline actor).
+//! Each stage accumulates its own trajectory; after T steps the stage's
+//! window is sharded along the batch dimension and queued for the learners.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::envs::{BatchedEnv, EnvFactory, WorkerPool};
+use crate::envs::{BatchedEnv, EnvFactory, StepTicket, WorkerPool};
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::DeviceHandle;
 
@@ -30,10 +35,14 @@ pub type ShardBundle = Vec<Trajectory>;
 
 pub struct ActorConfig {
     pub actor_id: usize,
+    /// Total environments owned by this thread (all stages together).
     pub batch: usize,
+    /// Sub-batches round-robining through the infer→step cycle (>= 1).
+    pub pipeline_stages: usize,
     pub unroll: usize,
     pub discount: f32,
     pub num_shards: usize,
+    /// Inference program lowered for the *stage* batch (batch / stages).
     pub infer_program: String,
     pub obs_shape: Vec<usize>,
     pub num_actions: usize,
@@ -59,6 +68,41 @@ pub fn spawn_actor(
         .expect("spawn actor thread")
 }
 
+/// An in-flight inference on the actor core.
+struct PendingInfer {
+    rx: mpsc::Receiver<Result<Vec<HostTensor>>>,
+    issued: Instant,
+}
+
+/// One pipeline stage: a sub-batch of environments plus everything needed
+/// to carry its infer→step cycle and trajectory window independently.
+struct Stage {
+    env: BatchedEnv,
+    /// Latest observation `[b * obs_dim]` — the next inference's input.
+    obs: Vec<f32>,
+    /// Observation the most recent inference saw (trajectory `obs_t`).
+    prev_obs: Vec<f32>,
+    actions: Vec<i32>,
+    logits: Vec<f32>,
+    rewards: Vec<f32>,
+    dones: Vec<bool>,
+    discounts: Vec<f32>,
+    episode_reward: Vec<f64>,
+    builder: TrajectoryBuilder,
+    infer: Option<PendingInfer>,
+    step: Option<StepTicket>,
+}
+
+/// Per-thread overlap accumulators, flushed to `RunStats` on exit.
+#[derive(Default)]
+struct OverlapAcc {
+    infer_busy: Duration,
+    env_busy: Duration,
+    queue_blocked: Duration,
+    /// Env construction + reset before the first tick — not hot-loop time.
+    setup: Duration,
+}
+
 #[allow(clippy::too_many_arguments)]
 fn actor_main(
     cfg: ActorConfig,
@@ -70,20 +114,68 @@ fn actor_main(
     stats: Arc<RunStats>,
     stop: Arc<AtomicBool>,
 ) -> Result<()> {
-    let b = cfg.batch;
+    let mut acc = OverlapAcc::default();
+    let loop_start = Instant::now();
+    let result = actor_loop(&cfg, &core, &factory, &pool, &store, &queue, &stats, &stop, &mut acc);
+    // Wall time excludes setup (env construction) and backpressure
+    // (blocking on a full trajectory queue is the learner's deficit, not
+    // the pipeline's).
+    let wall = loop_start
+        .elapsed()
+        .saturating_sub(acc.queue_blocked)
+        .saturating_sub(acc.setup);
+    stats.record_actor_overlap(acc.infer_busy, acc.env_busy, wall);
+    result
+}
+
+#[allow(clippy::too_many_arguments)]
+fn actor_loop(
+    cfg: &ActorConfig,
+    core: &DeviceHandle,
+    factory: &EnvFactory,
+    pool: &Arc<WorkerPool>,
+    store: &ParamStore,
+    queue: &BoundedQueue<ShardBundle>,
+    stats: &RunStats,
+    stop: &AtomicBool,
+    acc: &mut OverlapAcc,
+) -> Result<()> {
+    let setup_start = Instant::now();
+    let stages_n = cfg.pipeline_stages;
+    anyhow::ensure!(stages_n >= 1, "pipeline_stages must be >= 1");
+    anyhow::ensure!(
+        cfg.batch % stages_n == 0,
+        "actor batch {} must divide into {} pipeline stages",
+        cfg.batch,
+        stages_n
+    );
+    let sb = cfg.batch / stages_n; // envs per stage
     let d: usize = cfg.obs_shape.iter().product();
     let a = cfg.num_actions;
     let mut rng = crate::util::rng::Xoshiro256::from_stream(cfg.seed, cfg.actor_id as u64);
 
-    let env = BatchedEnv::new(&factory, b, pool).context("building batched env")?;
-    let mut obs = vec![0.0f32; b * d];
-    env.reset(&mut obs);
-
-    let mut builder = TrajectoryBuilder::new(cfg.unroll, b, &cfg.obs_shape, a);
-    let mut rewards = vec![0.0f32; b];
-    let mut dones = vec![false; b];
-    let mut discounts = vec![0.0f32; b];
-    let mut episode_reward = vec![0.0f64; b];
+    let mut stages: Vec<Stage> = (0..stages_n)
+        .map(|s| -> Result<Stage> {
+            let env = BatchedEnv::with_slot_offset(factory, sb, s * sb, pool.clone())
+                .with_context(|| format!("building batched env (stage {s})"))?;
+            let mut obs = vec![0.0f32; sb * d];
+            env.reset(&mut obs);
+            Ok(Stage {
+                env,
+                obs,
+                prev_obs: vec![0.0; sb * d],
+                actions: vec![0; sb],
+                logits: vec![0.0; sb * a],
+                rewards: vec![0.0; sb],
+                dones: vec![false; sb],
+                discounts: vec![0.0; sb],
+                episode_reward: vec![0.0; sb],
+                builder: TrajectoryBuilder::new(cfg.unroll, sb, &cfg.obs_shape, a),
+                infer: None,
+                step: None,
+            })
+        })
+        .collect::<Result<_>>()?;
 
     // Device-resident parameter cache: parameters are uploaded to the actor
     // core once per published version and referenced by slot on every
@@ -91,73 +183,122 @@ fn actor_main(
     let param_slot = format!("params#{}", cfg.actor_id);
     let mut cached_version = u64::MAX;
 
-    let mut obs_batch_shape = vec![b];
-    obs_batch_shape.extend_from_slice(&cfg.obs_shape);
+    let mut stage_batch_shape = vec![sb];
+    stage_batch_shape.extend_from_slice(&cfg.obs_shape);
 
+    // Launch an inference for `stage`: refresh parameters ("switch to the
+    // latest parameters before each new inference step"), then fire the
+    // infer program without waiting.
+    let launch_infer = |stage: &mut Stage,
+                            rng: &mut crate::util::rng::Xoshiro256,
+                            cached_version: &mut u64|
+     -> Result<()> {
+        let snap = store.latest();
+        if snap.version != *cached_version {
+            core.cache(
+                &param_slot,
+                HostTensor::f32(vec![snap.params.len()], snap.params.clone())?,
+            )?;
+            *cached_version = snap.version;
+        }
+        let inputs = vec![
+            HostTensor::f32(stage_batch_shape.clone(), stage.obs.clone())?,
+            HostTensor::scalar_i32(rng.next_program_seed()),
+        ];
+        let rx = core.execute_cached_async(
+            &cfg.infer_program,
+            inputs,
+            vec![(0, param_slot.clone())],
+        )?;
+        stage.infer = Some(PendingInfer { rx, issued: Instant::now() });
+        Ok(())
+    };
+
+    acc.setup = setup_start.elapsed();
+
+    // Prologue: prime the pipeline with stage 0's first inference.
+    launch_infer(&mut stages[0], &mut rng, &mut cached_version)?;
+
+    let mut tick: usize = 0;
     while !stop.load(Ordering::Relaxed) {
-        for _t in 0..cfg.unroll {
-            if stop.load(Ordering::Relaxed) {
-                return Ok(());
-            }
-            // 1) latest parameters ("switch to the latest parameters before
-            //    each new inference step")
-            let snap = store.latest();
-            if snap.version != cached_version {
-                core.cache(
-                    &param_slot,
-                    HostTensor::f32(vec![snap.params.len()], snap.params.clone())?,
-                )?;
-                cached_version = snap.version;
-            }
+        let s = tick % stages_n;
 
-            // 2) batched inference on the actor core
-            let t0 = Instant::now();
-            let inputs = vec![
-                HostTensor::f32(obs_batch_shape.clone(), obs.clone())?,
-                HostTensor::scalar_i32(rng.next_program_seed()),
-            ];
-            let outs = core
-                .execute_cached(&cfg.infer_program, inputs, vec![(0, param_slot.clone())])
+        // 1) Harvest stage s's inference: the device has (or is finishing)
+        //    its actions.
+        {
+            let stage = &mut stages[s];
+            let pending = stage
+                .infer
+                .take()
+                .expect("pipeline invariant: current stage has an in-flight inference");
+            let outs = pending
+                .rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("actor core {} died", core.core_id))?
                 .context("actor inference")?;
-            stats.inference_latency.record(t0.elapsed());
-            let actions = outs[0].as_i32()?.to_vec();
-            let logits = outs[1].as_f32()?.to_vec();
+            let span = pending.issued.elapsed();
+            acc.infer_busy += span;
+            stats.inference_latency.record(span);
+            stage.actions = outs[0].as_i32()?.to_vec();
+            stage.logits = outs[1].as_f32()?.to_vec();
 
-            // 3) step the batched environment on the host
-            let t1 = Instant::now();
-            let prev_obs = obs.clone();
-            env.step(&actions, &mut obs, &mut rewards, &mut dones);
-            stats.env_step_latency.record(t1.elapsed());
+            // 2) Start stepping stage s on the host — non-blocking, so the
+            //    pool works while the device serves the next stage.
+            std::mem::swap(&mut stage.prev_obs, &mut stage.obs);
+            stage.step = Some(stage.env.step_async(&stage.actions));
+        }
+
+        // 3) Rotate to the next stage: finish its outstanding env step (it
+        //    ran under stage s's inference), account the transition, and
+        //    fire its next inference.
+        let s2 = (tick + 1) % stages_n;
+        let stage = &mut stages[s2];
+        if let Some(ticket) = stage.step.take() {
+            let span = ticket.wait(&mut stage.obs, &mut stage.rewards, &mut stage.dones);
+            acc.env_busy += span;
+            stats.env_step_latency.record(span);
 
             // 4) bookkeeping + accumulate
             let mut ended = 0u64;
             let mut ended_reward = 0.0f64;
-            for i in 0..b {
-                episode_reward[i] += rewards[i] as f64;
-                if dones[i] {
+            for i in 0..sb {
+                stage.episode_reward[i] += stage.rewards[i] as f64;
+                if stage.dones[i] {
                     ended += 1;
-                    ended_reward += episode_reward[i];
-                    episode_reward[i] = 0.0;
-                    discounts[i] = 0.0;
+                    ended_reward += stage.episode_reward[i];
+                    stage.episode_reward[i] = 0.0;
+                    stage.discounts[i] = 0.0;
                 } else {
-                    discounts[i] = cfg.discount;
+                    stage.discounts[i] = cfg.discount;
                 }
             }
             stats.record_episodes(ended, ended_reward);
-            builder.push_step(&prev_obs, &actions, &logits, &rewards, &discounts)?;
-        }
+            stage.builder.push_step(
+                &stage.prev_obs,
+                &stage.actions,
+                &stage.logits,
+                &stage.rewards,
+                &stage.discounts,
+            )?;
 
-        // 5) finish the window, shard, enqueue
-        let version = store.version();
-        let traj = builder.finish(&obs, version, cfg.actor_id)?;
-        stats.env_frames.add(traj.frames() as u64);
-        stats
-            .trajectories
-            .fetch_add(1, Ordering::Relaxed);
-        let shards = shard(&traj, cfg.num_shards)?;
-        if queue.push(shards).is_err() {
-            return Ok(()); // queue shut down: clean exit
+            // 5) window full: finish with the bootstrap obs, shard, enqueue
+            if stage.builder.is_full() {
+                let version = store.version();
+                let traj = stage.builder.finish(&stage.obs, version, cfg.actor_id)?;
+                stats.env_frames.add(traj.frames() as u64);
+                stats.trajectories.fetch_add(1, Ordering::Relaxed);
+                let shards = shard(&traj, cfg.num_shards)?;
+                let t_push = Instant::now();
+                let pushed = queue.push(shards);
+                acc.queue_blocked += t_push.elapsed();
+                if pushed.is_err() {
+                    return Ok(()); // queue shut down: clean exit
+                }
+            }
         }
+        launch_infer(stage, &mut rng, &mut cached_version)?;
+
+        tick += 1;
     }
     Ok(())
 }

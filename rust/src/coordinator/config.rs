@@ -17,6 +17,12 @@ pub struct SebulbaConfig {
     pub threads_per_actor_core: usize,
     /// Environments per actor thread (the "actor batch size" of Fig 4b).
     pub actor_batch: usize,
+    /// Sub-batches each actor thread round-robins through the infer→step
+    /// cycle (the paper: actors "split their batch of environments in two"
+    /// so the device runs one half's inference while the host steps the
+    /// other half — DESIGN.md §2). 1 = fully synchronous (the pre-pipeline
+    /// schedule, bit-for-bit); 2 = double-buffered (default).
+    pub pipeline_stages: usize,
     /// Trajectory length T (paper: 20 IMPALA, 60 Sebulba).
     pub unroll: usize,
     /// Split each trajectory into `micro_batches` sequential updates
@@ -45,6 +51,7 @@ impl Default for SebulbaConfig {
             learner_cores: 2,
             threads_per_actor_core: 2,
             actor_batch: 32,
+            pipeline_stages: 2,
             unroll: 20,
             micro_batches: 1,
             discount: 0.99,
@@ -66,13 +73,24 @@ impl SebulbaConfig {
         self.cores_per_replica() * self.replicas
     }
 
-    /// Learner-shard batch size (what the grad program was lowered for).
-    pub fn shard_batch(&self) -> usize {
-        self.actor_batch / (self.learner_cores * self.micro_batches)
+    /// Environments per pipeline stage: what one inference call batches and
+    /// one trajectory window covers.
+    pub fn stage_batch(&self) -> usize {
+        self.actor_batch / self.pipeline_stages
     }
 
+    /// Learner-shard batch size (what the grad program was lowered for).
+    /// Each stage's trajectory is sharded independently, so the shard is a
+    /// fraction of the *stage* batch, not the full actor batch.
+    pub fn shard_batch(&self) -> usize {
+        self.stage_batch() / (self.learner_cores * self.micro_batches)
+    }
+
+    /// Inference programs are shape-specialized per batch; the pipelined
+    /// actor infers one stage at a time, so the program is lowered for the
+    /// stage batch.
     pub fn infer_program(&self) -> String {
-        format!("{}_infer_b{}", self.agent, self.actor_batch)
+        format!("{}_infer_b{}", self.agent, self.stage_batch())
     }
 
     pub fn grad_program(&self) -> String {
@@ -97,17 +115,31 @@ impl SebulbaConfig {
         if self.micro_batches == 0 {
             bail!("micro_batches must be >= 1");
         }
-        let shards = self.learner_cores * self.micro_batches;
-        if self.actor_batch % shards != 0 {
+        if self.pipeline_stages == 0 {
+            bail!("pipeline_stages must be >= 1 (1 = synchronous actor)");
+        }
+        if self.actor_batch % self.pipeline_stages != 0 {
             bail!(
-                "actor_batch {} must divide into learner_cores*micro_batches = {}",
+                "actor_batch {} must divide into pipeline_stages = {}",
                 self.actor_batch,
+                self.pipeline_stages
+            );
+        }
+        let shards = self.learner_cores * self.micro_batches;
+        if self.stage_batch() % shards != 0 {
+            bail!(
+                "stage batch {} (actor_batch {} / pipeline_stages {}) must divide into \
+                 learner_cores*micro_batches = {}",
+                self.stage_batch(),
+                self.actor_batch,
+                self.pipeline_stages,
                 shards
             );
         }
         if self.replicas == 0 {
             bail!("replicas must be >= 1");
         }
+        crate::envs::validate_kind(self.env_kind)?;
         Ok(())
     }
 }
@@ -126,6 +158,7 @@ mod tests {
         let cfg = SebulbaConfig {
             agent: "seb_atari".into(),
             actor_batch: 64,
+            pipeline_stages: 1,
             unroll: 60,
             learner_cores: 4,
             ..Default::default()
@@ -136,9 +169,28 @@ mod tests {
     }
 
     #[test]
+    fn pipeline_stages_shrink_the_infer_and_grad_geometry() {
+        // Double-buffering infers one sub-batch at a time, so both the
+        // inference batch and the learner shard halve.
+        let cfg = SebulbaConfig {
+            agent: "seb_atari".into(),
+            actor_batch: 64,
+            pipeline_stages: 2,
+            unroll: 60,
+            learner_cores: 4,
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
+        assert_eq!(cfg.stage_batch(), 32);
+        assert_eq!(cfg.infer_program(), "seb_atari_infer_b32");
+        assert_eq!(cfg.grad_program(), "seb_atari_grad_t60_b8");
+    }
+
+    #[test]
     fn micro_batches_shrink_shards() {
         let cfg = SebulbaConfig {
             actor_batch: 32,
+            pipeline_stages: 1,
             learner_cores: 2,
             micro_batches: 2,
             ..Default::default()
@@ -154,6 +206,22 @@ mod tests {
         let bad = SebulbaConfig { learner_cores: 0, ..Default::default() };
         assert!(bad.validate().is_err());
         let bad = SebulbaConfig { threads_per_actor_core: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = SebulbaConfig { pipeline_stages: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        // 32 envs cannot split into 3 equal stages
+        let bad = SebulbaConfig { pipeline_stages: 3, ..Default::default() };
+        assert!(bad.validate().is_err());
+        // stage batch 8 cannot shard over 16 learner slots
+        let bad = SebulbaConfig {
+            pipeline_stages: 4,
+            learner_cores: 4,
+            micro_batches: 4,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        // unknown env kinds fail at validation, not inside a worker thread
+        let bad = SebulbaConfig { env_kind: "pong", ..Default::default() };
         assert!(bad.validate().is_err());
     }
 }

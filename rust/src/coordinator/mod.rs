@@ -3,8 +3,9 @@
 //! The 8 cores of each simulated host are split into `A` actor cores and
 //! `8 - A` learner cores (paper Fig. 1c / Fig. 3). Actor threads (≥1 per
 //! actor core) step batched host-side environments and run batched inference
-//! on their core; completed trajectories are sharded along the batch
-//! dimension and queued to the learners; the learner thread runs the grad
+//! on their core, double-buffered over `pipeline_stages` sub-batches so env
+//! stepping hides behind device time (DESIGN.md §2); completed trajectories
+//! are sharded along the batch dimension and queued to the learners; the learner thread runs the grad
 //! program on every learner core, all-reduces the gradients (the paper's
 //! `psum`), applies the update, and publishes fresh parameters to the actor
 //! threads through the parameter store.

@@ -37,6 +37,17 @@ pub struct RunReport {
     pub last_loss: f32,
     pub actor_busy_seconds: f64,
     pub learner_busy_seconds: f64,
+    /// Device time actor threads spent on inference (issue → harvest).
+    pub actor_infer_seconds: f64,
+    /// Host time actor threads spent stepping environments through the
+    /// worker pool (submission → last worker completion).
+    pub actor_env_step_seconds: f64,
+    /// Actor hot-loop wall time, excluding trajectory-queue backpressure.
+    pub actor_loop_seconds: f64,
+    /// Work the split-batch pipeline hid: per actor thread,
+    /// `max(0, infer + env_step − loop_wall)` (DESIGN.md §2). ~0 when
+    /// `pipeline_stages = 1`; grows with the overlap the schedule achieves.
+    pub actor_overlap_seconds: f64,
     pub queue_push_block_seconds: f64,
     pub queue_pop_block_seconds: f64,
     pub final_params: Vec<f32>,
@@ -114,14 +125,15 @@ impl Sebulba {
             }
         };
         log::info!(
-            "sebulba[{}]: params={} opt={} replicas={} cores={}A+{}L batch={} T={}",
+            "sebulba[{}]: params={} opt={} replicas={} cores={}A+{}L batch={}x{} T={}",
             cfg.agent,
             params0.len(),
             opt0.len(),
             cfg.replicas,
             cfg.actor_cores,
             cfg.learner_cores,
-            cfg.actor_batch,
+            cfg.pipeline_stages,
+            cfg.stage_batch(),
             cfg.unroll
         );
 
@@ -130,7 +142,7 @@ impl Sebulba {
         let stop = Arc::new(AtomicBool::new(false));
         let bus = Arc::new(GradientBus::new(cfg.replicas));
         let factory: Arc<crate::envs::EnvFactory> =
-            Arc::new(make_factory(cfg.env_kind, cfg.seed));
+            Arc::new(make_factory(cfg.env_kind, cfg.seed)?);
 
         let mut actor_joins = Vec::new();
         let mut learner_joins = Vec::new();
@@ -152,6 +164,7 @@ impl Sebulba {
                     let acfg = ActorConfig {
                         actor_id,
                         batch: cfg.actor_batch,
+                        pipeline_stages: cfg.pipeline_stages,
                         unroll: cfg.unroll,
                         discount: cfg.discount,
                         num_shards: cfg.learner_cores * cfg.micro_batches,
@@ -261,6 +274,10 @@ impl Sebulba {
             last_loss: stats.last_loss(),
             actor_busy_seconds: actor_busy,
             learner_busy_seconds: learner_busy,
+            actor_infer_seconds: stats.actor_infer_seconds(),
+            actor_env_step_seconds: stats.actor_env_seconds(),
+            actor_loop_seconds: stats.actor_loop_seconds(),
+            actor_overlap_seconds: stats.actor_overlap_seconds(),
             queue_push_block_seconds: queues.iter().map(|q| q.push_block_seconds()).sum(),
             queue_pop_block_seconds: queues.iter().map(|q| q.pop_block_seconds()).sum(),
             final_params,

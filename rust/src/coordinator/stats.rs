@@ -121,6 +121,16 @@ pub struct RunStats {
     pub last_loss_bits: AtomicU64,
     pub episodes: AtomicU64,
     pub episode_reward_sum_bits: AtomicU64,
+    /// Pipeline overlap accounting (DESIGN.md §2), summed over actor
+    /// threads: device time spent on this thread's inference calls
+    /// (issue → harvest), host time spent stepping its environments
+    /// (submission → last worker completion), wall time in the hot loop
+    /// (excluding queue backpressure), and the hidden portion
+    /// `max(0, device + env − wall)` per thread.
+    pub actor_infer_nanos: AtomicU64,
+    pub actor_env_nanos: AtomicU64,
+    pub actor_loop_nanos: AtomicU64,
+    pub actor_overlap_nanos: AtomicU64,
 }
 
 impl RunStats {
@@ -154,6 +164,41 @@ impl RunStats {
                 Err(actual) => cur = actual,
             }
         }
+    }
+
+    /// Record one actor thread's lifetime totals: device-busy, host-env-busy
+    /// and hot-loop wall time. The overlapped share is what the pipeline hid
+    /// — with `pipeline_stages = 1` the loop is serial and it is ~0.
+    pub fn record_actor_overlap(
+        &self,
+        infer: std::time::Duration,
+        env: std::time::Duration,
+        loop_wall: std::time::Duration,
+    ) {
+        let i = infer.as_nanos() as u64;
+        let e = env.as_nanos() as u64;
+        let w = loop_wall.as_nanos() as u64;
+        self.actor_infer_nanos.fetch_add(i, Ordering::Relaxed);
+        self.actor_env_nanos.fetch_add(e, Ordering::Relaxed);
+        self.actor_loop_nanos.fetch_add(w, Ordering::Relaxed);
+        self.actor_overlap_nanos
+            .fetch_add((i + e).saturating_sub(w), Ordering::Relaxed);
+    }
+
+    pub fn actor_infer_seconds(&self) -> f64 {
+        self.actor_infer_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn actor_env_seconds(&self) -> f64 {
+        self.actor_env_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn actor_loop_seconds(&self) -> f64 {
+        self.actor_loop_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn actor_overlap_seconds(&self) -> f64 {
+        self.actor_overlap_nanos.load(Ordering::Relaxed) as f64 * 1e-9
     }
 
     pub fn last_loss(&self) -> f32 {
@@ -234,6 +279,28 @@ mod tests {
         s.record_update(4, 0.25);
         assert_eq!(s.mean_staleness(), 3.0);
         assert_eq!(s.last_loss(), 0.25);
+    }
+
+    #[test]
+    fn overlap_is_hidden_work_clamped_at_zero() {
+        let s = RunStats::new();
+        // serial thread: infer + env == wall -> nothing hidden
+        s.record_actor_overlap(
+            Duration::from_millis(30),
+            Duration::from_millis(70),
+            Duration::from_millis(100),
+        );
+        assert!(s.actor_overlap_seconds() < 1e-9);
+        // pipelined thread: 30ms of env stepping ran under the inference
+        s.record_actor_overlap(
+            Duration::from_millis(60),
+            Duration::from_millis(50),
+            Duration::from_millis(80),
+        );
+        assert!((s.actor_overlap_seconds() - 0.030).abs() < 1e-6);
+        assert!((s.actor_infer_seconds() - 0.090).abs() < 1e-6);
+        assert!((s.actor_env_seconds() - 0.120).abs() < 1e-6);
+        assert!((s.actor_loop_seconds() - 0.180).abs() < 1e-6);
     }
 
     #[test]

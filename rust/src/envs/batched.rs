@@ -5,12 +5,18 @@
 //!
 //! Slots are chunked over pool workers (contiguous ranges), so a step costs
 //! one `run_batch` of `min(pool, batch)` jobs regardless of batch size.
+//!
+//! Stepping is also available in split-phase form: `step_async` submits the
+//! work and returns a [`StepTicket`]; `StepTicket::wait` joins and copies
+//! the results out. The pipelined Sebulba actor steps one sub-batch through
+//! the ticket while the device runs inference on another (DESIGN.md §2).
 
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::Result;
 
-use super::pool::WorkerPool;
+use super::pool::{BatchTicket, WorkerPool};
 use super::{EnvFactory, Environment};
 
 struct Slot {
@@ -29,12 +35,25 @@ pub struct BatchedEnv {
 
 impl BatchedEnv {
     pub fn new(factory: &EnvFactory, batch: usize, pool: Arc<WorkerPool>) -> Result<Self> {
+        Self::with_slot_offset(factory, batch, 0, pool)
+    }
+
+    /// Like [`Self::new`], but env `i` is built as factory slot
+    /// `slot_offset + i`. A pipelined actor partitions one logical batch
+    /// into several sub-batch envs; the offset keeps every environment's
+    /// per-slot RNG stream identical to the unsplit layout.
+    pub fn with_slot_offset(
+        factory: &EnvFactory,
+        batch: usize,
+        slot_offset: usize,
+        pool: Arc<WorkerPool>,
+    ) -> Result<Self> {
         anyhow::ensure!(batch > 0, "batch must be positive");
         let mut slots = Vec::with_capacity(batch);
         let mut obs_dim = 0;
         let mut num_actions = 0;
         for i in 0..batch {
-            let env = factory(i);
+            let env = factory(slot_offset + i);
             obs_dim = env.obs_dim();
             num_actions = env.num_actions();
             slots.push(Arc::new(Mutex::new(Slot {
@@ -86,14 +105,19 @@ impl BatchedEnv {
         rewards: &mut [f32],
         dones: &mut [bool],
     ) {
+        self.step_async(actions).wait(obs_out, rewards, dones);
+    }
+
+    /// Submit a step without waiting. The pool workers advance the slots in
+    /// the background; the returned [`StepTicket`] joins on them and copies
+    /// the batched results out. The ticket owns its slot references, so it
+    /// can outlive borrows of `self` (the actor stores one per stage).
+    pub fn step_async(&self, actions: &[i32]) -> StepTicket {
         let b = self.batch();
         assert_eq!(actions.len(), b);
-        assert_eq!(obs_out.len(), b * self.obs_dim);
-        assert_eq!(rewards.len(), b);
-        assert_eq!(dones.len(), b);
 
         let chunks = self.chunk_ranges();
-        self.pool.run_batch(chunks.len(), |ci| {
+        let ticket = self.pool.run_batch_async(chunks.len(), |ci| {
             let range = chunks[ci].clone();
             let slots: Vec<_> = self.slots[range.clone()].iter().map(Arc::clone).collect();
             let acts: Vec<i32> = actions[range].to_vec();
@@ -107,13 +131,7 @@ impl BatchedEnv {
                 }
             })
         });
-
-        for (i, slot) in self.slots.iter().enumerate() {
-            let s = slot.lock().unwrap();
-            obs_out[i * self.obs_dim..(i + 1) * self.obs_dim].copy_from_slice(&s.obs);
-            rewards[i] = s.reward;
-            dones[i] = s.done;
-        }
+        StepTicket { slots: self.slots.clone(), obs_dim: self.obs_dim, ticket }
     }
 
     fn chunk_ranges(&self) -> Vec<std::ops::Range<usize>> {
@@ -134,6 +152,35 @@ impl BatchedEnv {
     }
 }
 
+/// Outstanding `step_async` submission: join with [`Self::wait`].
+pub struct StepTicket {
+    slots: Vec<Arc<Mutex<Slot>>>,
+    obs_dim: usize,
+    ticket: BatchTicket,
+}
+
+impl StepTicket {
+    /// Block until the pool has stepped every slot, then copy the batched
+    /// next-observations, rewards and done flags out. Returns the host-side
+    /// span (submission → last worker completion stamp) for the actor's
+    /// overlap accounting.
+    pub fn wait(self, obs_out: &mut [f32], rewards: &mut [f32], dones: &mut [bool]) -> Duration {
+        let b = self.slots.len();
+        assert_eq!(obs_out.len(), b * self.obs_dim);
+        assert_eq!(rewards.len(), b);
+        assert_eq!(dones.len(), b);
+
+        let span = self.ticket.wait();
+        for (i, slot) in self.slots.iter().enumerate() {
+            let s = slot.lock().unwrap();
+            obs_out[i * self.obs_dim..(i + 1) * self.obs_dim].copy_from_slice(&s.obs);
+            rewards[i] = s.reward;
+            dones[i] = s.done;
+        }
+        span
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,7 +188,7 @@ mod tests {
 
     fn batched(kind: &'static str, batch: usize, workers: usize) -> BatchedEnv {
         let pool = WorkerPool::new(workers);
-        BatchedEnv::new(&make_factory(kind, 42), batch, pool).unwrap()
+        BatchedEnv::new(&make_factory(kind, 42).unwrap(), batch, pool).unwrap()
     }
 
     #[test]
@@ -175,7 +222,7 @@ mod tests {
         // The batched env must be observationally identical to stepping the
         // same seeded envs one by one (the property the paper's batched C++
         // env preserves).
-        let factory = make_factory("catch", 99);
+        let factory = make_factory("catch", 99).unwrap();
         let pool = WorkerPool::new(4);
         let be = BatchedEnv::new(&factory, 6, pool).unwrap();
         let mut serial: Vec<_> = (0..6).map(|i| factory(i)).collect();
@@ -210,6 +257,67 @@ mod tests {
         let mut rewards = vec![0.0; 2];
         let mut dones = vec![false; 2];
         be.step(&[1, 1], &mut obs, &mut rewards, &mut dones);
+    }
+
+    #[test]
+    fn step_async_equals_step() {
+        // Two envs built from the same factory/seed; one stepped through the
+        // blocking API, one through the ticket — results must be identical.
+        let factory = make_factory("catch", 17).unwrap();
+        let sync = BatchedEnv::new(&factory, 4, WorkerPool::new(2)).unwrap();
+        let split = BatchedEnv::new(&factory, 4, WorkerPool::new(2)).unwrap();
+
+        let d = sync.obs_dim();
+        let (mut obs_a, mut obs_b) = (vec![0.0; 4 * d], vec![0.0; 4 * d]);
+        sync.reset(&mut obs_a);
+        split.reset(&mut obs_b);
+        assert_eq!(obs_a, obs_b);
+
+        let (mut rew_a, mut rew_b) = (vec![0.0; 4], vec![0.0; 4]);
+        let (mut done_a, mut done_b) = (vec![false; 4], vec![false; 4]);
+        for round in 0..25 {
+            let actions: Vec<i32> = (0..4).map(|i| ((round + i) % 3) as i32).collect();
+            sync.step(&actions, &mut obs_a, &mut rew_a, &mut done_a);
+            let ticket = split.step_async(&actions);
+            ticket.wait(&mut obs_b, &mut rew_b, &mut done_b);
+            assert_eq!(obs_a, obs_b, "round {round}");
+            assert_eq!(rew_a, rew_b);
+            assert_eq!(done_a, done_b);
+        }
+    }
+
+    #[test]
+    fn slot_offset_partitions_match_full_batch() {
+        // Splitting a batch of 6 into two offset sub-batches must reproduce
+        // the unsplit envs exactly (same per-slot RNG streams) — the
+        // property pipeline_stages>1 relies on.
+        let factory = make_factory("catch", 31).unwrap();
+        let full = BatchedEnv::new(&factory, 6, WorkerPool::new(2)).unwrap();
+        let lo = BatchedEnv::with_slot_offset(&factory, 3, 0, WorkerPool::new(2)).unwrap();
+        let hi = BatchedEnv::with_slot_offset(&factory, 3, 3, WorkerPool::new(2)).unwrap();
+
+        let d = full.obs_dim();
+        let mut obs_f = vec![0.0; 6 * d];
+        let (mut obs_lo, mut obs_hi) = (vec![0.0; 3 * d], vec![0.0; 3 * d]);
+        full.reset(&mut obs_f);
+        lo.reset(&mut obs_lo);
+        hi.reset(&mut obs_hi);
+        assert_eq!(&obs_f[..3 * d], &obs_lo[..]);
+        assert_eq!(&obs_f[3 * d..], &obs_hi[..]);
+
+        let mut rew_f = vec![0.0; 6];
+        let mut done_f = vec![false; 6];
+        let (mut rew_s, mut done_s) = (vec![0.0; 3], vec![false; 3]);
+        for round in 0..20 {
+            let actions: Vec<i32> = (0..6).map(|i| ((round + 2 * i) % 3) as i32).collect();
+            full.step(&actions, &mut obs_f, &mut rew_f, &mut done_f);
+            lo.step(&actions[..3], &mut obs_lo, &mut rew_s, &mut done_s);
+            assert_eq!(&obs_f[..3 * d], &obs_lo[..], "round {round} (low half)");
+            assert_eq!(&rew_f[..3], &rew_s[..]);
+            hi.step(&actions[3..], &mut obs_hi, &mut rew_s, &mut done_s);
+            assert_eq!(&obs_f[3 * d..], &obs_hi[..], "round {round} (high half)");
+            assert_eq!(&rew_f[3..], &rew_s[..]);
+        }
     }
 
     #[test]

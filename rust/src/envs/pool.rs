@@ -2,10 +2,14 @@
 //! of C++ threads" that steps batched environments behind the Python facade.
 //!
 //! Deliberately minimal: FIFO job queue, fixed worker count, completion
-//! signalled through per-batch channels by the submitter.
+//! signalled through per-batch channels by the submitter. Batches can be
+//! submitted without blocking (`run_batch_async` returns a [`BatchTicket`])
+//! so the pipelined Sebulba actor can overlap env stepping with device
+//! inference (DESIGN.md §2).
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -58,19 +62,51 @@ impl WorkerPool {
     where
         F: Fn(usize) -> Job,
     {
-        let (done_tx, done_rx) = mpsc::channel::<()>();
+        self.run_batch_async(n, make_job).wait();
+    }
+
+    /// Submit `n` jobs without blocking; the returned [`BatchTicket`] joins
+    /// on them later. While the ticket is outstanding the submitter is free
+    /// to do other work (the double-buffering seam of DESIGN.md §2).
+    pub fn run_batch_async<F>(&self, n: usize, make_job: F) -> BatchTicket
+    where
+        F: Fn(usize) -> Job,
+    {
+        let issued = Instant::now();
+        let (done_tx, done_rx) = mpsc::channel::<Instant>();
         for i in 0..n {
             let job = make_job(i);
             let done = done_tx.clone();
             self.submit(Box::new(move || {
                 job();
-                let _ = done.send(());
+                let _ = done.send(Instant::now());
             }));
         }
-        drop(done_tx);
-        for _ in 0..n {
-            done_rx.recv().expect("worker panicked");
+        BatchTicket { rx: done_rx, remaining: n, issued }
+    }
+}
+
+/// Completion handle for one submitted batch of jobs. Workers stamp their
+/// completion times, so `wait` reports the true submission→last-job span
+/// even when the submitter joins late — the overlap stats depend on this.
+pub struct BatchTicket {
+    rx: mpsc::Receiver<Instant>,
+    remaining: usize,
+    issued: Instant,
+}
+
+impl BatchTicket {
+    /// Block until every job in the batch has run. Returns the span from
+    /// submission to the last job's completion stamp.
+    pub fn wait(self) -> Duration {
+        let mut last = self.issued;
+        for _ in 0..self.remaining {
+            let done = self.rx.recv().expect("worker panicked");
+            if done > last {
+                last = done;
+            }
         }
+        last - self.issued
     }
 }
 
@@ -138,5 +174,29 @@ mod tests {
     fn drop_joins_workers() {
         let pool = WorkerPool::new(2);
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn async_batch_overlaps_submitter_work() {
+        let pool = WorkerPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = counter.clone();
+        let ticket = pool.run_batch_async(6, move |_| {
+            let c = c.clone();
+            Box::new(move || {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                c.fetch_add(1, Ordering::SeqCst);
+            })
+        });
+        let span = ticket.wait();
+        assert_eq!(counter.load(Ordering::SeqCst), 6);
+        assert!(span >= std::time::Duration::from_millis(2));
+    }
+
+    #[test]
+    fn empty_async_batch_completes() {
+        let pool = WorkerPool::new(1);
+        let span = pool.run_batch_async(0, |_| Box::new(|| {})).wait();
+        assert!(span <= std::time::Duration::from_millis(50));
     }
 }

@@ -3,7 +3,8 @@
 //! ```text
 //! podracer anakin   [--agent anakin_catch] [--cores 4] [--outer-iters 20] [--mode bundled|psum]
 //! podracer sebulba  [--agent seb_catch] [--env catch] [--actor-cores 2] [--learner-cores 2]
-//!                   [--batch 32] [--unroll 20] [--updates 100] [--replicas 1] [--threads 2]
+//!                   [--batch 32] [--pipeline-stages 2] [--unroll 20] [--updates 100]
+//!                   [--replicas 1] [--threads 2]
 //! podracer muzero   [--updates 20] [--simulations 16]
 //! podracer info     # list artifacts & agents
 //! ```
@@ -76,6 +77,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 learner_cores: args.get_usize("learner-cores", 2)?,
                 threads_per_actor_core: args.get_usize("threads", 2)?,
                 actor_batch: args.get_usize("batch", 32)?,
+                pipeline_stages: args.get_usize("pipeline-stages", 2)?,
                 unroll: args.get_usize("unroll", 20)?,
                 micro_batches: args.get_usize("micro-batches", 1)?,
                 discount: args.get_f64("discount", 0.99)? as f32,
@@ -93,6 +95,12 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             println!(
                 "  episodes={} mean_reward={:.3} staleness={:.2} last_loss={:.4}",
                 report.episodes, report.mean_episode_reward, report.mean_staleness, report.last_loss
+            );
+            println!(
+                "  actor pipeline: infer={:.2}s env_step={:.2}s hidden_by_overlap={:.2}s",
+                report.actor_infer_seconds,
+                report.actor_env_step_seconds,
+                report.actor_overlap_seconds
             );
             Ok(())
         }

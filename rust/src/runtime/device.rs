@@ -107,6 +107,23 @@ impl DeviceHandle {
         rx.recv().map_err(|_| anyhow!("core {} died executing {key}", self.core_id))?
     }
 
+    /// Like [`Self::execute_cached`], but returns immediately with a
+    /// receiver for the result. The split-batch pipelined actor fires one
+    /// sub-batch's inference through this while the worker pool steps
+    /// another sub-batch's environments (DESIGN.md §2).
+    pub fn execute_cached_async(
+        &self,
+        key: &str,
+        inputs: Vec<HostTensor>,
+        cached: Vec<(usize, String)>,
+    ) -> Result<mpsc::Receiver<Result<Vec<HostTensor>>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Command::Execute { key: key.to_string(), inputs, cached, reply })
+            .map_err(|_| anyhow!("core {} is down", self.core_id))?;
+        Ok(rx)
+    }
+
     /// Fire an execution and return a receiver for the result — lets an
     /// actor thread overlap env stepping with device compute (the paper's
     /// multiple-threads-per-core trick relies on this shape).
@@ -115,11 +132,7 @@ impl DeviceHandle {
         key: &str,
         inputs: Vec<HostTensor>,
     ) -> Result<mpsc::Receiver<Result<Vec<HostTensor>>>> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Command::Execute { key: key.to_string(), inputs, cached: Vec::new(), reply })
-            .map_err(|_| anyhow!("core {} is down", self.core_id))?;
-        Ok(rx)
+        self.execute_cached_async(key, inputs, Vec::new())
     }
 
     /// Fraction of wall-time this core spent executing programs.

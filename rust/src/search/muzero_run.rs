@@ -114,7 +114,7 @@ pub fn run_muzero(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<RunReport> {
     let stats = Arc::new(RunStats::new());
     let stop = Arc::new(AtomicBool::new(false));
     let bus = Arc::new(GradientBus::new(cfg.replicas));
-    let factory: Arc<crate::envs::EnvFactory> = Arc::new(make_factory(cfg.env_kind, cfg.seed));
+    let factory: Arc<crate::envs::EnvFactory> = Arc::new(make_factory(cfg.env_kind, cfg.seed)?);
 
     let mut actor_joins = Vec::new();
     let mut learner_joins = Vec::new();

@@ -53,7 +53,7 @@ fn muzero_two_learner_cores() {
 fn actor_pipeline_without_device() {
     // env -> builder -> shard -> queue -> unshard: the full host-side data
     // path, checked for content preservation.
-    let factory = make_factory("catch", 7);
+    let factory = make_factory("catch", 7).unwrap();
     let pool = WorkerPool::new(2);
     let env = BatchedEnv::new(&factory, 4, pool).unwrap();
     let (t_len, b, d, a) = (5, 4, 50, 3);
@@ -97,6 +97,7 @@ fn config_program_names_resolve_in_manifest() {
         let cfg = SebulbaConfig {
             agent: "seb_atari".into(),
             actor_batch: b,
+            pipeline_stages: 1,
             unroll: 60,
             learner_cores: 4,
             ..Default::default()
@@ -119,7 +120,8 @@ fn all_envs_step_through_batched_pipeline() {
                 _ => "atari_like",
             },
             3,
-        );
+        )
+        .unwrap();
         let pool = WorkerPool::new(2);
         let env = BatchedEnv::new(&factory, 3, pool).unwrap();
         let d = env.obs_dim();

@@ -1,0 +1,238 @@
+//! Pipelined-actor guarantees: `pipeline_stages = 1` reproduces the
+//! synchronous schedule bit-for-bit, and `pipeline_stages = 2` still trains
+//! while actually overlapping env stepping with inference (DESIGN.md §2).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use podracer::coordinator::actor::{spawn_actor, ActorConfig, ShardBundle};
+use podracer::coordinator::param_store::ParamStore;
+use podracer::coordinator::queue::BoundedQueue;
+use podracer::coordinator::sharder::unshard;
+use podracer::coordinator::stats::RunStats;
+use podracer::coordinator::trajectory::{Trajectory, TrajectoryBuilder};
+use podracer::coordinator::{Sebulba, SebulbaConfig};
+use podracer::envs::{make_factory, BatchedEnv, WorkerPool};
+use podracer::runtime::tensor::HostTensor;
+use podracer::runtime::Pod;
+use podracer::util::rng::Xoshiro256;
+
+fn artifacts() -> std::path::PathBuf {
+    let dir = podracer::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    dir
+}
+
+const B: usize = 32; // actor batch
+const T: usize = 20; // unroll
+const D: usize = 50; // catch obs dim
+const A: usize = 3; // catch actions
+const SEED: u64 = 123;
+const WINDOWS: usize = 3; // full-batch trajectory windows to compare
+
+/// Run the real actor thread against a frozen parameter store and collect
+/// enough windows to cover `WINDOWS` full batches of experience.
+fn run_actor(stages: usize) -> Vec<Trajectory> {
+    let mut pod = Pod::new(&artifacts(), 1).unwrap();
+    let infer = format!("seb_catch_infer_b{}", B / stages);
+    pod.load_program("seb_catch_init", &[0]).unwrap();
+    pod.load_program(&infer, &[0]).unwrap();
+    let core = pod.core(0).unwrap();
+    let outs = core
+        .execute("seb_catch_init", vec![HostTensor::scalar_i32(SEED as i32)])
+        .unwrap();
+    let params = outs[0].clone().into_f32().unwrap();
+
+    let store = Arc::new(ParamStore::new(params));
+    let queue = Arc::new(BoundedQueue::<ShardBundle>::new(2 * WINDOWS * stages));
+    let stats = Arc::new(RunStats::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let factory = Arc::new(make_factory("catch", SEED).unwrap());
+    let cfg = ActorConfig {
+        actor_id: 0,
+        batch: B,
+        pipeline_stages: stages,
+        unroll: T,
+        discount: 0.99,
+        num_shards: 1,
+        infer_program: infer,
+        obs_shape: vec![D],
+        num_actions: A,
+        seed: SEED,
+    };
+    let join = spawn_actor(
+        cfg,
+        core,
+        factory,
+        WorkerPool::new(2),
+        store,
+        queue.clone(),
+        stats,
+        stop.clone(),
+    );
+    // `stages` sub-batch windows hold one full batch of frames
+    let mut trajs = Vec::new();
+    for _ in 0..WINDOWS * stages {
+        trajs.push(unshard(&queue.pop().unwrap()).unwrap());
+    }
+    stop.store(true, Ordering::Relaxed);
+    queue.shutdown();
+    join.join().unwrap().unwrap();
+    trajs
+}
+
+/// The pre-pipeline synchronous actor schedule, inlined: blocking inference,
+/// blocking env step, one trajectory builder — the reference the pipelined
+/// actor must reproduce at `pipeline_stages = 1`.
+fn run_synchronous_reference() -> Vec<Trajectory> {
+    let mut pod = Pod::new(&artifacts(), 1).unwrap();
+    pod.load_program("seb_catch_init", &[0]).unwrap();
+    pod.load_program("seb_catch_infer_b32", &[0]).unwrap();
+    let core = pod.core(0).unwrap();
+    let outs = core
+        .execute("seb_catch_init", vec![HostTensor::scalar_i32(SEED as i32)])
+        .unwrap();
+    let params = outs[0].clone().into_f32().unwrap();
+    core.cache("params#ref", HostTensor::f32(vec![params.len()], params).unwrap())
+        .unwrap();
+
+    let factory = make_factory("catch", SEED).unwrap();
+    let env = BatchedEnv::new(&factory, B, WorkerPool::new(2)).unwrap();
+    let mut obs = vec![0.0f32; B * D];
+    env.reset(&mut obs);
+    // same stream the actor thread derives (actor_id = 0)
+    let mut rng = Xoshiro256::from_stream(SEED, 0);
+
+    let mut builder = TrajectoryBuilder::new(T, B, &[D], A);
+    let mut rewards = vec![0.0f32; B];
+    let mut dones = vec![false; B];
+    let mut discounts = vec![0.0f32; B];
+    let mut out = Vec::new();
+    for _ in 0..WINDOWS {
+        for _ in 0..T {
+            let inputs = vec![
+                HostTensor::f32(vec![B, D], obs.clone()).unwrap(),
+                HostTensor::scalar_i32(rng.next_program_seed()),
+            ];
+            let outs = core
+                .execute_cached("seb_catch_infer_b32", inputs, vec![(0, "params#ref".into())])
+                .unwrap();
+            let actions = outs[0].as_i32().unwrap().to_vec();
+            let logits = outs[1].as_f32().unwrap().to_vec();
+            let prev = obs.clone();
+            env.step(&actions, &mut obs, &mut rewards, &mut dones);
+            for i in 0..B {
+                discounts[i] = if dones[i] { 0.0 } else { 0.99 };
+            }
+            builder.push_step(&prev, &actions, &logits, &rewards, &discounts).unwrap();
+        }
+        out.push(builder.finish(&obs, 0, 0).unwrap());
+    }
+    out
+}
+
+#[test]
+fn stages_1_reproduces_the_synchronous_schedule_bit_for_bit() {
+    let piped = run_actor(1);
+    let reference = run_synchronous_reference();
+    assert_eq!(piped.len(), reference.len());
+    for (w, (p, r)) in piped.iter().zip(&reference).enumerate() {
+        assert_eq!(p.t_len, r.t_len, "window {w}");
+        assert_eq!(p.batch, r.batch, "window {w}");
+        assert_eq!(p.actions, r.actions, "window {w}: actions diverged");
+        assert_eq!(p.obs, r.obs, "window {w}: observations diverged");
+        assert_eq!(p.rewards, r.rewards, "window {w}: rewards diverged");
+        assert_eq!(p.discounts, r.discounts, "window {w}: discounts diverged");
+        assert_eq!(p.behaviour_logits, r.behaviour_logits, "window {w}: logits diverged");
+    }
+}
+
+#[test]
+fn stages_2_covers_the_same_envs_and_frames() {
+    // The split actor must partition, not duplicate: each full-batch round
+    // of sub-batch windows carries exactly B*T frames, and the two stages'
+    // first observations tile the unsplit reset layout.
+    let piped = run_actor(2);
+    let frames: usize = piped.iter().map(|t| t.frames()).sum();
+    assert_eq!(frames, WINDOWS * B * T);
+    for t in &piped {
+        assert_eq!(t.batch, B / 2);
+        assert_eq!(t.t_len, T);
+    }
+
+    // stage 0 + stage 1 reset observations == unsplit reset observations
+    let factory = make_factory("catch", SEED).unwrap();
+    let env = BatchedEnv::new(&factory, B, WorkerPool::new(2)).unwrap();
+    let mut obs = vec![0.0f32; B * D];
+    env.reset(&mut obs);
+    let half = B / 2 * D;
+    assert_eq!(&piped[0].obs[..half], &obs[..half], "stage 0 resets diverged");
+    assert_eq!(&piped[1].obs[..half], &obs[half..], "stage 1 resets diverged");
+}
+
+#[test]
+fn stages_2_still_trains_catch() {
+    // Same bar as sebulba_e2e::learning_signal_on_catch, through the
+    // double-buffered schedule (random play ≈ -0.6 mean episode reward).
+    let cfg = SebulbaConfig {
+        agent: "seb_catch".into(),
+        env_kind: "catch",
+        actor_cores: 1,
+        learner_cores: 1,
+        threads_per_actor_core: 2,
+        actor_batch: 32,
+        pipeline_stages: 2,
+        unroll: 20,
+        micro_batches: 1,
+        discount: 0.99,
+        queue_capacity: 2,
+        env_workers: 2,
+        replicas: 1,
+        total_updates: 300,
+        seed: 123,
+    };
+    let report = Sebulba::run(&artifacts(), &cfg).unwrap();
+    assert_eq!(report.updates, 300);
+    assert!(
+        report.mean_episode_reward > -0.3,
+        "no learning signal through the pipeline: mean episode reward {}",
+        report.mean_episode_reward
+    );
+}
+
+#[test]
+fn stages_2_reports_overlap_on_a_slow_env() {
+    // atari_like's pixel rendering is the env latency the split exists to
+    // hide; a single actor thread on a single core can only overlap through
+    // the pipeline, so hidden-overlap seconds must come out positive.
+    let cfg = SebulbaConfig {
+        agent: "seb_atari".into(),
+        env_kind: "atari_like",
+        actor_cores: 1,
+        learner_cores: 1,
+        threads_per_actor_core: 1,
+        actor_batch: 32,
+        pipeline_stages: 2,
+        unroll: 20,
+        micro_batches: 1,
+        discount: 0.99,
+        queue_capacity: 2,
+        env_workers: 2,
+        replicas: 1,
+        total_updates: 4,
+        seed: 5,
+    };
+    let report = Sebulba::run(&artifacts(), &cfg).unwrap();
+    assert_eq!(report.updates, 4);
+    assert!(report.actor_infer_seconds > 0.0);
+    assert!(report.actor_env_step_seconds > 0.0);
+    assert!(
+        report.actor_overlap_seconds > 0.0,
+        "double buffering hid no work: infer={:.3}s env={:.3}s loop={:.3}s",
+        report.actor_infer_seconds,
+        report.actor_env_step_seconds,
+        report.actor_loop_seconds
+    );
+}

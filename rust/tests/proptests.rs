@@ -184,7 +184,7 @@ fn prop_batched_env_equals_serial_stepping() {
             (batch, steps, seed, workers)
         },
         |&(batch, steps, seed, workers)| {
-            let factory = make_factory("catch", seed);
+            let factory = make_factory("catch", seed).map_err(|e| e.to_string())?;
             let pool = WorkerPool::new(workers);
             let be = BatchedEnv::new(&factory, batch, pool).map_err(|e| e.to_string())?;
             let mut serial: Vec<_> = (0..batch).map(|i| factory(i)).collect();

@@ -19,6 +19,7 @@ fn small_cfg(updates: u64) -> SebulbaConfig {
         learner_cores: 1,
         threads_per_actor_core: 1,
         actor_batch: 32,
+        pipeline_stages: 1, // the seed geometry; pipelining has its own e2e suite
         unroll: 20,
         micro_batches: 1,
         discount: 0.99,
