@@ -4,7 +4,7 @@
 ARTIFACTS := artifacts
 BENCHES   := $(notdir $(basename $(wildcard rust/benches/*.rs)))
 
-.PHONY: all artifacts build test quickstart bench fmt clippy
+.PHONY: all artifacts build test quickstart bench bench-learner-pipeline fmt clippy
 
 all: artifacts build
 
@@ -28,6 +28,11 @@ bench:
 		echo "== $$b =="; \
 		cargo bench --bench $$b || exit 1; \
 	done
+
+# The learner-pipeline ablation on its own (ISSUE 2 tentpole; CI smoke-runs
+# it with PODRACER_BENCH_FAST=1 so the 1-vs-2 sweep stays green).
+bench-learner-pipeline:
+	cargo bench --bench ablation_learner_pipeline
 
 fmt:
 	cargo fmt --all -- --check

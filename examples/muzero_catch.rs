@@ -31,6 +31,7 @@ fn main() -> anyhow::Result<()> {
         learner_cores: 2,
         threads_per_actor_core: 1,
         num_simulations: args.get_usize("simulations", 16)?,
+        learner_pipeline: 1,
         discount: 0.997,
         queue_capacity: 4,
         env_workers: 2,

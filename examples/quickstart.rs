@@ -27,6 +27,7 @@ fn main() -> anyhow::Result<()> {
         threads_per_actor_core: 2,
         actor_batch: 32,
         pipeline_stages: 2, // double-buffered actors: infer one half-batch, step the other
+        learner_pipeline: 2, // double-buffered learner: next grads run under collective+apply
         unroll: 20,
         micro_batches: 1,
         discount: 0.99,

@@ -35,6 +35,7 @@ fn main() -> anyhow::Result<()> {
         threads_per_actor_core: 2,
         actor_batch: args.get_usize("batch", 32)?,
         pipeline_stages: args.get_usize("pipeline-stages", 2)?,
+        learner_pipeline: args.get_usize("learner-pipeline", 2)?,
         unroll: 20,
         micro_batches: 1,
         discount: 0.99,

@@ -31,6 +31,7 @@ fn main() -> anyhow::Result<()> {
             threads_per_actor_core: threads,
             actor_batch: 32,
             pipeline_stages: 1, // thread-level overlap only: isolate the ablation
+            learner_pipeline: 2, // default learner schedule; this sweep holds it fixed
             unroll: 20,
             micro_batches: 1,
             discount: 0.99,

@@ -34,6 +34,7 @@ fn main() -> anyhow::Result<()> {
             threads_per_actor_core: 1,
             actor_batch: 32,
             pipeline_stages: 1, // keep the seed geometry: this sweep is about the core split
+            learner_pipeline: 2, // default learner schedule; this sweep holds it fixed
             unroll: 20,
             micro_batches: 1,
             discount: 0.99,

@@ -1,0 +1,87 @@
+//! Ablation: double-buffered learner rounds (`learner_pipeline`).
+//!
+//! The paper's Sebulba learner keeps its cores saturated by *streaming*
+//! sharded batches through the update function; a strictly serial
+//! pop→grad→reduce→apply loop instead parks the learner cores during the
+//! host-side collective and the apply round-trip. This sweep measures what
+//! depth-2 pipelining hides (DESIGN.md §9): at `learner_pipeline = 2`,
+//! round k+1's grad programs run on the learner cores while round k's
+//! collective + apply retire on the host, so the exposed learner schedule
+//! (`learner_active_seconds`, a critical-path candidate for
+//! `projected_fps`) collapses toward pure device time.
+//!
+//! Config notes: catch keeps the actors cheap so the learner path is the
+//! bottleneck, `micro_batches = 2` gives every bundle two grad rounds so
+//! the pipeline fills deterministically, and two actor threads keep the
+//! trajectory queue from starving the learner.
+
+use podracer::benchkit::Bench;
+use podracer::coordinator::{Sebulba, SebulbaConfig};
+use podracer::runtime::Pod;
+
+fn main() -> anyhow::Result<()> {
+    podracer::util::logging::init();
+    let artifacts = podracer::artifacts_dir();
+    let fast = std::env::var("PODRACER_BENCH_FAST").is_ok();
+    let updates = if fast { 6 } else { 40 };
+    let depths = [1usize, 2];
+
+    let mut bench =
+        Bench::new("ablation: learner pipeline (double-buffered grad/apply rounds)");
+    let mut rows = Vec::new();
+
+    for &depth in &depths {
+        let cfg = SebulbaConfig {
+            agent: "seb_catch".into(),
+            env_kind: "catch",
+            actor_cores: 1,
+            learner_cores: 2,
+            threads_per_actor_core: 2, // keep the learner fed: it must be the bottleneck
+            actor_batch: 32,
+            pipeline_stages: 2,
+            learner_pipeline: depth,
+            unroll: 20,
+            micro_batches: 2, // two rounds per bundle: the pipeline fills every window
+            discount: 0.99,
+            queue_capacity: 4,
+            env_workers: 2,
+            replicas: 1,
+            total_updates: updates,
+            seed: 7,
+        };
+        let mut out = (0.0, 0.0, 0.0, 0.0);
+        bench.case(&format!("learner_pipeline={depth}"), "projected frames/s", || {
+            // Fresh pod per repeat: core busy-time accumulates for the life
+            // of a pod and projected_fps divides by the max core busy — a
+            // shared pod would charge each run with every previous run's
+            // device time and sink the depth-1 vs depth-2 comparison.
+            let mut pod = Pod::new(&artifacts, 3).unwrap();
+            let r = Sebulba::run_on(&mut pod, &cfg).unwrap();
+            out = (
+                r.projected_fps,
+                r.fps,
+                r.learner_active_seconds,
+                r.learner_overlap_seconds,
+            );
+            r.projected_fps
+        });
+        rows.push((depth, out.0, out.1, out.2, out.3));
+    }
+
+    println!("\n| learner pipeline | projected fps | wall fps | learner active (s) | hidden by overlap (s) |");
+    println!("|---|---|---|---|---|");
+    for &(d, pfps, fps, active, overlap) in &rows {
+        println!("| {d} | {pfps:.0} | {fps:.0} | {active:.2} | {overlap:.2} |");
+    }
+    println!(
+        "\nshape check (streaming-learner claim): at learner_pipeline=2 the gradient\n\
+         harvest, host collective and bus wait retire under the next round's grads\n\
+         (the apply stays serial on core 0 — DESIGN.md §9), so hidden-overlap seconds\n\
+         must be ~0 at depth 1 and positive at depth 2, learner-active seconds must\n\
+         shrink by the exposed host time, and projected fps must come out higher on\n\
+         the same config. wall fps moves the same way on a fixed topology."
+    );
+
+    bench.finish();
+    Ok(())
+}

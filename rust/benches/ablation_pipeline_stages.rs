@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
             threads_per_actor_core: 1, // a single thread: overlap must come from the pipeline
             actor_batch: 64,
             pipeline_stages: stages,
+            learner_pipeline: 2, // default learner schedule; this sweep is about the actors
             unroll: 20,
             micro_batches: 1,
             discount: 0.99,

@@ -26,6 +26,7 @@ fn main() -> anyhow::Result<()> {
             threads_per_actor_core: 2,
             actor_batch: 32,
             pipeline_stages: 1, // keep the seed geometry: this sweep is about T
+            learner_pipeline: 2, // default learner schedule; this sweep holds it fixed
             unroll: t,
             micro_batches: 1,
             discount: 0.99,

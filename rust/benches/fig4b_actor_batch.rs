@@ -32,6 +32,7 @@ fn main() -> anyhow::Result<()> {
             threads_per_actor_core: 1,
             actor_batch: batch,
             pipeline_stages: 1, // grad/infer variants are lowered for the full batch sweep
+            learner_pipeline: 2, // default learner schedule; this sweep holds it fixed
             unroll: 60,
             micro_batches: 1,
             discount: 0.99,

@@ -30,6 +30,7 @@ fn main() -> anyhow::Result<()> {
             learner_cores: 2,
             threads_per_actor_core: 1,
             num_simulations: if fast { 4 } else { 8 },
+            learner_pipeline: 1,
             discount: 0.997,
             queue_capacity: 2,
             env_workers: 2,

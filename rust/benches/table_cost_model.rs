@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
         threads_per_actor_core: 2,
         actor_batch: 32,
         pipeline_stages: 2, // the paper's split-batch actors are part of the headline cost
+        learner_pipeline: 2, // double-buffered learner rounds: part of the headline cost
         unroll: 60,
         micro_batches: 1,
         discount: 0.99,

@@ -101,10 +101,22 @@ impl GradientBus {
             return Ok(grads); // fast path: single replica
         }
         let mut g = self.state.lock().unwrap();
-        let my_gen = g.generation;
+        // A fast replica can lap the round: it re-enters the next
+        // `all_reduce` while slower participants are still collecting the
+        // current result. Hold it here until the round fully drains
+        // (`result` is cleared once `collected == n`) — otherwise its
+        // wait below would see `result.is_some()` with `generation` still
+        // unbumped, skip the wait, and return the *previous* round's mean.
+        while g.result.is_some() && !g.shutdown {
+            g = self.cv.wait(g).unwrap();
+        }
+        if g.shutdown {
+            bail!("gradient bus shut down");
+        }
         if g.posted[id].is_some() {
             bail!("participant {id} posted twice in one round");
         }
+        let my_gen = g.generation;
         g.posted[id] = Some(grads);
 
         let all_posted = g.posted.iter().all(Option::is_some);
@@ -214,6 +226,44 @@ mod tests {
             let r1 = t.join().unwrap();
             assert_eq!(r0, r1);
             assert!((r0[0] - (round as f32 + 0.5)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn bus_lapping_replicas_get_fresh_round_means() {
+        // Regression for the round-lapping race: two fast participants and
+        // one slow one. Whichever fast participant posts last computes the
+        // mean and immediately re-enters the next round — before the other
+        // two have collected. It must block at the entry gate until the
+        // round drains, not skip the wait on the still-set `result` and
+        // walk off with the previous round's mean.
+        const ROUNDS: usize = 100;
+        let bus = Arc::new(GradientBus::new(3));
+        let mut handles = Vec::new();
+        for id in 0..3 {
+            let bus = bus.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut out = Vec::with_capacity(ROUNDS);
+                for r in 0..ROUNDS {
+                    if id == 2 {
+                        // the slow replica: arrives (and so collects) late
+                        std::thread::sleep(std::time::Duration::from_micros(300));
+                    }
+                    let v = (r * 3 + id) as f32;
+                    out.push(bus.all_reduce(id, vec![v]).unwrap()[0]);
+                }
+                out
+            }));
+        }
+        let results: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (id, res) in results.iter().enumerate() {
+            for (r, got) in res.iter().enumerate() {
+                let want = (r * 3 + 1) as f32; // mean of 3r, 3r+1, 3r+2
+                assert_eq!(
+                    *got, want,
+                    "participant {id} got a stale mean in round {r}: {got} != {want}"
+                );
+            }
         }
     }
 

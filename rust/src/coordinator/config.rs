@@ -23,6 +23,14 @@ pub struct SebulbaConfig {
     /// other half — DESIGN.md §2). 1 = fully synchronous (the pre-pipeline
     /// schedule, bit-for-bit); 2 = double-buffered (default).
     pub pipeline_stages: usize,
+    /// Grad/apply rounds the learner keeps in flight — the learner-side
+    /// analogue of `pipeline_stages` (DESIGN.md §9). While round k runs the
+    /// host-side collective and the apply program, round k+1's grad
+    /// programs are already executing on the learner cores against the
+    /// pre-apply parameter snapshot. 1 = the serial pop→grad→reduce→apply
+    /// schedule (bit-for-bit the pre-pipeline learner); 2 = double-buffered
+    /// (default). Each extra level costs one update of gradient staleness.
+    pub learner_pipeline: usize,
     /// Trajectory length T (paper: 20 IMPALA, 60 Sebulba).
     pub unroll: usize,
     /// Split each trajectory into `micro_batches` sequential updates
@@ -52,6 +60,7 @@ impl Default for SebulbaConfig {
             threads_per_actor_core: 2,
             actor_batch: 32,
             pipeline_stages: 2,
+            learner_pipeline: 2,
             unroll: 20,
             micro_batches: 1,
             discount: 0.99,
@@ -117,6 +126,9 @@ impl SebulbaConfig {
         }
         if self.pipeline_stages == 0 {
             bail!("pipeline_stages must be >= 1 (1 = synchronous actor)");
+        }
+        if self.learner_pipeline == 0 {
+            bail!("learner_pipeline must be >= 1 (1 = serial learner)");
         }
         if self.actor_batch % self.pipeline_stages != 0 {
             bail!(
@@ -187,6 +199,20 @@ mod tests {
     }
 
     #[test]
+    fn learner_pipeline_is_geometry_neutral() {
+        // Pipelined rounds reuse the same grad/apply programs — depth only
+        // changes the schedule, never the lowered shapes, so no new AOT
+        // variants are needed.
+        let serial = SebulbaConfig { learner_pipeline: 1, ..Default::default() };
+        let piped = SebulbaConfig { learner_pipeline: 2, ..Default::default() };
+        piped.validate().unwrap();
+        assert_eq!(serial.grad_program(), piped.grad_program());
+        assert_eq!(serial.apply_program(), piped.apply_program());
+        assert_eq!(serial.infer_program(), piped.infer_program());
+        assert_eq!(serial.shard_batch(), piped.shard_batch());
+    }
+
+    #[test]
     fn micro_batches_shrink_shards() {
         let cfg = SebulbaConfig {
             actor_batch: 32,
@@ -208,6 +234,8 @@ mod tests {
         let bad = SebulbaConfig { threads_per_actor_core: 0, ..Default::default() };
         assert!(bad.validate().is_err());
         let bad = SebulbaConfig { pipeline_stages: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = SebulbaConfig { learner_pipeline: 0, ..Default::default() };
         assert!(bad.validate().is_err());
         // 32 envs cannot split into 3 equal stages
         let bad = SebulbaConfig { pipeline_stages: 3, ..Default::default() };

@@ -1,18 +1,31 @@
-//! The learner thread: grad on every learner core, collective, apply.
+//! The learner thread: pipelined grad rounds on every learner core,
+//! collective, apply.
 //!
 //! One learner thread per replica (the paper: "a single learner thread on
 //! host then takes the handle to the data (already sharded across the
 //! appropriate learner cores), and executes the same update function on all
-//! the TPU cores dedicated to learning"). Per bundle round:
+//! the TPU cores dedicated to learning"). Per update round:
 //!
 //! 1. launch the grad program on all learner cores concurrently
-//!    (`execute_async`), one shard each;
+//!    (`execute_cached_async`, parameters device-resident), one shard each;
 //! 2. all-reduce the gradients (deterministic tree mean) — within the
 //!    replica, then across replicas on the [`GradientBus`];
 //! 3. run the apply program once, publish the new parameters.
+//!
+//! Rounds are *software-pipelined* to depth `LearnerConfig::pipeline`
+//! (`SebulbaConfig::learner_pipeline`, DESIGN.md §9): while round k runs
+//! the host-side collective and the apply program, round k+1's grad
+//! programs are already in flight on the learner cores against the
+//! pre-apply parameter snapshot, and the next bundle is prefetched from the
+//! queue with `pop_timeout` so starvation stays observable in
+//! `pop_block_seconds`. Depth 1 degenerates to the serial
+//! pop→grad→reduce→apply schedule, bit-for-bit (pinned by
+//! `rust/tests/learner_pipeline.rs`); each extra level costs one update of
+//! gradient staleness.
 
-use std::sync::Arc;
-use std::time::Instant;
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -21,9 +34,15 @@ use crate::runtime::DeviceHandle;
 
 use super::actor::ShardBundle;
 use super::collective::{all_reduce_mean, GradientBus};
-use super::param_store::ParamStore;
+use super::param_store::{ParamSnapshot, ParamStore};
 use super::queue::BoundedQueue;
 use super::stats::RunStats;
+use super::trajectory::Trajectory;
+
+/// How long a launch polls the queue for the next bundle while rounds are
+/// still in flight: long enough to piggyback on a push that is about to
+/// land, short enough that a finished round never stalls behind data.
+const PREFETCH_POLL: Duration = Duration::from_millis(1);
 
 pub struct LearnerConfig {
     pub replica_id: usize,
@@ -32,6 +51,9 @@ pub struct LearnerConfig {
     /// Shards per update round (= learner cores).
     pub shards_per_round: usize,
     pub total_updates: u64,
+    /// Grad/apply rounds kept in flight (1 = serial, bit-for-bit; 2 =
+    /// double-buffered). See `SebulbaConfig::learner_pipeline`.
+    pub pipeline: usize,
 }
 
 pub struct LearnerHandles {
@@ -40,6 +62,59 @@ pub struct LearnerHandles {
     pub queue: Arc<BoundedQueue<ShardBundle>>,
     pub stats: Arc<RunStats>,
     pub bus: Arc<GradientBus>,
+}
+
+/// One grad round in flight on the learner cores.
+struct InFlightRound {
+    /// Per-core receivers for the grad programs, in core order.
+    waits: Vec<mpsc::Receiver<Result<Vec<HostTensor>>>>,
+    /// Parameter snapshot the grads are computed against — the staleness
+    /// reference for this round. The apply chains from the latest params,
+    /// not this snapshot (at depth ≥ 2 the two differ by an update).
+    snap: Arc<ParamSnapshot>,
+    /// Version of the parameters that generated the round's shards.
+    data_version: u64,
+    issued: Instant,
+}
+
+/// Launch one grad round: take `cores.len()` shards off `pending`, refresh
+/// each core's device-resident parameter slot if it holds a stale version
+/// (rounds launched in the same fill window share a snapshot and skip the
+/// upload; steady-state retires publish between launches, so then it costs
+/// the same as passing params inline), and fire the grad programs async.
+fn launch_round(
+    cfg: &LearnerConfig,
+    h: &LearnerHandles,
+    pending: &mut VecDeque<Trajectory>,
+    param_slot: &str,
+    core_versions: &mut [u64],
+) -> Result<InFlightRound> {
+    let snap = h.store.latest();
+    let data_version = pending
+        .front()
+        .expect("caller ensured a full round of shards")
+        .param_version;
+    let issued = Instant::now();
+    let mut waits = Vec::with_capacity(h.cores.len());
+    for (i, core) in h.cores.iter().enumerate() {
+        let shard = pending.pop_front().expect("caller ensured a full round of shards");
+        if core_versions[i] != snap.version {
+            core.cache(
+                param_slot,
+                HostTensor::f32(vec![snap.params.len()], snap.params.clone())?,
+            )?;
+            core_versions[i] = snap.version;
+        }
+        // shards moved, not copied — pixel trajectories are tens of MB
+        // (§Perf L3-2); params come from the device cache slot (input 0)
+        let inputs = shard.into_tensors()?;
+        waits.push(core.execute_cached_async(
+            &cfg.grad_program,
+            inputs,
+            vec![(0, param_slot.to_string())],
+        )?);
+    }
+    Ok(InFlightRound { waits, snap, data_version, issued })
 }
 
 /// Run the learner loop to `total_updates` on the calling thread.
@@ -56,79 +131,136 @@ pub fn learner_main(
     if cfg.shards_per_round != l {
         bail!("shards_per_round {} != learner cores {}", cfg.shards_per_round, l);
     }
-
-    let mut updates = 0u64;
-    'outer: while updates < cfg.total_updates {
-        let bundle = match h.queue.pop() {
-            Ok(b) => b,
-            Err(_) => break, // shutdown: drain finished
-        };
-        if bundle.len() % l != 0 {
-            bail!("bundle of {} shards not divisible by {} cores", bundle.len(), l);
-        }
-        let staleness = h
-            .store
-            .version()
-            .saturating_sub(bundle[0].param_version);
-
-        // micro-batch rounds: bundle = rounds x cores shards
-        let rounds = bundle.len() / l;
-        let mut shards = bundle.into_iter();
-        for _round in 0..rounds {
-            let snap = h.store.latest();
-            let params =
-                HostTensor::f32(vec![snap.params.len()], snap.params.clone())?;
-
-            // 1) grad on all learner cores concurrently (shards moved, not
-            //    copied — pixel trajectories are tens of MB; §Perf L3-2)
-            let t0 = Instant::now();
-            let mut waits = Vec::with_capacity(l);
-            for core in h.cores.iter() {
-                let shard = shards.next().expect("bundle size checked above");
-                let mut inputs = vec![params.clone()];
-                inputs.extend(shard.into_tensors()?);
-                waits.push(core.execute_async(&cfg.grad_program, inputs)?);
-            }
-            let mut grads: Vec<Vec<f32>> = Vec::with_capacity(l);
-            let mut loss = 0.0f32;
-            for rx in waits {
-                let mut outs = rx
-                    .recv()
-                    .map_err(|_| anyhow::anyhow!("learner core died"))?
-                    .context("grad program")?;
-                loss += outs[1].as_f32()?[0];
-                // take ownership — no gradient-buffer copy (§Perf L3-2)
-                grads.push(outs.swap_remove(0).into_f32()?);
-            }
-            loss /= l as f32;
-            h.stats.grad_latency.record(t0.elapsed());
-
-            // 2) collective: within replica, then across replicas
-            all_reduce_mean(&mut grads)?;
-            let global = h.bus.all_reduce(cfg.replica_id, std::mem::take(&mut grads[0]))?;
-
-            // 3) apply once, publish
-            let t1 = Instant::now();
-            let apply_inputs = vec![
-                params.clone(),
-                HostTensor::f32(vec![opt_state.len()], std::mem::take(&mut opt_state))?,
-                HostTensor::f32(vec![global.len()], global)?,
-            ];
-            let mut outs = h.cores[0]
-                .execute(&cfg.apply_program, apply_inputs)
-                .context("apply program")?;
-            opt_state = outs.swap_remove(1).into_f32()?;
-            let new_params = outs.swap_remove(0).into_f32()?;
-            h.stats.apply_latency.record(t1.elapsed());
-
-            h.store.publish(new_params);
-            h.stats.record_update(staleness, loss);
-            updates += 1;
-            if updates >= cfg.total_updates {
-                break 'outer;
-            }
-        }
+    if cfg.pipeline == 0 {
+        bail!("learner pipeline depth must be >= 1");
     }
+
+    // Device-resident parameter cache, one slot name shared by this
+    // replica's learner cores; uploaded only when a core's version is stale.
+    let param_slot = format!("lparams#{}", cfg.replica_id);
+    let mut core_versions: Vec<u64> = vec![u64::MAX; l];
+
+    // Overlap accounting, mirroring the actor side (DESIGN.md §9).
+    let t_loop = Instant::now();
+    let mut grad_busy = Duration::ZERO;
+    let mut collective_busy = Duration::ZERO;
+    let mut apply_busy = Duration::ZERO;
+    let mut pop_blocked = Duration::ZERO;
+
+    let mut pending: VecDeque<Trajectory> = VecDeque::new();
+    let mut in_flight: VecDeque<InFlightRound> = VecDeque::new();
+    let mut launched = 0u64;
+    let mut retired = 0u64;
+    let mut queue_done = false;
+
+    while retired < cfg.total_updates {
+        // ---- fill: launch grad rounds while the pipeline has slots -------
+        while !queue_done && launched < cfg.total_updates && in_flight.len() < cfg.pipeline {
+            while pending.len() < l && !queue_done {
+                let t_pop = Instant::now();
+                let popped = if in_flight.is_empty() {
+                    // Nothing to retire: block until data (or shutdown).
+                    h.queue.pop().map(Some)
+                } else {
+                    // Rounds in flight: poll briefly — prefetch a bundle if
+                    // one is there, otherwise go retire instead of stalling.
+                    h.queue.pop_timeout(PREFETCH_POLL)
+                };
+                pop_blocked += t_pop.elapsed();
+                match popped {
+                    Ok(Some(bundle)) => {
+                        if bundle.len() % l != 0 {
+                            bail!(
+                                "bundle of {} shards not divisible by {} cores",
+                                bundle.len(),
+                                l
+                            );
+                        }
+                        pending.extend(bundle);
+                    }
+                    Ok(None) => break, // prefetch poll expired: retire first
+                    Err(_) => queue_done = true, // shutdown: drain finished
+                }
+            }
+            if pending.len() < l {
+                break;
+            }
+            let round = launch_round(cfg, h, &mut pending, &param_slot, &mut core_versions)?;
+            in_flight.push_back(round);
+            launched += 1;
+        }
+
+        // ---- retire the oldest round: grads → collective → apply ---------
+        let Some(round) = in_flight.pop_front() else {
+            if queue_done {
+                break; // queue drained mid-run: no more updates possible
+            }
+            continue;
+        };
+
+        // 1) harvest the round's gradients (buffers moved, not copied)
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(l);
+        let mut loss = 0.0f32;
+        for rx in round.waits {
+            let mut outs = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("learner core died"))?
+                .context("grad program")?;
+            loss += outs[1].as_f32()?[0];
+            grads.push(outs.swap_remove(0).into_f32()?);
+        }
+        loss /= l as f32;
+        // Issue → harvest: at depth ≥ 2 this span includes device queueing
+        // behind the previous round, which is exactly the hidden work the
+        // overlap metric counts.
+        let grad_span = round.issued.elapsed();
+        grad_busy += grad_span;
+        h.stats.grad_latency.record(grad_span);
+
+        // 2) collective: within replica, then across replicas
+        let t_coll = Instant::now();
+        all_reduce_mean(&mut grads)?;
+        let global = h.bus.all_reduce(cfg.replica_id, std::mem::take(&mut grads[0]))?;
+        collective_busy += t_coll.elapsed();
+
+        // 3) apply once, publish. The apply chains from the *latest*
+        //    published params: at depth ≥ 2 the round's grad snapshot is an
+        //    apply behind, and chaining from it would silently drop the
+        //    in-between update — only the gradient is allowed to be stale
+        //    (DESIGN.md §9). At depth 1 `latest()` is the round's snapshot,
+        //    bit-for-bit. The measured span includes core-0 queueing behind
+        //    the next round's grad at depth ≥ 2 (span caveats in §9).
+        let t_apply = Instant::now();
+        let current = h.store.latest();
+        let apply_inputs = vec![
+            HostTensor::f32(vec![current.params.len()], current.params.clone())?,
+            HostTensor::f32(vec![opt_state.len()], std::mem::take(&mut opt_state))?,
+            HostTensor::f32(vec![global.len()], global)?,
+        ];
+        let mut outs = h.cores[0]
+            .execute(&cfg.apply_program, apply_inputs)
+            .context("apply program")?;
+        opt_state = outs.swap_remove(1).into_f32()?;
+        let new_params = outs.swap_remove(0).into_f32()?;
+        apply_busy += t_apply.elapsed();
+        h.stats.apply_latency.record(t_apply.elapsed());
+
+        h.store.publish(new_params);
+        // Staleness against the snapshot this round actually grad-ed on —
+        // not the store version at bundle-pop time, which understates
+        // rounds 2..n of a micro-batched bundle (each publish in between
+        // ages the data) and every pipelined round.
+        h.stats
+            .record_update(round.snap.version.saturating_sub(round.data_version), loss);
+        retired += 1;
+    }
+
+    h.stats.record_learner_overlap(
+        grad_busy,
+        collective_busy,
+        apply_busy,
+        t_loop.elapsed().saturating_sub(pop_blocked),
+    );
 
     let final_params = h.store.latest().params.clone();
     Ok((final_params, opt_state))

@@ -5,10 +5,13 @@
 //! actor core) step batched host-side environments and run batched inference
 //! on their core, double-buffered over `pipeline_stages` sub-batches so env
 //! stepping hides behind device time (DESIGN.md §2); completed trajectories
-//! are sharded along the batch dimension and queued to the learners; the learner thread runs the grad
-//! program on every learner core, all-reduces the gradients (the paper's
-//! `psum`), applies the update, and publishes fresh parameters to the actor
-//! threads through the parameter store.
+//! are sharded along the batch dimension and queued to the learners; the
+//! learner thread runs the grad program on every learner core, all-reduces
+//! the gradients (the paper's `psum`), applies the update, and publishes
+//! fresh parameters to the actor threads through the parameter store. The
+//! learner rounds are themselves software-pipelined over
+//! `learner_pipeline` slots so the collective and apply retire under the
+//! next round's grads (DESIGN.md §9).
 
 pub mod actor;
 pub mod collective;

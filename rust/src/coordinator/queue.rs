@@ -88,13 +88,20 @@ impl<T> BoundedQueue<T> {
         }
     }
 
-    /// Pop with a timeout; `Ok(None)` on timeout.
+    /// Pop with a timeout; `Ok(None)` on timeout. Blocked time is recorded
+    /// on both the item and the timeout path — a timed-out wait is still
+    /// consumer starvation, and dropping it would silently undercount
+    /// `pop_block_seconds` for any timeout-polling consumer (the pipelined
+    /// learner's bundle prefetch).
     pub fn pop_timeout(&self, dur: Duration) -> Result<Option<T>, QueueError> {
-        let deadline = Instant::now() + dur;
+        let t0 = Instant::now();
+        let deadline = t0 + dur;
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(item) = g.items.pop_front() {
                 self.popped.fetch_add(1, Ordering::Relaxed);
+                self.pop_block_nanos
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 drop(g);
                 self.not_full.notify_one();
                 return Ok(Some(item));
@@ -104,6 +111,8 @@ impl<T> BoundedQueue<T> {
             }
             let now = Instant::now();
             if now >= deadline {
+                self.pop_block_nanos
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 return Ok(None);
             }
             let (guard, _timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
@@ -228,6 +237,37 @@ mod tests {
         let q: BoundedQueue<i32> = BoundedQueue::new(1);
         let r = q.pop_timeout(Duration::from_millis(10)).unwrap();
         assert!(r.is_none());
+    }
+
+    #[test]
+    fn pop_timeout_records_block_time_on_timeout() {
+        // Regression: the timeout path used to drop its blocked time, so
+        // timeout-polling consumers undercounted starvation.
+        let q: BoundedQueue<i32> = BoundedQueue::new(1);
+        let r = q.pop_timeout(Duration::from_millis(30)).unwrap();
+        assert!(r.is_none());
+        assert!(
+            q.pop_block_seconds() >= 0.025,
+            "timed-out wait not counted: {}s",
+            q.pop_block_seconds()
+        );
+    }
+
+    #[test]
+    fn pop_timeout_records_block_time_on_item() {
+        let q = Arc::new(BoundedQueue::<i32>::new(1));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.pop_timeout(Duration::from_millis(500)));
+        std::thread::sleep(Duration::from_millis(30));
+        q.push(7).unwrap();
+        assert_eq!(t.join().unwrap().unwrap(), Some(7));
+        // No wall-clock lower bound: on a loaded host the popper may only
+        // enter pop_timeout after the push landed. Any positive value is
+        // the regression signal — the old item path recorded nothing.
+        assert!(
+            q.pop_block_seconds() > 0.0,
+            "blocked wait before the item landed not counted"
+        );
     }
 
     #[test]

@@ -48,11 +48,159 @@ pub struct RunReport {
     /// `max(0, infer + env_step − loop_wall)` (DESIGN.md §2). ~0 when
     /// `pipeline_stages = 1`; grows with the overlap the schedule achieves.
     pub actor_overlap_seconds: f64,
+    /// Device span of learner grad rounds (issue → harvest; includes device
+    /// queueing when pipelined rounds overlap — DESIGN.md §9).
+    pub learner_grad_seconds: f64,
+    /// Host time in the collective (tree mean + GradientBus wait).
+    pub learner_collective_seconds: f64,
+    /// Apply-program spans (issue → new params on host). At
+    /// `learner_pipeline ≥ 2` the span includes core-0 queueing behind the
+    /// next round's already-issued grad, so it overstates the apply's own
+    /// cost (DESIGN.md §9).
+    pub learner_apply_seconds: f64,
+    /// Learner hot-loop wall time, excluding queue starvation (pop waits
+    /// are the actor side's deficit). The max over learner threads is a
+    /// critical-path candidate for `projected_fps`.
+    pub learner_active_seconds: f64,
+    /// Overlap indicator: per learner thread,
+    /// `max(0, grad + collective + apply − active)`. ~0 when
+    /// `learner_pipeline = 1`; positive when rounds coexist. Spans of
+    /// coexisting rounds cover the same wall intervals, so this
+    /// upper-bounds hidden seconds — the exact saving is the drop in
+    /// `learner_active_seconds` vs the serial schedule (DESIGN.md §9).
+    pub learner_overlap_seconds: f64,
     pub queue_push_block_seconds: f64,
     pub queue_pop_block_seconds: f64,
     pub final_params: Vec<f32>,
     /// Optimiser state of replica 0's learner (for warm-starting).
     pub final_opt_state: Vec<f32>,
+}
+
+/// Wake every thread parked on the pod's seams: set the stop flag, shut all
+/// trajectory queues, shut the gradient bus. Idempotent; called by a failing
+/// learner from its own thread (so in-order joins can't deadlock on a
+/// sibling parked in the bus or a queue) and by the coordinator at teardown.
+pub(crate) fn unblock_pod(
+    stop: &AtomicBool,
+    queues: &[Arc<BoundedQueue<ShardBundle>>],
+    bus: &GradientBus,
+) {
+    stop.store(true, Ordering::Relaxed);
+    for q in queues {
+        q.shutdown();
+    }
+    bus.shutdown();
+}
+
+/// Drop guard for a learner thread: unblocks the pod unless disarmed.
+/// Destructors run during unwinding, so this covers the panic path too —
+/// a panicking learner must not leave siblings parked in the bus while the
+/// coordinator's in-order joins wait on them. Disarmed only on clean
+/// completion (an early unblock there could error a sibling mid-collect).
+struct UnblockOnDrop {
+    stop: Arc<AtomicBool>,
+    queues: Vec<Arc<BoundedQueue<ShardBundle>>>,
+    bus: Arc<GradientBus>,
+    armed: bool,
+}
+
+impl Drop for UnblockOnDrop {
+    fn drop(&mut self) {
+        if self.armed {
+            unblock_pod(&self.stop, &self.queues, &self.bus);
+        }
+    }
+}
+
+/// Spawn a learner thread whose exit always leaves the pod joinable: the
+/// guard above unblocks every seam on an `Err` return *and* on a panic, so
+/// `join_pod_threads`' in-order joins can't deadlock on a parked sibling.
+pub(crate) fn spawn_guarded_learner(
+    name: String,
+    lcfg: LearnerConfig,
+    handles: LearnerHandles,
+    opt: Vec<f32>,
+    stop: Arc<AtomicBool>,
+    queues: Vec<Arc<BoundedQueue<ShardBundle>>>,
+    bus: Arc<GradientBus>,
+) -> std::thread::JoinHandle<Result<(Vec<f32>, Vec<f32>)>> {
+    std::thread::Builder::new()
+        .name(name)
+        .spawn(move || {
+            let mut guard = UnblockOnDrop { stop, queues, bus, armed: true };
+            let res = learner_main(&lcfg, &handles, opt);
+            guard.armed = res.is_err();
+            res // guard drops here: unblocks on Err (and on panic)
+        })
+        .expect("spawn learner")
+}
+
+/// Join learners (in index order — safe because a failing learner unblocks
+/// the pod from its own spawn wrapper) and then actors, aggregating every
+/// failure into one error chain (the first joined error may be a secondary
+/// "bus shut down" from a sibling unblocking the pod, not the root cause).
+/// Returns replica 0's (params, opt_state) on success.
+#[allow(clippy::type_complexity)]
+pub(crate) fn join_pod_threads(
+    label: &str,
+    stop: &AtomicBool,
+    queues: &[Arc<BoundedQueue<ShardBundle>>],
+    bus: &GradientBus,
+    learner_joins: Vec<std::thread::JoinHandle<Result<(Vec<f32>, Vec<f32>)>>>,
+    actor_joins: Vec<std::thread::JoinHandle<Result<()>>>,
+) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+    let mut replica0: Option<(Vec<f32>, Vec<f32>)> = None;
+    let mut learner_err: Option<anyhow::Error> = None;
+    for (r, j) in learner_joins.into_iter().enumerate() {
+        match j.join() {
+            Ok(Ok(out)) => {
+                if r == 0 {
+                    replica0 = Some(out);
+                }
+            }
+            Ok(Err(e)) => {
+                learner_err = Some(match learner_err.take() {
+                    None => e.context(format!("{label} learner {r} failed")),
+                    Some(prev) => prev.context(format!("{label} learner {r} also failed: {e:#}")),
+                });
+                unblock_pod(stop, queues, bus);
+            }
+            Err(_) => {
+                learner_err = Some(match learner_err.take() {
+                    None => anyhow::anyhow!("{label} learner {r} panicked"),
+                    Some(prev) => prev.context(format!("{label} learner {r} also panicked")),
+                });
+                unblock_pod(stop, queues, bus);
+            }
+        }
+    }
+    unblock_pod(stop, queues, bus);
+    let mut actor_err: Option<anyhow::Error> = None;
+    for j in actor_joins {
+        match j.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                if actor_err.is_none() {
+                    actor_err = Some(e.context(format!("{label} actor failed")));
+                }
+            }
+            Err(_) => {
+                if actor_err.is_none() {
+                    actor_err = Some(anyhow::anyhow!("{label} actor panicked"));
+                }
+            }
+        }
+    }
+    if let Some(e) = learner_err {
+        return Err(match actor_err {
+            Some(a) => e.context(format!("{label} actor also failed: {a:#}")),
+            None => e,
+        });
+    }
+    if let Some(e) = actor_err {
+        return Err(e);
+    }
+    Ok(replica0)
 }
 
 pub struct Sebulba;
@@ -125,7 +273,7 @@ impl Sebulba {
             }
         };
         log::info!(
-            "sebulba[{}]: params={} opt={} replicas={} cores={}A+{}L batch={}x{} T={}",
+            "sebulba[{}]: params={} opt={} replicas={} cores={}A+{}L batch={}x{} T={} lpipe={}",
             cfg.agent,
             params0.len(),
             opt0.len(),
@@ -134,7 +282,8 @@ impl Sebulba {
             cfg.learner_cores,
             cfg.pipeline_stages,
             cfg.stage_batch(),
-            cfg.unroll
+            cfg.unroll,
+            cfg.learner_pipeline
         );
 
         // ---- shared state ----------------------------------------------------
@@ -146,14 +295,17 @@ impl Sebulba {
 
         let mut actor_joins = Vec::new();
         let mut learner_joins = Vec::new();
-        let mut queues: Vec<Arc<BoundedQueue<ShardBundle>>> = Vec::new();
+        // All queues exist up front so a failing learner can unblock every
+        // replica's threads, not just its own (see the spawn below).
+        let queues: Vec<Arc<BoundedQueue<ShardBundle>>> = (0..cfg.replicas)
+            .map(|_| Arc::new(BoundedQueue::<ShardBundle>::new(cfg.queue_capacity)))
+            .collect();
         let t_start = Instant::now();
 
         for r in 0..cfg.replicas {
             let base = r * n_per;
             let store = Arc::new(ParamStore::new(params0.clone()));
-            let queue = Arc::new(BoundedQueue::<ShardBundle>::new(cfg.queue_capacity));
-            queues.push(queue.clone());
+            let queue = queues[r].clone();
             let pool = WorkerPool::new(cfg.env_workers);
 
             // actors: threads_per_actor_core per actor core
@@ -193,6 +345,7 @@ impl Sebulba {
                 apply_program: apply.clone(),
                 shards_per_round: cfg.learner_cores,
                 total_updates: cfg.total_updates,
+                pipeline: cfg.learner_pipeline,
             };
             let cores: Vec<DeviceHandle> = (0..cfg.learner_cores)
                 .map(|i| pod.core(base + cfg.actor_cores + i))
@@ -204,48 +357,29 @@ impl Sebulba {
                 stats: stats.clone(),
                 bus: bus.clone(),
             };
-            let opt = opt0.clone();
-            learner_joins.push(
-                std::thread::Builder::new()
-                    .name(format!("learner-{r}"))
-                    .spawn(move || learner_main(&lcfg, &handles, opt))
-                    .expect("spawn learner"),
-            );
+            learner_joins.push(spawn_guarded_learner(
+                format!("learner-{r}"),
+                lcfg,
+                handles,
+                opt0.clone(),
+                stop.clone(),
+                queues.clone(),
+                bus.clone(),
+            ));
         }
 
         // ---- wait for learners, then tear down actors ------------------------
+        // Every thread is joined even on a learner error: returning early
+        // would leave actors running against a shut-down queue and drop
+        // their `Result`s (and other replicas' learners parked on the bus).
         let mut final_params = params0;
         let mut final_opt_state = opt0;
-        for (r, j) in learner_joins.into_iter().enumerate() {
-            match j.join() {
-                Ok(Ok((params, opt))) => {
-                    if r == 0 {
-                        final_params = params;
-                        final_opt_state = opt;
-                    }
-                }
-                Ok(Err(e)) => {
-                    stop.store(true, Ordering::Relaxed);
-                    for q in &queues {
-                        q.shutdown();
-                    }
-                    return Err(e.context(format!("learner {r} failed")));
-                }
-                Err(_) => anyhow::bail!("learner {r} panicked"),
-            }
+        if let Some((params, opt)) =
+            join_pod_threads("sebulba", &stop, &queues, &bus, learner_joins, actor_joins)?
+        {
+            final_params = params;
+            final_opt_state = opt;
         }
-        stop.store(true, Ordering::Relaxed);
-        for q in &queues {
-            q.shutdown();
-        }
-        for j in actor_joins {
-            match j.join() {
-                Ok(Ok(())) => {}
-                Ok(Err(e)) => return Err(e.context("actor failed")),
-                Err(_) => anyhow::bail!("actor panicked"),
-            }
-        }
-        bus.shutdown();
 
         // ---- report ----------------------------------------------------------
         let elapsed = t_start.elapsed().as_secs_f64();
@@ -261,6 +395,12 @@ impl Sebulba {
         for cid in 0..cfg.total_cores() {
             critical_path = critical_path.max(pod.core(cid)?.busy_seconds());
         }
+        // An exposed learner schedule lengthens the critical path
+        // (DESIGN.md §9): a learner thread's active seconds (wall minus
+        // data starvation) bound how fast its replica can retire rounds
+        // even on truly parallel cores. Fully overlapped, this collapses to
+        // the learner cores' busy time and the per-core max wins.
+        critical_path = critical_path.max(stats.learner_active_max_seconds());
         let frames = stats.env_frames.frames();
         let report = RunReport {
             frames,
@@ -278,6 +418,11 @@ impl Sebulba {
             actor_env_step_seconds: stats.actor_env_seconds(),
             actor_loop_seconds: stats.actor_loop_seconds(),
             actor_overlap_seconds: stats.actor_overlap_seconds(),
+            learner_grad_seconds: stats.learner_grad_seconds(),
+            learner_collective_seconds: stats.learner_collective_seconds(),
+            learner_apply_seconds: stats.learner_apply_seconds(),
+            learner_active_seconds: stats.learner_active_seconds(),
+            learner_overlap_seconds: stats.learner_overlap_seconds(),
             queue_push_block_seconds: queues.iter().map(|q| q.push_block_seconds()).sum(),
             queue_pop_block_seconds: queues.iter().map(|q| q.pop_block_seconds()).sum(),
             final_params,

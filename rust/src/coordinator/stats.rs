@@ -131,6 +131,20 @@ pub struct RunStats {
     pub actor_env_nanos: AtomicU64,
     pub actor_loop_nanos: AtomicU64,
     pub actor_overlap_nanos: AtomicU64,
+    /// Learner pipeline overlap accounting (DESIGN.md §9), summed over
+    /// learner threads: grad-round spans (issue → harvest; includes device
+    /// queueing when rounds overlap), host collective time (tree mean +
+    /// GradientBus wait), apply spans, active wall time (hot loop minus
+    /// queue starvation), and the hidden portion
+    /// `max(0, grad + collective + apply − active)` per thread.
+    pub learner_grad_nanos: AtomicU64,
+    pub learner_collective_nanos: AtomicU64,
+    pub learner_apply_nanos: AtomicU64,
+    pub learner_active_nanos: AtomicU64,
+    pub learner_overlap_nanos: AtomicU64,
+    /// Max active wall time over learner threads — the exposed learner
+    /// schedule, a critical-path candidate (DESIGN.md §9).
+    pub learner_active_max_nanos: AtomicU64,
 }
 
 impl RunStats {
@@ -183,6 +197,55 @@ impl RunStats {
         self.actor_loop_nanos.fetch_add(w, Ordering::Relaxed);
         self.actor_overlap_nanos
             .fetch_add((i + e).saturating_sub(w), Ordering::Relaxed);
+    }
+
+    /// Record one learner thread's lifetime totals: grad-round spans, host
+    /// collective time, apply spans, and active wall time (hot loop minus
+    /// time blocked popping trajectory bundles — starvation is the actor
+    /// side's deficit). The overlapped share is what the learner pipeline
+    /// hid — with `learner_pipeline = 1` the rounds are serial and it is ~0.
+    pub fn record_learner_overlap(
+        &self,
+        grad: std::time::Duration,
+        collective: std::time::Duration,
+        apply: std::time::Duration,
+        active: std::time::Duration,
+    ) {
+        let g = grad.as_nanos() as u64;
+        let c = collective.as_nanos() as u64;
+        let a = apply.as_nanos() as u64;
+        let w = active.as_nanos() as u64;
+        self.learner_grad_nanos.fetch_add(g, Ordering::Relaxed);
+        self.learner_collective_nanos.fetch_add(c, Ordering::Relaxed);
+        self.learner_apply_nanos.fetch_add(a, Ordering::Relaxed);
+        self.learner_active_nanos.fetch_add(w, Ordering::Relaxed);
+        self.learner_overlap_nanos
+            .fetch_add((g + c + a).saturating_sub(w), Ordering::Relaxed);
+        self.learner_active_max_nanos.fetch_max(w, Ordering::Relaxed);
+    }
+
+    pub fn learner_grad_seconds(&self) -> f64 {
+        self.learner_grad_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn learner_collective_seconds(&self) -> f64 {
+        self.learner_collective_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn learner_apply_seconds(&self) -> f64 {
+        self.learner_apply_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn learner_active_seconds(&self) -> f64 {
+        self.learner_active_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn learner_overlap_seconds(&self) -> f64 {
+        self.learner_overlap_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn learner_active_max_seconds(&self) -> f64 {
+        self.learner_active_max_nanos.load(Ordering::Relaxed) as f64 * 1e-9
     }
 
     pub fn actor_infer_seconds(&self) -> f64 {
@@ -301,6 +364,33 @@ mod tests {
         assert!((s.actor_infer_seconds() - 0.090).abs() < 1e-6);
         assert!((s.actor_env_seconds() - 0.120).abs() < 1e-6);
         assert!((s.actor_loop_seconds() - 0.180).abs() < 1e-6);
+    }
+
+    #[test]
+    fn learner_overlap_mirrors_actor_accounting() {
+        let s = RunStats::new();
+        // serial learner: grad + collective + apply fills the active wall
+        s.record_learner_overlap(
+            Duration::from_millis(40),
+            Duration::from_millis(5),
+            Duration::from_millis(15),
+            Duration::from_millis(60),
+        );
+        assert!(s.learner_overlap_seconds() < 1e-9);
+        // pipelined: 20ms of collective+apply ran under the next round's grads
+        s.record_learner_overlap(
+            Duration::from_millis(50),
+            Duration::from_millis(10),
+            Duration::from_millis(20),
+            Duration::from_millis(60),
+        );
+        assert!((s.learner_overlap_seconds() - 0.020).abs() < 1e-6);
+        assert!((s.learner_grad_seconds() - 0.090).abs() < 1e-6);
+        assert!((s.learner_collective_seconds() - 0.015).abs() < 1e-6);
+        assert!((s.learner_apply_seconds() - 0.035).abs() < 1e-6);
+        assert!((s.learner_active_seconds() - 0.120).abs() < 1e-6);
+        // critical-path candidate is the max per-thread active time
+        assert!((s.learner_active_max_seconds() - 0.060).abs() < 1e-6);
     }
 
     #[test]

@@ -78,6 +78,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 threads_per_actor_core: args.get_usize("threads", 2)?,
                 actor_batch: args.get_usize("batch", 32)?,
                 pipeline_stages: args.get_usize("pipeline-stages", 2)?,
+                learner_pipeline: args.get_usize("learner-pipeline", 2)?,
                 unroll: args.get_usize("unroll", 20)?,
                 micro_batches: args.get_usize("micro-batches", 1)?,
                 discount: args.get_f64("discount", 0.99)? as f32,
@@ -102,6 +103,13 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 report.actor_env_step_seconds,
                 report.actor_overlap_seconds
             );
+            println!(
+                "  learner pipeline: grad={:.2}s collective={:.2}s apply={:.2}s hidden_by_overlap={:.2}s",
+                report.learner_grad_seconds,
+                report.learner_collective_seconds,
+                report.learner_apply_seconds,
+                report.learner_overlap_seconds
+            );
             Ok(())
         }
         "muzero" => {
@@ -112,6 +120,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 learner_cores: args.get_usize("learner-cores", 2)?,
                 threads_per_actor_core: args.get_usize("threads", 1)?,
                 num_simulations: args.get_usize("simulations", 16)?,
+                learner_pipeline: args.get_usize("learner-pipeline", 1)?,
                 discount: args.get_f64("discount", 0.997)? as f32,
                 queue_capacity: args.get_usize("queue", 4)?,
                 env_workers: args.get_usize("env-workers", 2)?,

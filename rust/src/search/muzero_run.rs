@@ -8,10 +8,10 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::actor::ShardBundle;
 use crate::coordinator::collective::GradientBus;
-use crate::coordinator::learner::{learner_main, LearnerConfig, LearnerHandles};
+use crate::coordinator::learner::{LearnerConfig, LearnerHandles};
 use crate::coordinator::param_store::ParamStore;
 use crate::coordinator::queue::BoundedQueue;
-use crate::coordinator::sebulba::RunReport;
+use crate::coordinator::sebulba::{join_pod_threads, spawn_guarded_learner, RunReport};
 use crate::coordinator::stats::RunStats;
 use crate::envs::{make_factory, WorkerPool};
 use crate::runtime::tensor::HostTensor;
@@ -29,6 +29,11 @@ pub struct MuZeroRunConfig {
     pub learner_cores: usize,
     pub threads_per_actor_core: usize,
     pub num_simulations: usize,
+    /// Grad/apply rounds the learner keeps in flight (see
+    /// `SebulbaConfig::learner_pipeline`). Defaults to 1: MuZero actors are
+    /// search-bound, so the serial learner is rarely the bottleneck and the
+    /// near-on-policy targets are kept maximally fresh.
+    pub learner_pipeline: usize,
     pub discount: f32,
     pub queue_capacity: usize,
     pub env_workers: usize,
@@ -46,6 +51,7 @@ impl Default for MuZeroRunConfig {
             learner_cores: 2,
             threads_per_actor_core: 1,
             num_simulations: 16,
+            learner_pipeline: 1,
             discount: 0.997,
             queue_capacity: 4,
             env_workers: 2,
@@ -85,6 +91,7 @@ pub fn run_muzero(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<RunReport> {
     let n_per = cfg.cores_per_replica();
     anyhow::ensure!(pod.n_cores() >= cfg.total_cores(), "pod too small");
     anyhow::ensure!(batch % cfg.learner_cores == 0, "batch must divide learner cores");
+    anyhow::ensure!(cfg.learner_pipeline >= 1, "learner_pipeline must be >= 1 (1 = serial)");
 
     let mut actor_core_ids = Vec::new();
     let mut learner_core_ids = Vec::new();
@@ -118,14 +125,17 @@ pub fn run_muzero(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<RunReport> {
 
     let mut actor_joins = Vec::new();
     let mut learner_joins = Vec::new();
-    let mut queues = Vec::new();
+    // All queues exist up front so a failing learner can unblock every
+    // replica's threads, not just its own (see the spawn below).
+    let queues: Vec<Arc<BoundedQueue<ShardBundle>>> = (0..cfg.replicas)
+        .map(|_| Arc::new(BoundedQueue::<ShardBundle>::new(cfg.queue_capacity)))
+        .collect();
     let t_start = Instant::now();
 
     for r in 0..cfg.replicas {
         let base = r * n_per;
         let store = Arc::new(ParamStore::new(params0.clone()));
-        let queue = Arc::new(BoundedQueue::<ShardBundle>::new(cfg.queue_capacity));
-        queues.push(queue.clone());
+        let queue = queues[r].clone();
         let pool = WorkerPool::new(cfg.env_workers);
 
         for ac in 0..cfg.actor_cores {
@@ -170,6 +180,7 @@ pub fn run_muzero(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<RunReport> {
             apply_program: apply.clone(),
             shards_per_round: cfg.learner_cores,
             total_updates: cfg.total_updates,
+            pipeline: cfg.learner_pipeline,
         };
         let cores: Vec<DeviceHandle> = (0..cfg.learner_cores)
             .map(|i| pod.core(base + cfg.actor_cores + i))
@@ -181,53 +192,36 @@ pub fn run_muzero(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<RunReport> {
             stats: stats.clone(),
             bus: bus.clone(),
         };
-        let opt = opt0.clone();
-        learner_joins.push(
-            std::thread::Builder::new()
-                .name(format!("mz-learner-{r}"))
-                .spawn(move || learner_main(&lcfg, &handles, opt))
-                .expect("spawn learner"),
-        );
+        learner_joins.push(spawn_guarded_learner(
+            format!("mz-learner-{r}"),
+            lcfg,
+            handles,
+            opt0.clone(),
+            stop.clone(),
+            queues.clone(),
+            bus.clone(),
+        ));
     }
 
+    // Every thread is joined even on a learner error (same contract as
+    // `Sebulba::run_on_with`): actors left running against a shut-down
+    // queue would leak and their `Result`s would be dropped.
     let mut final_params = params0;
     let mut final_opt_state = opt0.clone();
-    for (r, j) in learner_joins.into_iter().enumerate() {
-        match j.join() {
-            Ok(Ok((params, opt))) => {
-                if r == 0 {
-                    final_params = params;
-                    final_opt_state = opt;
-                }
-            }
-            Ok(Err(e)) => {
-                stop.store(true, Ordering::Relaxed);
-                for q in &queues {
-                    q.shutdown();
-                }
-                return Err(e.context(format!("muzero learner {r}")));
-            }
-            Err(_) => anyhow::bail!("muzero learner {r} panicked"),
-        }
+    if let Some((params, opt)) =
+        join_pod_threads("muzero", &stop, &queues, &bus, learner_joins, actor_joins)?
+    {
+        final_params = params;
+        final_opt_state = opt;
     }
-    stop.store(true, Ordering::Relaxed);
-    for q in &queues {
-        q.shutdown();
-    }
-    for j in actor_joins {
-        match j.join() {
-            Ok(Ok(())) => {}
-            Ok(Err(e)) => return Err(e.context("muzero actor")),
-            Err(_) => anyhow::bail!("muzero actor panicked"),
-        }
-    }
-    bus.shutdown();
 
     let elapsed = t_start.elapsed().as_secs_f64();
     let mut critical: f64 = 1e-12;
     for cid in 0..cfg.total_cores() {
         critical = critical.max(pod.core(cid)?.busy_seconds());
     }
+    // Exposed learner schedule as critical-path candidate (DESIGN.md §9).
+    critical = critical.max(stats.learner_active_max_seconds());
     let mut actor_busy = 0.0;
     for &cid in &actor_core_ids {
         actor_busy += pod.core(cid)?.busy_seconds();
@@ -249,6 +243,19 @@ pub fn run_muzero(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<RunReport> {
         last_loss: stats.last_loss(),
         actor_busy_seconds: actor_busy,
         learner_busy_seconds: learner_busy,
+        // MuZero actors are not instrumented with the actor-overlap
+        // accounting (record_actor_overlap is Sebulba-actor only), so the
+        // four actor_* pipeline fields read 0 for this runner; the
+        // learner_* fields are live (shared learner thread).
+        actor_infer_seconds: stats.actor_infer_seconds(),
+        actor_env_step_seconds: stats.actor_env_seconds(),
+        actor_loop_seconds: stats.actor_loop_seconds(),
+        actor_overlap_seconds: stats.actor_overlap_seconds(),
+        learner_grad_seconds: stats.learner_grad_seconds(),
+        learner_collective_seconds: stats.learner_collective_seconds(),
+        learner_apply_seconds: stats.learner_apply_seconds(),
+        learner_active_seconds: stats.learner_active_seconds(),
+        learner_overlap_seconds: stats.learner_overlap_seconds(),
         queue_push_block_seconds: queues.iter().map(|q| q.push_block_seconds()).sum(),
         queue_pop_block_seconds: queues.iter().map(|q| q.pop_block_seconds()).sum(),
         final_params,

@@ -184,6 +184,7 @@ fn stages_2_still_trains_catch() {
         threads_per_actor_core: 2,
         actor_batch: 32,
         pipeline_stages: 2,
+        learner_pipeline: 2,
         unroll: 20,
         micro_batches: 1,
         discount: 0.99,
@@ -215,6 +216,7 @@ fn stages_2_reports_overlap_on_a_slow_env() {
         threads_per_actor_core: 1,
         actor_batch: 32,
         pipeline_stages: 2,
+        learner_pipeline: 2,
         unroll: 20,
         micro_batches: 1,
         discount: 0.99,

@@ -20,6 +20,7 @@ fn small_cfg(updates: u64) -> SebulbaConfig {
         threads_per_actor_core: 1,
         actor_batch: 32,
         pipeline_stages: 1, // the seed geometry; pipelining has its own e2e suite
+        learner_pipeline: 1, // serial learner schedule (learner_pipeline.rs covers 2)
         unroll: 20,
         micro_batches: 1,
         discount: 0.99,
