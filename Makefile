@@ -3,8 +3,11 @@
 
 ARTIFACTS := artifacts
 BENCHES   := $(notdir $(basename $(wildcard rust/benches/*.rs)))
+# The CI bench-regression gate's smoke set (see scripts/bench_gate.py).
+SMOKE_BENCHES := fig4a_anakin_scaling ablation_learner_pipeline ablation_pipeline_stages
 
-.PHONY: all artifacts build test quickstart bench bench-learner-pipeline fmt clippy
+.PHONY: all artifacts build test quickstart bench bench-learner-pipeline \
+        bench-smoke bench-baseline fmt clippy
 
 all: artifacts build
 
@@ -33,6 +36,25 @@ bench:
 # it with PODRACER_BENCH_FAST=1 so the 1-vs-2 sweep stays green).
 bench-learner-pipeline:
 	cargo bench --bench ablation_learner_pipeline
+
+# CI bench-regression gate (ISSUE 3): run the smoke set fast, emit
+# BENCH_anakin.json / BENCH_sebulba.json, fail if sps drops >30% below the
+# committed baselines in bench_baselines/.
+bench-smoke:
+	@for b in $(SMOKE_BENCHES); do \
+		echo "== $$b =="; \
+		PODRACER_BENCH_FAST=1 cargo bench --bench $$b || exit 1; \
+	done
+	python3 scripts/bench_gate.py --emit --check
+
+# Regenerate the committed baselines from a smoke run on this machine
+# (same PODRACER_BENCH_FAST=1 conditions CI compares under).
+bench-baseline:
+	@for b in $(SMOKE_BENCHES); do \
+		echo "== $$b =="; \
+		PODRACER_BENCH_FAST=1 cargo bench --bench $$b || exit 1; \
+	done
+	python3 scripts/bench_gate.py --emit --write-baseline
 
 fmt:
 	cargo fmt --all -- --check

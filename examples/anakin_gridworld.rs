@@ -1,16 +1,17 @@
 //! Anakin on GridWorld: the fully on-device architecture, replicated.
 //!
 //! ```bash
-//! cargo run --release --example anakin_gridworld [-- --cores 4 --outer-iters 30]
+//! cargo run --release --example anakin_gridworld [-- --cores 4 --outer-iters 30 --driver threaded]
 //! ```
 //!
 //! Everything — the gridworld environment, the policy, GAE and the update —
 //! is one XLA program per core; this driver replicates it across simulated
-//! cores and averages parameters (paper Fig. 1b / Fig. 2). Prints the
-//! learning curve (mean episode reward per outer iteration) and both runs'
+//! cores and averages parameters (paper Fig. 1b / Fig. 2), by default as a
+//! pod of per-core replica threads (DESIGN.md §10). Prints the learning
+//! curve (mean episode reward per outer iteration) and both runs'
 //! determinism check.
 
-use podracer::anakin::{Anakin, AnakinConfig, Mode};
+use podracer::anakin::{Anakin, AnakinConfig, Driver, Mode};
 use podracer::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -27,6 +28,11 @@ fn main() -> anyhow::Result<()> {
         cores: args.get_usize("cores", 2)?,
         outer_iters: args.get_u64("outer-iters", 30)?,
         mode: Mode::Bundled,
+        driver: match args.get_str("driver", "threaded").as_str() {
+            "threaded" => Driver::Threaded,
+            "serial" => Driver::Serial,
+            other => anyhow::bail!("--driver expects threaded|serial, got {other:?}"),
+        },
         seed: args.get_u64("seed", 7)?,
     };
     println!(
@@ -49,6 +55,10 @@ fn main() -> anyhow::Result<()> {
     println!("updates       : {}", report.updates);
     println!("elapsed       : {:.1}s", report.elapsed);
     println!("steps/sec     : {:.0}", report.sps);
+    println!(
+        "replica sched : device={:.2}s host={:.2}s hidden_by_overlap={:.2}s",
+        report.replica_device_seconds, report.replica_host_seconds, report.replica_overlap_seconds
+    );
     let first = report.metrics.first().map(|m| m[4]).unwrap_or(0.0);
     let last = report.metrics.last().map(|m| m[4]).unwrap_or(0.0);
     println!("reward        : {first:.3} -> {last:.3}");

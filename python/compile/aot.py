@@ -370,6 +370,11 @@ def build_all(out_dir: str, profile: str = "full") -> None:
     print("[aot] anakin catch + gridworld (fig4a scaling, smallnet fps)")
     export_anakin(ex, "anakin_catch", "catch", batch=64, unroll=16, iters=8)
     export_anakin(ex, "anakin_grid", "gridworld", batch=64, unroll=16, iters=8)
+    # K=1 variant: one in-graph update per bundled call, so the Rust side
+    # can pin psum-vs-bundled equivalence under the threaded driver
+    # (rust/tests/anakin_threaded.rs) — with K>1 the bundled program takes K
+    # optimiser steps per call and the comparison is not defined.
+    export_anakin(ex, "anakin_catch_k1", "catch", batch=64, unroll=16, iters=1)
 
     print("[aot] muzero catch (fig4c)")
     export_muzero(

@@ -10,9 +10,15 @@
 //!     collective added overhead, this would fall with core count;
 //!   * scaling efficiency = projected FPS at N cores (N x per-core rate,
 //!     discounted by measured coordination wall-time) / (N x 1-core rate).
+//!
+//! PR 3 adds the driver comparison: the sweep runs the threaded driver
+//! (per-core replica threads, `TensorBus` pmean — DESIGN.md §10) and a
+//! serial-driver case at 4 cores, so the table quantifies what threading
+//! the host schedule buys in wall-clock sps on the same config. The
+//! emitted JSON feeds the CI bench-regression gate (`scripts/bench_gate.py`).
 //! See DESIGN.md §1 (hardware substitution) and EXPERIMENTS.md §Fig4a.
 
-use podracer::anakin::{Anakin, AnakinConfig, Mode};
+use podracer::anakin::{Anakin, AnakinConfig, Driver, Mode};
 use podracer::benchkit::Bench;
 use podracer::runtime::Pod;
 use podracer::util::json::Json;
@@ -23,6 +29,7 @@ fn main() -> anyhow::Result<()> {
     let fast = std::env::var("PODRACER_BENCH_FAST").is_ok();
     let outer = if fast { 2 } else { 6 };
     let core_counts = [1usize, 2, 4, 8];
+    const COMPARE_CORES: usize = 4;
 
     let mut bench = Bench::new("fig4a: anakin FPS vs cores (paper: 16-128 cores, linear)");
     let mut rows = Vec::new();
@@ -34,21 +41,45 @@ fn main() -> anyhow::Result<()> {
             cores,
             outer_iters: outer,
             mode: Mode::Bundled,
+            driver: Driver::Threaded,
             seed: 1,
         };
         let mut last: Option<(f64, f64, f64)> = None;
         bench.case(&format!("cores={cores}"), "steps/s (aggregate wall)", || {
             let report = Anakin::run_on(&mut pod, &cfg).unwrap();
-            // per-core compute rate: steps / total busy time across cores
-            let busy: f64 = (0..cores)
-                .map(|i| pod.core(i).unwrap().busy_seconds())
-                .sum();
-            last = Some((report.sps, report.steps as f64, busy));
+            last = Some((report.sps, report.steps as f64, report.replica_overlap_seconds));
             report.sps
         });
-        let (sps, steps, _busy) = last.unwrap();
+        let (sps, steps, _overlap) = last.unwrap();
         rows.push((cores, sps, steps));
     }
+
+    // Driver ablation at the comparison core count (programs are already
+    // loaded on cores 0..COMPARE_CORES from the sweep, so both cases pay
+    // zero compile time and the gap is purely the host schedule).
+    let mut driver_sps = [0.0f64; 2]; // [serial, threaded]
+    for (slot, driver, name) in
+        [(0usize, Driver::Serial, "serial"), (1, Driver::Threaded, "threaded")]
+    {
+        let cfg = AnakinConfig {
+            agent: "anakin_catch".into(),
+            cores: COMPARE_CORES,
+            outer_iters: outer,
+            mode: Mode::Bundled,
+            driver,
+            seed: 1,
+        };
+        bench.case(
+            &format!("driver={name} cores={COMPARE_CORES}"),
+            "steps/s (aggregate wall)",
+            || {
+                let report = Anakin::run_on(&mut pod, &cfg).unwrap();
+                driver_sps[slot] = report.sps;
+                report.sps
+            },
+        );
+    }
+    let speedup = driver_sps[1] / driver_sps[0].max(1e-12);
 
     // scaling table: projected N-core FPS = N x (1-core aggregate rate),
     // discounted by the measured throughput ratio (which embeds collective
@@ -70,14 +101,22 @@ fn main() -> anyhow::Result<()> {
         core_counts[core_counts.len() - 1],
         proj[proj.len() - 1] / proj[0]
     );
+    println!(
+        "driver check (DESIGN.md §10): threaded vs serial wall-clock sps at {COMPARE_CORES} cores = {:.2}x \
+         ({:.0} vs {:.0}; target >= 1.5x in the smoke run)",
+        speedup, driver_sps[1], driver_sps[0]
+    );
 
     bench.finish();
-    // extra JSON with the derived series
+    // extra JSON with the derived series (consumed by scripts/bench_gate.py)
     let j = Json::obj(vec![
         ("figure", Json::str("4a")),
         ("cores", Json::arr_f64(&rows.iter().map(|r| r.0 as f64).collect::<Vec<_>>())),
         ("measured_sps", Json::arr_f64(&rows.iter().map(|r| r.1).collect::<Vec<_>>())),
         ("projected_sps", Json::arr_f64(&proj)),
+        ("serial_sps_4c", Json::num(driver_sps[0])),
+        ("threaded_sps_4c", Json::num(driver_sps[1])),
+        ("threaded_speedup_4c", Json::num(speedup)),
     ]);
     std::fs::create_dir_all("bench_results")?;
     std::fs::write("bench_results/fig4a_series.json", j.to_string())?;

@@ -1,0 +1,408 @@
+//! The two Anakin host schedules (DESIGN.md §10).
+//!
+//! [`run_serial`] is the single-thread reference: issue every core's call,
+//! drain and convert in core order, tree-reduce on the driver thread,
+//! re-distribute. [`run_threaded`] replicates the host too: one replica
+//! thread per core ([`super::replica`]), the pmean on the `TensorBus`.
+//! Both consume the same [`Setup`] (same program loading, same per-core
+//! init, same pre-drawn seed table), so their final parameters are
+//! bit-identical and any throughput gap is purely the host schedule.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::collective::{all_reduce_mean, TensorBus};
+use crate::coordinator::stats::RunStats;
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::{DeviceHandle, Pod};
+
+use super::replica::{self, ReplicaConfig};
+use super::{AnakinConfig, AnakinReport, MetricRow, Mode};
+
+/// One core's share of the replicated program state.
+pub(super) struct CoreInit {
+    pub core: DeviceHandle,
+    pub params: HostTensor,
+    pub opt: HostTensor,
+    pub env_states: HostTensor,
+}
+
+/// Everything both drivers share: loaded programs, per-core init state, the
+/// seed table, and the busy-time baseline `projected_sps` subtracts so a
+/// reused pod does not charge this run with previous runs' device time.
+pub(super) struct Setup {
+    pub batch: usize,
+    pub unroll: usize,
+    pub iters: usize,
+    pub bundled: String,
+    pub psum_grad: String,
+    pub apply: String,
+    pub states: Vec<CoreInit>,
+    /// `seeds[outer][core]` — drawn outer-major, core-minor from the run
+    /// seed's 0xA11A stream, the exact order the serial driver always used,
+    /// so both drivers consume identical program seeds.
+    pub seeds: Vec<Vec<i32>>,
+    pub cores: Vec<DeviceHandle>,
+    pub busy0: Vec<f64>,
+}
+
+pub(super) fn prepare(pod: &mut Pod, cfg: &AnakinConfig) -> Result<Setup> {
+    anyhow::ensure!(cfg.cores >= 1, "need at least one core");
+    anyhow::ensure!(pod.n_cores() >= cfg.cores, "pod too small");
+    let agent = pod.manifest.agent(&cfg.agent)?.clone();
+    let batch = agent.extra_usize("batch")?;
+    let unroll = agent.extra_usize("unroll")?;
+    let iters = agent.extra_usize("iters")?;
+
+    let init = format!("{}_init", cfg.agent);
+    let bundled = format!("{}_bundled", cfg.agent);
+    let psum_grad = format!("{}_psum_grad", cfg.agent);
+    let apply = format!("{}_apply", cfg.agent);
+    let core_ids: Vec<usize> = (0..cfg.cores).collect();
+    match cfg.mode {
+        Mode::Bundled => pod.load_programs(&[init.as_str(), bundled.as_str()], &core_ids)?,
+        Mode::Psum => {
+            pod.load_programs(&[init.as_str(), psum_grad.as_str()], &core_ids)?;
+            pod.load_program(&apply, &[0])?;
+        }
+    }
+    let cores = pod.handles_for(&core_ids)?;
+    let busy0 = cores.iter().map(|c| c.busy_seconds()).collect();
+
+    // Per-core init: same parameters everywhere (core 0's), but each core
+    // gets its own env-state batch from its own seed — the vmap'd env
+    // batch is what differs across cores on a real pod too.
+    let mut states = Vec::with_capacity(cfg.cores);
+    let mut shared_params: Option<HostTensor> = None;
+    let mut shared_opt: Option<HostTensor> = None;
+    for (i, core) in cores.iter().enumerate() {
+        let outs = core
+            .execute(&init, vec![HostTensor::scalar_i32((cfg.seed + i as u64) as i32)])
+            .with_context(|| format!("init on core {i}"))?;
+        if shared_params.is_none() {
+            shared_params = Some(outs[0].clone());
+            shared_opt = Some(outs[1].clone());
+        }
+        states.push(CoreInit {
+            core: core.clone(),
+            params: shared_params.clone().unwrap(),
+            opt: shared_opt.clone().unwrap(),
+            env_states: outs[2].clone(),
+        });
+    }
+
+    // One deterministic program seed per core per outer iteration, drawn up
+    // front so both drivers (and every replica thread) see the same table.
+    let mut rng = crate::util::rng::Xoshiro256::from_stream(cfg.seed, 0xA11A);
+    let seeds: Vec<Vec<i32>> = (0..cfg.outer_iters)
+        .map(|_| (0..cfg.cores).map(|_| rng.next_program_seed()).collect())
+        .collect();
+
+    Ok(Setup { batch, unroll, iters, bundled, psum_grad, apply, states, seeds, cores, busy0 })
+}
+
+/// Sum a bundled call's `[K, 5]` metric tensor into this core's partial
+/// row (mean over the K in-graph updates; the cross-core mean happens when
+/// partials combine).
+pub(super) fn bundled_partial_row(m: &HostTensor) -> Result<MetricRow> {
+    let v = m.as_f32()?;
+    let k = (v.len() / 5).max(1);
+    let mut row = [0.0f64; 5];
+    for ki in 0..k {
+        for j in 0..5 {
+            row[j] += v[ki * 5 + j] as f64 / k as f64;
+        }
+    }
+    Ok(row)
+}
+
+/// A psum call's `[5]` metric tensor as this core's partial row.
+pub(super) fn psum_partial_row(m: &HostTensor) -> Result<MetricRow> {
+    let v = m.as_f32()?;
+    let mut row = [0.0f64; 5];
+    for j in 0..5 {
+        row[j] = v[j] as f64;
+    }
+    Ok(row)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn finish_report(
+    cfg: &AnakinConfig,
+    setup_meta: (usize, usize, usize), // (batch, unroll, iters)
+    cores: &[DeviceHandle],
+    busy0: &[f64],
+    stats: &RunStats,
+    elapsed: f64,
+    updates: u64,
+    metrics: Vec<MetricRow>,
+    final_params: Vec<f32>,
+) -> AnakinReport {
+    let (batch, unroll, iters) = setup_meta;
+    let per_call = match cfg.mode {
+        Mode::Bundled => batch * unroll * iters,
+        Mode::Psum => batch * unroll,
+    };
+    let steps = (per_call as u64) * cfg.outer_iters * cfg.cores as u64;
+    // Critical path: max per-core device busy *of this run* (the baseline
+    // subtraction makes `projected_sps` honest on reused pods), lengthened
+    // by the exposed replica schedule (DESIGN.md §10).
+    let mut critical: f64 = 1e-12;
+    for (core, b0) in cores.iter().zip(busy0) {
+        critical = critical.max(core.busy_seconds() - b0);
+    }
+    critical = critical.max(stats.anakin_busy_max_seconds());
+    AnakinReport {
+        steps,
+        updates,
+        elapsed,
+        sps: steps as f64 / elapsed.max(1e-12),
+        projected_sps: steps as f64 / critical,
+        metrics,
+        final_params,
+        replica_device_seconds: stats.anakin_device_seconds(),
+        replica_host_seconds: stats.anakin_host_seconds(),
+        replica_collective_seconds: stats.anakin_collective_seconds(),
+        replica_active_seconds: stats.anakin_active_seconds(),
+        replica_overlap_seconds: stats.anakin_overlap_seconds(),
+        replica_busy_max_seconds: stats.anakin_busy_max_seconds(),
+    }
+}
+
+/// The single-thread reference schedule. Drains cores in index order with
+/// conversions interleaved (core i's convert runs while cores i+1.. still
+/// compute), reduces with the deterministic tree, re-distributes. The
+/// accounting records one pseudo-replica whose exposed device time is the
+/// recv-blocked spans only, so `replica_overlap_seconds` is ~0 — the
+/// serial schedule hides nothing *of its own*.
+pub(super) fn run_serial(pod: &mut Pod, cfg: &AnakinConfig) -> Result<AnakinReport> {
+    let Setup { batch, unroll, iters, bundled, psum_grad, apply, mut states, seeds, cores, busy0 } =
+        prepare(pod, cfg)?;
+    let stats = RunStats::new();
+    let mut metrics_hist: Vec<MetricRow> = Vec::new();
+    let mut updates = 0u64;
+    let mut device_busy = Duration::ZERO;
+    let mut host_busy = Duration::ZERO;
+    let mut collective_busy = Duration::ZERO;
+    let t0 = Instant::now();
+
+    for row_seeds in &seeds {
+        match cfg.mode {
+            Mode::Bundled => {
+                let mut waits = Vec::with_capacity(cfg.cores);
+                for (s, &seed) in states.iter().zip(row_seeds) {
+                    waits.push(s.core.execute_async(
+                        &bundled,
+                        vec![
+                            s.params.clone(),
+                            s.opt.clone(),
+                            s.env_states.clone(),
+                            HostTensor::scalar_i32(seed),
+                        ],
+                    )?);
+                }
+                let mut row = [0.0f64; 5];
+                let mut param_bufs = Vec::with_capacity(cfg.cores);
+                let mut opt_bufs = Vec::with_capacity(cfg.cores);
+                for (i, (s, rx)) in states.iter_mut().zip(waits).enumerate() {
+                    let t_recv = Instant::now();
+                    let mut outs = rx
+                        .recv()
+                        .map_err(|_| {
+                            anyhow::anyhow!("anakin core {i} died executing {bundled}")
+                        })?
+                        .with_context(|| format!("bundled program on core {i}"))?;
+                    device_busy += t_recv.elapsed();
+                    let t_host = Instant::now();
+                    let m = outs.swap_remove(3);
+                    s.env_states = outs.swap_remove(2);
+                    opt_bufs.push(outs.swap_remove(1).into_f32()?);
+                    param_bufs.push(outs.swap_remove(0).into_f32()?);
+                    let partial = bundled_partial_row(&m)?;
+                    for j in 0..5 {
+                        row[j] += partial[j] / cfg.cores as f64;
+                    }
+                    host_busy += t_host.elapsed();
+                }
+                // cross-core average (the driver-level pmean)
+                let t_coll = Instant::now();
+                all_reduce_mean(&mut param_bufs)?;
+                all_reduce_mean(&mut opt_bufs)?;
+                collective_busy += t_coll.elapsed();
+                let t_host = Instant::now();
+                let p = HostTensor::f32(vec![param_bufs[0].len()], param_bufs.swap_remove(0))?;
+                let o = HostTensor::f32(vec![opt_bufs[0].len()], opt_bufs.swap_remove(0))?;
+                for s in &mut states {
+                    s.params = p.clone();
+                    s.opt = o.clone();
+                }
+                host_busy += t_host.elapsed();
+                metrics_hist.push(row);
+                updates += iters as u64;
+            }
+            Mode::Psum => {
+                let mut waits = Vec::with_capacity(cfg.cores);
+                for (s, &seed) in states.iter().zip(row_seeds) {
+                    waits.push(s.core.execute_async(
+                        &psum_grad,
+                        vec![
+                            s.params.clone(),
+                            s.opt.clone(),
+                            s.env_states.clone(),
+                            HostTensor::scalar_i32(seed),
+                        ],
+                    )?);
+                }
+                let mut grad_bufs = Vec::with_capacity(cfg.cores);
+                let mut row = [0.0f64; 5];
+                for (i, (s, rx)) in states.iter_mut().zip(waits).enumerate() {
+                    let t_recv = Instant::now();
+                    let mut outs = rx
+                        .recv()
+                        .map_err(|_| {
+                            anyhow::anyhow!("anakin core {i} died executing {psum_grad}")
+                        })?
+                        .with_context(|| format!("psum_grad program on core {i}"))?;
+                    device_busy += t_recv.elapsed();
+                    let t_host = Instant::now();
+                    let m = outs.swap_remove(2);
+                    s.env_states = outs.swap_remove(1);
+                    grad_bufs.push(outs.swap_remove(0).into_f32()?);
+                    let partial = psum_partial_row(&m)?;
+                    for j in 0..5 {
+                        row[j] += partial[j] / cfg.cores as f64;
+                    }
+                    host_busy += t_host.elapsed();
+                }
+                // the psum: average gradients, apply once, broadcast
+                let t_coll = Instant::now();
+                all_reduce_mean(&mut grad_bufs)?;
+                collective_busy += t_coll.elapsed();
+                let grads = HostTensor::f32(vec![grad_bufs[0].len()], grad_bufs.swap_remove(0))?;
+                let t_apply = Instant::now();
+                let mut outs = states[0]
+                    .core
+                    .execute(&apply, vec![states[0].params.clone(), states[0].opt.clone(), grads])
+                    .context("apply program on core 0")?;
+                device_busy += t_apply.elapsed();
+                let t_host = Instant::now();
+                let o = outs.swap_remove(1);
+                let p = outs.swap_remove(0);
+                for s in &mut states {
+                    s.params = p.clone();
+                    s.opt = o.clone();
+                }
+                host_busy += t_host.elapsed();
+                metrics_hist.push(row);
+                updates += 1;
+            }
+        }
+    }
+
+    let elapsed = t0.elapsed().as_secs_f64();
+    stats.record_anakin_overlap(device_busy, collective_busy, host_busy, t0.elapsed());
+    let final_params = states.swap_remove(0).params.into_f32()?;
+    Ok(finish_report(
+        cfg,
+        (batch, unroll, iters),
+        &cores,
+        &busy0,
+        &stats,
+        elapsed,
+        updates,
+        metrics_hist,
+        final_params,
+    ))
+}
+
+/// The pod-of-threads schedule: one replica thread per core, the pmean on
+/// the [`TensorBus`] (deterministic reduction order => bit-exact vs the
+/// serial schedule), host conversion and metric accumulation parallel
+/// across replicas and overlapping the next device call (DESIGN.md §10).
+pub(super) fn run_threaded(pod: &mut Pod, cfg: &AnakinConfig) -> Result<AnakinReport> {
+    let Setup { batch, unroll, iters, bundled, psum_grad, apply, states, seeds, cores, busy0 } =
+        prepare(pod, cfg)?;
+    let stats = Arc::new(RunStats::new());
+    let bus = Arc::new(TensorBus::new(cfg.cores));
+    let t0 = Instant::now();
+
+    let mut joins = Vec::with_capacity(cfg.cores);
+    for (i, st) in states.into_iter().enumerate() {
+        let rcfg = ReplicaConfig {
+            replica_id: i,
+            mode: cfg.mode,
+            bundled: bundled.clone(),
+            psum_grad: psum_grad.clone(),
+            apply: apply.clone(),
+            seeds: seeds.iter().map(|row| row[i]).collect(),
+        };
+        joins.push(replica::spawn_replica(rcfg, st, bus.clone(), stats.clone()));
+    }
+
+    // Join *every* replica, aggregating failures into one error chain —
+    // a failing replica has already shut the bus down from its own thread
+    // (see `spawn_replica`'s guard), so in-order joins cannot deadlock on a
+    // sibling parked in a collective; the first joined error may be a
+    // secondary "bus shut down" from that unblocking, not the root cause.
+    let mut outs: Vec<Option<replica::ReplicaOut>> = Vec::with_capacity(cfg.cores);
+    let mut err: Option<anyhow::Error> = None;
+    for (i, j) in joins.into_iter().enumerate() {
+        match j.join() {
+            Ok(Ok(out)) => outs.push(Some(out)),
+            Ok(Err(e)) => {
+                bus.shutdown();
+                err = Some(match err.take() {
+                    None => e.context(format!("anakin replica {i} failed")),
+                    Some(prev) => prev.context(format!("anakin replica {i} also failed: {e:#}")),
+                });
+                outs.push(None);
+            }
+            Err(_) => {
+                bus.shutdown();
+                err = Some(match err.take() {
+                    None => anyhow::anyhow!("anakin replica {i} panicked"),
+                    Some(prev) => prev.context(format!("anakin replica {i} also panicked")),
+                });
+                outs.push(None);
+            }
+        }
+    }
+    if let Some(e) = err {
+        return Err(e);
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    // Combine per-replica metric partials in fixed replica order — the
+    // cross-core mean, deterministic run-to-run (grouping differs from the
+    // serial driver's, so metrics agree up to f64 rounding; parameters are
+    // bit-exact — DESIGN.md §10).
+    let replicas: Vec<replica::ReplicaOut> =
+        outs.into_iter().map(|o| o.expect("no error => every replica returned")).collect();
+    let outer = cfg.outer_iters as usize;
+    let mut metrics_hist = vec![[0.0f64; 5]; outer];
+    for rep in &replicas {
+        for (o, row) in rep.metrics_partial.iter().enumerate() {
+            for j in 0..5 {
+                metrics_hist[o][j] += row[j] / cfg.cores as f64;
+            }
+        }
+    }
+    let updates = match cfg.mode {
+        Mode::Bundled => iters as u64 * cfg.outer_iters,
+        Mode::Psum => cfg.outer_iters,
+    };
+    let final_params = replicas.into_iter().next().expect("at least one replica").final_params;
+    Ok(finish_report(
+        cfg,
+        (batch, unroll, iters),
+        &cores,
+        &busy0,
+        &stats,
+        elapsed,
+        updates,
+        metrics_hist,
+        final_params,
+    ))
+}

@@ -7,7 +7,7 @@
 //! replication: run the program on every simulated core and average across
 //! cores, which on a real pod the in-graph `pmean` would do.
 //!
-//! Two modes (see DESIGN.md §1 for the substitution argument):
+//! Two collective modes (see DESIGN.md §1 for the substitution argument):
 //!
 //! * [`Mode::Bundled`] — K updates in-graph per outer call; the driver
 //!   averages *parameters + optimiser state* across cores after each call
@@ -17,20 +17,43 @@
 //!   data-parallelism, i.e. exactly where the paper's `psum` sits. Slower
 //!   (more host round-trips) but the fidelity reference: tests assert both
 //!   modes agree at K=1, and that all cores hold identical parameters.
+//!
+//! And two drivers (DESIGN.md §10):
+//!
+//! * [`Driver::Threaded`] (default) — a true pod of host threads, one
+//!   replica thread per simulated core (`replica.rs`), each owning its
+//!   core's execute→convert→post loop; the driver-level `pmean` runs on the
+//!   [`crate::coordinator::collective::TensorBus`] in a deterministic
+//!   reduction order, so final parameters are bit-exact vs the serial
+//!   schedule while host conversion/metric work parallelises across
+//!   replicas and overlaps the next device call.
+//! * [`Driver::Serial`] — the single-thread reference schedule: drain every
+//!   core, convert, reduce and re-distribute on the driver thread. Kept as
+//!   the bit-exactness oracle and the baseline the `fig4a_anakin_scaling`
+//!   bench compares against.
+
+mod driver;
+mod replica;
 
 use std::path::Path;
-use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::coordinator::collective::all_reduce_mean;
-use crate::runtime::tensor::HostTensor;
-use crate::runtime::{DeviceHandle, Pod};
+use crate::runtime::Pod;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Mode {
     Bundled,
     Psum,
+}
+
+/// Which host-side schedule drives the replicated program (DESIGN.md §10).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Driver {
+    /// Single driver thread drains/reduces/redistributes every core.
+    Serial,
+    /// One replica thread per core; the pmean runs on the `TensorBus`.
+    Threaded,
 }
 
 #[derive(Clone, Debug)]
@@ -43,12 +66,20 @@ pub struct AnakinConfig {
     /// 1 update in Psum mode).
     pub outer_iters: u64,
     pub mode: Mode,
+    pub driver: Driver,
     pub seed: u64,
 }
 
 impl Default for AnakinConfig {
     fn default() -> Self {
-        Self { agent: "anakin_catch".into(), cores: 2, outer_iters: 10, mode: Mode::Bundled, seed: 7 }
+        Self {
+            agent: "anakin_catch".into(),
+            cores: 2,
+            outer_iters: 10,
+            mode: Mode::Bundled,
+            driver: Driver::Threaded,
+            seed: 7,
+        }
     }
 }
 
@@ -64,17 +95,30 @@ pub struct AnakinReport {
     pub elapsed: f64,
     /// Wall-clock environment steps/sec.
     pub sps: f64,
-    /// Steps/sec if cores ran truly in parallel (steps / max core busy).
+    /// Steps/sec if cores ran truly in parallel: steps / critical path,
+    /// where the critical path is the max per-core busy time *of this run*
+    /// lengthened by the max per-replica post-overlap busy time
+    /// (DESIGN.md §10 — an exposed driver schedule bounds the run even on
+    /// truly parallel cores).
     pub projected_sps: f64,
     pub metrics: Vec<MetricRow>,
     pub final_params: Vec<f32>,
-}
-
-struct CoreState {
-    core: DeviceHandle,
-    params: HostTensor,
-    opt: HostTensor,
-    env_states: HostTensor,
+    /// Device time the replica schedule was exposed to, summed over
+    /// replicas: recv-blocked harvest spans (at overlap a span covers host
+    /// work issued under it) plus replica 0's Psum apply.
+    pub replica_device_seconds: f64,
+    /// Host conversion + metric accumulation time, summed over replicas.
+    pub replica_host_seconds: f64,
+    /// Collective time (bus wait + reduction), summed over replicas.
+    pub replica_collective_seconds: f64,
+    /// Active wall per replica (loop wall minus collective wait), summed.
+    pub replica_active_seconds: f64,
+    /// Work the threaded schedule hid: per replica,
+    /// `max(0, device + host − active)`. ~0 under the serial driver.
+    pub replica_overlap_seconds: f64,
+    /// Max per-replica busy time `min(device + host, active)` — the
+    /// critical-path contribution `projected_sps` divides by.
+    pub replica_busy_max_seconds: f64,
 }
 
 pub struct Anakin;
@@ -86,167 +130,10 @@ impl Anakin {
     }
 
     pub fn run_on(pod: &mut Pod, cfg: &AnakinConfig) -> Result<AnakinReport> {
-        anyhow::ensure!(cfg.cores >= 1, "need at least one core");
-        anyhow::ensure!(pod.n_cores() >= cfg.cores, "pod too small");
-        let agent = pod.manifest.agent(&cfg.agent)?.clone();
-        let batch = agent.extra_usize("batch")?;
-        let unroll = agent.extra_usize("unroll")?;
-        let iters = agent.extra_usize("iters")?;
-
-        let init = format!("{}_init", cfg.agent);
-        let bundled = format!("{}_bundled", cfg.agent);
-        let psum_grad = format!("{}_psum_grad", cfg.agent);
-        let apply = format!("{}_apply", cfg.agent);
-        let core_ids: Vec<usize> = (0..cfg.cores).collect();
-        match cfg.mode {
-            Mode::Bundled => pod.load_programs(&[init.as_str(), bundled.as_str()], &core_ids)?,
-            Mode::Psum => {
-                pod.load_programs(&[init.as_str(), psum_grad.as_str()], &core_ids)?;
-                pod.load_program(&apply, &[0])?;
-            }
+        match cfg.driver {
+            Driver::Serial => driver::run_serial(pod, cfg),
+            Driver::Threaded => driver::run_threaded(pod, cfg),
         }
-
-        // Per-core init: same parameters everywhere (core 0's), but each core
-        // gets its own env-state batch from its own seed — the vmap'd env
-        // batch is what differs across cores on a real pod too.
-        let mut states = Vec::with_capacity(cfg.cores);
-        let mut shared_params: Option<HostTensor> = None;
-        let mut shared_opt: Option<HostTensor> = None;
-        for (i, &cid) in core_ids.iter().enumerate() {
-            let core = pod.core(cid)?;
-            let outs = core
-                .execute(&init, vec![HostTensor::scalar_i32((cfg.seed + i as u64) as i32)])
-                .with_context(|| format!("init on core {cid}"))?;
-            if shared_params.is_none() {
-                shared_params = Some(outs[0].clone());
-                shared_opt = Some(outs[1].clone());
-            }
-            states.push(CoreState {
-                core,
-                params: shared_params.clone().unwrap(),
-                opt: shared_opt.clone().unwrap(),
-                env_states: outs[2].clone(),
-            });
-        }
-
-        let mut rng = crate::util::rng::Xoshiro256::from_stream(cfg.seed, 0xA11A);
-        let mut metrics_hist: Vec<MetricRow> = Vec::new();
-        let mut updates = 0u64;
-        let t0 = Instant::now();
-
-        for _outer in 0..cfg.outer_iters {
-            // One deterministic program seed per core per outer iteration.
-            let seeds: Vec<i32> = (0..cfg.cores).map(|_| rng.next_program_seed()).collect();
-            match cfg.mode {
-                Mode::Bundled => {
-                    let mut waits = Vec::with_capacity(cfg.cores);
-                    for (s, &seed) in states.iter().zip(&seeds) {
-                        waits.push(s.core.execute_async(
-                            &bundled,
-                            vec![
-                                s.params.clone(),
-                                s.opt.clone(),
-                                s.env_states.clone(),
-                                HostTensor::scalar_i32(seed),
-                            ],
-                        )?);
-                    }
-                    let mut row = [0.0f64; 5];
-                    let mut param_bufs = Vec::with_capacity(cfg.cores);
-                    let mut opt_bufs = Vec::with_capacity(cfg.cores);
-                    for (s, rx) in states.iter_mut().zip(waits) {
-                        let outs = rx
-                            .recv()
-                            .map_err(|_| anyhow::anyhow!("anakin core died"))??;
-                        param_bufs.push(outs[0].clone().into_f32()?);
-                        opt_bufs.push(outs[1].clone().into_f32()?);
-                        s.env_states = outs[2].clone();
-                        // metrics [K, 5]
-                        let m = outs[3].as_f32()?;
-                        let k = m.len() / 5;
-                        for ki in 0..k {
-                            for j in 0..5 {
-                                row[j] += m[ki * 5 + j] as f64 / (k * cfg.cores) as f64;
-                            }
-                        }
-                    }
-                    // cross-core average (the driver-level pmean)
-                    all_reduce_mean(&mut param_bufs)?;
-                    all_reduce_mean(&mut opt_bufs)?;
-                    let p = HostTensor::f32(vec![param_bufs[0].len()], param_bufs[0].clone())?;
-                    let o = HostTensor::f32(vec![opt_bufs[0].len()], opt_bufs[0].clone())?;
-                    for s in &mut states {
-                        s.params = p.clone();
-                        s.opt = o.clone();
-                    }
-                    metrics_hist.push(row);
-                    updates += iters as u64;
-                }
-                Mode::Psum => {
-                    let mut waits = Vec::with_capacity(cfg.cores);
-                    for (s, &seed) in states.iter().zip(&seeds) {
-                        waits.push(s.core.execute_async(
-                            &psum_grad,
-                            vec![
-                                s.params.clone(),
-                                s.opt.clone(),
-                                s.env_states.clone(),
-                                HostTensor::scalar_i32(seed),
-                            ],
-                        )?);
-                    }
-                    let mut grad_bufs = Vec::with_capacity(cfg.cores);
-                    let mut row = [0.0f64; 5];
-                    for (s, rx) in states.iter_mut().zip(waits) {
-                        let outs = rx
-                            .recv()
-                            .map_err(|_| anyhow::anyhow!("anakin core died"))??;
-                        grad_bufs.push(outs[0].clone().into_f32()?);
-                        s.env_states = outs[1].clone();
-                        let m = outs[2].as_f32()?;
-                        for j in 0..5 {
-                            row[j] += m[j] as f64 / cfg.cores as f64;
-                        }
-                    }
-                    // the psum: average gradients, apply once, broadcast
-                    all_reduce_mean(&mut grad_bufs)?;
-                    let grads =
-                        HostTensor::f32(vec![grad_bufs[0].len()], grad_bufs[0].clone())?;
-                    let outs = states[0].core.execute(
-                        &apply,
-                        vec![states[0].params.clone(), states[0].opt.clone(), grads],
-                    )?;
-                    let p = outs[0].clone();
-                    let o = outs[1].clone();
-                    for s in &mut states {
-                        s.params = p.clone();
-                        s.opt = o.clone();
-                    }
-                    metrics_hist.push(row);
-                    updates += 1;
-                }
-            }
-        }
-
-        let elapsed = t0.elapsed().as_secs_f64();
-        let per_call = match cfg.mode {
-            Mode::Bundled => batch * unroll * iters,
-            Mode::Psum => batch * unroll,
-        };
-        let steps = (per_call as u64) * cfg.outer_iters * cfg.cores as u64;
-        let mut critical: f64 = 1e-12;
-        for s in &states {
-            critical = critical.max(s.core.busy_seconds());
-        }
-        Ok(AnakinReport {
-            steps,
-            updates,
-            elapsed,
-            sps: steps as f64 / elapsed.max(1e-12),
-            projected_sps: steps as f64 / critical,
-            metrics: metrics_hist,
-            final_params: states[0].params.clone().into_f32()?,
-        })
     }
 }
 

@@ -1,0 +1,211 @@
+//! One Anakin replica thread: a simulated core's host-side twin.
+//!
+//! Owns its core's execute→convert→post loop (DESIGN.md §10). Per outer
+//! iteration the replica fires the device call, accumulates the *previous*
+//! call's metrics while the device runs (the overlapped host work the
+//! accounting surfaces), harvests, converts the outputs to f32 and joins
+//! the driver-level pmean on the [`TensorBus`]:
+//!
+//! * Bundled — all-reduce parameters, then optimiser state (two reduce
+//!   rounds; fixed participant order makes the tree mean bit-exact vs the
+//!   serial driver).
+//! * Psum — all-reduce gradients; replica 0 runs the apply program on its
+//!   core and broadcasts the new parameters + optimiser state back (the
+//!   re-broadcast the serial driver did by cloning into every core's slot).
+//!
+//! A replica that fails shuts the bus down from its own thread (drop
+//! guard, covering the panic path), so the driver's in-order joins never
+//! deadlock on a sibling parked in a collective — mirroring Sebulba's
+//! guarded learner spawn.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::collective::TensorBus;
+use crate::coordinator::stats::RunStats;
+use crate::runtime::tensor::HostTensor;
+
+use super::driver::{bundled_partial_row, psum_partial_row, CoreInit};
+use super::{MetricRow, Mode};
+
+pub(super) struct ReplicaConfig {
+    pub replica_id: usize,
+    pub mode: Mode,
+    pub bundled: String,
+    pub psum_grad: String,
+    pub apply: String,
+    /// This replica's column of the driver's seed table, one per outer
+    /// iteration.
+    pub seeds: Vec<i32>,
+}
+
+pub(super) struct ReplicaOut {
+    /// Per-outer-iteration metric partials for this core (mean over K
+    /// in-graph updates; the driver combines across replicas).
+    pub metrics_partial: Vec<MetricRow>,
+    pub final_params: Vec<f32>,
+}
+
+/// Spawn a replica thread whose exit always leaves the pod joinable: the
+/// guard shuts the bus down on an `Err` return *and* on a panic, so the
+/// driver's in-order joins can't deadlock on a sibling parked in a round
+/// this replica will never post to.
+pub(super) fn spawn_replica(
+    cfg: ReplicaConfig,
+    state: CoreInit,
+    bus: Arc<TensorBus>,
+    stats: Arc<RunStats>,
+) -> std::thread::JoinHandle<Result<ReplicaOut>> {
+    struct UnblockOnDrop {
+        bus: Arc<TensorBus>,
+        armed: bool,
+    }
+    impl Drop for UnblockOnDrop {
+        fn drop(&mut self) {
+            if self.armed {
+                self.bus.shutdown();
+            }
+        }
+    }
+    std::thread::Builder::new()
+        .name(format!("anakin-{}", cfg.replica_id))
+        .spawn(move || {
+            let mut guard = UnblockOnDrop { bus: bus.clone(), armed: true };
+            let res = replica_main(&cfg, state, &bus, &stats);
+            guard.armed = res.is_err();
+            res // guard drops here: shuts the bus down on Err (and on panic)
+        })
+        .expect("spawn anakin replica")
+}
+
+fn replica_main(
+    cfg: &ReplicaConfig,
+    state: CoreInit,
+    bus: &TensorBus,
+    stats: &RunStats,
+) -> Result<ReplicaOut> {
+    let CoreInit { core, mut params, mut opt, mut env_states } = state;
+    let id = cfg.replica_id;
+    let mut rows: Vec<MetricRow> = Vec::with_capacity(cfg.seeds.len());
+    // The previous call's metric tensor, accumulated under the next call.
+    let mut pending_metrics: Option<HostTensor> = None;
+    let mut device_busy = Duration::ZERO;
+    let mut host_busy = Duration::ZERO;
+    let mut collective_busy = Duration::ZERO;
+    let t_loop = Instant::now();
+
+    for &seed in &cfg.seeds {
+        let program = match cfg.mode {
+            Mode::Bundled => &cfg.bundled,
+            Mode::Psum => &cfg.psum_grad,
+        };
+        let issued = Instant::now();
+        let rx = core.execute_async(
+            program,
+            vec![
+                params.clone(),
+                opt.clone(),
+                env_states.clone(),
+                HostTensor::scalar_i32(seed),
+            ],
+        )?;
+        // Overlap: fold the previous call's metrics while the device runs.
+        if let Some(m) = pending_metrics.take() {
+            let t = Instant::now();
+            rows.push(match cfg.mode {
+                Mode::Bundled => bundled_partial_row(&m)?,
+                Mode::Psum => psum_partial_row(&m)?,
+            });
+            host_busy += t.elapsed();
+        }
+        let mut outs = rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("anakin core {} died executing {program}", core.core_id))?
+            .with_context(|| format!("{program} on core {}", core.core_id))?;
+        // Issue → harvest: the span covers the metric fold above — exactly
+        // the hidden work the overlap metric counts (DESIGN.md §10).
+        device_busy += issued.elapsed();
+
+        match cfg.mode {
+            Mode::Bundled => {
+                let t = Instant::now();
+                let metrics_t = outs.swap_remove(3);
+                env_states = outs.swap_remove(2);
+                let o_buf = outs.swap_remove(1).into_f32()?;
+                let p_buf = outs.swap_remove(0).into_f32()?;
+                host_busy += t.elapsed();
+                // the driver-level pmean: params, then optimiser state
+                let t = Instant::now();
+                let p_mean = bus.all_reduce(id, p_buf)?;
+                let o_mean = bus.all_reduce(id, o_buf)?;
+                collective_busy += t.elapsed();
+                let t = Instant::now();
+                params = HostTensor::f32(vec![p_mean.len()], p_mean)?;
+                opt = HostTensor::f32(vec![o_mean.len()], o_mean)?;
+                pending_metrics = Some(metrics_t);
+                host_busy += t.elapsed();
+            }
+            Mode::Psum => {
+                let t = Instant::now();
+                let metrics_t = outs.swap_remove(2);
+                env_states = outs.swap_remove(1);
+                let g_buf = outs.swap_remove(0).into_f32()?;
+                host_busy += t.elapsed();
+                // the psum: average gradients, apply once on replica 0's
+                // core, broadcast the new params + opt state back
+                let t = Instant::now();
+                let g_mean = bus.all_reduce(id, g_buf)?;
+                collective_busy += t.elapsed();
+                let (p_new, o_new) = if id == 0 {
+                    let t = Instant::now();
+                    let mut apply_outs = core
+                        .execute(
+                            &cfg.apply,
+                            vec![
+                                params.clone(),
+                                opt.clone(),
+                                HostTensor::f32(vec![g_mean.len()], g_mean)?,
+                            ],
+                        )
+                        .with_context(|| format!("apply program on core {}", core.core_id))?;
+                    device_busy += t.elapsed();
+                    let t = Instant::now();
+                    let o_vec = apply_outs.swap_remove(1).into_f32()?;
+                    let p_vec = apply_outs.swap_remove(0).into_f32()?;
+                    host_busy += t.elapsed();
+                    let t = Instant::now();
+                    let p = bus.broadcast(0, Some(p_vec))?;
+                    let o = bus.broadcast(0, Some(o_vec))?;
+                    collective_busy += t.elapsed();
+                    (p, o)
+                } else {
+                    let t = Instant::now();
+                    let p = bus.broadcast(id, None)?;
+                    let o = bus.broadcast(id, None)?;
+                    collective_busy += t.elapsed();
+                    (p, o)
+                };
+                let t = Instant::now();
+                params = HostTensor::f32(vec![p_new.len()], p_new)?;
+                opt = HostTensor::f32(vec![o_new.len()], o_new)?;
+                pending_metrics = Some(metrics_t);
+                host_busy += t.elapsed();
+            }
+        }
+    }
+    // flush the last call's metrics
+    if let Some(m) = pending_metrics.take() {
+        let t = Instant::now();
+        rows.push(match cfg.mode {
+            Mode::Bundled => bundled_partial_row(&m)?,
+            Mode::Psum => psum_partial_row(&m)?,
+        });
+        host_busy += t.elapsed();
+    }
+
+    let active = t_loop.elapsed().saturating_sub(collective_busy);
+    stats.record_anakin_overlap(device_busy, collective_busy, host_busy, active);
+    Ok(ReplicaOut { metrics_partial: rows, final_params: params.into_f32()? })
+}

@@ -1,15 +1,21 @@
 //! Simulated collectives: the paper's `psum`/`pmean` over learner cores and
 //! replicas, performed by the coordinator between the `grad` and `apply`
-//! programs (DESIGN.md §4 "the psum seam").
+//! programs (DESIGN.md §4 "the psum seam") and by the threaded Anakin driver
+//! between outer iterations (DESIGN.md §10).
 //!
 //! Two pieces:
 //! * [`all_reduce_mean`] — deterministic in-place tree reduction over the
-//!   gradient buffers a single learner thread collected from its cores.
-//! * [`GradientBus`] — the cross-replica collective: R learner threads post
-//!   their replica-mean gradients, the last to arrive computes the global
-//!   mean (in fixed replica order => deterministic), everyone picks it up.
+//!   buffers a single thread collected from its cores.
+//! * [`TensorBus`] — the cross-thread collective: N participants run a
+//!   sequence of *rounds*, each round either an all-reduce (everyone posts,
+//!   the last to arrive computes the global mean in fixed id order =>
+//!   deterministic) or a broadcast (one root posts, everyone receives).
+//!   Sebulba's learners all-reduce gradients on it ([`GradientBus`] is the
+//!   historical alias); the threaded Anakin driver all-reduces params +
+//!   optimiser state in Bundled mode and grads in Psum mode, then
+//!   broadcasts the applied params back (DESIGN.md §10).
 
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard};
 
 use anyhow::{bail, Result};
 
@@ -47,34 +53,60 @@ pub fn all_reduce_mean(bufs: &mut [Vec<f32>]) -> Result<()> {
     Ok(())
 }
 
-/// Cross-replica gradient all-reduce with barrier semantics.
+/// What a [`TensorBus`] round does with the posted buffers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum RoundOp {
+    /// Everyone posts; the last to arrive computes the tree mean in fixed
+    /// participant order (deterministic regardless of arrival order).
+    Reduce,
+    /// Exactly one participant (the root) posts; everyone receives a copy.
+    Broadcast,
+}
+
+/// Cross-thread tensor collective with barrier semantics.
 ///
-/// Each of `n` participants calls `all_reduce(id, grads)` once per round;
-/// the call blocks until every participant of the round has posted, then all
-/// return the same global mean. Rounds are generation-counted, so repeated
-/// use is safe. `shutdown()` unblocks everyone with an error.
-pub struct GradientBus {
+/// Each of `n` participants calls [`TensorBus::all_reduce`] or
+/// [`TensorBus::broadcast`] once per round; the call blocks until every
+/// participant of the round has posted, then all return the same buffer.
+/// All participants of a round must call the *same* operation — the rounds
+/// form one totally-ordered schedule, exactly like collectives on a real
+/// pod. Rounds are generation-counted, so repeated use is safe; a fast
+/// participant that laps the round is held at the entry gate until the
+/// round fully drains. `shutdown()` unblocks everyone with an error, and a
+/// protocol violation (mismatched ops, two roots, a double post) poisons
+/// the bus so no sibling is left parked forever.
+pub struct TensorBus {
     n: usize,
     state: Mutex<BusState>,
     cv: Condvar,
 }
 
+/// Historical name: Sebulba's learners all-reduce gradients on the bus.
+pub type GradientBus = TensorBus;
+
 struct BusState {
     generation: u64,
-    posted: Vec<Option<Vec<f32>>>,
+    /// The round's op, fixed by the first poster, cleared when it drains.
+    op: Option<RoundOp>,
+    posted: Vec<bool>,
+    payloads: Vec<Option<Vec<f32>>>,
+    arrived: usize,
     result: Option<Vec<f32>>,
     collected: usize,
     shutdown: bool,
 }
 
-impl GradientBus {
+impl TensorBus {
     pub fn new(n: usize) -> Self {
         assert!(n > 0);
         Self {
             n,
             state: Mutex::new(BusState {
                 generation: 0,
-                posted: vec![None; n],
+                op: None,
+                posted: vec![false; n],
+                payloads: (0..n).map(|_| None).collect(),
+                arrived: 0,
                 result: None,
                 collected: 0,
                 shutdown: false,
@@ -92,40 +124,101 @@ impl GradientBus {
         self.cv.notify_all();
     }
 
-    /// Post `grads` for `id` and wait for the round's global mean.
-    pub fn all_reduce(&self, id: usize, grads: Vec<f32>) -> Result<Vec<f32>> {
+    /// Poison under the lock: a protocol violation must not leave siblings
+    /// parked in a round that can no longer complete.
+    fn poison(&self, g: &mut MutexGuard<'_, BusState>) {
+        g.shutdown = true;
+        self.cv.notify_all();
+    }
+
+    /// Post `buf` for `id` and wait for the round's global mean.
+    pub fn all_reduce(&self, id: usize, buf: Vec<f32>) -> Result<Vec<f32>> {
+        self.round(id, Some(buf), RoundOp::Reduce)
+    }
+
+    /// Join a broadcast round: the root passes `Some(buf)`, everyone else
+    /// `None`; all participants return a copy of the root's buffer.
+    pub fn broadcast(&self, id: usize, payload: Option<Vec<f32>>) -> Result<Vec<f32>> {
+        self.round(id, payload, RoundOp::Broadcast)
+    }
+
+    fn round(&self, id: usize, payload: Option<Vec<f32>>, op: RoundOp) -> Result<Vec<f32>> {
         if id >= self.n {
             bail!("participant {id} out of range {}", self.n);
         }
         if self.n == 1 {
-            return Ok(grads); // fast path: single replica
+            // fast path: single participant, every op is the identity
+            return match payload {
+                Some(buf) => Ok(buf),
+                None => bail!("broadcast round had no root"),
+            };
         }
         let mut g = self.state.lock().unwrap();
-        // A fast replica can lap the round: it re-enters the next
-        // `all_reduce` while slower participants are still collecting the
-        // current result. Hold it here until the round fully drains
-        // (`result` is cleared once `collected == n`) — otherwise its
-        // wait below would see `result.is_some()` with `generation` still
-        // unbumped, skip the wait, and return the *previous* round's mean.
+        // A fast participant can lap the round: it re-enters the next
+        // round while slower participants are still collecting the current
+        // result. Hold it here until the round fully drains (`result` is
+        // cleared once `collected == n`) — otherwise its wait below would
+        // see `result.is_some()` with `generation` still unbumped, skip the
+        // wait, and return the *previous* round's buffer.
         while g.result.is_some() && !g.shutdown {
             g = self.cv.wait(g).unwrap();
         }
         if g.shutdown {
-            bail!("gradient bus shut down");
+            bail!("tensor bus shut down");
         }
-        if g.posted[id].is_some() {
+        match g.op {
+            None => g.op = Some(op),
+            Some(cur) if cur == op => {}
+            Some(cur) => {
+                self.poison(&mut g);
+                bail!("collective protocol violation: round is {cur:?}, participant {id} called {op:?}");
+            }
+        }
+        if g.posted[id] {
+            self.poison(&mut g);
             bail!("participant {id} posted twice in one round");
         }
+        if payload.is_some() {
+            if op == RoundOp::Broadcast && g.payloads.iter().any(Option::is_some) {
+                self.poison(&mut g);
+                bail!("two roots in one broadcast round");
+            }
+            g.payloads[id] = payload;
+        } else if op == RoundOp::Reduce {
+            self.poison(&mut g);
+            bail!("reduce round requires a payload");
+        }
+        g.posted[id] = true;
+        g.arrived += 1;
         let my_gen = g.generation;
-        g.posted[id] = Some(grads);
 
-        let all_posted = g.posted.iter().all(Option::is_some);
-        if all_posted {
-            // last one in computes the mean, in fixed id order
-            let mut bufs: Vec<Vec<f32>> =
-                g.posted.iter_mut().map(|o| o.take().unwrap()).collect();
-            all_reduce_mean(&mut bufs)?;
-            g.result = Some(bufs.swap_remove(0));
+        if g.arrived == self.n {
+            // last one in computes the round's result
+            let result = match op {
+                RoundOp::Reduce => {
+                    // fixed id order => deterministic tree
+                    let mut bufs: Vec<Vec<f32>> =
+                        g.payloads.iter_mut().map(|o| o.take().unwrap()).collect();
+                    match all_reduce_mean(&mut bufs) {
+                        Ok(()) => bufs.swap_remove(0),
+                        Err(e) => {
+                            self.poison(&mut g);
+                            return Err(e);
+                        }
+                    }
+                }
+                RoundOp::Broadcast => {
+                    let root = g.payloads.iter_mut().find_map(Option::take);
+                    match root {
+                        Some(buf) => buf,
+                        None => {
+                            self.poison(&mut g);
+                            bail!("broadcast round had no root");
+                        }
+                    }
+                }
+            };
+            g.result = Some(result);
             g.collected = 0;
             self.cv.notify_all();
         } else {
@@ -134,7 +227,7 @@ impl GradientBus {
             }
         }
         if g.shutdown {
-            bail!("gradient bus shut down");
+            bail!("tensor bus shut down");
         }
         let result = g
             .result
@@ -145,6 +238,11 @@ impl GradientBus {
         if g.collected == self.n {
             // round complete: reset for the next generation
             g.result = None;
+            g.op = None;
+            for p in g.posted.iter_mut() {
+                *p = false;
+            }
+            g.arrived = 0;
             g.generation += 1;
             self.cv.notify_all();
         }
@@ -198,6 +296,9 @@ mod tests {
         let bus = GradientBus::new(1);
         let out = bus.all_reduce(0, vec![1.0, 2.0]).unwrap();
         assert_eq!(out, vec![1.0, 2.0]);
+        let out = bus.broadcast(0, Some(vec![3.0])).unwrap();
+        assert_eq!(out, vec![3.0]);
+        assert!(bus.broadcast(0, None).is_err());
     }
 
     #[test]
@@ -226,6 +327,22 @@ mod tests {
             let r1 = t.join().unwrap();
             assert_eq!(r0, r1);
             assert!((r0[0] - (round as f32 + 0.5)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn bus_broadcast_delivers_root_buffer() {
+        let bus = Arc::new(TensorBus::new(3));
+        let mut handles = Vec::new();
+        for id in 0..3 {
+            let bus = bus.clone();
+            handles.push(std::thread::spawn(move || {
+                let payload = if id == 1 { Some(vec![4.0, 5.0]) } else { None };
+                bus.broadcast(id, payload).unwrap()
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), vec![4.0, 5.0]);
         }
     }
 
@@ -265,6 +382,69 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn bus_lapping_replicas_mixed_reduce_broadcast_rounds() {
+        // The TensorBus twin of the lapping regression, over the threaded
+        // Anakin Psum schedule: reduce, then two broadcasts, per outer
+        // round. A fast participant must never slip its broadcast post into
+        // a round whose reduce hasn't drained (or vice versa) — the op
+        // check would poison the bus and the values would go stale.
+        const ROUNDS: usize = 50;
+        let bus = Arc::new(TensorBus::new(3));
+        let mut handles = Vec::new();
+        for id in 0..3 {
+            let bus = bus.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut out = Vec::with_capacity(ROUNDS);
+                for r in 0..ROUNDS {
+                    if id == 2 {
+                        std::thread::sleep(std::time::Duration::from_micros(200));
+                    }
+                    let mean = bus.all_reduce(id, vec![(r * 3 + id) as f32]).unwrap()[0];
+                    let root = |v: f32| if id == 0 { Some(vec![v]) } else { None };
+                    let p = bus.broadcast(id, root(mean + 100.0)).unwrap()[0];
+                    let o = bus.broadcast(id, root(mean + 200.0)).unwrap()[0];
+                    out.push((mean, p, o));
+                }
+                out
+            }));
+        }
+        let results: Vec<Vec<(f32, f32, f32)>> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (id, res) in results.iter().enumerate() {
+            for (r, &(mean, p, o)) in res.iter().enumerate() {
+                let want = (r * 3 + 1) as f32;
+                assert_eq!(mean, want, "participant {id} round {r}: stale mean");
+                assert_eq!(p, want + 100.0, "participant {id} round {r}: stale broadcast");
+                assert_eq!(o, want + 200.0, "participant {id} round {r}: stale broadcast");
+            }
+        }
+    }
+
+    #[test]
+    fn bus_mismatched_ops_poison_instead_of_hanging() {
+        let bus = Arc::new(TensorBus::new(2));
+        let b = bus.clone();
+        let t = std::thread::spawn(move || b.all_reduce(0, vec![1.0]));
+        // give the reducer time to open the round
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let r1 = bus.broadcast(1, Some(vec![2.0]));
+        assert!(r1.is_err(), "mismatched op must error");
+        // the sibling must be unblocked by the poison, not left parked
+        assert!(t.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn bus_two_broadcast_roots_rejected() {
+        let bus = Arc::new(TensorBus::new(2));
+        let b = bus.clone();
+        let t = std::thread::spawn(move || b.broadcast(0, Some(vec![1.0])));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let r1 = bus.broadcast(1, Some(vec![2.0]));
+        assert!(r1.is_err(), "second root must error");
+        assert!(t.join().unwrap().is_err());
     }
 
     #[test]

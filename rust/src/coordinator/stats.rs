@@ -145,6 +145,22 @@ pub struct RunStats {
     /// Max active wall time over learner threads — the exposed learner
     /// schedule, a critical-path candidate (DESIGN.md §9).
     pub learner_active_max_nanos: AtomicU64,
+    /// Threaded-Anakin replica accounting (DESIGN.md §10), summed over
+    /// replica threads: device time the replica was exposed to (recv-blocked
+    /// harvest spans — at overlap the span covers host work issued under it —
+    /// plus replica 0's Psum apply), host conversion + metric accumulation
+    /// time, collective time (bus wait + reduction), active wall (loop wall
+    /// minus collective wait — waiting on siblings is their deficit), and
+    /// the hidden portion `max(0, device + host − active)` per replica.
+    pub anakin_device_nanos: AtomicU64,
+    pub anakin_host_nanos: AtomicU64,
+    pub anakin_collective_nanos: AtomicU64,
+    pub anakin_active_nanos: AtomicU64,
+    pub anakin_overlap_nanos: AtomicU64,
+    /// Max per-replica busy time `min(device + host, active)` — the
+    /// post-overlap replica schedule, a critical-path candidate for
+    /// `projected_sps` (DESIGN.md §10).
+    pub anakin_busy_max_nanos: AtomicU64,
 }
 
 impl RunStats {
@@ -222,6 +238,60 @@ impl RunStats {
         self.learner_overlap_nanos
             .fetch_add((g + c + a).saturating_sub(w), Ordering::Relaxed);
         self.learner_active_max_nanos.fetch_max(w, Ordering::Relaxed);
+    }
+
+    /// Record one Anakin replica thread's lifetime totals: exposed device
+    /// time (recv-blocked harvest spans + replica 0's Psum apply), collective
+    /// time (bus wait + reduction), host conversion + metric time, and
+    /// active wall (loop wall minus collective wait). The overlapped share
+    /// is what the replica schedule hid — the serial driver records one
+    /// pseudo-replica whose exposed spans fill its active wall, so it is ~0
+    /// there (DESIGN.md §10). The per-replica busy time
+    /// `min(device + host, active)` is the post-overlap schedule length;
+    /// its max over replicas joins the `projected_sps` critical path.
+    pub fn record_anakin_overlap(
+        &self,
+        device: std::time::Duration,
+        collective: std::time::Duration,
+        host: std::time::Duration,
+        active: std::time::Duration,
+    ) {
+        let d = device.as_nanos() as u64;
+        let c = collective.as_nanos() as u64;
+        let h = host.as_nanos() as u64;
+        let w = active.as_nanos() as u64;
+        self.anakin_device_nanos.fetch_add(d, Ordering::Relaxed);
+        self.anakin_collective_nanos.fetch_add(c, Ordering::Relaxed);
+        self.anakin_host_nanos.fetch_add(h, Ordering::Relaxed);
+        self.anakin_active_nanos.fetch_add(w, Ordering::Relaxed);
+        self.anakin_overlap_nanos
+            .fetch_add((d + h).saturating_sub(w), Ordering::Relaxed);
+        self.anakin_busy_max_nanos
+            .fetch_max((d + h).min(w), Ordering::Relaxed);
+    }
+
+    pub fn anakin_device_seconds(&self) -> f64 {
+        self.anakin_device_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn anakin_collective_seconds(&self) -> f64 {
+        self.anakin_collective_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn anakin_host_seconds(&self) -> f64 {
+        self.anakin_host_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn anakin_active_seconds(&self) -> f64 {
+        self.anakin_active_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn anakin_overlap_seconds(&self) -> f64 {
+        self.anakin_overlap_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn anakin_busy_max_seconds(&self) -> f64 {
+        self.anakin_busy_max_nanos.load(Ordering::Relaxed) as f64 * 1e-9
     }
 
     pub fn learner_grad_seconds(&self) -> f64 {
@@ -391,6 +461,34 @@ mod tests {
         assert!((s.learner_active_seconds() - 0.120).abs() < 1e-6);
         // critical-path candidate is the max per-thread active time
         assert!((s.learner_active_max_seconds() - 0.060).abs() < 1e-6);
+    }
+
+    #[test]
+    fn anakin_overlap_mirrors_learner_accounting() {
+        let s = RunStats::new();
+        // serial pseudo-replica: exposed device + host + collective fill the wall
+        s.record_anakin_overlap(
+            Duration::from_millis(70),
+            Duration::from_millis(10),
+            Duration::from_millis(20),
+            Duration::from_millis(90),
+        );
+        assert!(s.anakin_overlap_seconds() < 1e-9);
+        // threaded replica: 15ms of metric accumulation ran under the next call
+        s.record_anakin_overlap(
+            Duration::from_millis(60),
+            Duration::from_millis(5),
+            Duration::from_millis(15),
+            Duration::from_millis(60),
+        );
+        assert!((s.anakin_overlap_seconds() - 0.015).abs() < 1e-6);
+        assert!((s.anakin_device_seconds() - 0.130).abs() < 1e-6);
+        assert!((s.anakin_host_seconds() - 0.035).abs() < 1e-6);
+        assert!((s.anakin_collective_seconds() - 0.015).abs() < 1e-6);
+        assert!((s.anakin_active_seconds() - 0.150).abs() < 1e-6);
+        // busy = min(device + host, active); the max over replicas is the
+        // critical-path candidate: max(min(90, 90), min(75, 60)) = 90ms
+        assert!((s.anakin_busy_max_seconds() - 0.090).abs() < 1e-6);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! podracer anakin   [--agent anakin_catch] [--cores 4] [--outer-iters 20] [--mode bundled|psum]
+//!                   [--driver threaded|serial]
 //! podracer sebulba  [--agent seb_catch] [--env catch] [--actor-cores 2] [--learner-cores 2]
 //!                   [--batch 32] [--pipeline-stages 2] [--unroll 20] [--updates 100]
 //!                   [--replicas 1] [--threads 2]
@@ -10,7 +11,7 @@
 //! ```
 
 use anyhow::Result;
-use podracer::anakin::{Anakin, AnakinConfig, Mode};
+use podracer::anakin::{Anakin, AnakinConfig, Driver, Mode};
 use podracer::coordinator::{Sebulba, SebulbaConfig};
 use podracer::runtime::Pod;
 use podracer::search::{run_muzero, MuZeroRunConfig};
@@ -54,12 +55,25 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 } else {
                     Mode::Bundled
                 },
+                driver: match args.get_str("driver", "threaded").as_str() {
+                    "threaded" => Driver::Threaded,
+                    "serial" => Driver::Serial,
+                    other => anyhow::bail!("--driver expects threaded|serial, got {other:?}"),
+                },
                 seed: args.get_u64("seed", 7)?,
             };
             let report = Anakin::run(&artifacts, &cfg)?;
             println!(
                 "anakin: steps={} updates={} elapsed={:.2}s sps={:.0} projected_sps={:.0}",
                 report.steps, report.updates, report.elapsed, report.sps, report.projected_sps
+            );
+            println!(
+                "  replica schedule: device={:.2}s host={:.2}s collective={:.2}s hidden_by_overlap={:.2}s busy_max={:.2}s",
+                report.replica_device_seconds,
+                report.replica_host_seconds,
+                report.replica_collective_seconds,
+                report.replica_overlap_seconds,
+                report.replica_busy_max_seconds
             );
             if let (Some(first), Some(last)) = (report.metrics.first(), report.metrics.last()) {
                 println!(

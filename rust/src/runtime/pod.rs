@@ -44,6 +44,13 @@ impl Pod {
         self.cores.iter().map(|c| c.handle.clone()).collect()
     }
 
+    /// Handles for a specific set of cores, in the given order — what a
+    /// driver hands to per-replica threads (the threaded Anakin driver
+    /// gives each replica thread its core this way).
+    pub fn handles_for(&self, core_ids: &[usize]) -> Result<Vec<DeviceHandle>> {
+        core_ids.iter().map(|&i| self.core(i)).collect()
+    }
+
     /// Compile `program` (manifest name) onto the given cores, in parallel.
     pub fn load_program(&mut self, program: &str, core_ids: &[usize]) -> Result<()> {
         let spec = self.manifest.program(program)?.clone();

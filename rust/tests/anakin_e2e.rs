@@ -1,7 +1,7 @@
 //! Anakin end-to-end integration: the on-device loop, replication and the
 //! psum-vs-bundled equivalence (DESIGN.md §1 substitution argument).
 
-use podracer::anakin::{params_in_sync, Anakin, AnakinConfig, Mode};
+use podracer::anakin::{params_in_sync, Anakin, AnakinConfig, Driver, Mode};
 use podracer::runtime::Pod;
 
 fn artifacts() -> std::path::PathBuf {
@@ -19,6 +19,7 @@ fn bundled_smoke_run() {
         cores: 1,
         outer_iters: 2,
         mode: Mode::Bundled,
+        driver: Driver::Threaded,
         seed: 1,
     };
     let report = Anakin::run(&artifacts(), &cfg).unwrap();
@@ -37,6 +38,7 @@ fn deterministic_given_seed() {
         cores: 2,
         outer_iters: 2,
         mode: Mode::Bundled,
+        driver: Driver::Threaded,
         seed: 99,
     };
     let r1 = Anakin::run(&artifacts(), &cfg).unwrap();
@@ -54,6 +56,7 @@ fn psum_mode_keeps_cores_in_sync() {
         cores: 3,
         outer_iters: 3,
         mode: Mode::Psum,
+        driver: Driver::Threaded,
         seed: 5,
     };
     let report = Anakin::run(&artifacts(), &cfg).unwrap();
@@ -62,17 +65,20 @@ fn psum_mode_keeps_cores_in_sync() {
 }
 
 #[test]
-fn single_core_psum_equals_bundled_when_k_is_1() {
-    // With one core the collective is a no-op, so one psum update + apply
-    // must track the first in-graph update. (Full K-step equality is the
-    // python-side test; here we check the rust plumbing produces finite,
-    // moving parameters through both paths.)
+fn single_core_psum_diverges_from_bundled_when_k_is_8() {
+    // With one core the collective is a no-op; one psum update cannot track
+    // 8 in-graph updates, so the two paths must actually diverge — this
+    // pins that psum really dispatches the grad+apply path, not the bundled
+    // program. (True K=1 equivalence is pinned by
+    // `psum_equals_bundled_at_k1_under_threaded_driver` in
+    // rust/tests/anakin_threaded.rs against the `anakin_catch_k1` artifact.)
     let mut pod = Pod::new(&artifacts(), 1).unwrap();
     let base = AnakinConfig {
         agent: "anakin_catch".into(),
         cores: 1,
         outer_iters: 1,
         mode: Mode::Psum,
+        driver: Driver::Serial,
         seed: 7,
     };
     let r_psum = Anakin::run_on(&mut pod, &base).unwrap();
@@ -83,8 +89,10 @@ fn single_core_psum_equals_bundled_when_k_is_1() {
     .unwrap();
     assert!(r_psum.final_params.iter().all(|x| x.is_finite()));
     assert!(r_bund.final_params.iter().all(|x| x.is_finite()));
-    // both must have moved from init and from each other's step counts
-    assert!(!params_in_sync(&r_psum.final_params, &r_bund.final_params) || true);
+    assert!(
+        !params_in_sync(&r_psum.final_params, &r_bund.final_params),
+        "1 psum update vs 8 in-graph updates must produce different parameters"
+    );
     assert_eq!(r_psum.updates, 1);
     assert_eq!(r_bund.updates, 8); // K=8 in-graph
 }
@@ -98,6 +106,7 @@ fn replication_learns_catch() {
         cores: 2,
         outer_iters: 20,
         mode: Mode::Bundled,
+        driver: Driver::Threaded,
         seed: 3,
     };
     let report = Anakin::run(&artifacts(), &cfg).unwrap();
@@ -119,6 +128,7 @@ fn gridworld_agent_runs() {
         cores: 1,
         outer_iters: 2,
         mode: Mode::Bundled,
+        driver: Driver::Threaded,
         seed: 2,
     };
     let report = Anakin::run(&artifacts(), &cfg).unwrap();

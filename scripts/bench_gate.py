@@ -1,0 +1,206 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: collect smoke-bench results, emit BENCH_*.json,
+and fail CI when throughput drops more than the tolerance below the
+committed baselines.
+
+Pipeline (wired up by `make bench-smoke` and `.github/workflows/ci.yml`):
+
+1. The smoke benches run under ``PODRACER_BENCH_FAST=1`` and dump JSON into
+   ``bench_results/`` (``benchkit::Bench::dump_json`` plus the fig4a series
+   file).
+2. ``bench_gate.py --emit`` distills them into two suite files at the repo
+   root — ``BENCH_anakin.json`` (fig4a scaling + the threaded-vs-serial
+   driver speedup, DESIGN.md §10) and ``BENCH_sebulba.json`` (the learner
+   pipeline and pipeline-stages ablations) — which CI uploads as artifacts.
+3. ``--check`` compares every baseline case in ``bench_baselines/`` against
+   the current value: the gate fails if ``current < TOLERANCE * baseline``
+   (sps dropping more than 30%), or if a baselined case disappeared.
+4. ``--write-baseline`` regenerates the committed baselines from the
+   current run (``make bench-baseline``). Baselines shipped with
+   ``"bootstrap": true`` are conservative floors checked the same way —
+   regenerate them on the reference machine to give the gate real teeth.
+
+Case values are throughputs (steps/s, projected fps) or ratios — larger is
+always better, which is what makes the one-sided tolerance sound.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+
+TOLERANCE = 0.7  # fail when current < 70% of baseline (a >30% sps drop)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS_DIR = os.path.join(REPO_ROOT, "bench_results")
+BASELINE_DIR = os.path.join(REPO_ROOT, "bench_baselines")
+
+SUITES = ("anakin", "sebulba")
+
+
+def _load_json(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _bench_dumps():
+    """All benchkit dump files in bench_results/, keyed by their title."""
+    dumps = {}
+    if not os.path.isdir(RESULTS_DIR):
+        return dumps
+    for name in sorted(os.listdir(RESULTS_DIR)):
+        if not name.endswith(".json"):
+            continue
+        try:
+            data = _load_json(os.path.join(RESULTS_DIR, name))
+        except (OSError, json.JSONDecodeError):
+            continue
+        title = data.get("title")
+        if isinstance(title, str):
+            dumps[title] = data
+    return dumps
+
+
+def _mean(xs):
+    return sum(xs) / len(xs) if xs else 0.0
+
+
+def _ablation_cases(dumps, title_prefix, key_prefix):
+    """benchkit cases like 'learner_pipeline=2' -> {'<key_prefix>learner_pipeline_2': mean metric}."""
+    cases = {}
+    for title, data in dumps.items():
+        if not title.startswith(title_prefix):
+            continue
+        for case in data.get("cases", []):
+            name = str(case.get("name", "")).replace("=", "_").replace(" ", "_")
+            value = _mean(case.get("metrics", []))
+            if name and value > 0.0:
+                cases[f"{key_prefix}{name}"] = value
+    return cases
+
+
+def collect():
+    """Distill bench_results/ into the two suite case maps."""
+    suites = {s: {} for s in SUITES}
+
+    fig4a_path = os.path.join(RESULTS_DIR, "fig4a_series.json")
+    if os.path.exists(fig4a_path):
+        series = _load_json(fig4a_path)
+        for cores, sps in zip(series.get("cores", []), series.get("measured_sps", [])):
+            suites["anakin"][f"fig4a_sps_cores_{int(cores)}"] = float(sps)
+        if "threaded_speedup_4c" in series:
+            suites["anakin"]["fig4a_threaded_speedup_4c"] = float(
+                series["threaded_speedup_4c"]
+            )
+
+    dumps = _bench_dumps()
+    suites["sebulba"].update(
+        _ablation_cases(dumps, "ablation: learner pipeline", "")
+    )
+    suites["sebulba"].update(
+        _ablation_cases(dumps, "ablation: pipeline stages", "")
+    )
+    return suites
+
+
+def emit(suites, out_dir):
+    for suite, cases in suites.items():
+        payload = {
+            "suite": suite,
+            "source": "scripts/bench_gate.py",
+            "host": platform.platform(),
+            "bootstrap": False,
+            "cases": cases,
+        }
+        path = os.path.join(out_dir, f"BENCH_{suite}.json")
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"[bench-gate] wrote {os.path.relpath(path, REPO_ROOT)} ({len(cases)} cases)")
+        if not cases:
+            print(f"[bench-gate] WARNING: no cases collected for suite {suite!r} — "
+                  "did the smoke benches run?")
+
+
+def write_baseline(suites):
+    os.makedirs(BASELINE_DIR, exist_ok=True)
+    for suite, cases in suites.items():
+        payload = {
+            "suite": suite,
+            "source": "make bench-baseline",
+            "host": platform.platform(),
+            "bootstrap": False,
+            "cases": cases,
+        }
+        path = os.path.join(BASELINE_DIR, f"BENCH_{suite}.json")
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"[bench-gate] baseline -> {os.path.relpath(path, REPO_ROOT)} "
+              f"({len(cases)} cases)")
+
+
+def check(suites):
+    failures = []
+    checked = 0
+    for suite in SUITES:
+        base_path = os.path.join(BASELINE_DIR, f"BENCH_{suite}.json")
+        if not os.path.exists(base_path):
+            failures.append(f"{suite}: missing baseline {os.path.relpath(base_path, REPO_ROOT)}")
+            continue
+        baseline = _load_json(base_path)
+        bootstrap = baseline.get("bootstrap", False)
+        current = suites.get(suite, {})
+        for name, base_value in sorted(baseline.get("cases", {}).items()):
+            checked += 1
+            cur = current.get(name)
+            if cur is None:
+                failures.append(f"{suite}/{name}: case missing from the current run")
+                continue
+            floor = TOLERANCE * float(base_value)
+            status = "ok" if cur >= floor else "FAIL"
+            note = " (bootstrap floor)" if bootstrap else ""
+            print(f"[bench-gate] {suite}/{name}: current={cur:.2f} "
+                  f"baseline={base_value:.2f} floor={floor:.2f} -> {status}{note}")
+            if cur < floor:
+                failures.append(
+                    f"{suite}/{name}: {cur:.2f} < {floor:.2f} "
+                    f"(= {TOLERANCE:.0%} of baseline {base_value:.2f})"
+                )
+    if failures:
+        print(f"\n[bench-gate] FAILED {len(failures)} of {checked} checks:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"\n[bench-gate] all {checked} checks passed "
+          f"(tolerance: current >= {TOLERANCE:.0%} of baseline)")
+    return 0
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--emit", action="store_true",
+                        help="write BENCH_<suite>.json files to --out-dir")
+    parser.add_argument("--check", action="store_true",
+                        help="compare against bench_baselines/ and exit non-zero on regression")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="regenerate bench_baselines/ from the current run")
+    parser.add_argument("--out-dir", default=REPO_ROOT,
+                        help="where --emit writes BENCH_*.json (default: repo root)")
+    args = parser.parse_args()
+    if not (args.emit or args.check or args.write_baseline):
+        parser.error("nothing to do: pass --emit, --check and/or --write-baseline")
+
+    suites = collect()
+    if args.emit:
+        emit(suites, args.out_dir)
+    if args.write_baseline:
+        write_baseline(suites)
+    if args.check:
+        sys.exit(check(suites))
+
+
+if __name__ == "__main__":
+    main()
