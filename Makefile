@@ -4,7 +4,8 @@
 ARTIFACTS := artifacts
 BENCHES   := $(notdir $(basename $(wildcard rust/benches/*.rs)))
 # The CI bench-regression gate's smoke set (see scripts/bench_gate.py).
-SMOKE_BENCHES := fig4a_anakin_scaling ablation_learner_pipeline ablation_pipeline_stages
+SMOKE_BENCHES := fig4a_anakin_scaling ablation_learner_pipeline ablation_pipeline_stages \
+                 fig4b_actor_batch
 
 .PHONY: all artifacts build test quickstart bench bench-learner-pipeline \
         bench-smoke bench-baseline fmt clippy

@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
         replicas: 1,
         total_updates: 200,
         seed: 42,
+        copy_path: false,
     };
     println!(
         "podracer quickstart: Sebulba/V-trace on Catch ({}A+{}L cores, batch {}, T={})",

@@ -44,6 +44,7 @@ fn main() -> anyhow::Result<()> {
         replicas: 1,
         total_updates: total_updates / stages,
         seed: args.get_u64("seed", 42)?,
+        copy_path: false,
     };
     println!(
         "sebulba_atari E2E: conv actor-critic on atari_like ({}x{}x{} pixels), {} updates",

@@ -40,6 +40,7 @@ fn main() -> anyhow::Result<()> {
             replicas: 1,
             total_updates: updates,
             seed: 8,
+            copy_path: false,
         };
         let mut out = (0.0, 0.0);
         bench.case(&format!("threads/core={threads}"), "frames/s", || {

@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
             replicas: 1,
             total_updates: updates,
             seed: 5,
+            copy_path: false,
         };
         let mut out = (0.0, 0.0, 0.0);
         bench.case(&format!("{a}A:{l}L"), "frames/s", || {

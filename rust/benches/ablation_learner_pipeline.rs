@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
             replicas: 1,
             total_updates: updates,
             seed: 7,
+            copy_path: false,
         };
         let mut out = (0.0, 0.0, 0.0, 0.0);
         bench.case(&format!("learner_pipeline={depth}"), "projected frames/s", || {

@@ -45,6 +45,7 @@ fn main() -> anyhow::Result<()> {
             replicas: 1,
             total_updates: updates * stages as u64, // same total frames per case
             seed: 12,
+            copy_path: false,
         };
         let mut out = (0.0, 0.0, 0.0);
         bench.case(&format!("pipeline_stages={stages}"), "projected frames/s", || {

@@ -35,6 +35,7 @@ fn main() -> anyhow::Result<()> {
             replicas: 1,
             total_updates: updates,
             seed: 6,
+            copy_path: false,
         };
         let mut out = (0.0, 0.0, 0.0);
         bench.case(&format!("T={t}"), "frames/s", || {

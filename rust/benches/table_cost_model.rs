@@ -45,6 +45,7 @@ fn main() -> anyhow::Result<()> {
         replicas: 1,
         total_updates: updates,
         seed: 2,
+        copy_path: false,
     };
     let mut vtrace_fps = 0.0;
     bench.case("sebulba v-trace atari_like (6 cores)", "frames/s", || {

@@ -10,8 +10,11 @@
 //!
 //! With `pipeline_stages = 1` the loop degenerates to the fully synchronous
 //! schedule (infer, step, accumulate — bit-for-bit the pre-pipeline actor).
-//! Each stage accumulates its own trajectory; after T steps the stage's
-//! window is sharded along the batch dimension and queued for the learners.
+//! Each stage accumulates its own window directly into an `Arc`-shared
+//! [`TrajArena`] (shard-major, DESIGN.md §11); after T steps the stage's
+//! window is sharded into zero-copy [`TrajShard`] views and queued for the
+//! learners. Observation and parameter uploads are `Arc`-backed too, so the
+//! whole actor→device seam moves references, not buffers.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
@@ -25,13 +28,14 @@ use crate::runtime::DeviceHandle;
 
 use super::param_store::ParamStore;
 use super::queue::BoundedQueue;
-use super::sharder::shard;
+use super::sharder::{shard, shard_copying};
 use super::stats::RunStats;
-use super::trajectory::{Trajectory, TrajectoryBuilder};
+use super::trajectory::{TrajShard, TrajectoryBuilder};
 
 /// A bundle of shards from one trajectory window: `micro_batches` rounds of
-/// `learner_cores` shards each (see learner.rs).
-pub type ShardBundle = Vec<Trajectory>;
+/// `learner_cores` shards each (see learner.rs). Shards are arena views —
+/// pushing a bundle moves `Arc` handles, never experience data.
+pub type ShardBundle = Vec<TrajShard>;
 
 pub struct ActorConfig {
     pub actor_id: usize,
@@ -47,6 +51,9 @@ pub struct ActorConfig {
     pub obs_shape: Vec<usize>,
     pub num_actions: usize,
     pub seed: u64,
+    /// Use the materializing (pre-refactor) sharder instead of arena views
+    /// — the bit-exactness oracle for the zero-copy path (DESIGN.md §11).
+    pub copy_path: bool,
 }
 
 /// Spawn an actor thread. It runs until `stop` is set or the queue shuts
@@ -79,9 +86,13 @@ struct PendingInfer {
 struct Stage {
     env: BatchedEnv,
     /// Latest observation `[b * obs_dim]` — the next inference's input.
-    obs: Vec<f32>,
+    /// `Arc`-shared so the upload references it without cloning; by the
+    /// time the env ticket writes the buffer again, the device core has
+    /// long dropped its handle, so `Arc::make_mut` is a plain `&mut` in
+    /// steady state (and a safe copy-on-write in the worst case).
+    obs: Arc<Vec<f32>>,
     /// Observation the most recent inference saw (trajectory `obs_t`).
-    prev_obs: Vec<f32>,
+    prev_obs: Arc<Vec<f32>>,
     actions: Vec<i32>,
     logits: Vec<f32>,
     rewards: Vec<f32>,
@@ -150,6 +161,11 @@ fn actor_loop(
         stages_n
     );
     let sb = cfg.batch / stages_n; // envs per stage
+    anyhow::ensure!(
+        cfg.num_shards >= 1 && sb % cfg.num_shards == 0,
+        "stage batch {sb} must divide into {} shards",
+        cfg.num_shards
+    );
     let d: usize = cfg.obs_shape.iter().product();
     let a = cfg.num_actions;
     let mut rng = crate::util::rng::Xoshiro256::from_stream(cfg.seed, cfg.actor_id as u64);
@@ -159,18 +175,18 @@ fn actor_loop(
             let env = BatchedEnv::with_slot_offset(factory, sb, s * sb, pool.clone())
                 .with_context(|| format!("building batched env (stage {s})"))?;
             let mut obs = vec![0.0f32; sb * d];
-            env.reset(&mut obs);
+            env.reset(&mut obs).with_context(|| format!("resetting envs (stage {s})"))?;
             Ok(Stage {
                 env,
-                obs,
-                prev_obs: vec![0.0; sb * d],
+                obs: Arc::new(obs),
+                prev_obs: Arc::new(vec![0.0; sb * d]),
                 actions: vec![0; sb],
                 logits: vec![0.0; sb * a],
                 rewards: vec![0.0; sb],
                 dones: vec![false; sb],
                 discounts: vec![0.0; sb],
                 episode_reward: vec![0.0; sb],
-                builder: TrajectoryBuilder::new(cfg.unroll, sb, &cfg.obs_shape, a),
+                builder: TrajectoryBuilder::new(cfg.unroll, sb, &cfg.obs_shape, a, cfg.num_shards),
                 infer: None,
                 step: None,
             })
@@ -180,6 +196,8 @@ fn actor_loop(
     // Device-resident parameter cache: parameters are uploaded to the actor
     // core once per published version and referenced by slot on every
     // inference call — the paper's "parameters stay on device" (§Perf L3-1).
+    // The upload itself references the `ParamSnapshot`'s Arc'd buffer
+    // (DESIGN.md §11), so no host-side copy is made either.
     let param_slot = format!("params#{}", cfg.actor_id);
     let mut cached_version = u64::MAX;
 
@@ -197,12 +215,12 @@ fn actor_loop(
         if snap.version != *cached_version {
             core.cache(
                 &param_slot,
-                HostTensor::f32(vec![snap.params.len()], snap.params.clone())?,
+                HostTensor::f32_shared(vec![snap.params.len()], snap.params.clone(), 0)?,
             )?;
             *cached_version = snap.version;
         }
         let inputs = vec![
-            HostTensor::f32(stage_batch_shape.clone(), stage.obs.clone())?,
+            HostTensor::f32_shared(stage_batch_shape.clone(), stage.obs.clone(), 0)?,
             HostTensor::scalar_i32(rng.next_program_seed()),
         ];
         let rx = core.execute_cached_async(
@@ -254,7 +272,9 @@ fn actor_loop(
         let s2 = (tick + 1) % stages_n;
         let stage = &mut stages[s2];
         if let Some(ticket) = stage.step.take() {
-            let span = ticket.wait(&mut stage.obs, &mut stage.rewards, &mut stage.dones);
+            let span = ticket
+                .wait(Arc::make_mut(&mut stage.obs), &mut stage.rewards, &mut stage.dones)
+                .context("stepping environments")?;
             acc.env_busy += span;
             stats.env_step_latency.record(span);
 
@@ -281,13 +301,14 @@ fn actor_loop(
                 &stage.discounts,
             )?;
 
-            // 5) window full: finish with the bootstrap obs, shard, enqueue
+            // 5) window full: finish with the bootstrap obs, shard, enqueue.
+            //    The arena moves as Arc views; the copy path is the oracle.
             if stage.builder.is_full() {
                 let version = store.version();
-                let traj = stage.builder.finish(&stage.obs, version, cfg.actor_id)?;
-                stats.env_frames.add(traj.frames() as u64);
+                let arena = stage.builder.finish(&stage.obs, version, cfg.actor_id)?;
+                stats.env_frames.add(arena.frames() as u64);
                 stats.trajectories.fetch_add(1, Ordering::Relaxed);
-                let shards = shard(&traj, cfg.num_shards)?;
+                let shards = if cfg.copy_path { shard_copying(&arena)? } else { shard(&arena) };
                 let t_push = Instant::now();
                 let pushed = queue.push(shards);
                 acc.queue_blocked += t_push.elapsed();

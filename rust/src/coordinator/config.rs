@@ -48,6 +48,11 @@ pub struct SebulbaConfig {
     /// Stop after this many learner updates per replica.
     pub total_updates: u64,
     pub seed: u64,
+    /// Use the materializing (pre-refactor) sharder instead of zero-copy
+    /// arena views — kept as the bit-exactness oracle for the arena data
+    /// path (DESIGN.md §11), mirroring Anakin's `--driver serial` oracle.
+    /// Identical results, strictly more host copies; default `false`.
+    pub copy_path: bool,
 }
 
 impl Default for SebulbaConfig {
@@ -69,6 +74,7 @@ impl Default for SebulbaConfig {
             replicas: 1,
             total_updates: 50,
             seed: 42,
+            copy_path: false,
         }
     }
 }
@@ -210,6 +216,18 @@ mod tests {
         assert_eq!(serial.apply_program(), piped.apply_program());
         assert_eq!(serial.infer_program(), piped.infer_program());
         assert_eq!(serial.shard_batch(), piped.shard_batch());
+    }
+
+    #[test]
+    fn copy_path_is_geometry_neutral() {
+        // The copying oracle changes only the host-side storage strategy:
+        // same lowered programs, same shard geometry, still valid.
+        let arena = SebulbaConfig::default();
+        let copy = SebulbaConfig { copy_path: true, ..Default::default() };
+        copy.validate().unwrap();
+        assert_eq!(arena.grad_program(), copy.grad_program());
+        assert_eq!(arena.infer_program(), copy.infer_program());
+        assert_eq!(arena.shard_batch(), copy.shard_batch());
     }
 
     #[test]

@@ -37,7 +37,7 @@ use super::collective::{all_reduce_mean, GradientBus};
 use super::param_store::{ParamSnapshot, ParamStore};
 use super::queue::BoundedQueue;
 use super::stats::RunStats;
-use super::trajectory::Trajectory;
+use super::trajectory::TrajShard;
 
 /// How long a launch polls the queue for the next bundle while rounds are
 /// still in flight: long enough to piggyback on a push that is about to
@@ -85,7 +85,7 @@ struct InFlightRound {
 fn launch_round(
     cfg: &LearnerConfig,
     h: &LearnerHandles,
-    pending: &mut VecDeque<Trajectory>,
+    pending: &mut VecDeque<TrajShard>,
     param_slot: &str,
     core_versions: &mut [u64],
 ) -> Result<InFlightRound> {
@@ -93,7 +93,7 @@ fn launch_round(
     let data_version = pending
         .front()
         .expect("caller ensured a full round of shards")
-        .param_version;
+        .param_version();
     let issued = Instant::now();
     let mut waits = Vec::with_capacity(h.cores.len());
     for (i, core) in h.cores.iter().enumerate() {
@@ -101,13 +101,16 @@ fn launch_round(
         if core_versions[i] != snap.version {
             core.cache(
                 param_slot,
-                HostTensor::f32(vec![snap.params.len()], snap.params.clone())?,
+                HostTensor::f32_shared(vec![snap.params.len()], snap.params.clone(), 0)?,
             )?;
             core_versions[i] = snap.version;
         }
-        // shards moved, not copied — pixel trajectories are tens of MB
-        // (§Perf L3-2); params come from the device cache slot (input 0)
-        let inputs = shard.into_tensors()?;
+        // Shards are arena views and the param upload references the
+        // snapshot's Arc'd buffer: the grad inputs reach the device-core
+        // thread without a single host-side copy — pixel trajectories are
+        // tens of MB (§Perf L3-2, DESIGN.md §11). Params come from the
+        // device cache slot (input 0).
+        let inputs = shard.to_tensors()?;
         waits.push(core.execute_cached_async(
             &cfg.grad_program,
             inputs,
@@ -147,7 +150,7 @@ pub fn learner_main(
     let mut apply_busy = Duration::ZERO;
     let mut pop_blocked = Duration::ZERO;
 
-    let mut pending: VecDeque<Trajectory> = VecDeque::new();
+    let mut pending: VecDeque<TrajShard> = VecDeque::new();
     let mut in_flight: VecDeque<InFlightRound> = VecDeque::new();
     let mut launched = 0u64;
     let mut retired = 0u64;
@@ -233,7 +236,7 @@ pub fn learner_main(
         let t_apply = Instant::now();
         let current = h.store.latest();
         let apply_inputs = vec![
-            HostTensor::f32(vec![current.params.len()], current.params.clone())?,
+            HostTensor::f32_shared(vec![current.params.len()], current.params.clone(), 0)?,
             HostTensor::f32(vec![opt_state.len()], std::mem::take(&mut opt_state))?,
             HostTensor::f32(vec![global.len()], global)?,
         ];
@@ -262,6 +265,6 @@ pub fn learner_main(
         t_loop.elapsed().saturating_sub(pop_blocked),
     );
 
-    let final_params = h.store.latest().params.clone();
+    let final_params = h.store.latest().params.as_ref().clone();
     Ok((final_params, opt_state))
 }

@@ -4,8 +4,9 @@
 //! `8 - A` learner cores (paper Fig. 1c / Fig. 3). Actor threads (≥1 per
 //! actor core) step batched host-side environments and run batched inference
 //! on their core, double-buffered over `pipeline_stages` sub-batches so env
-//! stepping hides behind device time (DESIGN.md §2); completed trajectories
-//! are sharded along the batch dimension and queued to the learners; the
+//! stepping hides behind device time (DESIGN.md §2); completed windows live
+//! in `Arc`-shared shard-major arenas, sharded along the batch dimension
+//! into zero-copy views and queued to the learners (DESIGN.md §11); the
 //! learner thread runs the grad program on every learner core, all-reduces
 //! the gradients (the paper's `psum`), applies the update, and publishes
 //! fresh parameters to the actor threads through the parameter store. The

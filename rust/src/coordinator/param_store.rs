@@ -4,7 +4,17 @@
 //! The learner publishes a new snapshot after every update; actor threads
 //! grab the latest snapshot before each inference step ("switch to using the
 //! latest parameters before each new inference step"). Snapshots are
-//! `Arc`-shared, so publishing never blocks actors and actors never copy.
+//! `Arc`-shared — and the parameter buffer itself is a second `Arc`, so a
+//! snapshot can be handed to a device core as a zero-copy
+//! `HostTensor::f32_shared` upload (DESIGN.md §11): publishing never blocks
+//! actors, and actors never copy.
+//!
+//! Version assignment happens *under the write lock*. Assigning with a
+//! lock-free `fetch_add` first (the pre-fix code) let two concurrent
+//! publishers install snapshots out of order: publisher A draws version 1,
+//! publisher B draws 2 and installs first, then A overwrites — `latest()`
+//! ends up behind `version()` forever and actors keep reading the stale
+//! params as if they were fresh.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
@@ -12,18 +22,25 @@ use std::sync::{Arc, RwLock};
 #[derive(Debug)]
 pub struct ParamSnapshot {
     pub version: u64,
-    pub params: Vec<f32>,
+    /// `Arc`-shared so device uploads reference the snapshot directly.
+    pub params: Arc<Vec<f32>>,
 }
 
 pub struct ParamStore {
     current: RwLock<Arc<ParamSnapshot>>,
+    /// Last published version. Updated under the write lock (after the
+    /// snapshot is installed), read lock-free: `version()` may briefly lag
+    /// `latest().version` during a publish, but can never run ahead of it.
     version: AtomicU64,
 }
 
 impl ParamStore {
     pub fn new(initial: Vec<f32>) -> Self {
         Self {
-            current: RwLock::new(Arc::new(ParamSnapshot { version: 0, params: initial })),
+            current: RwLock::new(Arc::new(ParamSnapshot {
+                version: 0,
+                params: Arc::new(initial),
+            })),
             version: AtomicU64::new(0),
         }
     }
@@ -37,11 +54,19 @@ impl ParamStore {
         self.version.load(Ordering::Acquire)
     }
 
-    /// Publish new parameters; returns the new version.
+    /// Publish new parameters; returns the new version. Concurrent
+    /// publishers serialize on the write lock, so versions are assigned and
+    /// installed in the same order and `latest().version` is monotonic.
     pub fn publish(&self, params: Vec<f32>) -> u64 {
-        let v = self.version.fetch_add(1, Ordering::AcqRel) + 1;
-        let snap = Arc::new(ParamSnapshot { version: v, params });
-        *self.current.write().unwrap() = snap;
+        self.publish_shared(Arc::new(params))
+    }
+
+    /// Publish an already-`Arc`'d buffer without copying it.
+    pub fn publish_shared(&self, params: Arc<Vec<f32>>) -> u64 {
+        let mut g = self.current.write().unwrap();
+        let v = self.version.load(Ordering::Relaxed) + 1;
+        *g = Arc::new(ParamSnapshot { version: v, params });
+        self.version.store(v, Ordering::Release);
         v
     }
 }
@@ -90,5 +115,73 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn concurrent_publishers_keep_latest_monotonic() {
+        // Regression (ISSUE 4): version used to be drawn with fetch_add
+        // *before* taking the write lock, so two racing publishers could
+        // install out of order and leave latest() permanently behind
+        // version(). Hammer the store from several publishers while a
+        // reader asserts latest().version never goes backwards.
+        use std::sync::atomic::AtomicBool;
+
+        const PUBLISHERS: usize = 4;
+        const EACH: u64 = 400;
+
+        let store = Arc::new(ParamStore::new(vec![0.0]));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let watcher = {
+            let s = store.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut last = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let snap = s.latest();
+                    assert!(
+                        snap.version >= last,
+                        "latest() went backwards: {} after {}",
+                        snap.version,
+                        last
+                    );
+                    // version() may lag by at most the publish in flight,
+                    // but never runs ahead of an installed snapshot forever
+                    assert!(s.version() + 1 >= snap.version);
+                    last = snap.version;
+                }
+            })
+        };
+
+        let mut pubs = Vec::new();
+        for p in 0..PUBLISHERS {
+            let s = store.clone();
+            pubs.push(std::thread::spawn(move || {
+                for i in 0..EACH {
+                    s.publish(vec![(p as u64 * EACH + i) as f32]);
+                }
+            }));
+        }
+        for p in pubs {
+            p.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        watcher.join().unwrap();
+
+        // Quiescent: every publish got a distinct, in-order version, and
+        // the installed snapshot is the one that drew the final version.
+        assert_eq!(store.version(), PUBLISHERS as u64 * EACH);
+        assert_eq!(store.latest().version, PUBLISHERS as u64 * EACH);
+    }
+
+    #[test]
+    fn publish_shared_does_not_copy() {
+        let store = ParamStore::new(vec![0.0]);
+        let buf = Arc::new(vec![4.0, 5.0]);
+        let ptr = buf.as_ptr();
+        store.publish_shared(buf);
+        let snap = store.latest();
+        assert!(std::ptr::eq(snap.params.as_ptr(), ptr));
+        assert_eq!(snap.version, 1);
     }
 }

@@ -48,7 +48,12 @@ impl<T> BoundedQueue<T> {
         }
     }
 
-    /// Blocking push (backpressure). Errors only on shutdown.
+    /// Blocking push (backpressure). Errors only on shutdown. Blocked time
+    /// is recorded on the shutdown exit too: a producer parked on a full
+    /// queue until teardown was still backpressured, and dropping that span
+    /// would undercount `push_block_seconds` at exactly the moment the
+    /// run's totals are read (same undercount class as `pop_timeout`'s
+    /// timeout path, fixed in PR 2).
     pub fn push(&self, item: T) -> Result<(), QueueError> {
         let t0 = Instant::now();
         let mut g = self.inner.lock().unwrap();
@@ -56,6 +61,8 @@ impl<T> BoundedQueue<T> {
             g = self.not_full.wait(g).unwrap();
         }
         if g.shutdown {
+            self.push_block_nanos
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             return Err(QueueError::Shutdown);
         }
         g.items.push_back(item);
@@ -68,7 +75,8 @@ impl<T> BoundedQueue<T> {
     }
 
     /// Blocking pop. Errors on shutdown *after* the queue is drained, so
-    /// in-flight work is not lost.
+    /// in-flight work is not lost. Starvation time is recorded on the
+    /// shutdown exit too (see `push` — the teardown undercount class).
     pub fn pop(&self) -> Result<T, QueueError> {
         let t0 = Instant::now();
         let mut g = self.inner.lock().unwrap();
@@ -82,6 +90,8 @@ impl<T> BoundedQueue<T> {
                 return Ok(item);
             }
             if g.shutdown {
+                self.pop_block_nanos
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 return Err(QueueError::Shutdown);
             }
             g = self.not_empty.wait(g).unwrap();
@@ -89,10 +99,10 @@ impl<T> BoundedQueue<T> {
     }
 
     /// Pop with a timeout; `Ok(None)` on timeout. Blocked time is recorded
-    /// on both the item and the timeout path — a timed-out wait is still
-    /// consumer starvation, and dropping it would silently undercount
-    /// `pop_block_seconds` for any timeout-polling consumer (the pipelined
-    /// learner's bundle prefetch).
+    /// on every exit path — item, timeout *and* shutdown: a timed-out or
+    /// torn-down wait is still consumer starvation, and dropping it would
+    /// silently undercount `pop_block_seconds` for any timeout-polling
+    /// consumer (the pipelined learner's bundle prefetch).
     pub fn pop_timeout(&self, dur: Duration) -> Result<Option<T>, QueueError> {
         let t0 = Instant::now();
         let deadline = t0 + dur;
@@ -107,6 +117,8 @@ impl<T> BoundedQueue<T> {
                 return Ok(Some(item));
             }
             if g.shutdown {
+                self.pop_block_nanos
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 return Err(QueueError::Shutdown);
             }
             let now = Instant::now();
@@ -267,6 +279,82 @@ mod tests {
         assert!(
             q.pop_block_seconds() > 0.0,
             "blocked wait before the item landed not counted"
+        );
+    }
+
+    /// Flag-then-sleep: the spawned thread raises `entered` immediately
+    /// before its blocking queue call, and the test sleeps only after
+    /// seeing it — so the measured block span can't be cut short by the
+    /// thread getting scheduled late on a loaded host.
+    fn await_entry(entered: &std::sync::atomic::AtomicBool) {
+        use std::sync::atomic::Ordering;
+        while !entered.load(Ordering::Acquire) {
+            std::thread::yield_now();
+        }
+        std::thread::sleep(Duration::from_millis(40));
+    }
+
+    #[test]
+    fn push_records_block_time_on_shutdown() {
+        // Regression (ISSUE 4): the shutdown exit used to drop the
+        // producer's accumulated backpressure time, undercounting
+        // push_block_seconds at teardown.
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(1).unwrap();
+        let entered = Arc::new(AtomicBool::new(false));
+        let (q2, e2) = (q.clone(), entered.clone());
+        let producer = std::thread::spawn(move || {
+            e2.store(true, Ordering::Release);
+            q2.push(2)
+        });
+        await_entry(&entered);
+        q.shutdown();
+        assert_eq!(producer.join().unwrap(), Err(QueueError::Shutdown));
+        assert!(
+            q.push_block_seconds() >= 0.025,
+            "blocked push torn down without recording: {}s",
+            q.push_block_seconds()
+        );
+    }
+
+    #[test]
+    fn pop_records_block_time_on_shutdown() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let q = Arc::new(BoundedQueue::<i32>::new(1));
+        let entered = Arc::new(AtomicBool::new(false));
+        let (q2, e2) = (q.clone(), entered.clone());
+        let consumer = std::thread::spawn(move || {
+            e2.store(true, Ordering::Release);
+            q2.pop()
+        });
+        await_entry(&entered);
+        q.shutdown();
+        assert_eq!(consumer.join().unwrap(), Err(QueueError::Shutdown));
+        assert!(
+            q.pop_block_seconds() >= 0.025,
+            "blocked pop torn down without recording: {}s",
+            q.pop_block_seconds()
+        );
+    }
+
+    #[test]
+    fn pop_timeout_records_block_time_on_shutdown() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let q = Arc::new(BoundedQueue::<i32>::new(1));
+        let entered = Arc::new(AtomicBool::new(false));
+        let (q2, e2) = (q.clone(), entered.clone());
+        let consumer = std::thread::spawn(move || {
+            e2.store(true, Ordering::Release);
+            q2.pop_timeout(Duration::from_millis(2000))
+        });
+        await_entry(&entered);
+        q.shutdown();
+        assert_eq!(consumer.join().unwrap(), Err(QueueError::Shutdown));
+        assert!(
+            q.pop_block_seconds() >= 0.025,
+            "timed pop torn down without recording: {}s",
+            q.pop_block_seconds()
         );
     }
 

@@ -262,6 +262,16 @@ impl Sebulba {
         pod.load_program(&apply, &learner0_ids)?;
         pod.load_program(&init, &[learner0_ids[0]])?;
 
+        // Pre-run busy baseline, taken before this run executes anything:
+        // on a shared or warm-started pod (`run_on_with` staged trainings)
+        // the cores' cumulative busy counters include previous runs' device
+        // time, and charging it to this run inflated
+        // `actor/learner_busy_seconds` and deflated `projected_fps` — the
+        // same reused-pod bug PR 3 fixed for Anakin's `projected_sps`.
+        let busy0: Vec<f64> = (0..cfg.total_cores())
+            .map(|cid| Ok(pod.core(cid)?.busy_seconds()))
+            .collect::<Result<_>>()?;
+
         // ---- init params (or warm start) -------------------------------------
         let (params0, opt0) = match warm {
             Some((p, o)) => (p, o),
@@ -324,6 +334,7 @@ impl Sebulba {
                         obs_shape: obs_shape.clone(),
                         num_actions,
                         seed: cfg.seed,
+                        copy_path: cfg.copy_path,
                     };
                     actor_joins.push(spawn_actor(
                         acfg,
@@ -383,17 +394,19 @@ impl Sebulba {
 
         // ---- report ----------------------------------------------------------
         let elapsed = t_start.elapsed().as_secs_f64();
+        // All busy totals are *this run's*: the pre-run baseline is
+        // subtracted per core (see `busy0` above).
         let mut actor_busy = 0.0;
         for &cid in &actor_core_ids {
-            actor_busy += pod.core(cid)?.busy_seconds();
+            actor_busy += pod.core(cid)?.busy_seconds() - busy0[cid];
         }
         let mut learner_busy = 0.0;
         let mut critical_path: f64 = 1e-12;
         for &cid in &learner_core_ids {
-            learner_busy += pod.core(cid)?.busy_seconds();
+            learner_busy += pod.core(cid)?.busy_seconds() - busy0[cid];
         }
         for cid in 0..cfg.total_cores() {
-            critical_path = critical_path.max(pod.core(cid)?.busy_seconds());
+            critical_path = critical_path.max(pod.core(cid)?.busy_seconds() - busy0[cid]);
         }
         // An exposed learner schedule lengthens the critical path
         // (DESIGN.md §9): a learner thread's active seconds (wall minus

@@ -1,112 +1,95 @@
-//! Trajectory sharding: split a batch of trajectories along the batch
-//! dimension, one shard per learner core (paper: "splits the batch of
-//! trajectories along the batch dimension, sends each shard directly to one
-//! of the learners").
+//! Trajectory sharding: split a window along the batch dimension, one shard
+//! per learner slot (paper: "splits the batch of trajectories along the
+//! batch dimension, sends each shard directly to one of the learners").
+//!
+//! The arena is laid out shard-major ([`TrajArena`]), so [`shard`] is pure
+//! pointer arithmetic — each [`TrajShard`] is an `Arc` handle plus a column
+//! range, and no experience data moves. [`shard_copying`] is the
+//! pre-refactor materializing path, kept as the bit-exactness oracle
+//! (DESIGN.md §11): it produces shards with identical contents in freshly
+//! copied single-shard arenas, so any divergence between the two paths is a
+//! layout bug, not nondeterminism.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::trajectory::Trajectory;
+use super::trajectory::{TrajArena, TrajShard, Trajectory};
 
-/// Split `traj` into `n` equal shards along the batch dimension.
-/// Requires `traj.batch % n == 0` (the geometry the artifacts were lowered
-/// for); the caller picks compatible actor batch / learner counts.
-pub fn shard(traj: &Trajectory, n: usize) -> Result<Vec<Trajectory>> {
-    if n == 0 {
-        bail!("cannot shard into 0 parts");
-    }
-    if traj.batch % n != 0 {
-        bail!("batch {} not divisible by {} learners", traj.batch, n);
-    }
-    let bs = traj.batch / n; // shard batch
-    let d = traj.obs_numel();
-    let a = traj.num_actions;
-    let t = traj.t_len;
-
-    let mut shards = Vec::with_capacity(n);
-    for s in 0..n {
-        let col0 = s * bs;
-        let mut out = Trajectory {
-            t_len: t,
-            batch: bs,
-            obs_shape: traj.obs_shape.clone(),
-            num_actions: a,
-            obs: Vec::with_capacity((t + 1) * bs * d),
-            actions: Vec::with_capacity(t * bs),
-            rewards: Vec::with_capacity(t * bs),
-            discounts: Vec::with_capacity(t * bs),
-            behaviour_logits: Vec::with_capacity(t * bs * a),
-            param_version: traj.param_version,
-            actor_id: traj.actor_id,
-        };
-        // time-major copies: row t, columns [col0, col0+bs)
-        for ti in 0..=t {
-            let row = ti * traj.batch * d;
-            out.obs
-                .extend_from_slice(&traj.obs[row + col0 * d..row + (col0 + bs) * d]);
-        }
-        for ti in 0..t {
-            let row = ti * traj.batch;
-            out.actions
-                .extend_from_slice(&traj.actions[row + col0..row + col0 + bs]);
-            out.rewards
-                .extend_from_slice(&traj.rewards[row + col0..row + col0 + bs]);
-            out.discounts
-                .extend_from_slice(&traj.discounts[row + col0..row + col0 + bs]);
-            let lrow = ti * traj.batch * a;
-            out.behaviour_logits.extend_from_slice(
-                &traj.behaviour_logits[lrow + col0 * a..lrow + (col0 + bs) * a],
-            );
-        }
-        shards.push(out);
-    }
-    Ok(shards)
+/// Split the window into its `arena.num_shards` shard views. Zero-copy:
+/// every returned shard aliases `arena`'s buffers.
+pub fn shard(arena: &Arc<TrajArena>) -> Vec<TrajShard> {
+    (0..arena.num_shards).map(|i| TrajShard::new(arena.clone(), i)).collect()
 }
 
-/// Reassemble shards into one trajectory (test/verification helper —
-/// the inverse of `shard`).
-pub fn unshard(shards: &[Trajectory]) -> Result<Trajectory> {
+/// The copying reference path: materialize each shard's columns into its
+/// own single-shard arena (what `shard()` did before the arena refactor).
+/// Contents are bitwise identical to the views from [`shard`]; only the
+/// backing storage differs. Enabled end-to-end via
+/// `SebulbaConfig::copy_path` so the zero-copy path can be pinned against
+/// it at fixed seed.
+pub fn shard_copying(arena: &Arc<TrajArena>) -> Result<Vec<TrajShard>> {
+    (0..arena.num_shards)
+        .map(|i| {
+            let view = TrajShard::new(arena.clone(), i);
+            let copy = TrajArena::from_columns(
+                arena.t_len,
+                arena.shard_batch(),
+                &arena.obs_shape,
+                arena.num_actions,
+                1,
+                view.obs().to_vec(),
+                view.actions().to_vec(),
+                view.rewards().to_vec(),
+                view.discounts().to_vec(),
+                view.behaviour_logits().to_vec(),
+                arena.param_version,
+                arena.actor_id,
+            )?;
+            Ok(TrajShard::new(copy, 0))
+        })
+        .collect()
+}
+
+/// Reassemble shards into one materialized trajectory (test/verification
+/// helper — the inverse of `shard`). Shard `s` supplies the column block
+/// `[s * bs, (s + 1) * bs)` of the full window.
+pub fn unshard(shards: &[TrajShard]) -> Result<Trajectory> {
     if shards.is_empty() {
         bail!("no shards");
     }
-    let t = shards[0].t_len;
-    let bs = shards[0].batch;
+    let t = shards[0].t_len();
+    let bs = shards[0].batch();
     let d = shards[0].obs_numel();
-    let a = shards[0].num_actions;
+    let a = shards[0].num_actions();
     let total_b = bs * shards.len();
     let mut out = Trajectory {
         t_len: t,
         batch: total_b,
-        obs_shape: shards[0].obs_shape.clone(),
+        obs_shape: shards[0].arena().obs_shape.clone(),
         num_actions: a,
         obs: vec![0.0; (t + 1) * total_b * d],
         actions: vec![0; t * total_b],
         rewards: vec![0.0; t * total_b],
         discounts: vec![0.0; t * total_b],
         behaviour_logits: vec![0.0; t * total_b * a],
-        param_version: shards[0].param_version,
-        actor_id: shards[0].actor_id,
+        param_version: shards[0].param_version(),
+        actor_id: shards[0].actor_id(),
     };
     for (s, sh) in shards.iter().enumerate() {
-        if sh.t_len != t || sh.batch != bs || sh.num_actions != a {
+        if sh.t_len() != t || sh.batch() != bs || sh.num_actions() != a || sh.obs_numel() != d {
             bail!("inconsistent shard geometry");
         }
-        let col0 = s * bs;
-        for ti in 0..=t {
-            let src = ti * bs * d;
-            let dst = ti * total_b * d + col0 * d;
-            out.obs[dst..dst + bs * d].copy_from_slice(&sh.obs[src..src + bs * d]);
-        }
-        for ti in 0..t {
-            let src = ti * bs;
-            let dst = ti * total_b + col0;
-            out.actions[dst..dst + bs].copy_from_slice(&sh.actions[src..src + bs]);
-            out.rewards[dst..dst + bs].copy_from_slice(&sh.rewards[src..src + bs]);
-            out.discounts[dst..dst + bs].copy_from_slice(&sh.discounts[src..src + bs]);
-            let lsrc = ti * bs * a;
-            let ldst = ti * total_b * a + col0 * a;
-            out.behaviour_logits[ldst..ldst + bs * a]
-                .copy_from_slice(&sh.behaviour_logits[lsrc..lsrc + bs * a]);
-        }
+        // One decoder for the block layout (`Trajectory::fill_block`),
+        // shared with `TrajArena::to_trajectory`.
+        out.fill_block(
+            s * bs,
+            sh.obs(),
+            sh.actions(),
+            sh.rewards(),
+            sh.discounts(),
+            sh.behaviour_logits(),
+        );
     }
     Ok(out)
 }
@@ -116,8 +99,8 @@ mod tests {
     use super::*;
     use crate::coordinator::trajectory::TrajectoryBuilder;
 
-    fn make_traj(t: usize, b: usize, d: usize, a: usize) -> Trajectory {
-        let mut builder = TrajectoryBuilder::new(t, b, &[d], a);
+    fn make_arena(t: usize, b: usize, d: usize, a: usize, n: usize) -> Arc<TrajArena> {
+        let mut builder = TrajectoryBuilder::new(t, b, &[d], a, n);
         for ti in 0..t {
             let obs: Vec<f32> = (0..b * d).map(|i| (ti * 1000 + i) as f32).collect();
             let actions: Vec<i32> = (0..b).map(|i| (ti + i) as i32).collect();
@@ -132,50 +115,100 @@ mod tests {
 
     #[test]
     fn shard_unshard_roundtrip() {
-        let traj = make_traj(4, 6, 3, 2);
-        let shards = shard(&traj, 3).unwrap();
+        let arena = make_arena(4, 6, 3, 2, 3);
+        let canonical = arena.to_trajectory();
+        let shards = shard(&arena);
         assert_eq!(shards.len(), 3);
-        assert!(shards.iter().all(|s| s.batch == 2));
+        assert!(shards.iter().all(|s| s.batch() == 2));
         let back = unshard(&shards).unwrap();
-        assert_eq!(back.obs, traj.obs);
-        assert_eq!(back.actions, traj.actions);
-        assert_eq!(back.rewards, traj.rewards);
-        assert_eq!(back.discounts, traj.discounts);
-        assert_eq!(back.behaviour_logits, traj.behaviour_logits);
+        assert_eq!(back.obs, canonical.obs);
+        assert_eq!(back.actions, canonical.actions);
+        assert_eq!(back.rewards, canonical.rewards);
+        assert_eq!(back.discounts, canonical.discounts);
+        assert_eq!(back.behaviour_logits, canonical.behaviour_logits);
+    }
+
+    #[test]
+    fn shard_is_copy_free() {
+        // The zero-copy invariant: every shard aliases the arena's columns,
+        // tiling them end to end without materializing anything.
+        let arena = make_arena(2, 4, 1, 2, 2);
+        let shards = shard(&arena);
+        for (i, s) in shards.iter().enumerate() {
+            assert!(Arc::ptr_eq(s.arena(), &arena), "shard {i} rebound its arena");
+            assert!(
+                std::ptr::eq(s.obs().as_ptr(), arena.obs[i * arena.obs_block()..].as_ptr()),
+                "shard {i} copied its obs block"
+            );
+            assert!(std::ptr::eq(
+                s.actions().as_ptr(),
+                arena.actions[i * arena.scalar_block()..].as_ptr()
+            ));
+            assert!(std::ptr::eq(
+                s.behaviour_logits().as_ptr(),
+                arena.behaviour_logits[i * arena.logit_block()..].as_ptr()
+            ));
+        }
+    }
+
+    #[test]
+    fn copying_oracle_matches_views_bitwise() {
+        let arena = make_arena(3, 6, 2, 3, 3);
+        let views = shard(&arena);
+        let copies = shard_copying(&arena).unwrap();
+        assert_eq!(views.len(), copies.len());
+        for (v, c) in views.iter().zip(&copies) {
+            // contents identical...
+            assert_eq!(v.obs(), c.obs());
+            assert_eq!(v.actions(), c.actions());
+            assert_eq!(v.rewards(), c.rewards());
+            assert_eq!(v.discounts(), c.discounts());
+            assert_eq!(v.behaviour_logits(), c.behaviour_logits());
+            assert_eq!(v.param_version(), c.param_version());
+            // ...and the grad-program inputs compare equal tensor-for-tensor
+            assert_eq!(v.to_tensors().unwrap(), c.to_tensors().unwrap());
+            // but the oracle really did copy (fresh storage)
+            assert!(!Arc::ptr_eq(v.arena(), c.arena()));
+        }
     }
 
     #[test]
     fn shard_columns_are_contiguous_envs() {
-        let traj = make_traj(2, 4, 1, 2);
-        let shards = shard(&traj, 2).unwrap();
+        let arena = make_arena(2, 4, 1, 2, 2);
+        let shards = shard(&arena);
         // shard 0 gets envs {0,1}: at t=0 obs are [0,1]
-        assert_eq!(shards[0].obs[..2], [0.0, 1.0]);
+        assert_eq!(shards[0].obs()[..2], [0.0, 1.0]);
         // shard 1 gets envs {2,3}
-        assert_eq!(shards[1].obs[..2], [2.0, 3.0]);
+        assert_eq!(shards[1].obs()[..2], [2.0, 3.0]);
         // actions at t=1 for shard 1: (1+2, 1+3)
-        assert_eq!(shards[1].actions[2..], [3, 4]);
-    }
-
-    #[test]
-    fn indivisible_batch_rejected() {
-        let traj = make_traj(2, 5, 1, 2);
-        assert!(shard(&traj, 2).is_err());
-        assert!(shard(&traj, 0).is_err());
-        assert!(shard(&traj, 5).is_ok());
+        assert_eq!(shards[1].actions()[2..], [3, 4]);
     }
 
     #[test]
     fn single_shard_is_identity() {
-        let traj = make_traj(3, 4, 2, 3);
-        let shards = shard(&traj, 1).unwrap();
-        assert_eq!(shards[0].obs, traj.obs);
-        assert_eq!(shards[0].actions, traj.actions);
+        let arena = make_arena(3, 4, 2, 3, 1);
+        let canonical = arena.to_trajectory();
+        let shards = shard(&arena);
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].obs(), canonical.obs.as_slice());
+        assert_eq!(shards[0].actions(), canonical.actions.as_slice());
     }
 
     #[test]
     fn metadata_propagates() {
-        let traj = make_traj(2, 4, 1, 2);
-        let shards = shard(&traj, 2).unwrap();
-        assert!(shards.iter().all(|s| s.param_version == 3));
+        let arena = make_arena(2, 4, 1, 2, 2);
+        let shards = shard(&arena);
+        assert!(shards.iter().all(|s| s.param_version() == 3));
+        let copies = shard_copying(&arena).unwrap();
+        assert!(copies.iter().all(|s| s.param_version() == 3));
+    }
+
+    #[test]
+    fn inconsistent_geometry_rejected_by_unshard() {
+        let a1 = make_arena(2, 4, 1, 2, 2);
+        let a2 = make_arena(3, 6, 1, 2, 3); // different t_len/bs
+        let mixed = vec![shard(&a1).remove(0), shard(&a2).remove(0)];
+        assert!(unshard(&mixed).is_err());
+        assert!(unshard(&[]).is_err());
     }
 }

@@ -1,14 +1,32 @@
-//! Trajectories: fixed-geometry, time-major experience buffers.
+//! Trajectories: fixed-geometry experience windows, arena-backed.
 //!
-//! Layouts match the exported grad programs exactly:
-//! `obs [T+1, B, obs...]`, `actions/rewards/discounts [T, B]`,
-//! `behaviour_logits [T, B, A]` — all flat row-major `Vec`s, so shipping a
-//! trajectory to a learner core is a single buffer per field.
+//! The paper's actors "place the Python reference to this tensor data onto a
+//! queue" — a reference, not a copy. [`TrajectoryBuilder`] therefore writes
+//! every step straight into one `Arc`-shared [`TrajArena`] per window, laid
+//! out *shard-major*: the arena is partitioned into `num_shards` contiguous
+//! blocks (one per learner slot), each block time-major with the exact
+//! layout the exported grad programs expect (`obs [T+1, bs, obs...]`,
+//! `actions/rewards/discounts [T, bs]`, `behaviour_logits [T, bs, A]`).
+//! Sharding is then pure pointer arithmetic — [`TrajShard`] is an arena
+//! handle plus a column range, and `TrajShard::to_tensors` yields
+//! `Arc`-backed [`HostTensor`] views — so a window travels
+//! actor -> queue -> learner -> device with zero host-side copies
+//! (DESIGN.md §11).
+//!
+//! [`Trajectory`] remains as the *materialized* full-window form: the
+//! canonical time-major layout used by tests, the copying-path oracle and
+//! diagnostics.
 
-use anyhow::{bail, Result};
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
 
 use crate::runtime::tensor::HostTensor;
 
+/// A materialized trajectory window in canonical time-major layout
+/// (`obs [T+1, B, obs...]`, row-major flat `Vec`s). Production code moves
+/// [`TrajShard`] views instead; this form is the reference currency for
+/// tests and the copying oracle.
 #[derive(Clone, Debug)]
 pub struct Trajectory {
     pub t_len: usize,
@@ -64,23 +82,7 @@ impl Trajectory {
 
     /// Package as grad-program inputs (after the params tensor).
     pub fn to_tensors(&self) -> Result<Vec<HostTensor>> {
-        let d = self.obs_numel();
-        let mut obs_shape = vec![self.t_len + 1, self.batch];
-        obs_shape.extend_from_slice(&self.obs_shape);
-        Ok(vec![
-            HostTensor::f32(obs_shape, self.obs.clone())?,
-            HostTensor::i32(vec![self.t_len, self.batch], self.actions.clone())?,
-            HostTensor::f32(vec![self.t_len, self.batch], self.rewards.clone())?,
-            HostTensor::f32(vec![self.t_len, self.batch], self.discounts.clone())?,
-            HostTensor::f32(
-                vec![self.t_len, self.batch, self.num_actions],
-                self.behaviour_logits.clone(),
-            )?,
-        ])
-        .and_then(|v: Vec<HostTensor>| {
-            debug_assert_eq!(v[0].len(), (self.t_len + 1) * self.batch * d);
-            Ok(v)
-        })
+        self.clone().into_tensors()
     }
 
     /// Mean reward per frame (diagnostics).
@@ -95,40 +97,403 @@ impl Trajectory {
     pub fn episodes_ended(&self) -> usize {
         self.discounts.iter().filter(|&&d| d == 0.0).count()
     }
+
+    /// Copy one shard-shaped column block (time-major, `bs` envs wide,
+    /// geometry inferred from the slices) into this window at column
+    /// offset `col0`. The single decoder of the shard/arena block layout:
+    /// both `TrajArena::to_trajectory` and `sharder::unshard` go through
+    /// here, so the production layout can never drift from the oracle's.
+    pub(crate) fn fill_block(
+        &mut self,
+        col0: usize,
+        obs: &[f32],
+        actions: &[i32],
+        rewards: &[f32],
+        discounts: &[f32],
+        behaviour_logits: &[f32],
+    ) {
+        let t = self.t_len;
+        let d = self.obs_numel();
+        let a = self.num_actions;
+        let total_b = self.batch;
+        let bs = actions.len() / t.max(1);
+        debug_assert_eq!(obs.len(), (t + 1) * bs * d);
+        debug_assert_eq!(behaviour_logits.len(), t * bs * a);
+        debug_assert!(col0 + bs <= total_b);
+        for ti in 0..=t {
+            let src = ti * bs * d;
+            let dst = ti * total_b * d + col0 * d;
+            self.obs[dst..dst + bs * d].copy_from_slice(&obs[src..src + bs * d]);
+        }
+        for ti in 0..t {
+            let src = ti * bs;
+            let dst = ti * total_b + col0;
+            self.actions[dst..dst + bs].copy_from_slice(&actions[src..src + bs]);
+            self.rewards[dst..dst + bs].copy_from_slice(&rewards[src..src + bs]);
+            self.discounts[dst..dst + bs].copy_from_slice(&discounts[src..src + bs]);
+            let lsrc = ti * bs * a;
+            let ldst = ti * total_b * a + col0 * a;
+            self.behaviour_logits[ldst..ldst + bs * a]
+                .copy_from_slice(&behaviour_logits[lsrc..lsrc + bs * a]);
+        }
+    }
 }
 
-/// Accumulates one trajectory, step by step, on the actor thread.
+/// One window of experience in a shard-major arena: `num_shards` contiguous
+/// per-learner-slot blocks, each block time-major. Columns are `Arc`-shared
+/// so shard views ([`TrajShard`]) and device uploads reference the same
+/// buffers the builder filled — the window is written exactly once.
+#[derive(Debug)]
+pub struct TrajArena {
+    pub t_len: usize,
+    /// Total environments in the window (all shards together).
+    pub batch: usize,
+    pub obs_shape: Vec<usize>,
+    pub num_actions: usize,
+    /// Contiguous blocks the arena is partitioned into (learner slots).
+    pub num_shards: usize,
+    /// Version of the parameters that generated this data.
+    pub param_version: u64,
+    /// Which actor thread produced it.
+    pub actor_id: usize,
+    /// `[S][T+1, bs, obs...]` — shard blocks, each time-major.
+    pub obs: Arc<Vec<f32>>,
+    /// `[S][T, bs]`
+    pub actions: Arc<Vec<i32>>,
+    /// `[S][T, bs]`
+    pub rewards: Arc<Vec<f32>>,
+    /// `[S][T, bs]`
+    pub discounts: Arc<Vec<f32>>,
+    /// `[S][T, bs, A]`
+    pub behaviour_logits: Arc<Vec<f32>>,
+}
+
+impl TrajArena {
+    pub fn obs_numel(&self) -> usize {
+        self.obs_shape.iter().product()
+    }
+
+    /// Environments per shard block.
+    pub fn shard_batch(&self) -> usize {
+        self.batch / self.num_shards
+    }
+
+    /// Total environment frames represented (T * B).
+    pub fn frames(&self) -> usize {
+        self.t_len * self.batch
+    }
+
+    /// Elements in one shard's obs block: `(T+1) * bs * obs_numel`.
+    pub fn obs_block(&self) -> usize {
+        (self.t_len + 1) * self.shard_batch() * self.obs_numel()
+    }
+
+    /// Elements in one shard's actions/rewards/discounts block: `T * bs`.
+    pub fn scalar_block(&self) -> usize {
+        self.t_len * self.shard_batch()
+    }
+
+    /// Elements in one shard's logits block: `T * bs * A`.
+    pub fn logit_block(&self) -> usize {
+        self.scalar_block() * self.num_actions
+    }
+
+    /// Build an arena from already-laid-out shard-major columns (tests,
+    /// the copying oracle). With `num_shards = 1` the expected layout is
+    /// plain time-major — identical to [`Trajectory`]'s.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_columns(
+        t_len: usize,
+        batch: usize,
+        obs_shape: &[usize],
+        num_actions: usize,
+        num_shards: usize,
+        obs: Vec<f32>,
+        actions: Vec<i32>,
+        rewards: Vec<f32>,
+        discounts: Vec<f32>,
+        behaviour_logits: Vec<f32>,
+        param_version: u64,
+        actor_id: usize,
+    ) -> Result<Arc<Self>> {
+        ensure!(num_shards >= 1, "num_shards must be >= 1");
+        ensure!(
+            batch % num_shards == 0,
+            "batch {batch} not divisible into {num_shards} shards"
+        );
+        let d: usize = obs_shape.iter().product();
+        ensure!(obs.len() == (t_len + 1) * batch * d, "obs column size mismatch");
+        ensure!(actions.len() == t_len * batch, "actions column size mismatch");
+        ensure!(rewards.len() == t_len * batch, "rewards column size mismatch");
+        ensure!(discounts.len() == t_len * batch, "discounts column size mismatch");
+        ensure!(
+            behaviour_logits.len() == t_len * batch * num_actions,
+            "logits column size mismatch"
+        );
+        Ok(Arc::new(Self {
+            t_len,
+            batch,
+            obs_shape: obs_shape.to_vec(),
+            num_actions,
+            num_shards,
+            param_version,
+            actor_id,
+            obs: Arc::new(obs),
+            actions: Arc::new(actions),
+            rewards: Arc::new(rewards),
+            discounts: Arc::new(discounts),
+            behaviour_logits: Arc::new(behaviour_logits),
+        }))
+    }
+
+    /// Materialize the full window in canonical time-major layout
+    /// (inverse of the shard-major interleave; tests / diagnostics only).
+    /// Decodes through `Trajectory::fill_block` — the same block decoder
+    /// `sharder::unshard` uses.
+    pub fn to_trajectory(&self) -> Trajectory {
+        let t = self.t_len;
+        let bs = self.shard_batch();
+        let d = self.obs_numel();
+        let a = self.num_actions;
+        let total_b = self.batch;
+        let mut out = Trajectory {
+            t_len: t,
+            batch: total_b,
+            obs_shape: self.obs_shape.clone(),
+            num_actions: a,
+            obs: vec![0.0; (t + 1) * total_b * d],
+            actions: vec![0; t * total_b],
+            rewards: vec![0.0; t * total_b],
+            discounts: vec![0.0; t * total_b],
+            behaviour_logits: vec![0.0; t * total_b * a],
+            param_version: self.param_version,
+            actor_id: self.actor_id,
+        };
+        for s in 0..self.num_shards {
+            let (ob, sb_, lb) = (self.obs_block(), self.scalar_block(), self.logit_block());
+            out.fill_block(
+                s * bs,
+                &self.obs[s * ob..(s + 1) * ob],
+                &self.actions[s * sb_..(s + 1) * sb_],
+                &self.rewards[s * sb_..(s + 1) * sb_],
+                &self.discounts[s * sb_..(s + 1) * sb_],
+                &self.behaviour_logits[s * lb..(s + 1) * lb],
+            );
+        }
+        out
+    }
+
+    /// Mean reward per frame (diagnostics; layout-independent).
+    pub fn mean_reward(&self) -> f32 {
+        if self.rewards.is_empty() {
+            return 0.0;
+        }
+        self.rewards.iter().sum::<f32>() / self.rewards.len() as f32
+    }
+
+    /// Number of episode boundaries in the window (layout-independent).
+    pub fn episodes_ended(&self) -> usize {
+        self.discounts.iter().filter(|&&d| d == 0.0).count()
+    }
+}
+
+/// A lightweight view of one shard of a window: an arena handle plus the
+/// column range `[index * bs, (index + 1) * bs)`. Cloning or queueing a
+/// shard clones an `Arc`; the experience data is never copied.
+#[derive(Clone, Debug)]
+pub struct TrajShard {
+    arena: Arc<TrajArena>,
+    index: usize,
+}
+
+impl TrajShard {
+    pub fn new(arena: Arc<TrajArena>, index: usize) -> Self {
+        assert!(index < arena.num_shards, "shard index {index} out of range");
+        Self { arena, index }
+    }
+
+    pub fn arena(&self) -> &Arc<TrajArena> {
+        &self.arena
+    }
+
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    pub fn t_len(&self) -> usize {
+        self.arena.t_len
+    }
+
+    /// Environments in this shard.
+    pub fn batch(&self) -> usize {
+        self.arena.shard_batch()
+    }
+
+    pub fn obs_numel(&self) -> usize {
+        self.arena.obs_numel()
+    }
+
+    pub fn num_actions(&self) -> usize {
+        self.arena.num_actions
+    }
+
+    pub fn param_version(&self) -> u64 {
+        self.arena.param_version
+    }
+
+    pub fn actor_id(&self) -> usize {
+        self.arena.actor_id
+    }
+
+    /// Environment frames in this shard (T * bs).
+    pub fn frames(&self) -> usize {
+        self.arena.t_len * self.batch()
+    }
+
+    /// `[T+1, bs, obs...]` — this shard's slice of the arena.
+    pub fn obs(&self) -> &[f32] {
+        let b = self.arena.obs_block();
+        &self.arena.obs[self.index * b..(self.index + 1) * b]
+    }
+
+    /// `[T, bs]`
+    pub fn actions(&self) -> &[i32] {
+        let b = self.arena.scalar_block();
+        &self.arena.actions[self.index * b..(self.index + 1) * b]
+    }
+
+    /// `[T, bs]`
+    pub fn rewards(&self) -> &[f32] {
+        let b = self.arena.scalar_block();
+        &self.arena.rewards[self.index * b..(self.index + 1) * b]
+    }
+
+    /// `[T, bs]`
+    pub fn discounts(&self) -> &[f32] {
+        let b = self.arena.scalar_block();
+        &self.arena.discounts[self.index * b..(self.index + 1) * b]
+    }
+
+    /// `[T, bs, A]`
+    pub fn behaviour_logits(&self) -> &[f32] {
+        let b = self.arena.logit_block();
+        &self.arena.behaviour_logits[self.index * b..(self.index + 1) * b]
+    }
+
+    /// Package as grad-program inputs (after the params tensor): five
+    /// `Arc`-backed tensor views into the arena — no data is copied on the
+    /// host; the only copy left is the host->device transfer itself.
+    pub fn to_tensors(&self) -> Result<Vec<HostTensor>> {
+        let a = &self.arena;
+        let bs = a.shard_batch();
+        let mut obs_shape = vec![a.t_len + 1, bs];
+        obs_shape.extend_from_slice(&a.obs_shape);
+        Ok(vec![
+            HostTensor::f32_shared(obs_shape, a.obs.clone(), self.index * a.obs_block())?,
+            HostTensor::i32_shared(
+                vec![a.t_len, bs],
+                a.actions.clone(),
+                self.index * a.scalar_block(),
+            )?,
+            HostTensor::f32_shared(
+                vec![a.t_len, bs],
+                a.rewards.clone(),
+                self.index * a.scalar_block(),
+            )?,
+            HostTensor::f32_shared(
+                vec![a.t_len, bs],
+                a.discounts.clone(),
+                self.index * a.scalar_block(),
+            )?,
+            HostTensor::f32_shared(
+                vec![a.t_len, bs, a.num_actions],
+                a.behaviour_logits.clone(),
+                self.index * a.logit_block(),
+            )?,
+        ])
+    }
+
+    /// Materialize this shard alone as a [`Trajectory`] (tests, oracle).
+    pub fn to_trajectory(&self) -> Trajectory {
+        Trajectory {
+            t_len: self.t_len(),
+            batch: self.batch(),
+            obs_shape: self.arena.obs_shape.clone(),
+            num_actions: self.num_actions(),
+            obs: self.obs().to_vec(),
+            actions: self.actions().to_vec(),
+            rewards: self.rewards().to_vec(),
+            discounts: self.discounts().to_vec(),
+            behaviour_logits: self.behaviour_logits().to_vec(),
+            param_version: self.param_version(),
+            actor_id: self.actor_id(),
+        }
+    }
+}
+
+/// Copy one batch-wide row (`src`, per-env width `w`) into its shard-major
+/// position for time index `t`: shard `s` has `rows` rows of `bs * w`.
+fn scatter_row<T: Copy>(
+    dst: &mut [T],
+    src: &[T],
+    t: usize,
+    rows: usize,
+    bs: usize,
+    w: usize,
+    num_shards: usize,
+) {
+    let row_w = bs * w;
+    let block = rows * row_w;
+    for s in 0..num_shards {
+        let d0 = s * block + t * row_w;
+        let s0 = s * row_w;
+        dst[d0..d0 + row_w].copy_from_slice(&src[s0..s0 + row_w]);
+    }
+}
+
+/// Accumulates one window, step by step, on the actor thread — writing
+/// directly into the (future) arena's shard-major buffers, so `finish`
+/// hands out an `Arc<TrajArena>` without relayout or copy.
 pub struct TrajectoryBuilder {
     t_len: usize,
     batch: usize,
     obs_shape: Vec<usize>,
     num_actions: usize,
+    num_shards: usize,
     steps_pushed: usize,
-    traj: Trajectory,
+    obs: Vec<f32>,
+    actions: Vec<i32>,
+    rewards: Vec<f32>,
+    discounts: Vec<f32>,
+    behaviour_logits: Vec<f32>,
 }
 
 impl TrajectoryBuilder {
-    pub fn new(t_len: usize, batch: usize, obs_shape: &[usize], num_actions: usize) -> Self {
+    pub fn new(
+        t_len: usize,
+        batch: usize,
+        obs_shape: &[usize],
+        num_actions: usize,
+        num_shards: usize,
+    ) -> Self {
+        assert!(num_shards >= 1, "num_shards must be >= 1");
+        assert!(
+            batch % num_shards == 0,
+            "batch {batch} not divisible into {num_shards} shards"
+        );
         let d: usize = obs_shape.iter().product();
         Self {
             t_len,
             batch,
             obs_shape: obs_shape.to_vec(),
             num_actions,
+            num_shards,
             steps_pushed: 0,
-            traj: Trajectory {
-                t_len,
-                batch,
-                obs_shape: obs_shape.to_vec(),
-                num_actions,
-                obs: Vec::with_capacity((t_len + 1) * batch * d),
-                actions: Vec::with_capacity(t_len * batch),
-                rewards: Vec::with_capacity(t_len * batch),
-                discounts: Vec::with_capacity(t_len * batch),
-                behaviour_logits: Vec::with_capacity(t_len * batch * num_actions),
-                param_version: 0,
-                actor_id: 0,
-            },
+            obs: vec![0.0; (t_len + 1) * batch * d],
+            actions: vec![0; t_len * batch],
+            rewards: vec![0.0; t_len * batch],
+            discounts: vec![0.0; t_len * batch],
+            behaviour_logits: vec![0.0; t_len * batch * num_actions],
         }
     }
 
@@ -138,6 +503,10 @@ impl TrajectoryBuilder {
 
     pub fn steps(&self) -> usize {
         self.steps_pushed
+    }
+
+    fn obs_numel(&self) -> usize {
+        self.obs_shape.iter().product()
     }
 
     /// Push one step: the observation the policy saw, the actions/logits it
@@ -150,7 +519,7 @@ impl TrajectoryBuilder {
         rewards: &[f32],
         discounts: &[f32],
     ) -> Result<()> {
-        let d = self.traj.obs_numel();
+        let d = self.obs_numel();
         if self.is_full() {
             bail!("trajectory already has {} steps", self.t_len);
         }
@@ -162,31 +531,65 @@ impl TrajectoryBuilder {
         {
             bail!("push_step: size mismatch");
         }
-        self.traj.obs.extend_from_slice(obs);
-        self.traj.actions.extend_from_slice(actions);
-        self.traj.behaviour_logits.extend_from_slice(behaviour_logits);
-        self.traj.rewards.extend_from_slice(rewards);
-        self.traj.discounts.extend_from_slice(discounts);
+        let (t, bs, n) = (self.steps_pushed, self.batch / self.num_shards, self.num_shards);
+        scatter_row(&mut self.obs, obs, t, self.t_len + 1, bs, d, n);
+        scatter_row(&mut self.actions, actions, t, self.t_len, bs, 1, n);
+        scatter_row(&mut self.rewards, rewards, t, self.t_len, bs, 1, n);
+        scatter_row(&mut self.discounts, discounts, t, self.t_len, bs, 1, n);
+        scatter_row(
+            &mut self.behaviour_logits,
+            behaviour_logits,
+            t,
+            self.t_len,
+            bs,
+            self.num_actions,
+            n,
+        );
         self.steps_pushed += 1;
         Ok(())
     }
 
     /// Finish with the bootstrap observation (the T+1'th), producing the
-    /// trajectory and resetting the builder for the next window.
-    pub fn finish(&mut self, final_obs: &[f32], param_version: u64, actor_id: usize) -> Result<Trajectory> {
-        let d = self.traj.obs_numel();
+    /// `Arc`-shared arena and resetting the builder for the next window.
+    /// The filled buffers are *moved* into the arena — no copy.
+    pub fn finish(
+        &mut self,
+        final_obs: &[f32],
+        param_version: u64,
+        actor_id: usize,
+    ) -> Result<Arc<TrajArena>> {
+        let d = self.obs_numel();
         if !self.is_full() {
             bail!("trajectory has {}/{} steps", self.steps_pushed, self.t_len);
         }
         if final_obs.len() != self.batch * d {
             bail!("finish: obs size mismatch");
         }
-        self.traj.obs.extend_from_slice(final_obs);
-        self.traj.param_version = param_version;
-        self.traj.actor_id = actor_id;
+        let (bs, n) = (self.batch / self.num_shards, self.num_shards);
+        scatter_row(&mut self.obs, final_obs, self.t_len, self.t_len + 1, bs, d, n);
         self.steps_pushed = 0;
-        let fresh = TrajectoryBuilder::new(self.t_len, self.batch, &self.obs_shape, self.num_actions);
-        Ok(std::mem::replace(&mut self.traj, fresh.traj))
+        let obs = std::mem::replace(&mut self.obs, vec![0.0; (self.t_len + 1) * self.batch * d]);
+        let actions = std::mem::replace(&mut self.actions, vec![0; self.t_len * self.batch]);
+        let rewards = std::mem::replace(&mut self.rewards, vec![0.0; self.t_len * self.batch]);
+        let discounts = std::mem::replace(&mut self.discounts, vec![0.0; self.t_len * self.batch]);
+        let behaviour_logits = std::mem::replace(
+            &mut self.behaviour_logits,
+            vec![0.0; self.t_len * self.batch * self.num_actions],
+        );
+        Ok(Arc::new(TrajArena {
+            t_len: self.t_len,
+            batch: self.batch,
+            obs_shape: self.obs_shape.clone(),
+            num_actions: self.num_actions,
+            num_shards: self.num_shards,
+            param_version,
+            actor_id,
+            obs: Arc::new(obs),
+            actions: Arc::new(actions),
+            rewards: Arc::new(rewards),
+            discounts: Arc::new(discounts),
+            behaviour_logits: Arc::new(behaviour_logits),
+        }))
     }
 }
 
@@ -208,10 +611,11 @@ mod tests {
     #[test]
     fn builder_produces_correct_layout() {
         let (t, bsz, d, a) = (3, 2, 4, 3);
-        let mut b = TrajectoryBuilder::new(t, bsz, &[d], a);
+        let mut b = TrajectoryBuilder::new(t, bsz, &[d], a, 1);
         push_n(&mut b, 3, bsz, d, a);
         assert!(b.is_full());
-        let traj = b.finish(&vec![9.0; bsz * d], 7, 1).unwrap();
+        let arena = b.finish(&vec![9.0; bsz * d], 7, 1).unwrap();
+        let traj = arena.to_trajectory();
         assert_eq!(traj.obs.len(), (t + 1) * bsz * d);
         assert_eq!(traj.actions.len(), t * bsz);
         assert_eq!(traj.behaviour_logits.len(), t * bsz * a);
@@ -221,22 +625,103 @@ mod tests {
         assert_eq!(traj.obs[bsz * d], 1.0);
         assert_eq!(traj.obs[t * bsz * d], 9.0); // bootstrap obs last
         assert_eq!(traj.frames(), 6);
+        assert_eq!(arena.frames(), 6);
+        // single-shard arena: columns ARE the canonical layout
+        assert_eq!(arena.obs.as_slice(), traj.obs.as_slice());
+    }
+
+    #[test]
+    fn sharded_builder_matches_single_shard_canonical_layout() {
+        // The shard-major scatter must be a pure re-layout: materializing
+        // the full window is independent of num_shards.
+        let (t, bsz, d, a) = (3, 6, 2, 3);
+        let mut data_rng = crate::util::rng::Xoshiro256::new(5);
+        let mut steps = Vec::new();
+        for _ in 0..t {
+            steps.push((
+                (0..bsz * d).map(|_| data_rng.next_f32()).collect::<Vec<f32>>(),
+                (0..bsz).map(|_| data_rng.next_below(a as u32) as i32).collect::<Vec<i32>>(),
+                (0..bsz * a).map(|_| data_rng.next_f32()).collect::<Vec<f32>>(),
+                (0..bsz).map(|_| data_rng.next_f32()).collect::<Vec<f32>>(),
+                (0..bsz).map(|_| 0.99f32).collect::<Vec<f32>>(),
+            ));
+        }
+        let final_obs: Vec<f32> = (0..bsz * d).map(|_| data_rng.next_f32()).collect();
+
+        let mut canonical = None;
+        for n in [1usize, 2, 3, 6] {
+            let mut b = TrajectoryBuilder::new(t, bsz, &[d], a, n);
+            for (obs, act, log, rew, disc) in &steps {
+                b.push_step(obs, act, log, rew, disc).unwrap();
+            }
+            let traj = b.finish(&final_obs, 0, 0).unwrap().to_trajectory();
+            match &canonical {
+                None => canonical = Some(traj),
+                Some(c) => {
+                    assert_eq!(c.obs, traj.obs, "num_shards={n}: obs relayout diverged");
+                    assert_eq!(c.actions, traj.actions, "num_shards={n}");
+                    assert_eq!(c.rewards, traj.rewards, "num_shards={n}");
+                    assert_eq!(c.discounts, traj.discounts, "num_shards={n}");
+                    assert_eq!(c.behaviour_logits, traj.behaviour_logits, "num_shards={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_views_alias_the_arena() {
+        let (t, bsz, d, a) = (2, 4, 3, 2);
+        let mut b = TrajectoryBuilder::new(t, bsz, &[d], a, 2);
+        push_n(&mut b, 2, bsz, d, a);
+        let arena = b.finish(&vec![0.5; bsz * d], 3, 0).unwrap();
+        let s0 = TrajShard::new(arena.clone(), 0);
+        let s1 = TrajShard::new(arena.clone(), 1);
+        // both views point into the same Arc'd columns
+        assert!(Arc::ptr_eq(s0.arena(), s1.arena()));
+        assert!(Arc::ptr_eq(&s0.arena().obs, &arena.obs));
+        // slices tile the columns without overlap
+        assert!(std::ptr::eq(s0.obs().as_ptr(), arena.obs.as_ptr()));
+        assert!(std::ptr::eq(s1.obs().as_ptr(), arena.obs[arena.obs_block()..].as_ptr()));
+        assert_eq!(s0.param_version(), 3);
+        assert_eq!(s0.frames() + s1.frames(), arena.frames());
+    }
+
+    #[test]
+    fn shard_tensors_are_shared_views() {
+        let (t, bsz, d, a) = (2, 4, 3, 2);
+        let mut b = TrajectoryBuilder::new(t, bsz, &[d], a, 2);
+        push_n(&mut b, 2, bsz, d, a);
+        let arena = b.finish(&vec![0.5; bsz * d], 0, 0).unwrap();
+        let s1 = TrajShard::new(arena.clone(), 1);
+        let tensors = s1.to_tensors().unwrap();
+        assert_eq!(tensors[0].shape, vec![t + 1, 2, d]);
+        assert_eq!(tensors[1].shape, vec![t, 2]);
+        assert_eq!(tensors[4].shape, vec![t, 2, a]);
+        for tensor in &tensors {
+            assert!(tensor.is_shared(), "shard tensor materialized a copy");
+        }
+        // the obs tensor view aliases the arena's second block
+        assert!(std::ptr::eq(
+            tensors[0].as_f32().unwrap().as_ptr(),
+            arena.obs[arena.obs_block()..].as_ptr()
+        ));
     }
 
     #[test]
     fn builder_resets_after_finish() {
-        let mut b = TrajectoryBuilder::new(2, 1, &[2], 2);
+        let mut b = TrajectoryBuilder::new(2, 1, &[2], 2, 1);
         push_n(&mut b, 2, 1, 2, 2);
         let _ = b.finish(&[0.0, 0.0], 0, 0).unwrap();
         assert_eq!(b.steps(), 0);
         push_n(&mut b, 2, 1, 2, 2);
         let t2 = b.finish(&[0.0, 0.0], 1, 0).unwrap();
         assert_eq!(t2.obs.len(), 3 * 2);
+        assert_eq!(t2.param_version, 1);
     }
 
     #[test]
     fn overfull_and_underfull_rejected() {
-        let mut b = TrajectoryBuilder::new(1, 1, &[1], 2);
+        let mut b = TrajectoryBuilder::new(1, 1, &[1], 2, 1);
         assert!(b.finish(&[0.0], 0, 0).is_err()); // underfull
         push_n(&mut b, 1, 1, 1, 2);
         let obs = [0.0];
@@ -249,7 +734,7 @@ mod tests {
 
     #[test]
     fn size_mismatch_rejected() {
-        let mut b = TrajectoryBuilder::new(2, 2, &[3], 2);
+        let mut b = TrajectoryBuilder::new(2, 2, &[3], 2, 1);
         let bad_obs = vec![0.0; 5];
         assert!(b
             .push_step(&bad_obs, &[0, 0], &[0.0; 4], &[0.0; 2], &[0.0; 2])
@@ -257,8 +742,14 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "not divisible")]
+    fn indivisible_shard_geometry_panics_at_construction() {
+        let _ = TrajectoryBuilder::new(2, 5, &[1], 2, 2);
+    }
+
+    #[test]
     fn to_tensors_shapes() {
-        let mut b = TrajectoryBuilder::new(2, 3, &[4, 4, 1], 5);
+        let mut b = TrajectoryBuilder::new(2, 3, &[4, 4, 1], 5, 1);
         for _ in 0..2 {
             b.push_step(
                 &vec![0.0; 3 * 16],
@@ -269,20 +760,60 @@ mod tests {
             )
             .unwrap();
         }
-        let traj = b.finish(&vec![0.0; 48], 0, 0).unwrap();
-        let tensors = traj.to_tensors().unwrap();
+        let arena = b.finish(&vec![0.0; 48], 0, 0).unwrap();
+        let tensors = arena.to_trajectory().to_tensors().unwrap();
         assert_eq!(tensors[0].shape, vec![3, 3, 4, 4, 1]);
         assert_eq!(tensors[1].shape, vec![2, 3]);
         assert_eq!(tensors[4].shape, vec![2, 3, 5]);
+        // the shard view of a single-shard arena has the same shapes + data
+        let view = TrajShard::new(arena, 0).to_tensors().unwrap();
+        assert_eq!(view, tensors);
     }
 
     #[test]
     fn episode_stats() {
-        let mut b = TrajectoryBuilder::new(2, 2, &[1], 2);
+        let mut b = TrajectoryBuilder::new(2, 2, &[1], 2, 2);
         b.push_step(&[0.0, 0.0], &[0, 0], &[0.0; 4], &[1.0, 0.0], &[0.99, 0.0]).unwrap();
         b.push_step(&[0.0, 0.0], &[0, 0], &[0.0; 4], &[0.0, 3.0], &[0.0, 0.99]).unwrap();
-        let t = b.finish(&[0.0, 0.0], 0, 0).unwrap();
+        let arena = b.finish(&[0.0, 0.0], 0, 0).unwrap();
+        assert_eq!(arena.episodes_ended(), 2);
+        assert!((arena.mean_reward() - 1.0).abs() < 1e-6);
+        let t = arena.to_trajectory();
         assert_eq!(t.episodes_ended(), 2);
         assert!((t.mean_reward() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn from_columns_validates_geometry() {
+        let ok = TrajArena::from_columns(
+            1,
+            2,
+            &[1],
+            2,
+            1,
+            vec![0.0; 4],
+            vec![0; 2],
+            vec![0.0; 2],
+            vec![0.0; 2],
+            vec![0.0; 4],
+            0,
+            0,
+        );
+        assert!(ok.is_ok());
+        let bad = TrajArena::from_columns(
+            1,
+            2,
+            &[1],
+            2,
+            1,
+            vec![0.0; 3], // wrong obs length
+            vec![0; 2],
+            vec![0.0; 2],
+            vec![0.0; 2],
+            vec![0.0; 4],
+            0,
+            0,
+        );
+        assert!(bad.is_err());
     }
 }

@@ -26,6 +26,15 @@ struct Slot {
     done: bool,
 }
 
+/// Lock a slot, recovering from poisoning: a panicking env job poisons its
+/// slot mutex, but the `Slot` fields are plain data that are always valid,
+/// and the panic itself is reported through the batch ticket — treating the
+/// slot as dead forever would turn one bad step into a permanently broken
+/// batch.
+fn lock_slot(slot: &Arc<Mutex<Slot>>) -> std::sync::MutexGuard<'_, Slot> {
+    slot.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 pub struct BatchedEnv {
     slots: Vec<Arc<Mutex<Slot>>>,
     pool: Arc<WorkerPool>,
@@ -78,8 +87,9 @@ impl BatchedEnv {
         self.num_actions
     }
 
-    /// Reset every environment; `obs_out` is `[B * obs_dim]`.
-    pub fn reset(&self, obs_out: &mut [f32]) {
+    /// Reset every environment; `obs_out` is `[B * obs_dim]`. Errors if a
+    /// reset job panicked (the pool survives; see `pool.rs`).
+    pub fn reset(&self, obs_out: &mut [f32]) -> Result<()> {
         assert_eq!(obs_out.len(), self.batch() * self.obs_dim);
         let chunks = self.chunk_ranges();
         self.pool.run_batch(chunks.len(), |ci| {
@@ -87,25 +97,27 @@ impl BatchedEnv {
             let slots: Vec<_> = self.slots[range].iter().map(Arc::clone).collect();
             Box::new(move || {
                 for slot in &slots {
-                    let mut s = slot.lock().unwrap();
+                    let mut s = lock_slot(slot);
                     let Slot { env, obs, .. } = &mut *s;
                     env.reset(obs);
                 }
             })
-        });
+        })?;
         self.copy_out(obs_out);
+        Ok(())
     }
 
     /// Step every environment with `actions` (`[B]`); writes the batched
-    /// next-observations, rewards and done flags.
+    /// next-observations, rewards and done flags. Errors if a step job
+    /// panicked.
     pub fn step(
         &self,
         actions: &[i32],
         obs_out: &mut [f32],
         rewards: &mut [f32],
         dones: &mut [bool],
-    ) {
-        self.step_async(actions).wait(obs_out, rewards, dones);
+    ) -> Result<()> {
+        self.step_async(actions).wait(obs_out, rewards, dones).map(|_| ())
     }
 
     /// Submit a step without waiting. The pool workers advance the slots in
@@ -123,7 +135,7 @@ impl BatchedEnv {
             let acts: Vec<i32> = actions[range].to_vec();
             Box::new(move || {
                 for (slot, &a) in slots.iter().zip(&acts) {
-                    let mut s = slot.lock().unwrap();
+                    let mut s = lock_slot(slot);
                     let Slot { env, obs, reward, done } = &mut *s;
                     let r = env.step(a as usize, obs);
                     *reward = r.reward;
@@ -146,7 +158,7 @@ impl BatchedEnv {
 
     fn copy_out(&self, obs_out: &mut [f32]) {
         for (i, slot) in self.slots.iter().enumerate() {
-            let s = slot.lock().unwrap();
+            let s = lock_slot(slot);
             obs_out[i * self.obs_dim..(i + 1) * self.obs_dim].copy_from_slice(&s.obs);
         }
     }
@@ -163,21 +175,28 @@ impl StepTicket {
     /// Block until the pool has stepped every slot, then copy the batched
     /// next-observations, rewards and done flags out. Returns the host-side
     /// span (submission → last worker completion stamp) for the actor's
-    /// overlap accounting.
-    pub fn wait(self, obs_out: &mut [f32], rewards: &mut [f32], dones: &mut [bool]) -> Duration {
+    /// overlap accounting, or the panic error if an env job unwound — the
+    /// outputs are left unwritten in that case and the actor maps the
+    /// failure into its error chain.
+    pub fn wait(
+        self,
+        obs_out: &mut [f32],
+        rewards: &mut [f32],
+        dones: &mut [bool],
+    ) -> Result<Duration> {
         let b = self.slots.len();
         assert_eq!(obs_out.len(), b * self.obs_dim);
         assert_eq!(rewards.len(), b);
         assert_eq!(dones.len(), b);
 
-        let span = self.ticket.wait();
+        let span = self.ticket.wait()?;
         for (i, slot) in self.slots.iter().enumerate() {
-            let s = slot.lock().unwrap();
+            let s = lock_slot(slot);
             obs_out[i * self.obs_dim..(i + 1) * self.obs_dim].copy_from_slice(&s.obs);
             rewards[i] = s.reward;
             dones[i] = s.done;
         }
-        span
+        Ok(span)
     }
 }
 
@@ -195,7 +214,7 @@ mod tests {
     fn reset_fills_all_observations() {
         let be = batched("catch", 8, 3);
         let mut obs = vec![0.0; 8 * be.obs_dim()];
-        be.reset(&mut obs);
+        be.reset(&mut obs).unwrap();
         for b in 0..8 {
             let o = &obs[b * 50..(b + 1) * 50];
             assert_eq!(o.iter().filter(|&&x| x == 1.0).count(), 2, "env {b}");
@@ -206,11 +225,11 @@ mod tests {
     fn step_writes_disjoint_slots() {
         let be = batched("catch", 5, 2);
         let mut obs = vec![0.0; 5 * 50];
-        be.reset(&mut obs);
+        be.reset(&mut obs).unwrap();
         let actions = vec![0, 1, 2, 1, 0];
         let mut rewards = vec![0.0; 5];
         let mut dones = vec![false; 5];
-        be.step(&actions, &mut obs, &mut rewards, &mut dones);
+        be.step(&actions, &mut obs, &mut rewards, &mut dones).unwrap();
         for b in 0..5 {
             let o = &obs[b * 50..(b + 1) * 50];
             assert_eq!(o.iter().filter(|&&x| x == 1.0).count(), 2, "env {b}");
@@ -228,7 +247,7 @@ mod tests {
         let mut serial: Vec<_> = (0..6).map(|i| factory(i)).collect();
 
         let mut obs_b = vec![0.0; 6 * 50];
-        be.reset(&mut obs_b);
+        be.reset(&mut obs_b).unwrap();
         let mut obs_s = vec![0.0; 6 * 50];
         for (i, env) in serial.iter_mut().enumerate() {
             env.reset(&mut obs_s[i * 50..(i + 1) * 50]);
@@ -239,7 +258,7 @@ mod tests {
         let mut dones = vec![false; 6];
         for round in 0..30 {
             let actions: Vec<i32> = (0..6).map(|i| ((round + i) % 3) as i32).collect();
-            be.step(&actions, &mut obs_b, &mut rewards, &mut dones);
+            be.step(&actions, &mut obs_b, &mut rewards, &mut dones).unwrap();
             for (i, env) in serial.iter_mut().enumerate() {
                 let r = env.step(actions[i] as usize, &mut obs_s[i * 50..(i + 1) * 50]);
                 assert_eq!(r.reward, rewards[i], "round {round} env {i}");
@@ -253,10 +272,10 @@ mod tests {
     fn more_workers_than_envs_is_fine() {
         let be = batched("chain", 2, 8);
         let mut obs = vec![0.0; 2 * 10];
-        be.reset(&mut obs);
+        be.reset(&mut obs).unwrap();
         let mut rewards = vec![0.0; 2];
         let mut dones = vec![false; 2];
-        be.step(&[1, 1], &mut obs, &mut rewards, &mut dones);
+        be.step(&[1, 1], &mut obs, &mut rewards, &mut dones).unwrap();
     }
 
     #[test]
@@ -269,17 +288,17 @@ mod tests {
 
         let d = sync.obs_dim();
         let (mut obs_a, mut obs_b) = (vec![0.0; 4 * d], vec![0.0; 4 * d]);
-        sync.reset(&mut obs_a);
-        split.reset(&mut obs_b);
+        sync.reset(&mut obs_a).unwrap();
+        split.reset(&mut obs_b).unwrap();
         assert_eq!(obs_a, obs_b);
 
         let (mut rew_a, mut rew_b) = (vec![0.0; 4], vec![0.0; 4]);
         let (mut done_a, mut done_b) = (vec![false; 4], vec![false; 4]);
         for round in 0..25 {
             let actions: Vec<i32> = (0..4).map(|i| ((round + i) % 3) as i32).collect();
-            sync.step(&actions, &mut obs_a, &mut rew_a, &mut done_a);
+            sync.step(&actions, &mut obs_a, &mut rew_a, &mut done_a).unwrap();
             let ticket = split.step_async(&actions);
-            ticket.wait(&mut obs_b, &mut rew_b, &mut done_b);
+            ticket.wait(&mut obs_b, &mut rew_b, &mut done_b).unwrap();
             assert_eq!(obs_a, obs_b, "round {round}");
             assert_eq!(rew_a, rew_b);
             assert_eq!(done_a, done_b);
@@ -299,9 +318,9 @@ mod tests {
         let d = full.obs_dim();
         let mut obs_f = vec![0.0; 6 * d];
         let (mut obs_lo, mut obs_hi) = (vec![0.0; 3 * d], vec![0.0; 3 * d]);
-        full.reset(&mut obs_f);
-        lo.reset(&mut obs_lo);
-        hi.reset(&mut obs_hi);
+        full.reset(&mut obs_f).unwrap();
+        lo.reset(&mut obs_lo).unwrap();
+        hi.reset(&mut obs_hi).unwrap();
         assert_eq!(&obs_f[..3 * d], &obs_lo[..]);
         assert_eq!(&obs_f[3 * d..], &obs_hi[..]);
 
@@ -310,26 +329,70 @@ mod tests {
         let (mut rew_s, mut done_s) = (vec![0.0; 3], vec![false; 3]);
         for round in 0..20 {
             let actions: Vec<i32> = (0..6).map(|i| ((round + 2 * i) % 3) as i32).collect();
-            full.step(&actions, &mut obs_f, &mut rew_f, &mut done_f);
-            lo.step(&actions[..3], &mut obs_lo, &mut rew_s, &mut done_s);
+            full.step(&actions, &mut obs_f, &mut rew_f, &mut done_f).unwrap();
+            lo.step(&actions[..3], &mut obs_lo, &mut rew_s, &mut done_s).unwrap();
             assert_eq!(&obs_f[..3 * d], &obs_lo[..], "round {round} (low half)");
             assert_eq!(&rew_f[..3], &rew_s[..]);
-            hi.step(&actions[3..], &mut obs_hi, &mut rew_s, &mut done_s);
+            hi.step(&actions[3..], &mut obs_hi, &mut rew_s, &mut done_s).unwrap();
             assert_eq!(&obs_f[3 * d..], &obs_hi[..], "round {round} (high half)");
             assert_eq!(&rew_f[3..], &rew_s[..]);
         }
     }
 
     #[test]
+    fn panicking_env_surfaces_as_step_error_and_env_keeps_working() {
+        use crate::envs::{Environment, StepResult};
+
+        // An env that panics on its third step in slot 1 only.
+        struct Flaky {
+            slot: usize,
+            steps: usize,
+        }
+        impl Environment for Flaky {
+            fn obs_dim(&self) -> usize {
+                2
+            }
+            fn num_actions(&self) -> usize {
+                2
+            }
+            fn reset(&mut self, obs: &mut [f32]) {
+                obs.fill(0.0);
+            }
+            fn step(&mut self, _action: usize, obs: &mut [f32]) -> StepResult {
+                self.steps += 1;
+                if self.slot == 1 && self.steps == 3 {
+                    panic!("flaky env blew up on step 3");
+                }
+                obs.fill(self.steps as f32);
+                StepResult { reward: 1.0, done: false }
+            }
+        }
+        let factory: EnvFactory = Box::new(|slot| Box::new(Flaky { slot, steps: 0 }));
+        let be = BatchedEnv::new(&factory, 2, WorkerPool::new(2)).unwrap();
+        let mut obs = vec![0.0; 2 * 2];
+        be.reset(&mut obs).unwrap();
+        let mut rewards = vec![0.0; 2];
+        let mut dones = vec![false; 2];
+        be.step(&[0, 0], &mut obs, &mut rewards, &mut dones).unwrap();
+        be.step(&[0, 0], &mut obs, &mut rewards, &mut dones).unwrap();
+        let err = be
+            .step(&[0, 0], &mut obs, &mut rewards, &mut dones)
+            .expect_err("the panicking step must surface as an error");
+        assert!(format!("{err:#}").contains("flaky env blew up"));
+        // the pool survived: slot 0 keeps stepping (slot 1 is past its bomb)
+        be.step(&[0, 0], &mut obs, &mut rewards, &mut dones).unwrap();
+    }
+
+    #[test]
     fn atari_like_batched_smoke() {
         let be = batched("atari_like", 4, 4);
         let mut obs = vec![0.0; 4 * be.obs_dim()];
-        be.reset(&mut obs);
+        be.reset(&mut obs).unwrap();
         let mut rewards = vec![0.0; 4];
         let mut dones = vec![false; 4];
         for i in 0..10 {
             let actions = vec![(i % 6) as i32; 4];
-            be.step(&actions, &mut obs, &mut rewards, &mut dones);
+            be.step(&actions, &mut obs, &mut rewards, &mut dones).unwrap();
         }
         assert!(obs.iter().all(|&x| (0.0..=1.0).contains(&x)));
     }

@@ -6,12 +6,36 @@
 //! submitted without blocking (`run_batch_async` returns a [`BatchTicket`])
 //! so the pipelined Sebulba actor can overlap env stepping with device
 //! inference (DESIGN.md §2).
+//!
+//! Panics are contained: a job that unwinds is caught *inside* the wrapped
+//! batch job, its worker stays alive (no silent pool shrink), and the
+//! failure surfaces through [`BatchTicket::wait`] as an error the actor
+//! maps into its error chain — instead of the pre-fix behaviour, where the
+//! panicking job killed its worker thread and every later `wait` on the
+//! starved batch panicked on a dead channel.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use anyhow::{anyhow, Result};
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// What a batch job reports back: its completion stamp, or the panic
+/// message if it unwound.
+type JobOutcome = std::result::Result<Instant, String>;
+
+fn panic_detail(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 pub struct WorkerPool {
     tx: Option<mpsc::Sender<Job>>,
@@ -35,7 +59,13 @@ impl WorkerPool {
                             guard.recv()
                         };
                         match job {
-                            Ok(job) => job(),
+                            // Contain unwinds from raw `submit` jobs too:
+                            // a panic must never take the worker with it.
+                            // Batch jobs additionally catch inside their
+                            // wrapper so the ticket learns the details.
+                            Ok(job) => {
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
                             Err(_) => break, // all senders dropped
                         }
                     })
@@ -58,11 +88,12 @@ impl WorkerPool {
     }
 
     /// Run `n` jobs produced by `make_job` and wait for all of them.
-    pub fn run_batch<F>(&self, n: usize, make_job: F)
+    /// Errors if any job panicked (the pool itself stays healthy).
+    pub fn run_batch<F>(&self, n: usize, make_job: F) -> Result<()>
     where
         F: Fn(usize) -> Job,
     {
-        self.run_batch_async(n, make_job).wait();
+        self.run_batch_async(n, make_job).wait().map(|_| ())
     }
 
     /// Submit `n` jobs without blocking; the returned [`BatchTicket`] joins
@@ -73,13 +104,19 @@ impl WorkerPool {
         F: Fn(usize) -> Job,
     {
         let issued = Instant::now();
-        let (done_tx, done_rx) = mpsc::channel::<Instant>();
+        let (done_tx, done_rx) = mpsc::channel::<JobOutcome>();
         for i in 0..n {
             let job = make_job(i);
             let done = done_tx.clone();
             self.submit(Box::new(move || {
-                job();
-                let _ = done.send(Instant::now());
+                // Catch the unwind here, inside the job wrapper, so the
+                // completion channel always gets exactly one message per
+                // job and the worker thread survives.
+                let outcome = match catch_unwind(AssertUnwindSafe(job)) {
+                    Ok(()) => Ok(Instant::now()),
+                    Err(payload) => Err(panic_detail(payload)),
+                };
+                let _ = done.send(outcome);
             }));
         }
         BatchTicket { rx: done_rx, remaining: n, issued }
@@ -90,23 +127,45 @@ impl WorkerPool {
 /// completion times, so `wait` reports the true submission→last-job span
 /// even when the submitter joins late — the overlap stats depend on this.
 pub struct BatchTicket {
-    rx: mpsc::Receiver<Instant>,
+    rx: mpsc::Receiver<JobOutcome>,
     remaining: usize,
     issued: Instant,
 }
 
 impl BatchTicket {
     /// Block until every job in the batch has run. Returns the span from
-    /// submission to the last job's completion stamp.
-    pub fn wait(self) -> Duration {
+    /// submission to the last job's completion stamp, or an error carrying
+    /// the first panic message if any job unwound. The full batch is
+    /// drained either way, so a failed batch leaves no stragglers behind.
+    pub fn wait(self) -> Result<Duration> {
         let mut last = self.issued;
+        let mut first_panic: Option<String> = None;
         for _ in 0..self.remaining {
-            let done = self.rx.recv().expect("worker panicked");
-            if done > last {
-                last = done;
+            match self.rx.recv() {
+                Ok(Ok(done)) => {
+                    if done > last {
+                        last = done;
+                    }
+                }
+                Ok(Err(detail)) => {
+                    if first_panic.is_none() {
+                        first_panic = Some(detail);
+                    }
+                }
+                // All workers gone mid-batch (pool dropped): nothing more
+                // will arrive — report it rather than spinning.
+                Err(_) => {
+                    if first_panic.is_none() {
+                        first_panic = Some("worker pool shut down mid-batch".to_string());
+                    }
+                    break;
+                }
             }
         }
-        last - self.issued
+        match first_panic {
+            None => Ok(last - self.issued),
+            Some(detail) => Err(anyhow!("env job panicked: {detail}")),
+        }
     }
 }
 
@@ -134,7 +193,8 @@ mod tests {
             Box::new(move || {
                 c.fetch_add(1, Ordering::SeqCst);
             })
-        });
+        })
+        .unwrap();
         assert_eq!(counter.load(Ordering::SeqCst), 100);
     }
 
@@ -149,7 +209,8 @@ mod tests {
                 std::thread::sleep(std::time::Duration::from_millis(5));
                 f.fetch_add(1, Ordering::SeqCst);
             })
-        });
+        })
+        .unwrap();
         // run_batch returned, so every job must have finished
         assert_eq!(flag.load(Ordering::SeqCst), 8);
     }
@@ -165,7 +226,8 @@ mod tests {
                 Box::new(move || {
                     c.fetch_add(1, Ordering::SeqCst);
                 })
-            });
+            })
+            .unwrap();
             assert_eq!(counter.load(Ordering::SeqCst), 7);
         }
     }
@@ -188,7 +250,7 @@ mod tests {
                 c.fetch_add(1, Ordering::SeqCst);
             })
         });
-        let span = ticket.wait();
+        let span = ticket.wait().unwrap();
         assert_eq!(counter.load(Ordering::SeqCst), 6);
         assert!(span >= std::time::Duration::from_millis(2));
     }
@@ -196,7 +258,69 @@ mod tests {
     #[test]
     fn empty_async_batch_completes() {
         let pool = WorkerPool::new(1);
-        let span = pool.run_batch_async(0, |_| Box::new(|| {})).wait();
+        let span = pool.run_batch_async(0, |_| Box::new(|| {})).wait().unwrap();
         assert!(span <= std::time::Duration::from_millis(50));
+    }
+
+    #[test]
+    fn panicking_job_surfaces_through_the_ticket() {
+        // Regression (ISSUE 4): a panicking env job used to kill its worker
+        // (silent pool shrink) and make `wait` panic on a dead channel.
+        let pool = WorkerPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = counter.clone();
+        let ticket = pool.run_batch_async(4, move |i| {
+            let c = c.clone();
+            Box::new(move || {
+                if i == 1 {
+                    panic!("boom in env step {i}");
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+            })
+        });
+        let err = ticket.wait().expect_err("panic must surface as an error");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("boom in env step 1"), "panic detail lost: {msg}");
+        // the other 3 jobs still ran to completion (batch fully drained)
+        assert_eq!(counter.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn pool_stays_full_size_after_a_panic() {
+        // Both workers must survive a panicking batch: a follow-up batch
+        // wider than one worker still completes (no silent shrink to a
+        // single-threaded pool, no deadlock).
+        let pool = WorkerPool::new(2);
+        let bad = pool.run_batch_async(2, |_| Box::new(|| panic!("every job dies")));
+        assert!(bad.wait().is_err());
+
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = counter.clone();
+        pool.run_batch(16, move |_| {
+            let c = c.clone();
+            Box::new(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::SeqCst);
+            })
+        })
+        .unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn raw_submit_panic_keeps_worker_alive() {
+        let pool = WorkerPool::new(1);
+        pool.submit(Box::new(|| panic!("fire-and-forget job panics")));
+        // the single worker must still process subsequent batches
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = counter.clone();
+        pool.run_batch(3, move |_| {
+            let c = c.clone();
+            Box::new(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            })
+        })
+        .unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 3);
     }
 }

@@ -5,7 +5,7 @@
 //!                   [--driver threaded|serial]
 //! podracer sebulba  [--agent seb_catch] [--env catch] [--actor-cores 2] [--learner-cores 2]
 //!                   [--batch 32] [--pipeline-stages 2] [--unroll 20] [--updates 100]
-//!                   [--replicas 1] [--threads 2]
+//!                   [--replicas 1] [--threads 2] [--data-path arena|copy]
 //! podracer muzero   [--updates 20] [--simulations 16]
 //! podracer info     # list artifacts & agents
 //! ```
@@ -101,6 +101,11 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 replicas: args.get_usize("replicas", 1)?,
                 total_updates: args.get_u64("updates", 100)?,
                 seed: args.get_u64("seed", 42)?,
+                copy_path: match args.get_str("data-path", "arena").as_str() {
+                    "arena" => false,
+                    "copy" => true,
+                    other => anyhow::bail!("--data-path expects arena|copy, got {other:?}"),
+                },
             };
             let report = Sebulba::run(&artifacts, &cfg)?;
             println!(

@@ -223,13 +223,17 @@ fn core_main(
             Command::Shutdown => break,
             Command::Cache { slot, tensor, reply } => {
                 let res = (|| -> Result<()> {
-                    let buf = match &tensor.data {
-                        crate::runtime::tensor::Data::F32(v) => client
+                    // Either storage form (owned vector or Arc-shared arena
+                    // view) lands here as a plain slice: the only copy is
+                    // the host->device transfer itself (DESIGN.md §11).
+                    let buf = if let Ok(v) = tensor.as_f32() {
+                        client
                             .buffer_from_host_buffer(v, &tensor.shape, None)
-                            .map_err(|e| anyhow!("cache {slot}: {e:?}"))?,
-                        crate::runtime::tensor::Data::I32(v) => client
-                            .buffer_from_host_buffer(v, &tensor.shape, None)
-                            .map_err(|e| anyhow!("cache {slot}: {e:?}"))?,
+                            .map_err(|e| anyhow!("cache {slot}: {e:?}"))?
+                    } else {
+                        client
+                            .buffer_from_host_buffer(tensor.as_i32()?, &tensor.shape, None)
+                            .map_err(|e| anyhow!("cache {slot}: {e:?}"))?
                     };
                     slots.insert(slot, buf);
                     Ok(())
@@ -271,13 +275,16 @@ fn core_main(
                         let total = inputs.len() + cached.len();
                         let fresh: Vec<xla::PjRtBuffer> = inputs
                             .iter()
-                            .map(|t| match &t.data {
-                                crate::runtime::tensor::Data::F32(v) => client
-                                    .buffer_from_host_buffer(v, &t.shape, None)
-                                    .map_err(|e| anyhow!("h2d {key}: {e:?}")),
-                                crate::runtime::tensor::Data::I32(v) => client
-                                    .buffer_from_host_buffer(v, &t.shape, None)
-                                    .map_err(|e| anyhow!("h2d {key}: {e:?}")),
+                            .map(|t| {
+                                if let Ok(v) = t.as_f32() {
+                                    client
+                                        .buffer_from_host_buffer(v, &t.shape, None)
+                                        .map_err(|e| anyhow!("h2d {key}: {e:?}"))
+                                } else {
+                                    client
+                                        .buffer_from_host_buffer(t.as_i32()?, &t.shape, None)
+                                        .map_err(|e| anyhow!("h2d {key}: {e:?}"))
+                                }
                             })
                             .collect::<Result<_>>()?;
                         let mut ordered: Vec<Option<&xla::PjRtBuffer>> = vec![None; total];

@@ -4,13 +4,61 @@
 //! cores: a shape plus f32 or i32 data (the two dtypes the exported programs
 //! use). Conversion to/from `xla::Literal` happens on the device-core thread
 //! (the "host->device transfer" of the simulated TPU).
+//!
+//! Storage comes in two forms (§Perf L3-2, DESIGN.md §11): `Owned` vectors
+//! (program outputs, scratch) and `Shared` views — an `Arc`'d buffer plus an
+//! offset — so trajectory-arena shards and parameter snapshots flow to the
+//! device without ever being copied on the host. The two compare equal when
+//! their logical contents match; consumers that only read go through
+//! `as_f32`/`as_i32` and never see the difference.
+
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub enum Data {
     F32(Vec<f32>),
     I32(Vec<i32>),
+    /// Zero-copy view into an `Arc`-shared f32 buffer (trajectory arena
+    /// column, parameter snapshot): `buf[offset .. offset + len]`.
+    F32Shared { buf: Arc<Vec<f32>>, offset: usize, len: usize },
+    /// Zero-copy view into an `Arc`-shared i32 buffer (arena actions).
+    I32Shared { buf: Arc<Vec<i32>>, offset: usize, len: usize },
+}
+
+impl Data {
+    fn f32_view(&self) -> Option<&[f32]> {
+        match self {
+            Data::F32(v) => Some(v),
+            Data::F32Shared { buf, offset, len } => Some(&buf[*offset..*offset + *len]),
+            _ => None,
+        }
+    }
+
+    fn i32_view(&self) -> Option<&[i32]> {
+        match self {
+            Data::I32(v) => Some(v),
+            Data::I32Shared { buf, offset, len } => Some(&buf[*offset..*offset + *len]),
+            _ => None,
+        }
+    }
+}
+
+/// Logical equality: same dtype and same contents, regardless of whether
+/// the storage is owned or a shared view.
+impl PartialEq for Data {
+    fn eq(&self, other: &Self) -> bool {
+        match (self.f32_view(), other.f32_view()) {
+            (Some(a), Some(b)) => return a == b,
+            (None, None) => {}
+            _ => return false,
+        }
+        match (self.i32_view(), other.i32_view()) {
+            (Some(a), Some(b)) => a == b,
+            _ => false,
+        }
+    }
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -36,6 +84,32 @@ impl HostTensor {
         Ok(Self { shape, data: Data::I32(data) })
     }
 
+    /// Zero-copy tensor over `buf[offset .. offset + shape.product()]`.
+    /// The buffer is `Arc`-shared: cloning the tensor, queueing it, or
+    /// moving it to a device-core thread never copies the data.
+    pub fn f32_shared(shape: Vec<usize>, buf: Arc<Vec<f32>>, offset: usize) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if offset + n > buf.len() {
+            bail!(
+                "shape {shape:?} wants {n} elements at offset {offset}, buffer has {}",
+                buf.len()
+            );
+        }
+        Ok(Self { shape, data: Data::F32Shared { buf, offset, len: n } })
+    }
+
+    /// Zero-copy i32 tensor over a shared buffer (see [`Self::f32_shared`]).
+    pub fn i32_shared(shape: Vec<usize>, buf: Arc<Vec<i32>>, offset: usize) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if offset + n > buf.len() {
+            bail!(
+                "shape {shape:?} wants {n} elements at offset {offset}, buffer has {}",
+                buf.len()
+            );
+        }
+        Ok(Self { shape, data: Data::I32Shared { buf, offset, len: n } })
+    }
+
     pub fn scalar_i32(v: i32) -> Self {
         Self { shape: vec![], data: Data::I32(vec![v]) }
     }
@@ -53,6 +127,7 @@ impl HostTensor {
         match &self.data {
             Data::F32(v) => v.len(),
             Data::I32(v) => v.len(),
+            Data::F32Shared { len, .. } | Data::I32Shared { len, .. } => *len,
         }
     }
 
@@ -62,35 +137,51 @@ impl HostTensor {
 
     pub fn dtype_name(&self) -> &'static str {
         match &self.data {
-            Data::F32(_) => "f32",
-            Data::I32(_) => "i32",
+            Data::F32(_) | Data::F32Shared { .. } => "f32",
+            Data::I32(_) | Data::I32Shared { .. } => "i32",
         }
     }
 
+    /// True when the storage is a shared view (no owned buffer).
+    pub fn is_shared(&self) -> bool {
+        matches!(self.data, Data::F32Shared { .. } | Data::I32Shared { .. })
+    }
+
     pub fn as_f32(&self) -> Result<&[f32]> {
-        match &self.data {
-            Data::F32(v) => Ok(v),
-            _ => Err(anyhow!("expected f32 tensor, got {}", self.dtype_name())),
-        }
+        self.data
+            .f32_view()
+            .ok_or_else(|| anyhow!("expected f32 tensor, got {}", self.dtype_name()))
     }
 
     pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
         match &mut self.data {
             Data::F32(v) => Ok(v),
-            Data::I32(_) => Err(anyhow!("expected f32 tensor, got i32")),
+            // Copy-on-write: writers of a shared view get a private buffer
+            // when other holders exist (rare; no caller does this today).
+            Data::F32Shared { buf, offset, len } => {
+                Ok(&mut Arc::make_mut(buf)[*offset..*offset + *len])
+            }
+            _ => Err(anyhow!("expected f32 tensor, got i32")),
         }
     }
 
     pub fn as_i32(&self) -> Result<&[i32]> {
-        match &self.data {
-            Data::I32(v) => Ok(v),
-            _ => Err(anyhow!("expected i32 tensor, got {}", self.dtype_name())),
-        }
+        self.data
+            .i32_view()
+            .ok_or_else(|| anyhow!("expected i32 tensor, got {}", self.dtype_name()))
     }
 
     pub fn into_f32(self) -> Result<Vec<f32>> {
         match self.data {
             Data::F32(v) => Ok(v),
+            Data::F32Shared { buf, offset, len } => {
+                if offset == 0 && len == buf.len() {
+                    // Sole holder: reclaim the buffer without a copy.
+                    Ok(Arc::try_unwrap(buf).unwrap_or_else(|arc| (*arc).clone()))
+                } else {
+                    Ok(buf[offset..offset + len].to_vec())
+                }
+            }
             _ => Err(anyhow!("expected f32 tensor")),
         }
     }
@@ -98,6 +189,13 @@ impl HostTensor {
     pub fn into_i32(self) -> Result<Vec<i32>> {
         match self.data {
             Data::I32(v) => Ok(v),
+            Data::I32Shared { buf, offset, len } => {
+                if offset == 0 && len == buf.len() {
+                    Ok(Arc::try_unwrap(buf).unwrap_or_else(|arc| (*arc).clone()))
+                } else {
+                    Ok(buf[offset..offset + len].to_vec())
+                }
+            }
             _ => Err(anyhow!("expected i32 tensor")),
         }
     }
@@ -115,20 +213,18 @@ impl HostTensor {
 
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        let lit = match &self.data {
-            Data::F32(v) => {
-                if self.shape.is_empty() {
-                    xla::Literal::scalar(v[0])
-                } else {
-                    xla::Literal::vec1(v).reshape(&dims).context("reshape f32 literal")?
-                }
+        let lit = if let Some(v) = self.data.f32_view() {
+            if self.shape.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(v).reshape(&dims).context("reshape f32 literal")?
             }
-            Data::I32(v) => {
-                if self.shape.is_empty() {
-                    xla::Literal::scalar(v[0])
-                } else {
-                    xla::Literal::vec1(v).reshape(&dims).context("reshape i32 literal")?
-                }
+        } else {
+            let v = self.as_i32()?;
+            if self.shape.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(v).reshape(&dims).context("reshape i32 literal")?
             }
         };
         Ok(lit)
@@ -176,5 +272,63 @@ mod tests {
         let t = HostTensor::zeros_f32(vec![3, 4]);
         assert_eq!(t.len(), 12);
         assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn shared_view_is_a_window_not_a_copy() {
+        let buf = Arc::new((0..12).map(|i| i as f32).collect::<Vec<f32>>());
+        let t = HostTensor::f32_shared(vec![2, 3], buf.clone(), 6).unwrap();
+        assert_eq!(t.len(), 6);
+        assert!(t.is_shared());
+        let view = t.as_f32().unwrap();
+        assert_eq!(view, &[6.0, 7.0, 8.0, 9.0, 10.0, 11.0]);
+        // pointer identity: the view aliases the shared buffer
+        assert!(std::ptr::eq(view.as_ptr(), buf[6..].as_ptr()));
+    }
+
+    #[test]
+    fn shared_view_bounds_checked() {
+        let buf = Arc::new(vec![0.0f32; 8]);
+        assert!(HostTensor::f32_shared(vec![3, 3], buf.clone(), 0).is_err());
+        assert!(HostTensor::f32_shared(vec![2, 2], buf.clone(), 5).is_err());
+        assert!(HostTensor::f32_shared(vec![2, 2], buf, 4).is_ok());
+    }
+
+    #[test]
+    fn shared_and_owned_compare_by_contents() {
+        let owned = HostTensor::f32(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let buf = Arc::new(vec![0.0, 1.0, 2.0, 3.0]);
+        let shared = HostTensor::f32_shared(vec![3], buf, 1).unwrap();
+        assert_eq!(owned, shared);
+        let other = HostTensor::f32(vec![3], vec![1.0, 2.0, 4.0]).unwrap();
+        assert_ne!(shared, other);
+        // dtype mismatch is never equal
+        let ints = HostTensor::i32(vec![3], vec![1, 2, 3]).unwrap();
+        assert_ne!(owned, ints);
+    }
+
+    #[test]
+    fn into_f32_reclaims_unique_shared_buffer() {
+        let buf = Arc::new(vec![5.0f32; 4]);
+        let ptr = buf.as_ptr();
+        let t = HostTensor::f32_shared(vec![4], buf, 0).unwrap();
+        let v = t.into_f32().unwrap();
+        // sole holder: the Vec comes back without a copy
+        assert!(std::ptr::eq(v.as_ptr(), ptr));
+
+        // window view: materializes just the window
+        let buf = Arc::new((0..6).collect::<Vec<i32>>());
+        let t = HostTensor::i32_shared(vec![2], buf.clone(), 2).unwrap();
+        assert_eq!(t.into_i32().unwrap(), vec![2, 3]);
+        assert_eq!(buf.len(), 6); // original untouched
+    }
+
+    #[test]
+    fn shared_i32_roundtrip() {
+        let buf = Arc::new(vec![7, 8, 9]);
+        let t = HostTensor::i32_shared(vec![3], buf, 0).unwrap();
+        assert_eq!(t.as_i32().unwrap(), &[7, 8, 9]);
+        assert!(t.as_f32().is_err());
+        assert_eq!(t.dtype_name(), "i32");
     }
 }

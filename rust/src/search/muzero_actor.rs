@@ -1,10 +1,10 @@
 //! The MuZero actor thread: MCTS-driven action selection on the actor core.
 //!
-//! Identical plumbing to the model-free actor (batched env, trajectory
-//! builder, sharding, queue) but action selection runs a full batched MCTS
-//! per step, with representation/dynamics/prediction as device programs.
-//! The trajectory's `behaviour_logits` field carries the MCTS visit
-//! distributions — the policy targets of the MuZero loss.
+//! Identical plumbing to the model-free actor (batched env, arena-backed
+//! trajectory builder, zero-copy sharding, queue) but action selection runs
+//! a full batched MCTS per step, with representation/dynamics/prediction as
+//! device programs. The window's `behaviour_logits` column carries the MCTS
+//! visit distributions — the policy targets of the MuZero loss.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -111,11 +111,16 @@ fn muzero_actor_main(
     let mcts = Mcts::new(cfg.mcts.clone());
     let mut rng = Xoshiro256::from_stream(cfg.seed, 0x3D5 + cfg.actor_id as u64);
 
+    anyhow::ensure!(
+        cfg.num_shards >= 1 && b % cfg.num_shards == 0,
+        "muzero batch {b} must divide into {} shards",
+        cfg.num_shards
+    );
     let env = BatchedEnv::new(&factory, b, pool)?;
     let mut obs = vec![0.0f32; b * d];
-    env.reset(&mut obs);
+    env.reset(&mut obs).context("resetting muzero envs")?;
 
-    let mut builder = TrajectoryBuilder::new(cfg.unroll, b, &cfg.obs_shape, a);
+    let mut builder = TrajectoryBuilder::new(cfg.unroll, b, &cfg.obs_shape, a, cfg.num_shards);
     let mut rewards = vec![0.0f32; b];
     let mut dones = vec![false; b];
     let mut discounts = vec![0.0f32; b];
@@ -132,9 +137,11 @@ fn muzero_actor_main(
             }
             let snap = store.latest();
             if snap.version != cached_version {
+                // Zero-copy upload: the cache command references the
+                // snapshot's Arc'd buffer (DESIGN.md §11).
                 core.cache(
                     &param_slot,
-                    HostTensor::f32(vec![snap.params.len()], snap.params.clone())?,
+                    HostTensor::f32_shared(vec![snap.params.len()], snap.params.clone(), 0)?,
                 )?;
                 cached_version = snap.version;
             }
@@ -172,7 +179,8 @@ fn muzero_actor_main(
             // env step
             let t1 = Instant::now();
             let prev_obs = obs.clone();
-            env.step(&result.actions, &mut obs, &mut rewards, &mut dones);
+            env.step(&result.actions, &mut obs, &mut rewards, &mut dones)
+                .context("stepping muzero environments")?;
             stats.env_step_latency.record(t1.elapsed());
 
             let mut ended = 0u64;
@@ -199,11 +207,11 @@ fn muzero_actor_main(
         }
 
         let version = store.version();
-        let traj = builder.finish(&obs, version, cfg.actor_id)?;
-        stats.env_frames.add(traj.frames() as u64);
+        let arena = builder.finish(&obs, version, cfg.actor_id)?;
+        stats.env_frames.add(arena.frames() as u64);
         stats.trajectories.fetch_add(1, Ordering::Relaxed);
-        let shards = shard(&traj, cfg.num_shards)?;
-        if queue.push(shards).is_err() {
+        // Zero-copy handoff: the bundle carries Arc views of the arena.
+        if queue.push(shard(&arena)).is_err() {
             return Ok(());
         }
     }

@@ -111,6 +111,13 @@ pub fn run_muzero(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<RunReport> {
     pod.load_program(&apply, &learner0_ids)?;
     pod.load_program(&init, &[learner0_ids[0]])?;
 
+    // Pre-run busy baseline (see `Sebulba::run_on_with`): without it, a
+    // second run on a shared pod charges itself the first run's device
+    // time — inflated busy seconds, deflated projected_fps.
+    let busy0: Vec<f64> = (0..cfg.total_cores())
+        .map(|cid| Ok(pod.core(cid)?.busy_seconds()))
+        .collect::<Result<_>>()?;
+
     let outs = pod
         .core(learner0_ids[0])?
         .execute(&init, vec![HostTensor::scalar_i32(cfg.seed as i32)])
@@ -216,19 +223,20 @@ pub fn run_muzero(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<RunReport> {
     }
 
     let elapsed = t_start.elapsed().as_secs_f64();
+    // This run's busy time only: subtract the pre-run baseline per core.
     let mut critical: f64 = 1e-12;
     for cid in 0..cfg.total_cores() {
-        critical = critical.max(pod.core(cid)?.busy_seconds());
+        critical = critical.max(pod.core(cid)?.busy_seconds() - busy0[cid]);
     }
     // Exposed learner schedule as critical-path candidate (DESIGN.md §9).
     critical = critical.max(stats.learner_active_max_seconds());
     let mut actor_busy = 0.0;
     for &cid in &actor_core_ids {
-        actor_busy += pod.core(cid)?.busy_seconds();
+        actor_busy += pod.core(cid)?.busy_seconds() - busy0[cid];
     }
     let mut learner_busy = 0.0;
     for &cid in &learner_core_ids {
-        learner_busy += pod.core(cid)?.busy_seconds();
+        learner_busy += pod.core(cid)?.busy_seconds() - busy0[cid];
     }
     let frames = stats.env_frames.frames();
     Ok(RunReport {

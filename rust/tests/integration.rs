@@ -59,28 +59,29 @@ fn actor_pipeline_without_device() {
     let (t_len, b, d, a) = (5, 4, 50, 3);
 
     let mut obs = vec![0.0; b * d];
-    env.reset(&mut obs);
-    let mut builder = TrajectoryBuilder::new(t_len, b, &[d], a);
+    env.reset(&mut obs).unwrap();
+    let mut builder = TrajectoryBuilder::new(t_len, b, &[d], a, 2);
     let mut rewards = vec![0.0; b];
     let mut dones = vec![false; b];
     for step in 0..t_len {
         let actions: Vec<i32> = (0..b as i32).map(|i| (i + step as i32) % 3).collect();
         let prev = obs.clone();
-        env.step(&actions, &mut obs, &mut rewards, &mut dones);
+        env.step(&actions, &mut obs, &mut rewards, &mut dones).unwrap();
         let discounts: Vec<f32> =
             dones.iter().map(|&done| if done { 0.0 } else { 0.99 }).collect();
         let logits = vec![0.1; b * a];
         builder.push_step(&prev, &actions, &logits, &rewards, &discounts).unwrap();
     }
-    let traj = builder.finish(&obs, 1, 0).unwrap();
+    let arena = builder.finish(&obs, 1, 0).unwrap();
+    let canonical = arena.to_trajectory();
 
     let queue = Arc::new(BoundedQueue::new(2));
-    queue.push(shard(&traj, 2).unwrap()).unwrap();
+    queue.push(shard(&arena)).unwrap();
     let bundle = queue.pop().unwrap();
     let back = unshard(&bundle).unwrap();
-    assert_eq!(back.obs, traj.obs);
-    assert_eq!(back.actions, traj.actions);
-    assert_eq!(back.rewards, traj.rewards);
+    assert_eq!(back.obs, canonical.obs);
+    assert_eq!(back.actions, canonical.actions);
+    assert_eq!(back.rewards, canonical.rewards);
 }
 
 #[test]
@@ -126,12 +127,12 @@ fn all_envs_step_through_batched_pipeline() {
         let env = BatchedEnv::new(&factory, 3, pool).unwrap();
         let d = env.obs_dim();
         let mut obs = vec![0.0; 3 * d];
-        env.reset(&mut obs);
+        env.reset(&mut obs).unwrap();
         let mut rewards = vec![0.0; 3];
         let mut dones = vec![false; 3];
         for i in 0..20 {
             let actions = vec![(i % env.num_actions()) as i32; 3];
-            env.step(&actions, &mut obs, &mut rewards, &mut dones);
+            env.step(&actions, &mut obs, &mut rewards, &mut dones).unwrap();
         }
         assert!(
             obs.iter().all(|x| x.is_finite()),

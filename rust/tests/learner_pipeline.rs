@@ -13,7 +13,7 @@ use podracer::coordinator::learner::{learner_main, LearnerConfig, LearnerHandles
 use podracer::coordinator::param_store::ParamStore;
 use podracer::coordinator::queue::BoundedQueue;
 use podracer::coordinator::stats::RunStats;
-use podracer::coordinator::trajectory::Trajectory;
+use podracer::coordinator::trajectory::{TrajArena, TrajShard};
 use podracer::coordinator::{Sebulba, SebulbaConfig};
 use podracer::runtime::tensor::HostTensor;
 use podracer::runtime::Pod;
@@ -35,23 +35,27 @@ const CORES: usize = 2;
 const ROUNDS: usize = 5;
 
 /// Deterministic synthetic shard: valid geometry for the catch grad
-/// program, contents drawn from a seeded stream.
-fn synth_shard(rng: &mut Xoshiro256) -> Trajectory {
-    Trajectory {
-        t_len: T,
-        batch: B,
-        obs_shape: vec![D],
-        num_actions: A,
-        obs: (0..(T + 1) * B * D).map(|_| rng.next_f32()).collect(),
-        actions: (0..T * B).map(|_| rng.next_below(A as u32) as i32).collect(),
-        rewards: (0..T * B).map(|_| rng.next_f32() - 0.5).collect(),
-        discounts: (0..T * B)
+/// program, contents drawn from a seeded stream. Built as a single-shard
+/// arena view — the production currency of the zero-copy data path.
+fn synth_shard(rng: &mut Xoshiro256) -> TrajShard {
+    let arena = TrajArena::from_columns(
+        T,
+        B,
+        &[D],
+        A,
+        1,
+        (0..(T + 1) * B * D).map(|_| rng.next_f32()).collect(),
+        (0..T * B).map(|_| rng.next_below(A as u32) as i32).collect(),
+        (0..T * B).map(|_| rng.next_f32() - 0.5).collect(),
+        (0..T * B)
             .map(|_| if rng.next_below(10) == 0 { 0.0 } else { 0.99 })
             .collect(),
-        behaviour_logits: (0..T * B * A).map(|_| 2.0 * rng.next_f32() - 1.0).collect(),
-        param_version: 0,
-        actor_id: 0,
-    }
+        (0..T * B * A).map(|_| 2.0 * rng.next_f32() - 1.0).collect(),
+        0,
+        0,
+    )
+    .unwrap();
+    TrajShard::new(arena, 0)
 }
 
 /// The pre-pipeline serial learner schedule, inlined: blocking per-round
@@ -60,7 +64,7 @@ fn synth_shard(rng: &mut Xoshiro256) -> Trajectory {
 /// `pipeline = 1`.
 fn serial_reference(
     pod: &mut Pod,
-    bundle: Vec<Trajectory>,
+    bundle: Vec<TrajShard>,
     params0: Vec<f32>,
     mut opt_state: Vec<f32>,
 ) -> (Vec<f32>, Vec<f32>) {
@@ -71,12 +75,13 @@ fn serial_reference(
     let mut shards = bundle.into_iter();
     for _round in 0..rounds {
         let snap = store.latest();
-        let params = HostTensor::f32(vec![snap.params.len()], snap.params.clone()).unwrap();
+        let params =
+            HostTensor::f32(vec![snap.params.len()], snap.params.as_ref().clone()).unwrap();
         let mut waits = Vec::with_capacity(CORES);
         for core in cores.iter() {
             let shard = shards.next().unwrap();
             let mut inputs = vec![params.clone()];
-            inputs.extend(shard.into_tensors().unwrap());
+            inputs.extend(shard.to_tensors().unwrap());
             waits.push(core.execute_async("seb_catch_grad_t20_b16", inputs).unwrap());
         }
         let mut grads: Vec<Vec<f32>> = Vec::with_capacity(CORES);
@@ -96,7 +101,7 @@ fn serial_reference(
         let new_params = outs.swap_remove(0).into_f32().unwrap();
         store.publish(new_params);
     }
-    (store.latest().params.clone(), opt_state)
+    (store.latest().params.as_ref().clone(), opt_state)
 }
 
 #[test]
@@ -115,7 +120,7 @@ fn pipeline_1_is_bit_exact_with_the_serial_learner() {
 
     // one micro-batched bundle: ROUNDS rounds of CORES shards each
     let mut rng = Xoshiro256::from_stream(9, 0);
-    let bundle: Vec<Trajectory> = (0..ROUNDS * CORES).map(|_| synth_shard(&mut rng)).collect();
+    let bundle: Vec<TrajShard> = (0..ROUNDS * CORES).map(|_| synth_shard(&mut rng)).collect();
 
     let (ref_params, ref_opt) =
         serial_reference(&mut pod, bundle.clone(), params0.clone(), opt0.clone());
@@ -175,6 +180,7 @@ fn overlap_cfg(depth: usize, updates: u64) -> SebulbaConfig {
         replicas: 1,
         total_updates: updates,
         seed: 31,
+        copy_path: false,
     }
 }
 

@@ -61,6 +61,7 @@ fn run_actor(stages: usize) -> Vec<Trajectory> {
         obs_shape: vec![D],
         num_actions: A,
         seed: SEED,
+        copy_path: false,
     };
     let join = spawn_actor(
         cfg,
@@ -101,11 +102,11 @@ fn run_synchronous_reference() -> Vec<Trajectory> {
     let factory = make_factory("catch", SEED).unwrap();
     let env = BatchedEnv::new(&factory, B, WorkerPool::new(2)).unwrap();
     let mut obs = vec![0.0f32; B * D];
-    env.reset(&mut obs);
+    env.reset(&mut obs).unwrap();
     // same stream the actor thread derives (actor_id = 0)
     let mut rng = Xoshiro256::from_stream(SEED, 0);
 
-    let mut builder = TrajectoryBuilder::new(T, B, &[D], A);
+    let mut builder = TrajectoryBuilder::new(T, B, &[D], A, 1);
     let mut rewards = vec![0.0f32; B];
     let mut dones = vec![false; B];
     let mut discounts = vec![0.0f32; B];
@@ -122,13 +123,13 @@ fn run_synchronous_reference() -> Vec<Trajectory> {
             let actions = outs[0].as_i32().unwrap().to_vec();
             let logits = outs[1].as_f32().unwrap().to_vec();
             let prev = obs.clone();
-            env.step(&actions, &mut obs, &mut rewards, &mut dones);
+            env.step(&actions, &mut obs, &mut rewards, &mut dones).unwrap();
             for i in 0..B {
                 discounts[i] = if dones[i] { 0.0 } else { 0.99 };
             }
             builder.push_step(&prev, &actions, &logits, &rewards, &discounts).unwrap();
         }
-        out.push(builder.finish(&obs, 0, 0).unwrap());
+        out.push(builder.finish(&obs, 0, 0).unwrap().to_trajectory());
     }
     out
 }
@@ -166,7 +167,7 @@ fn stages_2_covers_the_same_envs_and_frames() {
     let factory = make_factory("catch", SEED).unwrap();
     let env = BatchedEnv::new(&factory, B, WorkerPool::new(2)).unwrap();
     let mut obs = vec![0.0f32; B * D];
-    env.reset(&mut obs);
+    env.reset(&mut obs).unwrap();
     let half = B / 2 * D;
     assert_eq!(&piped[0].obs[..half], &obs[..half], "stage 0 resets diverged");
     assert_eq!(&piped[1].obs[..half], &obs[half..], "stage 1 resets diverged");
@@ -193,6 +194,7 @@ fn stages_2_still_trains_catch() {
         replicas: 1,
         total_updates: 300,
         seed: 123,
+        copy_path: false,
     };
     let report = Sebulba::run(&artifacts(), &cfg).unwrap();
     assert_eq!(report.updates, 300);
@@ -225,6 +227,7 @@ fn stages_2_reports_overlap_on_a_slow_env() {
         replicas: 1,
         total_updates: 4,
         seed: 5,
+        copy_path: false,
     };
     let report = Sebulba::run(&artifacts(), &cfg).unwrap();
     assert_eq!(report.updates, 4);

@@ -3,22 +3,38 @@
 
 use podracer::coordinator::collective::all_reduce_mean;
 use podracer::coordinator::queue::BoundedQueue;
-use podracer::coordinator::sharder::{shard, unshard};
-use podracer::coordinator::trajectory::{Trajectory, TrajectoryBuilder};
+use podracer::coordinator::sharder::{shard, shard_copying, unshard};
+use podracer::coordinator::trajectory::{TrajArena, TrajectoryBuilder};
 use podracer::envs::{make_factory, BatchedEnv, WorkerPool};
 use podracer::testkit::{check, Gen};
 use podracer::util::math::softmax;
 use podracer::util::rng::Xoshiro256;
 use std::sync::Arc;
 
-fn random_traj(g: &mut Gen) -> Trajectory {
+/// One step's inputs: (obs, actions, logits, rewards, discounts).
+type StepData = (Vec<f32>, Vec<i32>, Vec<f32>, Vec<f32>, Vec<f32>);
+
+/// One window's worth of raw step data plus its geometry — the generator
+/// currency: arenas for any shard count are built from the same data, so
+/// properties can compare layouts across `num_shards`.
+#[derive(Debug)]
+struct TrajData {
+    t: usize,
+    b: usize,
+    d: usize,
+    a: usize,
+    steps: Vec<StepData>,
+    final_obs: Vec<f32>,
+}
+
+fn random_traj_data(g: &mut Gen) -> TrajData {
     let t = g.usize(1, 8).max(1);
     let divisors = [1usize, 2, 3, 4, 6];
     let b_base = *g.pick(&divisors);
     let b = b_base * g.usize(1, 4).max(1);
     let d = g.usize(1, 5).max(1);
     let a = g.usize(2, 4).max(2);
-    let mut builder = TrajectoryBuilder::new(t, b, &[d], a);
+    let mut steps = Vec::with_capacity(t);
     for _ in 0..t {
         let obs = g.vec_f32(b * d, -2.0, 2.0);
         let actions: Vec<i32> = (0..b).map(|_| g.i32(0, a as i32 - 1)).collect();
@@ -26,32 +42,74 @@ fn random_traj(g: &mut Gen) -> Trajectory {
         let rewards = g.vec_f32(b, -1.0, 1.0);
         let discounts: Vec<f32> =
             (0..b).map(|_| if g.bool() { 0.99 } else { 0.0 }).collect();
-        builder.push_step(&obs, &actions, &logits, &rewards, &discounts).unwrap();
+        steps.push((obs, actions, logits, rewards, discounts));
     }
     let final_obs = g.vec_f32(b * d, -2.0, 2.0);
-    builder.finish(&final_obs, 0, 0).unwrap()
+    TrajData { t, b, d, a, steps, final_obs }
+}
+
+fn build_arena(data: &TrajData, num_shards: usize) -> std::sync::Arc<TrajArena> {
+    let mut builder = TrajectoryBuilder::new(data.t, data.b, &[data.d], data.a, num_shards);
+    for (obs, actions, logits, rewards, discounts) in &data.steps {
+        builder.push_step(obs, actions, logits, rewards, discounts).unwrap();
+    }
+    builder.finish(&data.final_obs, 0, 0).unwrap()
 }
 
 #[test]
 fn prop_shard_unshard_roundtrip() {
-    check("shard/unshard roundtrip", 60, random_traj, |traj| {
-        // find all valid shard counts and verify each round-trips
-        for n in 1..=traj.batch {
-            if traj.batch % n != 0 {
+    check("shard/unshard roundtrip", 40, random_traj_data, |data| {
+        // the canonical time-major window is num_shards-independent
+        let canonical = build_arena(data, 1).to_trajectory();
+        for n in 1..=data.b {
+            if data.b % n != 0 {
                 continue;
             }
-            let shards = shard(traj, n).map_err(|e| e.to_string())?;
+            let arena = build_arena(data, n);
+            let shards = shard(&arena);
             if shards.len() != n {
                 return Err(format!("expected {n} shards, got {}", shards.len()));
             }
             let back = unshard(&shards).map_err(|e| e.to_string())?;
-            if back.obs != traj.obs
-                || back.actions != traj.actions
-                || back.rewards != traj.rewards
-                || back.discounts != traj.discounts
-                || back.behaviour_logits != traj.behaviour_logits
+            if back.obs != canonical.obs
+                || back.actions != canonical.actions
+                || back.rewards != canonical.rewards
+                || back.discounts != canonical.discounts
+                || back.behaviour_logits != canonical.behaviour_logits
             {
                 return Err(format!("roundtrip mismatch at n={n}"));
+            }
+            // the shard-major relayout itself must also be lossless
+            let direct = arena.to_trajectory();
+            if direct.obs != canonical.obs || direct.actions != canonical.actions {
+                return Err(format!("arena relayout mismatch at n={n}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shard_views_match_copying_oracle() {
+    check("arena views == copying oracle", 40, random_traj_data, |data| {
+        let n = (1..=data.b).rev().find(|n| data.b % n == 0).unwrap();
+        let arena = build_arena(data, n);
+        let views = shard(&arena);
+        let copies = shard_copying(&arena).map_err(|e| e.to_string())?;
+        for (i, (v, c)) in views.iter().zip(&copies).enumerate() {
+            if v.obs() != c.obs()
+                || v.actions() != c.actions()
+                || v.rewards() != c.rewards()
+                || v.discounts() != c.discounts()
+                || v.behaviour_logits() != c.behaviour_logits()
+            {
+                return Err(format!("shard {i}: view and copy diverged"));
+            }
+            if !std::sync::Arc::ptr_eq(v.arena(), &arena) {
+                return Err(format!("shard {i}: view copied its arena"));
+            }
+            if std::sync::Arc::ptr_eq(c.arena(), &arena) {
+                return Err(format!("shard {i}: oracle did not copy"));
             }
         }
         Ok(())
@@ -60,15 +118,16 @@ fn prop_shard_unshard_roundtrip() {
 
 #[test]
 fn prop_shard_preserves_frames_and_rewards() {
-    check("shard preserves totals", 60, random_traj, |traj| {
-        let n = (1..=traj.batch).rev().find(|n| traj.batch % n == 0).unwrap();
-        let shards = shard(traj, n).map_err(|e| e.to_string())?;
+    check("shard preserves totals", 40, random_traj_data, |data| {
+        let n = (1..=data.b).rev().find(|n| data.b % n == 0).unwrap();
+        let arena = build_arena(data, n);
+        let shards = shard(&arena);
         let total_frames: usize = shards.iter().map(|s| s.frames()).sum();
-        if total_frames != traj.frames() {
+        if total_frames != arena.frames() {
             return Err("frame count changed".into());
         }
-        let sum: f32 = shards.iter().flat_map(|s| s.rewards.iter()).sum();
-        let want: f32 = traj.rewards.iter().sum();
+        let sum: f32 = shards.iter().flat_map(|s| s.rewards().iter()).sum();
+        let want: f32 = arena.rewards.iter().sum();
         if (sum - want).abs() > 1e-3 {
             return Err(format!("reward mass changed {sum} vs {want}"));
         }
@@ -191,7 +250,7 @@ fn prop_batched_env_equals_serial_stepping() {
             let d = be.obs_dim();
 
             let mut obs_b = vec![0.0; batch * d];
-            be.reset(&mut obs_b);
+            be.reset(&mut obs_b).map_err(|e| e.to_string())?;
             let mut obs_s = vec![0.0; batch * d];
             for (i, env) in serial.iter_mut().enumerate() {
                 env.reset(&mut obs_s[i * d..(i + 1) * d]);
@@ -205,7 +264,8 @@ fn prop_batched_env_equals_serial_stepping() {
             for step in 0..steps {
                 let actions: Vec<i32> =
                     (0..batch).map(|_| rng.next_below(3) as i32).collect();
-                be.step(&actions, &mut obs_b, &mut rewards, &mut dones);
+                be.step(&actions, &mut obs_b, &mut rewards, &mut dones)
+                    .map_err(|e| e.to_string())?;
                 for (i, env) in serial.iter_mut().enumerate() {
                     let r = env.step(actions[i] as usize, &mut obs_s[i * d..(i + 1) * d]);
                     if (r.reward - rewards[i]).abs() > 0.0 || r.done != dones[i] {

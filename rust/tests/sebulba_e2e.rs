@@ -29,6 +29,7 @@ fn small_cfg(updates: u64) -> SebulbaConfig {
         replicas: 1,
         total_updates: updates,
         seed: 123,
+        copy_path: false,
     }
 }
 

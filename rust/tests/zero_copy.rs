@@ -1,0 +1,258 @@
+//! Zero-copy data-path invariants (DESIGN.md §11): shard() hands out arena
+//! views (pointer identity, no materialization) all the way through the
+//! queue, and the arena path is bit-identical to the pre-refactor copying
+//! path on both seams where they differ — the actor's shard/enqueue step
+//! and the learner's grad-input packaging. Together with the unit-level
+//! pointer tests in `sharder.rs`, this pins "same numbers, fewer copies".
+//!
+//! The two full-run schedules cannot be compared bit-for-bit against each
+//! other directly (actor param refresh is timing-dependent in any run), so
+//! the bitwise claims are pinned where they are deterministic: a frozen
+//! parameter store for the actor seam, a fixed synthetic bundle for the
+//! learner seam. The e2e cases then check both schedules train end to end.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use podracer::coordinator::actor::{spawn_actor, ActorConfig, ShardBundle};
+use podracer::coordinator::collective::GradientBus;
+use podracer::coordinator::learner::{learner_main, LearnerConfig, LearnerHandles};
+use podracer::coordinator::param_store::ParamStore;
+use podracer::coordinator::queue::BoundedQueue;
+use podracer::coordinator::sharder::{shard, shard_copying, unshard};
+use podracer::coordinator::stats::RunStats;
+use podracer::coordinator::trajectory::{TrajArena, Trajectory};
+use podracer::coordinator::{Sebulba, SebulbaConfig};
+use podracer::envs::{make_factory, WorkerPool};
+use podracer::runtime::tensor::HostTensor;
+use podracer::runtime::Pod;
+use podracer::util::rng::Xoshiro256;
+
+fn artifacts() -> std::path::PathBuf {
+    let dir = podracer::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    dir
+}
+
+const B: usize = 32; // actor batch
+const T: usize = 20; // unroll
+const D: usize = 50; // catch obs dim
+const A: usize = 3; // catch actions
+const SEED: u64 = 123;
+const WINDOWS: usize = 3;
+
+/// Run the real actor thread against a frozen parameter store, collecting
+/// raw bundles (so shard storage can be inspected) and the materialized
+/// windows (so contents can be compared across data paths).
+fn run_actor_path(copy_path: bool, num_shards: usize) -> (Vec<ShardBundle>, Vec<Trajectory>) {
+    let mut pod = Pod::new(&artifacts(), 1).unwrap();
+    pod.load_program("seb_catch_init", &[0]).unwrap();
+    pod.load_program("seb_catch_infer_b32", &[0]).unwrap();
+    let core = pod.core(0).unwrap();
+    let outs = core
+        .execute("seb_catch_init", vec![HostTensor::scalar_i32(SEED as i32)])
+        .unwrap();
+    let params = outs[0].clone().into_f32().unwrap();
+
+    let store = Arc::new(ParamStore::new(params));
+    let queue = Arc::new(BoundedQueue::<ShardBundle>::new(2 * WINDOWS));
+    let stats = Arc::new(RunStats::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let factory = Arc::new(make_factory("catch", SEED).unwrap());
+    let cfg = ActorConfig {
+        actor_id: 0,
+        batch: B,
+        pipeline_stages: 1,
+        unroll: T,
+        discount: 0.99,
+        num_shards,
+        infer_program: "seb_catch_infer_b32".into(),
+        obs_shape: vec![D],
+        num_actions: A,
+        seed: SEED,
+        copy_path,
+    };
+    let join = spawn_actor(
+        cfg,
+        core,
+        factory,
+        WorkerPool::new(2),
+        store,
+        queue.clone(),
+        stats,
+        stop.clone(),
+    );
+    let mut bundles = Vec::new();
+    for _ in 0..WINDOWS {
+        bundles.push(queue.pop().unwrap());
+    }
+    stop.store(true, Ordering::Relaxed);
+    queue.shutdown();
+    join.join().unwrap().unwrap();
+    let windows = bundles.iter().map(|b| unshard(b).unwrap()).collect();
+    (bundles, windows)
+}
+
+#[test]
+fn actor_bundles_are_arena_views_with_pointer_identity() {
+    let (bundles, _) = run_actor_path(false, 2);
+    for (w, bundle) in bundles.iter().enumerate() {
+        assert_eq!(bundle.len(), 2);
+        // every shard in a window's bundle aliases ONE arena — the window
+        // was written once and never copied on its way through the queue
+        let arena = bundle[0].arena();
+        for (i, s) in bundle.iter().enumerate() {
+            assert!(
+                Arc::ptr_eq(s.arena(), arena),
+                "window {w} shard {i}: not a view of the window's arena"
+            );
+            assert!(
+                std::ptr::eq(s.obs().as_ptr(), arena.obs[i * arena.obs_block()..].as_ptr()),
+                "window {w} shard {i}: obs block copied"
+            );
+            // the tensors the learner would upload alias the arena too
+            let tensors = s.to_tensors().unwrap();
+            assert!(tensors.iter().all(|t| t.is_shared()));
+            assert!(std::ptr::eq(
+                tensors[0].as_f32().unwrap().as_ptr(),
+                s.obs().as_ptr()
+            ));
+        }
+    }
+}
+
+#[test]
+fn actor_arena_path_is_bit_identical_to_copying_path() {
+    // Same frozen store, same seed: the only difference between the two
+    // runs is the sharding strategy, so every window must match bitwise.
+    let (_, arena_windows) = run_actor_path(false, 2);
+    let (_, copy_windows) = run_actor_path(true, 2);
+    assert_eq!(arena_windows.len(), copy_windows.len());
+    for (w, (a, c)) in arena_windows.iter().zip(&copy_windows).enumerate() {
+        assert_eq!(a.obs, c.obs, "window {w}: observations diverged");
+        assert_eq!(a.actions, c.actions, "window {w}: actions diverged");
+        assert_eq!(a.rewards, c.rewards, "window {w}: rewards diverged");
+        assert_eq!(a.discounts, c.discounts, "window {w}: discounts diverged");
+        assert_eq!(
+            a.behaviour_logits, c.behaviour_logits,
+            "window {w}: logits diverged"
+        );
+    }
+}
+
+const CORES: usize = 2;
+const ROUNDS: usize = 4;
+
+/// One multi-shard synthetic arena with valid catch-grad geometry
+/// (shard batch 16 = seb_catch_grad_t20_b16).
+fn synth_arena(rng: &mut Xoshiro256, num_shards: usize) -> Arc<TrajArena> {
+    let b = 16 * num_shards;
+    TrajArena::from_columns(
+        T,
+        b,
+        &[D],
+        A,
+        num_shards,
+        (0..(T + 1) * b * D).map(|_| rng.next_f32()).collect(),
+        (0..T * b).map(|_| rng.next_below(A as u32) as i32).collect(),
+        (0..T * b).map(|_| rng.next_f32() - 0.5).collect(),
+        (0..T * b)
+            .map(|_| if rng.next_below(10) == 0 { 0.0 } else { 0.99 })
+            .collect(),
+        (0..T * b * A).map(|_| 2.0 * rng.next_f32() - 1.0).collect(),
+        0,
+        0,
+    )
+    .unwrap()
+}
+
+fn run_learner(
+    pod: &mut Pod,
+    bundle: ShardBundle,
+    params0: Vec<f32>,
+    opt0: Vec<f32>,
+) -> (Vec<f32>, Vec<f32>) {
+    let queue = Arc::new(BoundedQueue::<ShardBundle>::new(2));
+    queue.push(bundle).unwrap();
+    queue.shutdown();
+    let h = LearnerHandles {
+        cores: (0..CORES).map(|i| pod.core(i).unwrap()).collect(),
+        store: Arc::new(ParamStore::new(params0)),
+        queue,
+        stats: Arc::new(RunStats::new()),
+        bus: Arc::new(GradientBus::new(1)),
+    };
+    let cfg = LearnerConfig {
+        replica_id: 0,
+        grad_program: "seb_catch_grad_t20_b16".into(),
+        apply_program: "seb_catch_apply".into(),
+        shards_per_round: CORES,
+        total_updates: ROUNDS as u64,
+        pipeline: 1,
+    };
+    learner_main(&cfg, &h, opt0).unwrap()
+}
+
+#[test]
+fn learner_on_arena_views_matches_copying_shards_bit_for_bit() {
+    // Feed the learner the SAME window twice — once as zero-copy arena
+    // views, once through the materializing oracle. The resulting
+    // parameters and optimiser state must be bit-identical: the arena path
+    // changed where bytes live, never what they are.
+    let mut pod = Pod::new(&artifacts(), CORES).unwrap();
+    pod.load_program("seb_catch_grad_t20_b16", &[0, 1]).unwrap();
+    pod.load_program("seb_catch_apply", &[0]).unwrap();
+    pod.load_program("seb_catch_init", &[0]).unwrap();
+    let outs = pod
+        .core(0)
+        .unwrap()
+        .execute("seb_catch_init", vec![HostTensor::scalar_i32(77)])
+        .unwrap();
+    let params0 = outs[0].clone().into_f32().unwrap();
+    let opt0 = outs[1].clone().into_f32().unwrap();
+
+    let mut rng = Xoshiro256::from_stream(21, 0);
+    let arena = synth_arena(&mut rng, ROUNDS * CORES);
+    let views: ShardBundle = shard(&arena);
+    let copies: ShardBundle = shard_copying(&arena).unwrap();
+
+    let (p_view, o_view) = run_learner(&mut pod, views, params0.clone(), opt0.clone());
+    let (p_copy, o_copy) = run_learner(&mut pod, copies, params0, opt0);
+    assert_eq!(p_view, p_copy, "arena-path params diverged from the copying path");
+    assert_eq!(o_view, o_copy, "arena-path optimiser state diverged");
+}
+
+fn e2e_cfg(copy_path: bool) -> SebulbaConfig {
+    SebulbaConfig {
+        agent: "seb_catch".into(),
+        env_kind: "catch",
+        actor_cores: 1,
+        learner_cores: 2,
+        threads_per_actor_core: 1,
+        actor_batch: 32,
+        pipeline_stages: 1,
+        learner_pipeline: 1,
+        unroll: 20,
+        micro_batches: 1,
+        discount: 0.99,
+        queue_capacity: 2,
+        env_workers: 2,
+        replicas: 1,
+        total_updates: 8,
+        seed: 77,
+        copy_path,
+    }
+}
+
+#[test]
+fn both_data_paths_train_end_to_end() {
+    let arena = Sebulba::run(&artifacts(), &e2e_cfg(false)).unwrap();
+    let copy = Sebulba::run(&artifacts(), &e2e_cfg(true)).unwrap();
+    assert_eq!(arena.updates, 8);
+    assert_eq!(copy.updates, 8);
+    assert_eq!(arena.final_params.len(), copy.final_params.len());
+    assert!(arena.final_params.iter().all(|x| x.is_finite()));
+    assert!(copy.final_params.iter().all(|x| x.is_finite()));
+}

@@ -95,6 +95,16 @@ def collect():
                 series["threaded_speedup_4c"]
             )
 
+    # fig4b actor-batch smoke (ISSUE 4): gates the actor->shard->learner
+    # data-path throughput, so a copy creeping back into the hot path shows
+    # up as an fps regression. The fast bench runs the endpoint batches.
+    fig4b_path = os.path.join(RESULTS_DIR, "fig4b_series.json")
+    if os.path.exists(fig4b_path):
+        series = _load_json(fig4b_path)
+        for batch, fps in zip(series.get("batches", []), series.get("fps", [])):
+            if fps > 0.0:
+                suites["sebulba"][f"fig4b_fps_batch_{int(batch)}"] = float(fps)
+
     dumps = _bench_dumps()
     suites["sebulba"].update(
         _ablation_cases(dumps, "ablation: learner pipeline", "")
