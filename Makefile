@@ -8,7 +8,7 @@ SMOKE_BENCHES := fig4a_anakin_scaling ablation_learner_pipeline ablation_pipelin
                  fig4b_actor_batch
 
 .PHONY: all artifacts build test quickstart bench bench-learner-pipeline \
-        bench-smoke bench-baseline fmt clippy
+        bench-smoke bench-baseline cli-smoke fmt clippy
 
 all: artifacts build
 
@@ -47,6 +47,13 @@ bench-smoke:
 		PODRACER_BENCH_FAST=1 cargo bench --bench $$b || exit 1; \
 	done
 	python3 scripts/bench_gate.py --emit --check
+
+# CLI smoke matrix (ISSUE 5): one-update `podracer {anakin,sebulba,muzero}`
+# runs through every EnvKind variant (scripts/cli_smoke.sh), asserting
+# nonzero steps plus the unknown-env/--mode hard-error cases. Runs in CI
+# next to the bench gate.
+cli-smoke: build
+	bash scripts/cli_smoke.sh
 
 # Regenerate the committed baselines from a smoke run on this machine
 # (same PODRACER_BENCH_FAST=1 conditions CI compares under).

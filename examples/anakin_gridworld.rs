@@ -5,13 +5,14 @@
 //! ```
 //!
 //! Everything — the gridworld environment, the policy, GAE and the update —
-//! is one XLA program per core; this driver replicates it across simulated
+//! is one XLA program per core; the driver replicates it across simulated
 //! cores and averages parameters (paper Fig. 1b / Fig. 2), by default as a
 //! pod of per-core replica threads (DESIGN.md §10). Prints the learning
 //! curve (mean episode reward per outer iteration) and both runs'
 //! determinism check.
 
-use podracer::anakin::{Anakin, AnakinConfig, Driver, Mode};
+use podracer::anakin::Driver;
+use podracer::experiment::{Arch, Experiment, Topology};
 use podracer::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -23,28 +24,26 @@ fn main() -> anyhow::Result<()> {
         "artifacts missing — run `make artifacts` first"
     );
 
-    let cfg = AnakinConfig {
-        agent: "anakin_grid".into(),
-        cores: args.get_usize("cores", 2)?,
-        outer_iters: args.get_u64("outer-iters", 30)?,
-        mode: Mode::Bundled,
-        driver: match args.get_str("driver", "threaded").as_str() {
-            "threaded" => Driver::Threaded,
-            "serial" => Driver::Serial,
-            other => anyhow::bail!("--driver expects threaded|serial, got {other:?}"),
-        },
-        seed: args.get_u64("seed", 7)?,
-    };
+    let cores = args.get_usize("cores", 2)?;
+    let outer_iters = args.get_u64("outer-iters", 30)?;
+    let exp = Experiment::new(Arch::Anakin)
+        .artifacts(&artifacts)
+        .agent("anakin_grid")
+        .topology(Topology::anakin(cores))
+        .updates(outer_iters)
+        .driver(args.get_str("driver", "threaded").parse::<Driver>()?)
+        .seed(args.get_u64("seed", 7)?)
+        .build()?;
     println!(
-        "anakin on gridworld: {} cores x {} outer iters (8 in-graph updates each)",
-        cfg.cores, cfg.outer_iters
+        "anakin on gridworld: {cores} cores x {outer_iters} outer iters (8 in-graph updates each)"
     );
 
-    let report = Anakin::run(&artifacts, &cfg)?;
+    let report = exp.run()?;
+    let detail = report.as_anakin().expect("anakin run");
 
     println!("\nlearning curve (mean episode reward per outer iteration):");
-    for (i, m) in report.metrics.iter().enumerate() {
-        if i % 3 == 0 || i + 1 == report.metrics.len() {
+    for (i, m) in detail.metrics.iter().enumerate() {
+        if i % 3 == 0 || i + 1 == detail.metrics.len() {
             let bar_len = ((m[4].max(0.0)) * 40.0) as usize;
             println!("  iter {i:3}: reward {:6.3} loss {:7.4} |{}", m[4], m[0], "#".repeat(bar_len));
         }
@@ -54,17 +53,17 @@ fn main() -> anyhow::Result<()> {
     println!("env steps     : {}", report.steps);
     println!("updates       : {}", report.updates);
     println!("elapsed       : {:.1}s", report.elapsed);
-    println!("steps/sec     : {:.0}", report.sps);
+    println!("steps/sec     : {:.0}", report.throughput);
     println!(
         "replica sched : device={:.2}s host={:.2}s hidden_by_overlap={:.2}s",
-        report.replica_device_seconds, report.replica_host_seconds, report.replica_overlap_seconds
+        detail.replica_device_seconds, detail.replica_host_seconds, detail.replica_overlap_seconds
     );
-    let first = report.metrics.first().map(|m| m[4]).unwrap_or(0.0);
-    let last = report.metrics.last().map(|m| m[4]).unwrap_or(0.0);
+    let first = detail.metrics.first().map(|m| m[4]).unwrap_or(0.0);
+    let last = detail.metrics.last().map(|m| m[4]).unwrap_or(0.0);
     println!("reward        : {first:.3} -> {last:.3}");
 
     // determinism spot-check (the Anakin reproducibility claim)
-    let report2 = Anakin::run(&artifacts, &cfg)?;
+    let report2 = exp.run()?;
     let identical = report.final_params == report2.final_params;
     println!("deterministic : {identical} (two runs, same seed, bit-compared params)");
     anyhow::ensure!(identical, "determinism violated!");

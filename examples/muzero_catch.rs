@@ -11,8 +11,7 @@
 //! workload of the paper's Fig. 4c: acting is the bottleneck, so the
 //! actor:learner core split flips relative to the model-free agents.
 
-use podracer::runtime::Pod;
-use podracer::search::{run_muzero, MuZeroRunConfig};
+use podracer::experiment::{Arch, EnvKind, Experiment, Topology};
 use podracer::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -24,40 +23,47 @@ fn main() -> anyhow::Result<()> {
         "artifacts missing — run `make artifacts` first"
     );
 
-    let cfg = MuZeroRunConfig {
-        agent: "mz_catch".into(),
-        env_kind: "catch",
+    let simulations = args.get_usize("simulations", 16)?;
+    let updates = args.get_u64("updates", 40)?;
+    let topo = Topology {
         actor_cores: 2, // search-heavy: more actor cores than the 1:3 model-free split
         learner_cores: 2,
         threads_per_actor_core: 1,
-        num_simulations: args.get_usize("simulations", 16)?,
+        pipeline_stages: 1,
         learner_pipeline: 1,
-        discount: 0.997,
-        queue_capacity: 4,
-        env_workers: 2,
-        replicas: 1,
-        total_updates: args.get_u64("updates", 40)?,
-        seed: args.get_u64("seed", 11)?,
+        ..Topology::default()
     };
     println!(
-        "muzero_catch: {} MCTS simulations/step, {}A+{}L cores, {} updates",
-        cfg.num_simulations, cfg.actor_cores, cfg.learner_cores, cfg.total_updates
+        "muzero_catch: {simulations} MCTS simulations/step, {}A+{}L cores, {updates} updates",
+        topo.actor_cores, topo.learner_cores
     );
 
-    let mut pod = Pod::new(&artifacts, cfg.total_cores())?;
-    let report = run_muzero(&mut pod, &cfg)?;
+    let report = Experiment::new(Arch::MuZero)
+        .artifacts(&artifacts)
+        .agent("mz_catch")
+        .env(EnvKind::Catch)
+        .topology(topo)
+        .num_simulations(simulations)
+        .updates(updates)
+        .seed(args.get_u64("seed", 11)?)
+        .build()?
+        .run()?;
+    let detail = report.as_actor_learner().expect("muzero run");
 
     println!("\n=== results ===");
-    println!("frames             : {}", report.frames);
+    println!("frames             : {}", report.steps);
     println!("updates            : {}", report.updates);
     println!("elapsed            : {:.1}s", report.elapsed);
-    println!("throughput         : {:.0} frames/s (search-bound, cf. model-free)", report.fps);
-    println!("episodes           : {}", report.episodes);
-    println!("mean episode reward: {:.3}", report.mean_episode_reward);
-    println!("loss               : {:.4}", report.last_loss);
+    println!(
+        "throughput         : {:.0} frames/s (search-bound, cf. model-free)",
+        report.throughput
+    );
+    println!("episodes           : {}", detail.episodes);
+    println!("mean episode reward: {:.3}", detail.mean_episode_reward);
+    println!("loss               : {:.4}", detail.last_loss);
     println!(
         "actor/learner busy : {:.1}s / {:.1}s (search dominates acting — the Fig 4c regime)",
-        report.actor_busy_seconds, report.learner_busy_seconds
+        detail.actor_busy_seconds, detail.learner_busy_seconds
     );
     Ok(())
 }

@@ -4,12 +4,13 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 //!
-//! A 4-core simulated host (2 actor + 2 learner cores, 2 actor threads per
-//! actor core) trains a small MLP actor-critic for 200 updates (~256k
-//! frames). Catch is solved when the mean episode reward approaches +1
-//! (random play scores about -0.6).
+//! One `Experiment` describes the whole run (DESIGN.md §12): a 4-core
+//! simulated host (2 actor + 2 learner cores, 2 actor threads per actor
+//! core) trains a small MLP actor-critic for 200 updates (~256k frames).
+//! Catch is solved when the mean episode reward approaches +1 (random play
+//! scores about -0.6).
 
-use podracer::coordinator::{Sebulba, SebulbaConfig};
+use podracer::experiment::{Arch, EnvKind, Experiment, Topology};
 
 fn main() -> anyhow::Result<()> {
     podracer::util::logging::init();
@@ -19,42 +20,45 @@ fn main() -> anyhow::Result<()> {
         "artifacts missing — run `make artifacts` first"
     );
 
-    let cfg = SebulbaConfig {
-        agent: "seb_catch".into(),
-        env_kind: "catch",
+    let topo = Topology {
         actor_cores: 2,
         learner_cores: 2,
         threads_per_actor_core: 2,
-        actor_batch: 32,
         pipeline_stages: 2, // double-buffered actors: infer one half-batch, step the other
         learner_pipeline: 2, // double-buffered learner: next grads run under collective+apply
-        unroll: 20,
-        micro_batches: 1,
-        discount: 0.99,
-        queue_capacity: 4,
-        env_workers: 2,
-        replicas: 1,
-        total_updates: 200,
-        seed: 42,
-        copy_path: false,
+        ..Topology::default()
     };
     println!(
-        "podracer quickstart: Sebulba/V-trace on Catch ({}A+{}L cores, batch {}, T={})",
-        cfg.actor_cores, cfg.learner_cores, cfg.actor_batch, cfg.unroll
+        "podracer quickstart: Sebulba/V-trace on Catch ({}A+{}L cores, batch 32, T=20)",
+        topo.actor_cores, topo.learner_cores
     );
 
-    let report = Sebulba::run(&artifacts, &cfg)?;
+    let report = Experiment::new(Arch::Sebulba)
+        .artifacts(&artifacts)
+        .agent("seb_catch")
+        .env(EnvKind::Catch)
+        .topology(topo)
+        .actor_batch(32)
+        .unroll(20)
+        .updates(200)
+        .seed(42)
+        .build()?
+        .run()?;
+    let detail = report.as_actor_learner().expect("sebulba run");
 
     println!("\n=== results ===");
-    println!("frames             : {}", report.frames);
+    println!("frames             : {}", report.steps);
     println!("updates            : {}", report.updates);
     println!("elapsed            : {:.1}s", report.elapsed);
-    println!("throughput         : {:.0} frames/s", report.fps);
-    println!("episodes           : {}", report.episodes);
-    println!("mean episode reward: {:.3}  (random ≈ -0.6, perfect = +1)", report.mean_episode_reward);
-    println!("parameter staleness: {:.2} updates", report.mean_staleness);
+    println!("throughput         : {:.0} frames/s", report.throughput);
+    println!("episodes           : {}", detail.episodes);
+    println!(
+        "mean episode reward: {:.3}  (random ≈ -0.6, perfect = +1)",
+        detail.mean_episode_reward
+    );
+    println!("parameter staleness: {:.2} updates", detail.mean_staleness);
 
-    if report.mean_episode_reward > 0.0 {
+    if detail.mean_episode_reward > 0.0 {
         println!("\nthe agent is catching the ball — quickstart OK");
     } else {
         println!("\n(mean over the whole run includes early random play; rerun with more updates for a cleaner curve)");

@@ -10,9 +10,11 @@
 //! worker pool, batched conv inference on actor cores, V-trace learning
 //! (with the Pallas kernel inside the grad program) sharded over learner
 //! cores, gradient collective, parameter broadcast. Logs the loss/reward
-//! curve in stages so the training trajectory is visible.
+//! curve in stages so the training trajectory is visible — each stage is
+//! one `Experiment`, warm-started from the previous stage's parameters
+//! (`ExperimentBuilder::warm_start`).
 
-use podracer::coordinator::{Sebulba, SebulbaConfig};
+use podracer::experiment::{Arch, EnvKind, Experiment, Topology};
 use podracer::runtime::Pod;
 use podracer::util::cli::Args;
 
@@ -27,37 +29,29 @@ fn main() -> anyhow::Result<()> {
 
     let total_updates = args.get_u64("updates", 300)?;
     let stages = args.get_u64("stages", 10)?;
-    let base = SebulbaConfig {
-        agent: "seb_atari".into(),
-        env_kind: "atari_like",
+    let topo = Topology {
         actor_cores: 2,
         learner_cores: 4, // 1:2 actor:learner — backward pass dominates (paper §Sebulba)
         threads_per_actor_core: 2,
-        actor_batch: args.get_usize("batch", 32)?,
         pipeline_stages: args.get_usize("pipeline-stages", 2)?,
         learner_pipeline: args.get_usize("learner-pipeline", 2)?,
-        unroll: 20,
-        micro_batches: 1,
-        discount: 0.99,
         queue_capacity: 3,
-        env_workers: 2,
-        replicas: 1,
-        total_updates: total_updates / stages,
-        seed: args.get_u64("seed", 42)?,
-        copy_path: false,
+        ..Topology::default()
     };
+    let batch = args.get_usize("batch", 32)?;
+    let seed = args.get_u64("seed", 42)?;
     println!(
         "sebulba_atari E2E: conv actor-critic on atari_like ({}x{}x{} pixels), {} updates",
         42, 42, 2, total_updates
     );
     println!(
-        "topology: {}A+{}L cores, {} threads/actor-core, batch {}, T={}\n",
-        base.actor_cores, base.learner_cores, base.threads_per_actor_core, base.actor_batch, base.unroll
+        "topology: {}A+{}L cores, {} threads/actor-core, batch {batch}, T=20\n",
+        topo.actor_cores, topo.learner_cores, topo.threads_per_actor_core
     );
 
     // One pod across stages so programs compile once; each stage reports the
     // running loss/reward so the curve is visible.
-    let mut pod = Pod::new(&artifacts, base.cores_per_replica())?;
+    let mut pod = Pod::new(&artifacts, topo.cores_per_replica())?;
     let mut total_frames = 0u64;
     let mut total_elapsed = 0.0;
     println!("stage | updates | frames    | fps     | mean ep reward | last loss");
@@ -67,15 +61,32 @@ fn main() -> anyhow::Result<()> {
     for stage in 0..stages {
         // warm-start each stage from the previous stage's parameters so this
         // is one continuous training run with staged reporting
-        let report = Sebulba::run_on_with(&mut pod, &base, warm.take())?;
-        total_frames += report.frames;
+        let mut builder = Experiment::new(Arch::Sebulba)
+            .artifacts(&artifacts)
+            .agent("seb_atari")
+            .env(EnvKind::AtariLike)
+            .topology(topo.clone())
+            .actor_batch(batch)
+            .unroll(20)
+            .updates(total_updates / stages)
+            .seed(seed);
+        if let Some((params, opt)) = warm.take() {
+            builder = builder.warm_start(params, opt);
+        }
+        let report = builder.build()?.run_on(&mut pod)?;
+        let detail = report.as_actor_learner().expect("sebulba run");
+        total_frames += report.steps;
         total_elapsed += report.elapsed;
-        reward_curve.push(report.mean_episode_reward);
+        reward_curve.push(detail.mean_episode_reward);
         println!(
             "{stage:5} | {:7} | {:9} | {:7.0} | {:14.3} | {:.4}",
-            report.updates, report.frames, report.fps, report.mean_episode_reward, report.last_loss
+            report.updates,
+            report.steps,
+            report.throughput,
+            detail.mean_episode_reward,
+            detail.last_loss
         );
-        warm = Some((report.final_params, report.final_opt_state));
+        warm = report.into_warm_start();
     }
 
     println!("\n=== E2E summary ===");

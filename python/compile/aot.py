@@ -382,6 +382,35 @@ def build_all(out_dir: str, profile: str = "full") -> None:
         batch=16, unroll=16, grad_shards=[8, 16],
     )
 
+    # CLI smoke-matrix agents (`make cli-smoke`): one cheap agent per
+    # (architecture, EnvKind) pair the smoke runs — sebulba MLPs for the
+    # remaining flat-obs envs at the smoke geometry (batch 16 over 2
+    # pipeline stages -> infer_b8; shard 4 over 2 learner cores at T=20),
+    # and small MuZero variants for every host env. Anakin's environments
+    # are in-graph, so its matrix is the anakin_* agents above.
+    print("[aot] sebulba smoke agents (gridworld/cartpole/chain)")
+    for tag, obs_dim, num_actions in [
+        ("seb_grid", 128, 4),
+        ("seb_cartpole", 4, 2),
+        ("seb_chain", 10, 2),
+    ]:
+        export_sebulba_mlp(
+            ex, tag, obs_dim=obs_dim, num_actions=num_actions,
+            infer_batches=[8], grad_geoms=[(20, 4)], hidden=(32, 32),
+        )
+
+    print("[aot] muzero smoke agents (gridworld/cartpole/chain/atari_like)")
+    for tag, obs_dim, num_actions in [
+        ("mz_grid", 128, 4),
+        ("mz_cartpole", 4, 2),
+        ("mz_chain", 10, 2),
+        ("mz_atari", 42 * 42 * 2, 6),
+    ]:
+        export_muzero(
+            ex, tag, obs_dim=obs_dim, num_actions=num_actions,
+            batch=16, unroll=16, grad_shards=[8], hidden=32,
+        )
+
     ex.write_manifest()
 
 

@@ -8,7 +8,7 @@
 //! env stepping; with 2+ threads inference requests interleave.
 
 use podracer::benchkit::Bench;
-use podracer::coordinator::{Sebulba, SebulbaConfig};
+use podracer::experiment::{Arch, EnvKind, Experiment, Topology};
 use podracer::runtime::Pod;
 
 fn main() -> anyhow::Result<()> {
@@ -23,31 +23,31 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
 
     for &threads in &thread_counts {
-        let cfg = SebulbaConfig {
-            agent: "seb_atari".into(),
-            env_kind: "atari_like", // slow host-side env: the case threads exist for
-            actor_cores: 1,
-            learner_cores: 4,
-            threads_per_actor_core: threads,
-            actor_batch: 32,
-            pipeline_stages: 1, // thread-level overlap only: isolate the ablation
-            learner_pipeline: 2, // default learner schedule; this sweep holds it fixed
-            unroll: 20,
-            micro_batches: 1,
-            discount: 0.99,
-            queue_capacity: 2 * threads,
-            env_workers: 2,
-            replicas: 1,
-            total_updates: updates,
-            seed: 8,
-            copy_path: false,
-        };
+        // slow host-side env (atari_like): the case threads exist for
+        let exp = Experiment::new(Arch::Sebulba)
+            .artifacts(&artifacts)
+            .agent("seb_atari")
+            .env(EnvKind::AtariLike)
+            .topology(Topology {
+                actor_cores: 1,
+                learner_cores: 4,
+                threads_per_actor_core: threads,
+                pipeline_stages: 1, // thread-level overlap only: isolate the ablation
+                learner_pipeline: 2, // default learner schedule; this sweep holds it fixed
+                queue_capacity: 2 * threads,
+                ..Topology::default()
+            })
+            .actor_batch(32)
+            .unroll(20)
+            .updates(updates)
+            .seed(8)
+            .build()?;
         let mut out = (0.0, 0.0);
         bench.case(&format!("threads/core={threads}"), "frames/s", || {
-            let r = Sebulba::run_on(&mut pod, &cfg).unwrap();
+            let r = exp.run_on(&mut pod).unwrap();
             let actor_occ = pod.core(0).unwrap().occupancy();
-            out = (r.fps, actor_occ);
-            r.fps
+            out = (r.throughput, actor_occ);
+            r.throughput
         });
         rows.push((threads, out.0, out.1));
     }

@@ -7,7 +7,7 @@
 //! actor/learner busy-time balance that explains the optimum.
 
 use podracer::benchkit::Bench;
-use podracer::coordinator::{Sebulba, SebulbaConfig};
+use podracer::experiment::{Arch, EnvKind, Experiment, Topology};
 use podracer::runtime::Pod;
 
 fn main() -> anyhow::Result<()> {
@@ -26,30 +26,30 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
 
     for &(a, l) in &splits {
-        let cfg = SebulbaConfig {
-            agent: "seb_atari".into(),
-            env_kind: "atari_like",
-            actor_cores: a,
-            learner_cores: l,
-            threads_per_actor_core: 1,
-            actor_batch: 32,
-            pipeline_stages: 1, // keep the seed geometry: this sweep is about the core split
-            learner_pipeline: 2, // default learner schedule; this sweep holds it fixed
-            unroll: 20,
-            micro_batches: 1,
-            discount: 0.99,
-            queue_capacity: 2,
-            env_workers: 2,
-            replicas: 1,
-            total_updates: updates,
-            seed: 5,
-            copy_path: false,
-        };
+        let exp = Experiment::new(Arch::Sebulba)
+            .artifacts(&artifacts)
+            .agent("seb_atari")
+            .env(EnvKind::AtariLike)
+            .topology(Topology {
+                actor_cores: a,
+                learner_cores: l,
+                threads_per_actor_core: 1,
+                pipeline_stages: 1, // keep the seed geometry: this sweep is about the core split
+                learner_pipeline: 2, // default learner schedule; this sweep holds it fixed
+                queue_capacity: 2,
+                ..Topology::default()
+            })
+            .actor_batch(32)
+            .unroll(20)
+            .updates(updates)
+            .seed(5)
+            .build()?;
         let mut out = (0.0, 0.0, 0.0);
         bench.case(&format!("{a}A:{l}L"), "frames/s", || {
-            let r = Sebulba::run_on(&mut pod, &cfg).unwrap();
-            out = (r.fps, r.actor_busy_seconds, r.learner_busy_seconds);
-            r.fps
+            let r = exp.run_on(&mut pod).unwrap();
+            let d = r.as_actor_learner().unwrap();
+            out = (r.throughput, d.actor_busy_seconds, d.learner_busy_seconds);
+            r.throughput
         });
         rows.push((a, l, out.0, out.1, out.2));
     }

@@ -16,7 +16,7 @@
 //! trajectory queue from starving the learner.
 
 use podracer::benchkit::Bench;
-use podracer::coordinator::{Sebulba, SebulbaConfig};
+use podracer::experiment::{Arch, EnvKind, Experiment, Topology};
 use podracer::runtime::Pod;
 
 fn main() -> anyhow::Result<()> {
@@ -31,40 +31,40 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
 
     for &depth in &depths {
-        let cfg = SebulbaConfig {
-            agent: "seb_catch".into(),
-            env_kind: "catch",
-            actor_cores: 1,
-            learner_cores: 2,
-            threads_per_actor_core: 2, // keep the learner fed: it must be the bottleneck
-            actor_batch: 32,
-            pipeline_stages: 2,
-            learner_pipeline: depth,
-            unroll: 20,
-            micro_batches: 2, // two rounds per bundle: the pipeline fills every window
-            discount: 0.99,
-            queue_capacity: 4,
-            env_workers: 2,
-            replicas: 1,
-            total_updates: updates,
-            seed: 7,
-            copy_path: false,
-        };
+        let exp = Experiment::new(Arch::Sebulba)
+            .artifacts(&artifacts)
+            .agent("seb_catch")
+            .env(EnvKind::Catch)
+            .topology(Topology {
+                actor_cores: 1,
+                learner_cores: 2,
+                threads_per_actor_core: 2, // keep the learner fed: it must be the bottleneck
+                pipeline_stages: 2,
+                learner_pipeline: depth,
+                ..Topology::default()
+            })
+            .actor_batch(32)
+            .unroll(20)
+            .micro_batches(2) // two rounds per bundle: the pipeline fills every window
+            .updates(updates)
+            .seed(7)
+            .build()?;
         let mut out = (0.0, 0.0, 0.0, 0.0);
         bench.case(&format!("learner_pipeline={depth}"), "projected frames/s", || {
             // Fresh pod per repeat: core busy-time accumulates for the life
-            // of a pod and projected_fps divides by the max core busy — a
+            // of a pod and projected fps divides by the max core busy — a
             // shared pod would charge each run with every previous run's
             // device time and sink the depth-1 vs depth-2 comparison.
             let mut pod = Pod::new(&artifacts, 3).unwrap();
-            let r = Sebulba::run_on(&mut pod, &cfg).unwrap();
+            let r = exp.run_on(&mut pod).unwrap();
+            let d = r.as_actor_learner().unwrap();
             out = (
-                r.projected_fps,
-                r.fps,
-                r.learner_active_seconds,
-                r.learner_overlap_seconds,
+                r.projected_throughput,
+                r.throughput,
+                d.learner_active_seconds,
+                d.learner_overlap_seconds,
             );
-            r.projected_fps
+            r.projected_throughput
         });
         rows.push((depth, out.0, out.1, out.2, out.3));
     }

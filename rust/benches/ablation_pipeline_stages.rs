@@ -13,7 +13,7 @@
 //! from thread interleaving). See DESIGN.md §2 for the schedule diagram.
 
 use podracer::benchkit::Bench;
-use podracer::coordinator::{Sebulba, SebulbaConfig};
+use podracer::experiment::{Arch, EnvKind, Experiment, Topology};
 use podracer::runtime::Pod;
 
 fn main() -> anyhow::Result<()> {
@@ -28,30 +28,32 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
 
     for &stages in &stage_counts {
-        let cfg = SebulbaConfig {
-            agent: "seb_atari".into(),
-            env_kind: "atari_like", // slow host-side env: what the split exists to hide
-            actor_cores: 1,
-            learner_cores: 2,
-            threads_per_actor_core: 1, // a single thread: overlap must come from the pipeline
-            actor_batch: 64,
-            pipeline_stages: stages,
-            learner_pipeline: 2, // default learner schedule; this sweep is about the actors
-            unroll: 20,
-            micro_batches: 1,
-            discount: 0.99,
-            queue_capacity: 2,
-            env_workers: 2,
-            replicas: 1,
-            total_updates: updates * stages as u64, // same total frames per case
-            seed: 12,
-            copy_path: false,
-        };
+        // slow host-side env (atari_like): what the split exists to hide; a
+        // single actor thread, so overlap must come from the pipeline
+        let exp = Experiment::new(Arch::Sebulba)
+            .artifacts(&artifacts)
+            .agent("seb_atari")
+            .env(EnvKind::AtariLike)
+            .topology(Topology {
+                actor_cores: 1,
+                learner_cores: 2,
+                threads_per_actor_core: 1,
+                pipeline_stages: stages,
+                learner_pipeline: 2, // default learner schedule; this sweep is about the actors
+                queue_capacity: 2,
+                ..Topology::default()
+            })
+            .actor_batch(64)
+            .unroll(20)
+            .updates(updates * stages as u64) // same total frames per case
+            .seed(12)
+            .build()?;
         let mut out = (0.0, 0.0, 0.0);
         bench.case(&format!("pipeline_stages={stages}"), "projected frames/s", || {
-            let r = Sebulba::run_on(&mut pod, &cfg).unwrap();
-            out = (r.projected_fps, r.actor_overlap_seconds, r.actor_env_step_seconds);
-            r.projected_fps
+            let r = exp.run_on(&mut pod).unwrap();
+            let d = r.as_actor_learner().unwrap();
+            out = (r.projected_throughput, d.actor_overlap_seconds, d.actor_env_step_seconds);
+            r.projected_throughput
         });
         rows.push((stages, out.0, out.1, out.2));
     }

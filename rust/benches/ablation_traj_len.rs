@@ -3,7 +3,7 @@
 //! per-update overheads at the price of staler behaviour policies).
 
 use podracer::benchkit::Bench;
-use podracer::coordinator::{Sebulba, SebulbaConfig};
+use podracer::experiment::{Arch, EnvKind, Experiment, Topology};
 use podracer::runtime::Pod;
 
 fn main() -> anyhow::Result<()> {
@@ -18,30 +18,30 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
 
     for &t in &lens {
-        let cfg = SebulbaConfig {
-            agent: "seb_catch".into(),
-            env_kind: "catch",
-            actor_cores: 2,
-            learner_cores: 4, // shard 8: grads lowered for t in {20, 60, 120}
-            threads_per_actor_core: 2,
-            actor_batch: 32,
-            pipeline_stages: 1, // keep the seed geometry: this sweep is about T
-            learner_pipeline: 2, // default learner schedule; this sweep holds it fixed
-            unroll: t,
-            micro_batches: 1,
-            discount: 0.99,
-            queue_capacity: 2,
-            env_workers: 2,
-            replicas: 1,
-            total_updates: updates,
-            seed: 6,
-            copy_path: false,
-        };
+        let exp = Experiment::new(Arch::Sebulba)
+            .artifacts(&artifacts)
+            .agent("seb_catch")
+            .env(EnvKind::Catch)
+            .topology(Topology {
+                actor_cores: 2,
+                learner_cores: 4, // shard 8: grads lowered for t in {20, 60, 120}
+                threads_per_actor_core: 2,
+                pipeline_stages: 1, // keep the seed geometry: this sweep is about T
+                learner_pipeline: 2, // default learner schedule; this sweep holds it fixed
+                queue_capacity: 2,
+                ..Topology::default()
+            })
+            .actor_batch(32)
+            .unroll(t)
+            .updates(updates)
+            .seed(6)
+            .build()?;
         let mut out = (0.0, 0.0, 0.0);
         bench.case(&format!("T={t}"), "frames/s", || {
-            let r = Sebulba::run_on(&mut pod, &cfg).unwrap();
-            out = (r.fps, r.mean_staleness, r.frames as f64 / r.updates as f64);
-            r.fps
+            let r = exp.run_on(&mut pod).unwrap();
+            let d = r.as_actor_learner().unwrap();
+            out = (r.throughput, d.mean_staleness, r.steps as f64 / r.updates as f64);
+            r.throughput
         });
         rows.push((t, out.0, out.1, out.2));
     }

@@ -10,8 +10,8 @@
 //! EXPERIMENTS.md), not an architecture gap: the in-graph fori_loop keeps
 //! Python/Rust off the step path in both.
 
-use podracer::anakin::{Anakin, AnakinConfig, Driver, Mode};
 use podracer::benchkit::Bench;
+use podracer::experiment::{Arch, Experiment, Topology};
 use podracer::runtime::Pod;
 
 fn main() -> anyhow::Result<()> {
@@ -30,19 +30,18 @@ fn main() -> anyhow::Result<()> {
         ("anakin_grid", 1),
         ("anakin_grid", 8),
     ] {
-        let cfg = AnakinConfig {
-            agent: agent.into(),
-            cores,
-            outer_iters: outer,
-            mode: Mode::Bundled,
-            driver: Driver::Threaded,
-            seed: 3,
-        };
+        let exp = Experiment::new(Arch::Anakin)
+            .artifacts(&artifacts)
+            .agent(agent)
+            .topology(Topology::anakin(cores))
+            .updates(outer)
+            .seed(3)
+            .build()?;
         let mut out = (0.0, 0.0);
         bench.case(&format!("{agent} cores={cores}"), "steps/s", || {
-            let r = Anakin::run_on(&mut pod, &cfg).unwrap();
-            out = (r.sps, r.replica_overlap_seconds);
-            r.sps
+            let r = exp.run_on(&mut pod).unwrap();
+            out = (r.throughput, r.as_anakin().unwrap().replica_overlap_seconds);
+            r.throughput
         });
         results.push((agent, cores, out.0, out.1));
     }

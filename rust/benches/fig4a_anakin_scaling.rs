@@ -18,8 +18,9 @@
 //! emitted JSON feeds the CI bench-regression gate (`scripts/bench_gate.py`).
 //! See DESIGN.md §1 (hardware substitution) and EXPERIMENTS.md §Fig4a.
 
-use podracer::anakin::{Anakin, AnakinConfig, Driver, Mode};
+use podracer::anakin::Driver;
 use podracer::benchkit::Bench;
+use podracer::experiment::{Arch, Experiment, Topology};
 use podracer::runtime::Pod;
 use podracer::util::json::Json;
 
@@ -36,21 +37,21 @@ fn main() -> anyhow::Result<()> {
     let mut pod = Pod::new(&artifacts, *core_counts.iter().max().unwrap())?;
 
     for &cores in &core_counts {
-        let cfg = AnakinConfig {
-            agent: "anakin_catch".into(),
-            cores,
-            outer_iters: outer,
-            mode: Mode::Bundled,
-            driver: Driver::Threaded,
-            seed: 1,
-        };
-        let mut last: Option<(f64, f64, f64)> = None;
+        let exp = Experiment::new(Arch::Anakin)
+            .artifacts(&artifacts)
+            .agent("anakin_catch")
+            .topology(Topology::anakin(cores))
+            .updates(outer)
+            .driver(Driver::Threaded)
+            .seed(1)
+            .build()?;
+        let mut last: Option<(f64, f64)> = None;
         bench.case(&format!("cores={cores}"), "steps/s (aggregate wall)", || {
-            let report = Anakin::run_on(&mut pod, &cfg).unwrap();
-            last = Some((report.sps, report.steps as f64, report.replica_overlap_seconds));
-            report.sps
+            let report = exp.run_on(&mut pod).unwrap();
+            last = Some((report.throughput, report.steps as f64));
+            report.throughput
         });
-        let (sps, steps, _overlap) = last.unwrap();
+        let (sps, steps) = last.unwrap();
         rows.push((cores, sps, steps));
     }
 
@@ -61,21 +62,21 @@ fn main() -> anyhow::Result<()> {
     for (slot, driver, name) in
         [(0usize, Driver::Serial, "serial"), (1, Driver::Threaded, "threaded")]
     {
-        let cfg = AnakinConfig {
-            agent: "anakin_catch".into(),
-            cores: COMPARE_CORES,
-            outer_iters: outer,
-            mode: Mode::Bundled,
-            driver,
-            seed: 1,
-        };
+        let exp = Experiment::new(Arch::Anakin)
+            .artifacts(&artifacts)
+            .agent("anakin_catch")
+            .topology(Topology::anakin(COMPARE_CORES))
+            .updates(outer)
+            .driver(driver)
+            .seed(1)
+            .build()?;
         bench.case(
             &format!("driver={name} cores={COMPARE_CORES}"),
             "steps/s (aggregate wall)",
             || {
-                let report = Anakin::run_on(&mut pod, &cfg).unwrap();
-                driver_sps[slot] = report.sps;
-                report.sps
+                let report = exp.run_on(&mut pod).unwrap();
+                driver_sps[slot] = report.throughput;
+                report.throughput
             },
         );
     }

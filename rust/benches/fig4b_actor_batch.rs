@@ -8,7 +8,7 @@
 //! under test.
 
 use podracer::benchkit::Bench;
-use podracer::coordinator::{Sebulba, SebulbaConfig};
+use podracer::experiment::{Arch, EnvKind, Experiment, Topology};
 use podracer::runtime::Pod;
 use podracer::util::json::Json;
 
@@ -26,30 +26,29 @@ fn main() -> anyhow::Result<()> {
     let mut series = Vec::new();
 
     for &batch in batches {
-        let cfg = SebulbaConfig {
-            agent: "seb_atari".into(),
-            env_kind: "atari_like",
-            actor_cores: 2,
-            learner_cores: 4, // shard = batch/4 (grad programs lowered for 8..32)
-            threads_per_actor_core: 1,
-            actor_batch: batch,
-            pipeline_stages: 1, // grad/infer variants are lowered for the full batch sweep
-            learner_pipeline: 2, // default learner schedule; this sweep holds it fixed
-            unroll: 60,
-            micro_batches: 1,
-            discount: 0.99,
-            queue_capacity: 2,
-            env_workers: 2,
-            replicas: 1,
-            total_updates: updates,
-            seed: 9,
-            copy_path: false,
-        };
+        let exp = Experiment::new(Arch::Sebulba)
+            .artifacts(&artifacts)
+            .agent("seb_atari")
+            .env(EnvKind::AtariLike)
+            .topology(Topology {
+                actor_cores: 2,
+                learner_cores: 4, // shard = batch/4 (grad programs lowered for 8..32)
+                threads_per_actor_core: 1,
+                pipeline_stages: 1, // grad/infer variants are lowered for the full batch sweep
+                learner_pipeline: 2, // default learner schedule; this sweep holds it fixed
+                queue_capacity: 2,
+                ..Topology::default()
+            })
+            .actor_batch(batch)
+            .unroll(60)
+            .updates(updates)
+            .seed(9)
+            .build()?;
         let mut fps = 0.0;
         bench.case(&format!("actor_batch={batch}"), "frames/s", || {
-            let report = Sebulba::run_on(&mut pod, &cfg).unwrap();
-            fps = report.fps;
-            report.fps
+            let report = exp.run_on(&mut pod).unwrap();
+            fps = report.throughput;
+            report.throughput
         });
         series.push((batch, fps));
     }

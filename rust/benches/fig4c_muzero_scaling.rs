@@ -6,8 +6,8 @@
 //! + 2 learner), MCTS in Rust, model programs on the actor cores.
 
 use podracer::benchkit::Bench;
+use podracer::experiment::{Arch, EnvKind, Experiment, Topology};
 use podracer::runtime::Pod;
-use podracer::search::{run_muzero, MuZeroRunConfig};
 use podracer::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
@@ -23,29 +23,32 @@ fn main() -> anyhow::Result<()> {
     let mut pod = Pod::new(&artifacts, max_cores)?;
 
     for &replicas in &replica_counts {
-        let cfg = MuZeroRunConfig {
-            agent: "mz_catch".into(),
-            env_kind: "catch",
-            actor_cores: 2,
-            learner_cores: 2,
-            threads_per_actor_core: 1,
-            num_simulations: if fast { 4 } else { 8 },
-            learner_pipeline: 1,
-            discount: 0.997,
-            queue_capacity: 2,
-            env_workers: 2,
-            replicas,
-            total_updates: updates,
-            seed: 4,
-        };
-        let cores = cfg.total_cores();
-        let mut out = (0.0, 0.0);
+        let exp = Experiment::new(Arch::MuZero)
+            .artifacts(&artifacts)
+            .agent("mz_catch")
+            .env(EnvKind::Catch)
+            .topology(Topology {
+                actor_cores: 2,
+                learner_cores: 2,
+                replicas,
+                threads_per_actor_core: 1,
+                pipeline_stages: 1,
+                learner_pipeline: 1,
+                queue_capacity: 2,
+                ..Topology::default()
+            })
+            .num_simulations(if fast { 4 } else { 8 })
+            .updates(updates)
+            .seed(4)
+            .build()?;
+        let cores = exp.topology().total_cores();
+        let mut out = 0.0;
         bench.case(&format!("cores={cores} (replicas={replicas})"), "frames/s", || {
-            let report = run_muzero(&mut pod, &cfg).unwrap();
-            out = (report.fps, report.frames as f64);
-            report.fps
+            let report = exp.run_on(&mut pod).unwrap();
+            out = report.throughput;
+            report.throughput
         });
-        series.push((cores, out.0));
+        series.push((cores, out));
     }
 
     println!("\n| cores | measured aggregate frames/s | efficiency vs 1 replica | projected parallel frames/s |");

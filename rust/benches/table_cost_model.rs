@@ -10,9 +10,8 @@
 //! rate x 1h), and prints our rows next to the paper's.
 
 use podracer::benchkit::Bench;
-use podracer::coordinator::{Sebulba, SebulbaConfig};
+use podracer::experiment::{Arch, EnvKind, Experiment, Topology};
 use podracer::runtime::Pod;
-use podracer::search::{run_muzero, MuZeroRunConfig};
 
 const FRAMES_TARGET: f64 = 200e6;
 /// Paper's cost basis: $2.88 for ~1h on an 8-core preemptible TPU v3.
@@ -28,45 +27,44 @@ fn main() -> anyhow::Result<()> {
 
     // --- model-free V-trace on atari_like (the paper's headline row) ------
     let mut pod = Pod::new(&artifacts, 6)?;
-    let cfg = SebulbaConfig {
-        agent: "seb_atari".into(),
-        env_kind: "atari_like",
-        actor_cores: 2,
-        learner_cores: 4,
-        threads_per_actor_core: 2,
-        actor_batch: 32,
-        pipeline_stages: 2, // the paper's split-batch actors are part of the headline cost
-        learner_pipeline: 2, // double-buffered learner rounds: part of the headline cost
-        unroll: 60,
-        micro_batches: 1,
-        discount: 0.99,
-        queue_capacity: 2,
-        env_workers: 2,
-        replicas: 1,
-        total_updates: updates,
-        seed: 2,
-        copy_path: false,
-    };
+    let exp = Experiment::new(Arch::Sebulba)
+        .artifacts(&artifacts)
+        .agent("seb_atari")
+        .env(EnvKind::AtariLike)
+        .topology(Topology {
+            actor_cores: 2,
+            learner_cores: 4,
+            threads_per_actor_core: 2,
+            pipeline_stages: 2, // the paper's split-batch actors are part of the headline cost
+            learner_pipeline: 2, // double-buffered learner rounds: part of the headline cost
+            queue_capacity: 2,
+            ..Topology::default()
+        })
+        .actor_batch(32)
+        .unroll(60)
+        .updates(updates)
+        .seed(2)
+        .build()?;
     let mut vtrace_fps = 0.0;
     bench.case("sebulba v-trace atari_like (6 cores)", "frames/s", || {
-        let r = Sebulba::run_on(&mut pod, &cfg).unwrap();
-        vtrace_fps = r.fps;
-        r.fps
+        let r = exp.run_on(&mut pod).unwrap();
+        vtrace_fps = r.throughput;
+        r.throughput
     });
     drop(pod);
 
     // --- muzero on catch (search-bound row) --------------------------------
     let mut pod = Pod::new(&artifacts, 4)?;
-    let mz = MuZeroRunConfig {
-        num_simulations: if fast { 4 } else { 8 },
-        total_updates: if fast { 2 } else { 5 },
-        ..Default::default()
-    };
+    let mz = Experiment::new(Arch::MuZero)
+        .artifacts(&artifacts)
+        .num_simulations(if fast { 4 } else { 8 })
+        .updates(if fast { 2 } else { 5 })
+        .build()?;
     let mut mz_fps = 0.0;
     bench.case("sebulba muzero catch (4 cores)", "frames/s", || {
-        let r = run_muzero(&mut pod, &mz).unwrap();
-        mz_fps = r.fps;
-        r.fps
+        let r = mz.run_on(&mut pod).unwrap();
+        mz_fps = r.throughput;
+        r.throughput
     });
 
     // --- the table ----------------------------------------------------------

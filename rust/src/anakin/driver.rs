@@ -15,11 +15,12 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::collective::{all_reduce_mean, TensorBus};
 use crate::coordinator::stats::RunStats;
+use crate::experiment::{AnakinDetail, Arch, Detail, MetricRow, Report};
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::{DeviceHandle, Pod};
 
 use super::replica::{self, ReplicaConfig};
-use super::{AnakinConfig, AnakinReport, MetricRow, Mode};
+use super::{Anakin, Mode};
 
 /// One core's share of the replicated program state.
 pub(super) struct CoreInit {
@@ -48,38 +49,38 @@ pub(super) struct Setup {
     pub busy0: Vec<f64>,
 }
 
-pub(super) fn prepare(pod: &mut Pod, cfg: &AnakinConfig) -> Result<Setup> {
-    anyhow::ensure!(cfg.cores >= 1, "need at least one core");
-    anyhow::ensure!(pod.n_cores() >= cfg.cores, "pod too small");
-    let agent = pod.manifest.agent(&cfg.agent)?.clone();
+pub(super) fn prepare(pod: &mut Pod, run: &Anakin, cores: usize) -> Result<Setup> {
+    anyhow::ensure!(cores >= 1, "need at least one core");
+    anyhow::ensure!(pod.n_cores() >= cores, "pod too small");
+    let agent = pod.manifest.agent(&run.agent)?.clone();
     let batch = agent.extra_usize("batch")?;
     let unroll = agent.extra_usize("unroll")?;
     let iters = agent.extra_usize("iters")?;
 
-    let init = format!("{}_init", cfg.agent);
-    let bundled = format!("{}_bundled", cfg.agent);
-    let psum_grad = format!("{}_psum_grad", cfg.agent);
-    let apply = format!("{}_apply", cfg.agent);
-    let core_ids: Vec<usize> = (0..cfg.cores).collect();
-    match cfg.mode {
+    let init = format!("{}_init", run.agent);
+    let bundled = format!("{}_bundled", run.agent);
+    let psum_grad = format!("{}_psum_grad", run.agent);
+    let apply = format!("{}_apply", run.agent);
+    let core_ids: Vec<usize> = (0..cores).collect();
+    match run.mode {
         Mode::Bundled => pod.load_programs(&[init.as_str(), bundled.as_str()], &core_ids)?,
         Mode::Psum => {
             pod.load_programs(&[init.as_str(), psum_grad.as_str()], &core_ids)?;
             pod.load_program(&apply, &[0])?;
         }
     }
-    let cores = pod.handles_for(&core_ids)?;
-    let busy0 = cores.iter().map(|c| c.busy_seconds()).collect();
+    let handles = pod.handles_for(&core_ids)?;
+    let busy0 = handles.iter().map(|c| c.busy_seconds()).collect();
 
     // Per-core init: same parameters everywhere (core 0's), but each core
     // gets its own env-state batch from its own seed — the vmap'd env
     // batch is what differs across cores on a real pod too.
-    let mut states = Vec::with_capacity(cfg.cores);
+    let mut states = Vec::with_capacity(cores);
     let mut shared_params: Option<HostTensor> = None;
     let mut shared_opt: Option<HostTensor> = None;
-    for (i, core) in cores.iter().enumerate() {
+    for (i, core) in handles.iter().enumerate() {
         let outs = core
-            .execute(&init, vec![HostTensor::scalar_i32((cfg.seed + i as u64) as i32)])
+            .execute(&init, vec![HostTensor::scalar_i32((run.seed + i as u64) as i32)])
             .with_context(|| format!("init on core {i}"))?;
         if shared_params.is_none() {
             shared_params = Some(outs[0].clone());
@@ -95,12 +96,23 @@ pub(super) fn prepare(pod: &mut Pod, cfg: &AnakinConfig) -> Result<Setup> {
 
     // One deterministic program seed per core per outer iteration, drawn up
     // front so both drivers (and every replica thread) see the same table.
-    let mut rng = crate::util::rng::Xoshiro256::from_stream(cfg.seed, 0xA11A);
-    let seeds: Vec<Vec<i32>> = (0..cfg.outer_iters)
-        .map(|_| (0..cfg.cores).map(|_| rng.next_program_seed()).collect())
+    let mut rng = crate::util::rng::Xoshiro256::from_stream(run.seed, 0xA11A);
+    let seeds: Vec<Vec<i32>> = (0..run.outer_iters)
+        .map(|_| (0..cores).map(|_| rng.next_program_seed()).collect())
         .collect();
 
-    Ok(Setup { batch, unroll, iters, bundled, psum_grad, apply, states, seeds, cores, busy0 })
+    Ok(Setup {
+        batch,
+        unroll,
+        iters,
+        bundled,
+        psum_grad,
+        apply,
+        states,
+        seeds,
+        cores: handles,
+        busy0,
+    })
 }
 
 /// Sum a bundled call's `[K, 5]` metric tensor into this core's partial
@@ -130,7 +142,8 @@ pub(super) fn psum_partial_row(m: &HostTensor) -> Result<MetricRow> {
 
 #[allow(clippy::too_many_arguments)]
 fn finish_report(
-    cfg: &AnakinConfig,
+    run: &Anakin,
+    n_cores: usize,
     setup_meta: (usize, usize, usize), // (batch, unroll, iters)
     cores: &[DeviceHandle],
     busy0: &[f64],
@@ -139,13 +152,13 @@ fn finish_report(
     updates: u64,
     metrics: Vec<MetricRow>,
     final_params: Vec<f32>,
-) -> AnakinReport {
+) -> Report {
     let (batch, unroll, iters) = setup_meta;
-    let per_call = match cfg.mode {
+    let per_call = match run.mode {
         Mode::Bundled => batch * unroll * iters,
         Mode::Psum => batch * unroll,
     };
-    let steps = (per_call as u64) * cfg.outer_iters * cfg.cores as u64;
+    let steps = (per_call as u64) * run.outer_iters * n_cores as u64;
     // Critical path: max per-core device busy *of this run* (the baseline
     // subtraction makes `projected_sps` honest on reused pods), lengthened
     // by the exposed replica schedule (DESIGN.md §10).
@@ -154,20 +167,23 @@ fn finish_report(
         critical = critical.max(core.busy_seconds() - b0);
     }
     critical = critical.max(stats.anakin_busy_max_seconds());
-    AnakinReport {
+    Report {
+        arch: Arch::Anakin,
         steps,
         updates,
         elapsed,
-        sps: steps as f64 / elapsed.max(1e-12),
-        projected_sps: steps as f64 / critical,
-        metrics,
+        throughput: steps as f64 / elapsed.max(1e-12),
+        projected_throughput: steps as f64 / critical,
         final_params,
-        replica_device_seconds: stats.anakin_device_seconds(),
-        replica_host_seconds: stats.anakin_host_seconds(),
-        replica_collective_seconds: stats.anakin_collective_seconds(),
-        replica_active_seconds: stats.anakin_active_seconds(),
-        replica_overlap_seconds: stats.anakin_overlap_seconds(),
-        replica_busy_max_seconds: stats.anakin_busy_max_seconds(),
+        detail: Detail::Anakin(AnakinDetail {
+            metrics,
+            replica_device_seconds: stats.anakin_device_seconds(),
+            replica_host_seconds: stats.anakin_host_seconds(),
+            replica_collective_seconds: stats.anakin_collective_seconds(),
+            replica_active_seconds: stats.anakin_active_seconds(),
+            replica_overlap_seconds: stats.anakin_overlap_seconds(),
+            replica_busy_max_seconds: stats.anakin_busy_max_seconds(),
+        }),
     }
 }
 
@@ -177,9 +193,9 @@ fn finish_report(
 /// accounting records one pseudo-replica whose exposed device time is the
 /// recv-blocked spans only, so `replica_overlap_seconds` is ~0 — the
 /// serial schedule hides nothing *of its own*.
-pub(super) fn run_serial(pod: &mut Pod, cfg: &AnakinConfig) -> Result<AnakinReport> {
+pub(super) fn run_serial(pod: &mut Pod, run: &Anakin, n_cores: usize) -> Result<Report> {
     let Setup { batch, unroll, iters, bundled, psum_grad, apply, mut states, seeds, cores, busy0 } =
-        prepare(pod, cfg)?;
+        prepare(pod, run, n_cores)?;
     let stats = RunStats::new();
     let mut metrics_hist: Vec<MetricRow> = Vec::new();
     let mut updates = 0u64;
@@ -189,9 +205,9 @@ pub(super) fn run_serial(pod: &mut Pod, cfg: &AnakinConfig) -> Result<AnakinRepo
     let t0 = Instant::now();
 
     for row_seeds in &seeds {
-        match cfg.mode {
+        match run.mode {
             Mode::Bundled => {
-                let mut waits = Vec::with_capacity(cfg.cores);
+                let mut waits = Vec::with_capacity(n_cores);
                 for (s, &seed) in states.iter().zip(row_seeds) {
                     waits.push(s.core.execute_async(
                         &bundled,
@@ -204,8 +220,8 @@ pub(super) fn run_serial(pod: &mut Pod, cfg: &AnakinConfig) -> Result<AnakinRepo
                     )?);
                 }
                 let mut row = [0.0f64; 5];
-                let mut param_bufs = Vec::with_capacity(cfg.cores);
-                let mut opt_bufs = Vec::with_capacity(cfg.cores);
+                let mut param_bufs = Vec::with_capacity(n_cores);
+                let mut opt_bufs = Vec::with_capacity(n_cores);
                 for (i, (s, rx)) in states.iter_mut().zip(waits).enumerate() {
                     let t_recv = Instant::now();
                     let mut outs = rx
@@ -222,7 +238,7 @@ pub(super) fn run_serial(pod: &mut Pod, cfg: &AnakinConfig) -> Result<AnakinRepo
                     param_bufs.push(outs.swap_remove(0).into_f32()?);
                     let partial = bundled_partial_row(&m)?;
                     for j in 0..5 {
-                        row[j] += partial[j] / cfg.cores as f64;
+                        row[j] += partial[j] / n_cores as f64;
                     }
                     host_busy += t_host.elapsed();
                 }
@@ -243,7 +259,7 @@ pub(super) fn run_serial(pod: &mut Pod, cfg: &AnakinConfig) -> Result<AnakinRepo
                 updates += iters as u64;
             }
             Mode::Psum => {
-                let mut waits = Vec::with_capacity(cfg.cores);
+                let mut waits = Vec::with_capacity(n_cores);
                 for (s, &seed) in states.iter().zip(row_seeds) {
                     waits.push(s.core.execute_async(
                         &psum_grad,
@@ -255,7 +271,7 @@ pub(super) fn run_serial(pod: &mut Pod, cfg: &AnakinConfig) -> Result<AnakinRepo
                         ],
                     )?);
                 }
-                let mut grad_bufs = Vec::with_capacity(cfg.cores);
+                let mut grad_bufs = Vec::with_capacity(n_cores);
                 let mut row = [0.0f64; 5];
                 for (i, (s, rx)) in states.iter_mut().zip(waits).enumerate() {
                     let t_recv = Instant::now();
@@ -272,7 +288,7 @@ pub(super) fn run_serial(pod: &mut Pod, cfg: &AnakinConfig) -> Result<AnakinRepo
                     grad_bufs.push(outs.swap_remove(0).into_f32()?);
                     let partial = psum_partial_row(&m)?;
                     for j in 0..5 {
-                        row[j] += partial[j] / cfg.cores as f64;
+                        row[j] += partial[j] / n_cores as f64;
                     }
                     host_busy += t_host.elapsed();
                 }
@@ -305,7 +321,8 @@ pub(super) fn run_serial(pod: &mut Pod, cfg: &AnakinConfig) -> Result<AnakinRepo
     stats.record_anakin_overlap(device_busy, collective_busy, host_busy, t0.elapsed());
     let final_params = states.swap_remove(0).params.into_f32()?;
     Ok(finish_report(
-        cfg,
+        run,
+        n_cores,
         (batch, unroll, iters),
         &cores,
         &busy0,
@@ -321,18 +338,18 @@ pub(super) fn run_serial(pod: &mut Pod, cfg: &AnakinConfig) -> Result<AnakinRepo
 /// the [`TensorBus`] (deterministic reduction order => bit-exact vs the
 /// serial schedule), host conversion and metric accumulation parallel
 /// across replicas and overlapping the next device call (DESIGN.md §10).
-pub(super) fn run_threaded(pod: &mut Pod, cfg: &AnakinConfig) -> Result<AnakinReport> {
+pub(super) fn run_threaded(pod: &mut Pod, run: &Anakin, n_cores: usize) -> Result<Report> {
     let Setup { batch, unroll, iters, bundled, psum_grad, apply, states, seeds, cores, busy0 } =
-        prepare(pod, cfg)?;
+        prepare(pod, run, n_cores)?;
     let stats = Arc::new(RunStats::new());
-    let bus = Arc::new(TensorBus::new(cfg.cores));
+    let bus = Arc::new(TensorBus::new(n_cores));
     let t0 = Instant::now();
 
-    let mut joins = Vec::with_capacity(cfg.cores);
+    let mut joins = Vec::with_capacity(n_cores);
     for (i, st) in states.into_iter().enumerate() {
         let rcfg = ReplicaConfig {
             replica_id: i,
-            mode: cfg.mode,
+            mode: run.mode,
             bundled: bundled.clone(),
             psum_grad: psum_grad.clone(),
             apply: apply.clone(),
@@ -346,7 +363,7 @@ pub(super) fn run_threaded(pod: &mut Pod, cfg: &AnakinConfig) -> Result<AnakinRe
     // (see `spawn_replica`'s guard), so in-order joins cannot deadlock on a
     // sibling parked in a collective; the first joined error may be a
     // secondary "bus shut down" from that unblocking, not the root cause.
-    let mut outs: Vec<Option<replica::ReplicaOut>> = Vec::with_capacity(cfg.cores);
+    let mut outs: Vec<Option<replica::ReplicaOut>> = Vec::with_capacity(n_cores);
     let mut err: Option<anyhow::Error> = None;
     for (i, j) in joins.into_iter().enumerate() {
         match j.join() {
@@ -380,22 +397,23 @@ pub(super) fn run_threaded(pod: &mut Pod, cfg: &AnakinConfig) -> Result<AnakinRe
     // bit-exact — DESIGN.md §10).
     let replicas: Vec<replica::ReplicaOut> =
         outs.into_iter().map(|o| o.expect("no error => every replica returned")).collect();
-    let outer = cfg.outer_iters as usize;
+    let outer = run.outer_iters as usize;
     let mut metrics_hist = vec![[0.0f64; 5]; outer];
     for rep in &replicas {
         for (o, row) in rep.metrics_partial.iter().enumerate() {
             for j in 0..5 {
-                metrics_hist[o][j] += row[j] / cfg.cores as f64;
+                metrics_hist[o][j] += row[j] / n_cores as f64;
             }
         }
     }
-    let updates = match cfg.mode {
-        Mode::Bundled => iters as u64 * cfg.outer_iters,
-        Mode::Psum => cfg.outer_iters,
+    let updates = match run.mode {
+        Mode::Bundled => iters as u64 * run.outer_iters,
+        Mode::Psum => run.outer_iters,
     };
     let final_params = replicas.into_iter().next().expect("at least one replica").final_params;
     Ok(finish_report(
-        cfg,
+        run,
+        n_cores,
         (batch, unroll, iters),
         &cores,
         &busy0,

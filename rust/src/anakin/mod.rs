@@ -36,15 +36,31 @@ mod driver;
 mod replica;
 
 use std::path::Path;
+use std::str::FromStr;
 
 use anyhow::Result;
 
+use crate::experiment::{Arch, Report, Runner, Topology};
 use crate::runtime::Pod;
+
+pub use crate::experiment::MetricRow;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Mode {
     Bundled,
     Psum,
+}
+
+impl FromStr for Mode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "bundled" => Ok(Mode::Bundled),
+            "psum" => Ok(Mode::Psum),
+            other => anyhow::bail!("unknown mode {other:?} (valid: bundled, psum)"),
+        }
+    }
 }
 
 /// Which host-side schedule drives the replicated program (DESIGN.md §10).
@@ -56,7 +72,105 @@ pub enum Driver {
     Threaded,
 }
 
-#[derive(Clone, Debug)]
+impl FromStr for Driver {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "serial" => Ok(Driver::Serial),
+            "threaded" => Ok(Driver::Threaded),
+            other => anyhow::bail!("unknown driver {other:?} (valid: threaded, serial)"),
+        }
+    }
+}
+
+/// The Anakin *workload*: everything about a run except how many cores
+/// replicate it — that arrives as a [`Topology`] through the [`Runner`]
+/// trait (Anakin has no actor/learner split, so only
+/// `Topology::total_cores()` matters: every core runs the fused
+/// act+learn program). Reached through
+/// `experiment::Experiment::new(Arch::Anakin)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Anakin {
+    /// Agent tag in the manifest ("anakin_catch", "anakin_grid").
+    pub agent: String,
+    pub mode: Mode,
+    pub driver: Driver,
+    /// Outer driver iterations (each = K in-graph updates in Bundled mode,
+    /// 1 update in Psum mode).
+    pub outer_iters: u64,
+    pub seed: u64,
+}
+
+impl Default for Anakin {
+    fn default() -> Self {
+        let cfg = AnakinConfig::default();
+        Self {
+            agent: cfg.agent,
+            mode: cfg.mode,
+            driver: cfg.driver,
+            outer_iters: cfg.outer_iters,
+            seed: cfg.seed,
+        }
+    }
+}
+
+impl Runner for Anakin {
+    fn arch(&self) -> Arch {
+        Arch::Anakin
+    }
+
+    fn run(&self, pod: &mut Pod, topo: &Topology) -> Result<Report> {
+        Anakin::check_topology(topo)?;
+        topo.validate_for_pod(pod.n_cores())?;
+        let cores = topo.total_cores();
+        match self.driver {
+            Driver::Serial => driver::run_serial(pod, self, cores),
+            Driver::Threaded => driver::run_threaded(pod, self, cores),
+        }
+    }
+}
+
+impl Anakin {
+    /// Anakin consumes only `Topology::total_cores()` — every other knob
+    /// describes a host-side acting path it does not have, so a
+    /// non-trivial value is a hard error, never a silently dropped knob
+    /// (the coercion class the experiment API retires). Shared by the
+    /// builder and direct `Runner` users.
+    pub fn check_topology(topo: &Topology) -> Result<()> {
+        let trivial = Topology { learner_cores: topo.learner_cores, ..Topology::anakin(0) };
+        if *topo != trivial {
+            anyhow::bail!(
+                "anakin has no actor/learner split or host pipelines: build its topology \
+                 with Topology::anakin(cores) (got {topo:?})"
+            );
+        }
+        Ok(())
+    }
+
+    /// Build a pod sized for `cfg` and run to completion.
+    #[deprecated(note = "one-PR migration shim: use experiment::Experiment::new(Arch::Anakin)")]
+    pub fn run(artifacts: &Path, cfg: &AnakinConfig) -> Result<Report> {
+        let mut pod = Pod::new(artifacts, cfg.cores)?;
+        legacy_run_on(&mut pod, cfg)
+    }
+
+    /// Run on an existing pod (must have >= cfg.cores cores).
+    #[deprecated(note = "one-PR migration shim: use experiment::Experiment::new(Arch::Anakin)")]
+    pub fn run_on(pod: &mut Pod, cfg: &AnakinConfig) -> Result<Report> {
+        legacy_run_on(pod, cfg)
+    }
+}
+
+fn legacy_run_on(pod: &mut Pod, cfg: &AnakinConfig) -> Result<Report> {
+    let runner = cfg.runner();
+    let topo = cfg.topology();
+    Runner::run(&runner, pod, &topo)
+}
+
+/// The pre-experiment-API config (workload + core count in one struct) —
+/// accepted by the deprecated legacy entrypoints for one PR.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct AnakinConfig {
     /// Agent tag in the manifest ("anakin_catch", "anakin_grid").
     pub agent: String,
@@ -83,57 +197,22 @@ impl Default for AnakinConfig {
     }
 }
 
-/// Per-outer-iteration metrics, averaged over cores and in-graph updates:
-/// `[loss, pg_loss, baseline_loss, entropy, episode_reward]`.
-pub type MetricRow = [f64; 5];
-
-#[derive(Debug)]
-pub struct AnakinReport {
-    /// Total environment steps across all cores.
-    pub steps: u64,
-    pub updates: u64,
-    pub elapsed: f64,
-    /// Wall-clock environment steps/sec.
-    pub sps: f64,
-    /// Steps/sec if cores ran truly in parallel: steps / critical path,
-    /// where the critical path is the max per-core busy time *of this run*
-    /// lengthened by the max per-replica post-overlap busy time
-    /// (DESIGN.md §10 — an exposed driver schedule bounds the run even on
-    /// truly parallel cores).
-    pub projected_sps: f64,
-    pub metrics: Vec<MetricRow>,
-    pub final_params: Vec<f32>,
-    /// Device time the replica schedule was exposed to, summed over
-    /// replicas: recv-blocked harvest spans (at overlap a span covers host
-    /// work issued under it) plus replica 0's Psum apply.
-    pub replica_device_seconds: f64,
-    /// Host conversion + metric accumulation time, summed over replicas.
-    pub replica_host_seconds: f64,
-    /// Collective time (bus wait + reduction), summed over replicas.
-    pub replica_collective_seconds: f64,
-    /// Active wall per replica (loop wall minus collective wait), summed.
-    pub replica_active_seconds: f64,
-    /// Work the threaded schedule hid: per replica,
-    /// `max(0, device + host − active)`. ~0 under the serial driver.
-    pub replica_overlap_seconds: f64,
-    /// Max per-replica busy time `min(device + host, active)` — the
-    /// critical-path contribution `projected_sps` divides by.
-    pub replica_busy_max_seconds: f64,
-}
-
-pub struct Anakin;
-
-impl Anakin {
-    pub fn run(artifacts: &Path, cfg: &AnakinConfig) -> Result<AnakinReport> {
-        let mut pod = Pod::new(artifacts, cfg.cores)?;
-        Self::run_on(&mut pod, cfg)
+impl AnakinConfig {
+    /// The workload half, as the [`Anakin`] runner.
+    /// `runner()` + `topology()` carry every field.
+    pub fn runner(&self) -> Anakin {
+        Anakin {
+            agent: self.agent.clone(),
+            mode: self.mode,
+            driver: self.driver,
+            outer_iters: self.outer_iters,
+            seed: self.seed,
+        }
     }
 
-    pub fn run_on(pod: &mut Pod, cfg: &AnakinConfig) -> Result<AnakinReport> {
-        match cfg.driver {
-            Driver::Serial => driver::run_serial(pod, cfg),
-            Driver::Threaded => driver::run_threaded(pod, cfg),
-        }
+    /// The core-count half, as the experiment API's typed [`Topology`].
+    pub fn topology(&self) -> Topology {
+        Topology::anakin(self.cores)
     }
 }
 

@@ -1,13 +1,25 @@
-//! Sebulba run configuration.
+//! The resolved Sebulba run configuration.
+//!
+//! Since the `experiment` API landed (DESIGN.md §12) this is an *internal*
+//! resolved form: `experiment::Experiment` merges a [`super::Sebulba`]
+//! workload with a [`Topology`] into one `SebulbaConfig` before spawning
+//! anything, and the deprecated legacy entrypoints still accept it
+//! directly for one PR. `runner()`/`topology()` split it back — the
+//! round-trip is pinned by tests below.
 
 use anyhow::{bail, Result};
 
-#[derive(Clone, Debug)]
+use crate::experiment::{EnvKind, Topology};
+
+use super::sebulba::Sebulba;
+
+#[derive(Clone, Debug, PartialEq)]
 pub struct SebulbaConfig {
     /// Agent tag in the artifact manifest (e.g. "seb_catch", "seb_atari").
     pub agent: String,
-    /// Host environment kind (see `envs::make_factory`).
-    pub env_kind: &'static str,
+    /// Host environment kind (typed — see `experiment::EnvKind`;
+    /// `envs::make_factory` is infallible given one).
+    pub env_kind: EnvKind,
     /// Actor cores per replica (paper: `A`).
     pub actor_cores: usize,
     /// Learner cores per replica (paper: `8 - A`).
@@ -59,7 +71,7 @@ impl Default for SebulbaConfig {
     fn default() -> Self {
         Self {
             agent: "seb_catch".into(),
-            env_kind: "catch",
+            env_kind: EnvKind::Catch,
             actor_cores: 2,
             learner_cores: 2,
             threads_per_actor_core: 2,
@@ -86,6 +98,38 @@ impl SebulbaConfig {
 
     pub fn total_cores(&self) -> usize {
         self.cores_per_replica() * self.replicas
+    }
+
+    /// The core-split half of this config, as the experiment API's typed
+    /// [`Topology`].
+    pub fn topology(&self) -> Topology {
+        Topology {
+            actor_cores: self.actor_cores,
+            learner_cores: self.learner_cores,
+            replicas: self.replicas,
+            threads_per_actor_core: self.threads_per_actor_core,
+            pipeline_stages: self.pipeline_stages,
+            learner_pipeline: self.learner_pipeline,
+            env_workers: self.env_workers,
+            queue_capacity: self.queue_capacity,
+        }
+    }
+
+    /// The workload half of this config, as the [`Sebulba`] runner.
+    /// `runner().resolved(&topology())` reproduces `self` exactly.
+    pub fn runner(&self) -> Sebulba {
+        Sebulba {
+            agent: self.agent.clone(),
+            env_kind: self.env_kind,
+            actor_batch: self.actor_batch,
+            unroll: self.unroll,
+            micro_batches: self.micro_batches,
+            discount: self.discount,
+            total_updates: self.total_updates,
+            seed: self.seed,
+            copy_path: self.copy_path,
+            warm_start: None,
+        }
     }
 
     /// Environments per pipeline stage: what one inference call batches and
@@ -121,20 +165,12 @@ impl SebulbaConfig {
     }
 
     pub fn validate(&self) -> Result<()> {
-        if self.actor_cores == 0 || self.learner_cores == 0 {
-            bail!("need at least one actor core and one learner core");
-        }
-        if self.threads_per_actor_core == 0 {
-            bail!("threads_per_actor_core must be >= 1");
-        }
+        // structural checks are shared with every architecture through the
+        // topology; the geometry below is Sebulba-specific
+        self.topology().validate()?;
+        self.topology().require_split()?;
         if self.micro_batches == 0 {
             bail!("micro_batches must be >= 1");
-        }
-        if self.pipeline_stages == 0 {
-            bail!("pipeline_stages must be >= 1 (1 = synchronous actor)");
-        }
-        if self.learner_pipeline == 0 {
-            bail!("learner_pipeline must be >= 1 (1 = serial learner)");
         }
         if self.actor_batch % self.pipeline_stages != 0 {
             bail!(
@@ -154,10 +190,6 @@ impl SebulbaConfig {
                 shards
             );
         }
-        if self.replicas == 0 {
-            bail!("replicas must be >= 1");
-        }
-        crate::envs::validate_kind(self.env_kind)?;
         Ok(())
     }
 }
@@ -249,11 +281,19 @@ mod tests {
         assert!(bad.validate().is_err());
         let bad = SebulbaConfig { learner_cores: 0, ..Default::default() };
         assert!(bad.validate().is_err());
+        let bad = SebulbaConfig { actor_cores: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
         let bad = SebulbaConfig { threads_per_actor_core: 0, ..Default::default() };
         assert!(bad.validate().is_err());
         let bad = SebulbaConfig { pipeline_stages: 0, ..Default::default() };
         assert!(bad.validate().is_err());
         let bad = SebulbaConfig { learner_pipeline: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = SebulbaConfig { replicas: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = SebulbaConfig { queue_capacity: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = SebulbaConfig { env_workers: 0, ..Default::default() };
         assert!(bad.validate().is_err());
         // 32 envs cannot split into 3 equal stages
         let bad = SebulbaConfig { pipeline_stages: 3, ..Default::default() };
@@ -266,8 +306,31 @@ mod tests {
             ..Default::default()
         };
         assert!(bad.validate().is_err());
-        // unknown env kinds fail at validation, not inside a worker thread
-        let bad = SebulbaConfig { env_kind: "pong", ..Default::default() };
-        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn runner_topology_roundtrip_is_lossless() {
+        // The experiment API splits a resolved config into (workload,
+        // topology) and re-merges at run time; every field must survive.
+        let cfg = SebulbaConfig {
+            agent: "seb_atari".into(),
+            env_kind: EnvKind::AtariLike,
+            actor_cores: 1,
+            learner_cores: 4,
+            threads_per_actor_core: 3,
+            actor_batch: 64,
+            pipeline_stages: 2,
+            learner_pipeline: 1,
+            unroll: 60,
+            micro_batches: 2,
+            discount: 0.95,
+            queue_capacity: 7,
+            env_workers: 5,
+            replicas: 2,
+            total_updates: 9,
+            seed: 1234,
+            copy_path: true,
+        };
+        assert_eq!(cfg.runner().resolved(&cfg.topology()), cfg);
     }
 }

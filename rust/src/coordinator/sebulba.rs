@@ -8,6 +8,9 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::envs::{make_factory, WorkerPool};
+use crate::experiment::{
+    ActorLearnerDetail, Arch, Detail, EnvKind, Report, Runner, Topology,
+};
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::{DeviceHandle, Pod};
 
@@ -18,63 +21,6 @@ use super::learner::{learner_main, LearnerConfig, LearnerHandles};
 use super::param_store::ParamStore;
 use super::queue::BoundedQueue;
 use super::stats::RunStats;
-
-/// What a run produced (numbers feed the benches and EXPERIMENTS.md).
-#[derive(Debug)]
-pub struct RunReport {
-    pub frames: u64,
-    pub updates: u64,
-    pub elapsed: f64,
-    /// Wall-clock frames/sec (single-CPU testbed: all cores time-share).
-    pub fps: f64,
-    /// Projected frames/sec if the simulated cores ran truly in parallel
-    /// (frames / critical-path busy time). This is the number comparable
-    /// across core counts on the 1-CPU testbed — see DESIGN.md §1.
-    pub projected_fps: f64,
-    pub mean_staleness: f64,
-    pub mean_episode_reward: f64,
-    pub episodes: u64,
-    pub last_loss: f32,
-    pub actor_busy_seconds: f64,
-    pub learner_busy_seconds: f64,
-    /// Device time actor threads spent on inference (issue → harvest).
-    pub actor_infer_seconds: f64,
-    /// Host time actor threads spent stepping environments through the
-    /// worker pool (submission → last worker completion).
-    pub actor_env_step_seconds: f64,
-    /// Actor hot-loop wall time, excluding trajectory-queue backpressure.
-    pub actor_loop_seconds: f64,
-    /// Work the split-batch pipeline hid: per actor thread,
-    /// `max(0, infer + env_step − loop_wall)` (DESIGN.md §2). ~0 when
-    /// `pipeline_stages = 1`; grows with the overlap the schedule achieves.
-    pub actor_overlap_seconds: f64,
-    /// Device span of learner grad rounds (issue → harvest; includes device
-    /// queueing when pipelined rounds overlap — DESIGN.md §9).
-    pub learner_grad_seconds: f64,
-    /// Host time in the collective (tree mean + GradientBus wait).
-    pub learner_collective_seconds: f64,
-    /// Apply-program spans (issue → new params on host). At
-    /// `learner_pipeline ≥ 2` the span includes core-0 queueing behind the
-    /// next round's already-issued grad, so it overstates the apply's own
-    /// cost (DESIGN.md §9).
-    pub learner_apply_seconds: f64,
-    /// Learner hot-loop wall time, excluding queue starvation (pop waits
-    /// are the actor side's deficit). The max over learner threads is a
-    /// critical-path candidate for `projected_fps`.
-    pub learner_active_seconds: f64,
-    /// Overlap indicator: per learner thread,
-    /// `max(0, grad + collective + apply − active)`. ~0 when
-    /// `learner_pipeline = 1`; positive when rounds coexist. Spans of
-    /// coexisting rounds cover the same wall intervals, so this
-    /// upper-bounds hidden seconds — the exact saving is the drop in
-    /// `learner_active_seconds` vs the serial schedule (DESIGN.md §9).
-    pub learner_overlap_seconds: f64,
-    pub queue_push_block_seconds: f64,
-    pub queue_pop_block_seconds: f64,
-    pub final_params: Vec<f32>,
-    /// Optimiser state of replica 0's learner (for warm-starting).
-    pub final_opt_state: Vec<f32>,
-}
 
 /// Wake every thread parked on the pod's seams: set the stop flag, shut all
 /// trajectory queues, shut the gradient bus. Idempotent; called by a failing
@@ -203,224 +149,313 @@ pub(crate) fn join_pod_threads(
     Ok(replica0)
 }
 
-pub struct Sebulba;
+/// The Sebulba *workload*: everything about a run except the core split,
+/// which arrives as a [`Topology`] through the [`Runner`] trait. Reached
+/// through `experiment::Experiment::new(Arch::Sebulba)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sebulba {
+    /// Agent tag in the artifact manifest.
+    pub agent: String,
+    /// Host environment (typed — unknown names fail at parse time).
+    pub env_kind: EnvKind,
+    /// Environments per actor thread (Fig 4b's actor batch).
+    pub actor_batch: usize,
+    /// Trajectory length T.
+    pub unroll: usize,
+    /// Sequential updates per trajectory.
+    pub micro_batches: usize,
+    pub discount: f32,
+    /// Learner updates per replica.
+    pub total_updates: u64,
+    pub seed: u64,
+    /// Materializing data-path oracle (DESIGN.md §11).
+    pub copy_path: bool,
+    /// Optional `(params, opt_state)` from a previous run — stages long
+    /// trainings with intermediate reports (`examples/sebulba_atari.rs`).
+    pub warm_start: Option<(Vec<f32>, Vec<f32>)>,
+}
+
+impl Default for Sebulba {
+    fn default() -> Self {
+        let cfg = SebulbaConfig::default();
+        Self {
+            agent: cfg.agent,
+            env_kind: cfg.env_kind,
+            actor_batch: cfg.actor_batch,
+            unroll: cfg.unroll,
+            micro_batches: cfg.micro_batches,
+            discount: cfg.discount,
+            total_updates: cfg.total_updates,
+            seed: cfg.seed,
+            copy_path: cfg.copy_path,
+            warm_start: None,
+        }
+    }
+}
+
+impl Runner for Sebulba {
+    fn arch(&self) -> Arch {
+        Arch::Sebulba
+    }
+
+    fn run(&self, pod: &mut Pod, topo: &Topology) -> Result<Report> {
+        run_resolved(pod, &self.resolved(topo), self.warm_start.clone())
+    }
+}
 
 impl Sebulba {
+    /// Merge this workload with a core split into the resolved config the
+    /// coordinator spawns from.
+    pub fn resolved(&self, topo: &Topology) -> SebulbaConfig {
+        SebulbaConfig {
+            agent: self.agent.clone(),
+            env_kind: self.env_kind,
+            actor_cores: topo.actor_cores,
+            learner_cores: topo.learner_cores,
+            threads_per_actor_core: topo.threads_per_actor_core,
+            actor_batch: self.actor_batch,
+            pipeline_stages: topo.pipeline_stages,
+            learner_pipeline: topo.learner_pipeline,
+            unroll: self.unroll,
+            micro_batches: self.micro_batches,
+            discount: self.discount,
+            queue_capacity: topo.queue_capacity,
+            env_workers: topo.env_workers,
+            replicas: topo.replicas,
+            total_updates: self.total_updates,
+            seed: self.seed,
+            copy_path: self.copy_path,
+        }
+    }
+
     /// Build a pod sized for `cfg` and run to completion.
-    pub fn run(artifacts: &std::path::Path, cfg: &SebulbaConfig) -> Result<RunReport> {
+    #[deprecated(note = "one-PR migration shim: use experiment::Experiment::new(Arch::Sebulba)")]
+    pub fn run(artifacts: &std::path::Path, cfg: &SebulbaConfig) -> Result<Report> {
         cfg.validate()?;
         let mut pod = Pod::new(artifacts, cfg.total_cores())?;
-        Self::run_on(&mut pod, cfg)
+        run_resolved(&mut pod, cfg, None)
     }
 
     /// Run on an existing pod (must have >= cfg.total_cores() cores).
-    pub fn run_on(pod: &mut Pod, cfg: &SebulbaConfig) -> Result<RunReport> {
-        Self::run_on_with(pod, cfg, None)
+    #[deprecated(note = "one-PR migration shim: use experiment::Experiment::new(Arch::Sebulba)")]
+    pub fn run_on(pod: &mut Pod, cfg: &SebulbaConfig) -> Result<Report> {
+        run_resolved(pod, cfg, None)
     }
 
-    /// Like [`Self::run_on`], but optionally warm-starting from
-    /// `(params, opt_state)` of a previous run — lets drivers stage long
-    /// trainings and report intermediate curves.
+    /// Like `run_on`, but optionally warm-starting from `(params,
+    /// opt_state)` of a previous run.
+    #[deprecated(
+        note = "one-PR migration shim: use experiment::ExperimentBuilder::warm_start"
+    )]
     pub fn run_on_with(
         pod: &mut Pod,
         cfg: &SebulbaConfig,
         warm: Option<(Vec<f32>, Vec<f32>)>,
-    ) -> Result<RunReport> {
-        cfg.validate()?;
-        let agent = pod.manifest.agent(&cfg.agent)?.clone();
-        let obs_shape = agent.obs_shape.clone();
-        let num_actions = agent.num_actions;
+    ) -> Result<Report> {
+        run_resolved(pod, cfg, warm)
+    }
+}
 
-        let n_per = cfg.cores_per_replica();
-        anyhow::ensure!(
-            pod.n_cores() >= cfg.total_cores(),
-            "pod has {} cores, config wants {}",
-            pod.n_cores(),
-            cfg.total_cores()
-        );
+/// The coordinator proper: validate, wire the pod, spawn actors + learners,
+/// run to the update target, shut down cleanly, report.
+pub(crate) fn run_resolved(
+    pod: &mut Pod,
+    cfg: &SebulbaConfig,
+    warm: Option<(Vec<f32>, Vec<f32>)>,
+) -> Result<Report> {
+    cfg.validate()?;
+    cfg.topology().validate_for_pod(pod.n_cores())?;
+    let agent = pod.manifest.agent(&cfg.agent)?.clone();
+    let obs_shape = agent.obs_shape.clone();
+    let num_actions = agent.num_actions;
 
-        // ---- program loading ------------------------------------------------
-        let infer = cfg.infer_program();
-        let grad = cfg.grad_program();
-        let apply = cfg.apply_program();
-        let init = cfg.init_program();
+    let n_per = cfg.cores_per_replica();
 
-        let mut actor_core_ids = Vec::new();
-        let mut learner_core_ids = Vec::new();
-        let mut learner0_ids = Vec::new();
-        for r in 0..cfg.replicas {
-            let base = r * n_per;
-            actor_core_ids.extend(base..base + cfg.actor_cores);
-            learner_core_ids
-                .extend(base + cfg.actor_cores..base + cfg.actor_cores + cfg.learner_cores);
-            learner0_ids.push(base + cfg.actor_cores);
+    // ---- program loading ------------------------------------------------
+    let infer = cfg.infer_program();
+    let grad = cfg.grad_program();
+    let apply = cfg.apply_program();
+    let init = cfg.init_program();
+
+    let mut actor_core_ids = Vec::new();
+    let mut learner_core_ids = Vec::new();
+    let mut learner0_ids = Vec::new();
+    for r in 0..cfg.replicas {
+        let base = r * n_per;
+        actor_core_ids.extend(base..base + cfg.actor_cores);
+        learner_core_ids
+            .extend(base + cfg.actor_cores..base + cfg.actor_cores + cfg.learner_cores);
+        learner0_ids.push(base + cfg.actor_cores);
+    }
+    pod.load_program(&infer, &actor_core_ids)
+        .with_context(|| format!("loading {infer}"))?;
+    pod.load_program(&grad, &learner_core_ids)
+        .with_context(|| format!("loading {grad}"))?;
+    pod.load_program(&apply, &learner0_ids)?;
+    pod.load_program(&init, &[learner0_ids[0]])?;
+
+    // Pre-run busy baseline, taken before this run executes anything:
+    // on a shared or warm-started pod (`run_on_with` staged trainings)
+    // the cores' cumulative busy counters include previous runs' device
+    // time, and charging it to this run inflated
+    // `actor/learner_busy_seconds` and deflated `projected_fps` — the
+    // same reused-pod bug PR 3 fixed for Anakin's `projected_sps`.
+    let busy0: Vec<f64> = (0..cfg.total_cores())
+        .map(|cid| Ok(pod.core(cid)?.busy_seconds()))
+        .collect::<Result<_>>()?;
+
+    // ---- init params (or warm start) -------------------------------------
+    let (params0, opt0) = match warm {
+        Some((p, o)) => (p, o),
+        None => {
+            let outs = pod
+                .core(learner0_ids[0])?
+                .execute(&init, vec![HostTensor::scalar_i32(cfg.seed as i32)])?;
+            (outs[0].clone().into_f32()?, outs[1].clone().into_f32()?)
         }
-        pod.load_program(&infer, &actor_core_ids)
-            .with_context(|| format!("loading {infer}"))?;
-        pod.load_program(&grad, &learner_core_ids)
-            .with_context(|| format!("loading {grad}"))?;
-        pod.load_program(&apply, &learner0_ids)?;
-        pod.load_program(&init, &[learner0_ids[0]])?;
+    };
+    log::info!(
+        "sebulba[{}]: params={} opt={} replicas={} cores={}A+{}L batch={}x{} T={} lpipe={}",
+        cfg.agent,
+        params0.len(),
+        opt0.len(),
+        cfg.replicas,
+        cfg.actor_cores,
+        cfg.learner_cores,
+        cfg.pipeline_stages,
+        cfg.stage_batch(),
+        cfg.unroll,
+        cfg.learner_pipeline
+    );
 
-        // Pre-run busy baseline, taken before this run executes anything:
-        // on a shared or warm-started pod (`run_on_with` staged trainings)
-        // the cores' cumulative busy counters include previous runs' device
-        // time, and charging it to this run inflated
-        // `actor/learner_busy_seconds` and deflated `projected_fps` — the
-        // same reused-pod bug PR 3 fixed for Anakin's `projected_sps`.
-        let busy0: Vec<f64> = (0..cfg.total_cores())
-            .map(|cid| Ok(pod.core(cid)?.busy_seconds()))
-            .collect::<Result<_>>()?;
+    // ---- shared state ----------------------------------------------------
+    let stats = Arc::new(RunStats::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let bus = Arc::new(GradientBus::new(cfg.replicas));
+    let factory: Arc<crate::envs::EnvFactory> =
+        Arc::new(make_factory(cfg.env_kind, cfg.seed));
 
-        // ---- init params (or warm start) -------------------------------------
-        let (params0, opt0) = match warm {
-            Some((p, o)) => (p, o),
-            None => {
-                let outs = pod
-                    .core(learner0_ids[0])?
-                    .execute(&init, vec![HostTensor::scalar_i32(cfg.seed as i32)])?;
-                (outs[0].clone().into_f32()?, outs[1].clone().into_f32()?)
+    let mut actor_joins = Vec::new();
+    let mut learner_joins = Vec::new();
+    // All queues exist up front so a failing learner can unblock every
+    // replica's threads, not just its own (see the spawn below).
+    let queues: Vec<Arc<BoundedQueue<ShardBundle>>> = (0..cfg.replicas)
+        .map(|_| Arc::new(BoundedQueue::<ShardBundle>::new(cfg.queue_capacity)))
+        .collect();
+    let t_start = Instant::now();
+
+    for r in 0..cfg.replicas {
+        let base = r * n_per;
+        let store = Arc::new(ParamStore::new(params0.clone()));
+        let queue = queues[r].clone();
+        let pool = WorkerPool::new(cfg.env_workers);
+
+        // actors: threads_per_actor_core per actor core
+        for ac in 0..cfg.actor_cores {
+            let core = pod.core(base + ac)?;
+            for th in 0..cfg.threads_per_actor_core {
+                let actor_id = (r * cfg.actor_cores + ac) * cfg.threads_per_actor_core + th;
+                let acfg = ActorConfig {
+                    actor_id,
+                    batch: cfg.actor_batch,
+                    pipeline_stages: cfg.pipeline_stages,
+                    unroll: cfg.unroll,
+                    discount: cfg.discount,
+                    num_shards: cfg.learner_cores * cfg.micro_batches,
+                    infer_program: infer.clone(),
+                    obs_shape: obs_shape.clone(),
+                    num_actions,
+                    seed: cfg.seed,
+                    copy_path: cfg.copy_path,
+                };
+                actor_joins.push(spawn_actor(
+                    acfg,
+                    core.clone(),
+                    factory.clone(),
+                    pool.clone(),
+                    store.clone(),
+                    queue.clone(),
+                    stats.clone(),
+                    stop.clone(),
+                ));
             }
+        }
+
+        // learner thread per replica
+        let lcfg = LearnerConfig {
+            replica_id: r,
+            grad_program: grad.clone(),
+            apply_program: apply.clone(),
+            shards_per_round: cfg.learner_cores,
+            total_updates: cfg.total_updates,
+            pipeline: cfg.learner_pipeline,
         };
-        log::info!(
-            "sebulba[{}]: params={} opt={} replicas={} cores={}A+{}L batch={}x{} T={} lpipe={}",
-            cfg.agent,
-            params0.len(),
-            opt0.len(),
-            cfg.replicas,
-            cfg.actor_cores,
-            cfg.learner_cores,
-            cfg.pipeline_stages,
-            cfg.stage_batch(),
-            cfg.unroll,
-            cfg.learner_pipeline
-        );
+        let cores: Vec<DeviceHandle> = (0..cfg.learner_cores)
+            .map(|i| pod.core(base + cfg.actor_cores + i))
+            .collect::<Result<_>>()?;
+        let handles = LearnerHandles {
+            cores,
+            store: store.clone(),
+            queue: queue.clone(),
+            stats: stats.clone(),
+            bus: bus.clone(),
+        };
+        learner_joins.push(spawn_guarded_learner(
+            format!("learner-{r}"),
+            lcfg,
+            handles,
+            opt0.clone(),
+            stop.clone(),
+            queues.clone(),
+            bus.clone(),
+        ));
+    }
 
-        // ---- shared state ----------------------------------------------------
-        let stats = Arc::new(RunStats::new());
-        let stop = Arc::new(AtomicBool::new(false));
-        let bus = Arc::new(GradientBus::new(cfg.replicas));
-        let factory: Arc<crate::envs::EnvFactory> =
-            Arc::new(make_factory(cfg.env_kind, cfg.seed)?);
+    // ---- wait for learners, then tear down actors ------------------------
+    // Every thread is joined even on a learner error: returning early
+    // would leave actors running against a shut-down queue and drop
+    // their `Result`s (and other replicas' learners parked on the bus).
+    let mut final_params = params0;
+    let mut final_opt_state = opt0;
+    if let Some((params, opt)) =
+        join_pod_threads("sebulba", &stop, &queues, &bus, learner_joins, actor_joins)?
+    {
+        final_params = params;
+        final_opt_state = opt;
+    }
 
-        let mut actor_joins = Vec::new();
-        let mut learner_joins = Vec::new();
-        // All queues exist up front so a failing learner can unblock every
-        // replica's threads, not just its own (see the spawn below).
-        let queues: Vec<Arc<BoundedQueue<ShardBundle>>> = (0..cfg.replicas)
-            .map(|_| Arc::new(BoundedQueue::<ShardBundle>::new(cfg.queue_capacity)))
-            .collect();
-        let t_start = Instant::now();
-
-        for r in 0..cfg.replicas {
-            let base = r * n_per;
-            let store = Arc::new(ParamStore::new(params0.clone()));
-            let queue = queues[r].clone();
-            let pool = WorkerPool::new(cfg.env_workers);
-
-            // actors: threads_per_actor_core per actor core
-            for ac in 0..cfg.actor_cores {
-                let core = pod.core(base + ac)?;
-                for th in 0..cfg.threads_per_actor_core {
-                    let actor_id = (r * cfg.actor_cores + ac) * cfg.threads_per_actor_core + th;
-                    let acfg = ActorConfig {
-                        actor_id,
-                        batch: cfg.actor_batch,
-                        pipeline_stages: cfg.pipeline_stages,
-                        unroll: cfg.unroll,
-                        discount: cfg.discount,
-                        num_shards: cfg.learner_cores * cfg.micro_batches,
-                        infer_program: infer.clone(),
-                        obs_shape: obs_shape.clone(),
-                        num_actions,
-                        seed: cfg.seed,
-                        copy_path: cfg.copy_path,
-                    };
-                    actor_joins.push(spawn_actor(
-                        acfg,
-                        core.clone(),
-                        factory.clone(),
-                        pool.clone(),
-                        store.clone(),
-                        queue.clone(),
-                        stats.clone(),
-                        stop.clone(),
-                    ));
-                }
-            }
-
-            // learner thread per replica
-            let lcfg = LearnerConfig {
-                replica_id: r,
-                grad_program: grad.clone(),
-                apply_program: apply.clone(),
-                shards_per_round: cfg.learner_cores,
-                total_updates: cfg.total_updates,
-                pipeline: cfg.learner_pipeline,
-            };
-            let cores: Vec<DeviceHandle> = (0..cfg.learner_cores)
-                .map(|i| pod.core(base + cfg.actor_cores + i))
-                .collect::<Result<_>>()?;
-            let handles = LearnerHandles {
-                cores,
-                store: store.clone(),
-                queue: queue.clone(),
-                stats: stats.clone(),
-                bus: bus.clone(),
-            };
-            learner_joins.push(spawn_guarded_learner(
-                format!("learner-{r}"),
-                lcfg,
-                handles,
-                opt0.clone(),
-                stop.clone(),
-                queues.clone(),
-                bus.clone(),
-            ));
-        }
-
-        // ---- wait for learners, then tear down actors ------------------------
-        // Every thread is joined even on a learner error: returning early
-        // would leave actors running against a shut-down queue and drop
-        // their `Result`s (and other replicas' learners parked on the bus).
-        let mut final_params = params0;
-        let mut final_opt_state = opt0;
-        if let Some((params, opt)) =
-            join_pod_threads("sebulba", &stop, &queues, &bus, learner_joins, actor_joins)?
-        {
-            final_params = params;
-            final_opt_state = opt;
-        }
-
-        // ---- report ----------------------------------------------------------
-        let elapsed = t_start.elapsed().as_secs_f64();
-        // All busy totals are *this run's*: the pre-run baseline is
-        // subtracted per core (see `busy0` above).
-        let mut actor_busy = 0.0;
-        for &cid in &actor_core_ids {
-            actor_busy += pod.core(cid)?.busy_seconds() - busy0[cid];
-        }
-        let mut learner_busy = 0.0;
-        let mut critical_path: f64 = 1e-12;
-        for &cid in &learner_core_ids {
-            learner_busy += pod.core(cid)?.busy_seconds() - busy0[cid];
-        }
-        for cid in 0..cfg.total_cores() {
-            critical_path = critical_path.max(pod.core(cid)?.busy_seconds() - busy0[cid]);
-        }
-        // An exposed learner schedule lengthens the critical path
-        // (DESIGN.md §9): a learner thread's active seconds (wall minus
-        // data starvation) bound how fast its replica can retire rounds
-        // even on truly parallel cores. Fully overlapped, this collapses to
-        // the learner cores' busy time and the per-core max wins.
-        critical_path = critical_path.max(stats.learner_active_max_seconds());
-        let frames = stats.env_frames.frames();
-        let report = RunReport {
-            frames,
-            updates: stats.updates.load(Ordering::Relaxed),
-            elapsed,
-            fps: frames as f64 / elapsed.max(1e-12),
-            projected_fps: frames as f64 / critical_path,
+    // ---- report ----------------------------------------------------------
+    let elapsed = t_start.elapsed().as_secs_f64();
+    // All busy totals are *this run's*: the pre-run baseline is
+    // subtracted per core (see `busy0` above).
+    let mut actor_busy = 0.0;
+    for &cid in &actor_core_ids {
+        actor_busy += pod.core(cid)?.busy_seconds() - busy0[cid];
+    }
+    let mut learner_busy = 0.0;
+    let mut critical_path: f64 = 1e-12;
+    for &cid in &learner_core_ids {
+        learner_busy += pod.core(cid)?.busy_seconds() - busy0[cid];
+    }
+    for cid in 0..cfg.total_cores() {
+        critical_path = critical_path.max(pod.core(cid)?.busy_seconds() - busy0[cid]);
+    }
+    // An exposed learner schedule lengthens the critical path
+    // (DESIGN.md §9): a learner thread's active seconds (wall minus
+    // data starvation) bound how fast its replica can retire rounds
+    // even on truly parallel cores. Fully overlapped, this collapses to
+    // the learner cores' busy time and the per-core max wins.
+    critical_path = critical_path.max(stats.learner_active_max_seconds());
+    let frames = stats.env_frames.frames();
+    let report = Report {
+        arch: Arch::Sebulba,
+        steps: frames,
+        updates: stats.updates.load(Ordering::Relaxed),
+        elapsed,
+        throughput: frames as f64 / elapsed.max(1e-12),
+        projected_throughput: frames as f64 / critical_path,
+        final_params,
+        detail: Detail::ActorLearner(ActorLearnerDetail {
             mean_staleness: stats.mean_staleness(),
             mean_episode_reward: stats.mean_episode_reward(),
             episodes: stats.episodes.load(Ordering::Relaxed),
@@ -438,10 +473,9 @@ impl Sebulba {
             learner_overlap_seconds: stats.learner_overlap_seconds(),
             queue_push_block_seconds: queues.iter().map(|q| q.push_block_seconds()).sum(),
             queue_pop_block_seconds: queues.iter().map(|q| q.pop_block_seconds()).sum(),
-            final_params,
             final_opt_state,
-        };
-        log::info!("sebulba done: {}", stats.summary());
-        Ok(report)
-    }
+        }),
+    };
+    log::info!("sebulba done: {}", stats.summary());
+    Ok(report)
 }

@@ -203,16 +203,16 @@ impl StepTicket {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::envs::make_factory;
+    use crate::envs::{make_factory, EnvKind};
 
-    fn batched(kind: &'static str, batch: usize, workers: usize) -> BatchedEnv {
+    fn batched(kind: EnvKind, batch: usize, workers: usize) -> BatchedEnv {
         let pool = WorkerPool::new(workers);
-        BatchedEnv::new(&make_factory(kind, 42).unwrap(), batch, pool).unwrap()
+        BatchedEnv::new(&make_factory(kind, 42), batch, pool).unwrap()
     }
 
     #[test]
     fn reset_fills_all_observations() {
-        let be = batched("catch", 8, 3);
+        let be = batched(EnvKind::Catch, 8, 3);
         let mut obs = vec![0.0; 8 * be.obs_dim()];
         be.reset(&mut obs).unwrap();
         for b in 0..8 {
@@ -223,7 +223,7 @@ mod tests {
 
     #[test]
     fn step_writes_disjoint_slots() {
-        let be = batched("catch", 5, 2);
+        let be = batched(EnvKind::Catch, 5, 2);
         let mut obs = vec![0.0; 5 * 50];
         be.reset(&mut obs).unwrap();
         let actions = vec![0, 1, 2, 1, 0];
@@ -241,7 +241,7 @@ mod tests {
         // The batched env must be observationally identical to stepping the
         // same seeded envs one by one (the property the paper's batched C++
         // env preserves).
-        let factory = make_factory("catch", 99).unwrap();
+        let factory = make_factory(EnvKind::Catch, 99);
         let pool = WorkerPool::new(4);
         let be = BatchedEnv::new(&factory, 6, pool).unwrap();
         let mut serial: Vec<_> = (0..6).map(|i| factory(i)).collect();
@@ -270,7 +270,7 @@ mod tests {
 
     #[test]
     fn more_workers_than_envs_is_fine() {
-        let be = batched("chain", 2, 8);
+        let be = batched(EnvKind::Chain, 2, 8);
         let mut obs = vec![0.0; 2 * 10];
         be.reset(&mut obs).unwrap();
         let mut rewards = vec![0.0; 2];
@@ -282,7 +282,7 @@ mod tests {
     fn step_async_equals_step() {
         // Two envs built from the same factory/seed; one stepped through the
         // blocking API, one through the ticket — results must be identical.
-        let factory = make_factory("catch", 17).unwrap();
+        let factory = make_factory(EnvKind::Catch, 17);
         let sync = BatchedEnv::new(&factory, 4, WorkerPool::new(2)).unwrap();
         let split = BatchedEnv::new(&factory, 4, WorkerPool::new(2)).unwrap();
 
@@ -310,7 +310,7 @@ mod tests {
         // Splitting a batch of 6 into two offset sub-batches must reproduce
         // the unsplit envs exactly (same per-slot RNG streams) — the
         // property pipeline_stages>1 relies on.
-        let factory = make_factory("catch", 31).unwrap();
+        let factory = make_factory(EnvKind::Catch, 31);
         let full = BatchedEnv::new(&factory, 6, WorkerPool::new(2)).unwrap();
         let lo = BatchedEnv::with_slot_offset(&factory, 3, 0, WorkerPool::new(2)).unwrap();
         let hi = BatchedEnv::with_slot_offset(&factory, 3, 3, WorkerPool::new(2)).unwrap();

@@ -23,6 +23,8 @@ pub mod pool;
 pub use batched::{BatchedEnv, StepTicket};
 pub use pool::{BatchTicket, WorkerPool};
 
+pub use crate::experiment::EnvKind;
+
 use crate::util::rng::Xoshiro256;
 
 /// One transition's results (the observation is written separately).
@@ -49,53 +51,36 @@ pub trait Environment: Send {
     fn step(&mut self, action: usize, obs: &mut [f32]) -> StepResult;
 }
 
-/// Every environment kind `make_env`/`make_factory` accepts (what the CLI,
-/// config validation and benches enumerate).
-pub const ENV_KINDS: &[&str] = &["catch", "gridworld", "cartpole", "chain", "atari_like"];
-
-/// Fail fast on an unknown environment kind — `SebulbaConfig::validate`
-/// calls this so a typo'd `--env` errors at config time instead of
-/// panicking inside a worker thread.
-pub fn validate_kind(kind: &str) -> anyhow::Result<()> {
-    if ENV_KINDS.contains(&kind) {
-        Ok(())
-    } else {
-        anyhow::bail!("unknown environment {kind:?} (known: {ENV_KINDS:?})")
+fn build_env(kind: EnvKind, rng: Xoshiro256) -> Box<dyn Environment> {
+    match kind {
+        EnvKind::Catch => Box::new(catch::Catch::new(10, 5, rng)),
+        EnvKind::Gridworld => Box::new(gridworld::GridWorld::new(8, 50, rng)),
+        EnvKind::Cartpole => Box::new(cartpole::CartPole::new(rng)),
+        EnvKind::Chain => Box::new(chain::Chain::new(10, rng)),
+        EnvKind::AtariLike => {
+            Box::new(atari_like::AtariLike::new(atari_like::Config::default(), rng))
+        }
     }
 }
 
-fn build_env(kind: &str, rng: Xoshiro256) -> Option<Box<dyn Environment>> {
-    Some(match kind {
-        "catch" => Box::new(catch::Catch::new(10, 5, rng)),
-        "gridworld" => Box::new(gridworld::GridWorld::new(8, 50, rng)),
-        "cartpole" => Box::new(cartpole::CartPole::new(rng)),
-        "chain" => Box::new(chain::Chain::new(10, rng)),
-        "atari_like" => Box::new(atari_like::AtariLike::new(
-            atari_like::Config::default(),
-            rng,
-        )),
-        _ => return None,
-    })
-}
-
-/// Environment constructors by name (used by the CLI and benches).
-pub fn make_env(kind: &str, seed: u64) -> anyhow::Result<Box<dyn Environment>> {
-    let rng = Xoshiro256::from_stream(seed, 0x517);
-    build_env(kind, rng).ok_or_else(|| anyhow::anyhow!("unknown environment {kind:?} (known: {ENV_KINDS:?})"))
+/// Environment constructor by kind (used by the CLI and benches). The
+/// typed [`EnvKind`] makes this infallible — unknown names fail earlier,
+/// at `EnvKind::from_str`.
+pub fn make_env(kind: EnvKind, seed: u64) -> Box<dyn Environment> {
+    build_env(kind, Xoshiro256::from_stream(seed, 0x517))
 }
 
 /// The environment factory type used by `BatchedEnv` (one env per slot).
 pub type EnvFactory = Box<dyn Fn(usize) -> Box<dyn Environment> + Send + Sync>;
 
 /// Factory for `kind`, deriving each slot's RNG stream from `seed`.
-/// The kind is validated here, once, so the per-slot closure cannot panic
-/// inside a worker thread.
-pub fn make_factory(kind: &'static str, seed: u64) -> anyhow::Result<EnvFactory> {
-    validate_kind(kind)?;
-    Ok(Box::new(move |slot| {
+/// Infallible by construction: the per-slot closure cannot panic inside a
+/// worker thread on a bad kind, because bad kinds are unrepresentable.
+pub fn make_factory(kind: EnvKind, seed: u64) -> EnvFactory {
+    Box::new(move |slot| {
         let rng = Xoshiro256::from_stream(seed, 0x9E00 + slot as u64);
-        build_env(kind, rng).expect("kind validated at factory construction")
-    }))
+        build_env(kind, rng)
+    })
 }
 
 #[cfg(test)]
@@ -103,22 +88,21 @@ mod tests {
     use super::*;
 
     #[test]
-    fn every_listed_kind_constructs() {
-        for kind in ENV_KINDS {
-            validate_kind(kind).unwrap();
-            let mut env = make_env(kind, 3).unwrap();
+    fn every_kind_constructs() {
+        for kind in EnvKind::ALL {
+            let mut env = make_env(kind, 3);
             let mut obs = vec![0.0; env.obs_dim()];
             env.reset(&mut obs);
-            let factory = make_factory(kind, 3).unwrap();
+            let factory = make_factory(kind, 3);
             let env2 = factory(0);
             assert_eq!(env2.obs_dim(), env.obs_dim());
         }
     }
 
     #[test]
-    fn unknown_kind_is_an_error_not_a_panic() {
-        assert!(validate_kind("nope").is_err());
-        assert!(make_env("nope", 0).is_err());
-        assert!(make_factory("nope", 0).is_err());
+    fn unknown_kind_is_a_parse_error_not_a_default() {
+        // the stringly path used to coerce unknowns to "catch" in the CLI;
+        // the typed kind rejects them at the boundary
+        assert!("nope".parse::<EnvKind>().is_err());
     }
 }

@@ -1,0 +1,103 @@
+//! Typed host-environment kinds.
+//!
+//! Replaces the stringly `env_kind: &'static str` that used to be plumbed
+//! through `SebulbaConfig` / `MuZeroRunConfig` / `envs::make_factory`: an
+//! unknown `--env` now fails at parse time with the list of valid kinds,
+//! instead of being silently coerced to `"catch"` (the old
+//! `env_kind_static` footgun) or erroring deep inside config validation.
+//! `envs::make_factory` takes an `EnvKind` and is infallible.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Every host-side environment the crate ships (see [`crate::envs`]).
+/// Adding a sixth env means adding a variant here, a `match` arm in
+/// `envs::build_env`, and (for real training) an agent in
+/// `python/compile/aot.py` — the compiler walks you to every site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EnvKind {
+    /// 10x5 Catch (flat 50-dim observation, 3 actions).
+    Catch,
+    /// 8x8 GridWorld with walls (flat 128-dim observation, 4 actions).
+    Gridworld,
+    /// Classic CartPole (4-dim observation, 2 actions).
+    Cartpole,
+    /// 10-state chain exploration task (10-dim observation, 2 actions).
+    Chain,
+    /// Atari substitute: 42x42x2 pixel rendering, sticky actions,
+    /// episodic lives (6 actions).
+    AtariLike,
+}
+
+impl EnvKind {
+    /// Every variant, in canonical order (what the CLI smoke matrix and
+    /// error messages enumerate).
+    pub const ALL: [EnvKind; 5] = [
+        EnvKind::Catch,
+        EnvKind::Gridworld,
+        EnvKind::Cartpole,
+        EnvKind::Chain,
+        EnvKind::AtariLike,
+    ];
+
+    /// The canonical CLI / manifest name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EnvKind::Catch => "catch",
+            EnvKind::Gridworld => "gridworld",
+            EnvKind::Cartpole => "cartpole",
+            EnvKind::Chain => "chain",
+            EnvKind::AtariLike => "atari_like",
+        }
+    }
+
+    /// `"catch, gridworld, cartpole, chain, atari_like"` — for diagnostics.
+    pub fn valid_names() -> String {
+        Self::ALL.map(EnvKind::as_str).join(", ")
+    }
+}
+
+impl fmt::Display for EnvKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for EnvKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        for kind in Self::ALL {
+            if kind.as_str() == s {
+                return Ok(kind);
+            }
+        }
+        anyhow::bail!("unknown environment {s:?} (valid: {})", Self::valid_names())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips_through_from_str() {
+        for kind in EnvKind::ALL {
+            assert_eq!(kind.as_str().parse::<EnvKind>().unwrap(), kind);
+            assert_eq!(format!("{kind}"), kind.as_str());
+        }
+    }
+
+    #[test]
+    fn unknown_names_error_with_the_valid_list() {
+        let err = "pong".parse::<EnvKind>().unwrap_err().to_string();
+        assert!(err.contains("pong"), "{err}");
+        for kind in EnvKind::ALL {
+            assert!(err.contains(kind.as_str()), "error must list {kind}: {err}");
+        }
+        // the old env_kind_static coerced anything unknown to catch — the
+        // typed parse must never do that
+        assert!("".parse::<EnvKind>().is_err());
+        assert!("Catch".parse::<EnvKind>().is_err(), "names are case-sensitive");
+    }
+}

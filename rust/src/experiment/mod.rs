@@ -1,0 +1,660 @@
+//! # The one Podracer API
+//!
+//! The paper presents Anakin and Sebulba as two instances of a single idea
+//! — a declarative split of pod cores between acting and learning — and
+//! this module is that idea as an API (DESIGN.md §12). One builder reaches
+//! every architecture:
+//!
+//! ```no_run
+//! use podracer::experiment::{Arch, EnvKind, Experiment, Topology};
+//!
+//! let report = Experiment::new(Arch::Sebulba)
+//!     .agent("seb_catch")
+//!     .env(EnvKind::Catch)
+//!     .topology(Topology::split(2, 2))
+//!     .updates(200)
+//!     .seed(42)
+//!     .build()?
+//!     .run()?;
+//! println!("{}", report.summary());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! * [`Topology`] — the typed core split (cores, replicas, pipeline
+//!   depths), shared by all architectures.
+//! * [`EnvKind`] — typed host environments; unknown names are parse
+//!   errors, never silent defaults.
+//! * [`Runner`] — the trait Anakin, Sebulba and MuZero implement; an
+//!   [`Experiment`] is a validated `(runner, topology, artifacts)` triple.
+//! * [`Report`] — the unified run report with a per-architecture
+//!   [`Detail`] payload.
+//!
+//! The pre-refactor entrypoints (`Anakin::run`, `Sebulba::run_on_with`,
+//! `run_muzero`) remain as thin deprecated shims for one PR; everything
+//! in-tree goes through `Experiment`.
+
+pub mod env_kind;
+pub mod report;
+pub mod runner;
+pub mod topology;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::str::FromStr;
+
+use anyhow::{bail, Context, Result};
+
+use crate::anakin::{Anakin, Driver, Mode};
+use crate::coordinator::sebulba::Sebulba;
+use crate::runtime::Pod;
+use crate::search::muzero_run::MuZero;
+use crate::util::cli::Args;
+
+pub use env_kind::EnvKind;
+pub use report::{ActorLearnerDetail, AnakinDetail, Detail, MetricRow, Report};
+pub use runner::Runner;
+pub use topology::Topology;
+
+/// The three Podracer architectures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Arch {
+    /// Fully on-device online learning (paper Fig. 1b / Fig. 2).
+    Anakin,
+    /// Decomposed actor/learner coordination (paper Fig. 1c / Fig. 3).
+    Sebulba,
+    /// Sebulba with MCTS actors driving a learned model.
+    MuZero,
+}
+
+impl Arch {
+    pub const ALL: [Arch; 3] = [Arch::Anakin, Arch::Sebulba, Arch::MuZero];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Arch::Anakin => "anakin",
+            Arch::Sebulba => "sebulba",
+            Arch::MuZero => "muzero",
+        }
+    }
+}
+
+impl fmt::Display for Arch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for Arch {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        for arch in Self::ALL {
+            if arch.as_str() == s {
+                return Ok(arch);
+            }
+        }
+        bail!("unknown architecture {s:?} (valid: anakin, sebulba, muzero)")
+    }
+}
+
+/// A validated, runnable experiment: a [`Runner`] workload plus the
+/// [`Topology`] it runs on and the artifacts it loads programs from.
+pub struct Experiment {
+    arch: Arch,
+    topo: Topology,
+    artifacts: PathBuf,
+    runner: Box<dyn Runner>,
+}
+
+impl Experiment {
+    /// Start describing an experiment for `arch`. Finish with
+    /// [`ExperimentBuilder::build`].
+    #[allow(clippy::new_ret_no_self)] // the builder entrypoint is the API's front door
+    pub fn new(arch: Arch) -> ExperimentBuilder {
+        ExperimentBuilder::new(arch)
+    }
+
+    /// Declarative CLI construction: `podracer <arch> [--flags]` with no
+    /// per-architecture code at the call site. Unknown flag *names* and
+    /// unknown flag *values* (`--env`, `--mode`, `--driver`, `--data-path`)
+    /// are hard errors.
+    pub fn from_args(arch: Arch, args: &Args) -> Result<Experiment> {
+        from_args::build(arch, args)
+    }
+
+    pub fn arch(&self) -> Arch {
+        self.arch
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Build a pod sized for the topology and run to completion.
+    pub fn run(&self) -> Result<Report> {
+        let mut pod = Pod::new(&self.artifacts, self.topo.total_cores())?;
+        self.runner.run(&mut pod, &self.topo)
+    }
+
+    /// Run on an existing pod (must have >= `topology().total_cores()`
+    /// cores) — reuses loaded programs across runs.
+    pub fn run_on(&self, pod: &mut Pod) -> Result<Report> {
+        self.runner.run(pod, &self.topo)
+    }
+}
+
+/// Builder for [`Experiment`]. Generic knobs (`agent`, `env`, `topology`,
+/// `seed`, `updates`) apply everywhere they make sense; architecture-
+/// specific knobs (`mode`/`driver` for Anakin, `actor_batch`/`unroll`/
+/// `micro_batches`/`copy_path`/`warm_start` for Sebulba, `num_simulations`
+/// for MuZero) are rejected by [`Self::build`] when set for the wrong
+/// architecture — a typo'd experiment fails loudly instead of silently
+/// ignoring a knob.
+pub struct ExperimentBuilder {
+    arch: Arch,
+    artifacts: Option<PathBuf>,
+    agent: Option<String>,
+    env: Option<EnvKind>,
+    topo: Option<Topology>,
+    seed: Option<u64>,
+    updates: Option<u64>,
+    mode: Option<Mode>,
+    driver: Option<Driver>,
+    actor_batch: Option<usize>,
+    unroll: Option<usize>,
+    micro_batches: Option<usize>,
+    discount: Option<f32>,
+    copy_path: Option<bool>,
+    num_simulations: Option<usize>,
+    warm_start: Option<(Vec<f32>, Vec<f32>)>,
+}
+
+impl ExperimentBuilder {
+    fn new(arch: Arch) -> Self {
+        Self {
+            arch,
+            artifacts: None,
+            agent: None,
+            env: None,
+            topo: None,
+            seed: None,
+            updates: None,
+            mode: None,
+            driver: None,
+            actor_batch: None,
+            unroll: None,
+            micro_batches: None,
+            discount: None,
+            copy_path: None,
+            num_simulations: None,
+            warm_start: None,
+        }
+    }
+
+    /// Artifacts directory (default: [`crate::artifacts_dir`]).
+    pub fn artifacts(mut self, dir: &Path) -> Self {
+        self.artifacts = Some(dir.to_path_buf());
+        self
+    }
+
+    /// Agent tag in the artifact manifest (defaults: `anakin_catch`,
+    /// `seb_catch`, `mz_catch`).
+    pub fn agent(mut self, tag: &str) -> Self {
+        self.agent = Some(tag.to_string());
+        self
+    }
+
+    /// Host environment (Sebulba/MuZero; Anakin's env is baked into the
+    /// agent program).
+    pub fn env(mut self, kind: EnvKind) -> Self {
+        self.env = Some(kind);
+        self
+    }
+
+    pub fn topology(mut self, topo: Topology) -> Self {
+        self.topo = Some(topo);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Update budget: learner updates per replica (Sebulba/MuZero) or
+    /// outer driver iterations (Anakin).
+    pub fn updates(mut self, updates: u64) -> Self {
+        self.updates = Some(updates);
+        self
+    }
+
+    /// Anakin collective mode (bundled | psum).
+    pub fn mode(mut self, mode: Mode) -> Self {
+        self.mode = Some(mode);
+        self
+    }
+
+    /// Anakin host schedule (threaded | serial).
+    pub fn driver(mut self, driver: Driver) -> Self {
+        self.driver = Some(driver);
+        self
+    }
+
+    /// Environments per Sebulba actor thread (Fig 4b's actor batch).
+    pub fn actor_batch(mut self, batch: usize) -> Self {
+        self.actor_batch = Some(batch);
+        self
+    }
+
+    /// Trajectory length T (Sebulba).
+    pub fn unroll(mut self, unroll: usize) -> Self {
+        self.unroll = Some(unroll);
+        self
+    }
+
+    /// Sequential updates per trajectory (Sebulba).
+    pub fn micro_batches(mut self, n: usize) -> Self {
+        self.micro_batches = Some(n);
+        self
+    }
+
+    pub fn discount(mut self, discount: f32) -> Self {
+        self.discount = Some(discount);
+        self
+    }
+
+    /// Use the materializing data path instead of zero-copy arena views
+    /// (Sebulba bit-exactness oracle — DESIGN.md §11).
+    pub fn copy_path(mut self, copy: bool) -> Self {
+        self.copy_path = Some(copy);
+        self
+    }
+
+    /// MCTS simulations per step (MuZero).
+    pub fn num_simulations(mut self, n: usize) -> Self {
+        self.num_simulations = Some(n);
+        self
+    }
+
+    /// Warm-start from a previous run's `(params, opt_state)` (Sebulba) —
+    /// lets drivers stage long trainings, see `examples/sebulba_atari.rs`.
+    pub fn warm_start(mut self, params: Vec<f32>, opt_state: Vec<f32>) -> Self {
+        self.warm_start = Some((params, opt_state));
+        self
+    }
+
+    /// Reject knobs that were set but mean nothing for `arch`.
+    fn reject_inapplicable(&self, knobs: &[(&str, bool)]) -> Result<()> {
+        for (name, set) in knobs {
+            if *set {
+                bail!("`{name}` does not apply to the {} architecture", self.arch);
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate and assemble the experiment.
+    pub fn build(self) -> Result<Experiment> {
+        let arch = self.arch;
+        let artifacts = match &self.artifacts {
+            Some(p) => p.clone(),
+            None => crate::artifacts_dir(),
+        };
+        let (topo, runner): (Topology, Box<dyn Runner>) = match arch {
+            Arch::Anakin => {
+                self.reject_inapplicable(&[
+                    ("env", self.env.is_some()),
+                    ("actor_batch", self.actor_batch.is_some()),
+                    ("unroll", self.unroll.is_some()),
+                    ("micro_batches", self.micro_batches.is_some()),
+                    ("discount", self.discount.is_some()),
+                    ("copy_path", self.copy_path.is_some()),
+                    ("num_simulations", self.num_simulations.is_some()),
+                    ("warm_start", self.warm_start.is_some()),
+                ])?;
+                let defaults = Anakin::default();
+                let topo = self.topo.unwrap_or_else(|| Topology::anakin(2));
+                let runner = Anakin {
+                    agent: self.agent.unwrap_or(defaults.agent),
+                    mode: self.mode.unwrap_or(defaults.mode),
+                    driver: self.driver.unwrap_or(defaults.driver),
+                    outer_iters: self.updates.unwrap_or(defaults.outer_iters),
+                    seed: self.seed.unwrap_or(defaults.seed),
+                };
+                Anakin::check_topology(&topo)?;
+                topo.validate()?;
+                (topo, Box::new(runner))
+            }
+            Arch::Sebulba => {
+                self.reject_inapplicable(&[
+                    ("mode", self.mode.is_some()),
+                    ("driver", self.driver.is_some()),
+                    ("num_simulations", self.num_simulations.is_some()),
+                ])?;
+                let defaults = Sebulba::default();
+                let topo = self.topo.unwrap_or_default();
+                let runner = Sebulba {
+                    agent: self.agent.unwrap_or(defaults.agent),
+                    env_kind: self.env.unwrap_or(defaults.env_kind),
+                    actor_batch: self.actor_batch.unwrap_or(defaults.actor_batch),
+                    unroll: self.unroll.unwrap_or(defaults.unroll),
+                    micro_batches: self.micro_batches.unwrap_or(defaults.micro_batches),
+                    discount: self.discount.unwrap_or(defaults.discount),
+                    total_updates: self.updates.unwrap_or(defaults.total_updates),
+                    seed: self.seed.unwrap_or(defaults.seed),
+                    copy_path: self.copy_path.unwrap_or(defaults.copy_path),
+                    warm_start: self.warm_start,
+                };
+                runner.resolved(&topo).validate()?;
+                (topo, Box::new(runner))
+            }
+            Arch::MuZero => {
+                self.reject_inapplicable(&[
+                    ("mode", self.mode.is_some()),
+                    ("driver", self.driver.is_some()),
+                    ("actor_batch", self.actor_batch.is_some()),
+                    ("unroll", self.unroll.is_some()),
+                    ("micro_batches", self.micro_batches.is_some()),
+                    ("copy_path", self.copy_path.is_some()),
+                    ("warm_start", self.warm_start.is_some()),
+                ])?;
+                let defaults = MuZero::default();
+                let topo = self.topo.unwrap_or_else(|| Topology {
+                    threads_per_actor_core: 1,
+                    pipeline_stages: 1,
+                    learner_pipeline: 1,
+                    ..Topology::default()
+                });
+                let runner = MuZero {
+                    agent: self.agent.unwrap_or(defaults.agent),
+                    env_kind: self.env.unwrap_or(defaults.env_kind),
+                    num_simulations: self.num_simulations.unwrap_or(defaults.num_simulations),
+                    discount: self.discount.unwrap_or(defaults.discount),
+                    total_updates: self.updates.unwrap_or(defaults.total_updates),
+                    seed: self.seed.unwrap_or(defaults.seed),
+                };
+                // validate the topology as given, not the one `resolved`
+                // re-derives — a non-1 pipeline_stages is an error, never
+                // silently 1
+                topo.validate()?;
+                MuZero::check_topology(&topo)?;
+                runner.resolved(&topo).validate()?;
+                (topo, Box::new(runner))
+            }
+        };
+        Ok(Experiment { arch, topo, artifacts, runner })
+    }
+}
+
+mod from_args {
+    use super::*;
+
+    const ANAKIN_FLAGS: &[&str] = &["agent", "cores", "outer-iters", "mode", "driver", "seed"];
+    const SEBULBA_FLAGS: &[&str] = &[
+        "agent",
+        "env",
+        "actor-cores",
+        "learner-cores",
+        "threads",
+        "batch",
+        "pipeline-stages",
+        "learner-pipeline",
+        "unroll",
+        "micro-batches",
+        "discount",
+        "queue",
+        "env-workers",
+        "replicas",
+        "updates",
+        "seed",
+        "data-path",
+    ];
+    const MUZERO_FLAGS: &[&str] = &[
+        "agent",
+        "env",
+        "actor-cores",
+        "learner-cores",
+        "threads",
+        "simulations",
+        "learner-pipeline",
+        "discount",
+        "queue",
+        "env-workers",
+        "replicas",
+        "updates",
+        "seed",
+    ];
+
+    fn check_flags(arch: Arch, args: &Args, accepted: &[&str]) -> Result<()> {
+        for key in args.flags.keys() {
+            if !accepted.contains(&key.as_str()) {
+                bail!(
+                    "unknown flag --{key} for `podracer {arch}` (accepted: {})",
+                    accepted.iter().map(|f| format!("--{f}")).collect::<Vec<_>>().join(" ")
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a typed flag value, naming the flag in the error.
+    fn parse_flag<T>(args: &Args, key: &str, default: &str) -> Result<T>
+    where
+        T: FromStr<Err = anyhow::Error>,
+    {
+        let raw = args.get_str(key, default);
+        raw.parse::<T>().with_context(|| format!("--{key} {raw:?}"))
+    }
+
+    pub(super) fn build(arch: Arch, args: &Args) -> Result<Experiment> {
+        match arch {
+            Arch::Anakin => {
+                check_flags(arch, args, ANAKIN_FLAGS)?;
+                Experiment::new(arch)
+                    .agent(&args.get_str("agent", "anakin_catch"))
+                    .topology(Topology::anakin(args.get_usize("cores", 4)?))
+                    .updates(args.get_u64("outer-iters", 20)?)
+                    .mode(parse_flag(args, "mode", "bundled")?)
+                    .driver(parse_flag(args, "driver", "threaded")?)
+                    .seed(args.get_u64("seed", 7)?)
+                    .build()
+            }
+            Arch::Sebulba => {
+                check_flags(arch, args, SEBULBA_FLAGS)?;
+                let copy_path = match args.get_str("data-path", "arena").as_str() {
+                    "arena" => false,
+                    "copy" => true,
+                    other => bail!("--data-path expects arena|copy, got {other:?}"),
+                };
+                Experiment::new(arch)
+                    .agent(&args.get_str("agent", "seb_catch"))
+                    .env(parse_flag(args, "env", "catch")?)
+                    .topology(Topology {
+                        actor_cores: args.get_usize("actor-cores", 2)?,
+                        learner_cores: args.get_usize("learner-cores", 2)?,
+                        replicas: args.get_usize("replicas", 1)?,
+                        threads_per_actor_core: args.get_usize("threads", 2)?,
+                        pipeline_stages: args.get_usize("pipeline-stages", 2)?,
+                        learner_pipeline: args.get_usize("learner-pipeline", 2)?,
+                        env_workers: args.get_usize("env-workers", 2)?,
+                        queue_capacity: args.get_usize("queue", 4)?,
+                    })
+                    .actor_batch(args.get_usize("batch", 32)?)
+                    .unroll(args.get_usize("unroll", 20)?)
+                    .micro_batches(args.get_usize("micro-batches", 1)?)
+                    .discount(args.get_f64("discount", 0.99)? as f32)
+                    .copy_path(copy_path)
+                    .updates(args.get_u64("updates", 100)?)
+                    .seed(args.get_u64("seed", 42)?)
+                    .build()
+            }
+            Arch::MuZero => {
+                check_flags(arch, args, MUZERO_FLAGS)?;
+                Experiment::new(arch)
+                    .agent(&args.get_str("agent", "mz_catch"))
+                    .env(parse_flag(args, "env", "catch")?)
+                    .topology(Topology {
+                        actor_cores: args.get_usize("actor-cores", 2)?,
+                        learner_cores: args.get_usize("learner-cores", 2)?,
+                        replicas: args.get_usize("replicas", 1)?,
+                        threads_per_actor_core: args.get_usize("threads", 1)?,
+                        pipeline_stages: 1,
+                        learner_pipeline: args.get_usize("learner-pipeline", 1)?,
+                        env_workers: args.get_usize("env-workers", 2)?,
+                        queue_capacity: args.get_usize("queue", 4)?,
+                    })
+                    .num_simulations(args.get_usize("simulations", 16)?)
+                    .discount(args.get_f64("discount", 0.997)? as f32)
+                    .updates(args.get_u64("updates", 20)?)
+                    .seed(args.get_u64("seed", 11)?)
+                    .build()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn arch_roundtrips_and_rejects_unknowns() {
+        for arch in Arch::ALL {
+            assert_eq!(arch.as_str().parse::<Arch>().unwrap(), arch);
+        }
+        assert!("impala".parse::<Arch>().is_err());
+    }
+
+    #[test]
+    fn builder_reaches_all_three_architectures() {
+        for arch in Arch::ALL {
+            let exp = Experiment::new(arch).build().unwrap();
+            assert_eq!(exp.arch(), arch);
+            assert!(exp.topology().total_cores() >= 1);
+        }
+    }
+
+    #[test]
+    fn builder_rejects_inapplicable_knobs() {
+        let err =
+            Experiment::new(Arch::Anakin).env(EnvKind::Gridworld).build().unwrap_err().to_string();
+        assert!(err.contains("env") && err.contains("anakin"), "{err}");
+        assert!(Experiment::new(Arch::Sebulba).mode(Mode::Psum).build().is_err());
+        assert!(Experiment::new(Arch::MuZero).actor_batch(64).build().is_err());
+        assert!(Experiment::new(Arch::MuZero).warm_start(vec![0.0], vec![0.0]).build().is_err());
+    }
+
+    #[test]
+    fn builder_validates_the_resolved_config() {
+        // 30 envs cannot shard over 4 learner cores — the same geometry
+        // check SebulbaConfig::validate always made, now at build()
+        assert!(Experiment::new(Arch::Sebulba)
+            .topology(Topology::split(1, 4))
+            .actor_batch(30)
+            .build()
+            .is_err());
+        // structural topology failures surface too
+        assert!(Experiment::new(Arch::Sebulba)
+            .topology(Topology { learner_cores: 0, ..Topology::default() })
+            .build()
+            .is_err());
+        assert!(Experiment::new(Arch::Anakin).topology(Topology::anakin(0)).build().is_err());
+        // MuZero has no split-batch actor pipeline: a non-1 pipeline_stages
+        // is a build error, never a silently dropped knob
+        let err = Experiment::new(Arch::MuZero)
+            .topology(Topology::split(2, 2)) // default pipeline_stages = 2
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("pipeline_stages"), "{err}");
+        assert!(Experiment::new(Arch::MuZero)
+            .topology(Topology { pipeline_stages: 0, ..Topology::split(2, 2) })
+            .build()
+            .is_err());
+        // same contract for Anakin: a topology with host-pipeline knobs set
+        // is rejected, not silently collapsed to the fused on-device loop
+        let err = Experiment::new(Arch::Anakin)
+            .topology(Topology::split(2, 2))
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("Topology::anakin"), "{err}");
+    }
+
+    #[test]
+    fn from_args_builds_each_arch_with_cli_defaults() {
+        let exp = Experiment::from_args(Arch::Anakin, &parse(&["--cores", "2"])).unwrap();
+        assert_eq!(exp.topology().total_cores(), 2);
+        let exp = Experiment::from_args(Arch::Sebulba, &parse(&[])).unwrap();
+        assert_eq!(exp.topology().total_cores(), 4);
+        assert_eq!(exp.topology().pipeline_stages, 2);
+        let exp = Experiment::from_args(Arch::MuZero, &parse(&["--replicas", "2"])).unwrap();
+        assert_eq!(exp.topology().total_cores(), 8);
+        assert_eq!(exp.topology().learner_pipeline, 1);
+    }
+
+    #[test]
+    fn from_args_rejects_unknown_env_values() {
+        // the old env_kind_static silently coerced this to "catch"
+        let err = Experiment::from_args(Arch::Sebulba, &parse(&["--env", "nosuchenv"]))
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("nosuchenv") && msg.contains("catch"), "{msg}");
+        assert!(Experiment::from_args(Arch::MuZero, &parse(&["--env", "pong"])).is_err());
+    }
+
+    #[test]
+    fn from_args_rejects_unknown_mode_and_driver_values() {
+        // the old --mode parse mapped anything non-psum to Bundled
+        let err = Experiment::from_args(Arch::Anakin, &parse(&["--mode", "nosuchmode"]))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("nosuchmode"), "{err:#}");
+        assert!(Experiment::from_args(Arch::Anakin, &parse(&["--driver", "warp"])).is_err());
+        assert!(Experiment::from_args(Arch::Sebulba, &parse(&["--data-path", "zip"])).is_err());
+    }
+
+    #[test]
+    fn from_args_rejects_unknown_flag_names() {
+        let err = Experiment::from_args(Arch::Sebulba, &parse(&["--batchsize", "64"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--batchsize") && err.contains("--batch"), "{err}");
+        // arch-inapplicable flags are unknown for that arch
+        assert!(Experiment::from_args(Arch::Anakin, &parse(&["--env", "catch"])).is_err());
+        assert!(Experiment::from_args(Arch::Sebulba, &parse(&["--simulations", "4"])).is_err());
+    }
+
+    #[test]
+    fn from_args_accepts_every_documented_flag() {
+        Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&[
+                "--agent", "seb_catch", "--env", "catch", "--actor-cores", "1",
+                "--learner-cores", "2", "--threads", "1", "--batch", "16",
+                "--pipeline-stages", "2", "--learner-pipeline", "1", "--unroll", "20",
+                "--micro-batches", "1", "--discount", "0.99", "--queue", "2",
+                "--env-workers", "2", "--replicas", "1", "--updates", "1", "--seed", "3",
+                "--data-path", "copy",
+            ]),
+        )
+        .unwrap();
+        Experiment::from_args(
+            Arch::Anakin,
+            &parse(&["--agent", "anakin_grid", "--cores", "2", "--outer-iters", "1", "--mode",
+                     "psum", "--driver", "serial", "--seed", "1"]),
+        )
+        .unwrap();
+        Experiment::from_args(
+            Arch::MuZero,
+            &parse(&["--agent", "mz_catch", "--env", "catch", "--actor-cores", "1",
+                     "--learner-cores", "2", "--threads", "1", "--simulations", "4",
+                     "--learner-pipeline", "1", "--discount", "0.997", "--queue", "2",
+                     "--env-workers", "2", "--replicas", "1", "--updates", "1", "--seed", "2"]),
+        )
+        .unwrap();
+    }
+}

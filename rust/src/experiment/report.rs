@@ -1,0 +1,255 @@
+//! The one run report every architecture produces.
+//!
+//! `AnakinReport` and Sebulba's `RunReport` used to be separate structs
+//! with divergent field names (`sps` vs `fps`, `steps` vs `frames`), so the
+//! CLI, the benches and the CI gate each carried per-architecture code.
+//! [`Report`] unifies the common surface (steps, updates, throughput,
+//! `final_params`) and pushes the architecture-specific accounting into a
+//! typed [`Detail`] payload.
+
+use super::Arch;
+
+/// Per-outer-iteration Anakin metrics, averaged over cores and in-graph
+/// updates: `[loss, pg_loss, baseline_loss, entropy, episode_reward]`.
+pub type MetricRow = [f64; 5];
+
+/// What a run produced. `steps` counts environment steps (frames, for the
+/// actor/learner architectures); `throughput` is wall-clock steps/sec and
+/// `projected_throughput` is steps/sec over the critical-path busy time —
+/// the number comparable across core counts on the 1-CPU testbed
+/// (DESIGN.md §1).
+#[derive(Debug)]
+pub struct Report {
+    pub arch: Arch,
+    pub steps: u64,
+    pub updates: u64,
+    pub elapsed: f64,
+    /// Wall-clock steps/sec (sps for Anakin, fps for Sebulba/MuZero).
+    pub throughput: f64,
+    /// Steps/sec if the simulated cores ran truly in parallel
+    /// (steps / critical-path busy time — DESIGN.md §1/§9/§10).
+    pub projected_throughput: f64,
+    pub final_params: Vec<f32>,
+    pub detail: Detail,
+}
+
+/// Architecture-specific accounting.
+#[derive(Debug)]
+pub enum Detail {
+    /// Replicated on-device loop (Anakin).
+    Anakin(AnakinDetail),
+    /// Decomposed actor/learner coordination (Sebulba and MuZero — MuZero
+    /// shares the learner path and reports through the same shape; its
+    /// `actor_*` pipeline fields read 0 because MCTS actors are not
+    /// instrumented with the split-batch overlap accounting).
+    ActorLearner(ActorLearnerDetail),
+}
+
+/// Replica-schedule accounting for the Anakin drivers (DESIGN.md §10).
+#[derive(Debug)]
+pub struct AnakinDetail {
+    /// Learning curve, one [`MetricRow`] per outer iteration.
+    pub metrics: Vec<MetricRow>,
+    /// Device time the replica schedule was exposed to, summed over
+    /// replicas.
+    pub replica_device_seconds: f64,
+    /// Host conversion + metric accumulation time, summed over replicas.
+    pub replica_host_seconds: f64,
+    /// Collective time (bus wait + reduction), summed over replicas.
+    pub replica_collective_seconds: f64,
+    /// Active wall per replica (loop wall minus collective wait), summed.
+    pub replica_active_seconds: f64,
+    /// Work the threaded schedule hid: per replica,
+    /// `max(0, device + host − active)`. ~0 under the serial driver.
+    pub replica_overlap_seconds: f64,
+    /// Max per-replica busy time — the critical-path contribution
+    /// `projected_throughput` divides by.
+    pub replica_busy_max_seconds: f64,
+}
+
+/// Actor/learner pipeline accounting (DESIGN.md §2/§9) shared by Sebulba
+/// and MuZero runs.
+#[derive(Debug)]
+pub struct ActorLearnerDetail {
+    pub mean_staleness: f64,
+    pub mean_episode_reward: f64,
+    pub episodes: u64,
+    pub last_loss: f32,
+    pub actor_busy_seconds: f64,
+    pub learner_busy_seconds: f64,
+    /// Device time actor threads spent on inference (issue → harvest).
+    pub actor_infer_seconds: f64,
+    /// Host time actor threads spent stepping environments.
+    pub actor_env_step_seconds: f64,
+    /// Actor hot-loop wall time, excluding trajectory-queue backpressure.
+    pub actor_loop_seconds: f64,
+    /// Work the split-batch pipeline hid (~0 at `pipeline_stages = 1`).
+    pub actor_overlap_seconds: f64,
+    /// Device span of learner grad rounds (issue → harvest).
+    pub learner_grad_seconds: f64,
+    /// Host time in the collective (tree mean + bus wait).
+    pub learner_collective_seconds: f64,
+    /// Apply-program spans (issue → new params on host).
+    pub learner_apply_seconds: f64,
+    /// Learner hot-loop wall time, excluding queue starvation.
+    pub learner_active_seconds: f64,
+    /// Overlap indicator (~0 at `learner_pipeline = 1`).
+    pub learner_overlap_seconds: f64,
+    pub queue_push_block_seconds: f64,
+    pub queue_pop_block_seconds: f64,
+    /// Optimiser state of replica 0's learner (for warm-starting).
+    pub final_opt_state: Vec<f32>,
+}
+
+impl Report {
+    /// The detail payload, if this was an Anakin run.
+    pub fn as_anakin(&self) -> Option<&AnakinDetail> {
+        match &self.detail {
+            Detail::Anakin(d) => Some(d),
+            Detail::ActorLearner(_) => None,
+        }
+    }
+
+    /// The detail payload, if this was a Sebulba or MuZero run.
+    pub fn as_actor_learner(&self) -> Option<&ActorLearnerDetail> {
+        match &self.detail {
+            Detail::ActorLearner(d) => Some(d),
+            Detail::Anakin(_) => None,
+        }
+    }
+
+    /// `(params, opt_state)` for staging a follow-up run
+    /// (`ExperimentBuilder::warm_start`). `None` for Anakin runs, whose
+    /// optimiser state lives in-graph.
+    pub fn into_warm_start(self) -> Option<(Vec<f32>, Vec<f32>)> {
+        match self.detail {
+            Detail::ActorLearner(d) => Some((self.final_params, d.final_opt_state)),
+            Detail::Anakin(_) => None,
+        }
+    }
+
+    fn steps_label(&self) -> &'static str {
+        match self.arch {
+            Arch::Anakin => "steps",
+            Arch::Sebulba | Arch::MuZero => "frames",
+        }
+    }
+
+    fn rate_label(&self) -> &'static str {
+        match self.arch {
+            Arch::Anakin => "sps",
+            Arch::Sebulba | Arch::MuZero => "fps",
+        }
+    }
+
+    /// The multi-line human summary the CLI prints — one code path for all
+    /// three architectures.
+    pub fn summary(&self) -> String {
+        let rate = self.rate_label();
+        let mut out = format!(
+            "{}: {}={} updates={} elapsed={:.2}s {}={:.0} projected_{}={:.0}",
+            self.arch,
+            self.steps_label(),
+            self.steps,
+            self.updates,
+            self.elapsed,
+            rate,
+            self.throughput,
+            rate,
+            self.projected_throughput
+        );
+        match &self.detail {
+            Detail::Anakin(d) => {
+                out.push_str(&format!(
+                    "\n  replica schedule: device={:.2}s host={:.2}s collective={:.2}s \
+                     hidden_by_overlap={:.2}s busy_max={:.2}s",
+                    d.replica_device_seconds,
+                    d.replica_host_seconds,
+                    d.replica_collective_seconds,
+                    d.replica_overlap_seconds,
+                    d.replica_busy_max_seconds
+                ));
+                if let (Some(first), Some(last)) = (d.metrics.first(), d.metrics.last()) {
+                    out.push_str(&format!(
+                        "\n  reward: {:.3} -> {:.3} | loss: {:.4} -> {:.4}",
+                        first[4], last[4], first[0], last[0]
+                    ));
+                }
+            }
+            Detail::ActorLearner(d) => {
+                out.push_str(&format!(
+                    "\n  episodes={} mean_reward={:.3} staleness={:.2} last_loss={:.4}",
+                    d.episodes, d.mean_episode_reward, d.mean_staleness, d.last_loss
+                ));
+                out.push_str(&format!(
+                    "\n  actor pipeline: infer={:.2}s env_step={:.2}s hidden_by_overlap={:.2}s",
+                    d.actor_infer_seconds, d.actor_env_step_seconds, d.actor_overlap_seconds
+                ));
+                out.push_str(&format!(
+                    "\n  learner pipeline: grad={:.2}s collective={:.2}s apply={:.2}s \
+                     hidden_by_overlap={:.2}s",
+                    d.learner_grad_seconds,
+                    d.learner_collective_seconds,
+                    d.learner_apply_seconds,
+                    d.learner_overlap_seconds
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sebulba_report() -> Report {
+        Report {
+            arch: Arch::Sebulba,
+            steps: 1280,
+            updates: 2,
+            elapsed: 0.5,
+            throughput: 2560.0,
+            projected_throughput: 5120.0,
+            final_params: vec![1.0, 2.0],
+            detail: Detail::ActorLearner(ActorLearnerDetail {
+                mean_staleness: 1.0,
+                mean_episode_reward: 0.25,
+                episodes: 7,
+                last_loss: 0.125,
+                actor_busy_seconds: 0.1,
+                learner_busy_seconds: 0.2,
+                actor_infer_seconds: 0.05,
+                actor_env_step_seconds: 0.04,
+                actor_loop_seconds: 0.09,
+                actor_overlap_seconds: 0.0,
+                learner_grad_seconds: 0.1,
+                learner_collective_seconds: 0.01,
+                learner_apply_seconds: 0.02,
+                learner_active_seconds: 0.15,
+                learner_overlap_seconds: 0.0,
+                queue_push_block_seconds: 0.0,
+                queue_pop_block_seconds: 0.0,
+                final_opt_state: vec![3.0],
+            }),
+        }
+    }
+
+    #[test]
+    fn summary_is_arch_labelled() {
+        let s = sebulba_report().summary();
+        assert!(s.starts_with("sebulba: frames=1280"), "{s}");
+        assert!(s.contains("fps=2560"), "{s}");
+        assert!(s.contains("learner pipeline:"), "{s}");
+    }
+
+    #[test]
+    fn accessors_match_the_detail_variant() {
+        let r = sebulba_report();
+        assert!(r.as_actor_learner().is_some());
+        assert!(r.as_anakin().is_none());
+        let (params, opt) = r.into_warm_start().unwrap();
+        assert_eq!(params, vec![1.0, 2.0]);
+        assert_eq!(opt, vec![3.0]);
+    }
+}

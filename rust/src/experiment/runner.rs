@@ -1,0 +1,27 @@
+//! The `Runner` trait: one contract over Anakin, Sebulba and MuZero.
+//!
+//! A runner is a *workload*: everything about a run that is not the core
+//! split (agent tag, environment, batch geometry, seed, update budget).
+//! The split itself arrives as a [`Topology`] at run time, so one workload
+//! value can be swept across topologies — which is exactly what the benches
+//! do — and `Experiment` can treat all three architectures uniformly
+//! through `Box<dyn Runner>`.
+
+use anyhow::Result;
+
+use crate::runtime::Pod;
+
+use super::{Arch, Report, Topology};
+
+/// Contract: `run` validates `topo` against the pod (`topo.total_cores()
+/// <= pod.n_cores()`), loads its programs, executes to the configured
+/// update budget and returns a [`Report`] whose `detail` variant matches
+/// `self.arch()`. Runs with equal workload + topology + seed on equal
+/// artifacts are deterministic wherever the architecture itself is
+/// (Anakin: bit-exact; Sebulba/MuZero: up to actor/learner interleaving —
+/// see DESIGN.md §12).
+pub trait Runner: Send + Sync {
+    fn arch(&self) -> Arch;
+
+    fn run(&self, pod: &mut Pod, topo: &Topology) -> Result<Report>;
+}

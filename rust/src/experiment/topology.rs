@@ -1,0 +1,202 @@
+//! The declarative core split: how a pod's cores are divided between
+//! acting and learning, how many replicas tile it, and how deep the
+//! actor/learner software pipelines run.
+//!
+//! This is the paper's one idea stated as data: Anakin and Sebulba differ
+//! only in where the acting/learning boundary falls (in-graph vs across
+//! cores), so one `Topology` value describes a run of any architecture.
+//! Architectures read the fields they use: Anakin treats the pod as
+//! `total_cores()` identical replicas of the fused act+learn program (the
+//! actor/learner split is degenerate — build its topology with
+//! [`Topology::anakin`]); Sebulba and MuZero require a proper split
+//! (`require_split`). Knobs an architecture cannot honour are rejected at
+//! build/run time (`Anakin::check_topology`, `MuZero::check_topology`) —
+//! never silently dropped.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// Actor cores per replica (paper: `A`). May be 0 only for
+    /// architectures without a host-side acting path (Anakin).
+    pub actor_cores: usize,
+    /// Learner cores per replica (paper: `8 - A`). For Anakin this is the
+    /// whole slice: every core runs the fused on-device loop.
+    pub learner_cores: usize,
+    /// Replicas (each gets its own cores + host state; cross-replica
+    /// reduction runs on the collective bus).
+    pub replicas: usize,
+    /// Actor threads per actor core (paper: >= 1 Python threads to hide
+    /// env stepping behind device time).
+    pub threads_per_actor_core: usize,
+    /// Sub-batches each actor thread round-robins through the infer→step
+    /// cycle (DESIGN.md §2). 1 = fully synchronous actor.
+    pub pipeline_stages: usize,
+    /// Grad/apply rounds the learner keeps in flight (DESIGN.md §9).
+    /// 1 = serial learner.
+    pub learner_pipeline: usize,
+    /// Worker threads in the shared env-stepping pool, per replica.
+    pub env_workers: usize,
+    /// Trajectory-queue capacity per replica (backpressure bound).
+    pub queue_capacity: usize,
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Self {
+            actor_cores: 2,
+            learner_cores: 2,
+            replicas: 1,
+            threads_per_actor_core: 2,
+            pipeline_stages: 2,
+            learner_pipeline: 2,
+            env_workers: 2,
+            queue_capacity: 4,
+        }
+    }
+}
+
+impl Topology {
+    /// An Anakin slice of `cores` cores: no actor/learner distinction
+    /// (every core runs the fused act+learn program), all pipeline depths
+    /// collapsed to the trivial 1.
+    pub fn anakin(cores: usize) -> Self {
+        Self {
+            actor_cores: 0,
+            learner_cores: cores,
+            replicas: 1,
+            threads_per_actor_core: 1,
+            pipeline_stages: 1,
+            learner_pipeline: 1,
+            env_workers: 1,
+            queue_capacity: 1,
+        }
+    }
+
+    /// A single-replica `actor`:`learner` split with default depths.
+    pub fn split(actor_cores: usize, learner_cores: usize) -> Self {
+        Self { actor_cores, learner_cores, ..Self::default() }
+    }
+
+    pub fn cores_per_replica(&self) -> usize {
+        self.actor_cores + self.learner_cores
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.cores_per_replica() * self.replicas
+    }
+
+    /// Structural validity — the checks every architecture shares. The
+    /// architecture-specific geometry (batch divisibility, shard counts)
+    /// lives with the resolved configs ([`crate::coordinator::SebulbaConfig`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.cores_per_replica() == 0 {
+            bail!("topology has zero cores per replica");
+        }
+        if self.replicas == 0 {
+            bail!("replicas must be >= 1");
+        }
+        if self.threads_per_actor_core == 0 {
+            bail!("threads_per_actor_core must be >= 1");
+        }
+        if self.pipeline_stages == 0 {
+            bail!("pipeline_stages must be >= 1 (1 = synchronous actor)");
+        }
+        if self.learner_pipeline == 0 {
+            bail!("learner_pipeline must be >= 1 (1 = serial learner)");
+        }
+        if self.env_workers == 0 {
+            bail!("env_workers must be >= 1");
+        }
+        if self.queue_capacity == 0 {
+            bail!("queue_capacity must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// [`Self::validate`] plus the pod bound: the split must fit the pod
+    /// it is about to run on.
+    pub fn validate_for_pod(&self, pod_cores: usize) -> Result<()> {
+        self.validate()?;
+        if self.total_cores() > pod_cores {
+            bail!(
+                "topology wants {} cores ({}A+{}L x {} replicas) but the pod has {}",
+                self.total_cores(),
+                self.actor_cores,
+                self.learner_cores,
+                self.replicas,
+                pod_cores
+            );
+        }
+        Ok(())
+    }
+
+    /// Architectures with a host-side acting path (Sebulba, MuZero) need a
+    /// proper actor/learner split.
+    pub fn require_split(&self) -> Result<()> {
+        if self.actor_cores == 0 || self.learner_cores == 0 {
+            bail!(
+                "need at least one actor core and one learner core (got {}A+{}L)",
+                self.actor_cores,
+                self.learner_cores
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_and_anakin_are_valid() {
+        Topology::default().validate().unwrap();
+        Topology::default().require_split().unwrap();
+        let t = Topology::anakin(4);
+        t.validate().unwrap();
+        assert_eq!(t.total_cores(), 4);
+        assert!(t.require_split().is_err(), "anakin topology has no split");
+    }
+
+    #[test]
+    fn zero_cores_rejected() {
+        let t = Topology { actor_cores: 0, learner_cores: 0, ..Default::default() };
+        assert!(t.validate().unwrap_err().to_string().contains("zero cores"));
+        assert!(Topology::anakin(0).validate().is_err());
+    }
+
+    #[test]
+    fn bad_replica_counts_rejected() {
+        let t = Topology { replicas: 0, ..Default::default() };
+        assert!(t.validate().unwrap_err().to_string().contains("replicas"));
+    }
+
+    #[test]
+    fn zero_pipeline_depths_rejected() {
+        let t = Topology { pipeline_stages: 0, ..Default::default() };
+        assert!(t.validate().unwrap_err().to_string().contains("pipeline_stages"));
+        let t = Topology { learner_pipeline: 0, ..Default::default() };
+        assert!(t.validate().unwrap_err().to_string().contains("learner_pipeline"));
+        let t = Topology { threads_per_actor_core: 0, ..Default::default() };
+        assert!(t.validate().is_err());
+        let t = Topology { env_workers: 0, ..Default::default() };
+        assert!(t.validate().is_err());
+        let t = Topology { queue_capacity: 0, ..Default::default() };
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn split_exceeding_pod_rejected() {
+        // 3A+2L fits a 5-core pod exactly, fails a 4-core pod with a
+        // diagnostic naming both sides
+        let t = Topology::split(3, 2);
+        t.validate_for_pod(5).unwrap();
+        let err = t.validate_for_pod(4).unwrap_err().to_string();
+        assert!(err.contains("5 cores") && err.contains("pod has 4"), "{err}");
+        // replication multiplies the demand
+        let t = Topology { replicas: 2, ..Topology::split(2, 2) };
+        assert!(t.validate_for_pod(7).is_err());
+        t.validate_for_pod(8).unwrap();
+    }
+}

@@ -13,6 +13,9 @@
 //!
 //! ## Layout
 //!
+//! * [`experiment`] — **the public API**: `Experiment` builder, typed
+//!   `Topology`/`EnvKind`, the `Runner` trait and the unified `Report`
+//!   (DESIGN.md §12). Start here.
 //! * [`runtime`] — the simulated TPU pod: device cores (threads owning PJRT
 //!   CPU clients), host tensors, the artifact manifest.
 //! * [`envs`] — host-side environments (Catch, GridWorld, CartPole, Chain,
@@ -29,11 +32,25 @@
 //! make artifacts                      # python: AOT-lower the XLA programs
 //! cargo run --release --example quickstart
 //! ```
+//!
+//! ```no_run
+//! use podracer::experiment::{Arch, EnvKind, Experiment, Topology};
+//!
+//! let report = Experiment::new(Arch::Sebulba)
+//!     .env(EnvKind::Catch)
+//!     .topology(Topology::split(2, 2))
+//!     .updates(200)
+//!     .build()?
+//!     .run()?;
+//! println!("{}", report.summary());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
 pub mod anakin;
 pub mod benchkit;
 pub mod coordinator;
 pub mod envs;
+pub mod experiment;
 pub mod runtime;
 pub mod search;
 pub mod testkit;

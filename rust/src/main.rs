@@ -6,15 +6,19 @@
 //! podracer sebulba  [--agent seb_catch] [--env catch] [--actor-cores 2] [--learner-cores 2]
 //!                   [--batch 32] [--pipeline-stages 2] [--unroll 20] [--updates 100]
 //!                   [--replicas 1] [--threads 2] [--data-path arena|copy]
-//! podracer muzero   [--updates 20] [--simulations 16]
+//! podracer muzero   [--env catch] [--updates 20] [--simulations 16]
 //! podracer info     # list artifacts & agents
 //! ```
+//!
+//! Every architecture goes through one declarative path
+//! (`experiment::Experiment::from_args` — DESIGN.md §12): the subcommand
+//! parses to an `Arch`, the flags to a typed `Topology`/`EnvKind`/workload,
+//! and the unified `Report` prints itself. Unknown subcommands, flag names
+//! and flag values all exit nonzero with a diagnostic (`podracer help`
+//! shows usage).
 
 use anyhow::Result;
-use podracer::anakin::{Anakin, AnakinConfig, Driver, Mode};
-use podracer::coordinator::{Sebulba, SebulbaConfig};
-use podracer::runtime::Pod;
-use podracer::search::{run_muzero, MuZeroRunConfig};
+use podracer::experiment::{Arch, Experiment};
 use podracer::util::cli::Args;
 
 fn main() {
@@ -31,131 +35,16 @@ fn main() {
     std::process::exit(code);
 }
 
-fn env_kind_static(name: &str) -> &'static str {
-    match name {
-        "catch" => "catch",
-        "gridworld" => "gridworld",
-        "cartpole" => "cartpole",
-        "chain" => "chain",
-        "atari_like" => "atari_like",
-        _ => "catch",
-    }
-}
-
 fn run(cmd: &str, args: &Args) -> Result<()> {
-    let artifacts = podracer::artifacts_dir();
     match cmd {
-        "anakin" => {
-            let cfg = AnakinConfig {
-                agent: args.get_str("agent", "anakin_catch"),
-                cores: args.get_usize("cores", 4)?,
-                outer_iters: args.get_u64("outer-iters", 20)?,
-                mode: if args.get_str("mode", "bundled") == "psum" {
-                    Mode::Psum
-                } else {
-                    Mode::Bundled
-                },
-                driver: match args.get_str("driver", "threaded").as_str() {
-                    "threaded" => Driver::Threaded,
-                    "serial" => Driver::Serial,
-                    other => anyhow::bail!("--driver expects threaded|serial, got {other:?}"),
-                },
-                seed: args.get_u64("seed", 7)?,
-            };
-            let report = Anakin::run(&artifacts, &cfg)?;
-            println!(
-                "anakin: steps={} updates={} elapsed={:.2}s sps={:.0} projected_sps={:.0}",
-                report.steps, report.updates, report.elapsed, report.sps, report.projected_sps
-            );
-            println!(
-                "  replica schedule: device={:.2}s host={:.2}s collective={:.2}s hidden_by_overlap={:.2}s busy_max={:.2}s",
-                report.replica_device_seconds,
-                report.replica_host_seconds,
-                report.replica_collective_seconds,
-                report.replica_overlap_seconds,
-                report.replica_busy_max_seconds
-            );
-            if let (Some(first), Some(last)) = (report.metrics.first(), report.metrics.last()) {
-                println!(
-                    "  reward: {:.3} -> {:.3} | loss: {:.4} -> {:.4}",
-                    first[4], last[4], first[0], last[0]
-                );
-            }
-            Ok(())
-        }
-        "sebulba" => {
-            let cfg = SebulbaConfig {
-                agent: args.get_str("agent", "seb_catch"),
-                env_kind: env_kind_static(&args.get_str("env", "catch")),
-                actor_cores: args.get_usize("actor-cores", 2)?,
-                learner_cores: args.get_usize("learner-cores", 2)?,
-                threads_per_actor_core: args.get_usize("threads", 2)?,
-                actor_batch: args.get_usize("batch", 32)?,
-                pipeline_stages: args.get_usize("pipeline-stages", 2)?,
-                learner_pipeline: args.get_usize("learner-pipeline", 2)?,
-                unroll: args.get_usize("unroll", 20)?,
-                micro_batches: args.get_usize("micro-batches", 1)?,
-                discount: args.get_f64("discount", 0.99)? as f32,
-                queue_capacity: args.get_usize("queue", 4)?,
-                env_workers: args.get_usize("env-workers", 2)?,
-                replicas: args.get_usize("replicas", 1)?,
-                total_updates: args.get_u64("updates", 100)?,
-                seed: args.get_u64("seed", 42)?,
-                copy_path: match args.get_str("data-path", "arena").as_str() {
-                    "arena" => false,
-                    "copy" => true,
-                    other => anyhow::bail!("--data-path expects arena|copy, got {other:?}"),
-                },
-            };
-            let report = Sebulba::run(&artifacts, &cfg)?;
-            println!(
-                "sebulba: frames={} updates={} elapsed={:.2}s fps={:.0} projected_fps={:.0}",
-                report.frames, report.updates, report.elapsed, report.fps, report.projected_fps
-            );
-            println!(
-                "  episodes={} mean_reward={:.3} staleness={:.2} last_loss={:.4}",
-                report.episodes, report.mean_episode_reward, report.mean_staleness, report.last_loss
-            );
-            println!(
-                "  actor pipeline: infer={:.2}s env_step={:.2}s hidden_by_overlap={:.2}s",
-                report.actor_infer_seconds,
-                report.actor_env_step_seconds,
-                report.actor_overlap_seconds
-            );
-            println!(
-                "  learner pipeline: grad={:.2}s collective={:.2}s apply={:.2}s hidden_by_overlap={:.2}s",
-                report.learner_grad_seconds,
-                report.learner_collective_seconds,
-                report.learner_apply_seconds,
-                report.learner_overlap_seconds
-            );
-            Ok(())
-        }
-        "muzero" => {
-            let cfg = MuZeroRunConfig {
-                agent: args.get_str("agent", "mz_catch"),
-                env_kind: env_kind_static(&args.get_str("env", "catch")),
-                actor_cores: args.get_usize("actor-cores", 2)?,
-                learner_cores: args.get_usize("learner-cores", 2)?,
-                threads_per_actor_core: args.get_usize("threads", 1)?,
-                num_simulations: args.get_usize("simulations", 16)?,
-                learner_pipeline: args.get_usize("learner-pipeline", 1)?,
-                discount: args.get_f64("discount", 0.997)? as f32,
-                queue_capacity: args.get_usize("queue", 4)?,
-                env_workers: args.get_usize("env-workers", 2)?,
-                replicas: args.get_usize("replicas", 1)?,
-                total_updates: args.get_u64("updates", 20)?,
-                seed: args.get_u64("seed", 11)?,
-            };
-            let mut pod = Pod::new(&artifacts, cfg.total_cores())?;
-            let report = run_muzero(&mut pod, &cfg)?;
-            println!(
-                "muzero: frames={} updates={} elapsed={:.2}s fps={:.0} mean_reward={:.3}",
-                report.frames, report.updates, report.elapsed, report.fps, report.mean_episode_reward
-            );
+        "anakin" | "sebulba" | "muzero" => {
+            let arch: Arch = cmd.parse()?;
+            let report = Experiment::from_args(arch, args)?.run()?;
+            println!("{}", report.summary());
             Ok(())
         }
         "info" => {
+            let artifacts = podracer::artifacts_dir();
             let manifest = podracer::runtime::Manifest::load(&artifacts)?;
             println!("artifacts: {}", artifacts.display());
             println!("agents:");
@@ -171,12 +60,19 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             }
             Ok(())
         }
-        _ => {
+        "help" => {
             println!(
                 "usage: podracer <anakin|sebulba|muzero|info> [--flags]\n\
                  run `podracer info` to list available agents/artifacts"
             );
             Ok(())
+        }
+        other => {
+            // unknown subcommands are hard errors like unknown flags are —
+            // a typo'd CI step must not exit 0 having trained nothing
+            anyhow::bail!(
+                "unknown command {other:?} (valid: anakin, sebulba, muzero, info, help)"
+            )
         }
     }
 }

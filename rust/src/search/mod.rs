@@ -13,4 +13,6 @@ pub mod muzero_actor;
 pub mod muzero_run;
 
 pub use mcts::{Mcts, MctsConfig, SearchResult};
-pub use muzero_run::{run_muzero, MuZeroRunConfig};
+#[allow(deprecated)]
+pub use muzero_run::run_muzero;
+pub use muzero_run::{MuZero, MuZeroRunConfig};

@@ -11,20 +11,101 @@ use crate::coordinator::collective::GradientBus;
 use crate::coordinator::learner::{LearnerConfig, LearnerHandles};
 use crate::coordinator::param_store::ParamStore;
 use crate::coordinator::queue::BoundedQueue;
-use crate::coordinator::sebulba::{join_pod_threads, spawn_guarded_learner, RunReport};
+use crate::coordinator::sebulba::{join_pod_threads, spawn_guarded_learner};
 use crate::coordinator::stats::RunStats;
 use crate::envs::{make_factory, WorkerPool};
+use crate::experiment::{
+    ActorLearnerDetail, Arch, Detail, EnvKind, Report, Runner, Topology,
+};
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::{DeviceHandle, Pod};
 
 use super::mcts::MctsConfig;
 use super::muzero_actor::{spawn_muzero_actor, MuZeroActorConfig};
 
-#[derive(Clone, Debug)]
+/// The MuZero *workload* (see `coordinator::Sebulba` for the pattern):
+/// the core split arrives as a [`Topology`] through [`Runner`]. Reached
+/// through `experiment::Experiment::new(Arch::MuZero)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MuZero {
+    /// Manifest agent tag ("mz_catch"); batch/unroll/latent geometry is
+    /// read from the agent's manifest entry.
+    pub agent: String,
+    pub env_kind: EnvKind,
+    /// MCTS simulations per step.
+    pub num_simulations: usize,
+    pub discount: f32,
+    pub total_updates: u64,
+    pub seed: u64,
+}
+
+impl Default for MuZero {
+    fn default() -> Self {
+        let cfg = MuZeroRunConfig::default();
+        Self {
+            agent: cfg.agent,
+            env_kind: cfg.env_kind,
+            num_simulations: cfg.num_simulations,
+            discount: cfg.discount,
+            total_updates: cfg.total_updates,
+            seed: cfg.seed,
+        }
+    }
+}
+
+impl Runner for MuZero {
+    fn arch(&self) -> Arch {
+        Arch::MuZero
+    }
+
+    fn run(&self, pod: &mut Pod, topo: &Topology) -> Result<Report> {
+        MuZero::check_topology(topo)?;
+        run_resolved(pod, &self.resolved(topo))
+    }
+}
+
+impl MuZero {
+    /// `resolved` carries no pipeline_stages (MuZero has no split-batch
+    /// actor pipeline), so a non-1 value must be a hard error, never a
+    /// silently dropped knob — the coercion class the experiment API
+    /// retires. Shared by the builder and direct `Runner` users.
+    pub fn check_topology(topo: &Topology) -> Result<()> {
+        anyhow::ensure!(
+            topo.pipeline_stages == 1,
+            "muzero has no split-batch actor pipeline: topology.pipeline_stages must be 1 \
+             (got {})",
+            topo.pipeline_stages
+        );
+        Ok(())
+    }
+
+    /// Merge this workload with a core split into the resolved run config.
+    pub fn resolved(&self, topo: &Topology) -> MuZeroRunConfig {
+        MuZeroRunConfig {
+            agent: self.agent.clone(),
+            env_kind: self.env_kind,
+            actor_cores: topo.actor_cores,
+            learner_cores: topo.learner_cores,
+            threads_per_actor_core: topo.threads_per_actor_core,
+            num_simulations: self.num_simulations,
+            learner_pipeline: topo.learner_pipeline,
+            discount: self.discount,
+            queue_capacity: topo.queue_capacity,
+            env_workers: topo.env_workers,
+            replicas: topo.replicas,
+            total_updates: self.total_updates,
+            seed: self.seed,
+        }
+    }
+}
+
+/// The resolved MuZero run configuration (internal form — see
+/// `coordinator::SebulbaConfig` for the pattern).
+#[derive(Clone, Debug, PartialEq)]
 pub struct MuZeroRunConfig {
     /// Manifest agent tag ("mz_catch").
     pub agent: String,
-    pub env_kind: &'static str,
+    pub env_kind: EnvKind,
     pub actor_cores: usize,
     pub learner_cores: usize,
     pub threads_per_actor_core: usize,
@@ -46,7 +127,7 @@ impl Default for MuZeroRunConfig {
     fn default() -> Self {
         Self {
             agent: "mz_catch".into(),
-            env_kind: "catch",
+            env_kind: EnvKind::Catch,
             actor_cores: 2,
             learner_cores: 2,
             threads_per_actor_core: 1,
@@ -70,9 +151,55 @@ impl MuZeroRunConfig {
     pub fn total_cores(&self) -> usize {
         self.cores_per_replica() * self.replicas
     }
+
+    /// The core-split half, as the experiment API's typed [`Topology`].
+    /// MuZero has no split-batch actor pipeline, so `pipeline_stages` is 1.
+    pub fn topology(&self) -> Topology {
+        Topology {
+            actor_cores: self.actor_cores,
+            learner_cores: self.learner_cores,
+            replicas: self.replicas,
+            threads_per_actor_core: self.threads_per_actor_core,
+            pipeline_stages: 1,
+            learner_pipeline: self.learner_pipeline,
+            env_workers: self.env_workers,
+            queue_capacity: self.queue_capacity,
+        }
+    }
+
+    /// The workload half, as the [`MuZero`] runner.
+    /// `runner().resolved(&topology())` reproduces `self` exactly.
+    pub fn runner(&self) -> MuZero {
+        MuZero {
+            agent: self.agent.clone(),
+            env_kind: self.env_kind,
+            num_simulations: self.num_simulations,
+            discount: self.discount,
+            total_updates: self.total_updates,
+            seed: self.seed,
+        }
+    }
+
+    /// Structural validity; the manifest-dependent geometry (batch %
+    /// learner_cores) is checked at run time, when the agent is loaded.
+    pub fn validate(&self) -> Result<()> {
+        self.topology().validate()?;
+        self.topology().require_split()?;
+        if self.num_simulations == 0 {
+            anyhow::bail!("num_simulations must be >= 1");
+        }
+        Ok(())
+    }
 }
 
-pub fn run_muzero(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<RunReport> {
+/// Run on an existing pod.
+#[deprecated(note = "one-PR migration shim: use experiment::Experiment::new(Arch::MuZero)")]
+pub fn run_muzero(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<Report> {
+    run_resolved(pod, cfg)
+}
+
+pub(crate) fn run_resolved(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<Report> {
+    cfg.validate()?;
     let agent = pod.manifest.agent(&cfg.agent)?.clone();
     let batch = agent.extra_usize("batch")?;
     let unroll = agent.extra_usize("unroll")?;
@@ -89,9 +216,8 @@ pub fn run_muzero(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<RunReport> {
     let init = format!("{}_init", cfg.agent);
 
     let n_per = cfg.cores_per_replica();
-    anyhow::ensure!(pod.n_cores() >= cfg.total_cores(), "pod too small");
+    cfg.topology().validate_for_pod(pod.n_cores())?;
     anyhow::ensure!(batch % cfg.learner_cores == 0, "batch must divide learner cores");
-    anyhow::ensure!(cfg.learner_pipeline >= 1, "learner_pipeline must be >= 1 (1 = serial)");
 
     let mut actor_core_ids = Vec::new();
     let mut learner_core_ids = Vec::new();
@@ -128,7 +254,7 @@ pub fn run_muzero(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<RunReport> {
     let stats = Arc::new(RunStats::new());
     let stop = Arc::new(AtomicBool::new(false));
     let bus = Arc::new(GradientBus::new(cfg.replicas));
-    let factory: Arc<crate::envs::EnvFactory> = Arc::new(make_factory(cfg.env_kind, cfg.seed)?);
+    let factory: Arc<crate::envs::EnvFactory> = Arc::new(make_factory(cfg.env_kind, cfg.seed));
 
     let mut actor_joins = Vec::new();
     let mut learner_joins = Vec::new();
@@ -239,34 +365,37 @@ pub fn run_muzero(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<RunReport> {
         learner_busy += pod.core(cid)?.busy_seconds() - busy0[cid];
     }
     let frames = stats.env_frames.frames();
-    Ok(RunReport {
-        frames,
+    Ok(Report {
+        arch: Arch::MuZero,
+        steps: frames,
         updates: stats.updates.load(Ordering::Relaxed),
         elapsed,
-        fps: frames as f64 / elapsed.max(1e-12),
-        projected_fps: frames as f64 / critical,
-        mean_staleness: stats.mean_staleness(),
-        mean_episode_reward: stats.mean_episode_reward(),
-        episodes: stats.episodes.load(Ordering::Relaxed),
-        last_loss: stats.last_loss(),
-        actor_busy_seconds: actor_busy,
-        learner_busy_seconds: learner_busy,
-        // MuZero actors are not instrumented with the actor-overlap
-        // accounting (record_actor_overlap is Sebulba-actor only), so the
-        // four actor_* pipeline fields read 0 for this runner; the
-        // learner_* fields are live (shared learner thread).
-        actor_infer_seconds: stats.actor_infer_seconds(),
-        actor_env_step_seconds: stats.actor_env_seconds(),
-        actor_loop_seconds: stats.actor_loop_seconds(),
-        actor_overlap_seconds: stats.actor_overlap_seconds(),
-        learner_grad_seconds: stats.learner_grad_seconds(),
-        learner_collective_seconds: stats.learner_collective_seconds(),
-        learner_apply_seconds: stats.learner_apply_seconds(),
-        learner_active_seconds: stats.learner_active_seconds(),
-        learner_overlap_seconds: stats.learner_overlap_seconds(),
-        queue_push_block_seconds: queues.iter().map(|q| q.push_block_seconds()).sum(),
-        queue_pop_block_seconds: queues.iter().map(|q| q.pop_block_seconds()).sum(),
+        throughput: frames as f64 / elapsed.max(1e-12),
+        projected_throughput: frames as f64 / critical,
         final_params,
-        final_opt_state,
+        detail: Detail::ActorLearner(ActorLearnerDetail {
+            mean_staleness: stats.mean_staleness(),
+            mean_episode_reward: stats.mean_episode_reward(),
+            episodes: stats.episodes.load(Ordering::Relaxed),
+            last_loss: stats.last_loss(),
+            actor_busy_seconds: actor_busy,
+            learner_busy_seconds: learner_busy,
+            // MuZero actors are not instrumented with the actor-overlap
+            // accounting (record_actor_overlap is Sebulba-actor only), so
+            // the four actor_* pipeline fields read 0 for this runner; the
+            // learner_* fields are live (shared learner thread).
+            actor_infer_seconds: stats.actor_infer_seconds(),
+            actor_env_step_seconds: stats.actor_env_seconds(),
+            actor_loop_seconds: stats.actor_loop_seconds(),
+            actor_overlap_seconds: stats.actor_overlap_seconds(),
+            learner_grad_seconds: stats.learner_grad_seconds(),
+            learner_collective_seconds: stats.learner_collective_seconds(),
+            learner_apply_seconds: stats.learner_apply_seconds(),
+            learner_active_seconds: stats.learner_active_seconds(),
+            learner_overlap_seconds: stats.learner_overlap_seconds(),
+            queue_push_block_seconds: queues.iter().map(|q| q.push_block_seconds()).sum(),
+            queue_pop_block_seconds: queues.iter().map(|q| q.pop_block_seconds()).sum(),
+            final_opt_state,
+        }),
     })
 }

@@ -1,7 +1,9 @@
 //! Anakin end-to-end integration: the on-device loop, replication and the
-//! psum-vs-bundled equivalence (DESIGN.md §1 substitution argument).
+//! psum-vs-bundled equivalence (DESIGN.md §1 substitution argument),
+//! through the `Experiment` API.
 
-use podracer::anakin::{params_in_sync, Anakin, AnakinConfig, Driver, Mode};
+use podracer::anakin::{params_in_sync, Driver, Mode};
+use podracer::experiment::{Arch, Experiment, ExperimentBuilder, Topology};
 use podracer::runtime::Pod;
 
 fn artifacts() -> std::path::PathBuf {
@@ -12,54 +14,41 @@ fn artifacts() -> std::path::PathBuf {
     dir
 }
 
+fn anakin(agent: &str, cores: usize, outer_iters: u64, seed: u64) -> ExperimentBuilder {
+    Experiment::new(Arch::Anakin)
+        .artifacts(&artifacts())
+        .agent(agent)
+        .topology(Topology::anakin(cores))
+        .updates(outer_iters)
+        .seed(seed)
+}
+
 #[test]
 fn bundled_smoke_run() {
-    let cfg = AnakinConfig {
-        agent: "anakin_catch".into(),
-        cores: 1,
-        outer_iters: 2,
-        mode: Mode::Bundled,
-        driver: Driver::Threaded,
-        seed: 1,
-    };
-    let report = Anakin::run(&artifacts(), &cfg).unwrap();
+    let report = anakin("anakin_catch", 1, 2, 1).build().unwrap().run().unwrap();
     // batch 64 * unroll 16 * iters 8 * 2 outer * 1 core
     assert_eq!(report.steps, 64 * 16 * 8 * 2);
     assert_eq!(report.updates, 16);
-    assert_eq!(report.metrics.len(), 2);
-    assert!(report.metrics.iter().all(|m| m.iter().all(|x| x.is_finite())));
+    let metrics = &report.as_anakin().unwrap().metrics;
+    assert_eq!(metrics.len(), 2);
+    assert!(metrics.iter().all(|m| m.iter().all(|x| x.is_finite())));
 }
 
 #[test]
 fn deterministic_given_seed() {
     // The paper: Anakin experiments are "self contained and deterministic".
-    let cfg = AnakinConfig {
-        agent: "anakin_catch".into(),
-        cores: 2,
-        outer_iters: 2,
-        mode: Mode::Bundled,
-        driver: Driver::Threaded,
-        seed: 99,
-    };
-    let r1 = Anakin::run(&artifacts(), &cfg).unwrap();
-    let r2 = Anakin::run(&artifacts(), &cfg).unwrap();
+    let exp = anakin("anakin_catch", 2, 2, 99).build().unwrap();
+    let r1 = exp.run().unwrap();
+    let r2 = exp.run().unwrap();
     assert_eq!(r1.final_params, r2.final_params, "same seed must be bit-identical");
-    let cfg2 = AnakinConfig { seed: 100, ..cfg };
-    let r3 = Anakin::run(&artifacts(), &cfg2).unwrap();
+    let r3 = anakin("anakin_catch", 2, 2, 100).build().unwrap().run().unwrap();
     assert_ne!(r1.final_params, r3.final_params, "different seed must differ");
 }
 
 #[test]
 fn psum_mode_keeps_cores_in_sync() {
-    let cfg = AnakinConfig {
-        agent: "anakin_catch".into(),
-        cores: 3,
-        outer_iters: 3,
-        mode: Mode::Psum,
-        driver: Driver::Threaded,
-        seed: 5,
-    };
-    let report = Anakin::run(&artifacts(), &cfg).unwrap();
+    let report =
+        anakin("anakin_catch", 3, 3, 5).mode(Mode::Psum).build().unwrap().run().unwrap();
     assert_eq!(report.updates, 3);
     assert!(report.final_params.iter().all(|x| x.is_finite()));
 }
@@ -73,20 +62,20 @@ fn single_core_psum_diverges_from_bundled_when_k_is_8() {
     // `psum_equals_bundled_at_k1_under_threaded_driver` in
     // rust/tests/anakin_threaded.rs against the `anakin_catch_k1` artifact.)
     let mut pod = Pod::new(&artifacts(), 1).unwrap();
-    let base = AnakinConfig {
-        agent: "anakin_catch".into(),
-        cores: 1,
-        outer_iters: 1,
-        mode: Mode::Psum,
-        driver: Driver::Serial,
-        seed: 7,
-    };
-    let r_psum = Anakin::run_on(&mut pod, &base).unwrap();
-    let r_bund = Anakin::run_on(
-        &mut pod,
-        &AnakinConfig { mode: Mode::Bundled, ..base.clone() },
-    )
-    .unwrap();
+    let r_psum = anakin("anakin_catch", 1, 1, 7)
+        .mode(Mode::Psum)
+        .driver(Driver::Serial)
+        .build()
+        .unwrap()
+        .run_on(&mut pod)
+        .unwrap();
+    let r_bund = anakin("anakin_catch", 1, 1, 7)
+        .mode(Mode::Bundled)
+        .driver(Driver::Serial)
+        .build()
+        .unwrap()
+        .run_on(&mut pod)
+        .unwrap();
     assert!(r_psum.final_params.iter().all(|x| x.is_finite()));
     assert!(r_bund.final_params.iter().all(|x| x.is_finite()));
     assert!(
@@ -101,44 +90,30 @@ fn single_core_psum_diverges_from_bundled_when_k_is_8() {
 fn replication_learns_catch() {
     // 2 cores x 20 outer iters x 8 in-graph updates = 320 updates: enough
     // for catch to go clearly positive (see python test at lr=3e-3).
-    let cfg = AnakinConfig {
-        agent: "anakin_catch".into(),
-        cores: 2,
-        outer_iters: 20,
-        mode: Mode::Bundled,
-        driver: Driver::Threaded,
-        seed: 3,
-    };
-    let report = Anakin::run(&artifacts(), &cfg).unwrap();
-    let last = report.metrics.last().unwrap();
+    let report = anakin("anakin_catch", 2, 20, 3).build().unwrap().run().unwrap();
+    let metrics = &report.as_anakin().unwrap().metrics;
+    let last = metrics.last().unwrap();
     assert!(
         last[4] > 0.3,
         "anakin did not learn catch: final episode reward {}",
         last[4]
     );
     // reward trajectory should improve from start to finish
-    let first = report.metrics.first().unwrap();
+    let first = metrics.first().unwrap();
     assert!(last[4] > first[4], "no improvement: {} -> {}", first[4], last[4]);
 }
 
 #[test]
 fn gridworld_agent_runs() {
-    let cfg = AnakinConfig {
-        agent: "anakin_grid".into(),
-        cores: 1,
-        outer_iters: 2,
-        mode: Mode::Bundled,
-        driver: Driver::Threaded,
-        seed: 2,
-    };
-    let report = Anakin::run(&artifacts(), &cfg).unwrap();
-    assert_eq!(report.metrics.len(), 2);
-    assert!(report.metrics.iter().all(|m| m[0].is_finite()));
+    let report = anakin("anakin_grid", 1, 2, 2).build().unwrap().run().unwrap();
+    let metrics = &report.as_anakin().unwrap().metrics;
+    assert_eq!(metrics.len(), 2);
+    assert!(metrics.iter().all(|m| m[0].is_finite()));
 }
 
 #[test]
 fn pod_too_small_is_rejected() {
     let mut pod = Pod::new(&artifacts(), 1).unwrap();
-    let cfg = AnakinConfig { cores: 4, ..Default::default() };
-    assert!(Anakin::run_on(&mut pod, &cfg).is_err());
+    let exp = anakin("anakin_catch", 4, 2, 7).build().unwrap();
+    assert!(exp.run_on(&mut pod).is_err());
 }

@@ -4,7 +4,8 @@
 //! to the serial reference driver in both collective modes, and the K=1
 //! artifact pins the psum-vs-bundled substitution under the new driver.
 
-use podracer::anakin::{params_in_sync, Anakin, AnakinConfig, Driver, Mode};
+use podracer::anakin::{params_in_sync, Driver, Mode};
+use podracer::experiment::{Arch, Experiment, ExperimentBuilder, Topology};
 use podracer::runtime::Pod;
 
 fn artifacts() -> std::path::PathBuf {
@@ -15,23 +16,30 @@ fn artifacts() -> std::path::PathBuf {
     dir
 }
 
+fn anakin(agent: &str, cores: usize, outer_iters: u64, seed: u64) -> ExperimentBuilder {
+    Experiment::new(Arch::Anakin)
+        .artifacts(&artifacts())
+        .agent(agent)
+        .topology(Topology::anakin(cores))
+        .updates(outer_iters)
+        .seed(seed)
+}
+
 #[test]
 fn threaded_matches_serial_bundled_bit_exact() {
     let mut pod = Pod::new(&artifacts(), 3).unwrap();
-    let base = AnakinConfig {
-        agent: "anakin_catch".into(),
-        cores: 3,
-        outer_iters: 3,
-        mode: Mode::Bundled,
-        driver: Driver::Serial,
-        seed: 21,
-    };
-    let serial = Anakin::run_on(&mut pod, &base).unwrap();
-    let threaded = Anakin::run_on(
-        &mut pod,
-        &AnakinConfig { driver: Driver::Threaded, ..base.clone() },
-    )
-    .unwrap();
+    let serial = anakin("anakin_catch", 3, 3, 21)
+        .driver(Driver::Serial)
+        .build()
+        .unwrap()
+        .run_on(&mut pod)
+        .unwrap();
+    let threaded = anakin("anakin_catch", 3, 3, 21)
+        .driver(Driver::Threaded)
+        .build()
+        .unwrap()
+        .run_on(&mut pod)
+        .unwrap();
     assert_eq!(serial.steps, threaded.steps);
     assert_eq!(serial.updates, threaded.updates);
     assert_eq!(
@@ -40,8 +48,10 @@ fn threaded_matches_serial_bundled_bit_exact() {
     );
     // metrics combine in a different (fixed) grouping, so f64 rounding may
     // differ — but they must agree to float tolerance per entry
-    assert_eq!(serial.metrics.len(), threaded.metrics.len());
-    for (ms, mt) in serial.metrics.iter().zip(&threaded.metrics) {
+    let ms_all = &serial.as_anakin().unwrap().metrics;
+    let mt_all = &threaded.as_anakin().unwrap().metrics;
+    assert_eq!(ms_all.len(), mt_all.len());
+    for (ms, mt) in ms_all.iter().zip(mt_all.iter()) {
         for j in 0..5 {
             assert!(
                 (ms[j] - mt[j]).abs() <= 1e-6 * ms[j].abs().max(1.0),
@@ -56,20 +66,20 @@ fn threaded_matches_serial_bundled_bit_exact() {
 #[test]
 fn threaded_matches_serial_psum_bit_exact() {
     let mut pod = Pod::new(&artifacts(), 3).unwrap();
-    let base = AnakinConfig {
-        agent: "anakin_catch".into(),
-        cores: 3,
-        outer_iters: 2,
-        mode: Mode::Psum,
-        driver: Driver::Serial,
-        seed: 33,
-    };
-    let serial = Anakin::run_on(&mut pod, &base).unwrap();
-    let threaded = Anakin::run_on(
-        &mut pod,
-        &AnakinConfig { driver: Driver::Threaded, ..base.clone() },
-    )
-    .unwrap();
+    let serial = anakin("anakin_catch", 3, 2, 33)
+        .mode(Mode::Psum)
+        .driver(Driver::Serial)
+        .build()
+        .unwrap()
+        .run_on(&mut pod)
+        .unwrap();
+    let threaded = anakin("anakin_catch", 3, 2, 33)
+        .mode(Mode::Psum)
+        .driver(Driver::Threaded)
+        .build()
+        .unwrap()
+        .run_on(&mut pod)
+        .unwrap();
     assert_eq!(serial.updates, threaded.updates);
     assert_eq!(
         serial.final_params, threaded.final_params,
@@ -81,16 +91,9 @@ fn threaded_matches_serial_psum_bit_exact() {
 fn threaded_deterministic_across_runs() {
     // Thread scheduling must not leak into the result: the bus reduces in
     // fixed participant order regardless of arrival order.
-    let cfg = AnakinConfig {
-        agent: "anakin_catch".into(),
-        cores: 3,
-        outer_iters: 2,
-        mode: Mode::Bundled,
-        driver: Driver::Threaded,
-        seed: 5,
-    };
-    let r1 = Anakin::run(&artifacts(), &cfg).unwrap();
-    let r2 = Anakin::run(&artifacts(), &cfg).unwrap();
+    let exp = anakin("anakin_catch", 3, 2, 5).driver(Driver::Threaded).build().unwrap();
+    let r1 = exp.run().unwrap();
+    let r2 = exp.run().unwrap();
     assert_eq!(r1.final_params, r2.final_params);
 }
 
@@ -104,20 +107,18 @@ fn psum_equals_bundled_at_k1_under_threaded_driver() {
     // bar is float tolerance, not bits (cross-driver bitness is pinned by
     // the tests above).
     let mut pod = Pod::new(&artifacts(), 1).unwrap();
-    let base = AnakinConfig {
-        agent: "anakin_catch_k1".into(),
-        cores: 1,
-        outer_iters: 3,
-        mode: Mode::Psum,
-        driver: Driver::Threaded,
-        seed: 11,
-    };
-    let psum = Anakin::run_on(&mut pod, &base).unwrap();
-    let bundled = Anakin::run_on(
-        &mut pod,
-        &AnakinConfig { mode: Mode::Bundled, ..base.clone() },
-    )
-    .unwrap();
+    let psum = anakin("anakin_catch_k1", 1, 3, 11)
+        .mode(Mode::Psum)
+        .build()
+        .unwrap()
+        .run_on(&mut pod)
+        .unwrap();
+    let bundled = anakin("anakin_catch_k1", 1, 3, 11)
+        .mode(Mode::Bundled)
+        .build()
+        .unwrap()
+        .run_on(&mut pod)
+        .unwrap();
     assert_eq!(psum.updates, 3);
     assert_eq!(bundled.updates, 3, "K=1 artifact must do one in-graph update per call");
     assert!(psum.final_params.iter().all(|x| x.is_finite()));
@@ -129,30 +130,26 @@ fn psum_equals_bundled_at_k1_under_threaded_driver() {
 
 #[test]
 fn threaded_report_carries_replica_schedule_accounting() {
-    let cfg = AnakinConfig {
-        agent: "anakin_catch".into(),
-        cores: 2,
-        outer_iters: 3,
-        mode: Mode::Bundled,
-        driver: Driver::Threaded,
-        seed: 9,
-    };
-    let report = Anakin::run(&artifacts(), &cfg).unwrap();
-    assert!(report.replica_device_seconds > 0.0, "device spans must be recorded");
-    assert!(report.replica_host_seconds > 0.0, "host conversion time must be recorded");
-    assert!(report.replica_busy_max_seconds > 0.0);
-    assert!(report.replica_active_seconds >= report.replica_busy_max_seconds);
-    assert!(report.projected_sps.is_finite() && report.projected_sps > 0.0);
+    let report = anakin("anakin_catch", 2, 3, 9)
+        .driver(Driver::Threaded)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let d = report.as_anakin().unwrap();
+    assert!(d.replica_device_seconds > 0.0, "device spans must be recorded");
+    assert!(d.replica_host_seconds > 0.0, "host conversion time must be recorded");
+    assert!(d.replica_busy_max_seconds > 0.0);
+    assert!(d.replica_active_seconds >= d.replica_busy_max_seconds);
+    assert!(report.projected_throughput.is_finite() && report.projected_throughput > 0.0);
     // the serial reference records one pseudo-replica whose exposed spans
     // partition its wall: nothing can be hidden
-    let serial = Anakin::run(
-        &artifacts(),
-        &AnakinConfig { driver: Driver::Serial, ..cfg },
-    )
-    .unwrap();
-    assert!(
-        serial.replica_overlap_seconds < 0.05,
-        "serial driver reported hidden overlap: {}",
-        serial.replica_overlap_seconds
-    );
+    let serial = anakin("anakin_catch", 2, 3, 9)
+        .driver(Driver::Serial)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let overlap = serial.as_anakin().unwrap().replica_overlap_seconds;
+    assert!(overlap < 0.05, "serial driver reported hidden overlap: {overlap}");
 }

@@ -5,9 +5,8 @@ use podracer::coordinator::config::SebulbaConfig;
 use podracer::coordinator::queue::BoundedQueue;
 use podracer::coordinator::sharder::{shard, unshard};
 use podracer::coordinator::trajectory::TrajectoryBuilder;
-use podracer::envs::{make_factory, BatchedEnv, WorkerPool};
-use podracer::runtime::Pod;
-use podracer::search::{run_muzero, MuZeroRunConfig};
+use podracer::envs::{make_factory, BatchedEnv, EnvKind, WorkerPool};
+use podracer::experiment::{Arch, Experiment, Topology};
 use std::sync::Arc;
 
 fn artifacts() -> std::path::PathBuf {
@@ -18,34 +17,36 @@ fn artifacts() -> std::path::PathBuf {
     dir
 }
 
+fn muzero(actor_cores: usize, learner_cores: usize, sims: usize, updates: u64) -> Experiment {
+    Experiment::new(Arch::MuZero)
+        .artifacts(&artifacts())
+        .topology(Topology {
+            actor_cores,
+            learner_cores,
+            threads_per_actor_core: 1,
+            pipeline_stages: 1,
+            learner_pipeline: 1,
+            ..Topology::default()
+        })
+        .num_simulations(sims)
+        .updates(updates)
+        .build()
+        .unwrap()
+}
+
 #[test]
 fn muzero_end_to_end_smoke() {
-    let cfg = MuZeroRunConfig {
-        actor_cores: 1,
-        learner_cores: 1,
-        num_simulations: 6,
-        total_updates: 3,
-        ..Default::default()
-    };
-    let mut pod = Pod::new(&artifacts(), cfg.total_cores()).unwrap();
-    let report = run_muzero(&mut pod, &cfg).unwrap();
+    let report = muzero(1, 1, 6, 3).run().unwrap();
     assert_eq!(report.updates, 3);
-    assert!(report.frames > 0);
-    assert!(report.last_loss.is_finite());
+    assert!(report.steps > 0);
+    assert!(report.as_actor_learner().unwrap().last_loss.is_finite());
     assert!(report.final_params.iter().all(|x| x.is_finite()));
 }
 
 #[test]
 fn muzero_two_learner_cores() {
-    let cfg = MuZeroRunConfig {
-        actor_cores: 1,
-        learner_cores: 2, // shard batch 8 (mz_catch_grad_t16_b8)
-        num_simulations: 4,
-        total_updates: 2,
-        ..Default::default()
-    };
-    let mut pod = Pod::new(&artifacts(), cfg.total_cores()).unwrap();
-    let report = run_muzero(&mut pod, &cfg).unwrap();
+    // shard batch 8 (mz_catch_grad_t16_b8)
+    let report = muzero(1, 2, 4, 2).run().unwrap();
     assert_eq!(report.updates, 2);
 }
 
@@ -53,7 +54,7 @@ fn muzero_two_learner_cores() {
 fn actor_pipeline_without_device() {
     // env -> builder -> shard -> queue -> unshard: the full host-side data
     // path, checked for content preservation.
-    let factory = make_factory("catch", 7).unwrap();
+    let factory = make_factory(EnvKind::Catch, 7);
     let pool = WorkerPool::new(2);
     let env = BatchedEnv::new(&factory, 4, pool).unwrap();
     let (t_len, b, d, a) = (5, 4, 50, 3);
@@ -111,18 +112,8 @@ fn config_program_names_resolve_in_manifest() {
 
 #[test]
 fn all_envs_step_through_batched_pipeline() {
-    for kind in ["catch", "gridworld", "cartpole", "chain", "atari_like"] {
-        let factory = make_factory(
-            match kind {
-                "catch" => "catch",
-                "gridworld" => "gridworld",
-                "cartpole" => "cartpole",
-                "chain" => "chain",
-                _ => "atari_like",
-            },
-            3,
-        )
-        .unwrap();
+    for kind in EnvKind::ALL {
+        let factory = make_factory(kind, 3);
         let pool = WorkerPool::new(2);
         let env = BatchedEnv::new(&factory, 3, pool).unwrap();
         let d = env.obs_dim();

@@ -14,7 +14,7 @@ use podracer::coordinator::param_store::ParamStore;
 use podracer::coordinator::queue::BoundedQueue;
 use podracer::coordinator::stats::RunStats;
 use podracer::coordinator::trajectory::{TrajArena, TrajShard};
-use podracer::coordinator::{Sebulba, SebulbaConfig};
+use podracer::experiment::{Arch, EnvKind, Experiment, Topology};
 use podracer::runtime::tensor::HostTensor;
 use podracer::runtime::Pod;
 use podracer::util::rng::Xoshiro256;
@@ -162,41 +162,45 @@ fn pipeline_1_is_bit_exact_with_the_serial_learner() {
     );
 }
 
-fn overlap_cfg(depth: usize, updates: u64) -> SebulbaConfig {
-    SebulbaConfig {
-        agent: "seb_catch".into(),
-        env_kind: "catch",
-        actor_cores: 1,
-        learner_cores: 2,
-        threads_per_actor_core: 1,
-        actor_batch: 32,
-        pipeline_stages: 2,
-        learner_pipeline: depth,
-        unroll: 20,
-        micro_batches: 2, // 2 rounds per bundle: depth 2 fills without queue luck
-        discount: 0.99,
-        queue_capacity: 2,
-        env_workers: 2,
-        replicas: 1,
-        total_updates: updates,
-        seed: 31,
-        copy_path: false,
-    }
+fn overlap_run(depth: usize, updates: u64) -> podracer::experiment::Report {
+    Experiment::new(Arch::Sebulba)
+        .artifacts(&artifacts())
+        .agent("seb_catch")
+        .env(EnvKind::Catch)
+        .topology(Topology {
+            actor_cores: 1,
+            learner_cores: 2,
+            threads_per_actor_core: 1,
+            pipeline_stages: 2,
+            learner_pipeline: depth,
+            queue_capacity: 2,
+            ..Topology::default()
+        })
+        .actor_batch(32)
+        .unroll(20)
+        .micro_batches(2) // 2 rounds per bundle: depth 2 fills without queue luck
+        .updates(updates)
+        .seed(31)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
 }
 
 #[test]
 fn pipeline_2_reports_learner_overlap_end_to_end() {
-    let report = Sebulba::run(&artifacts(), &overlap_cfg(2, 16)).unwrap();
+    let report = overlap_run(2, 16);
     assert_eq!(report.updates, 16);
-    assert!(report.learner_grad_seconds > 0.0);
-    assert!(report.learner_apply_seconds > 0.0);
+    let d = report.as_actor_learner().unwrap();
+    assert!(d.learner_grad_seconds > 0.0);
+    assert!(d.learner_apply_seconds > 0.0);
     assert!(
-        report.learner_overlap_seconds > 0.0,
+        d.learner_overlap_seconds > 0.0,
         "double buffering hid no learner work: grad={:.3}s coll={:.3}s apply={:.3}s active={:.3}s",
-        report.learner_grad_seconds,
-        report.learner_collective_seconds,
-        report.learner_apply_seconds,
-        report.learner_active_seconds
+        d.learner_grad_seconds,
+        d.learner_collective_seconds,
+        d.learner_apply_seconds,
+        d.learner_active_seconds
     );
     assert!(report.final_params.iter().all(|x| x.is_finite()));
 }
@@ -205,11 +209,8 @@ fn pipeline_2_reports_learner_overlap_end_to_end() {
 fn pipeline_1_reports_no_learner_overlap() {
     // Serial rounds are disjoint sections of the learner's active wall, so
     // nothing can be hidden (small epsilon for timer granularity).
-    let report = Sebulba::run(&artifacts(), &overlap_cfg(1, 8)).unwrap();
+    let report = overlap_run(1, 8);
     assert_eq!(report.updates, 8);
-    assert!(
-        report.learner_overlap_seconds < 0.05,
-        "serial learner reported hidden work: {:.3}s",
-        report.learner_overlap_seconds
-    );
+    let overlap = report.as_actor_learner().unwrap().learner_overlap_seconds;
+    assert!(overlap < 0.05, "serial learner reported hidden work: {overlap:.3}s");
 }

@@ -11,8 +11,8 @@ use podracer::coordinator::queue::BoundedQueue;
 use podracer::coordinator::sharder::unshard;
 use podracer::coordinator::stats::RunStats;
 use podracer::coordinator::trajectory::{Trajectory, TrajectoryBuilder};
-use podracer::coordinator::{Sebulba, SebulbaConfig};
-use podracer::envs::{make_factory, BatchedEnv, WorkerPool};
+use podracer::envs::{make_factory, BatchedEnv, EnvKind, WorkerPool};
+use podracer::experiment::{Arch, Experiment, Topology};
 use podracer::runtime::tensor::HostTensor;
 use podracer::runtime::Pod;
 use podracer::util::rng::Xoshiro256;
@@ -49,7 +49,7 @@ fn run_actor(stages: usize) -> Vec<Trajectory> {
     let queue = Arc::new(BoundedQueue::<ShardBundle>::new(2 * WINDOWS * stages));
     let stats = Arc::new(RunStats::new());
     let stop = Arc::new(AtomicBool::new(false));
-    let factory = Arc::new(make_factory("catch", SEED).unwrap());
+    let factory = Arc::new(make_factory(EnvKind::Catch, SEED));
     let cfg = ActorConfig {
         actor_id: 0,
         batch: B,
@@ -99,7 +99,7 @@ fn run_synchronous_reference() -> Vec<Trajectory> {
     core.cache("params#ref", HostTensor::f32(vec![params.len()], params).unwrap())
         .unwrap();
 
-    let factory = make_factory("catch", SEED).unwrap();
+    let factory = make_factory(EnvKind::Catch, SEED);
     let env = BatchedEnv::new(&factory, B, WorkerPool::new(2)).unwrap();
     let mut obs = vec![0.0f32; B * D];
     env.reset(&mut obs).unwrap();
@@ -164,7 +164,7 @@ fn stages_2_covers_the_same_envs_and_frames() {
     }
 
     // stage 0 + stage 1 reset observations == unsplit reset observations
-    let factory = make_factory("catch", SEED).unwrap();
+    let factory = make_factory(EnvKind::Catch, SEED);
     let env = BatchedEnv::new(&factory, B, WorkerPool::new(2)).unwrap();
     let mut obs = vec![0.0f32; B * D];
     env.reset(&mut obs).unwrap();
@@ -177,32 +177,30 @@ fn stages_2_covers_the_same_envs_and_frames() {
 fn stages_2_still_trains_catch() {
     // Same bar as sebulba_e2e::learning_signal_on_catch, through the
     // double-buffered schedule (random play ≈ -0.6 mean episode reward).
-    let cfg = SebulbaConfig {
-        agent: "seb_catch".into(),
-        env_kind: "catch",
-        actor_cores: 1,
-        learner_cores: 1,
-        threads_per_actor_core: 2,
-        actor_batch: 32,
-        pipeline_stages: 2,
-        learner_pipeline: 2,
-        unroll: 20,
-        micro_batches: 1,
-        discount: 0.99,
-        queue_capacity: 2,
-        env_workers: 2,
-        replicas: 1,
-        total_updates: 300,
-        seed: 123,
-        copy_path: false,
-    };
-    let report = Sebulba::run(&artifacts(), &cfg).unwrap();
+    let report = Experiment::new(Arch::Sebulba)
+        .artifacts(&artifacts())
+        .agent("seb_catch")
+        .env(EnvKind::Catch)
+        .topology(Topology {
+            actor_cores: 1,
+            learner_cores: 1,
+            threads_per_actor_core: 2,
+            pipeline_stages: 2,
+            learner_pipeline: 2,
+            queue_capacity: 2,
+            ..Topology::default()
+        })
+        .actor_batch(32)
+        .unroll(20)
+        .updates(300)
+        .seed(123)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
     assert_eq!(report.updates, 300);
-    assert!(
-        report.mean_episode_reward > -0.3,
-        "no learning signal through the pipeline: mean episode reward {}",
-        report.mean_episode_reward
-    );
+    let reward = report.as_actor_learner().unwrap().mean_episode_reward;
+    assert!(reward > -0.3, "no learning signal through the pipeline: mean episode reward {reward}");
 }
 
 #[test]
@@ -210,34 +208,36 @@ fn stages_2_reports_overlap_on_a_slow_env() {
     // atari_like's pixel rendering is the env latency the split exists to
     // hide; a single actor thread on a single core can only overlap through
     // the pipeline, so hidden-overlap seconds must come out positive.
-    let cfg = SebulbaConfig {
-        agent: "seb_atari".into(),
-        env_kind: "atari_like",
-        actor_cores: 1,
-        learner_cores: 1,
-        threads_per_actor_core: 1,
-        actor_batch: 32,
-        pipeline_stages: 2,
-        learner_pipeline: 2,
-        unroll: 20,
-        micro_batches: 1,
-        discount: 0.99,
-        queue_capacity: 2,
-        env_workers: 2,
-        replicas: 1,
-        total_updates: 4,
-        seed: 5,
-        copy_path: false,
-    };
-    let report = Sebulba::run(&artifacts(), &cfg).unwrap();
+    let report = Experiment::new(Arch::Sebulba)
+        .artifacts(&artifacts())
+        .agent("seb_atari")
+        .env(EnvKind::AtariLike)
+        .topology(Topology {
+            actor_cores: 1,
+            learner_cores: 1,
+            threads_per_actor_core: 1,
+            pipeline_stages: 2,
+            learner_pipeline: 2,
+            queue_capacity: 2,
+            ..Topology::default()
+        })
+        .actor_batch(32)
+        .unroll(20)
+        .updates(4)
+        .seed(5)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
     assert_eq!(report.updates, 4);
-    assert!(report.actor_infer_seconds > 0.0);
-    assert!(report.actor_env_step_seconds > 0.0);
+    let d = report.as_actor_learner().unwrap();
+    assert!(d.actor_infer_seconds > 0.0);
+    assert!(d.actor_env_step_seconds > 0.0);
     assert!(
-        report.actor_overlap_seconds > 0.0,
+        d.actor_overlap_seconds > 0.0,
         "double buffering hid no work: infer={:.3}s env={:.3}s loop={:.3}s",
-        report.actor_infer_seconds,
-        report.actor_env_step_seconds,
-        report.actor_loop_seconds
+        d.actor_infer_seconds,
+        d.actor_env_step_seconds,
+        d.actor_loop_seconds
     );
 }

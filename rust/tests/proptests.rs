@@ -5,7 +5,7 @@ use podracer::coordinator::collective::all_reduce_mean;
 use podracer::coordinator::queue::BoundedQueue;
 use podracer::coordinator::sharder::{shard, shard_copying, unshard};
 use podracer::coordinator::trajectory::{TrajArena, TrajectoryBuilder};
-use podracer::envs::{make_factory, BatchedEnv, WorkerPool};
+use podracer::envs::{make_factory, BatchedEnv, EnvKind, WorkerPool};
 use podracer::testkit::{check, Gen};
 use podracer::util::math::softmax;
 use podracer::util::rng::Xoshiro256;
@@ -243,7 +243,7 @@ fn prop_batched_env_equals_serial_stepping() {
             (batch, steps, seed, workers)
         },
         |&(batch, steps, seed, workers)| {
-            let factory = make_factory("catch", seed).map_err(|e| e.to_string())?;
+            let factory = make_factory(EnvKind::Catch, seed);
             let pool = WorkerPool::new(workers);
             let be = BatchedEnv::new(&factory, batch, pool).map_err(|e| e.to_string())?;
             let mut serial: Vec<_> = (0..batch).map(|i| factory(i)).collect();

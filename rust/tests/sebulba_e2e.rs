@@ -1,6 +1,7 @@
-//! Sebulba end-to-end integration: full coordinator runs on real artifacts.
+//! Sebulba end-to-end integration: full coordinator runs on real artifacts,
+//! through the `Experiment` API.
 
-use podracer::coordinator::{Sebulba, SebulbaConfig};
+use podracer::experiment::{Arch, EnvKind, Experiment, ExperimentBuilder, Topology};
 use podracer::runtime::Pod;
 
 fn artifacts() -> std::path::PathBuf {
@@ -11,36 +12,39 @@ fn artifacts() -> std::path::PathBuf {
     dir
 }
 
-fn small_cfg(updates: u64) -> SebulbaConfig {
-    SebulbaConfig {
-        agent: "seb_catch".into(),
-        env_kind: "catch",
+fn small_topo() -> Topology {
+    Topology {
         actor_cores: 1,
         learner_cores: 1,
         threads_per_actor_core: 1,
-        actor_batch: 32,
         pipeline_stages: 1, // the seed geometry; pipelining has its own e2e suite
         learner_pipeline: 1, // serial learner schedule (learner_pipeline.rs covers 2)
-        unroll: 20,
-        micro_batches: 1,
-        discount: 0.99,
         queue_capacity: 2,
-        env_workers: 2,
-        replicas: 1,
-        total_updates: updates,
-        seed: 123,
-        copy_path: false,
+        ..Topology::default()
     }
+}
+
+fn small(updates: u64) -> ExperimentBuilder {
+    Experiment::new(Arch::Sebulba)
+        .artifacts(&artifacts())
+        .agent("seb_catch")
+        .env(EnvKind::Catch)
+        .topology(small_topo())
+        .actor_batch(32)
+        .unroll(20)
+        .updates(updates)
+        .seed(123)
 }
 
 #[test]
 fn smoke_run_completes_and_reports() {
-    let report = Sebulba::run(&artifacts(), &small_cfg(8)).unwrap();
+    let report = small(8).build().unwrap().run().unwrap();
     assert_eq!(report.updates, 8);
-    assert!(report.frames >= 8 * 32 * 20, "frames {}", report.frames);
-    assert!(report.fps > 0.0);
-    assert!(report.last_loss.is_finite());
-    assert!(report.episodes > 0, "no episodes finished");
+    assert!(report.steps >= 8 * 32 * 20, "frames {}", report.steps);
+    assert!(report.throughput > 0.0);
+    let d = report.as_actor_learner().unwrap();
+    assert!(d.last_loss.is_finite());
+    assert!(d.episodes > 0, "no episodes finished");
     assert!(!report.final_params.is_empty());
     assert!(report.final_params.iter().all(|x| x.is_finite()));
 }
@@ -50,77 +54,87 @@ fn learning_signal_on_catch() {
     // 300 updates of V-trace on catch must beat the random policy
     // (random ≈ -0.6 mean episode reward; learned should exceed -0.2
     // averaged over the whole run, later episodes much higher).
-    let mut cfg = small_cfg(300);
-    cfg.threads_per_actor_core = 2;
-    let report = Sebulba::run(&artifacts(), &cfg).unwrap();
-    assert!(
-        report.mean_episode_reward > -0.3,
-        "no learning signal: mean episode reward {}",
-        report.mean_episode_reward
-    );
+    let report = small(300)
+        .topology(Topology { threads_per_actor_core: 2, ..small_topo() })
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let reward = report.as_actor_learner().unwrap().mean_episode_reward;
+    assert!(reward > -0.3, "no learning signal: mean episode reward {reward}");
 }
 
 #[test]
 fn micro_batches_split_updates() {
     // micro_batches=2: every trajectory produces 2 updates on shards of
     // half the size (the MuZero decoupling trick).
-    let mut cfg = small_cfg(10);
-    cfg.micro_batches = 2; // shard batch = 32/(1*2) = 16
-    let report = Sebulba::run(&artifacts(), &cfg).unwrap();
+    let report = small(10).micro_batches(2).build().unwrap().run().unwrap();
     assert_eq!(report.updates, 10);
 }
 
 #[test]
 fn multi_core_multi_thread_topology() {
-    let mut cfg = small_cfg(12);
-    cfg.actor_cores = 2;
-    cfg.learner_cores = 2; // shard batch 16
-    cfg.threads_per_actor_core = 2;
-    let report = Sebulba::run(&artifacts(), &cfg).unwrap();
+    let report = small(12)
+        .topology(Topology {
+            actor_cores: 2,
+            learner_cores: 2, // shard batch 16
+            threads_per_actor_core: 2,
+            ..small_topo()
+        })
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
     assert_eq!(report.updates, 12);
-    assert!(report.actor_busy_seconds > 0.0);
-    assert!(report.learner_busy_seconds > 0.0);
+    let d = report.as_actor_learner().unwrap();
+    assert!(d.actor_busy_seconds > 0.0);
+    assert!(d.learner_busy_seconds > 0.0);
 }
 
 #[test]
 fn replicated_run_with_gradient_bus() {
-    let mut cfg = small_cfg(6);
-    cfg.replicas = 2;
-    let report = Sebulba::run(&artifacts(), &cfg).unwrap();
+    let report = small(6)
+        .topology(Topology { replicas: 2, ..small_topo() })
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
     // 6 updates per replica, reported globally
     assert_eq!(report.updates, 12);
-    assert!(report.frames > 0);
+    assert!(report.steps > 0);
 }
 
 #[test]
 fn staleness_is_bounded_by_queue() {
     // Queue capacity 1 and a single actor thread keeps data near-on-policy.
-    let mut cfg = small_cfg(20);
-    cfg.queue_capacity = 1;
-    let report = Sebulba::run(&artifacts(), &cfg).unwrap();
-    assert!(
-        report.mean_staleness <= 4.0,
-        "staleness {} too high for capacity-1 queue",
-        report.mean_staleness
-    );
+    let report = small(20)
+        .topology(Topology { queue_capacity: 1, ..small_topo() })
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let staleness = report.as_actor_learner().unwrap().mean_staleness;
+    assert!(staleness <= 4.0, "staleness {staleness} too high for capacity-1 queue");
 }
 
 #[test]
 fn bad_config_is_rejected_before_spawning() {
-    let mut cfg = small_cfg(1);
-    cfg.actor_batch = 30; // not divisible by learner cores * micro batches
-    cfg.learner_cores = 4;
-    assert!(Sebulba::run(&artifacts(), &cfg).is_err());
+    // not divisible by learner cores * micro batches — caught at build()
+    let err = small(1)
+        .topology(Topology { learner_cores: 4, ..small_topo() })
+        .actor_batch(30)
+        .build();
+    assert!(err.is_err());
 }
 
 #[test]
 fn run_on_shared_pod_reuses_compilations() {
     // Two runs on one pod: the second must skip recompilation (loaded set)
     // and still produce correct results.
-    let cfg = small_cfg(4);
-    let mut pod = Pod::new(&artifacts(), cfg.total_cores()).unwrap();
-    let r1 = Sebulba::run_on(&mut pod, &cfg).unwrap();
-    let r2 = Sebulba::run_on(&mut pod, &cfg).unwrap();
+    let exp = small(4).build().unwrap();
+    let mut pod = Pod::new(&artifacts(), exp.topology().total_cores()).unwrap();
+    let r1 = exp.run_on(&mut pod).unwrap();
+    let r2 = exp.run_on(&mut pod).unwrap();
     assert_eq!(r1.updates, 4);
     assert_eq!(r2.updates, 4);
 }

@@ -1,18 +1,17 @@
 //! Shared-pod stats regression (ISSUE 4): Sebulba and MuZero reports used
 //! to read cumulative `pod.core(..).busy_seconds()`, so a second run on the
-//! same pod (or a `run_on_with` staged training) charged itself every
+//! same pod (or a warm-started staged training) charged itself every
 //! previous run's device time — inflating `actor/learner_busy_seconds` and
-//! deflating `projected_fps`. The fix subtracts a pre-run per-core baseline,
-//! exactly as PR 3 did for Anakin's `projected_sps`.
+//! deflating projected throughput. The fix subtracts a pre-run per-core
+//! baseline, exactly as PR 3 did for Anakin's `projected_sps`.
 //!
 //! The test shape makes the pre-fix failure deterministic: run 1 does ~4x
 //! the updates of run 2, so with cumulative counters run 2's busy seconds
 //! would necessarily EXCEED run 1's (it would include them); with the
 //! baseline subtraction they come out well below.
 
-use podracer::coordinator::{Sebulba, SebulbaConfig};
+use podracer::experiment::{Arch, EnvKind, Experiment, Topology};
 use podracer::runtime::Pod;
-use podracer::search::{run_muzero, MuZeroRunConfig};
 
 fn artifacts() -> std::path::PathBuf {
     let dir = podracer::artifacts_dir();
@@ -22,86 +21,97 @@ fn artifacts() -> std::path::PathBuf {
     dir
 }
 
-fn cfg(updates: u64) -> SebulbaConfig {
-    SebulbaConfig {
-        agent: "seb_catch".into(),
-        env_kind: "catch",
-        actor_cores: 1,
-        learner_cores: 1,
-        threads_per_actor_core: 1,
-        actor_batch: 32,
-        pipeline_stages: 1,
-        learner_pipeline: 1,
-        unroll: 20,
-        micro_batches: 1,
-        discount: 0.99,
-        queue_capacity: 2,
-        env_workers: 2,
-        replicas: 1,
-        total_updates: updates,
-        seed: 19,
-        copy_path: false,
-    }
+fn sebulba(updates: u64) -> Experiment {
+    Experiment::new(Arch::Sebulba)
+        .artifacts(&artifacts())
+        .agent("seb_catch")
+        .env(EnvKind::Catch)
+        .topology(Topology {
+            actor_cores: 1,
+            learner_cores: 1,
+            threads_per_actor_core: 1,
+            pipeline_stages: 1,
+            learner_pipeline: 1,
+            queue_capacity: 2,
+            ..Topology::default()
+        })
+        .actor_batch(32)
+        .unroll(20)
+        .updates(updates)
+        .seed(19)
+        .build()
+        .unwrap()
 }
 
 #[test]
 fn second_sebulba_run_on_a_shared_pod_reports_its_own_busy_time() {
-    let mut pod = Pod::new(&artifacts(), cfg(1).total_cores()).unwrap();
-    let heavy = Sebulba::run_on(&mut pod, &cfg(16)).unwrap();
-    let light = Sebulba::run_on(&mut pod, &cfg(4)).unwrap();
+    let mut pod = Pod::new(&artifacts(), sebulba(1).topology().total_cores()).unwrap();
+    let heavy = sebulba(16).run_on(&mut pod).unwrap();
+    let light = sebulba(4).run_on(&mut pod).unwrap();
     assert_eq!(heavy.updates, 16);
     assert_eq!(light.updates, 4);
+    let (h, l) = (heavy.as_actor_learner().unwrap(), light.as_actor_learner().unwrap());
 
     // Cumulative counters would force light >= heavy on both of these.
     assert!(
-        light.actor_busy_seconds < heavy.actor_busy_seconds,
+        l.actor_busy_seconds < h.actor_busy_seconds,
         "actor busy inflated on the shared pod: light {:.3}s vs heavy {:.3}s",
-        light.actor_busy_seconds,
-        heavy.actor_busy_seconds
+        l.actor_busy_seconds,
+        h.actor_busy_seconds
     );
     assert!(
-        light.learner_busy_seconds < heavy.learner_busy_seconds,
+        l.learner_busy_seconds < h.learner_busy_seconds,
         "learner busy inflated on the shared pod: light {:.3}s vs heavy {:.3}s",
-        light.learner_busy_seconds,
-        heavy.learner_busy_seconds
+        l.learner_busy_seconds,
+        h.learner_busy_seconds
     );
-    // projected_fps divides by the per-run critical path; with the old
-    // cumulative counters the second run's denominator included the first
-    // run and throughput collapsed to a fraction. Generous floor: noisy
-    // hosts still clear it, the pre-fix ratio (~updates2/(updates1+updates2))
-    // cannot.
+    // projected throughput divides by the per-run critical path; with the
+    // old cumulative counters the second run's denominator included the
+    // first run and throughput collapsed to a fraction. Generous floor:
+    // noisy hosts still clear it, the pre-fix ratio
+    // (~updates2/(updates1+updates2)) cannot.
     assert!(
-        light.projected_fps > 0.35 * heavy.projected_fps,
-        "projected_fps deflated on the shared pod: light {:.0} vs heavy {:.0}",
-        light.projected_fps,
-        heavy.projected_fps
+        light.projected_throughput > 0.35 * heavy.projected_throughput,
+        "projected fps deflated on the shared pod: light {:.0} vs heavy {:.0}",
+        light.projected_throughput,
+        heavy.projected_throughput
     );
 }
 
 #[test]
 fn second_muzero_run_on_a_shared_pod_reports_its_own_busy_time() {
-    let mz = |updates: u64| MuZeroRunConfig {
-        actor_cores: 1,
-        learner_cores: 1,
-        num_simulations: 4,
-        total_updates: updates,
-        ..Default::default()
+    let mz = |updates: u64| {
+        Experiment::new(Arch::MuZero)
+            .artifacts(&artifacts())
+            .topology(Topology {
+                actor_cores: 1,
+                learner_cores: 1,
+                threads_per_actor_core: 1,
+                pipeline_stages: 1,
+                learner_pipeline: 1,
+                ..Topology::default()
+            })
+            .num_simulations(4)
+            .updates(updates)
+            .build()
+            .unwrap()
     };
-    let mut pod = Pod::new(&artifacts(), mz(1).total_cores()).unwrap();
-    let heavy = run_muzero(&mut pod, &mz(4)).unwrap();
-    let light = run_muzero(&mut pod, &mz(1)).unwrap();
+    let mut pod = Pod::new(&artifacts(), mz(1).topology().total_cores()).unwrap();
+    let heavy = mz(4).run_on(&mut pod).unwrap();
+    let light = mz(1).run_on(&mut pod).unwrap();
     assert_eq!(heavy.updates, 4);
     assert_eq!(light.updates, 1);
+    let (h, l) = (heavy.as_actor_learner().unwrap(), light.as_actor_learner().unwrap());
     assert!(
-        light.actor_busy_seconds < heavy.actor_busy_seconds,
+        l.actor_busy_seconds < h.actor_busy_seconds,
         "muzero actor busy inflated: light {:.3}s vs heavy {:.3}s",
-        light.actor_busy_seconds,
-        heavy.actor_busy_seconds
+        l.actor_busy_seconds,
+        h.actor_busy_seconds
     );
     assert!(
-        light.learner_busy_seconds < heavy.learner_busy_seconds,
+        l.learner_busy_seconds < h.learner_busy_seconds,
         "muzero learner busy inflated: light {:.3}s vs heavy {:.3}s",
-        light.learner_busy_seconds,
-        heavy.learner_busy_seconds
+        l.learner_busy_seconds,
+        h.learner_busy_seconds
     );
 }

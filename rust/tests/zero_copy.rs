@@ -22,8 +22,8 @@ use podracer::coordinator::queue::BoundedQueue;
 use podracer::coordinator::sharder::{shard, shard_copying, unshard};
 use podracer::coordinator::stats::RunStats;
 use podracer::coordinator::trajectory::{TrajArena, Trajectory};
-use podracer::coordinator::{Sebulba, SebulbaConfig};
-use podracer::envs::{make_factory, WorkerPool};
+use podracer::envs::{make_factory, EnvKind, WorkerPool};
+use podracer::experiment::{Arch, Experiment, Topology};
 use podracer::runtime::tensor::HostTensor;
 use podracer::runtime::Pod;
 use podracer::util::rng::Xoshiro256;
@@ -60,7 +60,7 @@ fn run_actor_path(copy_path: bool, num_shards: usize) -> (Vec<ShardBundle>, Vec<
     let queue = Arc::new(BoundedQueue::<ShardBundle>::new(2 * WINDOWS));
     let stats = Arc::new(RunStats::new());
     let stop = Arc::new(AtomicBool::new(false));
-    let factory = Arc::new(make_factory("catch", SEED).unwrap());
+    let factory = Arc::new(make_factory(EnvKind::Catch, SEED));
     let cfg = ActorConfig {
         actor_id: 0,
         batch: B,
@@ -224,32 +224,35 @@ fn learner_on_arena_views_matches_copying_shards_bit_for_bit() {
     assert_eq!(o_view, o_copy, "arena-path optimiser state diverged");
 }
 
-fn e2e_cfg(copy_path: bool) -> SebulbaConfig {
-    SebulbaConfig {
-        agent: "seb_catch".into(),
-        env_kind: "catch",
-        actor_cores: 1,
-        learner_cores: 2,
-        threads_per_actor_core: 1,
-        actor_batch: 32,
-        pipeline_stages: 1,
-        learner_pipeline: 1,
-        unroll: 20,
-        micro_batches: 1,
-        discount: 0.99,
-        queue_capacity: 2,
-        env_workers: 2,
-        replicas: 1,
-        total_updates: 8,
-        seed: 77,
-        copy_path,
-    }
+fn e2e_run(copy_path: bool) -> podracer::experiment::Report {
+    Experiment::new(Arch::Sebulba)
+        .artifacts(&artifacts())
+        .agent("seb_catch")
+        .env(EnvKind::Catch)
+        .topology(Topology {
+            actor_cores: 1,
+            learner_cores: 2,
+            threads_per_actor_core: 1,
+            pipeline_stages: 1,
+            learner_pipeline: 1,
+            queue_capacity: 2,
+            ..Topology::default()
+        })
+        .actor_batch(32)
+        .unroll(20)
+        .copy_path(copy_path)
+        .updates(8)
+        .seed(77)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
 }
 
 #[test]
 fn both_data_paths_train_end_to_end() {
-    let arena = Sebulba::run(&artifacts(), &e2e_cfg(false)).unwrap();
-    let copy = Sebulba::run(&artifacts(), &e2e_cfg(true)).unwrap();
+    let arena = e2e_run(false);
+    let copy = e2e_run(true);
     assert_eq!(arena.updates, 8);
     assert_eq!(copy.updates, 8);
     assert_eq!(arena.final_params.len(), copy.final_params.len());

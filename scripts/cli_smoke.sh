@@ -1,0 +1,96 @@
+#!/usr/bin/env bash
+# CLI smoke matrix (ISSUE 5): run `podracer {anakin,sebulba,muzero}` for one
+# update through every EnvKind variant and assert nonzero steps, plus the
+# negative cases (unknown --env / --mode must exit nonzero with a
+# diagnostic — the values the old CLI silently coerced).
+#
+# Environment matrix:
+#   * sebulba / muzero take `--env` and run against every EnvKind, each
+#     paired with the agent lowered for that observation geometry
+#     (python/compile/aot.py smoke agents).
+#   * anakin's environments are baked into the agent program (in-graph
+#     envs), so its matrix iterates the lowered anakin_* agents instead.
+#
+# Wired into CI next to the bench gate; run locally with `make cli-smoke`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${PODRACER_BIN:-target/release/podracer}
+if [[ ! -x "$BIN" ]]; then
+    echo "[cli-smoke] $BIN missing — run 'cargo build --release' first" >&2
+    exit 1
+fi
+
+fail=0
+
+run_case() {
+    local desc="$1"
+    shift
+    echo "== podracer $* =="
+    local out
+    if ! out="$("$BIN" "$@" 2>&1)"; then
+        echo "$out"
+        echo "[cli-smoke] FAILED ($desc): nonzero exit" >&2
+        fail=1
+        return
+    fi
+    echo "$out" | head -n 1
+    # the unified Report summary leads with steps=N / frames=N
+    if ! echo "$out" | grep -Eq '(steps|frames)=[1-9][0-9]*'; then
+        echo "$out"
+        echo "[cli-smoke] FAILED ($desc): zero steps" >&2
+        fail=1
+    fi
+}
+
+expect_error() {
+    local desc="$1"
+    shift
+    echo "== podracer $* (must fail) =="
+    local out
+    if out="$("$BIN" "$@" 2>&1)"; then
+        echo "$out"
+        echo "[cli-smoke] FAILED ($desc): expected nonzero exit" >&2
+        fail=1
+        return
+    fi
+    echo "$out" | head -n 2
+}
+
+# --- sebulba: every EnvKind --------------------------------------------------
+SEB_COMMON=(--actor-cores 1 --learner-cores 2 --threads 1 --batch 16
+            --pipeline-stages 2 --unroll 20 --updates 1 --queue 2)
+run_case "sebulba catch"      sebulba --env catch      --agent seb_catch     "${SEB_COMMON[@]}"
+run_case "sebulba gridworld"  sebulba --env gridworld  --agent seb_grid      "${SEB_COMMON[@]}"
+run_case "sebulba cartpole"   sebulba --env cartpole   --agent seb_cartpole  "${SEB_COMMON[@]}"
+run_case "sebulba chain"      sebulba --env chain      --agent seb_chain     "${SEB_COMMON[@]}"
+run_case "sebulba atari_like" sebulba --env atari_like --agent seb_atari     "${SEB_COMMON[@]}"
+
+# --- muzero: every EnvKind ---------------------------------------------------
+MZ_COMMON=(--actor-cores 1 --learner-cores 2 --threads 1 --simulations 4
+           --updates 1 --queue 2)
+run_case "muzero catch"      muzero --env catch      --agent mz_catch     "${MZ_COMMON[@]}"
+run_case "muzero gridworld"  muzero --env gridworld  --agent mz_grid      "${MZ_COMMON[@]}"
+run_case "muzero cartpole"   muzero --env cartpole   --agent mz_cartpole  "${MZ_COMMON[@]}"
+run_case "muzero chain"      muzero --env chain      --agent mz_chain     "${MZ_COMMON[@]}"
+run_case "muzero atari_like" muzero --env atari_like --agent mz_atari     "${MZ_COMMON[@]}"
+
+# --- anakin: every in-graph agent (envs are baked into the program) ----------
+run_case "anakin catch"     anakin --agent anakin_catch --cores 2 --outer-iters 1
+run_case "anakin gridworld" anakin --agent anakin_grid  --cores 2 --outer-iters 1
+run_case "anakin psum"      anakin --agent anakin_catch --cores 2 --outer-iters 1 --mode psum
+run_case "anakin serial"    anakin --agent anakin_catch --cores 2 --outer-iters 1 --driver serial
+
+# --- negative cases: the footguns ISSUE 5 retires ----------------------------
+expect_error "unknown env"      sebulba --env nosuchenv --updates 1
+expect_error "unknown mode"     anakin --mode nosuchmode --outer-iters 1
+expect_error "unknown driver"   anakin --driver warp --outer-iters 1
+expect_error "unknown data-path" sebulba --data-path zip --updates 1
+expect_error "unknown flag"     sebulba --batchsize 64 --updates 1
+expect_error "unknown command"  sebulba2 --env catch --updates 1
+
+if [[ "$fail" -ne 0 ]]; then
+    echo "[cli-smoke] FAILURES above" >&2
+    exit 1
+fi
+echo "[cli-smoke] all cases passed"
