@@ -8,7 +8,7 @@ SMOKE_BENCHES := fig4a_anakin_scaling ablation_learner_pipeline ablation_pipelin
                  fig4b_actor_batch
 
 .PHONY: all artifacts build test quickstart bench bench-learner-pipeline \
-        bench-smoke bench-baseline cli-smoke fmt clippy
+        bench-smoke bench-baseline cli-smoke restore-smoke fmt clippy
 
 all: artifacts build
 
@@ -54,6 +54,13 @@ bench-smoke:
 # next to the bench gate.
 cli-smoke: build
 	bash scripts/cli_smoke.sh
+
+# Restore smoke (ISSUE 6): checkpoint → restore → continue through the
+# shipped CLI, with `cmp` as the bit-identical oracle (checkpoint files are
+# deterministic), plus the corruption/misuse hard-error cases
+# (scripts/restore_smoke.sh). Runs in CI next to cli-smoke.
+restore-smoke: build
+	bash scripts/restore_smoke.sh
 
 # Regenerate the committed baselines from a smoke run on this machine
 # (same PODRACER_BENCH_FAST=1 conditions CI compares under).

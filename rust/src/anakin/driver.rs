@@ -8,14 +8,20 @@
 //! init, same pre-drawn seed table), so their final parameters are
 //! bit-identical and any throughput gap is purely the host schedule.
 
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::checkpoint::{
+    core_env_section, expect_field, Checkpoint, CheckpointSpec, CoreEnvSection, MetaSection,
+    StoreSection, META_SECTION, STORE_SECTION,
+};
 use crate::coordinator::collective::{all_reduce_mean, TensorBus};
 use crate::coordinator::stats::RunStats;
-use crate::experiment::{AnakinDetail, Arch, Detail, MetricRow, Report};
+use crate::experiment::{AnakinDetail, Arch, Detail, MetricRow, Report, RunSpec, Topology};
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::{DeviceHandle, Pod};
 
@@ -115,6 +121,134 @@ pub(super) fn prepare(pod: &mut Pod, run: &Anakin, cores: usize) -> Result<Setup
     })
 }
 
+/// Load + validate an Anakin checkpoint and overwrite the prepared per-core
+/// state with it. Returns the number of outer iterations already done.
+/// Anakin stores the model once (every core holds identical params/opt
+/// after each collective) plus one env-state tensor per core; the meta
+/// `env` field is empty because the environments live in-graph.
+fn apply_restore(
+    path: &Path,
+    run: &Anakin,
+    topo: &Topology,
+    states: &mut [CoreInit],
+) -> Result<u64> {
+    let ckpt = Checkpoint::load_for(path, Arch::Anakin, topo)
+        .with_context(|| format!("restoring from {}", path.display()))?;
+    let meta = MetaSection::decode(ckpt.section(META_SECTION)?)?;
+    expect_field("agent", meta.agent.clone(), run.agent.clone())?;
+    expect_field("seed", meta.seed, run.seed)?;
+    expect_field("env", meta.env.clone(), String::new())?;
+    let store = StoreSection::decode(ckpt.section(STORE_SECTION)?)?;
+    expect_field("store version", store.version, meta.rounds_done)?;
+    let p = HostTensor::f32(vec![store.params.len()], store.params)?;
+    let o = HostTensor::f32(vec![store.opt.len()], store.opt)?;
+    for (i, s) in states.iter_mut().enumerate() {
+        let name = core_env_section(i);
+        let ces = CoreEnvSection::decode(&name, ckpt.section(&name)?)?;
+        let shape: Vec<usize> = ces.shape.iter().map(|&d| d as usize).collect();
+        s.env_states = HostTensor::f32(shape, ces.data)
+            .with_context(|| format!("rebuilding the restored {name} tensor"))?;
+        s.params = p.clone();
+        s.opt = o.clone();
+    }
+    Ok(meta.rounds_done)
+}
+
+/// Cross-replica checkpoint rendezvous. Each core deposits its env-state
+/// section after finishing round `done`; the depositor that completes the
+/// set writes the file (params/opt are identical on every core after the
+/// round's collective, so any depositor may supply them). The `TensorBus`
+/// collective at the next round is a barrier, so saves for successive
+/// rounds cannot interleave. The serial driver uses the same type with all
+/// deposits coming from the driver thread.
+pub(super) struct AnakinCheckpoint {
+    pub spec: CheckpointSpec,
+    /// `rounds_done` is stamped with the round count at save time.
+    meta: MetaSection,
+    topology: Topology,
+    n_cores: usize,
+    /// Injected fault: cut the file to this length after each save.
+    truncate_to: Option<u64>,
+    pending: Mutex<BTreeMap<u64, BTreeMap<usize, CoreEnvSection>>>,
+}
+
+impl AnakinCheckpoint {
+    pub(super) fn new(
+        spec: CheckpointSpec,
+        run: &Anakin,
+        topo: &Topology,
+        n_cores: usize,
+        truncate_to: Option<u64>,
+    ) -> Self {
+        Self {
+            spec,
+            meta: MetaSection {
+                agent: run.agent.clone(),
+                seed: run.seed,
+                env: String::new(),
+                rounds_done: 0,
+            },
+            topology: topo.clone(),
+            n_cores,
+            truncate_to,
+            pending: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Deposit core `core_id`'s state for round `done`; whoever completes
+    /// the set saves atomically.
+    pub(super) fn deposit(
+        &self,
+        core_id: usize,
+        done: u64,
+        params: &HostTensor,
+        opt: &HostTensor,
+        env_states: &HostTensor,
+    ) -> Result<()> {
+        let ces = CoreEnvSection {
+            shape: env_states.shape.iter().map(|&d| d as u64).collect(),
+            data: env_states.as_f32()?.to_vec(),
+        };
+        let complete = {
+            let mut g = self.pending.lock().unwrap();
+            let entry = g.entry(done).or_default();
+            entry.insert(core_id, ces);
+            if entry.len() == self.n_cores {
+                g.remove(&done)
+            } else {
+                None
+            }
+        };
+        let Some(core_sections) = complete else { return Ok(()) };
+        let mut c = Checkpoint::new(Arch::Anakin, &self.topology);
+        let mut meta = self.meta.clone();
+        meta.rounds_done = done;
+        c.insert(META_SECTION, meta.encode());
+        c.insert(
+            STORE_SECTION,
+            StoreSection {
+                params: params.as_f32()?.to_vec(),
+                opt: opt.as_f32()?.to_vec(),
+                version: done,
+            }
+            .encode(),
+        );
+        for (i, ces) in &core_sections {
+            c.insert(&core_env_section(*i), ces.encode());
+        }
+        c.save(&self.spec.path)
+            .with_context(|| format!("saving checkpoint to {}", self.spec.path.display()))?;
+        if let Some(len) = self.truncate_to {
+            let f = std::fs::OpenOptions::new()
+                .write(true)
+                .open(&self.spec.path)
+                .context("truncate-checkpoint fault")?;
+            f.set_len(len).context("truncate-checkpoint fault")?;
+        }
+        Ok(())
+    }
+}
+
 /// Sum a bundled call's `[K, 5]` metric tensor into this core's partial
 /// row (mean over the K in-graph updates; the cross-core mean happens when
 /// partials combine).
@@ -145,6 +279,7 @@ fn finish_report(
     run: &Anakin,
     n_cores: usize,
     setup_meta: (usize, usize, usize), // (batch, unroll, iters)
+    outer_done: u64,
     cores: &[DeviceHandle],
     busy0: &[f64],
     stats: &RunStats,
@@ -158,7 +293,9 @@ fn finish_report(
         Mode::Bundled => batch * unroll * iters,
         Mode::Psum => batch * unroll,
     };
-    let steps = (per_call as u64) * run.outer_iters * n_cores as u64;
+    // Steps executed *by this run*: a restored run counts only its own
+    // outer iterations (the checkpointed ones were the previous run's).
+    let steps = (per_call as u64) * outer_done * n_cores as u64;
     // Critical path: max per-core device busy *of this run* (the baseline
     // subtraction makes `projected_sps` honest on reused pods), lengthened
     // by the exposed replica schedule (DESIGN.md §10).
@@ -193,9 +330,28 @@ fn finish_report(
 /// accounting records one pseudo-replica whose exposed device time is the
 /// recv-blocked spans only, so `replica_overlap_seconds` is ~0 — the
 /// serial schedule hides nothing *of its own*.
-pub(super) fn run_serial(pod: &mut Pod, run: &Anakin, n_cores: usize) -> Result<Report> {
+pub(super) fn run_serial(
+    pod: &mut Pod,
+    run: &Anakin,
+    topo: &Topology,
+    spec: &RunSpec,
+) -> Result<Report> {
+    let n_cores = topo.total_cores();
     let Setup { batch, unroll, iters, bundled, psum_grad, apply, mut states, seeds, cores, busy0 } =
         prepare(pod, run, n_cores)?;
+    let start = match &spec.restore_from {
+        Some(path) => apply_restore(path, run, topo, &mut states)?,
+        None => 0,
+    };
+    let ck = spec.checkpoint.as_ref().map(|cs| {
+        AnakinCheckpoint::new(
+            cs.clone(),
+            run,
+            topo,
+            n_cores,
+            spec.fault.as_ref().and_then(|f| f.truncate_checkpoint_to),
+        )
+    });
     let stats = RunStats::new();
     let mut metrics_hist: Vec<MetricRow> = Vec::new();
     let mut updates = 0u64;
@@ -204,7 +360,18 @@ pub(super) fn run_serial(pod: &mut Pod, run: &Anakin, n_cores: usize) -> Result<
     let mut collective_busy = Duration::ZERO;
     let t0 = Instant::now();
 
-    for row_seeds in &seeds {
+    // A restored run consumes the tail of the same pre-drawn seed table the
+    // original run would have — the continuation sees identical seeds.
+    let skip = (start as usize).min(seeds.len());
+    for (k, row_seeds) in seeds[skip..].iter().enumerate() {
+        let round = start + k as u64;
+        if let Some(f) = &spec.fault {
+            // Serial twin of the per-replica kill: one thread drives every
+            // core, so a kill on any of them takes the whole schedule down.
+            if (0..n_cores).any(|i| f.should_kill(i, round)) {
+                anyhow::bail!("injected fault: anakin driver killed at round {round}");
+            }
+        }
         match run.mode {
             Mode::Bundled => {
                 let mut waits = Vec::with_capacity(n_cores);
@@ -315,6 +482,15 @@ pub(super) fn run_serial(pod: &mut Pod, run: &Anakin, n_cores: usize) -> Result<
                 updates += 1;
             }
         }
+        if let Some(ck) = &ck {
+            let done = round + 1;
+            if ck.spec.due(done) {
+                for (i, s) in states.iter().enumerate() {
+                    ck.deposit(i, done, &s.params, &s.opt, &s.env_states)
+                        .with_context(|| format!("checkpoint after round {done}"))?;
+                }
+            }
+        }
     }
 
     let elapsed = t0.elapsed().as_secs_f64();
@@ -324,6 +500,7 @@ pub(super) fn run_serial(pod: &mut Pod, run: &Anakin, n_cores: usize) -> Result<
         run,
         n_cores,
         (batch, unroll, iters),
+        seeds.len() as u64 - skip as u64,
         &cores,
         &busy0,
         &stats,
@@ -338,9 +515,39 @@ pub(super) fn run_serial(pod: &mut Pod, run: &Anakin, n_cores: usize) -> Result<
 /// the [`TensorBus`] (deterministic reduction order => bit-exact vs the
 /// serial schedule), host conversion and metric accumulation parallel
 /// across replicas and overlapping the next device call (DESIGN.md §10).
-pub(super) fn run_threaded(pod: &mut Pod, run: &Anakin, n_cores: usize) -> Result<Report> {
-    let Setup { batch, unroll, iters, bundled, psum_grad, apply, states, seeds, cores, busy0 } =
-        prepare(pod, run, n_cores)?;
+pub(super) fn run_threaded(
+    pod: &mut Pod,
+    run: &Anakin,
+    topo: &Topology,
+    spec: &RunSpec,
+) -> Result<Report> {
+    let n_cores = topo.total_cores();
+    let Setup {
+        batch,
+        unroll,
+        iters,
+        bundled,
+        psum_grad,
+        apply,
+        mut states,
+        seeds,
+        cores,
+        busy0,
+    } = prepare(pod, run, n_cores)?;
+    let start = match &spec.restore_from {
+        Some(path) => apply_restore(path, run, topo, &mut states)?,
+        None => 0,
+    };
+    let ck = spec.checkpoint.as_ref().map(|cs| {
+        Arc::new(AnakinCheckpoint::new(
+            cs.clone(),
+            run,
+            topo,
+            n_cores,
+            spec.fault.as_ref().and_then(|f| f.truncate_checkpoint_to),
+        ))
+    });
+    let skip = (start as usize).min(seeds.len());
     let stats = Arc::new(RunStats::new());
     let bus = Arc::new(TensorBus::new(n_cores));
     let t0 = Instant::now();
@@ -353,7 +560,10 @@ pub(super) fn run_threaded(pod: &mut Pod, run: &Anakin, n_cores: usize) -> Resul
             bundled: bundled.clone(),
             psum_grad: psum_grad.clone(),
             apply: apply.clone(),
-            seeds: seeds.iter().map(|row| row[i]).collect(),
+            seeds: seeds[skip..].iter().map(|row| row[i]).collect(),
+            start,
+            fault: spec.fault.clone(),
+            checkpoint: ck.clone(),
         };
         joins.push(replica::spawn_replica(rcfg, st, bus.clone(), stats.clone()));
     }
@@ -397,7 +607,7 @@ pub(super) fn run_threaded(pod: &mut Pod, run: &Anakin, n_cores: usize) -> Resul
     // bit-exact — DESIGN.md §10).
     let replicas: Vec<replica::ReplicaOut> =
         outs.into_iter().map(|o| o.expect("no error => every replica returned")).collect();
-    let outer = run.outer_iters as usize;
+    let outer = seeds.len() - skip;
     let mut metrics_hist = vec![[0.0f64; 5]; outer];
     for rep in &replicas {
         for (o, row) in rep.metrics_partial.iter().enumerate() {
@@ -407,14 +617,15 @@ pub(super) fn run_threaded(pod: &mut Pod, run: &Anakin, n_cores: usize) -> Resul
         }
     }
     let updates = match run.mode {
-        Mode::Bundled => iters as u64 * run.outer_iters,
-        Mode::Psum => run.outer_iters,
+        Mode::Bundled => iters as u64 * outer as u64,
+        Mode::Psum => outer as u64,
     };
     let final_params = replicas.into_iter().next().expect("at least one replica").final_params;
     Ok(finish_report(
         run,
         n_cores,
         (batch, unroll, iters),
+        outer as u64,
         &cores,
         &busy0,
         &stats,

@@ -40,7 +40,7 @@ use std::str::FromStr;
 
 use anyhow::Result;
 
-use crate::experiment::{Arch, Report, Runner, Topology};
+use crate::experiment::{Arch, Report, RunSpec, Runner, Topology};
 use crate::runtime::Pod;
 
 pub use crate::experiment::MetricRow;
@@ -120,13 +120,17 @@ impl Runner for Anakin {
         Arch::Anakin
     }
 
-    fn run(&self, pod: &mut Pod, topo: &Topology) -> Result<Report> {
+    fn run_checkpointed(&self, pod: &mut Pod, topo: &Topology, spec: &RunSpec) -> Result<Report> {
         Anakin::check_topology(topo)?;
         topo.validate_for_pod(pod.n_cores())?;
-        let cores = topo.total_cores();
+        // Honour-or-reject: Anakin has no trajectory queue, so a poison
+        // fault cannot fire — error out rather than silently drop the knob.
+        if spec.fault.as_ref().is_some_and(|f| f.poison_queue_after.is_some()) {
+            anyhow::bail!("anakin has no trajectory queue: poison-queue fault cannot apply");
+        }
         match self.driver {
-            Driver::Serial => driver::run_serial(pod, self, cores),
-            Driver::Threaded => driver::run_threaded(pod, self, cores),
+            Driver::Serial => driver::run_serial(pod, self, topo, spec),
+            Driver::Threaded => driver::run_threaded(pod, self, topo, spec),
         }
     }
 }

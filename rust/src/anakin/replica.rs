@@ -26,8 +26,9 @@ use anyhow::{Context, Result};
 use crate::coordinator::collective::TensorBus;
 use crate::coordinator::stats::RunStats;
 use crate::runtime::tensor::HostTensor;
+use crate::testkit::FaultPlan;
 
-use super::driver::{bundled_partial_row, psum_partial_row, CoreInit};
+use super::driver::{bundled_partial_row, psum_partial_row, AnakinCheckpoint, CoreInit};
 use super::{MetricRow, Mode};
 
 pub(super) struct ReplicaConfig {
@@ -37,8 +38,16 @@ pub(super) struct ReplicaConfig {
     pub psum_grad: String,
     pub apply: String,
     /// This replica's column of the driver's seed table, one per outer
-    /// iteration.
+    /// iteration. On a restored run this is the table's *tail*: rows the
+    /// checkpointed run already consumed are skipped by the driver.
     pub seeds: Vec<i32>,
+    /// Outer iterations the restored run already completed (0 when fresh);
+    /// `start + k` is round k's absolute index.
+    pub start: u64,
+    /// Scheduled faults (resilience tests only).
+    pub fault: Option<FaultPlan>,
+    /// Cross-replica checkpoint rendezvous, when the run checkpoints.
+    pub checkpoint: Option<Arc<AnakinCheckpoint>>,
 }
 
 pub(super) struct ReplicaOut {
@@ -96,7 +105,15 @@ fn replica_main(
     let mut collective_busy = Duration::ZERO;
     let t_loop = Instant::now();
 
-    for &seed in &cfg.seeds {
+    for (k, &seed) in cfg.seeds.iter().enumerate() {
+        let round = cfg.start + k as u64;
+        if let Some(f) = &cfg.fault {
+            // Injected fault: die at the start of this round, before any of
+            // its effects, exactly as a crashed replica process would.
+            if f.should_kill(id, round) {
+                anyhow::bail!("injected fault: anakin replica {id} killed at round {round}");
+            }
+        }
         let program = match cfg.mode {
             Mode::Bundled => &cfg.bundled,
             Mode::Psum => &cfg.psum_grad,
@@ -192,6 +209,17 @@ fn replica_main(
                 opt = HostTensor::f32(vec![o_new.len()], o_new)?;
                 pending_metrics = Some(metrics_t);
                 host_busy += t.elapsed();
+            }
+        }
+        // Deposit after the round's collective: every replica now holds
+        // identical params/opt, so whichever completes the set saves. The
+        // next round's collective is a barrier, so this save finishes
+        // before any later round's can begin.
+        if let Some(ck) = &cfg.checkpoint {
+            let done = round + 1;
+            if ck.spec.due(done) {
+                ck.deposit(id, done, &params, &opt, &env_states)
+                    .with_context(|| format!("checkpoint after round {done}"))?;
             }
         }
     }

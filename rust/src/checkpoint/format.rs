@@ -1,0 +1,515 @@
+//! The on-disk checkpoint encoding: a length-prefixed binary container
+//! with a fixed header and per-section CRCs (DESIGN.md §13).
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic            8  b"PODRCKPT"
+//! format_version   u32
+//! arch_tag         u32   (1 = anakin, 2 = sebulba, 3 = muzero)
+//! topology_hash    u64   (Topology::fingerprint of the writing run)
+//! section_count    u32
+//! per section:
+//!   name_len       u32
+//!   name           name_len bytes (utf-8)
+//!   payload_len    u64
+//!   payload        payload_len bytes
+//!   crc32          u32   (IEEE, over name bytes ++ payload bytes)
+//! ```
+//!
+//! Every decode failure is a typed [`CheckpointError`] — corruption must
+//! never panic and must never silently load (ISSUE 6). The vendored set has
+//! no serde/crc crates, so the CRC and the framing are hand-rolled here.
+
+use std::fmt;
+
+/// File magic: identifies a Podracer checkpoint regardless of version.
+pub const MAGIC: [u8; 8] = *b"PODRCKPT";
+
+/// Current (and only) container format version.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Everything that can go wrong reading or writing a checkpoint. Restore
+/// code paths return these (wrapped in `anyhow` at the workload layer) —
+/// never `unwrap`, never a silent fallback to fresh state.
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// Underlying filesystem failure (open/read/write/rename).
+    Io(std::io::Error),
+    /// The file ended before a length-prefixed field it promised.
+    Truncated { context: &'static str },
+    /// The first 8 bytes are not a Podracer checkpoint.
+    BadMagic { found: [u8; 8] },
+    /// A format this build does not read.
+    UnsupportedVersion { found: u32, supported: u32 },
+    /// The checkpoint was written by a different architecture.
+    ArchMismatch { found: String, expected: String },
+    /// The checkpoint was written under a different `Topology`.
+    TopologyMismatch { found: u64, expected: u64 },
+    /// A section's stored CRC does not match its payload.
+    CrcMismatch { section: String, stored: u32, computed: u32 },
+    /// A section the restore path requires is absent.
+    MissingSection { section: String },
+    /// A section decoded but its payload is malformed.
+    Corrupt { section: String, detail: String },
+    /// A workload field (agent, seed, env, ...) disagrees with the run
+    /// being restored into.
+    Mismatch { field: &'static str, found: String, expected: String },
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "checkpoint io error: {e}"),
+            CheckpointError::Truncated { context } => {
+                write!(f, "checkpoint truncated while reading {context}")
+            }
+            CheckpointError::BadMagic { found } => {
+                write!(f, "not a podracer checkpoint (magic {found:02x?})")
+            }
+            CheckpointError::UnsupportedVersion { found, supported } => write!(
+                f,
+                "checkpoint format version {found} unsupported (this build reads {supported})"
+            ),
+            CheckpointError::ArchMismatch { found, expected } => write!(
+                f,
+                "checkpoint was written by a {found} run, cannot restore a {expected} run"
+            ),
+            CheckpointError::TopologyMismatch { found, expected } => write!(
+                f,
+                "checkpoint topology hash {found:#018x} != this run's {expected:#018x}"
+            ),
+            CheckpointError::CrcMismatch { section, stored, computed } => write!(
+                f,
+                "checkpoint section {section:?} corrupt: crc stored {stored:#010x}, computed {computed:#010x}"
+            ),
+            CheckpointError::MissingSection { section } => {
+                write!(f, "checkpoint is missing required section {section:?}")
+            }
+            CheckpointError::Corrupt { section, detail } => {
+                write!(f, "checkpoint section {section:?} malformed: {detail}")
+            }
+            CheckpointError::Mismatch { field, found, expected } => write!(
+                f,
+                "checkpoint {field} mismatch: checkpoint has {found:?}, run expects {expected:?}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CheckpointError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> Self {
+        CheckpointError::Io(e)
+    }
+}
+
+// -- CRC32 (IEEE 802.3, reflected, poly 0xEDB88320) --------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC32_TABLE: [u32; 256] = crc32_table();
+
+/// IEEE CRC32 of `bytes` (the same polynomial zlib/ethernet use).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    crc32_update(0xFFFF_FFFF, bytes) ^ 0xFFFF_FFFF
+}
+
+/// Streaming form: feed successive chunks into the running state (start
+/// from `0xFFFF_FFFF`, finish by xoring with `0xFFFF_FFFF`).
+pub fn crc32_update(state: u32, bytes: &[u8]) -> u32 {
+    let mut c = state;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c
+}
+
+// -- primitive payload encoding ----------------------------------------------
+
+/// Accumulates one section's payload. All slices are length-prefixed so the
+/// reader never guesses geometry.
+#[derive(Default)]
+pub struct SectionWriter {
+    buf: Vec<u8>,
+}
+
+impl SectionWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn put_blob(&mut self, bytes: &[u8]) {
+        self.put_u64(bytes.len() as u64);
+        self.buf.extend_from_slice(bytes);
+    }
+
+    pub fn put_u64s(&mut self, vs: &[u64]) {
+        self.put_u64(vs.len() as u64);
+        for &v in vs {
+            self.put_u64(v);
+        }
+    }
+
+    pub fn put_f32s(&mut self, vs: &[f32]) {
+        self.put_u64(vs.len() as u64);
+        for &v in vs {
+            self.put_f32(v);
+        }
+    }
+
+    pub fn put_i32s(&mut self, vs: &[i32]) {
+        self.put_u64(vs.len() as u64);
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Decodes one section's payload; every overrun or malformed field is a
+/// typed [`CheckpointError::Corrupt`] carrying the section name.
+pub struct SectionReader<'a> {
+    section: &'a str,
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SectionReader<'a> {
+    pub fn new(section: &'a str, buf: &'a [u8]) -> Self {
+        Self { section, buf, pos: 0 }
+    }
+
+    fn corrupt(&self, detail: impl Into<String>) -> CheckpointError {
+        CheckpointError::Corrupt { section: self.section.to_string(), detail: detail.into() }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CheckpointError> {
+        if self.pos + n > self.buf.len() {
+            return Err(self.corrupt(format!(
+                "wanted {n} bytes at offset {}, payload has {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    /// A length prefix sanity-checked against the bytes actually left, so a
+    /// corrupted count can't drive a huge allocation.
+    fn len_prefix(&mut self, elem_bytes: usize) -> Result<usize, CheckpointError> {
+        let n = self.u64()? as usize;
+        let remaining = self.buf.len() - self.pos;
+        if n.checked_mul(elem_bytes).map_or(true, |total| total > remaining) {
+            return Err(self.corrupt(format!(
+                "length prefix {n} x {elem_bytes}B exceeds the {remaining} bytes left"
+            )));
+        }
+        Ok(n)
+    }
+
+    pub fn u32(&mut self) -> Result<u32, CheckpointError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, CheckpointError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, CheckpointError> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn str(&mut self) -> Result<String, CheckpointError> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| self.corrupt("string field is not utf-8"))
+    }
+
+    pub fn blob(&mut self) -> Result<Vec<u8>, CheckpointError> {
+        let n = self.len_prefix(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn u64s(&mut self) -> Result<Vec<u64>, CheckpointError> {
+        let n = self.len_prefix(8)?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>, CheckpointError> {
+        let n = self.len_prefix(4)?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    pub fn i32s(&mut self) -> Result<Vec<i32>, CheckpointError> {
+        let n = self.len_prefix(4)?;
+        (0..n)
+            .map(|_| {
+                let b = self.take(4)?;
+                Ok(i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            })
+            .collect()
+    }
+
+    /// Assert the payload is fully consumed — trailing garbage is corruption,
+    /// not something to ignore.
+    pub fn done(&self) -> Result<(), CheckpointError> {
+        if self.pos != self.buf.len() {
+            return Err(self.corrupt(format!(
+                "{} trailing bytes after the last field",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+// -- file framing -------------------------------------------------------------
+
+/// Serialize the container: header + CRC'd sections.
+pub fn encode_file(arch_tag: u32, topology_hash: u64, sections: &[(String, Vec<u8>)]) -> Vec<u8> {
+    let body: usize = sections.iter().map(|(n, p)| 4 + n.len() + 8 + p.len() + 4).sum();
+    let mut out = Vec::with_capacity(8 + 4 + 4 + 8 + 4 + body);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&arch_tag.to_le_bytes());
+    out.extend_from_slice(&topology_hash.to_le_bytes());
+    out.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+    for (name, payload) in sections {
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(payload);
+        let crc = crc32_update(crc32_update(0xFFFF_FFFF, name.as_bytes()), payload) ^ 0xFFFF_FFFF;
+        out.extend_from_slice(&crc.to_le_bytes());
+    }
+    out
+}
+
+struct FileReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> FileReader<'a> {
+    fn take(&mut self, n: usize, context: &'static str) -> Result<&'a [u8], CheckpointError> {
+        if self.pos + n > self.buf.len() {
+            return Err(CheckpointError::Truncated { context });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u32(&mut self, context: &'static str) -> Result<u32, CheckpointError> {
+        let b = self.take(4, context)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, context: &'static str) -> Result<u64, CheckpointError> {
+        let b = self.take(8, context)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+}
+
+/// Decode the container, verifying magic, format version and every
+/// section CRC. Arch/topology are returned raw — semantic verification
+/// against the restoring run happens in [`super::Checkpoint::verify`].
+#[allow(clippy::type_complexity)]
+pub fn decode_file(
+    bytes: &[u8],
+) -> Result<(u32, u64, Vec<(String, Vec<u8>)>), CheckpointError> {
+    let mut r = FileReader { buf: bytes, pos: 0 };
+    let magic = r.take(8, "magic")?;
+    if magic != MAGIC {
+        let mut found = [0u8; 8];
+        found.copy_from_slice(magic);
+        return Err(CheckpointError::BadMagic { found });
+    }
+    let version = r.u32("format version")?;
+    if version != FORMAT_VERSION {
+        return Err(CheckpointError::UnsupportedVersion {
+            found: version,
+            supported: FORMAT_VERSION,
+        });
+    }
+    let arch_tag = r.u32("arch tag")?;
+    let topology_hash = r.u64("topology hash")?;
+    let count = r.u32("section count")? as usize;
+    let mut sections = Vec::with_capacity(count.min(64));
+    for _ in 0..count {
+        let name_len = r.u32("section name length")? as usize;
+        let name_bytes = r.take(name_len, "section name")?;
+        let name = String::from_utf8(name_bytes.to_vec()).map_err(|_| {
+            CheckpointError::Corrupt {
+                section: String::from_utf8_lossy(name_bytes).into_owned(),
+                detail: "section name is not utf-8".into(),
+            }
+        })?;
+        let payload_len = r.u64("section payload length")? as usize;
+        let payload = r.take(payload_len, "section payload")?.to_vec();
+        let stored = r.u32("section crc")?;
+        let computed =
+            crc32_update(crc32_update(0xFFFF_FFFF, name.as_bytes()), &payload) ^ 0xFFFF_FFFF;
+        if stored != computed {
+            return Err(CheckpointError::CrcMismatch { section: name, stored, computed });
+        }
+        sections.push((name, payload));
+    }
+    if r.pos != bytes.len() {
+        return Err(CheckpointError::Corrupt {
+            section: "<file>".into(),
+            detail: format!("{} trailing bytes after the last section", bytes.len() - r.pos),
+        });
+    }
+    Ok((arch_tag, topology_hash, sections))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // the classic zlib test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn writer_reader_roundtrip_every_primitive() {
+        let mut w = SectionWriter::new();
+        w.put_u32(7);
+        w.put_u64(u64::MAX - 3);
+        w.put_f32(-1.5);
+        w.put_str("catch");
+        w.put_blob(&[1, 2, 3]);
+        w.put_u64s(&[9, 8]);
+        w.put_f32s(&[0.25, -0.5, 1e9]);
+        w.put_i32s(&[-1, 0, i32::MAX]);
+        let bytes = w.finish();
+        let mut r = SectionReader::new("t", &bytes);
+        assert_eq!(r.u32().unwrap(), 7);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.str().unwrap(), "catch");
+        assert_eq!(r.blob().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.u64s().unwrap(), vec![9, 8]);
+        assert_eq!(r.f32s().unwrap(), vec![0.25, -0.5, 1e9]);
+        assert_eq!(r.i32s().unwrap(), vec![-1, 0, i32::MAX]);
+        r.done().unwrap();
+    }
+
+    #[test]
+    fn reader_overrun_and_trailing_are_corrupt_not_panic() {
+        let mut w = SectionWriter::new();
+        w.put_u32(1);
+        let bytes = w.finish();
+        let mut r = SectionReader::new("t", &bytes);
+        assert!(matches!(r.u64(), Err(CheckpointError::Corrupt { .. })));
+        let mut r = SectionReader::new("t", &bytes);
+        r.u32().unwrap();
+        r.done().unwrap();
+        let r = SectionReader::new("t", &bytes);
+        assert!(matches!(r.done(), Err(CheckpointError::Corrupt { .. })));
+    }
+
+    #[test]
+    fn hostile_length_prefix_cannot_drive_allocation() {
+        let mut w = SectionWriter::new();
+        w.put_u64(u64::MAX); // claims 2^64-1 f32s follow
+        let bytes = w.finish();
+        let mut r = SectionReader::new("t", &bytes);
+        assert!(matches!(r.f32s(), Err(CheckpointError::Corrupt { .. })));
+    }
+
+    #[test]
+    fn file_roundtrip_and_each_corruption_is_typed() {
+        let sections = vec![
+            ("meta".to_string(), b"hello".to_vec()),
+            ("store".to_string(), vec![0u8; 64]),
+        ];
+        let bytes = encode_file(2, 0xABCD, &sections);
+        let (tag, topo, back) = decode_file(&bytes).unwrap();
+        assert_eq!((tag, topo), (2, 0xABCD));
+        assert_eq!(back, sections);
+
+        // truncation — anywhere in the file
+        for cut in [3, 9, 20, bytes.len() - 1] {
+            let err = decode_file(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(err, CheckpointError::Truncated { .. }),
+                "cut at {cut}: {err}"
+            );
+        }
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(decode_file(&bad).unwrap_err(), CheckpointError::BadMagic { .. }));
+        // wrong format version
+        let mut bad = bytes.clone();
+        bad[8] = 99;
+        assert!(matches!(
+            decode_file(&bad).unwrap_err(),
+            CheckpointError::UnsupportedVersion { found: 99, .. }
+        ));
+        // payload bit-flip -> CRC mismatch
+        let mut bad = bytes.clone();
+        let n = bad.len();
+        bad[n - 10] ^= 0x40; // inside the last section's payload
+        assert!(matches!(decode_file(&bad).unwrap_err(), CheckpointError::CrcMismatch { .. }));
+        // trailing garbage
+        let mut bad = bytes.clone();
+        bad.push(0);
+        assert!(matches!(decode_file(&bad).unwrap_err(), CheckpointError::Corrupt { .. }));
+    }
+}

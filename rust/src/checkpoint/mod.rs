@@ -1,0 +1,497 @@
+//! Checkpoint/restore: elastic-pod state snapshots with a bit-identical
+//! continuation contract (DESIGN.md §13).
+//!
+//! A [`Checkpoint`] is a named-section container written atomically
+//! (temp file + rename, so teardown mid-write never leaves a partial file
+//! behind) in the binary format of [`format`]. Each architecture stores
+//! its resume state as typed sections:
+//!
+//! * all archs — [`MetaSection`]: agent, seed, env kind, rounds done.
+//! * Sebulba / MuZero — [`StoreSection`] (ParamStore params + optimiser
+//!   state + published version) and [`ActorSection`] (actor RNG, window
+//!   counter, boundary observation, per-env serialized state).
+//! * Anakin — [`StoreSection`] (per-core params/opt are identical after
+//!   every collective, so the model is stored once; `version` carries the
+//!   outer-iteration count) plus one [`CoreEnvSection`] per core for the
+//!   in-graph environment state.
+//!
+//! The restore contract: run K updates → checkpoint → restore in a fresh
+//! process → run K more ≡ an uninterrupted 2K run, bit-identical in
+//! `final_params` (`rust/tests/restore_equivalence.rs`). Corrupt or
+//! mismatched files are typed [`CheckpointError`]s — never a panic, never
+//! a silent fresh start.
+
+pub mod format;
+
+use std::path::{Path, PathBuf};
+
+pub use format::{CheckpointError, SectionReader, SectionWriter};
+
+use crate::experiment::{Arch, Topology};
+
+/// Wire tag for each architecture (0 is reserved so an all-zero header
+/// never decodes as a valid arch).
+fn arch_tag(arch: Arch) -> u32 {
+    match arch {
+        Arch::Anakin => 1,
+        Arch::Sebulba => 2,
+        Arch::MuZero => 3,
+    }
+}
+
+fn arch_from_tag(tag: u32) -> Option<Arch> {
+    match tag {
+        1 => Some(Arch::Anakin),
+        2 => Some(Arch::Sebulba),
+        3 => Some(Arch::MuZero),
+        _ => None,
+    }
+}
+
+/// When and where a run writes checkpoints.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CheckpointSpec {
+    /// Write after every `every` learner updates / outer iterations.
+    pub every: u64,
+    /// Target file; each write replaces it atomically.
+    pub path: PathBuf,
+}
+
+impl CheckpointSpec {
+    pub fn new(every: u64, path: impl Into<PathBuf>) -> Self {
+        Self { every: every.max(1), path: path.into() }
+    }
+
+    /// Is a checkpoint due after completing `rounds_done` updates?
+    pub fn due(&self, rounds_done: u64) -> bool {
+        rounds_done > 0 && rounds_done % self.every == 0
+    }
+}
+
+/// A named-section snapshot of one run's resumable state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub arch: Arch,
+    pub topology_fingerprint: u64,
+    /// Insertion-ordered (name, payload) pairs; names are unique.
+    sections: Vec<(String, Vec<u8>)>,
+}
+
+impl Checkpoint {
+    pub fn new(arch: Arch, topo: &Topology) -> Self {
+        Self { arch, topology_fingerprint: topo.fingerprint(), sections: Vec::new() }
+    }
+
+    /// Insert (or replace) a section.
+    pub fn insert(&mut self, name: &str, payload: Vec<u8>) {
+        if let Some(slot) = self.sections.iter_mut().find(|(n, _)| n == name) {
+            slot.1 = payload;
+        } else {
+            self.sections.push((name.to_string(), payload));
+        }
+    }
+
+    /// A required section's payload; absence is a typed error.
+    pub fn section(&self, name: &str) -> Result<&[u8], CheckpointError> {
+        self.sections
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, p)| p.as_slice())
+            .ok_or_else(|| CheckpointError::MissingSection { section: name.to_string() })
+    }
+
+    pub fn has_section(&self, name: &str) -> bool {
+        self.sections.iter().any(|(n, _)| n == name)
+    }
+
+    pub fn section_names(&self) -> impl Iterator<Item = &str> {
+        self.sections.iter().map(|(n, _)| n.as_str())
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        format::encode_file(arch_tag(self.arch), self.topology_fingerprint, &self.sections)
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, CheckpointError> {
+        let (tag, topo, sections) = format::decode_file(bytes)?;
+        let arch = arch_from_tag(tag).ok_or(CheckpointError::Corrupt {
+            section: "<header>".into(),
+            detail: format!("unknown arch tag {tag}"),
+        })?;
+        Ok(Self { arch, topology_fingerprint: topo, sections })
+    }
+
+    /// Write atomically: serialize to `<path>.tmp`, fsync, rename over
+    /// `path`. A crash or teardown mid-write leaves either the previous
+    /// complete checkpoint or a stray `.tmp` — never a partial file at
+    /// `path` (pinned by `rust/tests/fault_injection.rs`).
+    pub fn save(&self, path: &Path) -> Result<(), CheckpointError> {
+        let tmp = tmp_path(path);
+        let write = || -> Result<(), CheckpointError> {
+            let mut f = std::fs::File::create(&tmp)?;
+            std::io::Write::write_all(&mut f, &self.to_bytes())?;
+            f.sync_all()?;
+            drop(f);
+            std::fs::rename(&tmp, path)?;
+            Ok(())
+        };
+        let out = write();
+        if out.is_err() {
+            let _ = std::fs::remove_file(&tmp);
+        }
+        out
+    }
+
+    /// Read and structurally validate (magic, version, CRCs) — semantic
+    /// checks against the restoring run are [`Checkpoint::verify`].
+    pub fn load(path: &Path) -> Result<Self, CheckpointError> {
+        let bytes = std::fs::read(path)?;
+        Self::from_bytes(&bytes)
+    }
+
+    /// Semantic validation: the checkpoint must come from the same
+    /// architecture and an identical topology.
+    pub fn verify(&self, arch: Arch, topo: &Topology) -> Result<(), CheckpointError> {
+        if self.arch != arch {
+            return Err(CheckpointError::ArchMismatch {
+                found: self.arch.to_string(),
+                expected: arch.to_string(),
+            });
+        }
+        let expected = topo.fingerprint();
+        if self.topology_fingerprint != expected {
+            return Err(CheckpointError::TopologyMismatch {
+                found: self.topology_fingerprint,
+                expected,
+            });
+        }
+        Ok(())
+    }
+
+    /// `load` + `verify` in one step — the restore entrypoint runners use.
+    pub fn load_for(path: &Path, arch: Arch, topo: &Topology) -> Result<Self, CheckpointError> {
+        let ckpt = Self::load(path)?;
+        ckpt.verify(arch, topo)?;
+        Ok(ckpt)
+    }
+}
+
+/// The sibling temp file `save` stages into before the atomic rename.
+pub fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Check a workload field against the checkpointed value; a disagreement
+/// is a typed error, never a silent override.
+pub fn expect_field<T: PartialEq + std::fmt::Display>(
+    field: &'static str,
+    found: T,
+    expected: T,
+) -> Result<(), CheckpointError> {
+    if found != expected {
+        return Err(CheckpointError::Mismatch {
+            field,
+            found: found.to_string(),
+            expected: expected.to_string(),
+        });
+    }
+    Ok(())
+}
+
+// -- typed sections -----------------------------------------------------------
+
+/// Workload identity every architecture stores: restoring into a different
+/// agent/seed/env would continue a *different* run, so each is verified.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MetaSection {
+    pub agent: String,
+    pub seed: u64,
+    /// CLI name of the host env kind; empty for Anakin (in-graph envs).
+    pub env: String,
+    /// Learner updates (Sebulba/MuZero) or outer iterations (Anakin)
+    /// completed when the checkpoint was written.
+    pub rounds_done: u64,
+}
+
+pub const META_SECTION: &str = "meta";
+
+impl MetaSection {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = SectionWriter::new();
+        w.put_str(&self.agent);
+        w.put_u64(self.seed);
+        w.put_str(&self.env);
+        w.put_u64(self.rounds_done);
+        w.finish()
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Self, CheckpointError> {
+        let mut r = SectionReader::new(META_SECTION, payload);
+        let out = Self {
+            agent: r.str()?,
+            seed: r.u64()?,
+            env: r.str()?,
+            rounds_done: r.u64()?,
+        };
+        r.done()?;
+        Ok(out)
+    }
+}
+
+/// ParamStore contents: model parameters, optimiser state, published
+/// version. For Anakin the "store" is the replicated in-graph model
+/// (identical on every core after each collective) and `version` echoes
+/// `rounds_done`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StoreSection {
+    pub params: Vec<f32>,
+    pub opt: Vec<f32>,
+    pub version: u64,
+}
+
+pub const STORE_SECTION: &str = "store";
+
+impl StoreSection {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = SectionWriter::new();
+        w.put_u64(self.version);
+        w.put_f32s(&self.params);
+        w.put_f32s(&self.opt);
+        w.finish()
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Self, CheckpointError> {
+        let mut r = SectionReader::new(STORE_SECTION, payload);
+        let version = r.u64()?;
+        let params = r.f32s()?;
+        let opt = r.f32s()?;
+        r.done()?;
+        Ok(Self { params, opt, version })
+    }
+}
+
+/// One actor thread's boundary state: everything the Sebulba/MuZero actor
+/// needs to produce window `windows_done` exactly as the uninterrupted run
+/// would have (DESIGN.md §13: the deposit-before-push protocol).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ActorSection {
+    /// Windows fully produced (== the store version the next window waits
+    /// for under checkpointed lockstep pacing).
+    pub windows_done: u64,
+    /// Snapshot of the actor's `Xoshiro256` stream.
+    pub rng: [u64; 4],
+    /// The bootstrap observation of the last finished window — the first
+    /// observation of the next one.
+    pub obs: Vec<f32>,
+    /// Running per-env episode returns (stats continuity).
+    pub episode_reward: Vec<f32>,
+    /// `Environment::save_state` bytes, one per env slot.
+    pub env_states: Vec<Vec<u8>>,
+}
+
+pub const ACTOR_SECTION: &str = "actor0";
+
+impl ActorSection {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = SectionWriter::new();
+        w.put_u64(self.windows_done);
+        w.put_u64s(&self.rng);
+        w.put_f32s(&self.obs);
+        w.put_f32s(&self.episode_reward);
+        w.put_u64(self.env_states.len() as u64);
+        for s in &self.env_states {
+            w.put_blob(s);
+        }
+        w.finish()
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Self, CheckpointError> {
+        let mut r = SectionReader::new(ACTOR_SECTION, payload);
+        let windows_done = r.u64()?;
+        let rng_vec = r.u64s()?;
+        let rng: [u64; 4] = rng_vec.try_into().map_err(|_| CheckpointError::Corrupt {
+            section: ACTOR_SECTION.into(),
+            detail: "rng state is not 4 words".into(),
+        })?;
+        let obs = r.f32s()?;
+        let episode_reward = r.f32s()?;
+        let n = r.u64()? as usize;
+        let mut env_states = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            env_states.push(r.blob()?);
+        }
+        r.done()?;
+        Ok(Self { windows_done, rng, obs, episode_reward, env_states })
+    }
+}
+
+/// One Anakin core's in-graph environment state (a host tensor: shape +
+/// f32 data). Section name: [`core_env_section`]`(core)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoreEnvSection {
+    pub shape: Vec<u64>,
+    pub data: Vec<f32>,
+}
+
+pub fn core_env_section(core: usize) -> String {
+    format!("env_core{core}")
+}
+
+impl CoreEnvSection {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = SectionWriter::new();
+        w.put_u64s(&self.shape);
+        w.put_f32s(&self.data);
+        w.finish()
+    }
+
+    pub fn decode(section: &str, payload: &[u8]) -> Result<Self, CheckpointError> {
+        let mut r = SectionReader::new(section, payload);
+        let shape = r.u64s()?;
+        let data = r.f32s()?;
+        r.done()?;
+        let want: u64 = shape.iter().product();
+        if want != data.len() as u64 {
+            return Err(CheckpointError::Corrupt {
+                section: section.to_string(),
+                detail: format!("shape {shape:?} wants {want} elements, payload has {}", data.len()),
+            });
+        }
+        Ok(Self { shape, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("podracer_ckpt_{}_{tag}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample() -> Checkpoint {
+        let topo = Topology::split(1, 1);
+        let mut c = Checkpoint::new(Arch::Sebulba, &topo);
+        c.insert(
+            META_SECTION,
+            MetaSection { agent: "seb_catch".into(), seed: 55, env: "catch".into(), rounds_done: 2 }
+                .encode(),
+        );
+        c.insert(
+            STORE_SECTION,
+            StoreSection { params: vec![1.0, -2.5], opt: vec![0.0; 4], version: 2 }.encode(),
+        );
+        c.insert(
+            ACTOR_SECTION,
+            ActorSection {
+                windows_done: 2,
+                rng: [1, 2, 3, 4],
+                obs: vec![0.5; 6],
+                episode_reward: vec![0.0, 1.0],
+                env_states: vec![vec![9, 9], vec![]],
+            }
+            .encode(),
+        );
+        c
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_lossless_and_leaves_no_tmp() {
+        let dir = scratch_dir("roundtrip");
+        let path = dir.join("run.ckpt");
+        let c = sample();
+        c.save(&path).unwrap();
+        assert!(!tmp_path(&path).exists(), "atomic save must not leave its temp file");
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, c);
+        let meta = MetaSection::decode(back.section(META_SECTION).unwrap()).unwrap();
+        assert_eq!(meta.agent, "seb_catch");
+        let actor = ActorSection::decode(back.section(ACTOR_SECTION).unwrap()).unwrap();
+        assert_eq!(actor.env_states, vec![vec![9, 9], vec![]]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_replaces_atomically() {
+        let dir = scratch_dir("replace");
+        let path = dir.join("run.ckpt");
+        let mut c = sample();
+        c.save(&path).unwrap();
+        c.insert("extra", vec![1]);
+        c.save(&path).unwrap();
+        assert!(Checkpoint::load(&path).unwrap().has_section("extra"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_into_missing_dir_is_a_typed_io_error() {
+        let dir = scratch_dir("missdir");
+        let path = dir.join("nonexistent").join("run.ckpt");
+        match sample().save(&path) {
+            Err(CheckpointError::Io(_)) => {}
+            other => panic!("expected Io error, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn verify_rejects_wrong_arch_and_topology() {
+        let c = sample();
+        assert!(matches!(
+            c.verify(Arch::MuZero, &Topology::split(1, 1)),
+            Err(CheckpointError::ArchMismatch { .. })
+        ));
+        assert!(matches!(
+            c.verify(Arch::Sebulba, &Topology::split(2, 1)),
+            Err(CheckpointError::TopologyMismatch { .. })
+        ));
+        c.verify(Arch::Sebulba, &Topology::split(1, 1)).unwrap();
+    }
+
+    #[test]
+    fn missing_section_is_typed() {
+        let c = sample();
+        assert!(matches!(
+            c.section("replay"),
+            Err(CheckpointError::MissingSection { .. })
+        ));
+    }
+
+    #[test]
+    fn insert_replaces_in_place() {
+        let mut c = sample();
+        let before: Vec<String> = c.section_names().map(str::to_string).collect();
+        c.insert(STORE_SECTION, StoreSection { params: vec![9.0], opt: vec![], version: 7 }.encode());
+        let after: Vec<String> = c.section_names().map(str::to_string).collect();
+        assert_eq!(before, after, "replacing a section must not reorder");
+        let s = StoreSection::decode(c.section(STORE_SECTION).unwrap()).unwrap();
+        assert_eq!(s.version, 7);
+    }
+
+    #[test]
+    fn expect_field_mismatch_is_typed() {
+        expect_field("seed", 5u64, 5u64).unwrap();
+        assert!(matches!(
+            expect_field("agent", "a".to_string(), "b".to_string()),
+            Err(CheckpointError::Mismatch { field: "agent", .. })
+        ));
+    }
+
+    #[test]
+    fn core_env_section_validates_geometry() {
+        let s = CoreEnvSection { shape: vec![2, 3], data: vec![0.0; 6] };
+        let back = CoreEnvSection::decode("env_core0", &s.encode()).unwrap();
+        assert_eq!(back, s);
+        let mut w = SectionWriter::new();
+        w.put_u64s(&[2, 3]);
+        w.put_f32s(&[0.0; 5]);
+        assert!(matches!(
+            CoreEnvSection::decode("env_core0", &w.finish()),
+            Err(CheckpointError::Corrupt { .. })
+        ));
+    }
+}

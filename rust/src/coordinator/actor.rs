@@ -16,12 +16,14 @@
 //! learners. Observation and parameter uploads are `Arc`-backed too, so the
 //! whole actor→device seam moves references, not buffers.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::checkpoint::ActorSection;
 use crate::envs::{BatchedEnv, EnvFactory, StepTicket, WorkerPool};
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::DeviceHandle;
@@ -36,6 +38,32 @@ use super::trajectory::{TrajShard, TrajectoryBuilder};
 /// `learner_cores` shards each (see learner.rs). Shards are arena views —
 /// pushing a bundle moves `Arc` handles, never experience data.
 pub type ShardBundle = Vec<TrajShard>;
+
+/// Deposit slot for actor boundary snapshots, keyed by `windows_done`.
+/// A `BTreeMap` (not a single cell) because under checkpoint pacing the
+/// actor may deposit window W+1's snapshot while the learner is still
+/// between publishing round W and reading the slot — a lone cell could be
+/// overwritten before the learner takes it.
+pub type SnapshotSlot = Arc<Mutex<BTreeMap<u64, ActorSection>>>;
+
+/// Checkpoint/restore wiring for one actor thread (DESIGN.md §13).
+///
+/// Lockstep contract: with this present the actor starts a trajectory
+/// window only once `store.version() == windows_done` — i.e. the learner
+/// has published every update of the previous window — which pins the
+/// params each inference sees to exactly what the uninterrupted run's
+/// actor would have seen. That is only sound when one window maps to one
+/// learner round and nothing is pipelined; the coordinator enforces the
+/// topology restrictions (`run_resolved`) before handing this out.
+#[derive(Clone)]
+pub struct ActorCheckpoint {
+    /// Deposit a snapshot at every `every`-th window boundary.
+    pub every: u64,
+    /// Shared slot the learner reads when it writes the checkpoint file.
+    pub slot: SnapshotSlot,
+    /// Boundary state to resume from (None = fresh start).
+    pub resume: Option<ActorSection>,
+}
 
 pub struct ActorConfig {
     pub actor_id: usize,
@@ -54,6 +82,8 @@ pub struct ActorConfig {
     /// Use the materializing (pre-refactor) sharder instead of arena views
     /// — the bit-exactness oracle for the zero-copy path (DESIGN.md §11).
     pub copy_path: bool,
+    /// Checkpoint/restore wiring; None on plain runs.
+    pub checkpoint: Option<ActorCheckpoint>,
 }
 
 /// Spawn an actor thread. It runs until `stop` is set or the queue shuts
@@ -166,6 +196,13 @@ fn actor_loop(
         "stage batch {sb} must divide into {} shards",
         cfg.num_shards
     );
+    if cfg.checkpoint.is_some() {
+        // lockstep pacing is only sound unpipelined (see ActorCheckpoint)
+        anyhow::ensure!(
+            stages_n == 1,
+            "checkpointed runs require pipeline_stages == 1 (got {stages_n})"
+        );
+    }
     let d: usize = cfg.obs_shape.iter().product();
     let a = cfg.num_actions;
     let mut rng = crate::util::rng::Xoshiro256::from_stream(cfg.seed, cfg.actor_id as u64);
@@ -192,6 +229,31 @@ fn actor_loop(
             })
         })
         .collect::<Result<_>>()?;
+
+    // Resume: overwrite the fresh stage with the checkpointed boundary
+    // state — envs, bootstrap observation, RNG stream and window counter —
+    // so the next window is produced exactly as the uninterrupted run's.
+    let mut windows_done: u64 = 0;
+    if let Some(res) = cfg.checkpoint.as_ref().and_then(|ck| ck.resume.as_ref()) {
+        let stage = &mut stages[0];
+        anyhow::ensure!(
+            res.obs.len() == sb * d,
+            "checkpoint observation has {} floats, actor expects {}",
+            res.obs.len(),
+            sb * d
+        );
+        anyhow::ensure!(
+            res.episode_reward.len() == sb,
+            "checkpoint tracks {} episode returns, actor has {} envs",
+            res.episode_reward.len(),
+            sb
+        );
+        stage.env.load_states(&res.env_states).context("restoring env states")?;
+        stage.obs = Arc::new(res.obs.clone());
+        stage.episode_reward = res.episode_reward.iter().map(|&x| x as f64).collect();
+        rng = crate::util::rng::Xoshiro256::from_state(res.rng);
+        windows_done = res.windows_done;
+    }
 
     // Device-resident parameter cache: parameters are uploaded to the actor
     // core once per published version and referenced by slot on every
@@ -234,7 +296,29 @@ fn actor_loop(
 
     acc.setup = setup_start.elapsed();
 
+    // Lockstep gate (checkpoint/restore runs only): block the start of a
+    // new window until the learner has published everything from the last
+    // one, so every inference sees exactly the params the uninterrupted
+    // run's would. Returns false if the run is tearing down.
+    let window_gate = |windows_done: u64| -> bool {
+        if cfg.checkpoint.is_none() {
+            return true;
+        }
+        loop {
+            if store.version() >= windows_done {
+                return true;
+            }
+            if stop.load(Ordering::Relaxed) {
+                return false;
+            }
+            std::thread::yield_now();
+        }
+    };
+
     // Prologue: prime the pipeline with stage 0's first inference.
+    if !window_gate(windows_done) {
+        return Ok(());
+    }
     launch_infer(&mut stages[0], &mut rng, &mut cached_version)?;
 
     let mut tick: usize = 0;
@@ -270,6 +354,7 @@ fn actor_loop(
         //    ran under stage s's inference), account the transition, and
         //    fire its next inference.
         let s2 = (tick + 1) % stages_n;
+        let mut window_finished = false;
         let stage = &mut stages[s2];
         if let Some(ticket) = stage.step.take() {
             let span = ticket
@@ -309,13 +394,41 @@ fn actor_loop(
                 stats.env_frames.add(arena.frames() as u64);
                 stats.trajectories.fetch_add(1, Ordering::Relaxed);
                 let shards = if cfg.copy_path { shard_copying(&arena)? } else { shard(&arena) };
+                windows_done += 1;
+                // Deposit-before-push (DESIGN.md §13): the snapshot must be
+                // in the slot before the learner can possibly retire this
+                // window's round and go looking for it. The env is quiescent
+                // here — the step ticket was waited above and the next
+                // inference has not been launched.
+                if let Some(ck) = &cfg.checkpoint {
+                    if windows_done % ck.every == 0 {
+                        let snap = ActorSection {
+                            windows_done,
+                            rng: rng.state(),
+                            obs: stage.obs.to_vec(),
+                            episode_reward: stage
+                                .episode_reward
+                                .iter()
+                                .map(|&x| x as f32)
+                                .collect(),
+                            env_states: stage.env.save_states(),
+                        };
+                        ck.slot.lock().unwrap().insert(windows_done, snap);
+                    }
+                }
                 let t_push = Instant::now();
                 let pushed = queue.push(shards);
                 acc.queue_blocked += t_push.elapsed();
                 if pushed.is_err() {
                     return Ok(()); // queue shut down: clean exit
                 }
+                window_finished = true;
             }
+        }
+        // A new window starts with the next inference: under checkpoint
+        // pacing, hold it until the learner catches up (see window_gate).
+        if window_finished && !window_gate(windows_done) {
+            return Ok(());
         }
         launch_infer(stage, &mut rng, &mut cached_version)?;
 

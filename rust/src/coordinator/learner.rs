@@ -29,10 +29,16 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::checkpoint::{
+    Checkpoint, CheckpointSpec, MetaSection, StoreSection, ACTOR_SECTION, META_SECTION,
+    STORE_SECTION,
+};
+use crate::experiment::{Arch, Topology};
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::DeviceHandle;
+use crate::testkit::FaultPlan;
 
-use super::actor::ShardBundle;
+use super::actor::{ShardBundle, SnapshotSlot};
 use super::collective::{all_reduce_mean, GradientBus};
 use super::param_store::{ParamSnapshot, ParamStore};
 use super::queue::BoundedQueue;
@@ -54,6 +60,76 @@ pub struct LearnerConfig {
     /// Grad/apply rounds kept in flight (1 = serial, bit-for-bit; 2 =
     /// double-buffered). See `SebulbaConfig::learner_pipeline`.
     pub pipeline: usize,
+    /// Checkpoint duties, when this replica writes them (DESIGN.md §13).
+    pub checkpoint: Option<LearnerCheckpoint>,
+    /// Scheduled faults (resilience tests only; None on production paths).
+    pub fault: Option<FaultPlan>,
+    /// Updates already retired by the run this one restored from. The loop
+    /// counts on from here, so `total_updates` stays an absolute budget.
+    pub start_round: u64,
+}
+
+/// Checkpoint duties delegated to the learner thread (DESIGN.md §13). The
+/// learner is the sole writer: after publishing update `r` it pairs its own
+/// state (params, optimiser, version) with the [`ActorSection`] the actor
+/// deposited for window `r` — the deposit-before-push protocol keys the
+/// slot by window count, and lockstep pacing makes window `r` and update
+/// `r` the same boundary — then saves atomically.
+pub struct LearnerCheckpoint {
+    pub spec: CheckpointSpec,
+    /// The actor's deposit slot; the save takes the entry keyed by the
+    /// retired-round count.
+    pub slot: SnapshotSlot,
+    /// Workload identity stamped into every checkpoint; `rounds_done` is
+    /// overwritten with the retired count at save time.
+    pub meta: MetaSection,
+    pub arch: Arch,
+    pub topology: Topology,
+}
+
+/// Build and atomically save a checkpoint right after retiring round
+/// `retired`. The learner is the only publisher, so `store.latest()` here
+/// is exactly the params this round published — it cannot move under us.
+fn write_checkpoint(
+    cfg: &LearnerConfig,
+    ck: &LearnerCheckpoint,
+    retired: u64,
+    opt_state: &[f32],
+    h: &LearnerHandles,
+) -> Result<()> {
+    let snap = h.store.latest();
+    let actor = ck
+        .slot
+        .lock()
+        .unwrap()
+        .remove(&retired)
+        .with_context(|| format!("actor deposited no snapshot for window {retired}"))?;
+    let mut c = Checkpoint::new(ck.arch, &ck.topology);
+    let mut meta = ck.meta.clone();
+    meta.rounds_done = retired;
+    c.insert(META_SECTION, meta.encode());
+    c.insert(
+        STORE_SECTION,
+        StoreSection {
+            params: snap.params.as_ref().clone(),
+            opt: opt_state.to_vec(),
+            version: snap.version,
+        }
+        .encode(),
+    );
+    c.insert(ACTOR_SECTION, actor.encode());
+    c.save(&ck.spec.path)
+        .with_context(|| format!("saving checkpoint to {}", ck.spec.path.display()))?;
+    // Injected fault: cut the file after a good save, so the next restore
+    // must surface a typed error instead of loading a partial state.
+    if let Some(len) = cfg.fault.as_ref().and_then(|f| f.truncate_checkpoint_to) {
+        let f = std::fs::OpenOptions::new()
+            .write(true)
+            .open(&ck.spec.path)
+            .context("truncate-checkpoint fault")?;
+        f.set_len(len).context("truncate-checkpoint fault")?;
+    }
+    Ok(())
 }
 
 pub struct LearnerHandles {
@@ -152,11 +228,24 @@ pub fn learner_main(
 
     let mut pending: VecDeque<TrajShard> = VecDeque::new();
     let mut in_flight: VecDeque<InFlightRound> = VecDeque::new();
-    let mut launched = 0u64;
-    let mut retired = 0u64;
+    // A restored run continues the original count: `total_updates` is an
+    // absolute budget, not "N more" (DESIGN.md §13).
+    let mut launched = cfg.start_round;
+    let mut retired = cfg.start_round;
     let mut queue_done = false;
 
     while retired < cfg.total_updates {
+        // Injected fault: die at the start of round `retired`, exactly as a
+        // crashed learner process would (before any of the round's effects).
+        if let Some(f) = &cfg.fault {
+            if f.should_kill(cfg.replica_id, retired) {
+                bail!(
+                    "injected fault: learner replica {} killed at round {}",
+                    cfg.replica_id,
+                    retired
+                );
+            }
+        }
         // ---- fill: launch grad rounds while the pipeline has slots -------
         while !queue_done && launched < cfg.total_updates && in_flight.len() < cfg.pipeline {
             while pending.len() < l && !queue_done {
@@ -256,6 +345,13 @@ pub fn learner_main(
         h.stats
             .record_update(round.snap.version.saturating_sub(round.data_version), loss);
         retired += 1;
+
+        if let Some(ck) = &cfg.checkpoint {
+            if ck.spec.due(retired) {
+                write_checkpoint(cfg, ck, retired, &opt_state, h)
+                    .with_context(|| format!("checkpoint after round {retired}"))?;
+            }
+        }
     }
 
     h.stats.record_learner_overlap(

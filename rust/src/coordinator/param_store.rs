@@ -36,12 +36,21 @@ pub struct ParamStore {
 
 impl ParamStore {
     pub fn new(initial: Vec<f32>) -> Self {
+        Self::with_version(initial, 0)
+    }
+
+    /// Like [`Self::new`], but the initial snapshot carries a checkpointed
+    /// version instead of 0. A restored run must resume the version
+    /// sequence where the original left off — actors pace themselves on
+    /// `version()`, so restarting it at 0 would desynchronise the lockstep
+    /// restore path (DESIGN.md §13).
+    pub fn with_version(initial: Vec<f32>, version: u64) -> Self {
         Self {
             current: RwLock::new(Arc::new(ParamSnapshot {
-                version: 0,
+                version,
                 params: Arc::new(initial),
             })),
-            version: AtomicU64::new(0),
+            version: AtomicU64::new(version),
         }
     }
 
@@ -172,6 +181,19 @@ mod tests {
         // the installed snapshot is the one that drew the final version.
         assert_eq!(store.version(), PUBLISHERS as u64 * EACH);
         assert_eq!(store.latest().version, PUBLISHERS as u64 * EACH);
+    }
+
+    #[test]
+    fn with_version_resumes_the_sequence() {
+        let store = ParamStore::new(vec![1.0; 4]);
+        store.publish(vec![2.0; 4]);
+        store.publish(vec![3.0; 4]);
+        // rebuild "from checkpoint": same params, same version
+        let restored = ParamStore::with_version(store.latest().params.to_vec(), store.version());
+        assert_eq!(restored.version(), 2);
+        assert_eq!(restored.latest().version, 2);
+        assert_eq!(restored.latest().params[0], 3.0);
+        assert_eq!(restored.publish(vec![4.0; 4]), 3);
     }
 
     #[test]

@@ -5,6 +5,11 @@
 //! the learner (off-policy staleness control). `push` blocks when full
 //! (backpressure), `pop` blocks when empty; both wake on shutdown. Depth and
 //! block-time counters feed the run stats.
+//!
+//! For fault-injection tests the queue can also be *poisoned*
+//! ([`BoundedQueue::poison_after_pushes`]): past the trigger, every
+//! operation fails with [`QueueError::Poisoned`] — modelling a transport
+//! that died mid-run, as opposed to the orderly drain of `shutdown`.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -26,18 +31,40 @@ pub struct BoundedQueue<T> {
 struct Inner<T> {
     items: VecDeque<T>,
     shutdown: bool,
+    poisoned: bool,
+    /// Fault injection: poison once `pushed` reaches this count.
+    poison_at: Option<u64>,
 }
 
 #[derive(Debug, PartialEq, Eq)]
 pub enum QueueError {
     Shutdown,
+    /// The queue was killed by fault injection — an abrupt transport death,
+    /// not an orderly drain. Items still enqueued are lost by design.
+    Poisoned,
 }
+
+impl std::fmt::Display for QueueError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QueueError::Shutdown => write!(f, "queue shut down"),
+            QueueError::Poisoned => write!(f, "queue poisoned (injected fault)"),
+        }
+    }
+}
+
+impl std::error::Error for QueueError {}
 
 impl<T> BoundedQueue<T> {
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
         Self {
-            inner: Mutex::new(Inner { items: VecDeque::with_capacity(capacity), shutdown: false }),
+            inner: Mutex::new(Inner {
+                items: VecDeque::with_capacity(capacity),
+                shutdown: false,
+                poisoned: false,
+                poison_at: None,
+            }),
             not_full: Condvar::new(),
             not_empty: Condvar::new(),
             capacity,
@@ -57,8 +84,13 @@ impl<T> BoundedQueue<T> {
     pub fn push(&self, item: T) -> Result<(), QueueError> {
         let t0 = Instant::now();
         let mut g = self.inner.lock().unwrap();
-        while g.items.len() >= self.capacity && !g.shutdown {
+        while g.items.len() >= self.capacity && !g.shutdown && !g.poisoned {
             g = self.not_full.wait(g).unwrap();
+        }
+        if g.poisoned {
+            self.push_block_nanos
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            return Err(QueueError::Poisoned);
         }
         if g.shutdown {
             self.push_block_nanos
@@ -66,7 +98,17 @@ impl<T> BoundedQueue<T> {
             return Err(QueueError::Shutdown);
         }
         g.items.push_back(item);
-        self.pushed.fetch_add(1, Ordering::Relaxed);
+        let total = self.pushed.fetch_add(1, Ordering::Relaxed) + 1;
+        if g.poison_at.is_some_and(|at| total >= at) {
+            g.poisoned = true;
+            drop(g);
+            self.push_block_nanos
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            self.not_full.notify_all();
+            self.not_empty.notify_all();
+            // the triggering push itself still succeeded
+            return Ok(());
+        }
         self.push_block_nanos
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         drop(g);
@@ -81,6 +123,13 @@ impl<T> BoundedQueue<T> {
         let t0 = Instant::now();
         let mut g = self.inner.lock().unwrap();
         loop {
+            if g.poisoned {
+                // abrupt transport death: remaining items are lost, unlike
+                // the drain-first shutdown path below
+                self.pop_block_nanos
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                return Err(QueueError::Poisoned);
+            }
             if let Some(item) = g.items.pop_front() {
                 self.popped.fetch_add(1, Ordering::Relaxed);
                 self.pop_block_nanos
@@ -108,6 +157,11 @@ impl<T> BoundedQueue<T> {
         let deadline = t0 + dur;
         let mut g = self.inner.lock().unwrap();
         loop {
+            if g.poisoned {
+                self.pop_block_nanos
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                return Err(QueueError::Poisoned);
+            }
             if let Some(item) = g.items.pop_front() {
                 self.popped.fetch_add(1, Ordering::Relaxed);
                 self.pop_block_nanos
@@ -139,6 +193,27 @@ impl<T> BoundedQueue<T> {
         drop(g);
         self.not_full.notify_all();
         self.not_empty.notify_all();
+    }
+
+    /// Fault injection: poison the queue as soon as `total_pushed` reaches
+    /// `n` (immediately, if it already has). Past the trigger every push and
+    /// pop fails with [`QueueError::Poisoned`] and any enqueued items are
+    /// lost — an abrupt transport death for resilience tests, never used on
+    /// the production path.
+    pub fn poison_after_pushes(&self, n: u64) {
+        let mut g = self.inner.lock().unwrap();
+        if self.pushed.load(Ordering::Relaxed) >= n {
+            g.poisoned = true;
+            drop(g);
+            self.not_full.notify_all();
+            self.not_empty.notify_all();
+        } else {
+            g.poison_at = Some(n);
+        }
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.inner.lock().unwrap().poisoned
     }
 
     pub fn len(&self) -> usize {
@@ -356,6 +431,30 @@ mod tests {
             "timed pop torn down without recording: {}s",
             q.pop_block_seconds()
         );
+    }
+
+    #[test]
+    fn poison_trips_at_the_push_count() {
+        let q = BoundedQueue::new(8);
+        q.poison_after_pushes(3);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.push(3).unwrap(); // the trigger push itself succeeds
+        assert!(q.is_poisoned());
+        assert_eq!(q.push(4), Err(QueueError::Poisoned));
+        // abrupt death: enqueued items are lost, unlike shutdown's drain
+        assert_eq!(q.pop(), Err(QueueError::Poisoned));
+        assert_eq!(q.pop_timeout(Duration::from_millis(5)), Err(QueueError::Poisoned));
+    }
+
+    #[test]
+    fn poison_wakes_blocked_consumer() {
+        let q = Arc::new(BoundedQueue::<i32>::new(1));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(20));
+        q.poison_after_pushes(0); // already reached: poison now
+        assert_eq!(consumer.join().unwrap(), Err(QueueError::Poisoned));
     }
 
     #[test]

@@ -1,23 +1,28 @@
 //! Top-level Sebulba orchestration: wire the pod, spawn actors + learners,
 //! run to the update target, shut down cleanly, report.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
+use crate::checkpoint::{
+    expect_field, ActorSection, Checkpoint, MetaSection, StoreSection, ACTOR_SECTION,
+    META_SECTION, STORE_SECTION,
+};
 use crate::envs::{make_factory, WorkerPool};
 use crate::experiment::{
-    ActorLearnerDetail, Arch, Detail, EnvKind, Report, Runner, Topology,
+    ActorLearnerDetail, Arch, Detail, EnvKind, Report, RunSpec, Runner, Topology,
 };
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::{DeviceHandle, Pod};
 
-use super::actor::{spawn_actor, ActorConfig, ShardBundle};
+use super::actor::{spawn_actor, ActorCheckpoint, ActorConfig, ShardBundle, SnapshotSlot};
 use super::collective::GradientBus;
 use super::config::SebulbaConfig;
-use super::learner::{learner_main, LearnerConfig, LearnerHandles};
+use super::learner::{learner_main, LearnerCheckpoint, LearnerConfig, LearnerHandles};
 use super::param_store::ParamStore;
 use super::queue::BoundedQueue;
 use super::stats::RunStats;
@@ -198,8 +203,8 @@ impl Runner for Sebulba {
         Arch::Sebulba
     }
 
-    fn run(&self, pod: &mut Pod, topo: &Topology) -> Result<Report> {
-        run_resolved(pod, &self.resolved(topo), self.warm_start.clone())
+    fn run_checkpointed(&self, pod: &mut Pod, topo: &Topology, spec: &RunSpec) -> Result<Report> {
+        run_resolved(pod, &self.resolved(topo), self.warm_start.clone(), spec)
     }
 }
 
@@ -233,13 +238,13 @@ impl Sebulba {
     pub fn run(artifacts: &std::path::Path, cfg: &SebulbaConfig) -> Result<Report> {
         cfg.validate()?;
         let mut pod = Pod::new(artifacts, cfg.total_cores())?;
-        run_resolved(&mut pod, cfg, None)
+        run_resolved(&mut pod, cfg, None, &RunSpec::default())
     }
 
     /// Run on an existing pod (must have >= cfg.total_cores() cores).
     #[deprecated(note = "one-PR migration shim: use experiment::Experiment::new(Arch::Sebulba)")]
     pub fn run_on(pod: &mut Pod, cfg: &SebulbaConfig) -> Result<Report> {
-        run_resolved(pod, cfg, None)
+        run_resolved(pod, cfg, None, &RunSpec::default())
     }
 
     /// Like `run_on`, but optionally warm-starting from `(params,
@@ -252,7 +257,7 @@ impl Sebulba {
         cfg: &SebulbaConfig,
         warm: Option<(Vec<f32>, Vec<f32>)>,
     ) -> Result<Report> {
-        run_resolved(pod, cfg, warm)
+        run_resolved(pod, cfg, warm, &RunSpec::default())
     }
 }
 
@@ -262,9 +267,55 @@ pub(crate) fn run_resolved(
     pod: &mut Pod,
     cfg: &SebulbaConfig,
     warm: Option<(Vec<f32>, Vec<f32>)>,
+    spec: &RunSpec,
 ) -> Result<Report> {
     cfg.validate()?;
     cfg.topology().validate_for_pod(pod.n_cores())?;
+
+    // Elasticity runs under lockstep pacing (DESIGN.md §13): the actor gate
+    // equates "windows produced" with "updates published", which only holds
+    // when exactly one actor thread feeds one serial learner round per
+    // window. Reject every geometry where that invariant breaks.
+    if !spec.is_plain() {
+        ensure!(
+            cfg.actor_cores * cfg.threads_per_actor_core == 1,
+            "checkpoint/restore/fault runs need exactly 1 actor thread (got {} cores x {} threads)",
+            cfg.actor_cores,
+            cfg.threads_per_actor_core
+        );
+        ensure!(cfg.pipeline_stages == 1, "checkpoint/restore/fault runs need pipeline_stages == 1");
+        ensure!(cfg.learner_pipeline == 1, "checkpoint/restore/fault runs need learner_pipeline == 1");
+        ensure!(cfg.replicas == 1, "checkpoint/restore/fault runs need replicas == 1");
+        ensure!(
+            cfg.micro_batches == 1,
+            "checkpoint/restore/fault runs need micro_batches == 1 \
+             (one window must feed exactly one update)"
+        );
+    }
+
+    // ---- restore (DESIGN.md §13) -----------------------------------------
+    // Structural validation (magic/version/CRC) and the arch + topology
+    // check happen in `load_for`; the workload identity is then matched
+    // field by field. Every disagreement is a typed `CheckpointError`.
+    let restored = match &spec.restore_from {
+        Some(path) => {
+            let ckpt = Checkpoint::load_for(path, Arch::Sebulba, &cfg.topology())
+                .with_context(|| format!("restoring from {}", path.display()))?;
+            let meta = MetaSection::decode(ckpt.section(META_SECTION)?)?;
+            expect_field("agent", meta.agent.clone(), cfg.agent.clone())?;
+            expect_field("seed", meta.seed, cfg.seed)?;
+            expect_field("env", meta.env.clone(), cfg.env_kind.as_str().to_string())?;
+            let store = StoreSection::decode(ckpt.section(STORE_SECTION)?)?;
+            let actor = ActorSection::decode(ckpt.section(ACTOR_SECTION)?)?;
+            // Lockstep invariants the save upheld; a disagreement means the
+            // file pairs state from different rounds.
+            expect_field("store version", store.version, meta.rounds_done)?;
+            expect_field("actor windows", actor.windows_done, meta.rounds_done)?;
+            Some((meta, store, actor))
+        }
+        None => None,
+    };
+
     let agent = pod.manifest.agent(&cfg.agent)?.clone();
     let obs_shape = agent.obs_shape.clone();
     let num_actions = agent.num_actions;
@@ -304,10 +355,12 @@ pub(crate) fn run_resolved(
         .map(|cid| Ok(pod.core(cid)?.busy_seconds()))
         .collect::<Result<_>>()?;
 
-    // ---- init params (or warm start) -------------------------------------
-    let (params0, opt0) = match warm {
-        Some((p, o)) => (p, o),
-        None => {
+    // ---- init params (or warm start, or restore) -------------------------
+    let (params0, opt0) = match (&restored, warm) {
+        (Some(_), Some(_)) => bail!("warm_start cannot be combined with a checkpoint restore"),
+        (Some((_, s, _)), None) => (s.params.clone(), s.opt.clone()),
+        (None, Some((p, o))) => (p, o),
+        (None, None) => {
             let outs = pod
                 .core(learner0_ids[0])?
                 .execute(&init, vec![HostTensor::scalar_i32(cfg.seed as i32)])?;
@@ -342,11 +395,34 @@ pub(crate) fn run_resolved(
     let queues: Vec<Arc<BoundedQueue<ShardBundle>>> = (0..cfg.replicas)
         .map(|_| Arc::new(BoundedQueue::<ShardBundle>::new(cfg.queue_capacity)))
         .collect();
+
+    // ---- checkpoint + fault wiring (replicas == 1 whenever any is on) ----
+    if let Some(after) = spec.fault.as_ref().and_then(|f| f.poison_queue_after) {
+        for q in &queues {
+            q.poison_after_pushes(after);
+        }
+    }
+    let start_round = restored.as_ref().map_or(0, |(m, _, _)| m.rounds_done);
+    let slot: SnapshotSlot = Arc::new(Mutex::new(BTreeMap::new()));
+    let actor_ck = if spec.checkpoint.is_some() || restored.is_some() {
+        Some(ActorCheckpoint {
+            // Restore-only run: keep the lockstep gate, but a period of
+            // u64::MAX never divides a window count, so nothing deposits.
+            every: spec.checkpoint.as_ref().map_or(u64::MAX, |c| c.every),
+            slot: slot.clone(),
+            resume: restored.as_ref().map(|(_, _, a)| a.clone()),
+        })
+    } else {
+        None
+    };
     let t_start = Instant::now();
 
     for r in 0..cfg.replicas {
         let base = r * n_per;
-        let store = Arc::new(ParamStore::new(params0.clone()));
+        let store = Arc::new(match &restored {
+            Some((_, s, _)) => ParamStore::with_version(params0.clone(), s.version),
+            None => ParamStore::new(params0.clone()),
+        });
         let queue = queues[r].clone();
         let pool = WorkerPool::new(cfg.env_workers);
 
@@ -367,6 +443,7 @@ pub(crate) fn run_resolved(
                     num_actions,
                     seed: cfg.seed,
                     copy_path: cfg.copy_path,
+                    checkpoint: actor_ck.clone(),
                 };
                 actor_joins.push(spawn_actor(
                     acfg,
@@ -389,6 +466,20 @@ pub(crate) fn run_resolved(
             shards_per_round: cfg.learner_cores,
             total_updates: cfg.total_updates,
             pipeline: cfg.learner_pipeline,
+            checkpoint: spec.checkpoint.as_ref().map(|cs| LearnerCheckpoint {
+                spec: cs.clone(),
+                slot: slot.clone(),
+                meta: MetaSection {
+                    agent: cfg.agent.clone(),
+                    seed: cfg.seed,
+                    env: cfg.env_kind.as_str().to_string(),
+                    rounds_done: 0,
+                },
+                arch: Arch::Sebulba,
+                topology: cfg.topology(),
+            }),
+            fault: spec.fault.clone(),
+            start_round,
         };
         let cores: Vec<DeviceHandle> = (0..cfg.learner_cores)
             .map(|i| pod.core(base + cfg.actor_cores + i))

@@ -12,8 +12,10 @@
 //! Observation layout is NHWC (`[H, W, C]`, C = stacked frames) to match
 //! `ConvActorCritic` in the exported programs.
 
-use super::{Environment, StepResult};
+use super::{read_rng, write_rng, Environment, StepResult};
+use crate::checkpoint::format::{SectionReader, SectionWriter};
 use crate::util::rng::Xoshiro256;
+use anyhow::ensure;
 
 #[derive(Clone, Debug)]
 pub struct Config {
@@ -246,6 +248,64 @@ impl Environment for AtariLike {
         }
         self.write_obs(obs);
         StepResult { reward, done }
+    }
+
+    fn save_state(&self) -> Vec<u8> {
+        let mut w = SectionWriter::new();
+        w.put_f32(self.ball_x);
+        w.put_f32(self.ball_y);
+        w.put_f32(self.vel_x);
+        w.put_f32(self.vel_y);
+        w.put_f32(self.paddle_x);
+        w.put_u64(self.lives_left as u64);
+        w.put_u64(self.t as u64);
+        w.put_u64(self.prev_action as u64);
+        w.put_u64(self.frame_head as u64);
+        w.put_f32s(&self.frames);
+        write_rng(&mut w, &self.rng);
+        w.finish()
+    }
+
+    fn load_state(&mut self, state: &[u8]) -> anyhow::Result<()> {
+        let mut r = SectionReader::new("atari_like", state);
+        let ball_x = r.f32()?;
+        let ball_y = r.f32()?;
+        let vel_x = r.f32()?;
+        let vel_y = r.f32()?;
+        let paddle_x = r.f32()?;
+        let lives_left = r.u64()? as usize;
+        let t = r.u64()? as usize;
+        let prev_action = r.u64()? as usize;
+        let frame_head = r.u64()? as usize;
+        let frames = r.f32s()?;
+        let rng = read_rng(&mut r)?;
+        r.done()?;
+        ensure!(
+            frames.len() == self.frames.len(),
+            "frame buffer holds {} pixels, env expects {}",
+            frames.len(),
+            self.frames.len()
+        );
+        ensure!(frame_head < self.cfg.frame_stack, "frame_head {frame_head} out of range");
+        ensure!(lives_left > 0 && lives_left <= self.cfg.lives, "lives_left {lives_left} out of range");
+        ensure!(t < self.cfg.max_steps, "step counter {t} out of range");
+        ensure!(prev_action < 6, "prev_action {prev_action} out of range");
+        ensure!(
+            [ball_x, ball_y, vel_x, vel_y, paddle_x].iter().all(|v| v.is_finite()),
+            "non-finite game state"
+        );
+        self.ball_x = ball_x;
+        self.ball_y = ball_y;
+        self.vel_x = vel_x;
+        self.vel_y = vel_y;
+        self.paddle_x = paddle_x;
+        self.lives_left = lives_left;
+        self.t = t;
+        self.prev_action = prev_action;
+        self.frame_head = frame_head;
+        self.frames = frames;
+        self.rng = rng;
+        Ok(())
     }
 }
 

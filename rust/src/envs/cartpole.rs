@@ -1,8 +1,10 @@
 //! CartPole (Barto, Sutton & Anderson 1983): the classic continuous-state
 //! control benchmark, Euler-integrated like the Gym implementation.
 
-use super::{Environment, StepResult};
+use super::{read_rng, write_rng, Environment, StepResult};
+use crate::checkpoint::format::{SectionReader, SectionWriter};
 use crate::util::rng::Xoshiro256;
+use anyhow::ensure;
 
 const GRAVITY: f32 = 9.8;
 const CART_MASS: f32 = 1.0;
@@ -85,6 +87,40 @@ impl Environment for CartPole {
         }
         self.write_obs(obs);
         StepResult { reward: 1.0, done }
+    }
+
+    fn save_state(&self) -> Vec<u8> {
+        let mut w = SectionWriter::new();
+        w.put_f32(self.x);
+        w.put_f32(self.x_dot);
+        w.put_f32(self.theta);
+        w.put_f32(self.theta_dot);
+        w.put_u64(self.t as u64);
+        write_rng(&mut w, &self.rng);
+        w.finish()
+    }
+
+    fn load_state(&mut self, state: &[u8]) -> anyhow::Result<()> {
+        let mut r = SectionReader::new("cartpole", state);
+        let x = r.f32()?;
+        let x_dot = r.f32()?;
+        let theta = r.f32()?;
+        let theta_dot = r.f32()?;
+        let t = r.u64()? as usize;
+        let rng = read_rng(&mut r)?;
+        r.done()?;
+        ensure!(t < self.max_steps, "step counter {t} out of range (max {})", self.max_steps);
+        ensure!(
+            x.is_finite() && x_dot.is_finite() && theta.is_finite() && theta_dot.is_finite(),
+            "non-finite physics state"
+        );
+        self.x = x;
+        self.x_dot = x_dot;
+        self.theta = theta;
+        self.theta_dot = theta_dot;
+        self.t = t;
+        self.rng = rng;
+        Ok(())
     }
 }
 

@@ -2,8 +2,10 @@
 //! `python/compile/envs_jax.py`, so the same exported MLP programs drive
 //! both the Anakin (on-device) and Sebulba (host-side) variants.
 
-use super::{Environment, StepResult};
+use super::{read_rng, write_rng, Environment, StepResult};
+use crate::checkpoint::format::{SectionReader, SectionWriter};
 use crate::util::rng::Xoshiro256;
+use anyhow::ensure;
 
 pub struct Catch {
     rows: usize,
@@ -66,6 +68,32 @@ impl Environment for Catch {
             self.write_obs(obs);
             StepResult { reward: 0.0, done: false }
         }
+    }
+
+    fn save_state(&self) -> Vec<u8> {
+        let mut w = SectionWriter::new();
+        w.put_u64(self.ball_row as u64);
+        w.put_u64(self.ball_col as u64);
+        w.put_u64(self.paddle_col as u64);
+        write_rng(&mut w, &self.rng);
+        w.finish()
+    }
+
+    fn load_state(&mut self, state: &[u8]) -> anyhow::Result<()> {
+        let mut r = SectionReader::new("catch", state);
+        let ball_row = r.u64()? as usize;
+        let ball_col = r.u64()? as usize;
+        let paddle_col = r.u64()? as usize;
+        let rng = read_rng(&mut r)?;
+        r.done()?;
+        ensure!(ball_row < self.rows, "ball_row {ball_row} out of range (rows {})", self.rows);
+        ensure!(ball_col < self.cols, "ball_col {ball_col} out of range (cols {})", self.cols);
+        ensure!(paddle_col < self.cols, "paddle_col {paddle_col} out of range");
+        self.ball_row = ball_row;
+        self.ball_col = ball_col;
+        self.paddle_col = paddle_col;
+        self.rng = rng;
+        Ok(())
     }
 }
 

@@ -7,7 +7,9 @@
 //! V-trace/GAE credit-assignment path.
 
 use super::{Environment, StepResult};
+use crate::checkpoint::format::{SectionReader, SectionWriter};
 use crate::util::rng::Xoshiro256;
+use anyhow::ensure;
 
 pub struct Chain {
     n: usize,
@@ -53,6 +55,21 @@ impl Environment for Chain {
         }
         self.write_obs(obs);
         StepResult { reward: 0.0, done: false }
+    }
+
+    fn save_state(&self) -> Vec<u8> {
+        let mut w = SectionWriter::new();
+        w.put_u64(self.pos as u64);
+        w.finish()
+    }
+
+    fn load_state(&mut self, state: &[u8]) -> anyhow::Result<()> {
+        let mut r = SectionReader::new("chain", state);
+        let pos = r.u64()? as usize;
+        r.done()?;
+        ensure!(pos < self.n, "pos {pos} out of range (chain length {})", self.n);
+        self.pos = pos;
+        Ok(())
     }
 }
 

@@ -1,7 +1,9 @@
 //! Empty-room gridworld with a random goal (host-side twin of the JAX env).
 
-use super::{Environment, StepResult};
+use super::{read_rng, write_rng, Environment, StepResult};
+use crate::checkpoint::format::{SectionReader, SectionWriter};
 use crate::util::rng::Xoshiro256;
+use anyhow::ensure;
 
 pub struct GridWorld {
     size: usize,
@@ -69,6 +71,41 @@ impl Environment for GridWorld {
         }
         self.write_obs(obs);
         StepResult { reward, done }
+    }
+
+    fn save_state(&self) -> Vec<u8> {
+        let mut w = SectionWriter::new();
+        w.put_u64(self.row as u64);
+        w.put_u64(self.col as u64);
+        w.put_u64(self.goal_row as u64);
+        w.put_u64(self.goal_col as u64);
+        w.put_u64(self.t as u64);
+        write_rng(&mut w, &self.rng);
+        w.finish()
+    }
+
+    fn load_state(&mut self, state: &[u8]) -> anyhow::Result<()> {
+        let mut r = SectionReader::new("gridworld", state);
+        let row = r.u64()? as usize;
+        let col = r.u64()? as usize;
+        let goal_row = r.u64()? as usize;
+        let goal_col = r.u64()? as usize;
+        let t = r.u64()? as usize;
+        let rng = read_rng(&mut r)?;
+        r.done()?;
+        ensure!(
+            row < self.size && col < self.size && goal_row < self.size && goal_col < self.size,
+            "cell ({row},{col})/goal ({goal_row},{goal_col}) out of a {0}x{0} grid",
+            self.size
+        );
+        ensure!(t < self.horizon, "step counter {t} out of range (horizon {})", self.horizon);
+        self.row = row;
+        self.col = col;
+        self.goal_row = goal_row;
+        self.goal_col = goal_col;
+        self.t = t;
+        self.rng = rng;
+        Ok(())
     }
 }
 

@@ -25,6 +25,7 @@ pub use pool::{BatchTicket, WorkerPool};
 
 pub use crate::experiment::EnvKind;
 
+use crate::checkpoint::format::{SectionReader, SectionWriter};
 use crate::util::rng::Xoshiro256;
 
 /// One transition's results (the observation is written separately).
@@ -49,6 +50,32 @@ pub trait Environment: Send {
     /// Step with `action`; write the *next* observation into `obs`
     /// (auto-reset: on `done`, `obs` is the fresh episode's first frame).
     fn step(&mut self, action: usize, obs: &mut [f32]) -> StepResult;
+
+    /// Serialize the complete mutable state — positions, counters and the
+    /// RNG stream — so a checkpointed run continues bit-identically
+    /// (DESIGN.md §13). Construction-time constants (grid sizes, horizons)
+    /// are not stored; they come from the env being restored into.
+    fn save_state(&self) -> Vec<u8>;
+
+    /// Restore a [`Self::save_state`] snapshot taken from an
+    /// identically-configured environment. Corrupt or out-of-range payloads
+    /// are typed errors, never panics and never a silent fresh reset.
+    fn load_state(&mut self, state: &[u8]) -> anyhow::Result<()>;
+}
+
+/// Append an RNG's state words to an env snapshot.
+pub(crate) fn write_rng(w: &mut SectionWriter, rng: &Xoshiro256) {
+    w.put_u64s(&rng.state());
+}
+
+/// Read back an RNG written by [`write_rng`].
+pub(crate) fn read_rng(r: &mut SectionReader) -> anyhow::Result<Xoshiro256> {
+    let words = r.u64s()?;
+    let state: [u64; 4] = words
+        .as_slice()
+        .try_into()
+        .map_err(|_| anyhow::anyhow!("env rng state must be 4 words, got {}", words.len()))?;
+    Ok(Xoshiro256::from_state(state))
 }
 
 fn build_env(kind: EnvKind, rng: Xoshiro256) -> Box<dyn Environment> {
@@ -104,5 +131,42 @@ mod tests {
         // the stringly path used to coerce unknowns to "catch" in the CLI;
         // the typed kind rejects them at the boundary
         assert!("nope".parse::<EnvKind>().is_err());
+    }
+
+    /// The checkpoint contract for every kind: snapshot mid-episode, keep
+    /// stepping the original, load the snapshot into a *differently seeded*
+    /// fresh env, and the continuations must match bit for bit.
+    #[test]
+    fn every_kind_state_roundtrips_bit_identically() {
+        for kind in EnvKind::ALL {
+            let mut a = make_env(kind, 11);
+            let mut obs = vec![0.0; a.obs_dim()];
+            a.reset(&mut obs);
+            for i in 0..23 {
+                a.step(i % a.num_actions(), &mut obs);
+            }
+            let snap = a.save_state();
+
+            let mut b = make_env(kind, 999); // wrong seed on purpose
+            b.load_state(&snap).unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+
+            let mut oa = vec![0.0; a.obs_dim()];
+            let mut ob = vec![0.0; b.obs_dim()];
+            for i in 0..200 {
+                let ra = a.step(i % a.num_actions(), &mut oa);
+                let rb = b.step(i % b.num_actions(), &mut ob);
+                assert_eq!(ra, rb, "{kind:?} diverged at step {i}");
+                assert_eq!(oa, ob, "{kind:?} obs diverged at step {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn env_load_state_rejects_garbage() {
+        for kind in EnvKind::ALL {
+            let mut env = make_env(kind, 3);
+            assert!(env.load_state(&[0xFF; 3]).is_err(), "{kind:?} accepted garbage");
+            assert!(env.load_state(&[]).is_err(), "{kind:?} accepted empty state");
+        }
     }
 }

@@ -45,14 +45,16 @@ use std::str::FromStr;
 use anyhow::{bail, Context, Result};
 
 use crate::anakin::{Anakin, Driver, Mode};
+use crate::checkpoint::CheckpointSpec;
 use crate::coordinator::sebulba::Sebulba;
 use crate::runtime::Pod;
 use crate::search::muzero_run::MuZero;
+use crate::testkit::FaultPlan;
 use crate::util::cli::Args;
 
 pub use env_kind::EnvKind;
 pub use report::{ActorLearnerDetail, AnakinDetail, Detail, MetricRow, Report};
-pub use runner::Runner;
+pub use runner::{RunSpec, Runner};
 pub use topology::Topology;
 
 /// The three Podracer architectures.
@@ -104,6 +106,7 @@ pub struct Experiment {
     topo: Topology,
     artifacts: PathBuf,
     runner: Box<dyn Runner>,
+    spec: RunSpec,
 }
 
 impl Experiment {
@@ -133,13 +136,13 @@ impl Experiment {
     /// Build a pod sized for the topology and run to completion.
     pub fn run(&self) -> Result<Report> {
         let mut pod = Pod::new(&self.artifacts, self.topo.total_cores())?;
-        self.runner.run(&mut pod, &self.topo)
+        self.runner.run_checkpointed(&mut pod, &self.topo, &self.spec)
     }
 
     /// Run on an existing pod (must have >= `topology().total_cores()`
     /// cores) — reuses loaded programs across runs.
     pub fn run_on(&self, pod: &mut Pod) -> Result<Report> {
-        self.runner.run(pod, &self.topo)
+        self.runner.run_checkpointed(pod, &self.topo, &self.spec)
     }
 }
 
@@ -167,6 +170,10 @@ pub struct ExperimentBuilder {
     copy_path: Option<bool>,
     num_simulations: Option<usize>,
     warm_start: Option<(Vec<f32>, Vec<f32>)>,
+    checkpoint_every: Option<u64>,
+    checkpoint_path: Option<PathBuf>,
+    restore_from: Option<PathBuf>,
+    fault: Option<FaultPlan>,
 }
 
 impl ExperimentBuilder {
@@ -188,6 +195,10 @@ impl ExperimentBuilder {
             copy_path: None,
             num_simulations: None,
             warm_start: None,
+            checkpoint_every: None,
+            checkpoint_path: None,
+            restore_from: None,
+            fault: None,
         }
     }
 
@@ -283,6 +294,38 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Write a checkpoint every `n` learner updates (Sebulba/MuZero) or
+    /// outer iterations (Anakin). Applies to every architecture; the file
+    /// lands at [`Self::checkpoint_path`] (default `podracer.ckpt`).
+    /// Checkpointed Sebulba/MuZero runs execute in lockstep (one window per
+    /// update) so the saved state is a consistent cut — see DESIGN.md §13.
+    pub fn checkpoint_every(mut self, n: u64) -> Self {
+        self.checkpoint_every = Some(n);
+        self
+    }
+
+    /// Where [`Self::checkpoint_every`] writes its checkpoint. Setting a
+    /// path without a cadence is a build error, never a silent no-op.
+    pub fn checkpoint_path(mut self, path: &Path) -> Self {
+        self.checkpoint_path = Some(path.to_path_buf());
+        self
+    }
+
+    /// Resume from a checkpoint written by an earlier run. The update
+    /// budget stays absolute: `.updates(2 * K).restore_from(k_ckpt)` runs
+    /// K more updates on top of the K already in the file.
+    pub fn restore_from(mut self, path: &Path) -> Self {
+        self.restore_from = Some(path.to_path_buf());
+        self
+    }
+
+    /// Inject scheduled faults (kill a replica, poison a queue, truncate
+    /// the checkpoint file) — resilience tests only, see `testkit`.
+    pub fn fault(mut self, plan: FaultPlan) -> Self {
+        self.fault = Some(plan);
+        self
+    }
+
     /// Reject knobs that were set but mean nothing for `arch`.
     fn reject_inapplicable(&self, knobs: &[(&str, bool)]) -> Result<()> {
         for (name, set) in knobs {
@@ -299,6 +342,27 @@ impl ExperimentBuilder {
         let artifacts = match &self.artifacts {
             Some(p) => p.clone(),
             None => crate::artifacts_dir(),
+        };
+        if self.checkpoint_path.is_some() && self.checkpoint_every.is_none() {
+            bail!(
+                "`checkpoint_path` without `checkpoint_every` would never write \
+                 a checkpoint; set both or neither"
+            );
+        }
+        if self.checkpoint_every == Some(0) {
+            bail!("`checkpoint_every` expects a positive round count, got 0");
+        }
+        let spec = RunSpec {
+            checkpoint: self.checkpoint_every.map(|every| {
+                CheckpointSpec::new(
+                    every,
+                    self.checkpoint_path
+                        .clone()
+                        .unwrap_or_else(|| PathBuf::from("podracer.ckpt")),
+                )
+            }),
+            restore_from: self.restore_from.clone(),
+            fault: self.fault.clone(),
         };
         let (topo, runner): (Topology, Box<dyn Runner>) = match arch {
             Arch::Anakin => {
@@ -382,14 +446,24 @@ impl ExperimentBuilder {
                 (topo, Box::new(runner))
             }
         };
-        Ok(Experiment { arch, topo, artifacts, runner })
+        Ok(Experiment { arch, topo, artifacts, runner, spec })
     }
 }
 
 mod from_args {
     use super::*;
 
-    const ANAKIN_FLAGS: &[&str] = &["agent", "cores", "outer-iters", "mode", "driver", "seed"];
+    const ANAKIN_FLAGS: &[&str] = &[
+        "agent",
+        "cores",
+        "outer-iters",
+        "mode",
+        "driver",
+        "seed",
+        "checkpoint-every",
+        "checkpoint-path",
+        "restore",
+    ];
     const SEBULBA_FLAGS: &[&str] = &[
         "agent",
         "env",
@@ -408,6 +482,9 @@ mod from_args {
         "updates",
         "seed",
         "data-path",
+        "checkpoint-every",
+        "checkpoint-path",
+        "restore",
     ];
     const MUZERO_FLAGS: &[&str] = &[
         "agent",
@@ -423,6 +500,9 @@ mod from_args {
         "replicas",
         "updates",
         "seed",
+        "checkpoint-every",
+        "checkpoint-path",
+        "restore",
     ];
 
     fn check_flags(arch: Arch, args: &Args, accepted: &[&str]) -> Result<()> {
@@ -446,18 +526,42 @@ mod from_args {
         raw.parse::<T>().with_context(|| format!("--{key} {raw:?}"))
     }
 
+    /// Apply the elasticity flags shared by every arch:
+    /// `--checkpoint-every N [--checkpoint-path P]` and `--restore P`.
+    fn apply_elasticity(mut b: ExperimentBuilder, args: &Args) -> Result<ExperimentBuilder> {
+        if args.has("checkpoint-every") {
+            let every = args.get_u64("checkpoint-every", 0)?;
+            if every == 0 {
+                bail!("--checkpoint-every expects a positive round count");
+            }
+            b = b.checkpoint_every(every);
+        }
+        if args.has("checkpoint-path") {
+            b = b.checkpoint_path(Path::new(&args.get_str("checkpoint-path", "")));
+        }
+        if args.has("restore") {
+            let path = args.get_str("restore", "");
+            // a bare `--restore` parses as the value "true"
+            if path.is_empty() || path == "true" {
+                bail!("--restore expects a checkpoint path");
+            }
+            b = b.restore_from(Path::new(&path));
+        }
+        Ok(b)
+    }
+
     pub(super) fn build(arch: Arch, args: &Args) -> Result<Experiment> {
         match arch {
             Arch::Anakin => {
                 check_flags(arch, args, ANAKIN_FLAGS)?;
-                Experiment::new(arch)
+                let b = Experiment::new(arch)
                     .agent(&args.get_str("agent", "anakin_catch"))
                     .topology(Topology::anakin(args.get_usize("cores", 4)?))
                     .updates(args.get_u64("outer-iters", 20)?)
                     .mode(parse_flag(args, "mode", "bundled")?)
                     .driver(parse_flag(args, "driver", "threaded")?)
-                    .seed(args.get_u64("seed", 7)?)
-                    .build()
+                    .seed(args.get_u64("seed", 7)?);
+                apply_elasticity(b, args)?.build()
             }
             Arch::Sebulba => {
                 check_flags(arch, args, SEBULBA_FLAGS)?;
@@ -466,7 +570,7 @@ mod from_args {
                     "copy" => true,
                     other => bail!("--data-path expects arena|copy, got {other:?}"),
                 };
-                Experiment::new(arch)
+                let b = Experiment::new(arch)
                     .agent(&args.get_str("agent", "seb_catch"))
                     .env(parse_flag(args, "env", "catch")?)
                     .topology(Topology {
@@ -485,12 +589,12 @@ mod from_args {
                     .discount(args.get_f64("discount", 0.99)? as f32)
                     .copy_path(copy_path)
                     .updates(args.get_u64("updates", 100)?)
-                    .seed(args.get_u64("seed", 42)?)
-                    .build()
+                    .seed(args.get_u64("seed", 42)?);
+                apply_elasticity(b, args)?.build()
             }
             Arch::MuZero => {
                 check_flags(arch, args, MUZERO_FLAGS)?;
-                Experiment::new(arch)
+                let b = Experiment::new(arch)
                     .agent(&args.get_str("agent", "mz_catch"))
                     .env(parse_flag(args, "env", "catch")?)
                     .topology(Topology {
@@ -506,8 +610,8 @@ mod from_args {
                     .num_simulations(args.get_usize("simulations", 16)?)
                     .discount(args.get_f64("discount", 0.997)? as f32)
                     .updates(args.get_u64("updates", 20)?)
-                    .seed(args.get_u64("seed", 11)?)
-                    .build()
+                    .seed(args.get_u64("seed", 11)?);
+                apply_elasticity(b, args)?.build()
             }
         }
     }
@@ -638,14 +742,16 @@ mod tests {
                 "--pipeline-stages", "2", "--learner-pipeline", "1", "--unroll", "20",
                 "--micro-batches", "1", "--discount", "0.99", "--queue", "2",
                 "--env-workers", "2", "--replicas", "1", "--updates", "1", "--seed", "3",
-                "--data-path", "copy",
+                "--data-path", "copy", "--checkpoint-every", "2",
+                "--checkpoint-path", "seb.ckpt", "--restore", "old.ckpt",
             ]),
         )
         .unwrap();
         Experiment::from_args(
             Arch::Anakin,
             &parse(&["--agent", "anakin_grid", "--cores", "2", "--outer-iters", "1", "--mode",
-                     "psum", "--driver", "serial", "--seed", "1"]),
+                     "psum", "--driver", "serial", "--seed", "1", "--checkpoint-every", "2",
+                     "--checkpoint-path", "ana.ckpt", "--restore", "old.ckpt"]),
         )
         .unwrap();
         Experiment::from_args(
@@ -653,8 +759,32 @@ mod tests {
             &parse(&["--agent", "mz_catch", "--env", "catch", "--actor-cores", "1",
                      "--learner-cores", "2", "--threads", "1", "--simulations", "4",
                      "--learner-pipeline", "1", "--discount", "0.997", "--queue", "2",
-                     "--env-workers", "2", "--replicas", "1", "--updates", "1", "--seed", "2"]),
+                     "--env-workers", "2", "--replicas", "1", "--updates", "1", "--seed", "2",
+                     "--checkpoint-every", "2", "--checkpoint-path", "mz.ckpt",
+                     "--restore", "old.ckpt"]),
         )
         .unwrap();
+    }
+
+    #[test]
+    fn elasticity_flags_reject_half_configured_knobs() {
+        // a path that nothing will ever write to is a config bug, not a no-op
+        let err = Experiment::from_args(
+            Arch::Anakin,
+            &parse(&["--checkpoint-path", "x.ckpt"]),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("checkpoint_every"), "{err}");
+        // zero cadence and a bare --restore are both rejected loudly
+        assert!(Experiment::from_args(Arch::Sebulba, &parse(&["--checkpoint-every", "0"]))
+            .is_err());
+        assert!(Experiment::from_args(Arch::MuZero, &parse(&["--restore"])).is_err());
+        // builder-level guard matches the CLI one
+        assert!(Experiment::new(Arch::Anakin)
+            .checkpoint_path(Path::new("x.ckpt"))
+            .build()
+            .is_err());
+        assert!(Experiment::new(Arch::Sebulba).checkpoint_every(0).build().is_err());
     }
 }

@@ -7,11 +7,40 @@
 //! do — and `Experiment` can treat all three architectures uniformly
 //! through `Box<dyn Runner>`.
 
+use std::path::PathBuf;
+
 use anyhow::Result;
 
+use crate::checkpoint::CheckpointSpec;
 use crate::runtime::Pod;
+use crate::testkit::FaultPlan;
 
 use super::{Arch, Report, Topology};
+
+/// Per-run elasticity knobs (DESIGN.md §13): periodic checkpointing, a
+/// restore source, and the injectable fault plan the resilience tests use.
+/// `RunSpec::default()` is a plain uninterrupted run — the historical
+/// behaviour of [`Runner::run`].
+#[derive(Clone, Debug, Default)]
+pub struct RunSpec {
+    /// Write a checkpoint every N update rounds (None = never).
+    pub checkpoint: Option<CheckpointSpec>,
+    /// Resume from this checkpoint file instead of initializing fresh.
+    /// The update budget stays absolute: a workload configured for
+    /// `updates(N)` runs until N *total* rounds, counting the restored ones.
+    pub restore_from: Option<PathBuf>,
+    /// Scheduled faults (tests only; None on production paths).
+    pub fault: Option<FaultPlan>,
+}
+
+impl RunSpec {
+    /// True if this spec changes nothing about a plain run.
+    pub fn is_plain(&self) -> bool {
+        self.checkpoint.is_none()
+            && self.restore_from.is_none()
+            && self.fault.as_ref().map_or(true, |f| f.is_empty())
+    }
+}
 
 /// Contract: `run` validates `topo` against the pod (`topo.total_cores()
 /// <= pod.n_cores()`), loads its programs, executes to the configured
@@ -20,8 +49,22 @@ use super::{Arch, Report, Topology};
 /// artifacts are deterministic wherever the architecture itself is
 /// (Anakin: bit-exact; Sebulba/MuZero: up to actor/learner interleaving —
 /// see DESIGN.md §12).
+///
+/// With a non-plain [`RunSpec`] the run additionally honours the
+/// elasticity contract (DESIGN.md §13): checkpoints are written atomically
+/// every `checkpoint.every` rounds, a restore resumes the *exact* state of
+/// the checkpointed run, and K updates + restore + K more updates produce
+/// `final_params` bit-identical to an uninterrupted 2K-update run.
 pub trait Runner: Send + Sync {
     fn arch(&self) -> Arch;
 
-    fn run(&self, pod: &mut Pod, topo: &Topology) -> Result<Report>;
+    /// Execute with elasticity knobs. This is the required entry point;
+    /// implementations must honour every field of `spec` or reject the
+    /// combination with a typed error — never silently ignore a knob.
+    fn run_checkpointed(&self, pod: &mut Pod, topo: &Topology, spec: &RunSpec) -> Result<Report>;
+
+    /// A plain uninterrupted run (the historical contract).
+    fn run(&self, pod: &mut Pod, topo: &Topology) -> Result<Report> {
+        self.run_checkpointed(pod, topo, &RunSpec::default())
+    }
 }

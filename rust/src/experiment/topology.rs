@@ -131,6 +131,30 @@ impl Topology {
         Ok(())
     }
 
+    /// A stable 64-bit digest of every field (FNV-1a over the field
+    /// values in declaration order). Checkpoints store it in their header
+    /// so a restore into a differently-shaped pod is a typed
+    /// `TopologyMismatch` error instead of undefined scheduling
+    /// (DESIGN.md §13).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325; // FNV offset basis
+        let mut mix = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3); // FNV prime
+            }
+        };
+        mix(self.actor_cores as u64);
+        mix(self.learner_cores as u64);
+        mix(self.replicas as u64);
+        mix(self.threads_per_actor_core as u64);
+        mix(self.pipeline_stages as u64);
+        mix(self.learner_pipeline as u64);
+        mix(self.env_workers as u64);
+        mix(self.queue_capacity as u64);
+        h
+    }
+
     /// Architectures with a host-side acting path (Sebulba, MuZero) need a
     /// proper actor/learner split.
     pub fn require_split(&self) -> Result<()> {
@@ -184,6 +208,30 @@ mod tests {
         assert!(t.validate().is_err());
         let t = Topology { queue_capacity: 0, ..Default::default() };
         assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_every_field() {
+        let base = Topology::default();
+        assert_eq!(base.fingerprint(), Topology::default().fingerprint());
+        let variants = [
+            Topology { actor_cores: 3, ..base.clone() },
+            Topology { learner_cores: 3, ..base.clone() },
+            Topology { replicas: 2, ..base.clone() },
+            Topology { threads_per_actor_core: 1, ..base.clone() },
+            Topology { pipeline_stages: 1, ..base.clone() },
+            Topology { learner_pipeline: 1, ..base.clone() },
+            Topology { env_workers: 1, ..base.clone() },
+            Topology { queue_capacity: 1, ..base.clone() },
+        ];
+        for (i, v) in variants.iter().enumerate() {
+            assert_ne!(v.fingerprint(), base.fingerprint(), "field {i} not hashed");
+        }
+        // field *positions* matter: swapping actor/learner counts differs
+        assert_ne!(
+            Topology::split(1, 2).fingerprint(),
+            Topology::split(2, 1).fingerprint()
+        );
     }
 
     #[test]

@@ -24,6 +24,8 @@
 //!   queues, gradient collective, parameter store, replicas.
 //! * [`anakin`] — **Anakin**: the replicated on-device loop driver.
 //! * [`search`] — MCTS for the MuZero-style search agent.
+//! * [`checkpoint`] — elastic-pod checkpoint/restore: the versioned,
+//!   CRC'd on-disk snapshot format and its typed errors (DESIGN.md §13).
 //! * [`benchkit`] / [`testkit`] — bench harness and property-test support.
 //!
 //! ## Quickstart
@@ -48,6 +50,7 @@
 
 pub mod anakin;
 pub mod benchkit;
+pub mod checkpoint;
 pub mod coordinator;
 pub mod envs;
 pub mod experiment;

@@ -8,6 +8,10 @@
 //!                   [--replicas 1] [--threads 2] [--data-path arena|copy]
 //! podracer muzero   [--env catch] [--updates 20] [--simulations 16]
 //! podracer info     # list artifacts & agents
+//!
+//! all training subcommands also take the elasticity knobs (DESIGN.md §13):
+//!                   [--checkpoint-every N] [--checkpoint-path run.ckpt]
+//!                   [--restore run.ckpt]
 //! ```
 //!
 //! Every architecture goes through one declarative path

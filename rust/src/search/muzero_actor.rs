@@ -12,7 +12,8 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::actor::ShardBundle;
+use crate::checkpoint::ActorSection;
+use crate::coordinator::actor::{ActorCheckpoint, ShardBundle};
 use crate::coordinator::param_store::ParamStore;
 use crate::coordinator::queue::BoundedQueue;
 use crate::coordinator::sharder::shard;
@@ -39,6 +40,9 @@ pub struct MuZeroActorConfig {
     pub dynpred: String,
     pub predict: String,
     pub seed: u64,
+    /// Checkpoint/restore duties — lockstep gate, deposit slot, resume
+    /// state (DESIGN.md §13). Same protocol as `coordinator::actor`.
+    pub checkpoint: Option<ActorCheckpoint>,
 }
 
 /// Device-backed ModelEval: the fused dynamics+prediction program — one
@@ -130,7 +134,42 @@ fn muzero_actor_main(
     let param_slot = format!("mz-params#{}", cfg.actor_id);
     let mut cached_version = u64::MAX;
 
+    // ---- checkpoint/restore (DESIGN.md §13) ------------------------------
+    // Same deposit-before-push protocol as the model-free actor.
+    let mut windows_done: u64 = 0;
+    if let Some(res) = cfg.checkpoint.as_ref().and_then(|ck| ck.resume.as_ref()) {
+        anyhow::ensure!(
+            res.obs.len() == b * d,
+            "restored obs has {} floats, this run needs {}",
+            res.obs.len(),
+            b * d
+        );
+        anyhow::ensure!(
+            res.episode_reward.len() == b,
+            "restored episode rewards cover {} envs, this run has {b}",
+            res.episode_reward.len()
+        );
+        env.load_states(&res.env_states).context("restoring muzero env states")?;
+        obs.copy_from_slice(&res.obs);
+        for (er, &v) in episode_reward.iter_mut().zip(&res.episode_reward) {
+            *er = v as f64;
+        }
+        rng = Xoshiro256::from_state(res.rng);
+        windows_done = res.windows_done;
+    }
+
     while !stop.load(Ordering::Relaxed) {
+        // Lockstep gate: under checkpointing, window W starts only once the
+        // learner has published update W — it equates window and update
+        // counts, which the checkpoint format relies on.
+        if cfg.checkpoint.is_some() {
+            while store.version() < windows_done {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+                std::thread::yield_now();
+            }
+        }
         for _t in 0..cfg.unroll {
             if stop.load(Ordering::Relaxed) {
                 return Ok(());
@@ -210,6 +249,21 @@ fn muzero_actor_main(
         let arena = builder.finish(&obs, version, cfg.actor_id)?;
         stats.env_frames.add(arena.frames() as u64);
         stats.trajectories.fetch_add(1, Ordering::Relaxed);
+        windows_done += 1;
+        // Deposit-before-push: the snapshot must exist before the learner
+        // can possibly retire the update this window feeds (DESIGN.md §13).
+        if let Some(ck) = &cfg.checkpoint {
+            if windows_done % ck.every == 0 {
+                let snap = ActorSection {
+                    windows_done,
+                    rng: rng.state(),
+                    obs: obs.clone(),
+                    episode_reward: episode_reward.iter().map(|&r| r as f32).collect(),
+                    env_states: env.save_states(),
+                };
+                ck.slot.lock().unwrap().insert(windows_done, snap);
+            }
+        }
         // Zero-copy handoff: the bundle carries Arc views of the arena.
         if queue.push(shard(&arena)).is_err() {
             return Ok(());

@@ -1,21 +1,26 @@
 //! Top-level MuZero-Sebulba run: like `Sebulba::run`, with MCTS actors.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::actor::ShardBundle;
+use crate::checkpoint::{
+    expect_field, ActorSection, Checkpoint, MetaSection, StoreSection, ACTOR_SECTION,
+    META_SECTION, STORE_SECTION,
+};
+use crate::coordinator::actor::{ActorCheckpoint, ShardBundle, SnapshotSlot};
 use crate::coordinator::collective::GradientBus;
-use crate::coordinator::learner::{LearnerConfig, LearnerHandles};
+use crate::coordinator::learner::{LearnerCheckpoint, LearnerConfig, LearnerHandles};
 use crate::coordinator::param_store::ParamStore;
 use crate::coordinator::queue::BoundedQueue;
 use crate::coordinator::sebulba::{join_pod_threads, spawn_guarded_learner};
 use crate::coordinator::stats::RunStats;
 use crate::envs::{make_factory, WorkerPool};
 use crate::experiment::{
-    ActorLearnerDetail, Arch, Detail, EnvKind, Report, Runner, Topology,
+    ActorLearnerDetail, Arch, Detail, EnvKind, Report, RunSpec, Runner, Topology,
 };
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::{DeviceHandle, Pod};
@@ -58,9 +63,9 @@ impl Runner for MuZero {
         Arch::MuZero
     }
 
-    fn run(&self, pod: &mut Pod, topo: &Topology) -> Result<Report> {
+    fn run_checkpointed(&self, pod: &mut Pod, topo: &Topology, spec: &RunSpec) -> Result<Report> {
         MuZero::check_topology(topo)?;
-        run_resolved(pod, &self.resolved(topo))
+        run_resolved(pod, &self.resolved(topo), spec)
     }
 }
 
@@ -195,11 +200,47 @@ impl MuZeroRunConfig {
 /// Run on an existing pod.
 #[deprecated(note = "one-PR migration shim: use experiment::Experiment::new(Arch::MuZero)")]
 pub fn run_muzero(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<Report> {
-    run_resolved(pod, cfg)
+    run_resolved(pod, cfg, &RunSpec::default())
 }
 
-pub(crate) fn run_resolved(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<Report> {
+pub(crate) fn run_resolved(pod: &mut Pod, cfg: &MuZeroRunConfig, spec: &RunSpec) -> Result<Report> {
     cfg.validate()?;
+
+    // Lockstep pacing requirements for elasticity (DESIGN.md §13; same
+    // invariant as the Sebulba coordinator — MuZero has no split-batch
+    // pipeline or micro-batching, so only these three can break it).
+    if !spec.is_plain() {
+        anyhow::ensure!(
+            cfg.actor_cores * cfg.threads_per_actor_core == 1,
+            "checkpoint/restore/fault runs need exactly 1 actor thread (got {} cores x {} threads)",
+            cfg.actor_cores,
+            cfg.threads_per_actor_core
+        );
+        anyhow::ensure!(
+            cfg.learner_pipeline == 1,
+            "checkpoint/restore/fault runs need learner_pipeline == 1"
+        );
+        anyhow::ensure!(cfg.replicas == 1, "checkpoint/restore/fault runs need replicas == 1");
+    }
+
+    // ---- restore (DESIGN.md §13; mirrors the Sebulba coordinator) --------
+    let restored = match &spec.restore_from {
+        Some(path) => {
+            let ckpt = Checkpoint::load_for(path, Arch::MuZero, &cfg.topology())
+                .with_context(|| format!("restoring from {}", path.display()))?;
+            let meta = MetaSection::decode(ckpt.section(META_SECTION)?)?;
+            expect_field("agent", meta.agent.clone(), cfg.agent.clone())?;
+            expect_field("seed", meta.seed, cfg.seed)?;
+            expect_field("env", meta.env.clone(), cfg.env_kind.as_str().to_string())?;
+            let store = StoreSection::decode(ckpt.section(STORE_SECTION)?)?;
+            let actor = ActorSection::decode(ckpt.section(ACTOR_SECTION)?)?;
+            expect_field("store version", store.version, meta.rounds_done)?;
+            expect_field("actor windows", actor.windows_done, meta.rounds_done)?;
+            Some((meta, store, actor))
+        }
+        None => None,
+    };
+
     let agent = pod.manifest.agent(&cfg.agent)?.clone();
     let batch = agent.extra_usize("batch")?;
     let unroll = agent.extra_usize("unroll")?;
@@ -244,12 +285,16 @@ pub(crate) fn run_resolved(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<Repor
         .map(|cid| Ok(pod.core(cid)?.busy_seconds()))
         .collect::<Result<_>>()?;
 
-    let outs = pod
-        .core(learner0_ids[0])?
-        .execute(&init, vec![HostTensor::scalar_i32(cfg.seed as i32)])
-        .context("muzero init")?;
-    let params0 = outs[0].clone().into_f32()?;
-    let opt0 = outs[1].clone().into_f32()?;
+    let (params0, opt0) = match &restored {
+        Some((_, s, _)) => (s.params.clone(), s.opt.clone()),
+        None => {
+            let outs = pod
+                .core(learner0_ids[0])?
+                .execute(&init, vec![HostTensor::scalar_i32(cfg.seed as i32)])
+                .context("muzero init")?;
+            (outs[0].clone().into_f32()?, outs[1].clone().into_f32()?)
+        }
+    };
 
     let stats = Arc::new(RunStats::new());
     let stop = Arc::new(AtomicBool::new(false));
@@ -263,11 +308,32 @@ pub(crate) fn run_resolved(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<Repor
     let queues: Vec<Arc<BoundedQueue<ShardBundle>>> = (0..cfg.replicas)
         .map(|_| Arc::new(BoundedQueue::<ShardBundle>::new(cfg.queue_capacity)))
         .collect();
+
+    // ---- checkpoint + fault wiring (replicas == 1 whenever any is on) ----
+    if let Some(after) = spec.fault.as_ref().and_then(|f| f.poison_queue_after) {
+        for q in &queues {
+            q.poison_after_pushes(after);
+        }
+    }
+    let start_round = restored.as_ref().map_or(0, |(m, _, _)| m.rounds_done);
+    let slot: SnapshotSlot = Arc::new(Mutex::new(BTreeMap::new()));
+    let actor_ck = if spec.checkpoint.is_some() || restored.is_some() {
+        Some(ActorCheckpoint {
+            every: spec.checkpoint.as_ref().map_or(u64::MAX, |c| c.every),
+            slot: slot.clone(),
+            resume: restored.as_ref().map(|(_, _, a)| a.clone()),
+        })
+    } else {
+        None
+    };
     let t_start = Instant::now();
 
     for r in 0..cfg.replicas {
         let base = r * n_per;
-        let store = Arc::new(ParamStore::new(params0.clone()));
+        let store = Arc::new(match &restored {
+            Some((_, s, _)) => ParamStore::with_version(params0.clone(), s.version),
+            None => ParamStore::new(params0.clone()),
+        });
         let queue = queues[r].clone();
         let pool = WorkerPool::new(cfg.env_workers);
 
@@ -293,6 +359,7 @@ pub(crate) fn run_resolved(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<Repor
                     dynpred: dynpred.clone(),
                     predict: predict.clone(),
                     seed: cfg.seed,
+                    checkpoint: actor_ck.clone(),
                 };
                 actor_joins.push(spawn_muzero_actor(
                     mcfg,
@@ -314,6 +381,20 @@ pub(crate) fn run_resolved(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<Repor
             shards_per_round: cfg.learner_cores,
             total_updates: cfg.total_updates,
             pipeline: cfg.learner_pipeline,
+            checkpoint: spec.checkpoint.as_ref().map(|cs| LearnerCheckpoint {
+                spec: cs.clone(),
+                slot: slot.clone(),
+                meta: MetaSection {
+                    agent: cfg.agent.clone(),
+                    seed: cfg.seed,
+                    env: cfg.env_kind.as_str().to_string(),
+                    rounds_done: 0,
+                },
+                arch: Arch::MuZero,
+                topology: cfg.topology(),
+            }),
+            fault: spec.fault.clone(),
+            start_round,
         };
         let cores: Vec<DeviceHandle> = (0..cfg.learner_cores)
             .map(|i| pod.core(base + cfg.actor_cores + i))

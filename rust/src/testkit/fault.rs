@@ -1,0 +1,95 @@
+//! Injectable fault plans for the elastic-pod resilience tests
+//! (DESIGN.md §13). A `FaultPlan` rides into a run through
+//! `experiment::RunSpec` and fires at well-defined seams:
+//!
+//! * **kill-replica** — the learner thread of replica `replica` errors out
+//!   at the start of update round `round`, as if the process died. The run
+//!   fails; the test restarts it from the last checkpoint and asserts the
+//!   continuation is bit-identical to an uninterrupted run.
+//! * **poison-queue** — the trajectory queue dies abruptly after N shard
+//!   pushes (`BoundedQueue::poison_after_pushes`): every later push/pop is
+//!   a typed `QueueError::Poisoned`, unlike the orderly drain of shutdown.
+//! * **truncate-checkpoint** — the checkpoint file is cut to `len` bytes
+//!   right after a successful save, so the next restore must surface a
+//!   typed `CheckpointError::Truncated`, never a partial load.
+//!
+//! Plans are plain data; production paths check them only when one is
+//! present, so a `FaultPlan::default()` run is fault-free.
+
+/// Kill learner replica `replica` at the start of update round `round`
+/// (0-based: round `r` is the one that would produce publish `r + 1`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KillReplica {
+    pub replica: usize,
+    pub round: u64,
+}
+
+/// The full set of faults a test can schedule for one run. All fields are
+/// independent; `default()` injects nothing.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Fail a learner replica at a specific round.
+    pub kill_replica: Option<KillReplica>,
+    /// Poison the trajectory queue once this many shards were pushed.
+    pub poison_queue_after: Option<u64>,
+    /// Truncate the checkpoint file to this many bytes after each save.
+    pub truncate_checkpoint_to: Option<u64>,
+}
+
+impl FaultPlan {
+    /// Schedule a replica death at `(replica, round)`.
+    pub fn kill_replica(replica: usize, round: u64) -> Self {
+        Self { kill_replica: Some(KillReplica { replica, round }), ..Self::default() }
+    }
+
+    /// Schedule an abrupt queue death after `after_pushes` shard pushes.
+    pub fn poison_queue(after_pushes: u64) -> Self {
+        Self { poison_queue_after: Some(after_pushes), ..Self::default() }
+    }
+
+    /// Schedule checkpoint-file truncation to `len` bytes after each save.
+    pub fn truncate_checkpoint(len: u64) -> Self {
+        Self { truncate_checkpoint_to: Some(len), ..Self::default() }
+    }
+
+    /// True if the kill fault fires for this `(replica, round)`.
+    pub fn should_kill(&self, replica: usize, round: u64) -> bool {
+        self.kill_replica == Some(KillReplica { replica, round })
+    }
+
+    /// True if the plan injects nothing at all.
+    pub fn is_empty(&self) -> bool {
+        *self == Self::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_inert() {
+        let p = FaultPlan::default();
+        assert!(p.is_empty());
+        assert!(!p.should_kill(0, 0));
+        assert_eq!(p.poison_queue_after, None);
+        assert_eq!(p.truncate_checkpoint_to, None);
+    }
+
+    #[test]
+    fn kill_fires_only_at_its_coordinates() {
+        let p = FaultPlan::kill_replica(1, 3);
+        assert!(!p.is_empty());
+        assert!(p.should_kill(1, 3));
+        assert!(!p.should_kill(0, 3));
+        assert!(!p.should_kill(1, 2));
+        assert!(!p.should_kill(1, 4));
+    }
+
+    #[test]
+    fn constructors_set_one_fault_each() {
+        assert_eq!(FaultPlan::poison_queue(5).poison_queue_after, Some(5));
+        assert_eq!(FaultPlan::poison_queue(5).kill_replica, None);
+        assert_eq!(FaultPlan::truncate_checkpoint(16).truncate_checkpoint_to, Some(16));
+    }
+}

@@ -12,6 +12,10 @@
 //!       |&(a, b)| if a + b == b + a { Ok(()) } else { Err("nope".into()) });
 //! ```
 
+pub mod fault;
+
+pub use fault::{FaultPlan, KillReplica};
+
 use crate::util::rng::Xoshiro256;
 
 /// Size-aware generator context handed to generator closures.

@@ -1,0 +1,208 @@
+//! Injectable faults (testkit::FaultPlan) driven through the full
+//! Experiment surface: a replica killed mid-run leaves a checkpoint a fresh
+//! process resumes bit-identically; a truncated checkpoint is a typed error,
+//! never a silent partial load; saves are atomic (no `.tmp` survivors); a
+//! poisoned queue surfaces as an injected-fault error on the arch that has a
+//! queue and an honest rejection on the one that doesn't; and every saved
+//! file is a consistent cut (store version == learner rounds == actor
+//! windows) even though the save races the publish.
+
+use podracer::anakin::Driver;
+use podracer::checkpoint::{
+    tmp_path, ActorSection, Checkpoint, CheckpointError, MetaSection, StoreSection,
+    ACTOR_SECTION, META_SECTION, STORE_SECTION,
+};
+use podracer::experiment::{Arch, EnvKind, Experiment, ExperimentBuilder, Topology};
+use podracer::testkit::FaultPlan;
+use std::path::PathBuf;
+
+fn artifacts() -> PathBuf {
+    let dir = podracer::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    dir
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("podracer_fault_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn lockstep_topo() -> Topology {
+    Topology {
+        actor_cores: 1,
+        learner_cores: 1,
+        threads_per_actor_core: 1,
+        pipeline_stages: 1,
+        learner_pipeline: 1,
+        queue_capacity: 2,
+        ..Topology::default()
+    }
+}
+
+fn sebulba(updates: u64) -> ExperimentBuilder {
+    Experiment::new(Arch::Sebulba)
+        .artifacts(&artifacts())
+        .agent("seb_catch")
+        .env(EnvKind::Catch)
+        .topology(lockstep_topo())
+        .actor_batch(32)
+        .unroll(20)
+        .updates(updates)
+        .seed(123)
+}
+
+fn meta(ck: &std::path::Path) -> MetaSection {
+    MetaSection::decode(Checkpoint::load(ck).unwrap().section(META_SECTION).unwrap()).unwrap()
+}
+
+#[test]
+fn killed_replica_resumes_bit_identically_from_its_last_checkpoint() {
+    let dir = scratch("kill");
+    let (ck, oracle_ck) = (dir.join("k.ckpt"), dir.join("oracle.ckpt"));
+
+    // Kill replica 0 at the start of round 4: rounds 0..=3 complete, and the
+    // every-2 spec saved at rounds_done = 2 and 4 before the kill landed.
+    let err = sebulba(8)
+        .checkpoint_every(2)
+        .checkpoint_path(&ck)
+        .fault(FaultPlan::kill_replica(0, 4))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+    assert_eq!(meta(&ck).rounds_done, 4, "last checkpoint before the kill");
+
+    // A fresh process picks the file up and finishes the original target.
+    let resumed = sebulba(8).restore_from(&ck).build().unwrap().run().unwrap();
+    let oracle = sebulba(8)
+        .checkpoint_every(8)
+        .checkpoint_path(&oracle_ck)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(
+        resumed.final_params, oracle.final_params,
+        "crash at round 4 + restore diverged from the uninterrupted run"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_checkpoint_is_a_typed_error_not_a_partial_load() {
+    let dir = scratch("truncate");
+    let ck = dir.join("k.ckpt");
+
+    // The truncation fault clips the file after every save; the run itself
+    // is oblivious (it only writes) and completes.
+    sebulba(2)
+        .checkpoint_every(2)
+        .checkpoint_path(&ck)
+        .fault(FaultPlan::truncate_checkpoint(10))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(std::fs::metadata(&ck).unwrap().len(), 10);
+
+    assert!(matches!(
+        Checkpoint::load(&ck),
+        Err(CheckpointError::Truncated { .. })
+    ));
+
+    // And through the full restore surface: typed, downcastable, no panic.
+    let err = sebulba(4).restore_from(&ck).build().unwrap().run().unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<CheckpointError>(),
+            Some(CheckpointError::Truncated { .. })
+        ),
+        "{err:#}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn saves_are_atomic_no_tmp_file_survives() {
+    let dir = scratch("atomic");
+    let ck = dir.join("k.ckpt");
+
+    // Three overwrites of the same path (every = 1): each must go through
+    // write-to-temp + rename, so afterwards the temp is gone and the final
+    // file is the complete round-3 image.
+    Experiment::new(Arch::Anakin)
+        .artifacts(&artifacts())
+        .agent("anakin_catch")
+        .topology(Topology::anakin(2))
+        .driver(Driver::Serial)
+        .updates(3)
+        .seed(5)
+        .checkpoint_every(1)
+        .checkpoint_path(&ck)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+
+    assert!(!tmp_path(&ck).exists(), "stale {} left behind", tmp_path(&ck).display());
+    let ckpt = Checkpoint::load(&ck).unwrap();
+    ckpt.verify(Arch::Anakin, &Topology::anakin(2)).unwrap();
+    assert_eq!(
+        MetaSection::decode(ckpt.section(META_SECTION).unwrap()).unwrap().rounds_done,
+        3
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn poisoned_queue_fails_loudly_where_there_is_a_queue() {
+    let err = sebulba(8)
+        .fault(FaultPlan::poison_queue(1))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("poison"), "{err:#}");
+}
+
+#[test]
+fn poisoned_queue_is_rejected_where_there_is_none() {
+    // Anakin has no trajectory queue; honour-or-reject says this fault
+    // cannot silently no-op.
+    let err = Experiment::new(Arch::Anakin)
+        .artifacts(&artifacts())
+        .agent("anakin_catch")
+        .topology(Topology::anakin(1))
+        .updates(2)
+        .seed(5)
+        .fault(FaultPlan::poison_queue(1))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("no trajectory queue"), "{err:#}");
+}
+
+#[test]
+fn every_saved_file_is_a_consistent_cut() {
+    // Saving every round races the learner's publish; the deposit-before-push
+    // protocol (DESIGN.md §13) must still pair actor and store state from
+    // the same round boundary in every file — checked on the survivor here,
+    // and implicitly on every intermediate save by the restore oracle tests.
+    let dir = scratch("cut");
+    let ck = dir.join("k.ckpt");
+    sebulba(4).checkpoint_every(1).checkpoint_path(&ck).build().unwrap().run().unwrap();
+
+    let ckpt = Checkpoint::load(&ck).unwrap();
+    let meta = MetaSection::decode(ckpt.section(META_SECTION).unwrap()).unwrap();
+    let store = StoreSection::decode(ckpt.section(STORE_SECTION).unwrap()).unwrap();
+    let actor = ActorSection::decode(ckpt.section(ACTOR_SECTION).unwrap()).unwrap();
+    assert_eq!(meta.rounds_done, 4);
+    assert_eq!(store.version, meta.rounds_done, "store cut from a different round");
+    assert_eq!(actor.windows_done, meta.rounds_done, "actor cut from a different round");
+    let _ = std::fs::remove_dir_all(&dir);
+}

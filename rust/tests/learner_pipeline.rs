@@ -143,6 +143,9 @@ fn pipeline_1_is_bit_exact_with_the_serial_learner() {
         shards_per_round: CORES,
         total_updates: ROUNDS as u64,
         pipeline: 1,
+        checkpoint: None,
+        fault: None,
+        start_round: 0,
     };
     let (params, opt) = learner_main(&cfg, &h, opt0).unwrap();
 

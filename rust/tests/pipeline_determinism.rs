@@ -62,6 +62,7 @@ fn run_actor(stages: usize) -> Vec<Trajectory> {
         num_actions: A,
         seed: SEED,
         copy_path: false,
+        checkpoint: None,
     };
     let join = spawn_actor(
         cfg,

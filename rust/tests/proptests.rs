@@ -1,11 +1,15 @@
 //! Property tests over coordinator invariants (testkit — see DESIGN.md §1
 //! for the proptest substitution; python uses real hypothesis).
 
+use podracer::checkpoint::{
+    ActorSection, Checkpoint, CheckpointError, MetaSection, StoreSection,
+};
 use podracer::coordinator::collective::all_reduce_mean;
 use podracer::coordinator::queue::BoundedQueue;
 use podracer::coordinator::sharder::{shard, shard_copying, unshard};
 use podracer::coordinator::trajectory::{TrajArena, TrajectoryBuilder};
 use podracer::envs::{make_factory, BatchedEnv, EnvKind, WorkerPool};
+use podracer::experiment::{Arch, Topology};
 use podracer::testkit::{check, Gen};
 use podracer::util::math::softmax;
 use podracer::util::rng::Xoshiro256;
@@ -308,6 +312,196 @@ fn prop_softmax_is_distribution() {
             Ok(())
         },
     );
+}
+
+// -- checkpoint container fuzzing (DESIGN.md §13) -----------------------------
+
+/// A random but structurally valid checkpoint, plus the identity it was
+/// written under (so properties can re-verify against the writing run).
+#[derive(Debug)]
+struct CkptData {
+    arch: Arch,
+    topo: Topology,
+    ckpt: Checkpoint,
+}
+
+fn random_topology(g: &mut Gen) -> Topology {
+    Topology {
+        actor_cores: g.usize(1, 4).max(1),
+        learner_cores: g.usize(1, 4).max(1),
+        replicas: g.usize(1, 3).max(1),
+        threads_per_actor_core: g.usize(1, 3).max(1),
+        pipeline_stages: g.usize(1, 3).max(1),
+        learner_pipeline: g.usize(1, 3).max(1),
+        env_workers: g.usize(1, 4).max(1),
+        queue_capacity: g.usize(1, 8).max(1),
+    }
+}
+
+fn random_bytes(g: &mut Gen, n: usize) -> Vec<u8> {
+    (0..n).map(|_| g.usize(0, 255) as u8).collect()
+}
+
+fn random_checkpoint(g: &mut Gen) -> CkptData {
+    let arch = *g.pick(&Arch::ALL);
+    let topo = random_topology(g);
+    let mut ckpt = Checkpoint::new(arch, &topo);
+    // typed sections with random content…
+    let meta = MetaSection {
+        agent: format!("agent_{}", g.usize(0, 999)),
+        seed: g.usize(0, 1_000_000) as u64,
+        env: if g.bool() { "catch".into() } else { String::new() },
+        rounds_done: g.usize(0, 500) as u64,
+    };
+    ckpt.insert(podracer::checkpoint::META_SECTION, meta.encode());
+    let store = StoreSection {
+        params: g.vec_f32(g.usize(0, 64), -10.0, 10.0),
+        opt: g.vec_f32(g.usize(0, 64), -1.0, 1.0),
+        version: g.usize(0, 500) as u64,
+    };
+    ckpt.insert(podracer::checkpoint::STORE_SECTION, store.encode());
+    let actor = ActorSection {
+        windows_done: g.usize(0, 500) as u64,
+        rng: [
+            g.usize(0, 1 << 30) as u64,
+            g.usize(0, 1 << 30) as u64,
+            g.usize(0, 1 << 30) as u64,
+            g.usize(1, 1 << 30) as u64,
+        ],
+        obs: g.vec_f32(g.usize(0, 64), -2.0, 2.0),
+        episode_reward: g.vec_f32(g.usize(0, 8), -5.0, 5.0),
+        env_states: (0..g.usize(0, 4))
+            .map(|_| {
+                let n = g.usize(0, 16);
+                random_bytes(g, n)
+            })
+            .collect(),
+    };
+    ckpt.insert(podracer::checkpoint::ACTOR_SECTION, actor.encode());
+    // …plus a few opaque ones, so the container is exercised beyond the
+    // sections today's runners happen to write
+    for i in 0..g.usize(0, 3) {
+        let n = g.usize(0, 32);
+        let payload = random_bytes(g, n);
+        ckpt.insert(&format!("extra{i}"), payload);
+    }
+    CkptData { arch, topo, ckpt }
+}
+
+#[test]
+fn prop_checkpoint_bytes_roundtrip_losslessly() {
+    check("checkpoint to_bytes/from_bytes roundtrip", 40, random_checkpoint, |data| {
+        let bytes = data.ckpt.to_bytes();
+        let back = Checkpoint::from_bytes(&bytes).map_err(|e| e.to_string())?;
+        if back != data.ckpt {
+            return Err("decoded checkpoint differs from the encoded one".into());
+        }
+        back.verify(data.arch, &data.topo).map_err(|e| e.to_string())?;
+        // typed sections survive the trip field-for-field
+        let meta =
+            MetaSection::decode(back.section(podracer::checkpoint::META_SECTION).unwrap())
+                .map_err(|e| e.to_string())?;
+        let orig =
+            MetaSection::decode(data.ckpt.section(podracer::checkpoint::META_SECTION).unwrap())
+                .unwrap();
+        if meta != orig {
+            return Err("meta section changed in flight".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_truncated_checkpoint_is_a_typed_error() {
+    check("every truncation is CheckpointError::Truncated", 30, random_checkpoint, |data| {
+        let bytes = data.ckpt.to_bytes();
+        // every header boundary plus a spread of interior cuts
+        let mut cuts = vec![0, 1, 7, 8, 11, 12, 15, 16, 23, 24, 27];
+        cuts.extend((28..bytes.len()).step_by(7));
+        cuts.push(bytes.len() - 1);
+        for cut in cuts {
+            if cut >= bytes.len() {
+                continue;
+            }
+            match Checkpoint::from_bytes(&bytes[..cut]) {
+                Err(CheckpointError::Truncated { .. }) => {}
+                Err(other) => return Err(format!("cut {cut}: wrong variant {other}")),
+                Ok(_) => return Err(format!("cut {cut}: a prefix decoded successfully")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_corrupt_byte_never_restores_silently() {
+    // Flip any single byte anywhere in the file: structural decode plus
+    // semantic verify against the writing run must fail — corruption is a
+    // typed error, never a silent load (ISSUE 6).
+    check("single byte flip always rejected", 30, random_checkpoint, |data| {
+        let bytes = data.ckpt.to_bytes();
+        for pos in (0..bytes.len()).step_by(3) {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x10;
+            let outcome = Checkpoint::from_bytes(&bad)
+                .and_then(|c| c.verify(data.arch, &data.topo).map(|_| c));
+            if outcome.is_ok() {
+                return Err(format!("flip at byte {pos} loaded and verified"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn corrupt_checkpoints_fail_with_the_right_variant() {
+    // Targeted mutations pin each corruption class to its typed error
+    // (the property above only proves *some* rejection happens). The layout
+    // is deterministic: one non-empty section, so the byte before the final
+    // CRC is payload.
+    let topo = Topology::split(2, 1);
+    let mut ckpt = Checkpoint::new(Arch::Sebulba, &topo);
+    ckpt.insert(
+        podracer::checkpoint::STORE_SECTION,
+        StoreSection { params: vec![1.0; 8], opt: vec![0.5; 8], version: 3 }.encode(),
+    );
+    let bytes = ckpt.to_bytes();
+
+    let mut bad = bytes.clone();
+    bad[0] = b'X'; // magic
+    assert!(matches!(
+        Checkpoint::from_bytes(&bad),
+        Err(CheckpointError::BadMagic { .. })
+    ));
+
+    let mut bad = bytes.clone();
+    bad[8] = 0xFE; // format version
+    assert!(matches!(
+        Checkpoint::from_bytes(&bad),
+        Err(CheckpointError::UnsupportedVersion { .. })
+    ));
+
+    let mut bad = bytes.clone();
+    let last = bad.len() - 5; // inside the final section's crc/payload
+    bad[last] ^= 0xFF;
+    assert!(matches!(
+        Checkpoint::from_bytes(&bad),
+        Err(CheckpointError::CrcMismatch { .. }) | Err(CheckpointError::Corrupt { .. })
+    ));
+
+    // header topology hash is not CRC'd: it decodes, then verify rejects it
+    let mut bad = bytes.clone();
+    bad[16] ^= 0x01;
+    let decoded = Checkpoint::from_bytes(&bad).expect("header flip still decodes");
+    assert!(matches!(
+        decoded.verify(Arch::Sebulba, &topo),
+        Err(CheckpointError::TopologyMismatch { .. })
+    ));
+
+    assert!(matches!(
+        Checkpoint::from_bytes(&bytes).unwrap().verify(Arch::Anakin, &topo),
+        Err(CheckpointError::ArchMismatch { .. })
+    ));
 }
 
 #[test]

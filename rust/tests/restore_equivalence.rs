@@ -1,0 +1,258 @@
+//! The checkpoint/restore correctness oracle (ISSUE 6 tentpole): for every
+//! architecture, run K updates → checkpoint → restore into a fresh run → K
+//! more updates, and the `final_params` must be bit-identical to an
+//! uninterrupted 2K-update run.
+//!
+//! Sebulba/MuZero runs that carry a `RunSpec` execute in lockstep (one actor
+//! window per learner update — DESIGN.md §13), so the uninterrupted oracle
+//! also carries a checkpoint spec: the contract compares two lockstep
+//! schedules, interrupted vs not. Anakin is bit-deterministic under any
+//! schedule, so its oracle is a plain run with no spec at all.
+
+use podracer::anakin::Driver;
+use podracer::checkpoint::{Checkpoint, CheckpointError, MetaSection, META_SECTION};
+use podracer::experiment::{Arch, EnvKind, Experiment, ExperimentBuilder, Topology};
+use std::path::PathBuf;
+
+fn artifacts() -> PathBuf {
+    let dir = podracer::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    dir
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("podracer_restore_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The geometry lockstep checkpointing requires: one actor thread, no
+/// pipelining, one replica (window count == update count).
+fn lockstep_topo() -> Topology {
+    Topology {
+        actor_cores: 1,
+        learner_cores: 1,
+        threads_per_actor_core: 1,
+        pipeline_stages: 1,
+        learner_pipeline: 1,
+        queue_capacity: 2,
+        ..Topology::default()
+    }
+}
+
+fn sebulba(updates: u64) -> ExperimentBuilder {
+    Experiment::new(Arch::Sebulba)
+        .artifacts(&artifacts())
+        .agent("seb_catch")
+        .env(EnvKind::Catch)
+        .topology(lockstep_topo())
+        .actor_batch(32)
+        .unroll(20)
+        .updates(updates)
+        .seed(123)
+}
+
+fn muzero(updates: u64) -> ExperimentBuilder {
+    Experiment::new(Arch::MuZero)
+        .artifacts(&artifacts())
+        .agent("mz_catch")
+        .env(EnvKind::Catch)
+        .topology(lockstep_topo())
+        .num_simulations(4)
+        .updates(updates)
+        .seed(11)
+}
+
+fn anakin(driver: Driver, outer_iters: u64) -> ExperimentBuilder {
+    Experiment::new(Arch::Anakin)
+        .artifacts(&artifacts())
+        .agent("anakin_catch")
+        .topology(Topology::anakin(2))
+        .driver(driver)
+        .updates(outer_iters)
+        .seed(5)
+}
+
+#[test]
+fn sebulba_restore_continuation_is_bit_identical() {
+    let dir = scratch("seb");
+    let (ck, oracle_ck) = (dir.join("k.ckpt"), dir.join("oracle.ckpt"));
+
+    let first =
+        sebulba(3).checkpoint_every(3).checkpoint_path(&ck).build().unwrap().run().unwrap();
+    assert!(first.final_params.iter().all(|x| x.is_finite()));
+    let meta =
+        MetaSection::decode(Checkpoint::load(&ck).unwrap().section(META_SECTION).unwrap())
+            .unwrap();
+    assert_eq!(meta.rounds_done, 3);
+
+    // updates are absolute: 6 total = 3 restored + 3 more
+    let resumed = sebulba(6).restore_from(&ck).build().unwrap().run().unwrap();
+    let oracle = sebulba(6)
+        .checkpoint_every(6)
+        .checkpoint_path(&oracle_ck)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(
+        resumed.final_params, oracle.final_params,
+        "sebulba: restore → K more updates diverged from the uninterrupted 2K run"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn muzero_restore_continuation_is_bit_identical() {
+    let dir = scratch("mz");
+    let (ck, oracle_ck) = (dir.join("k.ckpt"), dir.join("oracle.ckpt"));
+
+    muzero(2).checkpoint_every(2).checkpoint_path(&ck).build().unwrap().run().unwrap();
+    let resumed = muzero(4).restore_from(&ck).build().unwrap().run().unwrap();
+    let oracle = muzero(4)
+        .checkpoint_every(4)
+        .checkpoint_path(&oracle_ck)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(
+        resumed.final_params, oracle.final_params,
+        "muzero: restore → K more updates diverged from the uninterrupted 2K run"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn anakin_serial_restore_continuation_is_bit_identical() {
+    let dir = scratch("ana_serial");
+    let ck = dir.join("k.ckpt");
+
+    anakin(Driver::Serial, 2).checkpoint_every(2).checkpoint_path(&ck).build().unwrap().run()
+        .unwrap();
+    let resumed =
+        anakin(Driver::Serial, 4).restore_from(&ck).build().unwrap().run().unwrap();
+    // Anakin needs no lockstep: the oracle is a completely plain run.
+    let oracle = anakin(Driver::Serial, 4).build().unwrap().run().unwrap();
+    assert_eq!(
+        resumed.final_params, oracle.final_params,
+        "anakin/serial: restored continuation diverged from the plain 2K run"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn anakin_threaded_restore_continuation_is_bit_identical() {
+    let dir = scratch("ana_threaded");
+    let ck = dir.join("k.ckpt");
+
+    anakin(Driver::Threaded, 2)
+        .checkpoint_every(2)
+        .checkpoint_path(&ck)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let resumed =
+        anakin(Driver::Threaded, 4).restore_from(&ck).build().unwrap().run().unwrap();
+    let oracle = anakin(Driver::Threaded, 4).build().unwrap().run().unwrap();
+    assert_eq!(
+        resumed.final_params, oracle.final_params,
+        "anakin/threaded: restored continuation diverged from the plain 2K run"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn anakin_checkpoint_restores_across_drivers() {
+    // The serial and threaded drivers are bit-exact against each other, so a
+    // checkpoint written by one must continue identically under the other —
+    // the format carries pod state, not a schedule.
+    let dir = scratch("ana_cross");
+    let ck = dir.join("k.ckpt");
+
+    anakin(Driver::Serial, 2).checkpoint_every(2).checkpoint_path(&ck).build().unwrap().run()
+        .unwrap();
+    let resumed =
+        anakin(Driver::Threaded, 4).restore_from(&ck).build().unwrap().run().unwrap();
+    let oracle = anakin(Driver::Serial, 4).build().unwrap().run().unwrap();
+    assert_eq!(
+        resumed.final_params, oracle.final_params,
+        "a serial-written checkpoint must continue bit-identically under the threaded driver"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn restore_rejects_workload_and_identity_mismatches() {
+    let dir = scratch("mismatch");
+    let ck = dir.join("k.ckpt");
+    sebulba(2).checkpoint_every(2).checkpoint_path(&ck).build().unwrap().run().unwrap();
+
+    // different seed: same container, different run — typed field mismatch
+    let err = sebulba(4).seed(124).restore_from(&ck).build().unwrap().run().unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<CheckpointError>(),
+            Some(CheckpointError::Mismatch { field: "seed", .. })
+        ),
+        "{err:#}"
+    );
+
+    // different topology: rejected by the header fingerprint
+    let err = sebulba(4)
+        .topology(Topology { queue_capacity: 4, ..lockstep_topo() })
+        .restore_from(&ck)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<CheckpointError>(),
+            Some(CheckpointError::TopologyMismatch { .. })
+        ),
+        "{err:#}"
+    );
+
+    // different architecture: rejected by the arch tag
+    let err = muzero(4).restore_from(&ck).build().unwrap().run().unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<CheckpointError>(),
+            Some(CheckpointError::ArchMismatch { .. })
+        ),
+        "{err:#}"
+    );
+
+    // restoring a file that is not there: typed Io, not a silent fresh start
+    let err = sebulba(4).restore_from(&dir.join("nope.ckpt")).build().unwrap().run()
+        .unwrap_err();
+    assert!(
+        matches!(err.downcast_ref::<CheckpointError>(), Some(CheckpointError::Io(_))),
+        "{err:#}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn lockstep_constraints_are_enforced_not_silently_relaxed() {
+    // A checkpointing run on a pipelined topology cannot equate windows and
+    // updates; it must refuse up front, never write unsound checkpoints.
+    let dir = scratch("constraints");
+    let ck = dir.join("k.ckpt");
+    let err = sebulba(2)
+        .topology(Topology { threads_per_actor_core: 2, ..lockstep_topo() })
+        .checkpoint_every(2)
+        .checkpoint_path(&ck)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("checkpoint"), "{err:#}");
+    assert!(!ck.exists(), "a rejected run must not have written a checkpoint");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -73,6 +73,7 @@ fn run_actor_path(copy_path: bool, num_shards: usize) -> (Vec<ShardBundle>, Vec<
         num_actions: A,
         seed: SEED,
         copy_path,
+        checkpoint: None,
     };
     let join = spawn_actor(
         cfg,
@@ -191,6 +192,9 @@ fn run_learner(
         shards_per_round: CORES,
         total_updates: ROUNDS as u64,
         pipeline: 1,
+        checkpoint: None,
+        fault: None,
+        start_round: 0,
     };
     learner_main(&cfg, &h, opt0).unwrap()
 }

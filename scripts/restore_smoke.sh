@@ -1,0 +1,96 @@
+#!/usr/bin/env bash
+# Restore smoke (ISSUE 6): drive checkpoint/restore through the shipped CLI
+# and prove the continuation is bit-identical from the shell, with no test
+# harness in the loop. Checkpoint files are deterministic byte-for-byte, so
+# the oracle is `cmp`: a checkpoint written at round 2K by a restored run
+# must equal the one written at round 2K by an uninterrupted run.
+#
+# Wired into CI next to cli-smoke; run locally with `make restore-smoke`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${PODRACER_BIN:-target/release/podracer}
+if [[ ! -x "$BIN" ]]; then
+    echo "[restore-smoke] $BIN missing — run 'cargo build --release' first" >&2
+    exit 1
+fi
+
+TMP=$(mktemp -d "${TMPDIR:-/tmp}/podracer_restore_smoke.XXXXXX")
+trap 'rm -rf "$TMP"' EXIT
+
+fail=0
+
+run_case() {
+    local desc="$1"
+    shift
+    echo "== podracer $* =="
+    if ! "$BIN" "$@" > "$TMP/out.log" 2>&1; then
+        cat "$TMP/out.log"
+        echo "[restore-smoke] FAILED ($desc): nonzero exit" >&2
+        fail=1
+        return
+    fi
+    head -n 1 "$TMP/out.log"
+}
+
+expect_error() {
+    local desc="$1"
+    shift
+    echo "== podracer $* (must fail) =="
+    if "$BIN" "$@" > "$TMP/out.log" 2>&1; then
+        cat "$TMP/out.log"
+        echo "[restore-smoke] FAILED ($desc): expected nonzero exit" >&2
+        fail=1
+        return
+    fi
+    head -n 2 "$TMP/out.log"
+}
+
+bitwise() {
+    local desc="$1" a="$2" b="$3"
+    if cmp -s "$a" "$b"; then
+        echo "[restore-smoke] $desc: checkpoints bit-identical"
+    else
+        echo "[restore-smoke] FAILED ($desc): $a and $b differ" >&2
+        fail=1
+    fi
+}
+
+# --- anakin: K=2 -> restore -> 2K == plain 2K --------------------------------
+ANA=(anakin --agent anakin_catch --cores 2 --driver serial --seed 3)
+run_case "anakin K"    "${ANA[@]}" --outer-iters 2 --checkpoint-every 2 --checkpoint-path "$TMP/a.ckpt"
+run_case "anakin 2K"   "${ANA[@]}" --outer-iters 4 --restore "$TMP/a.ckpt" \
+                       --checkpoint-every 4 --checkpoint-path "$TMP/a_resumed.ckpt"
+run_case "anakin flat" "${ANA[@]}" --outer-iters 4 --checkpoint-every 4 --checkpoint-path "$TMP/a_oracle.ckpt"
+bitwise "anakin continuation" "$TMP/a_resumed.ckpt" "$TMP/a_oracle.ckpt"
+
+# --- sebulba: same contract through the actor/learner split ------------------
+SEB=(sebulba --agent seb_catch --env catch --actor-cores 1 --learner-cores 1
+     --threads 1 --pipeline-stages 1 --learner-pipeline 1 --queue 2
+     --batch 32 --unroll 20 --seed 123)
+run_case "sebulba K"    "${SEB[@]}" --updates 2 --checkpoint-every 2 --checkpoint-path "$TMP/s.ckpt"
+run_case "sebulba 2K"   "${SEB[@]}" --updates 4 --restore "$TMP/s.ckpt" \
+                        --checkpoint-every 4 --checkpoint-path "$TMP/s_resumed.ckpt"
+run_case "sebulba flat" "${SEB[@]}" --updates 4 --checkpoint-every 4 --checkpoint-path "$TMP/s_oracle.ckpt"
+bitwise "sebulba continuation" "$TMP/s_resumed.ckpt" "$TMP/s_oracle.ckpt"
+
+# --- negative cases: corruption and misuse must fail loudly ------------------
+expect_error "bare --restore"      anakin --outer-iters 1 --restore
+expect_error "missing checkpoint"  "${ANA[@]}" --outer-iters 4 --restore "$TMP/nope.ckpt"
+expect_error "--checkpoint-every 0" "${ANA[@]}" --outer-iters 1 --checkpoint-every 0
+expect_error "path without every"  "${ANA[@]}" --outer-iters 1 --checkpoint-path "$TMP/x.ckpt"
+
+head -c 10 "$TMP/a.ckpt" > "$TMP/truncated.ckpt"
+expect_error "truncated checkpoint" "${ANA[@]}" --outer-iters 4 --restore "$TMP/truncated.ckpt"
+
+cp "$TMP/a.ckpt" "$TMP/corrupt.ckpt"
+printf 'X' | dd of="$TMP/corrupt.ckpt" bs=1 seek=40 conv=notrunc status=none
+expect_error "corrupt checkpoint" "${ANA[@]}" --outer-iters 4 --restore "$TMP/corrupt.ckpt"
+
+expect_error "wrong arch" "${SEB[@]}" --updates 4 --restore "$TMP/a.ckpt"
+
+if [[ "$fail" -ne 0 ]]; then
+    echo "[restore-smoke] FAILURES above" >&2
+    exit 1
+fi
+echo "[restore-smoke] all cases passed"
