@@ -5,10 +5,10 @@ ARTIFACTS := artifacts
 BENCHES   := $(notdir $(basename $(wildcard rust/benches/*.rs)))
 # The CI bench-regression gate's smoke set (see scripts/bench_gate.py).
 SMOKE_BENCHES := fig4a_anakin_scaling ablation_learner_pipeline ablation_pipeline_stages \
-                 fig4b_actor_batch
+                 fig4b_actor_batch serve_continuous_batching
 
 .PHONY: all artifacts build test quickstart bench bench-learner-pipeline \
-        bench-smoke bench-baseline cli-smoke restore-smoke fmt clippy
+        bench-smoke bench-baseline cli-smoke restore-smoke serve-smoke fmt clippy
 
 all: artifacts build
 
@@ -61,6 +61,13 @@ cli-smoke: build
 # (scripts/restore_smoke.sh). Runs in CI next to cli-smoke.
 restore-smoke: build
 	bash scripts/restore_smoke.sh
+
+# Serve smoke (ISSUE 7): `podracer serve` end to end — every session
+# completes with zero dropped requests and finite percentiles, plus the
+# bad-flag hard-error cases (scripts/serve_smoke.sh). Runs in CI next to
+# cli-smoke and restore-smoke.
+serve-smoke: build
+	bash scripts/serve_smoke.sh
 
 # Regenerate the committed baselines from a smoke run on this machine
 # (same PODRACER_BENCH_FAST=1 conditions CI compares under).

@@ -1,0 +1,65 @@
+//! Serving frontend throughput/latency: continuous batching under a
+//! growing session population (DESIGN.md §14).
+//!
+//! The sweep holds the batch geometry fixed (8 slots, 1 sub-batch) and
+//! raises the number of concurrent sessions past the slot count, so the
+//! admission queue and the retire/admit/arm cycle do real work: sessions
+//! beyond the 8 slots wait in the backlog and are admitted as earlier
+//! sessions close. Request throughput (rps) should hold roughly flat while
+//! p99 latency absorbs the queueing — both series feed the bench gate
+//! (`serve_rps_*` larger-is-better, `serve_p99_ms_*` smaller-is-better).
+
+use podracer::benchkit::Bench;
+use podracer::runtime::Pod;
+use podracer::serve::ServeConfig;
+use podracer::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    podracer::util::logging::init();
+    let artifacts = podracer::artifacts_dir();
+    let fast = std::env::var("PODRACER_BENCH_FAST").is_ok();
+    let steps = if fast { 30 } else { 100 };
+    let session_counts: &[usize] = if fast { &[8, 16] } else { &[8, 16, 32, 64] };
+
+    let mut bench = Bench::new("serve: continuous batching rps vs concurrent sessions");
+    let mut pod = Pod::new(&artifacts, 1)?;
+    let mut series = Vec::new();
+
+    for &sessions in session_counts {
+        let cfg = ServeConfig {
+            sessions,
+            steps,
+            queue: sessions, // every session fits the backlog: retries stay warm-up noise
+            swap_every: 50,  // keep the hot-swap path in the measured loop
+            ..ServeConfig::default()
+        };
+        let mut last = (0.0, 0.0);
+        bench.case(&format!("sessions={sessions}"), "req/s", || {
+            let report = podracer::serve::run_on(&mut pod, &cfg).unwrap();
+            assert_eq!(report.completed, sessions as u64, "serve bench dropped sessions");
+            last = (report.rps, report.p99_ms);
+            report.rps
+        });
+        series.push((sessions, last.0, last.1));
+    }
+
+    println!("\n| sessions | req/s | p99 ms |");
+    println!("|---|---|---|");
+    for &(s, rps, p99) in &series {
+        println!("| {s} | {rps:.0} | {p99:.2} |");
+    }
+
+    bench.finish();
+    let j = Json::obj(vec![
+        ("bench", Json::str("serve_continuous_batching")),
+        (
+            "sessions",
+            Json::arr_f64(&series.iter().map(|s| s.0 as f64).collect::<Vec<_>>()),
+        ),
+        ("rps", Json::arr_f64(&series.iter().map(|s| s.1).collect::<Vec<_>>())),
+        ("p99_ms", Json::arr_f64(&series.iter().map(|s| s.2).collect::<Vec<_>>())),
+    ]);
+    std::fs::create_dir_all("bench_results")?;
+    std::fs::write("bench_results/serve_series.json", j.to_string())?;
+    Ok(())
+}

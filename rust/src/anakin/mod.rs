@@ -35,7 +35,6 @@
 mod driver;
 mod replica;
 
-use std::path::Path;
 use std::str::FromStr;
 
 use anyhow::Result;
@@ -104,13 +103,12 @@ pub struct Anakin {
 
 impl Default for Anakin {
     fn default() -> Self {
-        let cfg = AnakinConfig::default();
         Self {
-            agent: cfg.agent,
-            mode: cfg.mode,
-            driver: cfg.driver,
-            outer_iters: cfg.outer_iters,
-            seed: cfg.seed,
+            agent: "anakin_catch".into(),
+            mode: Mode::Bundled,
+            driver: Driver::Threaded,
+            outer_iters: 10,
+            seed: 7,
         }
     }
 }
@@ -150,73 +148,6 @@ impl Anakin {
             );
         }
         Ok(())
-    }
-
-    /// Build a pod sized for `cfg` and run to completion.
-    #[deprecated(note = "one-PR migration shim: use experiment::Experiment::new(Arch::Anakin)")]
-    pub fn run(artifacts: &Path, cfg: &AnakinConfig) -> Result<Report> {
-        let mut pod = Pod::new(artifacts, cfg.cores)?;
-        legacy_run_on(&mut pod, cfg)
-    }
-
-    /// Run on an existing pod (must have >= cfg.cores cores).
-    #[deprecated(note = "one-PR migration shim: use experiment::Experiment::new(Arch::Anakin)")]
-    pub fn run_on(pod: &mut Pod, cfg: &AnakinConfig) -> Result<Report> {
-        legacy_run_on(pod, cfg)
-    }
-}
-
-fn legacy_run_on(pod: &mut Pod, cfg: &AnakinConfig) -> Result<Report> {
-    let runner = cfg.runner();
-    let topo = cfg.topology();
-    Runner::run(&runner, pod, &topo)
-}
-
-/// The pre-experiment-API config (workload + core count in one struct) —
-/// accepted by the deprecated legacy entrypoints for one PR.
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub struct AnakinConfig {
-    /// Agent tag in the manifest ("anakin_catch", "anakin_grid").
-    pub agent: String,
-    /// Simulated cores (replicas of the on-device program).
-    pub cores: usize,
-    /// Outer driver iterations (each = K in-graph updates in Bundled mode,
-    /// 1 update in Psum mode).
-    pub outer_iters: u64,
-    pub mode: Mode,
-    pub driver: Driver,
-    pub seed: u64,
-}
-
-impl Default for AnakinConfig {
-    fn default() -> Self {
-        Self {
-            agent: "anakin_catch".into(),
-            cores: 2,
-            outer_iters: 10,
-            mode: Mode::Bundled,
-            driver: Driver::Threaded,
-            seed: 7,
-        }
-    }
-}
-
-impl AnakinConfig {
-    /// The workload half, as the [`Anakin`] runner.
-    /// `runner()` + `topology()` carry every field.
-    pub fn runner(&self) -> Anakin {
-        Anakin {
-            agent: self.agent.clone(),
-            mode: self.mode,
-            driver: self.driver,
-            outer_iters: self.outer_iters,
-            seed: self.seed,
-        }
-    }
-
-    /// The core-count half, as the experiment API's typed [`Topology`].
-    pub fn topology(&self) -> Topology {
-        Topology::anakin(self.cores)
     }
 }
 

@@ -8,6 +8,14 @@
 //! latency hides behind device time (the paper: actors "split their batch
 //! of environments in two"; schedule diagram in DESIGN.md §2).
 //!
+//! The batch-assembly/infer/dispatch cycle itself is generic over a
+//! [`BatchSource`] (DESIGN.md §14): the loop owns the device side —
+//! parameter refresh, async program launch, harvest, latency accounting —
+//! and the source owns where observations come from and where actions go.
+//! [`EnvPoolSource`] is the training implementation (env pool + trajectory
+//! windows, bit-identical to the pre-seam actor); `serve::SessionSource`
+//! feeds the same loop from live client sessions instead.
+//!
 //! With `pipeline_stages = 1` the loop degenerates to the fully synchronous
 //! schedule (infer, step, accumulate — bit-for-bit the pre-pipeline actor).
 //! Each stage accumulates its own window directly into an `Arc`-shared
@@ -27,6 +35,7 @@ use crate::checkpoint::ActorSection;
 use crate::envs::{BatchedEnv, EnvFactory, StepTicket, WorkerPool};
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::DeviceHandle;
+use crate::util::rng::Xoshiro256;
 
 use super::param_store::ParamStore;
 use super::queue::BoundedQueue;
@@ -105,10 +114,211 @@ pub fn spawn_actor(
         .expect("spawn actor thread")
 }
 
+/// What the source wants the loop to do after a hook returns: keep cycling,
+/// or tear down cleanly (trajectory queue shut down, all sessions drained,
+/// stop observed mid-gate — an `Ok(())` exit either way).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SourceStatus {
+    Continue,
+    Shutdown,
+}
+
+/// Where a batch of observations comes from and where its actions go — the
+/// seam that lets the training env pool and the serving session frontend
+/// share one infer loop (DESIGN.md §14).
+///
+/// [`run_infer_loop`] drives a source through the Sebulba schedule. With
+/// sub-batches `0..stages()`, the contract per tick `t` (`s = t % stages`,
+/// `s2 = (t+1) % stages`) is:
+///
+/// ```text
+/// prime()                      once, before the first launch
+/// launch(0)                    device: infer sub-batch 0
+/// loop: harvest(s)             device actions/logits for sub-batch s
+///       dispatch(s, ..)        source consumes them (non-blocking)
+///       advance(s2)            source readies sub-batch s2's next obs
+///                              (may block: env step / waiting for requests)
+///       launch(s2)             device: infer sub-batch s2
+/// ```
+///
+/// So `advance(s2)` runs while no inference is in flight for `s2` but the
+/// other sub-batches' work is — that is where env stepping (or request
+/// assembly) hides behind device time. Slot identity is the source's
+/// business: the loop never inspects the batch beyond its flat length.
+pub trait BatchSource {
+    /// Number of sub-batches round-robining through the cycle (>= 1).
+    fn stages(&self) -> usize;
+
+    /// Called once before sub-batch 0's first launch. The env pool gates
+    /// the first trajectory window here (checkpoint lockstep); the session
+    /// source blocks until the first request arrives.
+    fn prime(&mut self) -> Result<SourceStatus>;
+
+    /// Sub-batch `s`'s current observations, flat `[slots * obs_dim]` —
+    /// the next inference's input. `Arc`-shared so the device upload
+    /// references it without copying.
+    fn obs(&mut self, s: usize) -> Arc<Vec<f32>>;
+
+    /// Consume sub-batch `s`'s harvested inference outputs. Must not
+    /// block: anything slow belongs in `advance` where it can overlap the
+    /// other sub-batches' device time. `param_version` is the store
+    /// version the producing inference ran with (serve replies carry it;
+    /// training stamps windows from `store.version()` instead).
+    fn dispatch(
+        &mut self,
+        s: usize,
+        actions: Vec<i32>,
+        logits: Vec<f32>,
+        param_version: u64,
+        acc: &mut OverlapAcc,
+    ) -> Result<()>;
+
+    /// Bring sub-batch `s` to its next inference point: finish its
+    /// outstanding env step and accumulate the transition (env pool), or
+    /// retire/admit sessions and assemble pending requests (serve). `rng`
+    /// is the loop's seed stream, read-only — the env pool snapshots its
+    /// state at checkpointed window boundaries.
+    fn advance(&mut self, s: usize, rng: &Xoshiro256, acc: &mut OverlapAcc)
+        -> Result<SourceStatus>;
+}
+
 /// An in-flight inference on the actor core.
 struct PendingInfer {
     rx: mpsc::Receiver<Result<Vec<HostTensor>>>,
     issued: Instant,
+    /// Store version of the params this inference ran with.
+    param_version: u64,
+}
+
+/// Per-thread overlap accumulators, flushed to `RunStats` on exit. Public
+/// (with the loop) so out-of-module `BatchSource` impls can account their
+/// host-side work into the same pipeline-overlap model.
+#[derive(Default)]
+pub struct OverlapAcc {
+    pub infer_busy: Duration,
+    pub env_busy: Duration,
+    pub queue_blocked: Duration,
+    /// Env construction + reset before the first tick — not hot-loop time.
+    pub setup: Duration,
+}
+
+/// Device-side geometry for [`run_infer_loop`] — everything the loop needs
+/// that is not the source's business.
+pub struct InferLoopConfig {
+    /// Names the device-resident parameter slot (`params#<id>`); unique
+    /// per thread sharing a core.
+    pub actor_id: usize,
+    /// Inference program lowered for one sub-batch's slot count.
+    pub infer_program: String,
+    /// Upload shape of one sub-batch's observations: `[slots, obs...]`.
+    pub batch_shape: Vec<usize>,
+}
+
+/// Fire an inference for sub-batch `s`: refresh parameters ("switch to the
+/// latest parameters before each new inference step") only when a new
+/// version was actually published (`latest_if_newer` — the no-news case is
+/// one atomic load), then launch the infer program without waiting.
+#[allow(clippy::too_many_arguments)]
+fn launch_infer<S: BatchSource>(
+    source: &mut S,
+    s: usize,
+    cfg: &InferLoopConfig,
+    core: &DeviceHandle,
+    store: &ParamStore,
+    param_slot: &str,
+    cached_version: &mut u64,
+    rng: &mut Xoshiro256,
+    pending: &mut [Option<PendingInfer>],
+) -> Result<()> {
+    // Device-resident parameter cache: parameters are uploaded to the actor
+    // core once per published version and referenced by slot on every
+    // inference call — the paper's "parameters stay on device" (§Perf L3-1).
+    // The upload itself references the `ParamSnapshot`'s Arc'd buffer
+    // (DESIGN.md §11), so no host-side copy is made either.
+    if let Some(snap) = store.latest_if_newer(*cached_version) {
+        core.cache(
+            param_slot,
+            HostTensor::f32_shared(vec![snap.params.len()], snap.params.clone(), 0)?,
+        )?;
+        *cached_version = snap.version;
+    }
+    let inputs = vec![
+        HostTensor::f32_shared(cfg.batch_shape.clone(), source.obs(s), 0)?,
+        HostTensor::scalar_i32(rng.next_program_seed()),
+    ];
+    let rx = core.execute_cached_async(&cfg.infer_program, inputs, vec![(0, param_slot.to_string())])?;
+    pending[s] = Some(PendingInfer {
+        rx,
+        issued: Instant::now(),
+        param_version: *cached_version,
+    });
+    Ok(())
+}
+
+/// The generic batch-assembly/infer/dispatch loop (schedule in the
+/// [`BatchSource`] doc). Runs until `stop` is set or the source reports
+/// `Shutdown`. One `rng.next_program_seed()` is consumed per launch, so
+/// the seed stream — and with a frozen store, every device output — is a
+/// pure function of the launch order.
+#[allow(clippy::too_many_arguments)]
+pub fn run_infer_loop<S: BatchSource>(
+    cfg: &InferLoopConfig,
+    core: &DeviceHandle,
+    store: &ParamStore,
+    stats: &RunStats,
+    stop: &AtomicBool,
+    rng: &mut Xoshiro256,
+    source: &mut S,
+    acc: &mut OverlapAcc,
+) -> Result<()> {
+    let stages = source.stages();
+    anyhow::ensure!(stages >= 1, "batch source must have at least one sub-batch");
+    let param_slot = format!("params#{}", cfg.actor_id);
+    let mut cached_version = u64::MAX; // sentinel: first launch always uploads
+    let mut pending: Vec<Option<PendingInfer>> = (0..stages).map(|_| None).collect();
+
+    // Prologue: prime the pipeline with sub-batch 0's first inference.
+    if matches!(source.prime()?, SourceStatus::Shutdown) {
+        return Ok(());
+    }
+    launch_infer(source, 0, cfg, core, store, &param_slot, &mut cached_version, rng, &mut pending)?;
+
+    let mut tick: usize = 0;
+    while !stop.load(Ordering::Relaxed) {
+        let s = tick % stages;
+
+        // 1) Harvest sub-batch s's inference: the device has (or is
+        //    finishing) its actions.
+        let p = pending[s]
+            .take()
+            .expect("pipeline invariant: current sub-batch has an in-flight inference");
+        let outs = p
+            .rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("actor core {} died", core.core_id))?
+            .context("batch inference")?;
+        let span = p.issued.elapsed();
+        acc.infer_busy += span;
+        stats.inference_latency.record(span);
+        let actions = outs[0].as_i32()?.to_vec();
+        let logits = outs[1].as_f32()?.to_vec();
+
+        // 2) Hand the outputs to the source — non-blocking (env stepping is
+        //    submitted async; serve replies are channel sends).
+        source.dispatch(s, actions, logits, p.param_version, acc)?;
+
+        // 3) Rotate to the next sub-batch: let the source finish its
+        //    outstanding work (it ran under sub-batch s's inference) and
+        //    ready its next observations, then fire its next inference.
+        let s2 = (tick + 1) % stages;
+        if matches!(source.advance(s2, rng, acc)?, SourceStatus::Shutdown) {
+            return Ok(());
+        }
+        launch_infer(source, s2, cfg, core, store, &param_slot, &mut cached_version, rng, &mut pending)?;
+
+        tick += 1;
+    }
+    Ok(())
 }
 
 /// One pipeline stage: a sub-batch of environments plus everything needed
@@ -130,18 +340,255 @@ struct Stage {
     discounts: Vec<f32>,
     episode_reward: Vec<f64>,
     builder: TrajectoryBuilder,
-    infer: Option<PendingInfer>,
     step: Option<StepTicket>,
 }
 
-/// Per-thread overlap accumulators, flushed to `RunStats` on exit.
-#[derive(Default)]
-struct OverlapAcc {
-    infer_busy: Duration,
-    env_busy: Duration,
-    queue_blocked: Duration,
-    /// Env construction + reset before the first tick — not hot-loop time.
-    setup: Duration,
+/// The training [`BatchSource`]: sub-batches of pooled environments whose
+/// transitions accumulate into trajectory windows for the learner queue.
+/// Construction does everything up to (not including) the first inference:
+/// validation, env building/reset, checkpoint resume — and hands back the
+/// seed stream (fresh or restored) the loop must run with.
+pub struct EnvPoolSource<'a> {
+    cfg: &'a ActorConfig,
+    store: &'a ParamStore,
+    queue: &'a BoundedQueue<ShardBundle>,
+    stats: &'a RunStats,
+    stop: &'a AtomicBool,
+    stages: Vec<Stage>,
+    /// Envs per stage (`cfg.batch / cfg.pipeline_stages`).
+    sb: usize,
+    windows_done: u64,
+}
+
+impl<'a> EnvPoolSource<'a> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        cfg: &'a ActorConfig,
+        factory: &EnvFactory,
+        pool: &Arc<WorkerPool>,
+        store: &'a ParamStore,
+        queue: &'a BoundedQueue<ShardBundle>,
+        stats: &'a RunStats,
+        stop: &'a AtomicBool,
+    ) -> Result<(Self, Xoshiro256)> {
+        let stages_n = cfg.pipeline_stages;
+        anyhow::ensure!(stages_n >= 1, "pipeline_stages must be >= 1");
+        anyhow::ensure!(
+            cfg.batch % stages_n == 0,
+            "actor batch {} must divide into {} pipeline stages",
+            cfg.batch,
+            stages_n
+        );
+        let sb = cfg.batch / stages_n; // envs per stage
+        anyhow::ensure!(
+            cfg.num_shards >= 1 && sb % cfg.num_shards == 0,
+            "stage batch {sb} must divide into {} shards",
+            cfg.num_shards
+        );
+        if cfg.checkpoint.is_some() {
+            // lockstep pacing is only sound unpipelined (see ActorCheckpoint)
+            anyhow::ensure!(
+                stages_n == 1,
+                "checkpointed runs require pipeline_stages == 1 (got {stages_n})"
+            );
+        }
+        let d: usize = cfg.obs_shape.iter().product();
+        let a = cfg.num_actions;
+        let mut rng = Xoshiro256::from_stream(cfg.seed, cfg.actor_id as u64);
+
+        let mut stages: Vec<Stage> = (0..stages_n)
+            .map(|s| -> Result<Stage> {
+                let env = BatchedEnv::with_slot_offset(factory, sb, s * sb, pool.clone())
+                    .with_context(|| format!("building batched env (stage {s})"))?;
+                let mut obs = vec![0.0f32; sb * d];
+                env.reset(&mut obs).with_context(|| format!("resetting envs (stage {s})"))?;
+                Ok(Stage {
+                    env,
+                    obs: Arc::new(obs),
+                    prev_obs: Arc::new(vec![0.0; sb * d]),
+                    actions: vec![0; sb],
+                    logits: vec![0.0; sb * a],
+                    rewards: vec![0.0; sb],
+                    dones: vec![false; sb],
+                    discounts: vec![0.0; sb],
+                    episode_reward: vec![0.0; sb],
+                    builder: TrajectoryBuilder::new(cfg.unroll, sb, &cfg.obs_shape, a, cfg.num_shards),
+                    step: None,
+                })
+            })
+            .collect::<Result<_>>()?;
+
+        // Resume: overwrite the fresh stage with the checkpointed boundary
+        // state — envs, bootstrap observation, RNG stream and window counter
+        // — so the next window is produced exactly as the uninterrupted
+        // run's.
+        let mut windows_done: u64 = 0;
+        if let Some(res) = cfg.checkpoint.as_ref().and_then(|ck| ck.resume.as_ref()) {
+            let stage = &mut stages[0];
+            anyhow::ensure!(
+                res.obs.len() == sb * d,
+                "checkpoint observation has {} floats, actor expects {}",
+                res.obs.len(),
+                sb * d
+            );
+            anyhow::ensure!(
+                res.episode_reward.len() == sb,
+                "checkpoint tracks {} episode returns, actor has {} envs",
+                res.episode_reward.len(),
+                sb
+            );
+            stage.env.load_states(&res.env_states).context("restoring env states")?;
+            stage.obs = Arc::new(res.obs.clone());
+            stage.episode_reward = res.episode_reward.iter().map(|&x| x as f64).collect();
+            rng = Xoshiro256::from_state(res.rng);
+            windows_done = res.windows_done;
+        }
+
+        Ok((
+            Self { cfg, store, queue, stats, stop, stages, sb, windows_done },
+            rng,
+        ))
+    }
+
+    /// Lockstep gate (checkpoint/restore runs only): block the start of a
+    /// new window until the learner has published everything from the last
+    /// one, so every inference sees exactly the params the uninterrupted
+    /// run's would. `Shutdown` if the run is tearing down.
+    fn window_gate(&self) -> SourceStatus {
+        if self.cfg.checkpoint.is_none() {
+            return SourceStatus::Continue;
+        }
+        loop {
+            if self.store.version() >= self.windows_done {
+                return SourceStatus::Continue;
+            }
+            if self.stop.load(Ordering::Relaxed) {
+                return SourceStatus::Shutdown;
+            }
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl BatchSource for EnvPoolSource<'_> {
+    fn stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    fn prime(&mut self) -> Result<SourceStatus> {
+        Ok(self.window_gate())
+    }
+
+    fn obs(&mut self, s: usize) -> Arc<Vec<f32>> {
+        self.stages[s].obs.clone()
+    }
+
+    fn dispatch(
+        &mut self,
+        s: usize,
+        actions: Vec<i32>,
+        logits: Vec<f32>,
+        _param_version: u64,
+        _acc: &mut OverlapAcc,
+    ) -> Result<()> {
+        // Start stepping sub-batch s on the host — non-blocking, so the
+        // pool works while the device serves the next sub-batch.
+        let stage = &mut self.stages[s];
+        stage.actions = actions;
+        stage.logits = logits;
+        std::mem::swap(&mut stage.prev_obs, &mut stage.obs);
+        stage.step = Some(stage.env.step_async(&stage.actions));
+        Ok(())
+    }
+
+    fn advance(
+        &mut self,
+        s: usize,
+        rng: &Xoshiro256,
+        acc: &mut OverlapAcc,
+    ) -> Result<SourceStatus> {
+        // Finish this sub-batch's outstanding env step (it ran under the
+        // previous sub-batch's inference) and account the transition.
+        let cfg = self.cfg;
+        let sb = self.sb;
+        let mut window_finished = false;
+        let stage = &mut self.stages[s];
+        if let Some(ticket) = stage.step.take() {
+            let span = ticket
+                .wait(Arc::make_mut(&mut stage.obs), &mut stage.rewards, &mut stage.dones)
+                .context("stepping environments")?;
+            acc.env_busy += span;
+            self.stats.env_step_latency.record(span);
+
+            // bookkeeping + accumulate
+            let mut ended = 0u64;
+            let mut ended_reward = 0.0f64;
+            for i in 0..sb {
+                stage.episode_reward[i] += stage.rewards[i] as f64;
+                if stage.dones[i] {
+                    ended += 1;
+                    ended_reward += stage.episode_reward[i];
+                    stage.episode_reward[i] = 0.0;
+                    stage.discounts[i] = 0.0;
+                } else {
+                    stage.discounts[i] = cfg.discount;
+                }
+            }
+            self.stats.record_episodes(ended, ended_reward);
+            stage.builder.push_step(
+                &stage.prev_obs,
+                &stage.actions,
+                &stage.logits,
+                &stage.rewards,
+                &stage.discounts,
+            )?;
+
+            // Window full: finish with the bootstrap obs, shard, enqueue.
+            // The arena moves as Arc views; the copy path is the oracle.
+            if stage.builder.is_full() {
+                let version = self.store.version();
+                let arena = stage.builder.finish(&stage.obs, version, cfg.actor_id)?;
+                self.stats.env_frames.add(arena.frames() as u64);
+                self.stats.trajectories.fetch_add(1, Ordering::Relaxed);
+                let shards = if cfg.copy_path { shard_copying(&arena)? } else { shard(&arena) };
+                self.windows_done += 1;
+                // Deposit-before-push (DESIGN.md §13): the snapshot must be
+                // in the slot before the learner can possibly retire this
+                // window's round and go looking for it. The env is quiescent
+                // here — the step ticket was waited above and the next
+                // inference has not been launched.
+                if let Some(ck) = &cfg.checkpoint {
+                    if self.windows_done % ck.every == 0 {
+                        let snap = ActorSection {
+                            windows_done: self.windows_done,
+                            rng: rng.state(),
+                            obs: stage.obs.to_vec(),
+                            episode_reward: stage
+                                .episode_reward
+                                .iter()
+                                .map(|&x| x as f32)
+                                .collect(),
+                            env_states: stage.env.save_states(),
+                        };
+                        ck.slot.lock().unwrap().insert(self.windows_done, snap);
+                    }
+                }
+                let t_push = Instant::now();
+                let pushed = self.queue.push(shards);
+                acc.queue_blocked += t_push.elapsed();
+                if pushed.is_err() {
+                    return Ok(SourceStatus::Shutdown); // queue shut down: clean exit
+                }
+                window_finished = true;
+            }
+        }
+        // A new window starts with the next inference: under checkpoint
+        // pacing, hold it until the learner catches up (see window_gate).
+        if window_finished {
+            return Ok(self.window_gate());
+        }
+        Ok(SourceStatus::Continue)
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -157,7 +604,20 @@ fn actor_main(
 ) -> Result<()> {
     let mut acc = OverlapAcc::default();
     let loop_start = Instant::now();
-    let result = actor_loop(&cfg, &core, &factory, &pool, &store, &queue, &stats, &stop, &mut acc);
+    let result = (|| -> Result<()> {
+        let setup_start = Instant::now();
+        let (mut source, mut rng) =
+            EnvPoolSource::new(&cfg, &factory, &pool, &store, &queue, &stats, &stop)?;
+        let mut batch_shape = vec![source.sb];
+        batch_shape.extend_from_slice(&cfg.obs_shape);
+        let loop_cfg = InferLoopConfig {
+            actor_id: cfg.actor_id,
+            infer_program: cfg.infer_program.clone(),
+            batch_shape,
+        };
+        acc.setup = setup_start.elapsed();
+        run_infer_loop(&loop_cfg, &core, &store, &stats, &stop, &mut rng, &mut source, &mut acc)
+    })();
     // Wall time excludes setup (env construction) and backpressure
     // (blocking on a full trajectory queue is the learner's deficit, not
     // the pipeline's).
@@ -167,272 +627,4 @@ fn actor_main(
         .saturating_sub(acc.setup);
     stats.record_actor_overlap(acc.infer_busy, acc.env_busy, wall);
     result
-}
-
-#[allow(clippy::too_many_arguments)]
-fn actor_loop(
-    cfg: &ActorConfig,
-    core: &DeviceHandle,
-    factory: &EnvFactory,
-    pool: &Arc<WorkerPool>,
-    store: &ParamStore,
-    queue: &BoundedQueue<ShardBundle>,
-    stats: &RunStats,
-    stop: &AtomicBool,
-    acc: &mut OverlapAcc,
-) -> Result<()> {
-    let setup_start = Instant::now();
-    let stages_n = cfg.pipeline_stages;
-    anyhow::ensure!(stages_n >= 1, "pipeline_stages must be >= 1");
-    anyhow::ensure!(
-        cfg.batch % stages_n == 0,
-        "actor batch {} must divide into {} pipeline stages",
-        cfg.batch,
-        stages_n
-    );
-    let sb = cfg.batch / stages_n; // envs per stage
-    anyhow::ensure!(
-        cfg.num_shards >= 1 && sb % cfg.num_shards == 0,
-        "stage batch {sb} must divide into {} shards",
-        cfg.num_shards
-    );
-    if cfg.checkpoint.is_some() {
-        // lockstep pacing is only sound unpipelined (see ActorCheckpoint)
-        anyhow::ensure!(
-            stages_n == 1,
-            "checkpointed runs require pipeline_stages == 1 (got {stages_n})"
-        );
-    }
-    let d: usize = cfg.obs_shape.iter().product();
-    let a = cfg.num_actions;
-    let mut rng = crate::util::rng::Xoshiro256::from_stream(cfg.seed, cfg.actor_id as u64);
-
-    let mut stages: Vec<Stage> = (0..stages_n)
-        .map(|s| -> Result<Stage> {
-            let env = BatchedEnv::with_slot_offset(factory, sb, s * sb, pool.clone())
-                .with_context(|| format!("building batched env (stage {s})"))?;
-            let mut obs = vec![0.0f32; sb * d];
-            env.reset(&mut obs).with_context(|| format!("resetting envs (stage {s})"))?;
-            Ok(Stage {
-                env,
-                obs: Arc::new(obs),
-                prev_obs: Arc::new(vec![0.0; sb * d]),
-                actions: vec![0; sb],
-                logits: vec![0.0; sb * a],
-                rewards: vec![0.0; sb],
-                dones: vec![false; sb],
-                discounts: vec![0.0; sb],
-                episode_reward: vec![0.0; sb],
-                builder: TrajectoryBuilder::new(cfg.unroll, sb, &cfg.obs_shape, a, cfg.num_shards),
-                infer: None,
-                step: None,
-            })
-        })
-        .collect::<Result<_>>()?;
-
-    // Resume: overwrite the fresh stage with the checkpointed boundary
-    // state — envs, bootstrap observation, RNG stream and window counter —
-    // so the next window is produced exactly as the uninterrupted run's.
-    let mut windows_done: u64 = 0;
-    if let Some(res) = cfg.checkpoint.as_ref().and_then(|ck| ck.resume.as_ref()) {
-        let stage = &mut stages[0];
-        anyhow::ensure!(
-            res.obs.len() == sb * d,
-            "checkpoint observation has {} floats, actor expects {}",
-            res.obs.len(),
-            sb * d
-        );
-        anyhow::ensure!(
-            res.episode_reward.len() == sb,
-            "checkpoint tracks {} episode returns, actor has {} envs",
-            res.episode_reward.len(),
-            sb
-        );
-        stage.env.load_states(&res.env_states).context("restoring env states")?;
-        stage.obs = Arc::new(res.obs.clone());
-        stage.episode_reward = res.episode_reward.iter().map(|&x| x as f64).collect();
-        rng = crate::util::rng::Xoshiro256::from_state(res.rng);
-        windows_done = res.windows_done;
-    }
-
-    // Device-resident parameter cache: parameters are uploaded to the actor
-    // core once per published version and referenced by slot on every
-    // inference call — the paper's "parameters stay on device" (§Perf L3-1).
-    // The upload itself references the `ParamSnapshot`'s Arc'd buffer
-    // (DESIGN.md §11), so no host-side copy is made either.
-    let param_slot = format!("params#{}", cfg.actor_id);
-    let mut cached_version = u64::MAX;
-
-    let mut stage_batch_shape = vec![sb];
-    stage_batch_shape.extend_from_slice(&cfg.obs_shape);
-
-    // Launch an inference for `stage`: refresh parameters ("switch to the
-    // latest parameters before each new inference step"), then fire the
-    // infer program without waiting.
-    let launch_infer = |stage: &mut Stage,
-                            rng: &mut crate::util::rng::Xoshiro256,
-                            cached_version: &mut u64|
-     -> Result<()> {
-        let snap = store.latest();
-        if snap.version != *cached_version {
-            core.cache(
-                &param_slot,
-                HostTensor::f32_shared(vec![snap.params.len()], snap.params.clone(), 0)?,
-            )?;
-            *cached_version = snap.version;
-        }
-        let inputs = vec![
-            HostTensor::f32_shared(stage_batch_shape.clone(), stage.obs.clone(), 0)?,
-            HostTensor::scalar_i32(rng.next_program_seed()),
-        ];
-        let rx = core.execute_cached_async(
-            &cfg.infer_program,
-            inputs,
-            vec![(0, param_slot.clone())],
-        )?;
-        stage.infer = Some(PendingInfer { rx, issued: Instant::now() });
-        Ok(())
-    };
-
-    acc.setup = setup_start.elapsed();
-
-    // Lockstep gate (checkpoint/restore runs only): block the start of a
-    // new window until the learner has published everything from the last
-    // one, so every inference sees exactly the params the uninterrupted
-    // run's would. Returns false if the run is tearing down.
-    let window_gate = |windows_done: u64| -> bool {
-        if cfg.checkpoint.is_none() {
-            return true;
-        }
-        loop {
-            if store.version() >= windows_done {
-                return true;
-            }
-            if stop.load(Ordering::Relaxed) {
-                return false;
-            }
-            std::thread::yield_now();
-        }
-    };
-
-    // Prologue: prime the pipeline with stage 0's first inference.
-    if !window_gate(windows_done) {
-        return Ok(());
-    }
-    launch_infer(&mut stages[0], &mut rng, &mut cached_version)?;
-
-    let mut tick: usize = 0;
-    while !stop.load(Ordering::Relaxed) {
-        let s = tick % stages_n;
-
-        // 1) Harvest stage s's inference: the device has (or is finishing)
-        //    its actions.
-        {
-            let stage = &mut stages[s];
-            let pending = stage
-                .infer
-                .take()
-                .expect("pipeline invariant: current stage has an in-flight inference");
-            let outs = pending
-                .rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("actor core {} died", core.core_id))?
-                .context("actor inference")?;
-            let span = pending.issued.elapsed();
-            acc.infer_busy += span;
-            stats.inference_latency.record(span);
-            stage.actions = outs[0].as_i32()?.to_vec();
-            stage.logits = outs[1].as_f32()?.to_vec();
-
-            // 2) Start stepping stage s on the host — non-blocking, so the
-            //    pool works while the device serves the next stage.
-            std::mem::swap(&mut stage.prev_obs, &mut stage.obs);
-            stage.step = Some(stage.env.step_async(&stage.actions));
-        }
-
-        // 3) Rotate to the next stage: finish its outstanding env step (it
-        //    ran under stage s's inference), account the transition, and
-        //    fire its next inference.
-        let s2 = (tick + 1) % stages_n;
-        let mut window_finished = false;
-        let stage = &mut stages[s2];
-        if let Some(ticket) = stage.step.take() {
-            let span = ticket
-                .wait(Arc::make_mut(&mut stage.obs), &mut stage.rewards, &mut stage.dones)
-                .context("stepping environments")?;
-            acc.env_busy += span;
-            stats.env_step_latency.record(span);
-
-            // 4) bookkeeping + accumulate
-            let mut ended = 0u64;
-            let mut ended_reward = 0.0f64;
-            for i in 0..sb {
-                stage.episode_reward[i] += stage.rewards[i] as f64;
-                if stage.dones[i] {
-                    ended += 1;
-                    ended_reward += stage.episode_reward[i];
-                    stage.episode_reward[i] = 0.0;
-                    stage.discounts[i] = 0.0;
-                } else {
-                    stage.discounts[i] = cfg.discount;
-                }
-            }
-            stats.record_episodes(ended, ended_reward);
-            stage.builder.push_step(
-                &stage.prev_obs,
-                &stage.actions,
-                &stage.logits,
-                &stage.rewards,
-                &stage.discounts,
-            )?;
-
-            // 5) window full: finish with the bootstrap obs, shard, enqueue.
-            //    The arena moves as Arc views; the copy path is the oracle.
-            if stage.builder.is_full() {
-                let version = store.version();
-                let arena = stage.builder.finish(&stage.obs, version, cfg.actor_id)?;
-                stats.env_frames.add(arena.frames() as u64);
-                stats.trajectories.fetch_add(1, Ordering::Relaxed);
-                let shards = if cfg.copy_path { shard_copying(&arena)? } else { shard(&arena) };
-                windows_done += 1;
-                // Deposit-before-push (DESIGN.md §13): the snapshot must be
-                // in the slot before the learner can possibly retire this
-                // window's round and go looking for it. The env is quiescent
-                // here — the step ticket was waited above and the next
-                // inference has not been launched.
-                if let Some(ck) = &cfg.checkpoint {
-                    if windows_done % ck.every == 0 {
-                        let snap = ActorSection {
-                            windows_done,
-                            rng: rng.state(),
-                            obs: stage.obs.to_vec(),
-                            episode_reward: stage
-                                .episode_reward
-                                .iter()
-                                .map(|&x| x as f32)
-                                .collect(),
-                            env_states: stage.env.save_states(),
-                        };
-                        ck.slot.lock().unwrap().insert(windows_done, snap);
-                    }
-                }
-                let t_push = Instant::now();
-                let pushed = queue.push(shards);
-                acc.queue_blocked += t_push.elapsed();
-                if pushed.is_err() {
-                    return Ok(()); // queue shut down: clean exit
-                }
-                window_finished = true;
-            }
-        }
-        // A new window starts with the next inference: under checkpoint
-        // pacing, hold it until the learner catches up (see window_gate).
-        if window_finished && !window_gate(windows_done) {
-            return Ok(());
-        }
-        launch_infer(stage, &mut rng, &mut cached_version)?;
-
-        tick += 1;
-    }
-    Ok(())
 }

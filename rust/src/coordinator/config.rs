@@ -3,9 +3,9 @@
 //! Since the `experiment` API landed (DESIGN.md §12) this is an *internal*
 //! resolved form: `experiment::Experiment` merges a [`super::Sebulba`]
 //! workload with a [`Topology`] into one `SebulbaConfig` before spawning
-//! anything, and the deprecated legacy entrypoints still accept it
-//! directly for one PR. `runner()`/`topology()` split it back — the
-//! round-trip is pinned by tests below.
+//! anything (the legacy entrypoints that accepted it directly are gone —
+//! their one-PR deprecation window closed). `runner()`/`topology()` split
+//! it back — the round-trip is pinned by tests below.
 
 use anyhow::{bail, Result};
 

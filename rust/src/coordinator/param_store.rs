@@ -59,6 +59,28 @@ impl ParamStore {
         self.current.read().unwrap().clone()
     }
 
+    /// Latest snapshot only if a version other than `seen` has been
+    /// published — the hot-loop refresh (actor + serve inference loops):
+    /// the common no-new-params case is one lock-free atomic load, with no
+    /// read lock taken and no `Arc` clone made. `u64::MAX` is the
+    /// "nothing cached yet" sentinel (no published version can equal it,
+    /// so the first call always fetches, including the initial version 0).
+    ///
+    /// `version()` may briefly lag `latest().version` during a publish
+    /// (see the field doc), so the atomic is a conservative gate: when it
+    /// fires, the installed snapshot is re-checked under the read lock and
+    /// a same-version snapshot is still `None`.
+    pub fn latest_if_newer(&self, seen: u64) -> Option<Arc<ParamSnapshot>> {
+        if self.version.load(Ordering::Acquire) == seen {
+            return None;
+        }
+        let snap = self.latest();
+        if snap.version == seen {
+            return None;
+        }
+        Some(snap)
+    }
+
     pub fn version(&self) -> u64 {
         self.version.load(Ordering::Acquire)
     }

@@ -232,33 +232,6 @@ impl Sebulba {
             copy_path: self.copy_path,
         }
     }
-
-    /// Build a pod sized for `cfg` and run to completion.
-    #[deprecated(note = "one-PR migration shim: use experiment::Experiment::new(Arch::Sebulba)")]
-    pub fn run(artifacts: &std::path::Path, cfg: &SebulbaConfig) -> Result<Report> {
-        cfg.validate()?;
-        let mut pod = Pod::new(artifacts, cfg.total_cores())?;
-        run_resolved(&mut pod, cfg, None, &RunSpec::default())
-    }
-
-    /// Run on an existing pod (must have >= cfg.total_cores() cores).
-    #[deprecated(note = "one-PR migration shim: use experiment::Experiment::new(Arch::Sebulba)")]
-    pub fn run_on(pod: &mut Pod, cfg: &SebulbaConfig) -> Result<Report> {
-        run_resolved(pod, cfg, None, &RunSpec::default())
-    }
-
-    /// Like `run_on`, but optionally warm-starting from `(params,
-    /// opt_state)` of a previous run.
-    #[deprecated(
-        note = "one-PR migration shim: use experiment::ExperimentBuilder::warm_start"
-    )]
-    pub fn run_on_with(
-        pod: &mut Pod,
-        cfg: &SebulbaConfig,
-        warm: Option<(Vec<f32>, Vec<f32>)>,
-    ) -> Result<Report> {
-        run_resolved(pod, cfg, warm, &RunSpec::default())
-    }
 }
 
 /// The coordinator proper: validate, wire the pod, spawn actors + learners,

@@ -103,6 +103,39 @@ impl LatencyHistogram {
         }
         (1u64 << 24) as f64 * 1e-6
     }
+
+    /// Fold another histogram into this one. Bucket counts, the sample
+    /// count and the nano total are all plain sums, so folding per-stage
+    /// (or per-thread) histograms is associative and order-independent —
+    /// the merged histogram answers percentiles exactly as if every sample
+    /// had been recorded here directly (pinned by a proptest).
+    pub fn merge_from(&self, other: &LatencyHistogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            mine.fetch_add(theirs.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.total_nanos
+            .fetch_add(other.total_nanos.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Frozen copy of every counter — lets tests (and reporters) compare
+    /// two histograms for exact equality instead of sampling percentiles.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            total_nanos: self.total_nanos.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data view of a [`LatencyHistogram`] at one instant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub buckets: [u64; 24],
+    pub count: u64,
+    pub total_nanos: u64,
 }
 
 /// Everything the coordinator reports at the end of a run.
@@ -117,6 +150,11 @@ pub struct RunStats {
     pub grad_latency: LatencyHistogram,
     pub apply_latency: LatencyHistogram,
     pub env_step_latency: LatencyHistogram,
+    /// Serving path (serve/): end-to-end per-request latency, measured from
+    /// the client posting an observation to its reply being sent — covers
+    /// queueing for a sub-batch slot, the device call, and dispatch. The
+    /// serve report's p50/p99 come from here.
+    pub request_latency: LatencyHistogram,
     /// Sum over metric vector entries reported by the learner (loss etc.).
     pub last_loss_bits: AtomicU64,
     pub episodes: AtomicU64,
@@ -396,6 +434,36 @@ mod tests {
         let p95 = h.percentile_seconds(95.0);
         assert!(p50 <= p95);
         assert!(h.mean_seconds() > 0.0);
+    }
+
+    #[test]
+    fn histogram_merge_folds_counters() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        let whole = LatencyHistogram::new();
+        for (i, us) in [3u64, 17, 90, 1500, 40_000].iter().enumerate() {
+            let d = Duration::from_micros(*us);
+            if i % 2 == 0 { a.record(d) } else { b.record(d) }
+            whole.record(d);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.snapshot(), whole.snapshot());
+        assert_eq!(a.count(), 5);
+        assert_eq!(
+            a.percentile_seconds(99.0),
+            whole.percentile_seconds(99.0)
+        );
+    }
+
+    #[test]
+    fn histogram_snapshot_is_a_frozen_copy() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(10));
+        let snap = h.snapshot();
+        h.record(Duration::from_micros(10));
+        assert_eq!(snap.count, 1);
+        assert_eq!(h.snapshot().count, 2);
+        assert_eq!(snap.buckets.iter().sum::<u64>(), 1);
     }
 
     #[test]

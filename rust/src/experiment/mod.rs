@@ -30,8 +30,11 @@
 //!   [`Detail`] payload.
 //!
 //! The pre-refactor entrypoints (`Anakin::run`, `Sebulba::run_on_with`,
-//! `run_muzero`) remain as thin deprecated shims for one PR; everything
-//! in-tree goes through `Experiment`.
+//! `run_muzero`) are gone — their one-PR deprecation window closed;
+//! everything goes through `Experiment`. The serving frontend is not an
+//! `Arch` (it trains nothing and has no topology split); `podracer serve`
+//! parses through [`serve_from_args`] with the same hard-error flag
+//! discipline.
 
 pub mod env_kind;
 pub mod report;
@@ -505,11 +508,11 @@ mod from_args {
         "restore",
     ];
 
-    fn check_flags(arch: Arch, args: &Args, accepted: &[&str]) -> Result<()> {
+    fn check_flags(cmd: &str, args: &Args, accepted: &[&str]) -> Result<()> {
         for key in args.flags.keys() {
             if !accepted.contains(&key.as_str()) {
                 bail!(
-                    "unknown flag --{key} for `podracer {arch}` (accepted: {})",
+                    "unknown flag --{key} for `podracer {cmd}` (accepted: {})",
                     accepted.iter().map(|f| format!("--{f}")).collect::<Vec<_>>().join(" ")
                 );
             }
@@ -553,7 +556,7 @@ mod from_args {
     pub(super) fn build(arch: Arch, args: &Args) -> Result<Experiment> {
         match arch {
             Arch::Anakin => {
-                check_flags(arch, args, ANAKIN_FLAGS)?;
+                check_flags(arch.as_str(), args, ANAKIN_FLAGS)?;
                 let b = Experiment::new(arch)
                     .agent(&args.get_str("agent", "anakin_catch"))
                     .topology(Topology::anakin(args.get_usize("cores", 4)?))
@@ -564,7 +567,7 @@ mod from_args {
                 apply_elasticity(b, args)?.build()
             }
             Arch::Sebulba => {
-                check_flags(arch, args, SEBULBA_FLAGS)?;
+                check_flags(arch.as_str(), args, SEBULBA_FLAGS)?;
                 let copy_path = match args.get_str("data-path", "arena").as_str() {
                     "arena" => false,
                     "copy" => true,
@@ -593,7 +596,7 @@ mod from_args {
                 apply_elasticity(b, args)?.build()
             }
             Arch::MuZero => {
-                check_flags(arch, args, MUZERO_FLAGS)?;
+                check_flags(arch.as_str(), args, MUZERO_FLAGS)?;
                 let b = Experiment::new(arch)
                     .agent(&args.get_str("agent", "mz_catch"))
                     .env(parse_flag(args, "env", "catch")?)
@@ -615,6 +618,47 @@ mod from_args {
             }
         }
     }
+
+    const SERVE_FLAGS: &[&str] = &[
+        "agent",
+        "env",
+        "batch",
+        "pipeline-stages",
+        "queue",
+        "sessions",
+        "steps",
+        "swap-every",
+        "seed",
+    ];
+
+    /// `podracer serve` flag parsing: same hard-error discipline as the
+    /// training archs (unknown flags and unparseable values exit nonzero),
+    /// but targets a [`crate::serve::ServeConfig`] — serving has sessions
+    /// and an admission queue where training has a topology.
+    pub(super) fn build_serve(args: &Args) -> Result<crate::serve::ServeConfig> {
+        check_flags("serve", args, SERVE_FLAGS)?;
+        let defaults = crate::serve::ServeConfig::default();
+        let cfg = crate::serve::ServeConfig {
+            agent: args.get_str("agent", &defaults.agent),
+            env: parse_flag(args, "env", defaults.env.as_str())?,
+            batch: args.get_usize("batch", defaults.batch)?,
+            pipeline_stages: args.get_usize("pipeline-stages", defaults.pipeline_stages)?,
+            queue: args.get_usize("queue", defaults.queue)?,
+            sessions: args.get_usize("sessions", defaults.sessions)?,
+            steps: args.get_usize("steps", defaults.steps)?,
+            swap_every: args.get_u64("swap-every", defaults.swap_every)?,
+            seed: args.get_u64("seed", defaults.seed)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Parse `podracer serve` flags into a validated
+/// [`ServeConfig`](crate::serve::ServeConfig) — the serving counterpart of
+/// [`Experiment::from_args`].
+pub fn serve_from_args(args: &Args) -> Result<crate::serve::ServeConfig> {
+    from_args::build_serve(args)
 }
 
 #[cfg(test)]

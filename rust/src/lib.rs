@@ -23,6 +23,9 @@
 //! * [`coordinator`] — **Sebulba**: actor threads, learner thread, trajectory
 //!   queues, gradient collective, parameter store, replicas.
 //! * [`anakin`] — **Anakin**: the replicated on-device loop driver.
+//! * [`serve`] — policy serving: live client sessions fed through the
+//!   actor's infer loop via the `BatchSource` seam, with continuous
+//!   batching and hot parameter swaps (DESIGN.md §14).
 //! * [`search`] — MCTS for the MuZero-style search agent.
 //! * [`checkpoint`] — elastic-pod checkpoint/restore: the versioned,
 //!   CRC'd on-disk snapshot format and its typed errors (DESIGN.md §13).
@@ -56,6 +59,7 @@ pub mod envs;
 pub mod experiment;
 pub mod runtime;
 pub mod search;
+pub mod serve;
 pub mod testkit;
 pub mod util;
 

@@ -7,6 +7,8 @@
 //!                   [--batch 32] [--pipeline-stages 2] [--unroll 20] [--updates 100]
 //!                   [--replicas 1] [--threads 2] [--data-path arena|copy]
 //! podracer muzero   [--env catch] [--updates 20] [--simulations 16]
+//! podracer serve    [--agent seb_catch] [--env catch] [--batch 8] [--pipeline-stages 1]
+//!                   [--queue 8] [--sessions 8] [--steps 40] [--swap-every 100]
 //! podracer info     # list artifacts & agents
 //!
 //! all training subcommands also take the elasticity knobs (DESIGN.md §13):
@@ -17,9 +19,11 @@
 //! Every architecture goes through one declarative path
 //! (`experiment::Experiment::from_args` — DESIGN.md §12): the subcommand
 //! parses to an `Arch`, the flags to a typed `Topology`/`EnvKind`/workload,
-//! and the unified `Report` prints itself. Unknown subcommands, flag names
-//! and flag values all exit nonzero with a diagnostic (`podracer help`
-//! shows usage).
+//! and the unified `Report` prints itself. `podracer serve` drives the
+//! policy-serving frontend (DESIGN.md §14) through the same hard-error
+//! flag parsing (`experiment::serve_from_args`). Unknown subcommands, flag
+//! names and flag values all exit nonzero with a diagnostic
+//! (`podracer help` shows usage).
 
 use anyhow::Result;
 use podracer::experiment::{Arch, Experiment};
@@ -47,6 +51,12 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             println!("{}", report.summary());
             Ok(())
         }
+        "serve" => {
+            let cfg = podracer::experiment::serve_from_args(args)?;
+            let report = podracer::serve::run(&podracer::artifacts_dir(), &cfg)?;
+            println!("{}", report.summary(&cfg.agent));
+            Ok(())
+        }
         "info" => {
             let artifacts = podracer::artifacts_dir();
             let manifest = podracer::runtime::Manifest::load(&artifacts)?;
@@ -66,7 +76,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         }
         "help" => {
             println!(
-                "usage: podracer <anakin|sebulba|muzero|info> [--flags]\n\
+                "usage: podracer <anakin|sebulba|muzero|serve|info> [--flags]\n\
                  run `podracer info` to list available agents/artifacts"
             );
             Ok(())
@@ -75,7 +85,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             // unknown subcommands are hard errors like unknown flags are —
             // a typo'd CI step must not exit 0 having trained nothing
             anyhow::bail!(
-                "unknown command {other:?} (valid: anakin, sebulba, muzero, info, help)"
+                "unknown command {other:?} (valid: anakin, sebulba, muzero, serve, info, help)"
             )
         }
     }

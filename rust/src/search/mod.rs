@@ -13,6 +13,4 @@ pub mod muzero_actor;
 pub mod muzero_run;
 
 pub use mcts::{Mcts, MctsConfig, SearchResult};
-#[allow(deprecated)]
-pub use muzero_run::run_muzero;
 pub use muzero_run::{MuZero, MuZeroRunConfig};

@@ -197,12 +197,6 @@ impl MuZeroRunConfig {
     }
 }
 
-/// Run on an existing pod.
-#[deprecated(note = "one-PR migration shim: use experiment::Experiment::new(Arch::MuZero)")]
-pub fn run_muzero(pod: &mut Pod, cfg: &MuZeroRunConfig) -> Result<Report> {
-    run_resolved(pod, cfg, &RunSpec::default())
-}
-
 pub(crate) fn run_resolved(pod: &mut Pod, cfg: &MuZeroRunConfig, spec: &RunSpec) -> Result<Report> {
     cfg.validate()?;
 

@@ -1,0 +1,25 @@
+//! Policy serving: the Sebulba actor's inference machinery pointed at live
+//! client sessions instead of a training env pool (DESIGN.md §14).
+//!
+//! The actor already solves the hard serving problem — batching many
+//! concurrent decision streams onto one inference core with split-batch
+//! latency hiding. This module reuses that loop verbatim through the
+//! [`BatchSource`](crate::coordinator::actor::BatchSource) seam:
+//!
+//! - [`session`]: the in-process, socket-shaped transport — `ServeClient`
+//!   dials [`SessionHandle`]s, `step(obs)` is a blocking RPC, admission is
+//!   bounded by a session backlog.
+//! - [`source`]: [`SessionSource`], the serving `BatchSource` — continuous
+//!   batching (sessions admitted into the next sub-batch), per-request
+//!   latency into `RunStats::request_latency`, zero-drop hot parameter
+//!   swaps.
+//! - [`run`]: the `podracer serve` driver — synthetic session fleet,
+//!   optional hot-swapper thread, [`ServeReport`] with p50/p99/rps.
+
+mod run;
+mod session;
+mod source;
+
+pub use run::{run, run_on, spawn_serve_loop, ServeConfig, ServeReport};
+pub use session::{session_channel, ConnectError, ServeClient, SessionEndpoint, SessionHandle, StepReply};
+pub use source::SessionSource;

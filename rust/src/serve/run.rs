@@ -1,0 +1,345 @@
+//! `podracer serve`: drive the serving frontend end-to-end on one pod.
+//!
+//! One actor core runs the generic infer loop over a [`SessionSource`];
+//! `sessions` synthetic client threads each dial in (retrying while the
+//! admission backlog is full), run a host-side environment, and post one
+//! observation per step through the session RPC; an optional swapper
+//! thread hot-publishes a fresh parameter version every `swap_every`
+//! served requests. The [`ServeReport`] carries the request percentiles
+//! (from `RunStats::request_latency`) and the admission accounting.
+//!
+//! Teardown is drain-shaped, not deadline-shaped: the runner drops its
+//! client handle once the drivers hold theirs, and when every driver is
+//! done (all handles dropped, no live session) the source reports
+//! `Shutdown` and the loop exits — no request is ever abandoned mid-swap
+//! or mid-drain.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::actor::{run_infer_loop, InferLoopConfig, OverlapAcc};
+use crate::coordinator::param_store::ParamStore;
+use crate::coordinator::stats::RunStats;
+use crate::envs::{make_env, EnvKind};
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::{DeviceHandle, Pod};
+use crate::util::rng::Xoshiro256;
+
+use super::session::{session_channel, ConnectError, SessionEndpoint};
+use super::source::SessionSource;
+
+/// Knobs for one serving run (CLI: `podracer serve`, flags in
+/// `experiment::serve_from_args`).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Agent whose `_infer_b{batch}` / `_init` programs serve the policy.
+    pub agent: String,
+    /// Environment the synthetic client sessions run host-side.
+    pub env: EnvKind,
+    /// Session slots per sub-batch — must match a lowered infer batch.
+    pub batch: usize,
+    /// Sub-batches round-robining through the infer loop (>= 1).
+    pub pipeline_stages: usize,
+    /// Admission backlog bound: sessions waiting for a slot beyond this
+    /// are refused with `Busy`.
+    pub queue: usize,
+    /// Synthetic client sessions to drive.
+    pub sessions: usize,
+    /// Requests each session posts before closing.
+    pub steps: usize,
+    /// Hot-publish a new parameter version every N served requests
+    /// (0 = never swap).
+    pub swap_every: u64,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            agent: "seb_catch".into(),
+            env: EnvKind::Catch,
+            batch: 8,
+            pipeline_stages: 1,
+            queue: 8,
+            sessions: 8,
+            steps: 40,
+            swap_every: 100,
+            seed: 7,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn infer_program(&self) -> String {
+        format!("{}_infer_b{}", self.agent, self.batch)
+    }
+
+    /// Hard errors for values no run could mean (flag-level misuse is
+    /// caught earlier by `serve_from_args`).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.batch >= 1, "--batch must be >= 1");
+        anyhow::ensure!(self.pipeline_stages >= 1, "--pipeline-stages must be >= 1");
+        anyhow::ensure!(self.queue >= 1, "--queue must be >= 1");
+        anyhow::ensure!(self.sessions >= 1, "--sessions must be >= 1");
+        anyhow::ensure!(self.steps >= 1, "--steps must be >= 1");
+        Ok(())
+    }
+}
+
+/// What a serving run measured.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Sessions requested / sessions that completed every step.
+    pub sessions: u64,
+    pub completed: u64,
+    /// Sessions the source ever bound to a batch slot.
+    pub admitted: u64,
+    /// Requests replied to (zero-drop invariant: `sessions * steps` on a
+    /// clean run).
+    pub requests: u64,
+    /// Connect attempts refused `Busy` (drivers retry, so these are
+    /// retries, not lost sessions).
+    pub rejected_retries: u64,
+    pub elapsed_seconds: f64,
+    pub rps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    /// Parameter versions hot-published during the run.
+    pub swaps: u64,
+}
+
+impl ServeReport {
+    pub fn summary(&self, agent: &str) -> String {
+        format!(
+            "serve[{agent}] sessions={}/{} requests={} rps={:.0} p50_ms={:.2} p99_ms={:.2} mean_ms={:.2} swaps={} rejected_retries={}",
+            self.completed,
+            self.sessions,
+            self.requests,
+            self.rps,
+            self.p50_ms,
+            self.p99_ms,
+            self.mean_ms,
+            self.swaps,
+            self.rejected_retries,
+        )
+    }
+}
+
+/// Spawn the serving loop on `core`: builds the [`SessionSource`] over
+/// `endpoint` and runs the generic infer loop until stopped or drained.
+/// Returns `(sessions_admitted, requests_served)`. Public so tests can
+/// wire their own store/clients around the loop (hot-swap oracle).
+#[allow(clippy::too_many_arguments)]
+pub fn spawn_serve_loop(
+    core: DeviceHandle,
+    infer_program: String,
+    endpoint: SessionEndpoint,
+    slots: usize,
+    pipeline_stages: usize,
+    obs_shape: Vec<usize>,
+    num_actions: usize,
+    store: Arc<ParamStore>,
+    stats: Arc<RunStats>,
+    stop: Arc<AtomicBool>,
+    seed: u64,
+) -> std::thread::JoinHandle<Result<(u64, u64)>> {
+    std::thread::Builder::new()
+        .name("serve-loop".into())
+        .spawn(move || {
+            let d: usize = obs_shape.iter().product();
+            let mut source = SessionSource::new(
+                endpoint,
+                stats.clone(),
+                stop.clone(),
+                slots,
+                pipeline_stages,
+                d,
+                num_actions,
+            )?;
+            let mut batch_shape = vec![slots];
+            batch_shape.extend_from_slice(&obs_shape);
+            let cfg = InferLoopConfig { actor_id: 0, infer_program, batch_shape };
+            let mut rng = Xoshiro256::from_stream(seed, 0);
+            let mut acc = OverlapAcc::default();
+            run_infer_loop(&cfg, &core, &store, &stats, &stop, &mut rng, &mut source, &mut acc)?;
+            Ok((source.admitted(), source.served()))
+        })
+        .expect("spawn serve loop thread")
+}
+
+/// Run a full serving session on a fresh single-core pod.
+pub fn run(artifacts: &std::path::Path, cfg: &ServeConfig) -> Result<ServeReport> {
+    let mut pod = Pod::new(artifacts, 1).context("building serve pod")?;
+    run_on(&mut pod, cfg)
+}
+
+/// Run on an existing pod (benches reuse one pod across cases).
+pub fn run_on(pod: &mut Pod, cfg: &ServeConfig) -> Result<ServeReport> {
+    cfg.validate()?;
+    let agent = pod.manifest.agent(&cfg.agent)?.clone();
+    let d: usize = agent.obs_shape.iter().product();
+    {
+        // the synthetic drivers feed this env's observations to the agent
+        let probe = make_env(cfg.env, cfg.seed);
+        anyhow::ensure!(
+            probe.obs_dim() == d,
+            "env {:?} produces {}-float observations, agent {:?} expects {}",
+            cfg.env,
+            probe.obs_dim(),
+            cfg.agent,
+            d
+        );
+        anyhow::ensure!(
+            probe.num_actions() == agent.num_actions,
+            "env {:?} has {} actions, agent {:?} acts over {}",
+            cfg.env,
+            probe.num_actions(),
+            cfg.agent,
+            agent.num_actions
+        );
+    }
+    let infer = cfg.infer_program();
+    let init = format!("{}_init", cfg.agent);
+    pod.load_program(&infer, &[0]).with_context(|| {
+        format!("loading {infer:?} — is --batch a lowered infer batch for {:?}?", cfg.agent)
+    })?;
+    pod.load_program(&init, &[0])?;
+    let core = pod.core(0)?;
+    let outs = core.execute(&init, vec![HostTensor::scalar_i32(cfg.seed as i32)])?;
+    let params = outs[0].clone().into_f32()?;
+
+    let store = Arc::new(ParamStore::new(params));
+    let stats = Arc::new(RunStats::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let (client, endpoint) = session_channel(cfg.queue, d);
+
+    let start = Instant::now();
+    let server = spawn_serve_loop(
+        core,
+        infer,
+        endpoint,
+        cfg.batch,
+        cfg.pipeline_stages,
+        agent.obs_shape.clone(),
+        agent.num_actions,
+        store.clone(),
+        stats.clone(),
+        stop.clone(),
+        cfg.seed,
+    );
+
+    // Hot swapper: republish the current parameter buffer (new version,
+    // same bytes — the swap machinery is exercised without perturbing the
+    // policy) every `swap_every` served requests.
+    let swap_stop = Arc::new(AtomicBool::new(false));
+    let swapper = (cfg.swap_every > 0).then(|| {
+        let store = store.clone();
+        let stats = stats.clone();
+        let swap_stop = swap_stop.clone();
+        let every = cfg.swap_every;
+        std::thread::Builder::new()
+            .name("serve-swapper".into())
+            .spawn(move || {
+                let mut next = every;
+                while !swap_stop.load(Ordering::Relaxed) {
+                    if stats.request_latency.count() >= next {
+                        store.publish_shared(store.latest().params.clone());
+                        next += every;
+                    } else {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                }
+            })
+            .expect("spawn swapper thread")
+    });
+
+    // Synthetic session drivers: connect (retrying while busy), run a
+    // host-side env, one blocking request per step. Returns busy retries.
+    let mut drivers = Vec::new();
+    for sid in 0..cfg.sessions {
+        let client = client.clone();
+        let env_kind = cfg.env;
+        let steps = cfg.steps;
+        let seed = cfg.seed;
+        drivers.push(
+            std::thread::Builder::new()
+                .name(format!("session-{sid}"))
+                .spawn(move || -> Result<u64> {
+                    let mut retries = 0u64;
+                    let mut handle = loop {
+                        match client.connect() {
+                            Ok(h) => break h,
+                            Err(ConnectError::Busy { .. }) => {
+                                retries += 1;
+                                std::thread::sleep(Duration::from_micros(200));
+                            }
+                            Err(ConnectError::Shutdown) => {
+                                anyhow::bail!("server gone before session {sid} connected")
+                            }
+                        }
+                    };
+                    let mut env = make_env(env_kind, seed ^ (0x5e55_0000 + sid as u64));
+                    let mut obs = vec![0.0f32; env.obs_dim()];
+                    env.reset(&mut obs);
+                    let mut last_version = 0u64;
+                    for _ in 0..steps {
+                        let reply = handle.step(&obs)?;
+                        // hot swaps must be monotone per session
+                        anyhow::ensure!(
+                            reply.param_version >= last_version,
+                            "param version went backwards ({} after {})",
+                            reply.param_version,
+                            last_version
+                        );
+                        last_version = reply.param_version;
+                        let _ = env.step(reply.action as usize, &mut obs);
+                    }
+                    Ok(retries)
+                })
+                .expect("spawn session thread"),
+        );
+    }
+    drop(client); // drivers hold the only client handles: joining them drains the server
+
+    let mut completed = 0u64;
+    let mut rejected_retries = 0u64;
+    let mut driver_err: Option<anyhow::Error> = None;
+    for driver in drivers {
+        match driver.join().expect("session thread panicked") {
+            Ok(retries) => {
+                completed += 1;
+                rejected_retries += retries;
+            }
+            Err(e) => driver_err = driver_err.or(Some(e)),
+        }
+    }
+    swap_stop.store(true, Ordering::Relaxed);
+    if let Some(h) = swapper {
+        h.join().expect("swapper thread panicked");
+    }
+    let server_res = server.join().expect("serve loop panicked");
+    stop.store(true, Ordering::Relaxed);
+    if let Some(e) = driver_err {
+        return Err(e.context("session driver failed"));
+    }
+    let (admitted, served) = server_res?;
+
+    let elapsed = start.elapsed().as_secs_f64();
+    Ok(ServeReport {
+        sessions: cfg.sessions as u64,
+        completed,
+        admitted,
+        requests: served,
+        rejected_retries,
+        elapsed_seconds: elapsed,
+        rps: if elapsed > 0.0 { served as f64 / elapsed } else { 0.0 },
+        p50_ms: stats.request_latency.percentile_seconds(50.0) * 1e3,
+        p99_ms: stats.request_latency.percentile_seconds(99.0) * 1e3,
+        mean_ms: stats.request_latency.mean_seconds() * 1e3,
+        swaps: store.version(),
+    })
+}

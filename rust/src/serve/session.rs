@@ -1,0 +1,226 @@
+//! In-process session transport for the serving frontend.
+//!
+//! Socket-shaped, no network: a [`ServeClient`] is the dialer end
+//! (`connect` → [`SessionHandle`]), the opaque [`SessionEndpoint`] is the
+//! listener end the `SessionSource` drains. A session's `step` is a
+//! blocking RPC — post one observation, wait for its [`StepReply`] — so
+//! each session has at most one request in flight and the server can
+//! assemble sub-batches by taking at most one request per bound slot.
+//!
+//! Admission control lives here: `connect` refuses with [`ConnectError::Busy`]
+//! once the not-yet-admitted backlog reaches `queue_capacity`. Admitted or
+//! queued, a session counts as `live` until its handle drops, which is what
+//! lets the server distinguish "momentarily idle" from "drained" (every
+//! client handle gone and no live session) and exit cleanly.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// One action computed for one request.
+#[derive(Clone, Debug)]
+pub struct StepReply {
+    pub action: i32,
+    /// Behaviour logits for this slot (`num_actions` floats).
+    pub logits: Vec<f32>,
+    /// Version of the parameters that computed the action — hot swaps are
+    /// observable per reply, and per-session versions are monotonic.
+    pub param_version: u64,
+}
+
+/// Why `connect` was refused.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ConnectError {
+    /// Admission backlog is full — retry later. Sessions already bound to
+    /// batch slots don't count against this; only the waiting queue does.
+    Busy { capacity: usize },
+    /// The serving loop is gone.
+    Shutdown,
+}
+
+impl fmt::Display for ConnectError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConnectError::Busy { capacity } => {
+                write!(f, "session backlog full ({capacity} waiting) — retry later")
+            }
+            ConnectError::Shutdown => write!(f, "serving loop shut down"),
+        }
+    }
+}
+
+impl std::error::Error for ConnectError {}
+
+/// A request the client has posted and is blocked on.
+pub(crate) struct PendingRequest {
+    pub obs: Vec<f32>,
+    /// Posting time — request latency is measured from here to dispatch.
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<StepReply>,
+}
+
+/// Server-side view of one connected session.
+pub(crate) struct SessionCell {
+    pub id: u64,
+    /// At most one in-flight request (`step` is a blocking RPC).
+    pub request: Mutex<Option<PendingRequest>>,
+    pub closed: AtomicBool,
+}
+
+pub(crate) struct Inner {
+    /// Sessions accepted but not yet bound to a batch slot (FIFO).
+    pub backlog: VecDeque<Arc<SessionCell>>,
+    /// Sessions connected and not yet closed (backlog + slot-bound).
+    pub live: usize,
+}
+
+pub(crate) struct Shared {
+    pub inner: Mutex<Inner>,
+    /// Signalled on any state the server may be waiting for: a request
+    /// posted, a session connected or closed, a client handle dropped.
+    /// Always notified while holding `inner`, so the server's wait on
+    /// `inner` cannot miss a wakeup.
+    pub readable: Condvar,
+    /// Bound on `Inner::backlog` (admission control).
+    pub queue_capacity: usize,
+    /// Expected observation length per request.
+    pub obs_dim: usize,
+    /// Live `ServeClient` clones; 0 with `live == 0` means drained.
+    pub clients: AtomicUsize,
+    /// Set when the `SessionSource` is dropped — late connects/steps fail
+    /// fast instead of queueing into the void.
+    pub server_gone: AtomicBool,
+    pub next_id: AtomicU64,
+    /// Connects refused with `Busy` (admission-control accounting).
+    pub rejected: AtomicU64,
+}
+
+impl Shared {
+    /// Notify under the lock (see `readable` doc).
+    pub fn notify(&self) {
+        let _guard = self.inner.lock().unwrap();
+        self.readable.notify_all();
+    }
+}
+
+/// Build a connected client/server pair: the client side dials sessions,
+/// the endpoint feeds a `SessionSource`. `queue_capacity` bounds how many
+/// sessions may wait for a batch slot; `obs_dim` is the per-request
+/// observation length every `step` must carry.
+pub fn session_channel(queue_capacity: usize, obs_dim: usize) -> (ServeClient, SessionEndpoint) {
+    let shared = Arc::new(Shared {
+        inner: Mutex::new(Inner { backlog: VecDeque::new(), live: 0 }),
+        readable: Condvar::new(),
+        queue_capacity,
+        obs_dim,
+        clients: AtomicUsize::new(1),
+        server_gone: AtomicBool::new(false),
+        next_id: AtomicU64::new(0),
+        rejected: AtomicU64::new(0),
+    });
+    (ServeClient { shared: shared.clone() }, SessionEndpoint { shared })
+}
+
+/// The server end of [`session_channel`] — opaque; hand it to
+/// `SessionSource::new`.
+pub struct SessionEndpoint {
+    pub(crate) shared: Arc<Shared>,
+}
+
+/// Dialer handle. Clone freely (one per client thread); when every clone is
+/// gone and every session is closed, the serving loop drains and exits.
+pub struct ServeClient {
+    shared: Arc<Shared>,
+}
+
+impl Clone for ServeClient {
+    fn clone(&self) -> Self {
+        self.shared.clients.fetch_add(1, Ordering::AcqRel);
+        Self { shared: self.shared.clone() }
+    }
+}
+
+impl Drop for ServeClient {
+    fn drop(&mut self) {
+        self.shared.clients.fetch_sub(1, Ordering::AcqRel);
+        self.shared.notify();
+    }
+}
+
+impl ServeClient {
+    /// Open a session. Fails fast with [`ConnectError::Busy`] when the
+    /// admission backlog is full — callers decide whether to retry.
+    pub fn connect(&self) -> Result<SessionHandle, ConnectError> {
+        if self.shared.server_gone.load(Ordering::Acquire) {
+            return Err(ConnectError::Shutdown);
+        }
+        let mut inner = self.shared.inner.lock().unwrap();
+        if inner.backlog.len() >= self.shared.queue_capacity {
+            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(ConnectError::Busy { capacity: self.shared.queue_capacity });
+        }
+        let cell = Arc::new(SessionCell {
+            id: self.shared.next_id.fetch_add(1, Ordering::Relaxed),
+            request: Mutex::new(None),
+            closed: AtomicBool::new(false),
+        });
+        inner.backlog.push_back(cell.clone());
+        inner.live += 1;
+        self.shared.readable.notify_all();
+        drop(inner);
+        Ok(SessionHandle { shared: self.shared.clone(), cell })
+    }
+
+    /// Connects refused so far (admission control).
+    pub fn rejected(&self) -> u64 {
+        self.shared.rejected.load(Ordering::Relaxed)
+    }
+}
+
+/// One open session. Dropping it closes the session; an unanswered request
+/// at that point is simply never replied to (the reply receiver is ours).
+pub struct SessionHandle {
+    shared: Arc<Shared>,
+    cell: Arc<SessionCell>,
+}
+
+impl SessionHandle {
+    pub fn id(&self) -> u64 {
+        self.cell.id
+    }
+
+    /// Post an observation and block for the action — one request in
+    /// flight per session by construction.
+    pub fn step(&mut self, obs: &[f32]) -> anyhow::Result<StepReply> {
+        anyhow::ensure!(
+            obs.len() == self.shared.obs_dim,
+            "request carries {} floats, server expects {}",
+            obs.len(),
+            self.shared.obs_dim
+        );
+        anyhow::ensure!(
+            !self.shared.server_gone.load(Ordering::Acquire),
+            "serving loop shut down"
+        );
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut slot = self.cell.request.lock().unwrap();
+            debug_assert!(slot.is_none(), "blocking RPC: no request can be in flight");
+            *slot = Some(PendingRequest { obs: obs.to_vec(), enqueued: Instant::now(), reply: tx });
+        }
+        self.shared.notify();
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("serving loop shut down with the request in flight"))
+    }
+}
+
+impl Drop for SessionHandle {
+    fn drop(&mut self) {
+        self.cell.closed.store(true, Ordering::Release);
+        let mut inner = self.shared.inner.lock().unwrap();
+        inner.live -= 1;
+        self.shared.readable.notify_all();
+    }
+}

@@ -1,0 +1,259 @@
+//! `SessionSource`: the serving [`BatchSource`] — live client sessions in,
+//! per-request actions out, through the same infer loop the training actor
+//! uses (DESIGN.md §14).
+//!
+//! Continuous batching: sub-batch membership is re-decided every tick. At
+//! each `advance` the source (1) retires closed sessions, freeing their
+//! slots, (2) admits backlog sessions into the freed slots — a new session
+//! joins the *next* sub-batch, it never waits for a "round" to end — and
+//! (3) arms one pending request per bound session, copying its observation
+//! into the slot's region of the batch. Slots with no request this tick
+//! stay zeroed; their inference outputs are discarded at dispatch. When no
+//! slot has work the source blocks (condvar, bounded waits so `stop` is
+//! observed) instead of spinning the device on empty batches.
+//!
+//! Hot swaps need nothing special here: the loop refreshes the device-side
+//! parameter cache between launches (`latest_if_newer`), so a publish
+//! never touches a request already in flight — replies are always sent,
+//! stamped with the version that actually computed them.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::actor::{BatchSource, OverlapAcc, SourceStatus};
+use crate::coordinator::stats::RunStats;
+use crate::util::rng::Xoshiro256;
+
+use super::session::{PendingRequest, SessionCell, SessionEndpoint, Shared, StepReply};
+
+/// A request taken from its session and bound into the current sub-batch,
+/// awaiting the inference result for its slot.
+struct ArmedRequest {
+    enqueued: std::time::Instant,
+    reply: std::sync::mpsc::Sender<StepReply>,
+}
+
+/// One sub-batch of session slots (the serving analogue of the actor's
+/// env-pool `Stage`).
+struct ServeStage {
+    /// Flat `[slots * obs_dim]`, zero-padded where no request is armed.
+    /// `Arc`-shared for the same zero-copy upload as the actor path.
+    obs: Arc<Vec<f32>>,
+    /// Sessions bound to each slot (continuous: rebound as sessions come
+    /// and go).
+    slots: Vec<Option<Arc<SessionCell>>>,
+    /// The in-flight request per slot, taken at assembly, replied at
+    /// dispatch.
+    armed: Vec<Option<ArmedRequest>>,
+}
+
+pub struct SessionSource {
+    shared: Arc<Shared>,
+    stats: Arc<RunStats>,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    obs_dim: usize,
+    num_actions: usize,
+    stages: Vec<ServeStage>,
+    /// Lifetime counters (reported by serve::run).
+    admitted: u64,
+    served: u64,
+}
+
+impl SessionSource {
+    pub fn new(
+        endpoint: SessionEndpoint,
+        stats: Arc<RunStats>,
+        stop: Arc<std::sync::atomic::AtomicBool>,
+        slots: usize,
+        pipeline_stages: usize,
+        obs_dim: usize,
+        num_actions: usize,
+    ) -> Result<Self> {
+        anyhow::ensure!(slots >= 1, "serve batch must have at least one slot");
+        anyhow::ensure!(pipeline_stages >= 1, "pipeline_stages must be >= 1");
+        anyhow::ensure!(
+            endpoint.shared.obs_dim == obs_dim,
+            "session channel carries {}-float observations, agent expects {}",
+            endpoint.shared.obs_dim,
+            obs_dim
+        );
+        let stages = (0..pipeline_stages)
+            .map(|_| ServeStage {
+                obs: Arc::new(vec![0.0; slots * obs_dim]),
+                slots: (0..slots).map(|_| None).collect(),
+                armed: (0..slots).map(|_| None).collect(),
+            })
+            .collect();
+        Ok(Self {
+            shared: endpoint.shared,
+            stats,
+            stop,
+            obs_dim,
+            num_actions,
+            stages,
+            admitted: 0,
+            served: 0,
+        })
+    }
+
+    /// Sessions ever bound to a batch slot.
+    pub fn admitted(&self) -> u64 {
+        self.admitted
+    }
+
+    /// Requests replied to.
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+
+    /// Ready sub-batch `s` for its next inference: retire, admit, arm (the
+    /// module doc's three phases). Blocks until at least one slot has a
+    /// request, or reports `Shutdown` when stopped / fully drained.
+    fn assemble(&mut self, s: usize) -> Result<SourceStatus> {
+        let d = self.obs_dim;
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                return Ok(SourceStatus::Shutdown);
+            }
+            let mut inner = self.shared.inner.lock().unwrap();
+            let stage = &mut self.stages[s];
+
+            // 1) retire closed sessions, freeing their slots
+            for (i, slot) in stage.slots.iter_mut().enumerate() {
+                if slot.as_ref().is_some_and(|c| c.closed.load(Ordering::Acquire)) {
+                    *slot = None;
+                    Arc::make_mut(&mut stage.obs)[i * d..(i + 1) * d].fill(0.0);
+                }
+            }
+
+            // 2) continuous batching: admit waiting sessions into free
+            //    slots — membership of the next sub-batch, not a cohort
+            for slot in stage.slots.iter_mut() {
+                if slot.is_none() {
+                    while let Some(cell) = inner.backlog.pop_front() {
+                        if cell.closed.load(Ordering::Acquire) {
+                            continue; // gave up while queued
+                        }
+                        *slot = Some(cell);
+                        self.admitted += 1;
+                        break;
+                    }
+                }
+            }
+
+            // 3) arm one pending request per bound session
+            let mut armed_any = false;
+            for (i, slot) in stage.slots.iter().enumerate() {
+                if stage.armed[i].is_some() {
+                    continue; // already armed (cannot happen post-dispatch, defensive)
+                }
+                if let Some(cell) = slot {
+                    if let Some(req) = cell.request.lock().unwrap().take() {
+                        Arc::make_mut(&mut stage.obs)[i * d..(i + 1) * d]
+                            .copy_from_slice(&req.obs);
+                        stage.armed[i] =
+                            Some(ArmedRequest { enqueued: req.enqueued, reply: req.reply });
+                        armed_any = true;
+                    }
+                }
+            }
+            if armed_any {
+                return Ok(SourceStatus::Continue);
+            }
+
+            // 4) drained? every client handle gone and no live session
+            //    anywhere — nothing can ever arrive again
+            if self.shared.clients.load(Ordering::Acquire) == 0 && inner.live == 0 {
+                return Ok(SourceStatus::Shutdown);
+            }
+
+            // 5) block for work; bounded so `stop` is still observed
+            let (guard, _) = self
+                .shared
+                .readable
+                .wait_timeout(inner, Duration::from_millis(5))
+                .unwrap();
+            drop(guard);
+        }
+    }
+}
+
+impl BatchSource for SessionSource {
+    fn stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    fn prime(&mut self) -> Result<SourceStatus> {
+        self.assemble(0)
+    }
+
+    fn obs(&mut self, s: usize) -> Arc<Vec<f32>> {
+        self.stages[s].obs.clone()
+    }
+
+    /// Reply to every armed request with its slot's action, stamped with
+    /// the version that computed it. Channel sends — never blocks. A
+    /// publish between launches can't drop anything here: requests armed
+    /// under the old version still get their reply (with the old stamp).
+    fn dispatch(
+        &mut self,
+        s: usize,
+        actions: Vec<i32>,
+        logits: Vec<f32>,
+        param_version: u64,
+        _acc: &mut OverlapAcc,
+    ) -> Result<()> {
+        let a = self.num_actions;
+        let stage = &mut self.stages[s];
+        for (i, armed) in stage.armed.iter_mut().enumerate() {
+            if let Some(req) = armed.take() {
+                self.stats.request_latency.record(req.enqueued.elapsed());
+                let reply = StepReply {
+                    action: actions[i],
+                    logits: logits[i * a..(i + 1) * a].to_vec(),
+                    param_version,
+                };
+                let _ = req.reply.send(reply); // client hung up: its loss, not an error
+                self.served += 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn advance(
+        &mut self,
+        s: usize,
+        _rng: &Xoshiro256,
+        _acc: &mut OverlapAcc,
+    ) -> Result<SourceStatus> {
+        self.assemble(s)
+    }
+}
+
+impl Drop for SessionSource {
+    /// Fail pending work fast instead of stranding blocked clients: mark
+    /// the server gone, then drop every unanswered request (slot-bound and
+    /// backlogged) so their reply channels disconnect and `step` errors.
+    fn drop(&mut self) {
+        self.shared.server_gone.store(true, Ordering::Release);
+        let drain = |cell: &Arc<SessionCell>| {
+            let _: Option<PendingRequest> = cell.request.lock().unwrap().take();
+        };
+        for stage in &mut self.stages {
+            for armed in stage.armed.iter_mut() {
+                let _: Option<ArmedRequest> = armed.take();
+            }
+            for cell in stage.slots.iter().flatten() {
+                drain(cell);
+            }
+        }
+        let inner = self.shared.inner.lock().unwrap();
+        for cell in inner.backlog.iter() {
+            drain(cell);
+        }
+        self.shared.readable.notify_all();
+    }
+}

@@ -1,0 +1,265 @@
+//! BatchSource refactor oracle (DESIGN.md §14): the actor's generic
+//! batch-assembly/infer/dispatch loop, driving the env-pool source, must be
+//! **bit-identical** to the pre-refactor actor schedule.
+//!
+//! The pre-refactor schedule is reproduced here literally as a straight-line
+//! reference loop (prime → launch(0) → per tick: harvest s, dispatch s,
+//! advance s2, launch s2, one `next_program_seed` per launch) against a
+//! frozen parameter store — the same determinism trick as `zero_copy.rs`:
+//! with params frozen, every device output is a pure function of the launch
+//! order and the seed stream, so the windows the real actor queues must
+//! match the reference bitwise. Pinned at `pipeline_stages = 1` (the fully
+//! synchronous schedule) and `= 2` (the paper's split-batch pipeline).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use podracer::coordinator::actor::{spawn_actor, ActorConfig, ShardBundle};
+use podracer::coordinator::param_store::ParamStore;
+use podracer::coordinator::queue::BoundedQueue;
+use podracer::coordinator::sharder::{shard, unshard};
+use podracer::coordinator::stats::RunStats;
+use podracer::coordinator::trajectory::{Trajectory, TrajectoryBuilder};
+use podracer::envs::{make_factory, BatchedEnv, EnvKind, StepTicket, WorkerPool};
+use podracer::runtime::tensor::HostTensor;
+use podracer::runtime::Pod;
+use podracer::util::rng::Xoshiro256;
+
+fn artifacts() -> std::path::PathBuf {
+    let dir = podracer::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    dir
+}
+
+const B: usize = 32; // actor batch (all stages together)
+const T: usize = 20; // unroll
+const D: usize = 50; // catch obs dim
+const A: usize = 3; // catch actions
+const SEED: u64 = 123;
+const NUM_SHARDS: usize = 2;
+
+fn infer_program(stages: usize) -> String {
+    format!("seb_catch_infer_b{}", B / stages)
+}
+
+/// Run the real refactored actor (spawn_actor → run_infer_loop over
+/// EnvPoolSource) against a frozen store; collect `windows` materialized
+/// trajectory windows in queue order.
+fn run_real_actor(stages: usize, windows: usize) -> Vec<Trajectory> {
+    let mut pod = Pod::new(&artifacts(), 1).unwrap();
+    pod.load_program("seb_catch_init", &[0]).unwrap();
+    pod.load_program(&infer_program(stages), &[0]).unwrap();
+    let core = pod.core(0).unwrap();
+    let outs = core
+        .execute("seb_catch_init", vec![HostTensor::scalar_i32(SEED as i32)])
+        .unwrap();
+    let params = outs[0].clone().into_f32().unwrap();
+
+    let store = Arc::new(ParamStore::new(params));
+    let queue = Arc::new(BoundedQueue::<ShardBundle>::new(2 * windows));
+    let stats = Arc::new(RunStats::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let factory = Arc::new(make_factory(EnvKind::Catch, SEED));
+    let cfg = ActorConfig {
+        actor_id: 0,
+        batch: B,
+        pipeline_stages: stages,
+        unroll: T,
+        discount: 0.99,
+        num_shards: NUM_SHARDS,
+        infer_program: infer_program(stages),
+        obs_shape: vec![D],
+        num_actions: A,
+        seed: SEED,
+        copy_path: false,
+        checkpoint: None,
+    };
+    let join = spawn_actor(
+        cfg,
+        core,
+        factory,
+        WorkerPool::new(2),
+        store,
+        queue.clone(),
+        stats,
+        stop.clone(),
+    );
+    let mut out = Vec::new();
+    for _ in 0..windows {
+        out.push(unshard(&queue.pop().unwrap()).unwrap());
+    }
+    stop.store(true, Ordering::Relaxed);
+    queue.shutdown();
+    join.join().unwrap().unwrap();
+    out
+}
+
+/// One reference sub-batch: the pre-refactor actor's per-stage state,
+/// stepped by the straight-line loop below.
+struct RefStage {
+    env: BatchedEnv,
+    obs: Arc<Vec<f32>>,
+    prev_obs: Arc<Vec<f32>>,
+    actions: Vec<i32>,
+    logits: Vec<f32>,
+    rewards: Vec<f32>,
+    dones: Vec<bool>,
+    discounts: Vec<f32>,
+    episode_reward: Vec<f64>,
+    builder: TrajectoryBuilder,
+    step: Option<StepTicket>,
+}
+
+/// The pre-refactor actor schedule, written out longhand: same env
+/// construction, same launch order, same seed stream, same accumulation
+/// order — no BatchSource, no run_infer_loop.
+fn run_reference_actor(stages_n: usize, windows: usize) -> Vec<Trajectory> {
+    let mut pod = Pod::new(&artifacts(), 1).unwrap();
+    pod.load_program("seb_catch_init", &[0]).unwrap();
+    let program = infer_program(stages_n);
+    pod.load_program(&program, &[0]).unwrap();
+    let core = pod.core(0).unwrap();
+    let outs = core
+        .execute("seb_catch_init", vec![HostTensor::scalar_i32(SEED as i32)])
+        .unwrap();
+    let params = outs[0].clone().into_f32().unwrap();
+
+    let store = ParamStore::new(params);
+    let factory = make_factory(EnvKind::Catch, SEED);
+    let pool = WorkerPool::new(2);
+    let sb = B / stages_n;
+    let mut rng = Xoshiro256::from_stream(SEED, 0);
+
+    let mut stages: Vec<RefStage> = (0..stages_n)
+        .map(|s| {
+            let env = BatchedEnv::with_slot_offset(&factory, sb, s * sb, pool.clone()).unwrap();
+            let mut obs = vec![0.0f32; sb * D];
+            env.reset(&mut obs).unwrap();
+            RefStage {
+                env,
+                obs: Arc::new(obs),
+                prev_obs: Arc::new(vec![0.0; sb * D]),
+                actions: vec![0; sb],
+                logits: vec![0.0; sb * A],
+                rewards: vec![0.0; sb],
+                dones: vec![false; sb],
+                discounts: vec![0.0; sb],
+                episode_reward: vec![0.0; sb],
+                builder: TrajectoryBuilder::new(T, sb, &[D], A, NUM_SHARDS),
+                step: None,
+            }
+        })
+        .collect();
+
+    // Frozen store: upload the parameters once, reference by slot forever —
+    // exactly what the loop's version-gated cache degenerates to.
+    let snap = store.latest();
+    core.cache(
+        "ref-params#0",
+        HostTensor::f32_shared(vec![snap.params.len()], snap.params.clone(), 0).unwrap(),
+    )
+    .unwrap();
+
+    let launch = |stage: &RefStage, rng: &mut Xoshiro256| {
+        let inputs = vec![
+            HostTensor::f32_shared(vec![sb, D], stage.obs.clone(), 0).unwrap(),
+            HostTensor::scalar_i32(rng.next_program_seed()),
+        ];
+        core.execute_cached_async(&program, inputs, vec![(0, "ref-params#0".to_string())])
+            .unwrap()
+    };
+
+    let mut out: Vec<Trajectory> = Vec::new();
+    let mut pending: Vec<Option<_>> = (0..stages_n).map(|_| None).collect();
+    pending[0] = Some(launch(&stages[0], &mut rng));
+
+    let mut tick: usize = 0;
+    while out.len() < windows {
+        let s = tick % stages_n;
+
+        // harvest s
+        let outs = pending[s].take().unwrap().recv().unwrap().unwrap();
+        let actions: Vec<i32> = outs[0].as_i32().unwrap().to_vec();
+        let logits: Vec<f32> = outs[1].as_f32().unwrap().to_vec();
+
+        // dispatch s: store outputs, swap obs, start the async env step
+        {
+            let stage = &mut stages[s];
+            stage.actions = actions;
+            stage.logits = logits;
+            std::mem::swap(&mut stage.prev_obs, &mut stage.obs);
+            stage.step = Some(stage.env.step_async(&stage.actions));
+        }
+
+        // advance s2: finish its outstanding step, accumulate, maybe finish
+        // a window
+        let s2 = (tick + 1) % stages_n;
+        {
+            let stage = &mut stages[s2];
+            if let Some(ticket) = stage.step.take() {
+                ticket
+                    .wait(Arc::make_mut(&mut stage.obs), &mut stage.rewards, &mut stage.dones)
+                    .unwrap();
+                for i in 0..sb {
+                    stage.episode_reward[i] += stage.rewards[i] as f64;
+                    if stage.dones[i] {
+                        stage.episode_reward[i] = 0.0;
+                        stage.discounts[i] = 0.0;
+                    } else {
+                        stage.discounts[i] = 0.99;
+                    }
+                }
+                stage
+                    .builder
+                    .push_step(
+                        &stage.prev_obs,
+                        &stage.actions,
+                        &stage.logits,
+                        &stage.rewards,
+                        &stage.discounts,
+                    )
+                    .unwrap();
+                if stage.builder.is_full() {
+                    let arena = stage.builder.finish(&stage.obs, store.version(), 0).unwrap();
+                    out.push(unshard(&shard(&arena)).unwrap());
+                }
+            }
+        }
+        pending[s2] = Some(launch(&stages[s2], &mut rng));
+
+        tick += 1;
+    }
+    out
+}
+
+fn assert_windows_match(real: &[Trajectory], reference: &[Trajectory], label: &str) {
+    assert_eq!(real.len(), reference.len());
+    for (w, (r, e)) in real.iter().zip(reference).enumerate() {
+        assert_eq!(r.obs, e.obs, "{label} window {w}: observations diverged");
+        assert_eq!(r.actions, e.actions, "{label} window {w}: actions diverged");
+        assert_eq!(r.rewards, e.rewards, "{label} window {w}: rewards diverged");
+        assert_eq!(r.discounts, e.discounts, "{label} window {w}: discounts diverged");
+        assert_eq!(
+            r.behaviour_logits, e.behaviour_logits,
+            "{label} window {w}: logits diverged"
+        );
+    }
+}
+
+#[test]
+fn env_pool_source_is_bit_identical_to_the_pre_refactor_actor_synchronous() {
+    let real = run_real_actor(1, 3);
+    let reference = run_reference_actor(1, 3);
+    assert_windows_match(&real, &reference, "stages=1");
+}
+
+#[test]
+fn env_pool_source_is_bit_identical_to_the_pre_refactor_actor_pipelined() {
+    // Two sub-batches of 16 round-robining through seb_catch_infer_b16 —
+    // the split-batch schedule, windows interleaving in queue order.
+    let real = run_real_actor(2, 4);
+    let reference = run_reference_actor(2, 4);
+    assert_windows_match(&real, &reference, "stages=2");
+}

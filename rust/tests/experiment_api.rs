@@ -1,25 +1,23 @@
-//! ISSUE 5 acceptance: all three architectures run through
-//! `Experiment`/`Runner` with **bit-identical** `final_params` vs their
-//! pre-refactor entrypoints (`Anakin::run_on`, `Sebulba::run_on`,
-//! `run_muzero` — kept as deprecated shims for exactly this PR).
+//! The `Experiment`/`Runner` path is the *only* entrypoint now (the PR 5
+//! one-PR deprecation shims — `Anakin::run_on`, `Sebulba::run_on`,
+//! `run_muzero` — are gone), so the oracle these tests pin is the builder
+//! against *itself*: two runs of the same declarative spec on fresh pods
+//! must be bit-identical.
 //!
 //! Determinism notes: Anakin is bit-deterministic at any length (the bus
 //! reduces in fixed participant order). Sebulba/MuZero runs race the
 //! actor's parameter fetches against the learner's publishes, so the
-//! cross-entrypoint comparison pins `total_updates = 1` with a single
-//! actor thread: the one consumed trajectory window is produced entirely
+//! run-twice comparison pins `total_updates = 1` with a single actor
+//! thread: the one consumed trajectory window is produced entirely
 //! against the initial parameters, making `final_params` a deterministic
-//! function of (workload, topology, seed) on both paths. The full mapping
-//! (every field, any config) is pinned separately by the lossless
-//! `runner()`/`topology()` round-trips.
+//! function of (workload, topology, seed). The full workload↔topology
+//! mapping is pinned separately by the lossless `runner()`/`topology()`
+//! round-trips.
 
-#![allow(deprecated)]
-
-use podracer::anakin::{Anakin, AnakinConfig, Driver, Mode};
-use podracer::coordinator::{Sebulba, SebulbaConfig};
+use podracer::anakin::{Driver, Mode};
 use podracer::experiment::{Arch, EnvKind, Experiment, Topology};
 use podracer::runtime::Pod;
-use podracer::search::{run_muzero, MuZeroRunConfig};
+use podracer::search::MuZeroRunConfig;
 
 fn artifacts() -> std::path::PathBuf {
     let dir = podracer::artifacts_dir();
@@ -29,151 +27,115 @@ fn artifacts() -> std::path::PathBuf {
     dir
 }
 
-#[test]
-fn anakin_experiment_matches_legacy_entrypoint_bit_exact() {
-    let mut pod = Pod::new(&artifacts(), 2).unwrap();
-    let cfg = AnakinConfig {
-        agent: "anakin_catch".into(),
-        cores: 2,
-        outer_iters: 3,
-        mode: Mode::Bundled,
-        driver: Driver::Threaded,
-        seed: 21,
-    };
-    let legacy = Anakin::run_on(&mut pod, &cfg).unwrap();
-    let new = Experiment::new(Arch::Anakin)
+fn anakin_experiment(mode: Mode, driver: Driver, iters: u64, seed: u64) -> Experiment {
+    Experiment::new(Arch::Anakin)
         .artifacts(&artifacts())
         .agent("anakin_catch")
         .topology(Topology::anakin(2))
-        .updates(3)
-        .mode(Mode::Bundled)
-        .driver(Driver::Threaded)
-        .seed(21)
+        .updates(iters)
+        .mode(mode)
+        .driver(driver)
+        .seed(seed)
         .build()
         .unwrap()
-        .run_on(&mut pod)
+}
+
+#[test]
+fn anakin_experiment_is_bit_deterministic_across_runs() {
+    let mut pod_a = Pod::new(&artifacts(), 2).unwrap();
+    let mut pod_b = Pod::new(&artifacts(), 2).unwrap();
+    let a = anakin_experiment(Mode::Bundled, Driver::Threaded, 3, 21)
+        .run_on(&mut pod_a)
         .unwrap();
-    assert_eq!(legacy.steps, new.steps);
-    assert_eq!(legacy.updates, new.updates);
+    let b = anakin_experiment(Mode::Bundled, Driver::Threaded, 3, 21)
+        .run_on(&mut pod_b)
+        .unwrap();
+    assert_eq!(a.steps, b.steps);
+    assert_eq!(a.updates, b.updates);
     assert_eq!(
-        legacy.final_params, new.final_params,
-        "Experiment(Anakin) must be bit-identical to Anakin::run_on"
+        a.final_params, b.final_params,
+        "Experiment(Anakin) must be bit-deterministic run-to-run"
     );
 }
 
 #[test]
-fn anakin_serial_driver_matches_too() {
-    let mut pod = Pod::new(&artifacts(), 2).unwrap();
-    let cfg = AnakinConfig {
-        agent: "anakin_catch".into(),
-        cores: 2,
-        outer_iters: 2,
-        mode: Mode::Psum,
-        driver: Driver::Serial,
-        seed: 8,
-    };
-    let legacy = Anakin::run_on(&mut pod, &cfg).unwrap();
-    let new = Experiment::new(Arch::Anakin)
-        .artifacts(&artifacts())
-        .agent("anakin_catch")
-        .topology(Topology::anakin(2))
-        .updates(2)
-        .mode(Mode::Psum)
-        .driver(Driver::Serial)
-        .seed(8)
-        .build()
-        .unwrap()
-        .run_on(&mut pod)
+fn anakin_serial_psum_is_bit_deterministic_too() {
+    let mut pod_a = Pod::new(&artifacts(), 2).unwrap();
+    let mut pod_b = Pod::new(&artifacts(), 2).unwrap();
+    let a = anakin_experiment(Mode::Psum, Driver::Serial, 2, 8)
+        .run_on(&mut pod_a)
         .unwrap();
-    assert_eq!(legacy.final_params, new.final_params);
+    let b = anakin_experiment(Mode::Psum, Driver::Serial, 2, 8)
+        .run_on(&mut pod_b)
+        .unwrap();
+    assert_eq!(a.final_params, b.final_params);
 }
 
-#[test]
-fn sebulba_experiment_matches_legacy_entrypoint_bit_exact() {
-    let cfg = SebulbaConfig {
-        agent: "seb_catch".into(),
-        env_kind: EnvKind::Catch,
-        actor_cores: 1,
-        learner_cores: 1,
-        threads_per_actor_core: 1,
-        actor_batch: 32,
-        pipeline_stages: 1,
-        learner_pipeline: 1,
-        unroll: 20,
-        micro_batches: 1,
-        discount: 0.99,
-        queue_capacity: 2,
-        env_workers: 2,
-        replicas: 1,
-        total_updates: 1, // single update: the consumed window is pure params0
-        seed: 55,
-        copy_path: false,
-    };
-    let mut pod = Pod::new(&artifacts(), cfg.total_cores()).unwrap();
-    let legacy = Sebulba::run_on(&mut pod, &cfg).unwrap();
-    let new = Experiment::new(Arch::Sebulba)
+fn sebulba_experiment() -> Experiment {
+    Experiment::new(Arch::Sebulba)
         .artifacts(&artifacts())
         .agent("seb_catch")
         .env(EnvKind::Catch)
-        .topology(cfg.topology())
+        .topology(Topology::split(1, 1))
         .actor_batch(32)
         .unroll(20)
-        .updates(1)
+        .updates(1) // single update: the consumed window is pure params0
         .seed(55)
         .build()
         .unwrap()
-        .run_on(&mut pod)
-        .unwrap();
-    assert_eq!(legacy.updates, 1);
-    assert_eq!(new.updates, 1);
+}
+
+#[test]
+fn sebulba_experiment_is_bit_deterministic_across_runs() {
+    let mut pod_a = Pod::new(&artifacts(), 2).unwrap();
+    let mut pod_b = Pod::new(&artifacts(), 2).unwrap();
+    let a = sebulba_experiment().run_on(&mut pod_a).unwrap();
+    let b = sebulba_experiment().run_on(&mut pod_b).unwrap();
+    assert_eq!(a.updates, 1);
+    assert_eq!(b.updates, 1);
     assert_eq!(
-        legacy.final_params, new.final_params,
-        "Experiment(Sebulba) must be bit-identical to Sebulba::run_on"
+        a.final_params, b.final_params,
+        "Experiment(Sebulba) must be bit-deterministic run-to-run"
     );
     assert_eq!(
-        legacy.as_actor_learner().unwrap().final_opt_state,
-        new.as_actor_learner().unwrap().final_opt_state,
+        a.as_actor_learner().unwrap().final_opt_state,
+        b.as_actor_learner().unwrap().final_opt_state,
         "optimiser state must match too"
     );
 }
 
-#[test]
-fn muzero_experiment_matches_legacy_entrypoint_bit_exact() {
-    let cfg = MuZeroRunConfig {
-        actor_cores: 1,
-        learner_cores: 1,
-        threads_per_actor_core: 1,
-        num_simulations: 4,
-        total_updates: 1, // single update: see the module doc
-        ..Default::default()
-    };
-    let mut pod = Pod::new(&artifacts(), cfg.total_cores()).unwrap();
-    let legacy = run_muzero(&mut pod, &cfg).unwrap();
-    let new = Experiment::new(Arch::MuZero)
+fn muzero_experiment() -> Experiment {
+    Experiment::new(Arch::MuZero)
         .artifacts(&artifacts())
         .agent("mz_catch")
         .env(EnvKind::Catch)
-        .topology(cfg.topology())
+        .topology(Topology::split(1, 1))
         .num_simulations(4)
-        .updates(1)
+        .updates(1) // single update: see the module doc
         .build()
         .unwrap()
-        .run_on(&mut pod)
-        .unwrap();
-    assert_eq!(legacy.updates, 1);
-    assert_eq!(new.updates, 1);
+}
+
+#[test]
+fn muzero_experiment_is_bit_deterministic_across_runs() {
+    let mut pod_a = Pod::new(&artifacts(), 2).unwrap();
+    let mut pod_b = Pod::new(&artifacts(), 2).unwrap();
+    let a = muzero_experiment().run_on(&mut pod_a).unwrap();
+    let b = muzero_experiment().run_on(&mut pod_b).unwrap();
+    assert_eq!(a.updates, 1);
+    assert_eq!(b.updates, 1);
     assert_eq!(
-        legacy.final_params, new.final_params,
-        "Experiment(MuZero) must be bit-identical to run_muzero"
+        a.final_params, b.final_params,
+        "Experiment(MuZero) must be bit-deterministic run-to-run"
     );
 }
 
 #[test]
-fn legacy_configs_split_and_remerge_losslessly() {
-    // The builder path and the legacy path feed the same resolved config —
-    // pinned structurally for every field, not just the ones a short run
-    // happens to exercise (SebulbaConfig's round-trip lives in its module
-    // tests).
+fn resolved_configs_split_and_remerge_losslessly() {
+    // The builder path resolves a workload + Topology into one internal
+    // config; `runner()`/`topology()` split it back — pinned structurally
+    // for every field, not just the ones a short run happens to exercise
+    // (SebulbaConfig's round-trip lives in its module tests).
     let mz = MuZeroRunConfig {
         agent: "mz_catch".into(),
         env_kind: EnvKind::Gridworld,
@@ -190,18 +152,6 @@ fn legacy_configs_split_and_remerge_losslessly() {
         seed: 99,
     };
     assert_eq!(mz.runner().resolved(&mz.topology()), mz);
-
-    let an = AnakinConfig {
-        agent: "anakin_grid".into(),
-        cores: 5,
-        outer_iters: 13,
-        mode: Mode::Psum,
-        driver: Driver::Serial,
-        seed: 17,
-    };
-    assert_eq!(an.runner().agent, an.agent);
-    assert_eq!(an.runner().outer_iters, an.outer_iters);
-    assert_eq!(an.topology().total_cores(), an.cores);
 }
 
 #[test]

@@ -504,6 +504,107 @@ fn corrupt_checkpoints_fail_with_the_right_variant() {
     ));
 }
 
+// -- latency histogram (serving percentiles, DESIGN.md §14) -------------------
+
+fn hist_of(samples_micros: &[u64]) -> podracer::coordinator::stats::LatencyHistogram {
+    let h = podracer::coordinator::stats::LatencyHistogram::new();
+    for &m in samples_micros {
+        h.record(std::time::Duration::from_micros(m));
+    }
+    h
+}
+
+/// The bucket a sample lands in: `[2^i, 2^(i+1))` µs, clamped to 24 buckets.
+fn hist_bucket(micros: u64) -> usize {
+    (63 - micros.max(1).leading_zeros() as usize).min(23)
+}
+
+fn random_latency_samples(g: &mut Gen) -> Vec<u64> {
+    // span the full bucket range, including sub-µs (clamped) and >16s
+    // (overflow bucket) samples
+    let n = g.usize(1, 200).max(1);
+    (0..n)
+        .map(|_| {
+            let exp = g.usize(0, 25);
+            let base = 1u64 << exp;
+            base + g.usize(0, base as usize) as u64 - 1
+        })
+        .collect()
+}
+
+#[test]
+fn prop_histogram_percentiles_match_sorted_reference() {
+    check(
+        "histogram percentile == sorted-reference bucket bound",
+        60,
+        random_latency_samples,
+        |samples| {
+            let h = hist_of(samples);
+            let mut sorted = samples.clone();
+            sorted.sort_unstable();
+            for &p in &[1.0, 50.0, 90.0, 99.0, 100.0] {
+                // the histogram reports the upper bound of the bucket
+                // holding the ceil(p% * n)-th smallest sample
+                let rank = ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
+                let sample = sorted[rank - 1];
+                let want = (1u64 << (hist_bucket(sample) + 1)) as f64 * 1e-6;
+                let got = h.percentile_seconds(p);
+                if got != want {
+                    return Err(format!(
+                        "p{p}: histogram said {got}, sorted reference (sample {sample}µs) says {want}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_histogram_merge_is_associative() {
+    check(
+        "histogram folding is associative",
+        60,
+        |g| {
+            let samples = random_latency_samples(g);
+            let i = g.usize(0, samples.len());
+            let j = g.usize(i, samples.len());
+            (samples, i, j)
+        },
+        |(samples, i, j)| {
+            let (a, b, c) = (&samples[..*i], &samples[*i..*j], &samples[*j..]);
+
+            // ((a + b) + c)
+            let left = hist_of(a);
+            left.merge_from(&hist_of(b));
+            left.merge_from(&hist_of(c));
+            // (a + (b + c))
+            let bc = hist_of(b);
+            bc.merge_from(&hist_of(c));
+            let right = hist_of(a);
+            right.merge_from(&bc);
+            // every sample recorded directly
+            let direct = hist_of(samples);
+
+            if left.snapshot() != direct.snapshot() {
+                return Err("((a+b)+c) diverged from direct recording".into());
+            }
+            if right.snapshot() != direct.snapshot() {
+                return Err("(a+(b+c)) diverged from direct recording".into());
+            }
+            for &p in &[50.0, 99.0] {
+                if left.percentile_seconds(p) != direct.percentile_seconds(p) {
+                    return Err(format!("p{p} changed under folding"));
+                }
+            }
+            if (left.mean_seconds() - direct.mean_seconds()).abs() > 1e-12 {
+                return Err("mean changed under folding".into());
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_rng_streams_are_reproducible() {
     check(

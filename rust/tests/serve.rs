@@ -1,0 +1,249 @@
+//! Serving-frontend acceptance (DESIGN.md §14): admission control at the
+//! session channel, the hot-swap zero-drop invariant on the live loop, the
+//! end-to-end `serve::run` path, and hard-error flag parsing.
+//!
+//! The hot-swap oracle wires the loop manually (`session_channel` +
+//! `spawn_serve_loop`) around a test-controlled `ParamStore`: a first wave
+//! of sessions streams requests, the test publishes a new parameter
+//! version mid-stream, a second wave connects after the publish — every
+//! admitted request in both waves must be answered (zero drops), versions
+//! must be monotone per session, and the post-swap wave must only ever see
+//! the new version.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+use podracer::coordinator::param_store::ParamStore;
+use podracer::coordinator::stats::RunStats;
+use podracer::experiment::serve_from_args;
+use podracer::runtime::tensor::HostTensor;
+use podracer::runtime::Pod;
+use podracer::serve::{
+    session_channel, spawn_serve_loop, ConnectError, ServeClient, ServeConfig, SessionSource,
+};
+use podracer::util::cli::Args;
+
+fn artifacts() -> std::path::PathBuf {
+    let dir = podracer::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    dir
+}
+
+const D: usize = 50; // catch obs dim
+const A: usize = 3; // catch actions
+
+#[test]
+fn admission_control_bounds_the_session_backlog() {
+    // No server draining: the backlog fills to exactly `queue_capacity`.
+    let (client, _endpoint) = session_channel(2, 4);
+    let _h1 = client.connect().expect("first session fits the backlog");
+    let _h2 = client.connect().expect("second session fits the backlog");
+    match client.connect() {
+        Err(ConnectError::Busy { capacity }) => assert_eq!(capacity, 2),
+        other => panic!("third connect must be refused Busy, got {other:?}"),
+    }
+    assert_eq!(client.rejected(), 1);
+}
+
+#[test]
+fn requests_validate_observation_length() {
+    let (client, _endpoint) = session_channel(2, 4);
+    let mut h = client.connect().unwrap();
+    let err = h.step(&[0.0; 3]).unwrap_err().to_string();
+    assert!(err.contains("floats"), "{err}");
+}
+
+#[test]
+fn late_connects_and_steps_fail_fast_once_the_server_is_gone() {
+    let (client, endpoint) = session_channel(2, 4);
+    let mut pre = client.connect().unwrap();
+    let source = SessionSource::new(
+        endpoint,
+        Arc::new(RunStats::new()),
+        Arc::new(AtomicBool::new(false)),
+        2,
+        1,
+        4,
+        3,
+    )
+    .unwrap();
+    drop(source); // serving loop tears down
+    assert!(matches!(client.connect(), Err(ConnectError::Shutdown)));
+    let err = pre.step(&[0.0; 4]).unwrap_err().to_string();
+    assert!(err.contains("shut down"), "{err}");
+}
+
+fn drive_session(
+    client: ServeClient,
+    steps: usize,
+    fill: f32,
+) -> std::thread::JoinHandle<anyhow::Result<Vec<u64>>> {
+    std::thread::spawn(move || {
+        let mut handle = loop {
+            match client.connect() {
+                Ok(h) => break h,
+                Err(ConnectError::Busy { .. }) => std::thread::sleep(Duration::from_micros(200)),
+                Err(ConnectError::Shutdown) => anyhow::bail!("server gone before connect"),
+            }
+        };
+        let obs = vec![fill; D];
+        let mut versions = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let reply = handle.step(&obs)?;
+            anyhow::ensure!(reply.logits.len() == A, "reply carries a full logit row");
+            versions.push(reply.param_version);
+        }
+        Ok(versions)
+    })
+}
+
+#[test]
+fn hot_swap_drops_nothing_and_post_swap_sessions_see_the_new_version() {
+    const WAVE: usize = 4; // sessions per wave (8 total, one per slot)
+    const STEPS: usize = 40;
+
+    let mut pod = Pod::new(&artifacts(), 1).unwrap();
+    pod.load_program("seb_catch_init", &[0]).unwrap();
+    pod.load_program("seb_catch_infer_b8", &[0]).unwrap();
+    let core = pod.core(0).unwrap();
+    let outs = core
+        .execute("seb_catch_init", vec![HostTensor::scalar_i32(11)])
+        .unwrap();
+    let params = outs[0].clone().into_f32().unwrap();
+
+    let store = Arc::new(ParamStore::new(params));
+    let stats = Arc::new(RunStats::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let (client, endpoint) = session_channel(8, D);
+    let server = spawn_serve_loop(
+        core,
+        "seb_catch_infer_b8".into(),
+        endpoint,
+        8,
+        1,
+        vec![D],
+        A,
+        store.clone(),
+        stats.clone(),
+        stop,
+        123,
+    );
+
+    // Wave A streams against version 0...
+    let wave_a: Vec<_> = (0..WAVE)
+        .map(|i| drive_session(client.clone(), STEPS, i as f32))
+        .collect();
+
+    // ...until the run is demonstrably mid-stream, then hot-publish. Same
+    // bytes, new version: the swap machinery is exercised without
+    // perturbing the policy.
+    while stats.request_latency.count() < (WAVE * STEPS / 4) as u64 {
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    let new_version = store.publish_shared(store.latest().params.clone());
+    assert_eq!(new_version, 1);
+
+    // Wave B connects strictly after the publish.
+    let wave_b: Vec<_> = (0..WAVE)
+        .map(|i| drive_session(client.clone(), STEPS, 100.0 + i as f32))
+        .collect();
+
+    let mut a_versions = Vec::new();
+    for h in wave_a {
+        a_versions.push(h.join().unwrap().expect("wave A session completed"));
+    }
+    let mut b_versions = Vec::new();
+    for h in wave_b {
+        b_versions.push(h.join().unwrap().expect("wave B session completed"));
+    }
+    drop(client);
+    let (admitted, served) = server.join().unwrap().unwrap();
+
+    // Zero drops: every admitted session got a reply for every step.
+    assert_eq!(admitted, 2 * WAVE as u64);
+    assert_eq!(served, (2 * WAVE * STEPS) as u64);
+    assert_eq!(stats.request_latency.count(), served);
+    for vs in a_versions.iter().chain(&b_versions) {
+        assert_eq!(vs.len(), STEPS);
+        assert!(
+            vs.windows(2).all(|w| w[0] <= w[1]),
+            "per-session param versions must be monotone: {vs:?}"
+        );
+        assert!(*vs.last().unwrap() <= new_version);
+    }
+    // The swap happened mid-stream for wave A...
+    assert!(
+        a_versions.iter().any(|vs| vs.first() == Some(&0)),
+        "some wave A session must have started on version 0"
+    );
+    // ...and wave B, connected after the publish, never sees the old one.
+    for vs in &b_versions {
+        assert!(
+            vs.iter().all(|&v| v == new_version),
+            "post-swap sessions must only see version {new_version}: {vs:?}"
+        );
+    }
+}
+
+#[test]
+fn serve_run_completes_every_session_end_to_end() {
+    let cfg = ServeConfig {
+        sessions: 4,
+        steps: 5,
+        swap_every: 0, // no swapper: the report's swap count is deterministic
+        ..ServeConfig::default()
+    };
+    let report = podracer::serve::run(&artifacts(), &cfg).unwrap();
+    assert_eq!(report.sessions, 4);
+    assert_eq!(report.completed, 4);
+    assert_eq!(report.admitted, 4);
+    assert_eq!(report.requests, 20); // zero drops
+    assert_eq!(report.swaps, 0);
+    assert!(report.rps > 0.0);
+    assert!(report.p50_ms >= 0.0 && report.p50_ms.is_finite());
+    assert!(report.p99_ms >= report.p50_ms && report.p99_ms.is_finite());
+    let line = report.summary("seb_catch");
+    assert!(line.contains("sessions=4/4"), "{line}");
+    assert!(line.contains("requests=20"), "{line}");
+}
+
+fn args(argv: &[&str]) -> Args {
+    Args::parse(argv.iter().map(|s| s.to_string()))
+}
+
+#[test]
+fn serve_flags_parse_and_misuse_is_a_hard_error() {
+    let cfg = serve_from_args(&args(&[
+        "serve",
+        "--sessions",
+        "3",
+        "--steps",
+        "7",
+        "--swap-every",
+        "0",
+    ]))
+    .unwrap();
+    assert_eq!(cfg.sessions, 3);
+    assert_eq!(cfg.steps, 7);
+    assert_eq!(cfg.swap_every, 0);
+    assert_eq!(cfg.batch, ServeConfig::default().batch);
+
+    let err = serve_from_args(&args(&["serve", "--bogus", "1"]))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown flag --bogus"), "{err}");
+    assert!(err.contains("serve"), "{err}");
+
+    let err = serve_from_args(&args(&["serve", "--env", "nope"]))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("nope"), "{err}");
+
+    let err = serve_from_args(&args(&["serve", "--batch", "0"]))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("--batch must be >= 1"), "{err}");
+}

@@ -8,20 +8,24 @@ Pipeline (wired up by `make bench-smoke` and `.github/workflows/ci.yml`):
 1. The smoke benches run under ``PODRACER_BENCH_FAST=1`` and dump JSON into
    ``bench_results/`` (``benchkit::Bench::dump_json`` plus the fig4a series
    file).
-2. ``bench_gate.py --emit`` distills them into two suite files at the repo
+2. ``bench_gate.py --emit`` distills them into per-suite files at the repo
    root — ``BENCH_anakin.json`` (fig4a scaling + the threaded-vs-serial
-   driver speedup, DESIGN.md §10) and ``BENCH_sebulba.json`` (the learner
-   pipeline and pipeline-stages ablations) — which CI uploads as artifacts.
+   driver speedup, DESIGN.md §10), ``BENCH_sebulba.json`` (the learner
+   pipeline and pipeline-stages ablations) and ``BENCH_serve.json`` (the
+   serving frontend's rps/p99 sweep, DESIGN.md §14) — which CI uploads as
+   artifacts.
 3. ``--check`` compares every baseline case in ``bench_baselines/`` against
-   the current value: the gate fails if ``current < TOLERANCE * baseline``
-   (sps dropping more than 30%), or if a baselined case disappeared.
+   the current value. Most case values are throughputs (steps/s, projected
+   fps, req/s) or ratios — larger is better, and the gate fails if
+   ``current < TOLERANCE * baseline``. Cases whose name contains ``_ms``
+   are latencies — smaller is better, and the gate fails the mirrored way:
+   ``current > baseline / TOLERANCE``. Either direction, a baselined case
+   disappearing is a failure.
 4. ``--write-baseline`` regenerates the committed baselines from the
    current run (``make bench-baseline``). Baselines shipped with
-   ``"bootstrap": true`` are conservative floors checked the same way —
-   regenerate them on the reference machine to give the gate real teeth.
-
-Case values are throughputs (steps/s, projected fps) or ratios — larger is
-always better, which is what makes the one-sided tolerance sound.
+   ``"bootstrap": true`` are conservative floors/ceilings checked the same
+   way — regenerate them on the reference machine to give the gate real
+   teeth.
 """
 from __future__ import annotations
 
@@ -37,7 +41,7 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 RESULTS_DIR = os.path.join(REPO_ROOT, "bench_results")
 BASELINE_DIR = os.path.join(REPO_ROOT, "bench_baselines")
 
-SUITES = ("anakin", "sebulba")
+SUITES = ("anakin", "sebulba", "serve")
 
 
 def _load_json(path):
@@ -105,6 +109,19 @@ def collect():
             if fps > 0.0:
                 suites["sebulba"][f"fig4b_fps_batch_{int(batch)}"] = float(fps)
 
+    # serve sweep (ISSUE 7): request throughput gates the continuous-batching
+    # hot path; p99 (an ``_ms`` case, smaller-is-better) gates queueing and
+    # hot-swap latency creep.
+    serve_path = os.path.join(RESULTS_DIR, "serve_series.json")
+    if os.path.exists(serve_path):
+        series = _load_json(serve_path)
+        for sessions, rps in zip(series.get("sessions", []), series.get("rps", [])):
+            if rps > 0.0:
+                suites["serve"][f"serve_rps_sessions_{int(sessions)}"] = float(rps)
+        for sessions, p99 in zip(series.get("sessions", []), series.get("p99_ms", [])):
+            if p99 > 0.0:
+                suites["serve"][f"serve_p99_ms_sessions_{int(sessions)}"] = float(p99)
+
     dumps = _bench_dumps()
     suites["sebulba"].update(
         _ablation_cases(dumps, "ablation: learner pipeline", "")
@@ -169,23 +186,35 @@ def check(suites):
             if cur is None:
                 failures.append(f"{suite}/{name}: case missing from the current run")
                 continue
-            floor = TOLERANCE * float(base_value)
-            status = "ok" if cur >= floor else "FAIL"
-            note = " (bootstrap floor)" if bootstrap else ""
-            print(f"[bench-gate] {suite}/{name}: current={cur:.2f} "
-                  f"baseline={base_value:.2f} floor={floor:.2f} -> {status}{note}")
-            if cur < floor:
-                failures.append(
-                    f"{suite}/{name}: {cur:.2f} < {floor:.2f} "
-                    f"(= {TOLERANCE:.0%} of baseline {base_value:.2f})"
-                )
+            note = " (bootstrap)" if bootstrap else ""
+            if "_ms" in name:
+                # latency case: smaller is better, gate on a ceiling
+                ceiling = float(base_value) / TOLERANCE
+                status = "ok" if cur <= ceiling else "FAIL"
+                print(f"[bench-gate] {suite}/{name}: current={cur:.2f} "
+                      f"baseline={base_value:.2f} ceiling={ceiling:.2f} -> {status}{note}")
+                if cur > ceiling:
+                    failures.append(
+                        f"{suite}/{name}: {cur:.2f} > {ceiling:.2f} "
+                        f"(= baseline {base_value:.2f} / {TOLERANCE:.0%})"
+                    )
+            else:
+                floor = TOLERANCE * float(base_value)
+                status = "ok" if cur >= floor else "FAIL"
+                print(f"[bench-gate] {suite}/{name}: current={cur:.2f} "
+                      f"baseline={base_value:.2f} floor={floor:.2f} -> {status}{note}")
+                if cur < floor:
+                    failures.append(
+                        f"{suite}/{name}: {cur:.2f} < {floor:.2f} "
+                        f"(= {TOLERANCE:.0%} of baseline {base_value:.2f})"
+                    )
     if failures:
         print(f"\n[bench-gate] FAILED {len(failures)} of {checked} checks:")
         for f in failures:
             print(f"  - {f}")
         return 1
     print(f"\n[bench-gate] all {checked} checks passed "
-          f"(tolerance: current >= {TOLERANCE:.0%} of baseline)")
+          f"(tolerance {TOLERANCE:.0%}: throughput floors, _ms ceilings)")
     return 0
 
 

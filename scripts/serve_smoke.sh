@@ -1,0 +1,91 @@
+#!/usr/bin/env bash
+# Serve smoke (ISSUE 7): drive the policy-serving frontend through the
+# shipped CLI. Positive case: a `podracer serve` run must complete every
+# session (the zero-drop invariant: sessions=N/N and requests=N*steps in
+# the summary line) and report finite request percentiles. Negative cases:
+# flag misuse — unknown flags, unknown env values, zero-sized knobs — must
+# exit nonzero with a diagnostic, same hard-error contract as training
+# subcommands (DESIGN.md §12/§14).
+#
+# Wired into CI next to cli-smoke/restore-smoke; run locally with
+# `make serve-smoke`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${PODRACER_BIN:-target/release/podracer}
+if [[ ! -x "$BIN" ]]; then
+    echo "[serve-smoke] $BIN missing — run 'cargo build --release' first" >&2
+    exit 1
+fi
+
+TMP=$(mktemp -d "${TMPDIR:-/tmp}/podracer_serve_smoke.XXXXXX")
+trap 'rm -rf "$TMP"' EXIT
+
+fail=0
+
+run_serve() {
+    local desc="$1" sessions="$2" steps="$3"
+    shift 3
+    echo "== podracer serve --sessions $sessions --steps $steps $* =="
+    if ! "$BIN" serve --sessions "$sessions" --steps "$steps" "$@" > "$TMP/out.log" 2>&1; then
+        cat "$TMP/out.log"
+        echo "[serve-smoke] FAILED ($desc): nonzero exit" >&2
+        fail=1
+        return
+    fi
+    head -n 1 "$TMP/out.log"
+    # zero drops: every session completed, every request answered
+    if ! grep -Eq "sessions=$sessions/$sessions" "$TMP/out.log"; then
+        cat "$TMP/out.log"
+        echo "[serve-smoke] FAILED ($desc): not every session completed" >&2
+        fail=1
+    fi
+    if ! grep -Eq "requests=$((sessions * steps))\b" "$TMP/out.log"; then
+        cat "$TMP/out.log"
+        echo "[serve-smoke] FAILED ($desc): dropped requests" >&2
+        fail=1
+    fi
+    # percentiles must be real numbers, not NaN/inf placeholders
+    if ! grep -Eq 'p99_ms=[0-9]+\.[0-9]+' "$TMP/out.log"; then
+        cat "$TMP/out.log"
+        echo "[serve-smoke] FAILED ($desc): p99 not finite" >&2
+        fail=1
+    fi
+}
+
+expect_error() {
+    local desc="$1"
+    shift
+    echo "== podracer $* (must fail) =="
+    if "$BIN" "$@" > "$TMP/out.log" 2>&1; then
+        cat "$TMP/out.log"
+        echo "[serve-smoke] FAILED ($desc): expected nonzero exit" >&2
+        fail=1
+        return
+    fi
+    head -n 2 "$TMP/out.log"
+}
+
+# --- positive: continuous batching + hot swaps through the CLI ---------------
+# sessions > queue would make Busy retries part of the run; keep them equal
+# here so the accounting is exact. --swap-every 20 keeps the hot-swap path
+# in the loop (8 sessions x 40 steps = 320 requests, ~16 swaps).
+run_serve "catch serve" 8 40 --agent seb_catch --env catch --batch 8 --queue 8 --swap-every 20
+
+# a second geometry: more sessions than slots, so admission queueing and
+# the retire/admit cycle are exercised from the shell too
+run_serve "oversubscribed" 16 10 --agent seb_catch --env catch --batch 8 --queue 16 --swap-every 0
+
+# --- negative: flag misuse is a hard error ------------------------------------
+expect_error "unknown flag"   serve --bogus 1
+expect_error "unknown env"    serve --env nosuchenv
+expect_error "zero batch"     serve --batch 0
+expect_error "zero steps"     serve --steps 0
+expect_error "zero sessions"  serve --sessions 0
+expect_error "unlowered batch" serve --batch 7
+
+if [[ "$fail" -ne 0 ]]; then
+    echo "[serve-smoke] FAILURES above" >&2
+    exit 1
+fi
+echo "[serve-smoke] all cases passed"
