@@ -8,7 +8,8 @@ SMOKE_BENCHES := fig4a_anakin_scaling ablation_learner_pipeline ablation_pipelin
                  fig4b_actor_batch serve_continuous_batching
 
 .PHONY: all artifacts build test quickstart bench bench-learner-pipeline \
-        bench-smoke bench-baseline cli-smoke restore-smoke serve-smoke fmt clippy
+        bench-smoke bench-baseline cli-smoke restore-smoke serve-smoke dist-smoke \
+        fmt clippy
 
 all: artifacts build
 
@@ -68,6 +69,15 @@ restore-smoke: build
 # cli-smoke and restore-smoke.
 serve-smoke: build
 	bash scripts/serve_smoke.sh
+
+# Dist smoke (ISSUE 8): multi-pod Sebulba as separate processes — one
+# learner pod + two actor pods over loopback TCP complete one update, a
+# dial to a dead port fails fast with the typed diagnostic, a killed actor
+# pod surfaces as a learner-side hard error, and inconsistent role/address
+# flags are rejected (scripts/dist_smoke.sh). Runs in CI next to the other
+# smokes.
+dist-smoke: build
+	bash scripts/dist_smoke.sh
 
 # Regenerate the committed baselines from a smoke run on this machine
 # (same PODRACER_BENCH_FAST=1 conditions CI compares under).

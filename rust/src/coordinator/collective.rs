@@ -119,9 +119,15 @@ impl TensorBus {
         self.n
     }
 
+    /// Shut the bus down: every parked participant wakes with an error and
+    /// every later entrant bails at the gate. Flag and notify happen under
+    /// one held guard, exactly like [`Self::poison`] — the pre-fix code
+    /// dropped the lock between the two, leaving a window where a
+    /// concurrent `all_reduce` could enter its round against a bus that
+    /// was already going down.
     pub fn shutdown(&self) {
-        self.state.lock().unwrap().shutdown = true;
-        self.cv.notify_all();
+        let mut g = self.state.lock().unwrap();
+        self.poison(&mut g);
     }
 
     /// Poison under the lock: a protocol violation must not leave siblings
@@ -147,7 +153,16 @@ impl TensorBus {
             bail!("participant {id} out of range {}", self.n);
         }
         if self.n == 1 {
-            // fast path: single participant, every op is the identity
+            // Fast path: single participant, every op is the identity —
+            // but round entry is still gated on the shutdown flag under
+            // the round lock. The pre-fix code skipped the lock entirely,
+            // so a single-replica learner racing `shutdown()` would keep
+            // reducing on a bus that was already down instead of
+            // observing it (the shutdown discipline every n >= 2
+            // participant gets at the entry gate below).
+            if self.state.lock().unwrap().shutdown {
+                bail!("tensor bus shut down");
+            }
             return match payload {
                 Some(buf) => Ok(buf),
                 None => bail!("broadcast round had no root"),
@@ -455,5 +470,59 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(20));
         bus.shutdown();
         assert!(t.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn bus_shutdown_races_round_entry_without_stranding_anyone() {
+        // Regression (ISSUE 8): `shutdown()` used to set the flag and drop
+        // the round lock *before* notifying, racing participants entering
+        // their round — and the n == 1 fast path never looked at the flag
+        // at all. Hammer both: participants loop rounds while shutdown
+        // lands at a random point; every call must return (a valid mean or
+        // the shutdown error), nobody may be left parked, and nothing may
+        // succeed once a sibling has observed the shutdown error and the
+        // round after it drained.
+        for trial in 0..20 {
+            let bus = Arc::new(GradientBus::new(2));
+            let mut handles = Vec::new();
+            for id in 0..2 {
+                let bus = bus.clone();
+                handles.push(std::thread::spawn(move || {
+                    let mut completed = 0u64;
+                    loop {
+                        match bus.all_reduce(id, vec![completed as f32]) {
+                            Ok(_) => completed += 1,
+                            Err(_) => return completed,
+                        }
+                    }
+                }));
+            }
+            // land the shutdown at a varying point in the round schedule
+            std::thread::sleep(std::time::Duration::from_micros(50 * trial));
+            bus.shutdown();
+            let counts: Vec<u64> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            // both sides ran the same totally-ordered round schedule, so
+            // their completed-round counts differ by at most the one round
+            // in flight when the shutdown landed
+            assert!(
+                counts[0].abs_diff(counts[1]) <= 1,
+                "trial {trial}: round counts diverged: {counts:?}"
+            );
+            // and a late entrant on the drained bus observes the shutdown
+            assert!(bus.all_reduce(0, vec![0.0]).is_err());
+        }
+    }
+
+    #[test]
+    fn bus_single_participant_observes_shutdown() {
+        // The n == 1 fast path is gated on the shutdown flag too: a
+        // single-replica learner must stop at its next collective instead
+        // of reducing forever on a bus its pod already tore down.
+        let bus = GradientBus::new(1);
+        assert!(bus.all_reduce(0, vec![1.0]).is_ok());
+        bus.shutdown();
+        assert!(bus.all_reduce(0, vec![1.0]).is_err());
+        assert!(bus.broadcast(0, Some(vec![1.0])).is_err());
     }
 }

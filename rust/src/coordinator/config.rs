@@ -9,7 +9,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::experiment::{EnvKind, Topology};
+use crate::experiment::{EnvKind, Topology, ONE_POD};
 
 use super::sebulba::Sebulba;
 
@@ -112,6 +112,7 @@ impl SebulbaConfig {
             learner_pipeline: self.learner_pipeline,
             env_workers: self.env_workers,
             queue_capacity: self.queue_capacity,
+            pods: ONE_POD,
         }
     }
 

@@ -17,7 +17,8 @@
 //! params as if they were fresh.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 #[derive(Debug)]
 pub struct ParamSnapshot {
@@ -32,6 +33,13 @@ pub struct ParamStore {
     /// snapshot is installed), read lock-free: `version()` may briefly lag
     /// `latest().version` during a publish, but can never run ahead of it.
     version: AtomicU64,
+    /// Publish signal for [`Self::wait_newer`] subscribers (the wire
+    /// publisher thread, DESIGN.md §15): a mirror of the installed version
+    /// guarded by a plain mutex so it can pair with a condvar. Updated
+    /// *after* the snapshot is installed, so a woken waiter always finds
+    /// the new snapshot via `latest_if_newer`.
+    signal: Mutex<u64>,
+    published: Condvar,
 }
 
 impl ParamStore {
@@ -51,6 +59,8 @@ impl ParamStore {
                 params: Arc::new(initial),
             })),
             version: AtomicU64::new(version),
+            signal: Mutex::new(version),
+            published: Condvar::new(),
         }
     }
 
@@ -98,7 +108,64 @@ impl ParamStore {
         let v = self.version.load(Ordering::Relaxed) + 1;
         *g = Arc::new(ParamSnapshot { version: v, params });
         self.version.store(v, Ordering::Release);
+        drop(g);
+        self.notify(v);
         v
+    }
+
+    /// Install a snapshot that already carries its version — the wire
+    /// subscriber path (DESIGN.md §15): an actor pod's replica store adopts
+    /// the versions the learner pod assigned, rather than drawing its own.
+    /// Stale or duplicate deliveries are ignored (returns `false`), so
+    /// out-of-order frames can never move the store backwards and
+    /// `latest().version` stays monotonic.
+    pub fn install(&self, params: Vec<f32>, version: u64) -> bool {
+        let mut g = self.current.write().unwrap();
+        if version <= g.version {
+            return false;
+        }
+        *g = Arc::new(ParamSnapshot { version, params: Arc::new(params) });
+        self.version.store(version, Ordering::Release);
+        drop(g);
+        self.notify(version);
+        true
+    }
+
+    fn notify(&self, version: u64) {
+        let mut s = self.signal.lock().unwrap();
+        // publish_shared and install serialize on the write lock, but the
+        // signal mutex is taken after dropping it — keep the mirror
+        // monotonic if two notifiers race here.
+        if version > *s {
+            *s = version;
+        }
+        self.published.notify_all();
+    }
+
+    /// Block until a version newer than `seen` is published, or `timeout`
+    /// elapses (`None`). The pub/sub primitive under the wire publisher:
+    /// `wait_newer` + broadcast on the learner pod is exactly
+    /// `latest_if_newer` with the polling replaced by a condvar.
+    pub fn wait_newer(&self, seen: u64, timeout: Duration) -> Option<Arc<ParamSnapshot>> {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.signal.lock().unwrap();
+        loop {
+            if *s > seen {
+                drop(s);
+                // the mirror only advances after installation, so this
+                // always observes a snapshot newer than `seen`
+                return self.latest_if_newer(seen);
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return None;
+            }
+            let (g, res) = self.published.wait_timeout(s, left).unwrap();
+            s = g;
+            if res.timed_out() && *s <= seen {
+                return None;
+            }
+        }
     }
 }
 
@@ -216,6 +283,45 @@ mod tests {
         assert_eq!(restored.latest().version, 2);
         assert_eq!(restored.latest().params[0], 3.0);
         assert_eq!(restored.publish(vec![4.0; 4]), 3);
+    }
+
+    #[test]
+    fn install_adopts_wire_versions_and_ignores_stale_ones() {
+        let store = ParamStore::new(vec![0.0]);
+        assert!(store.install(vec![5.0], 5));
+        assert_eq!(store.latest().version, 5);
+        assert_eq!(store.latest().params[0], 5.0);
+        // duplicate and out-of-order deliveries cannot move it backwards
+        assert!(!store.install(vec![3.0], 3));
+        assert!(!store.install(vec![5.5], 5));
+        assert_eq!(store.latest().params[0], 5.0);
+        // the next local publish continues from the adopted version
+        assert_eq!(store.publish(vec![6.0]), 6);
+        // and latest_if_newer sees installs like any publish
+        assert!(store.install(vec![9.0], 9));
+        assert_eq!(store.latest_if_newer(6).unwrap().version, 9);
+        assert!(store.latest_if_newer(9).is_none());
+    }
+
+    #[test]
+    fn wait_newer_wakes_on_publish_and_times_out_when_idle() {
+        let store = Arc::new(ParamStore::new(vec![0.0]));
+        // idle: no publish -> None after the timeout
+        assert!(store.wait_newer(0, Duration::from_millis(10)).is_none());
+        // already newer: returns without blocking
+        store.publish(vec![1.0]);
+        let snap = store.wait_newer(0, Duration::from_secs(5)).unwrap();
+        assert_eq!(snap.version, 1);
+        // blocked waiter is woken by a concurrent publish
+        let waiter = {
+            let s = store.clone();
+            std::thread::spawn(move || s.wait_newer(1, Duration::from_secs(5)))
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        store.install(vec![7.0], 7);
+        let snap = waiter.join().unwrap().expect("waiter should see the install");
+        assert_eq!(snap.version, 7);
+        assert_eq!(snap.params[0], 7.0);
     }
 
     #[test]

@@ -199,6 +199,14 @@ pub struct RunStats {
     /// post-overlap replica schedule, a critical-path candidate for
     /// `projected_sps` (DESIGN.md §10).
     pub anakin_busy_max_nanos: AtomicU64,
+    /// Multi-pod wire accounting (DESIGN.md §15): frames and bytes this
+    /// process put on / took off the transport, summed over connections.
+    /// Counts full wire frames (header + payload + CRC), so they match
+    /// what a network capture would see.
+    pub wire_tx_frames: AtomicU64,
+    pub wire_rx_frames: AtomicU64,
+    pub wire_tx_bytes: AtomicU64,
+    pub wire_rx_bytes: AtomicU64,
 }
 
 impl RunStats {
@@ -211,6 +219,18 @@ impl RunStats {
         self.staleness_sum.fetch_add(staleness, Ordering::Relaxed);
         self.last_loss_bits
             .store(loss.to_bits() as u64, Ordering::Relaxed);
+    }
+
+    /// One frame sent over the pod-to-pod transport (`n` = wire bytes).
+    pub fn record_wire_tx(&self, n: u64) {
+        self.wire_tx_frames.fetch_add(1, Ordering::Relaxed);
+        self.wire_tx_bytes.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// One frame received over the pod-to-pod transport (`n` = wire bytes).
+    pub fn record_wire_rx(&self, n: u64) {
+        self.wire_rx_frames.fetch_add(1, Ordering::Relaxed);
+        self.wire_rx_bytes.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn record_episodes(&self, n: u64, reward_sum: f64) {

@@ -53,12 +53,13 @@ use crate::coordinator::sebulba::Sebulba;
 use crate::runtime::Pod;
 use crate::search::muzero_run::MuZero;
 use crate::testkit::FaultPlan;
+use crate::transport::DistSebulba;
 use crate::util::cli::Args;
 
 pub use env_kind::EnvKind;
 pub use report::{ActorLearnerDetail, AnakinDetail, Detail, MetricRow, Report};
 pub use runner::{RunSpec, Runner};
-pub use topology::Topology;
+pub use topology::{PodRole, Topology, ONE_POD};
 
 /// The three Podracer architectures.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -107,6 +108,9 @@ impl FromStr for Arch {
 pub struct Experiment {
     arch: Arch,
     topo: Topology,
+    /// Which slice of the topology this process runs (DESIGN.md §15).
+    /// `Colocated` (the default) is the single-process experiment.
+    role: PodRole,
     artifacts: PathBuf,
     runner: Box<dyn Runner>,
     spec: RunSpec,
@@ -136,9 +140,16 @@ impl Experiment {
         &self.topo
     }
 
-    /// Build a pod sized for the topology and run to completion.
+    /// Which slice of the topology this process runs.
+    pub fn role(&self) -> PodRole {
+        self.role
+    }
+
+    /// Build a pod sized for this process's role and run to completion.
+    /// A colocated run allocates the whole topology; a learner or actor
+    /// pod allocates only its slice (DESIGN.md §15).
     pub fn run(&self) -> Result<Report> {
-        let mut pod = Pod::new(&self.artifacts, self.topo.total_cores())?;
+        let mut pod = Pod::new(&self.artifacts, self.topo.cores_for_role(self.role))?;
         self.runner.run_checkpointed(&mut pod, &self.topo, &self.spec)
     }
 
@@ -177,6 +188,9 @@ pub struct ExperimentBuilder {
     checkpoint_path: Option<PathBuf>,
     restore_from: Option<PathBuf>,
     fault: Option<FaultPlan>,
+    role: Option<PodRole>,
+    listen: Option<String>,
+    connect: Option<String>,
 }
 
 impl ExperimentBuilder {
@@ -202,6 +216,9 @@ impl ExperimentBuilder {
             checkpoint_path: None,
             restore_from: None,
             fault: None,
+            role: None,
+            listen: None,
+            connect: None,
         }
     }
 
@@ -329,6 +346,28 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Which slice of a multi-pod topology this process runs (Sebulba
+    /// only). `Learner` requires [`Self::listen`]; `Actor` requires
+    /// [`Self::connect`]; the default `Colocated` is the single-process
+    /// experiment (DESIGN.md §15).
+    pub fn role(mut self, role: PodRole) -> Self {
+        self.role = Some(role);
+        self
+    }
+
+    /// Address the learner pod binds for actor-pod connections, e.g.
+    /// `127.0.0.1:7777` (`0` picks a free port).
+    pub fn listen(mut self, addr: &str) -> Self {
+        self.listen = Some(addr.to_string());
+        self
+    }
+
+    /// Learner-pod address an actor pod dials, e.g. `127.0.0.1:7777`.
+    pub fn connect(mut self, addr: &str) -> Self {
+        self.connect = Some(addr.to_string());
+        self
+    }
+
     /// Reject knobs that were set but mean nothing for `arch`.
     fn reject_inapplicable(&self, knobs: &[(&str, bool)]) -> Result<()> {
         for (name, set) in knobs {
@@ -367,6 +406,7 @@ impl ExperimentBuilder {
             restore_from: self.restore_from.clone(),
             fault: self.fault.clone(),
         };
+        let role = self.role.unwrap_or_default();
         let (topo, runner): (Topology, Box<dyn Runner>) = match arch {
             Arch::Anakin => {
                 self.reject_inapplicable(&[
@@ -378,6 +418,9 @@ impl ExperimentBuilder {
                     ("copy_path", self.copy_path.is_some()),
                     ("num_simulations", self.num_simulations.is_some()),
                     ("warm_start", self.warm_start.is_some()),
+                    ("role", self.role.is_some()),
+                    ("listen", self.listen.is_some()),
+                    ("connect", self.connect.is_some()),
                 ])?;
                 let defaults = Anakin::default();
                 let topo = self.topo.unwrap_or_else(|| Topology::anakin(2));
@@ -390,6 +433,9 @@ impl ExperimentBuilder {
                 };
                 Anakin::check_topology(&topo)?;
                 topo.validate()?;
+                if topo.pods.get() > 1 {
+                    bail!("the anakin architecture is single-pod; --pods applies to sebulba only");
+                }
                 (topo, Box::new(runner))
             }
             Arch::Sebulba => {
@@ -413,7 +459,72 @@ impl ExperimentBuilder {
                     warm_start: self.warm_start,
                 };
                 runner.resolved(&topo).validate()?;
-                (topo, Box::new(runner))
+                let runner: Box<dyn Runner> = match role {
+                    PodRole::Colocated => {
+                        if self.listen.is_some() || self.connect.is_some() {
+                            bail!(
+                                "`listen`/`connect` need a distributed role; add \
+                                 `--role learner` or `--role actor`"
+                            );
+                        }
+                        if topo.pods.get() > 1 {
+                            bail!(
+                                "pods = {} but role = colocated; a multi-pod topology \
+                                 needs `--role learner` (one process) and `--role actor` \
+                                 (the others)",
+                                topo.pods
+                            );
+                        }
+                        Box::new(runner)
+                    }
+                    PodRole::Learner => {
+                        if self.connect.is_some() {
+                            bail!("the learner role listens; `connect` is for actor pods");
+                        }
+                        let listen = match &self.listen {
+                            Some(addr) => addr.clone(),
+                            None => bail!("role = learner requires a `listen` address"),
+                        };
+                        if topo.pods.get() < 2 {
+                            bail!(
+                                "a distributed role needs pods >= 2 (1 learner + N actor \
+                                 pods), got pods = {}",
+                                topo.pods
+                            );
+                        }
+                        if !spec.is_plain() {
+                            bail!(
+                                "distributed runs do not support checkpoint/restore/fault \
+                                 injection yet"
+                            );
+                        }
+                        Box::new(DistSebulba::learner(runner, &listen, topo.pods.get() - 1))
+                    }
+                    PodRole::Actor => {
+                        if self.listen.is_some() {
+                            bail!("the actor role dials out; `listen` is for the learner pod");
+                        }
+                        let connect = match &self.connect {
+                            Some(addr) => addr.clone(),
+                            None => bail!("role = actor requires a `connect` address"),
+                        };
+                        if topo.pods.get() < 2 {
+                            bail!(
+                                "a distributed role needs pods >= 2 (1 learner + N actor \
+                                 pods), got pods = {}",
+                                topo.pods
+                            );
+                        }
+                        if !spec.is_plain() {
+                            bail!(
+                                "distributed runs do not support checkpoint/restore/fault \
+                                 injection yet"
+                            );
+                        }
+                        Box::new(DistSebulba::actor(runner, &connect))
+                    }
+                };
+                (topo, runner)
             }
             Arch::MuZero => {
                 self.reject_inapplicable(&[
@@ -424,6 +535,9 @@ impl ExperimentBuilder {
                     ("micro_batches", self.micro_batches.is_some()),
                     ("copy_path", self.copy_path.is_some()),
                     ("warm_start", self.warm_start.is_some()),
+                    ("role", self.role.is_some()),
+                    ("listen", self.listen.is_some()),
+                    ("connect", self.connect.is_some()),
                 ])?;
                 let defaults = MuZero::default();
                 let topo = self.topo.unwrap_or_else(|| Topology {
@@ -446,15 +560,33 @@ impl ExperimentBuilder {
                 topo.validate()?;
                 MuZero::check_topology(&topo)?;
                 runner.resolved(&topo).validate()?;
+                if topo.pods.get() > 1 {
+                    bail!("the muzero architecture is single-pod; --pods applies to sebulba only");
+                }
                 (topo, Box::new(runner))
             }
         };
-        Ok(Experiment { arch, topo, artifacts, runner, spec })
+        Ok(Experiment { arch, topo, role, artifacts, runner, spec })
     }
 }
 
 mod from_args {
+    use std::num::NonZeroUsize;
+
     use super::*;
+
+    /// Parse `--listen`/`--connect`: a bare flag (which the CLI layer
+    /// renders as the value `"true"`) is a hard error, never a default.
+    fn addr_flag(args: &Args, key: &str) -> Result<Option<String>> {
+        if !args.has(key) {
+            return Ok(None);
+        }
+        let addr = args.get_str(key, "");
+        if addr.is_empty() || addr == "true" {
+            bail!("--{key} expects an address like 127.0.0.1:7777");
+        }
+        Ok(Some(addr))
+    }
 
     const ANAKIN_FLAGS: &[&str] = &[
         "agent",
@@ -488,6 +620,10 @@ mod from_args {
         "checkpoint-every",
         "checkpoint-path",
         "restore",
+        "pods",
+        "role",
+        "listen",
+        "connect",
     ];
     const MUZERO_FLAGS: &[&str] = &[
         "agent",
@@ -573,7 +709,9 @@ mod from_args {
                     "copy" => true,
                     other => bail!("--data-path expects arena|copy, got {other:?}"),
                 };
-                let b = Experiment::new(arch)
+                let pods = NonZeroUsize::new(args.get_usize("pods", 1)?)
+                    .ok_or_else(|| anyhow::anyhow!("--pods expects a positive pod count"))?;
+                let mut b = Experiment::new(arch)
                     .agent(&args.get_str("agent", "seb_catch"))
                     .env(parse_flag(args, "env", "catch")?)
                     .topology(Topology {
@@ -585,6 +723,7 @@ mod from_args {
                         learner_pipeline: args.get_usize("learner-pipeline", 2)?,
                         env_workers: args.get_usize("env-workers", 2)?,
                         queue_capacity: args.get_usize("queue", 4)?,
+                        pods,
                     })
                     .actor_batch(args.get_usize("batch", 32)?)
                     .unroll(args.get_usize("unroll", 20)?)
@@ -593,6 +732,15 @@ mod from_args {
                     .copy_path(copy_path)
                     .updates(args.get_u64("updates", 100)?)
                     .seed(args.get_u64("seed", 42)?);
+                if args.has("role") {
+                    b = b.role(parse_flag(args, "role", "colocated")?);
+                }
+                if let Some(addr) = addr_flag(args, "listen")? {
+                    b = b.listen(&addr);
+                }
+                if let Some(addr) = addr_flag(args, "connect")? {
+                    b = b.connect(&addr);
+                }
                 apply_elasticity(b, args)?.build()
             }
             Arch::MuZero => {
@@ -609,6 +757,7 @@ mod from_args {
                         learner_pipeline: args.get_usize("learner-pipeline", 1)?,
                         env_workers: args.get_usize("env-workers", 2)?,
                         queue_capacity: args.get_usize("queue", 4)?,
+                        pods: ONE_POD,
                     })
                     .num_simulations(args.get_usize("simulations", 16)?)
                     .discount(args.get_f64("discount", 0.997)? as f32)
@@ -632,23 +781,29 @@ mod from_args {
     ];
 
     /// `podracer serve` flag parsing: same hard-error discipline as the
-    /// training archs (unknown flags and unparseable values exit nonzero),
-    /// but targets a [`crate::serve::ServeConfig`] — serving has sessions
-    /// and an admission queue where training has a topology.
+    /// training archs (unknown flags and unparseable values exit nonzero)
+    /// and the same construction shape — a workload half
+    /// ([`crate::serve::Serve`]) resolved against a core-split half
+    /// ([`Topology`]), exactly like `Sebulba::resolved`/`MuZero::resolved`
+    /// in [`ExperimentBuilder::build`].
     pub(super) fn build_serve(args: &Args) -> Result<crate::serve::ServeConfig> {
         check_flags("serve", args, SERVE_FLAGS)?;
         let defaults = crate::serve::ServeConfig::default();
-        let cfg = crate::serve::ServeConfig {
+        let topo = Topology {
+            pipeline_stages: args.get_usize("pipeline-stages", defaults.pipeline_stages)?,
+            queue_capacity: args.get_usize("queue", defaults.queue)?,
+            ..defaults.topology()
+        };
+        let runner = crate::serve::Serve {
             agent: args.get_str("agent", &defaults.agent),
             env: parse_flag(args, "env", defaults.env.as_str())?,
             batch: args.get_usize("batch", defaults.batch)?,
-            pipeline_stages: args.get_usize("pipeline-stages", defaults.pipeline_stages)?,
-            queue: args.get_usize("queue", defaults.queue)?,
             sessions: args.get_usize("sessions", defaults.sessions)?,
             steps: args.get_usize("steps", defaults.steps)?,
             swap_every: args.get_u64("swap-every", defaults.swap_every)?,
             seed: args.get_u64("seed", defaults.seed)?,
         };
+        let cfg = runner.resolved(&topo);
         cfg.validate()?;
         Ok(cfg)
     }
@@ -808,6 +963,100 @@ mod tests {
                      "--restore", "old.ckpt"]),
         )
         .unwrap();
+    }
+
+    #[test]
+    fn distributed_flags_build_learner_and_actor_roles() {
+        let exp = Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--pods", "2", "--role", "learner", "--listen", "127.0.0.1:0"]),
+        )
+        .unwrap();
+        assert_eq!(exp.role(), PodRole::Learner);
+        assert_eq!(exp.topology().pods.get(), 2);
+        let exp = Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--pods", "3", "--role", "actor", "--connect", "127.0.0.1:7777"]),
+        )
+        .unwrap();
+        assert_eq!(exp.role(), PodRole::Actor);
+        // the default is a colocated single-pod run
+        let exp = Experiment::from_args(Arch::Sebulba, &parse(&[])).unwrap();
+        assert_eq!(exp.role(), PodRole::Colocated);
+        assert_eq!(exp.topology().pods, ONE_POD);
+    }
+
+    #[test]
+    fn distributed_flags_reject_inconsistent_combinations() {
+        // pods = 0 is unrepresentable, and the CLI says so
+        let err = Experiment::from_args(Arch::Sebulba, &parse(&["--pods", "0"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--pods"), "{err}");
+        // a connect address without the actor role is a config bug
+        assert!(Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--connect", "127.0.0.1:7777"])
+        )
+        .is_err());
+        // bare --listen / --connect never default silently
+        assert!(Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--pods", "2", "--role", "learner", "--listen"])
+        )
+        .is_err());
+        assert!(Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--pods", "2", "--role", "actor", "--connect"])
+        )
+        .is_err());
+        // a role without its address, or with the wrong one, is rejected
+        assert!(Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--pods", "2", "--role", "learner"])
+        )
+        .is_err());
+        assert!(Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--pods", "2", "--role", "actor", "--listen", "127.0.0.1:0"])
+        )
+        .is_err());
+        // a distributed role on a single-pod topology makes no sense
+        assert!(Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--role", "learner", "--listen", "127.0.0.1:0"])
+        )
+        .is_err());
+        // multi-pod topologies need an explicit role
+        let err = Experiment::from_args(Arch::Sebulba, &parse(&["--pods", "2"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("role"), "{err}");
+        // unknown role values are parse errors
+        assert!(Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--pods", "2", "--role", "observer"])
+        )
+        .is_err());
+        // distributed runs exclude the elastic-pod machinery for now
+        assert!(Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--pods", "2", "--role", "learner", "--listen", "127.0.0.1:0",
+                     "--checkpoint-every", "2"])
+        )
+        .is_err());
+        // the other architectures reject multi-pod flags outright
+        assert!(Experiment::from_args(Arch::Anakin, &parse(&["--pods", "2"])).is_err());
+        assert!(Experiment::from_args(Arch::MuZero, &parse(&["--pods", "2"])).is_err());
+        assert!(Experiment::new(Arch::Anakin).role(PodRole::Learner).build().is_err());
+        assert!(Experiment::new(Arch::MuZero).listen("127.0.0.1:0").build().is_err());
+        // builder-level guard matches the CLI one
+        assert!(Experiment::new(Arch::Sebulba).connect("127.0.0.1:7777").build().is_err());
+        assert!(Experiment::new(Arch::Sebulba)
+            .topology(Topology { pods: std::num::NonZeroUsize::new(2).unwrap(),
+                                 ..Topology::default() })
+            .build()
+            .is_err());
     }
 
     #[test]

@@ -13,7 +13,56 @@
 //! build/run time (`Anakin::check_topology`, `MuZero::check_topology`) —
 //! never silently dropped.
 
+use std::fmt;
+use std::num::NonZeroUsize;
+use std::str::FromStr;
+
 use anyhow::{bail, Result};
+
+/// Which half of a (possibly multi-pod) experiment a process runs
+/// (DESIGN.md §15). Single-process runs are `Colocated` — the historical
+/// behaviour and the default. Distributed Sebulba splits one experiment
+/// into a `Learner` pod plus `pods - 1` `Actor` pods connected over the
+/// transport seam.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum PodRole {
+    /// Actors and learners in one process (the in-memory coordinator).
+    #[default]
+    Colocated,
+    /// This process owns the learner cores: listens, learns, publishes.
+    Learner,
+    /// This process owns actor cores: connects, acts, ships trajectories.
+    Actor,
+}
+
+impl PodRole {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PodRole::Colocated => "colocated",
+            PodRole::Learner => "learner",
+            PodRole::Actor => "actor",
+        }
+    }
+}
+
+impl fmt::Display for PodRole {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for PodRole {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "colocated" => Ok(PodRole::Colocated),
+            "learner" => Ok(PodRole::Learner),
+            "actor" => Ok(PodRole::Actor),
+            other => bail!("unknown pod role {other:?} (valid: colocated, learner, actor)"),
+        }
+    }
+}
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Topology {
@@ -39,7 +88,15 @@ pub struct Topology {
     pub env_workers: usize,
     /// Trajectory-queue capacity per replica (backpressure bound).
     pub queue_capacity: usize,
+    /// Processes the experiment spans: 1 = single-process (colocated, the
+    /// historical behaviour), N >= 2 = one learner pod + N-1 actor pods over
+    /// the transport seam (DESIGN.md §15). `NonZeroUsize` so "no pods" is
+    /// unrepresentable rather than a runtime check.
+    pub pods: NonZeroUsize,
 }
+
+/// The single-process pod count (1) — `pods`' default.
+pub const ONE_POD: NonZeroUsize = NonZeroUsize::MIN;
 
 impl Default for Topology {
     fn default() -> Self {
@@ -52,6 +109,7 @@ impl Default for Topology {
             learner_pipeline: 2,
             env_workers: 2,
             queue_capacity: 4,
+            pods: ONE_POD,
         }
     }
 }
@@ -70,6 +128,7 @@ impl Topology {
             learner_pipeline: 1,
             env_workers: 1,
             queue_capacity: 1,
+            pods: ONE_POD,
         }
     }
 
@@ -115,13 +174,34 @@ impl Topology {
     }
 
     /// [`Self::validate`] plus the pod bound: the split must fit the pod
-    /// it is about to run on.
+    /// it is about to run on. Single-process form — equivalent to
+    /// [`Self::validate_for_role`] with [`PodRole::Colocated`].
     pub fn validate_for_pod(&self, pod_cores: usize) -> Result<()> {
+        self.validate_for_role(PodRole::Colocated, pod_cores)
+    }
+
+    /// Cores one process needs when it plays `role` in this topology: a
+    /// colocated pod hosts everything, a learner pod only the learner
+    /// slice, an actor pod only one pod's actor slice.
+    pub fn cores_for_role(&self, role: PodRole) -> usize {
+        match role {
+            PodRole::Colocated => self.total_cores(),
+            PodRole::Learner => self.learner_cores * self.replicas,
+            PodRole::Actor => self.actor_cores,
+        }
+    }
+
+    /// [`Self::validate`] plus the per-role pod bound (DESIGN.md §15):
+    /// the slice this process is responsible for must fit its local pod.
+    pub fn validate_for_role(&self, role: PodRole, pod_cores: usize) -> Result<()> {
         self.validate()?;
-        if self.total_cores() > pod_cores {
+        let need = self.cores_for_role(role);
+        if need > pod_cores {
             bail!(
-                "topology wants {} cores ({}A+{}L x {} replicas) but the pod has {}",
-                self.total_cores(),
+                "topology wants {} cores for the {} role ({}A+{}L x {} replicas) \
+                 but the pod has {}",
+                need,
+                role,
                 self.actor_cores,
                 self.learner_cores,
                 self.replicas,
@@ -152,6 +232,7 @@ impl Topology {
         mix(self.learner_pipeline as u64);
         mix(self.env_workers as u64);
         mix(self.queue_capacity as u64);
+        mix(self.pods.get() as u64);
         h
     }
 
@@ -223,6 +304,7 @@ mod tests {
             Topology { learner_pipeline: 1, ..base.clone() },
             Topology { env_workers: 1, ..base.clone() },
             Topology { queue_capacity: 1, ..base.clone() },
+            Topology { pods: NonZeroUsize::new(2).unwrap(), ..base.clone() },
         ];
         for (i, v) in variants.iter().enumerate() {
             assert_ne!(v.fingerprint(), base.fingerprint(), "field {i} not hashed");
@@ -232,6 +314,33 @@ mod tests {
             Topology::split(1, 2).fingerprint(),
             Topology::split(2, 1).fingerprint()
         );
+    }
+
+    #[test]
+    fn pod_roles_roundtrip_and_reject_unknowns() {
+        for role in [PodRole::Colocated, PodRole::Learner, PodRole::Actor] {
+            assert_eq!(role.as_str().parse::<PodRole>().unwrap(), role);
+        }
+        assert!("driver".parse::<PodRole>().is_err());
+        assert_eq!(PodRole::default(), PodRole::Colocated);
+    }
+
+    #[test]
+    fn per_role_validation_sizes_each_pod_for_its_slice() {
+        // 3A+2L: a colocated pod needs all 5 cores, a learner pod only its
+        // 2, an actor pod only its 3.
+        let t = Topology::split(3, 2);
+        assert_eq!(t.cores_for_role(PodRole::Colocated), 5);
+        assert_eq!(t.cores_for_role(PodRole::Learner), 2);
+        assert_eq!(t.cores_for_role(PodRole::Actor), 3);
+        t.validate_for_role(PodRole::Learner, 2).unwrap();
+        t.validate_for_role(PodRole::Actor, 3).unwrap();
+        assert!(t.validate_for_role(PodRole::Colocated, 4).is_err());
+        let err = t.validate_for_role(PodRole::Learner, 1).unwrap_err().to_string();
+        assert!(err.contains("learner") && err.contains("pod has 1"), "{err}");
+        // structural validity is still checked first
+        let bad = Topology { replicas: 0, ..t };
+        assert!(bad.validate_for_role(PodRole::Actor, 8).is_err());
     }
 
     #[test]

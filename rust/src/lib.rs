@@ -29,6 +29,9 @@
 //! * [`search`] — MCTS for the MuZero-style search agent.
 //! * [`checkpoint`] — elastic-pod checkpoint/restore: the versioned,
 //!   CRC'd on-disk snapshot format and its typed errors (DESIGN.md §13).
+//! * [`transport`] — the multi-pod seam: `Transport`/`Connection` traits,
+//!   the CRC-framed wire format, TCP + loopback pipes, and the
+//!   `DistSebulba` learner-pod/actor-pod runner (DESIGN.md §15).
 //! * [`benchkit`] / [`testkit`] — bench harness and property-test support.
 //!
 //! ## Quickstart
@@ -61,6 +64,7 @@ pub mod runtime;
 pub mod search;
 pub mod serve;
 pub mod testkit;
+pub mod transport;
 pub mod util;
 
 /// Default artifacts directory (relative to the repo root).

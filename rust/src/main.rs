@@ -6,6 +6,8 @@
 //! podracer sebulba  [--agent seb_catch] [--env catch] [--actor-cores 2] [--learner-cores 2]
 //!                   [--batch 32] [--pipeline-stages 2] [--unroll 20] [--updates 100]
 //!                   [--replicas 1] [--threads 2] [--data-path arena|copy]
+//!                   multi-pod (DESIGN.md §15): [--pods 3] [--role learner|actor]
+//!                   [--listen 127.0.0.1:7070] [--connect 127.0.0.1:7070]
 //! podracer muzero   [--env catch] [--updates 20] [--simulations 16]
 //! podracer serve    [--agent seb_catch] [--env catch] [--batch 8] [--pipeline-stages 1]
 //!                   [--queue 8] [--sessions 8] [--steps 40] [--swap-every 100]

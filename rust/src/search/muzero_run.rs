@@ -20,7 +20,7 @@ use crate::coordinator::sebulba::{join_pod_threads, spawn_guarded_learner};
 use crate::coordinator::stats::RunStats;
 use crate::envs::{make_factory, WorkerPool};
 use crate::experiment::{
-    ActorLearnerDetail, Arch, Detail, EnvKind, Report, RunSpec, Runner, Topology,
+    ActorLearnerDetail, Arch, Detail, EnvKind, Report, RunSpec, Runner, Topology, ONE_POD,
 };
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::{DeviceHandle, Pod};
@@ -169,6 +169,7 @@ impl MuZeroRunConfig {
             learner_pipeline: self.learner_pipeline,
             env_workers: self.env_workers,
             queue_capacity: self.queue_capacity,
+            pods: ONE_POD,
         }
     }
 

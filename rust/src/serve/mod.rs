@@ -20,6 +20,9 @@ mod run;
 mod session;
 mod source;
 
-pub use run::{run, run_on, spawn_serve_loop, ServeConfig, ServeReport};
-pub use session::{session_channel, ConnectError, ServeClient, SessionEndpoint, SessionHandle, StepReply};
+pub use run::{run, run_on, spawn_serve_loop, Serve, ServeConfig, ServeReport};
+pub use session::{
+    session_channel, ConnectError, ServeClient, ServeError, SessionEndpoint, SessionHandle,
+    StepReply,
+};
 pub use source::SessionSource;

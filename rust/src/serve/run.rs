@@ -24,6 +24,7 @@ use crate::coordinator::actor::{run_infer_loop, InferLoopConfig, OverlapAcc};
 use crate::coordinator::param_store::ParamStore;
 use crate::coordinator::stats::RunStats;
 use crate::envs::{make_env, EnvKind};
+use crate::experiment::{Topology, ONE_POD};
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::{DeviceHandle, Pod};
 use crate::util::rng::Xoshiro256;
@@ -31,9 +32,52 @@ use crate::util::rng::Xoshiro256;
 use super::session::{session_channel, ConnectError, SessionEndpoint};
 use super::source::SessionSource;
 
+/// The serving *workload* — the half of [`ServeConfig`] that isn't core
+/// topology, mirroring the `runner()`/`topology()` split the training
+/// configs have (`SebulbaConfig`, `MuZeroRunConfig`):
+/// `cfg.runner().resolved(&cfg.topology())` reproduces `cfg` exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Serve {
+    pub agent: String,
+    pub env: EnvKind,
+    /// Session slots per sub-batch — must match a lowered infer batch.
+    pub batch: usize,
+    pub sessions: usize,
+    pub steps: usize,
+    pub swap_every: u64,
+    pub seed: u64,
+}
+
+impl Default for Serve {
+    fn default() -> Self {
+        ServeConfig::default().runner()
+    }
+}
+
+impl Serve {
+    /// Combine this workload with the core-split half into the resolved
+    /// config — the serving counterpart of `Sebulba::resolved`. Serving
+    /// reads only the topology fields it has a meaning for: one actor
+    /// core's `pipeline_stages` sub-batches and the `queue_capacity`
+    /// admission backlog.
+    pub fn resolved(&self, topo: &Topology) -> ServeConfig {
+        ServeConfig {
+            agent: self.agent.clone(),
+            env: self.env,
+            batch: self.batch,
+            pipeline_stages: topo.pipeline_stages,
+            queue: topo.queue_capacity,
+            sessions: self.sessions,
+            steps: self.steps,
+            swap_every: self.swap_every,
+            seed: self.seed,
+        }
+    }
+}
+
 /// Knobs for one serving run (CLI: `podracer serve`, flags in
 /// `experiment::serve_from_args`).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ServeConfig {
     /// Agent whose `_infer_b{batch}` / `_init` programs serve the policy.
     pub agent: String,
@@ -75,6 +119,37 @@ impl Default for ServeConfig {
 impl ServeConfig {
     pub fn infer_program(&self) -> String {
         format!("{}_infer_b{}", self.agent, self.batch)
+    }
+
+    /// The workload half of this config; see [`Serve::resolved`].
+    pub fn runner(&self) -> Serve {
+        Serve {
+            agent: self.agent.clone(),
+            env: self.env,
+            batch: self.batch,
+            sessions: self.sessions,
+            steps: self.steps,
+            swap_every: self.swap_every,
+            seed: self.seed,
+        }
+    }
+
+    /// The core-split half, as the experiment API's typed [`Topology`].
+    /// Serving runs one actor core and no learner; the depths serving has
+    /// no use for collapse to 1. `runner().resolved(&topology())`
+    /// reproduces `self` exactly.
+    pub fn topology(&self) -> Topology {
+        Topology {
+            actor_cores: 1,
+            learner_cores: 0,
+            replicas: 1,
+            threads_per_actor_core: 1,
+            pipeline_stages: self.pipeline_stages,
+            learner_pipeline: 1,
+            env_workers: 1,
+            queue_capacity: self.queue,
+            pods: ONE_POD,
+        }
     }
 
     /// Hard errors for values no run could mean (flag-level misuse is

@@ -53,6 +53,34 @@ impl fmt::Display for ConnectError {
 
 impl std::error::Error for ConnectError {}
 
+/// Why a session RPC ([`SessionHandle::step`]) failed — typed, so callers
+/// can branch on the cause instead of substring-matching a message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request's observation length doesn't match the server's.
+    BadRequest { got: usize, want: usize },
+    /// The serving loop was already gone when the request was posted.
+    Shutdown,
+    /// The serving loop went away with this request in flight.
+    Disconnected,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::BadRequest { got, want } => {
+                write!(f, "request carries {got} floats, server expects {want}")
+            }
+            ServeError::Shutdown => write!(f, "serving loop shut down"),
+            ServeError::Disconnected => {
+                write!(f, "serving loop shut down with the request in flight")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 /// A request the client has posted and is blocked on.
 pub(crate) struct PendingRequest {
     pub obs: Vec<f32>,
@@ -192,18 +220,15 @@ impl SessionHandle {
     }
 
     /// Post an observation and block for the action — one request in
-    /// flight per session by construction.
-    pub fn step(&mut self, obs: &[f32]) -> anyhow::Result<StepReply> {
-        anyhow::ensure!(
-            obs.len() == self.shared.obs_dim,
-            "request carries {} floats, server expects {}",
-            obs.len(),
-            self.shared.obs_dim
-        );
-        anyhow::ensure!(
-            !self.shared.server_gone.load(Ordering::Acquire),
-            "serving loop shut down"
-        );
+    /// flight per session by construction. Failures are typed
+    /// [`ServeError`]s, never stringly.
+    pub fn step(&mut self, obs: &[f32]) -> Result<StepReply, ServeError> {
+        if obs.len() != self.shared.obs_dim {
+            return Err(ServeError::BadRequest { got: obs.len(), want: self.shared.obs_dim });
+        }
+        if self.shared.server_gone.load(Ordering::Acquire) {
+            return Err(ServeError::Shutdown);
+        }
         let (tx, rx) = mpsc::channel();
         {
             let mut slot = self.cell.request.lock().unwrap();
@@ -211,8 +236,7 @@ impl SessionHandle {
             *slot = Some(PendingRequest { obs: obs.to_vec(), enqueued: Instant::now(), reply: tx });
         }
         self.shared.notify();
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("serving loop shut down with the request in flight"))
+        rx.recv().map_err(|_| ServeError::Disconnected)
     }
 }
 

@@ -1,0 +1,741 @@
+//! Multi-pod Sebulba: one experiment as a learner pod plus K actor-pod
+//! processes, glued by the [`Transport`] seam (DESIGN.md §15).
+//!
+//! The decomposition keeps the in-memory coordinator's parts and replaces
+//! exactly one seam with the wire:
+//!
+//! ```text
+//!   actor pod k                              learner pod
+//!   ┌──────────────────────────┐             ┌───────────────────────────┐
+//!   │ actor threads → queue ───┼─ TrajBundle ┼→ receiver k → queue       │
+//!   │       ▲                  │   frames    │     (one per actor pod)   │
+//!   │  ParamStore ← subscriber ┼←─ Params ───┼─ publisher ← ParamStore   │
+//!   └──────────────────────────┘   frames    │       ▲                   │
+//!                                            │  learner thread (grad →   │
+//!                                            │  reduce → apply → publish)│
+//!                                            └───────────────────────────┘
+//! ```
+//!
+//! * Actor pods run the unmodified [`spawn_actor`] threads against a local
+//!   [`BoundedQueue`]; a forwarder thread drains it and ships each
+//!   [`ShardBundle`] as one `TrajBundle` frame (shard-major columns,
+//!   [`super::wire`]).
+//! * The learner pod runs the unmodified [`learner_main`] (via the guarded
+//!   spawn) against its local queue; per-connection receiver threads feed
+//!   it, and a publisher thread broadcasts every published parameter
+//!   version as a `Params` frame ([`ParamStore::wait_newer`] pub/sub).
+//! * Handshake: the learner accepts K connections and greets each with a
+//!   `Hello` frame (payload: the pod's index, u64 LE) followed by one
+//!   `Params` frame carrying the version-0 snapshot — every pod starts
+//!   from bit-identical parameters, which is what makes the two-process
+//!   `updates=1` run bit-identical to the in-memory one (the oracle in
+//!   `rust/tests/transport.rs`).
+//! * Teardown: whoever stops first says so. The learner broadcasts a
+//!   `Shutdown` frame when its update budget is spent; an actor pod whose
+//!   threads die sends `Shutdown` up so the learner is never left waiting
+//!   on a producer that will not come back. A connection that drops
+//!   without the frame is a surfaced error, never a silent stall — the
+//!   TensorBus poisoning discipline (DESIGN.md §10) extended over the
+//!   wire.
+//!
+//! Distributed v1 deliberately mirrors the in-memory coordinator's plain
+//! path only: `replicas == 1` per pod, and checkpoint/restore/fault specs
+//! are rejected with a typed error rather than half-honoured.
+//!
+//! [`learner_main`]: crate::coordinator::learner
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::actor::{spawn_actor, ActorConfig, ShardBundle};
+use crate::coordinator::collective::GradientBus;
+use crate::coordinator::learner::{LearnerConfig, LearnerHandles};
+use crate::coordinator::param_store::ParamStore;
+use crate::coordinator::queue::BoundedQueue;
+use crate::coordinator::sebulba::{join_pod_threads, spawn_guarded_learner, Sebulba};
+use crate::coordinator::stats::RunStats;
+use crate::coordinator::SebulbaConfig;
+use crate::envs::{make_factory, EnvFactory, WorkerPool};
+use crate::experiment::{
+    ActorLearnerDetail, Arch, Detail, PodRole, Report, RunSpec, Runner, Topology,
+};
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::{DeviceHandle, Pod};
+
+use super::frame::FrameKind;
+use super::tcp::TcpTransport;
+use super::wire::{decode_bundle, decode_params, encode_bundle, encode_params};
+use super::{ConnectOpts, Connection, Transport};
+
+/// How long the learner-side publisher parks in [`ParamStore::wait_newer`]
+/// per wait: long enough to sleep between updates, short enough to notice
+/// the stop flag promptly at teardown.
+const PUBLISH_POLL: Duration = Duration::from_millis(50);
+
+/// One Sebulba experiment split across processes: a learner pod (listens,
+/// learns, publishes params) or an actor pod (connects, acts, ships
+/// trajectories), depending on [`PodRole`]. Both sides are handed the same
+/// workload + topology, so the geometry (shard counts, batch shapes,
+/// program names) agrees by construction.
+pub struct DistSebulba {
+    /// The workload — identical on every pod of the experiment.
+    pub workload: Sebulba,
+    /// Which half of the experiment this process runs.
+    pub role: PodRole,
+    /// Learner role: address to listen on (e.g. `127.0.0.1:7070`).
+    pub listen: String,
+    /// Actor role: the learner pod's address to connect to.
+    pub connect: String,
+    /// Learner role: how many actor pods to accept before training starts.
+    pub actor_pods: usize,
+    /// The pipe. Defaults to [`TcpTransport`]; tests inject
+    /// [`super::LoopbackTransport`] to run all pods in one process.
+    pub transport: Arc<dyn Transport>,
+    /// Dial budget for the actor role (bounded retry + backoff).
+    pub connect_opts: ConnectOpts,
+}
+
+impl DistSebulba {
+    /// The learner pod of an experiment with `actor_pods` actor pods.
+    pub fn learner(workload: Sebulba, listen: &str, actor_pods: usize) -> Self {
+        Self {
+            workload,
+            role: PodRole::Learner,
+            listen: listen.to_string(),
+            connect: String::new(),
+            actor_pods,
+            transport: Arc::new(TcpTransport::default()),
+            connect_opts: ConnectOpts::default(),
+        }
+    }
+
+    /// One actor pod, dialing the learner at `connect`.
+    pub fn actor(workload: Sebulba, connect: &str) -> Self {
+        Self {
+            workload,
+            role: PodRole::Actor,
+            listen: String::new(),
+            connect: connect.to_string(),
+            actor_pods: 0,
+            transport: Arc::new(TcpTransport::default()),
+            connect_opts: ConnectOpts::default(),
+        }
+    }
+
+    /// Swap the pipe (tests: loopback; production: TCP, the default).
+    pub fn with_transport(mut self, transport: Arc<dyn Transport>) -> Self {
+        self.transport = transport;
+        self
+    }
+
+    fn resolved(&self, topo: &Topology) -> Result<SebulbaConfig> {
+        let cfg = self.workload.resolved(topo);
+        cfg.validate()?;
+        ensure!(
+            cfg.replicas == 1,
+            "distributed runs need replicas == 1 per pod (got {}); scale out \
+             with more actor pods instead",
+            cfg.replicas
+        );
+        Ok(cfg)
+    }
+
+    // ---- learner pod -----------------------------------------------------
+
+    fn run_learner_pod(&self, pod: &mut Pod, topo: &Topology) -> Result<Report> {
+        let cfg = self.resolved(topo)?;
+        topo.validate_for_role(PodRole::Learner, pod.n_cores())?;
+        ensure!(self.actor_pods >= 1, "learner pod needs at least one actor pod");
+        ensure!(!self.listen.is_empty(), "learner pod needs a listen address");
+
+        // Programs: this pod owns only the learner cores; local core ids
+        // 0..learner_cores stand in for the in-memory pod's learner slice.
+        let grad = cfg.grad_program();
+        let apply = cfg.apply_program();
+        let init = cfg.init_program();
+        let learner_ids: Vec<usize> = (0..cfg.learner_cores).collect();
+        pod.load_program(&grad, &learner_ids).with_context(|| format!("loading {grad}"))?;
+        pod.load_program(&apply, &[0])?;
+        pod.load_program(&init, &[0])?;
+
+        let busy0: Vec<f64> = (0..cfg.learner_cores)
+            .map(|cid| Ok(pod.core(cid)?.busy_seconds()))
+            .collect::<Result<_>>()?;
+
+        let (params0, opt0) = match self.workload.warm_start.clone() {
+            Some((p, o)) => (p, o),
+            None => {
+                let outs = pod
+                    .core(0)?
+                    .execute(&init, vec![HostTensor::scalar_i32(cfg.seed as i32)])?;
+                (outs[0].clone().into_f32()?, outs[1].clone().into_f32()?)
+            }
+        };
+
+        let stats = Arc::new(RunStats::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let bus = Arc::new(GradientBus::new(1));
+        let store = Arc::new(ParamStore::new(params0.clone()));
+        let queue = Arc::new(BoundedQueue::<ShardBundle>::new(cfg.queue_capacity));
+        let queues = vec![queue.clone()];
+
+        // ---- accept + handshake ------------------------------------------
+        let mut listener = self
+            .transport
+            .listen(&self.listen)
+            .with_context(|| format!("listening on {}", self.listen))?;
+        log::info!(
+            "dist-learner[{}]: listening on {}, waiting for {} actor pod(s)",
+            cfg.agent,
+            listener.local_addr(),
+            self.actor_pods
+        );
+        let hello0 = encode_params(store.version(), &params0);
+        let mut conns: Vec<Arc<dyn Connection>> = Vec::with_capacity(self.actor_pods);
+        for pod_index in 0..self.actor_pods {
+            let conn: Arc<dyn Connection> = Arc::from(
+                listener
+                    .accept()
+                    .with_context(|| format!("waiting for actor pod {pod_index}"))?,
+            );
+            // Hello stamps the pod's index (actor ids and RNG streams derive
+            // from it); the initial Params frame makes every pod start from
+            // bit-identical version-0 parameters.
+            let n = conn
+                .send(FrameKind::Hello, &(pod_index as u64).to_le_bytes())
+                .with_context(|| format!("greeting actor pod {pod_index}"))?;
+            stats.record_wire_tx(n);
+            let n = conn
+                .send(FrameKind::Params, &hello0)
+                .with_context(|| format!("seeding actor pod {pod_index} with params"))?;
+            stats.record_wire_tx(n);
+            log::info!("dist-learner: actor pod {pod_index} joined from {}", conn.peer());
+            conns.push(conn);
+        }
+
+        // ---- per-connection receivers ------------------------------------
+        // Any exit before the stop flag is set means that pod will never
+        // produce again: surface it and shut the queue so the learner
+        // drains instead of waiting forever ("never a silent drop").
+        let wire_errs: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let mut recv_joins = Vec::with_capacity(conns.len());
+        for (i, conn) in conns.iter().enumerate() {
+            let conn = conn.clone();
+            let queue = queue.clone();
+            let stop = stop.clone();
+            let stats = stats.clone();
+            let errs = wire_errs.clone();
+            recv_joins.push(
+                std::thread::Builder::new()
+                    .name(format!("dist-recv-{i}"))
+                    .spawn(move || {
+                        let mut fail = |msg: String| {
+                            errs.lock().unwrap().push(msg);
+                            stop.store(true, Ordering::Relaxed);
+                            queue.shutdown();
+                        };
+                        loop {
+                            match conn.recv() {
+                                Ok((FrameKind::TrajBundle, payload, n)) => {
+                                    stats.record_wire_rx(n);
+                                    let shards = match decode_bundle(&payload) {
+                                        Ok(s) => s,
+                                        Err(e) => {
+                                            fail(format!(
+                                                "actor pod {i}: bad trajectory frame: {e}"
+                                            ));
+                                            return;
+                                        }
+                                    };
+                                    if let Some(first) = shards.first() {
+                                        stats.env_frames.add(first.arena().frames() as u64);
+                                        stats.trajectories.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                    if queue.push(shards).is_err() {
+                                        return; // queue shut: learner done
+                                    }
+                                }
+                                Ok((FrameKind::Shutdown, _, n)) => {
+                                    stats.record_wire_rx(n);
+                                    if !stop.load(Ordering::Relaxed) {
+                                        fail(format!(
+                                            "actor pod {i} shut down before the learner finished"
+                                        ));
+                                    }
+                                    return;
+                                }
+                                Ok((kind, _, n)) => {
+                                    stats.record_wire_rx(n);
+                                    fail(format!("actor pod {i}: unexpected {kind:?} frame"));
+                                    return;
+                                }
+                                Err(e) if e.is_idle_timeout() => {
+                                    if stop.load(Ordering::Relaxed) {
+                                        return;
+                                    }
+                                }
+                                Err(e) => {
+                                    if !(stop.load(Ordering::Relaxed) && e.is_closed()) {
+                                        fail(format!("actor pod {i} connection lost: {e}"));
+                                    }
+                                    return;
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn dist receiver"),
+            );
+        }
+
+        // ---- publisher ---------------------------------------------------
+        // Every version the learner publishes goes to every actor pod as
+        // one Params frame. Send failures are left to that connection's
+        // receiver to surface (it sees the same dead socket).
+        let publish_join = {
+            let store = store.clone();
+            let stop = stop.clone();
+            let stats = stats.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new()
+                .name("dist-publish".to_string())
+                .spawn(move || {
+                    let mut last = store.version();
+                    while !stop.load(Ordering::Relaxed) {
+                        if let Some(snap) = store.wait_newer(last, PUBLISH_POLL) {
+                            last = snap.version;
+                            let payload = encode_params(snap.version, &snap.params);
+                            for c in &conns {
+                                if let Ok(n) = c.send(FrameKind::Params, &payload) {
+                                    stats.record_wire_tx(n);
+                                }
+                            }
+                        }
+                    }
+                })
+                .expect("spawn dist publisher")
+        };
+
+        // ---- the unmodified learner --------------------------------------
+        let lcfg = LearnerConfig {
+            replica_id: 0,
+            grad_program: grad,
+            apply_program: apply,
+            shards_per_round: cfg.learner_cores,
+            total_updates: cfg.total_updates,
+            pipeline: cfg.learner_pipeline,
+            checkpoint: None,
+            fault: None,
+            start_round: 0,
+        };
+        let cores: Vec<DeviceHandle> =
+            (0..cfg.learner_cores).map(|i| pod.core(i)).collect::<Result<_>>()?;
+        let handles = LearnerHandles {
+            cores,
+            store: store.clone(),
+            queue: queue.clone(),
+            stats: stats.clone(),
+            bus: bus.clone(),
+        };
+        let t_start = Instant::now();
+        let learner_join = spawn_guarded_learner(
+            "dist-learner-0".to_string(),
+            lcfg,
+            handles,
+            opt0.clone(),
+            stop.clone(),
+            queues.clone(),
+            bus.clone(),
+        );
+
+        // ---- teardown ----------------------------------------------------
+        // join_pod_threads sets the stop flag and shuts queue + bus on every
+        // path; the wire teardown runs regardless of the learner's verdict
+        // so actor pods always hear a Shutdown frame instead of a vanishing
+        // peer.
+        let learner_res =
+            join_pod_threads("dist", &stop, &queues, &bus, vec![learner_join], Vec::new());
+        for c in &conns {
+            if let Ok(n) = c.send(FrameKind::Shutdown, &[]) {
+                stats.record_wire_tx(n);
+            }
+        }
+        let _ = publish_join.join();
+        for j in recv_joins {
+            let _ = j.join();
+        }
+        for c in &conns {
+            c.close();
+        }
+        let (final_params, final_opt_state) = match learner_res? {
+            Some(out) => out,
+            None => (params0, opt0),
+        };
+        {
+            let errs = wire_errs.lock().unwrap();
+            if !errs.is_empty() {
+                bail!(
+                    "distributed run lost {} actor pod(s): {}",
+                    errs.len(),
+                    errs.join("; ")
+                );
+            }
+        }
+
+        // ---- report ------------------------------------------------------
+        let elapsed = t_start.elapsed().as_secs_f64();
+        let mut learner_busy = 0.0;
+        let mut critical_path: f64 = 1e-12;
+        for cid in 0..cfg.learner_cores {
+            let busy = pod.core(cid)?.busy_seconds() - busy0[cid];
+            learner_busy += busy;
+            critical_path = critical_path.max(busy);
+        }
+        critical_path = critical_path.max(stats.learner_active_max_seconds());
+        let frames = stats.env_frames.frames();
+        log::info!("dist-learner done: {}", stats.summary());
+        Ok(Report {
+            arch: Arch::Sebulba,
+            steps: frames,
+            updates: stats.updates.load(Ordering::Relaxed),
+            elapsed,
+            throughput: frames as f64 / elapsed.max(1e-12),
+            projected_throughput: frames as f64 / critical_path,
+            final_params,
+            detail: Detail::ActorLearner(ActorLearnerDetail {
+                mean_staleness: stats.mean_staleness(),
+                mean_episode_reward: stats.mean_episode_reward(),
+                episodes: stats.episodes.load(Ordering::Relaxed),
+                last_loss: stats.last_loss(),
+                // the acting half lives in other processes; its busy time
+                // is reported by the actor pods themselves
+                actor_busy_seconds: 0.0,
+                learner_busy_seconds: learner_busy,
+                actor_infer_seconds: 0.0,
+                actor_env_step_seconds: 0.0,
+                actor_loop_seconds: 0.0,
+                actor_overlap_seconds: 0.0,
+                learner_grad_seconds: stats.learner_grad_seconds(),
+                learner_collective_seconds: stats.learner_collective_seconds(),
+                learner_apply_seconds: stats.learner_apply_seconds(),
+                learner_active_seconds: stats.learner_active_seconds(),
+                learner_overlap_seconds: stats.learner_overlap_seconds(),
+                queue_push_block_seconds: queue.push_block_seconds(),
+                queue_pop_block_seconds: queue.pop_block_seconds(),
+                final_opt_state,
+            }),
+        })
+    }
+
+    // ---- actor pod -------------------------------------------------------
+
+    fn run_actor_pod(&self, pod: &mut Pod, topo: &Topology) -> Result<Report> {
+        let cfg = self.resolved(topo)?;
+        topo.validate_for_role(PodRole::Actor, pod.n_cores())?;
+        ensure!(!self.connect.is_empty(), "actor pod needs a learner address to connect to");
+        ensure!(
+            self.workload.warm_start.is_none(),
+            "actor pods take their parameters from the learner pod; warm_start \
+             belongs on the learner"
+        );
+
+        let conn: Arc<dyn Connection> = Arc::from(
+            self.transport
+                .connect(&self.connect, &self.connect_opts)
+                .with_context(|| format!("connecting to learner pod at {}", self.connect))?,
+        );
+
+        // ---- handshake: Hello (pod index) then the initial Params --------
+        let stats = Arc::new(RunStats::new());
+        let (kind, payload, n) = conn.recv().context("waiting for the learner's hello")?;
+        stats.record_wire_rx(n);
+        ensure!(
+            kind == FrameKind::Hello && payload.len() == 8,
+            "handshake: expected a hello frame with a pod index, got {kind:?} \
+             with {} payload bytes",
+            payload.len()
+        );
+        let pod_index = u64::from_le_bytes(payload.try_into().unwrap()) as usize;
+        let (kind, payload, n) = conn.recv().context("waiting for the initial parameters")?;
+        stats.record_wire_rx(n);
+        ensure!(kind == FrameKind::Params, "handshake: expected a params frame, got {kind:?}");
+        let (version, params) = decode_params(&payload).context("initial parameters")?;
+        let store = Arc::new(ParamStore::with_version(params, version));
+        log::info!(
+            "dist-actor[{}]: joined as pod {pod_index} (params v{version}, {} floats)",
+            cfg.agent,
+            store.latest().params.len()
+        );
+
+        // ---- local acting state ------------------------------------------
+        let agent = pod.manifest.agent(&cfg.agent)?.clone();
+        let infer = cfg.infer_program();
+        let actor_ids: Vec<usize> = (0..cfg.actor_cores).collect();
+        pod.load_program(&infer, &actor_ids).with_context(|| format!("loading {infer}"))?;
+        let busy0: Vec<f64> = (0..cfg.actor_cores)
+            .map(|cid| Ok(pod.core(cid)?.busy_seconds()))
+            .collect::<Result<_>>()?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let queue = Arc::new(BoundedQueue::<ShardBundle>::new(cfg.queue_capacity));
+        let factory: Arc<EnvFactory> = Arc::new(make_factory(cfg.env_kind, cfg.seed));
+        let pool = WorkerPool::new(cfg.env_workers);
+        let wire_errs: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+
+        // ---- subscriber: installs published params, hears Shutdown -------
+        let sub_join = {
+            let conn = conn.clone();
+            let store = store.clone();
+            let stop = stop.clone();
+            let queue = queue.clone();
+            let stats = stats.clone();
+            let errs = wire_errs.clone();
+            std::thread::Builder::new()
+                .name("dist-subscribe".to_string())
+                .spawn(move || {
+                    loop {
+                        match conn.recv() {
+                            Ok((FrameKind::Params, payload, n)) => {
+                                stats.record_wire_rx(n);
+                                match decode_params(&payload) {
+                                    // install() ignores stale or duplicate
+                                    // versions, so reordered frames are safe
+                                    Ok((v, p)) => {
+                                        store.install(p, v);
+                                    }
+                                    Err(e) => {
+                                        errs.lock().unwrap().push(format!(
+                                            "bad params frame from learner: {e}"
+                                        ));
+                                        break;
+                                    }
+                                }
+                            }
+                            Ok((FrameKind::Shutdown, _, n)) => {
+                                stats.record_wire_rx(n);
+                                break; // learner finished: clean teardown
+                            }
+                            Ok((kind, _, n)) => {
+                                stats.record_wire_rx(n);
+                                errs.lock()
+                                    .unwrap()
+                                    .push(format!("unexpected {kind:?} frame from learner"));
+                                break;
+                            }
+                            Err(e) if e.is_idle_timeout() => {
+                                if stop.load(Ordering::Relaxed) {
+                                    break;
+                                }
+                            }
+                            Err(e) => {
+                                if !(stop.load(Ordering::Relaxed) && e.is_closed()) {
+                                    errs.lock()
+                                        .unwrap()
+                                        .push(format!("learner pod connection lost: {e}"));
+                                }
+                                break;
+                            }
+                        }
+                    }
+                    // Whatever ended the subscription ends the pod: stop the
+                    // actors and shut the queue so every thread unwinds.
+                    stop.store(true, Ordering::Relaxed);
+                    queue.shutdown();
+                })
+                .expect("spawn dist subscriber")
+        };
+
+        // ---- forwarder: local queue → TrajBundle frames ------------------
+        let fwd_join = {
+            let conn = conn.clone();
+            let queue = queue.clone();
+            let stop = stop.clone();
+            let stats = stats.clone();
+            let errs = wire_errs.clone();
+            std::thread::Builder::new()
+                .name("dist-forward".to_string())
+                .spawn(move || {
+                    loop {
+                        let bundle = match queue.pop() {
+                            Ok(b) => b,
+                            Err(_) => break, // queue shut: teardown
+                        };
+                        let payload = match encode_bundle(&bundle) {
+                            Ok(p) => p,
+                            Err(e) => {
+                                errs.lock()
+                                    .unwrap()
+                                    .push(format!("encoding trajectory bundle: {e}"));
+                                stop.store(true, Ordering::Relaxed);
+                                queue.shutdown();
+                                break;
+                            }
+                        };
+                        match conn.send(FrameKind::TrajBundle, &payload) {
+                            Ok(n) => stats.record_wire_tx(n),
+                            Err(e) => {
+                                if !stop.load(Ordering::Relaxed) {
+                                    errs.lock().unwrap().push(format!(
+                                        "sending trajectory to learner: {e}"
+                                    ));
+                                }
+                                stop.store(true, Ordering::Relaxed);
+                                queue.shutdown();
+                                break;
+                            }
+                        }
+                    }
+                    // Best-effort goodbye: tells the learner this pod will
+                    // never produce again (prematurely, that is an error on
+                    // the learner's side — exactly the contract we want).
+                    if let Ok(n) = conn.send(FrameKind::Shutdown, &[]) {
+                        stats.record_wire_tx(n);
+                    }
+                })
+                .expect("spawn dist forwarder")
+        };
+
+        // ---- the unmodified actor threads --------------------------------
+        // Actor ids are globally unique across pods (pod_index offsets the
+        // local id), so every thread draws a distinct RNG stream exactly as
+        // its in-memory counterpart would.
+        let threads_per_pod = cfg.actor_cores * cfg.threads_per_actor_core;
+        let t_start = Instant::now();
+        let mut actor_joins = Vec::with_capacity(threads_per_pod);
+        for ac in 0..cfg.actor_cores {
+            let core = pod.core(ac)?;
+            for th in 0..cfg.threads_per_actor_core {
+                let local = ac * cfg.threads_per_actor_core + th;
+                let acfg = ActorConfig {
+                    actor_id: pod_index * threads_per_pod + local,
+                    batch: cfg.actor_batch,
+                    pipeline_stages: cfg.pipeline_stages,
+                    unroll: cfg.unroll,
+                    discount: cfg.discount,
+                    num_shards: cfg.learner_cores * cfg.micro_batches,
+                    infer_program: infer.clone(),
+                    obs_shape: agent.obs_shape.clone(),
+                    num_actions: agent.num_actions,
+                    seed: cfg.seed,
+                    copy_path: cfg.copy_path,
+                    checkpoint: None,
+                };
+                actor_joins.push(spawn_actor(
+                    acfg,
+                    core.clone(),
+                    factory.clone(),
+                    pool.clone(),
+                    store.clone(),
+                    queue.clone(),
+                    stats.clone(),
+                    stop.clone(),
+                ));
+            }
+        }
+
+        // ---- join: actors first (they exit when the queue shuts) ---------
+        let mut actor_err: Option<anyhow::Error> = None;
+        for j in actor_joins {
+            match j.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if actor_err.is_none() {
+                        actor_err = Some(e.context("dist actor thread failed"));
+                    }
+                    // a dead actor thread ends the pod: unblock the rest and
+                    // let the forwarder's Shutdown frame tell the learner
+                    stop.store(true, Ordering::Relaxed);
+                    queue.shutdown();
+                }
+                Err(_) => {
+                    if actor_err.is_none() {
+                        actor_err = Some(anyhow::anyhow!("dist actor thread panicked"));
+                    }
+                    stop.store(true, Ordering::Relaxed);
+                    queue.shutdown();
+                }
+            }
+        }
+        queue.shutdown(); // idempotent: guarantees the forwarder unblocks
+        let _ = fwd_join.join();
+        let _ = sub_join.join();
+        conn.close();
+        if let Some(e) = actor_err {
+            return Err(e);
+        }
+        {
+            let errs = wire_errs.lock().unwrap();
+            if !errs.is_empty() {
+                bail!("actor pod {pod_index} wire failure: {}", errs.join("; "));
+            }
+        }
+
+        // ---- report ------------------------------------------------------
+        let elapsed = t_start.elapsed().as_secs_f64();
+        let mut actor_busy = 0.0;
+        let mut critical_path: f64 = 1e-12;
+        for cid in 0..cfg.actor_cores {
+            let busy = pod.core(cid)?.busy_seconds() - busy0[cid];
+            actor_busy += busy;
+            critical_path = critical_path.max(busy);
+        }
+        let frames = stats.env_frames.frames();
+        let snap = store.latest();
+        log::info!("dist-actor {pod_index} done: {}", stats.summary());
+        Ok(Report {
+            arch: Arch::Sebulba,
+            steps: frames,
+            // updates = parameter versions observed from the learner
+            updates: snap.version,
+            elapsed,
+            throughput: frames as f64 / elapsed.max(1e-12),
+            projected_throughput: frames as f64 / critical_path,
+            final_params: snap.params.as_ref().clone(),
+            detail: Detail::ActorLearner(ActorLearnerDetail {
+                mean_staleness: stats.mean_staleness(),
+                mean_episode_reward: stats.mean_episode_reward(),
+                episodes: stats.episodes.load(Ordering::Relaxed),
+                last_loss: stats.last_loss(),
+                actor_busy_seconds: actor_busy,
+                // the learning half lives in the learner pod's report
+                learner_busy_seconds: 0.0,
+                actor_infer_seconds: stats.actor_infer_seconds(),
+                actor_env_step_seconds: stats.actor_env_seconds(),
+                actor_loop_seconds: stats.actor_loop_seconds(),
+                actor_overlap_seconds: stats.actor_overlap_seconds(),
+                learner_grad_seconds: 0.0,
+                learner_collective_seconds: 0.0,
+                learner_apply_seconds: 0.0,
+                learner_active_seconds: 0.0,
+                learner_overlap_seconds: 0.0,
+                queue_push_block_seconds: queue.push_block_seconds(),
+                queue_pop_block_seconds: queue.pop_block_seconds(),
+                final_opt_state: Vec::new(),
+            }),
+        })
+    }
+}
+
+impl Runner for DistSebulba {
+    fn arch(&self) -> Arch {
+        Arch::Sebulba
+    }
+
+    fn run_checkpointed(&self, pod: &mut Pod, topo: &Topology, spec: &RunSpec) -> Result<Report> {
+        ensure!(
+            spec.is_plain(),
+            "distributed runs do not support checkpoint/restore/fault injection \
+             yet; run those single-process"
+        );
+        match self.role {
+            PodRole::Learner => self.run_learner_pod(pod, topo),
+            PodRole::Actor => self.run_actor_pod(pod, topo),
+            PodRole::Colocated => bail!(
+                "DistSebulba needs --role learner or --role actor; colocated runs \
+                 use the in-memory Sebulba runner"
+            ),
+        }
+    }
+}

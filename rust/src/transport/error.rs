@@ -1,0 +1,121 @@
+//! The typed wire-transport error. The contract mirrors the TensorBus
+//! poisoning discipline (DESIGN.md §10) over the wire: every blocking call
+//! has a timeout, every failure is a variant a caller can match on, and
+//! nothing is silently dropped — a dead peer surfaces as `Closed` (or a
+//! `ReadTimeout` if it stalled without closing), never as a hang.
+
+use std::fmt;
+use std::io;
+use std::time::Duration;
+
+/// Everything that can go wrong on the wire, as a typed error. Framing
+/// variants (`BadMagic` … `CrcMismatch`) mirror [`CheckpointError`]'s
+/// corruption taxonomy so the two decode paths fail the same way.
+///
+/// [`CheckpointError`]: crate::checkpoint::CheckpointError
+#[derive(Debug)]
+pub enum TransportError {
+    /// An I/O error outside the timeout/close taxonomy below.
+    Io(io::Error),
+    /// Every connect attempt failed (refused, unreachable, …); carries the
+    /// attempt count so "bounded retry" is visible in the message.
+    ConnectFailed { addr: String, attempts: u32, last: String },
+    /// The connect deadline elapsed before the peer accepted.
+    ConnectTimeout { addr: String, waited: Duration },
+    /// No frame arrived within the read timeout. Benign between frames
+    /// (the receiver loop re-checks its stop flag and retries); fatal if
+    /// the caller was owed a reply.
+    ReadTimeout { waited: Duration },
+    /// The peer closed the connection (clean EOF or reset).
+    Closed,
+    /// The byte stream ended inside a frame.
+    Truncated { context: &'static str },
+    /// The frame did not start with the wire magic — misaligned stream or
+    /// a stranger on the port.
+    BadMagic { found: [u8; 4] },
+    /// A frame from a newer (or corrupted) wire format.
+    UnsupportedVersion { found: u8 },
+    /// An unknown frame kind byte.
+    BadKind { found: u8 },
+    /// Frame checksum mismatch: the payload was damaged in flight.
+    CrcMismatch { stored: u32, computed: u32 },
+    /// Declared payload length exceeds the sanity cap — a hostile or
+    /// garbage length prefix must not drive allocation.
+    FrameTooLarge { len: u64, max: u64 },
+    /// The frame decoded but its payload is inconsistent (bad geometry,
+    /// column size mismatch, trailing bytes, …).
+    Corrupt { context: &'static str, detail: String },
+    /// The peer broke the connection-setup protocol (wrong first frame,
+    /// bad hello payload).
+    Handshake { detail: String },
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Io(e) => write!(f, "transport I/O error: {e}"),
+            TransportError::ConnectFailed { addr, attempts, last } => write!(
+                f,
+                "connecting to {addr} failed after {attempts} attempts (last error: {last})"
+            ),
+            TransportError::ConnectTimeout { addr, waited } => {
+                write!(f, "connecting to {addr} timed out after {waited:?}")
+            }
+            TransportError::ReadTimeout { waited } => {
+                write!(f, "no frame within the {waited:?} read timeout")
+            }
+            TransportError::Closed => write!(f, "connection closed by peer"),
+            TransportError::Truncated { context } => {
+                write!(f, "stream ended inside a frame ({context})")
+            }
+            TransportError::BadMagic { found } => {
+                write!(f, "bad frame magic {found:02x?} (misaligned stream?)")
+            }
+            TransportError::UnsupportedVersion { found } => {
+                write!(f, "unsupported wire format version {found}")
+            }
+            TransportError::BadKind { found } => write!(f, "unknown frame kind {found:#04x}"),
+            TransportError::CrcMismatch { stored, computed } => write!(
+                f,
+                "frame CRC mismatch (stored {stored:#010x}, computed {computed:#010x})"
+            ),
+            TransportError::FrameTooLarge { len, max } => {
+                write!(f, "declared frame length {len} exceeds the {max}-byte cap")
+            }
+            TransportError::Corrupt { context, detail } => {
+                write!(f, "corrupt {context} payload: {detail}")
+            }
+            TransportError::Handshake { detail } => write!(f, "handshake violation: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TransportError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for TransportError {
+    fn from(e: io::Error) -> Self {
+        TransportError::Io(e)
+    }
+}
+
+impl TransportError {
+    /// True for the one benign variant: an idle read window expiring. The
+    /// receiver loops re-check their stop flag on this and retry; every
+    /// other variant is a real failure.
+    pub fn is_idle_timeout(&self) -> bool {
+        matches!(self, TransportError::ReadTimeout { .. })
+    }
+
+    /// True when the peer is gone (clean close or reset) — the expected
+    /// end-of-run signal after a shutdown frame.
+    pub fn is_closed(&self) -> bool {
+        matches!(self, TransportError::Closed)
+    }
+}

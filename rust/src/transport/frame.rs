@@ -1,0 +1,306 @@
+//! Length-prefixed, CRC-framed wire messages (DESIGN.md §15).
+//!
+//! Every message on a pod-to-pod connection is one frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic          "PDRW"
+//! 4       1     format version (1)
+//! 5       1    frame kind     (FrameKind)
+//! 6       8     payload length (u64 LE, capped at MAX_FRAME_LEN)
+//! 14      n     payload
+//! 14+n    4     CRC32          (u32 LE, over bytes [4, 14+n) — everything
+//!                              after the magic)
+//! ```
+//!
+//! The CRC reuses the checkpoint format's IEEE implementation
+//! ([`crate::checkpoint::format::crc32`]) so both persistence paths share
+//! one checksum. Decoding is hostile-input safe: the length prefix is
+//! capped before any allocation, a short buffer is a typed
+//! [`TransportError::Truncated`], and a flipped byte lands in exactly one
+//! of `BadMagic` / `UnsupportedVersion` / `BadKind` / `FrameTooLarge` /
+//! `Truncated` / `CrcMismatch` (pinned by the proptests next to the
+//! checkpoint fuzz suite).
+
+use std::io::{Read, Write};
+
+use crate::checkpoint::format::{crc32, crc32_update};
+
+use super::error::TransportError;
+
+/// First bytes of every frame; distinct from the checkpoint magic so a file
+/// fed to the wire decoder (or vice versa) fails loudly on byte 0.
+pub const WIRE_MAGIC: [u8; 4] = *b"PDRW";
+
+/// Wire format version. Bump on any layout change; decoders reject other
+/// versions with [`TransportError::UnsupportedVersion`].
+pub const WIRE_VERSION: u8 = 1;
+
+/// Bytes before the payload: magic + version + kind + length.
+pub const HEADER_LEN: usize = 4 + 1 + 1 + 8;
+
+/// Sanity cap on the declared payload length: a corrupt or hostile length
+/// prefix must not drive a huge allocation. 1 GiB is far above any real
+/// trajectory bundle on this testbed.
+pub const MAX_FRAME_LEN: u64 = 1 << 30;
+
+/// What a frame carries. The discriminants are the wire bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// Connection setup: learner → actor, payload = the actor pod's
+    /// assigned index (u64 LE).
+    Hello = 1,
+    /// A versioned parameter snapshot (learner → actors; `wire::encode_params`).
+    Params = 2,
+    /// One actor window's shard bundle (actor → learner; `wire::encode_bundle`).
+    TrajBundle = 3,
+    /// Orderly end-of-run; no payload. The sender closes right after.
+    Shutdown = 4,
+}
+
+impl FrameKind {
+    pub fn from_u8(b: u8) -> Option<Self> {
+        match b {
+            1 => Some(FrameKind::Hello),
+            2 => Some(FrameKind::Params),
+            3 => Some(FrameKind::TrajBundle),
+            4 => Some(FrameKind::Shutdown),
+            _ => None,
+        }
+    }
+}
+
+/// Encode one frame into a fresh buffer. The payload is appended with a
+/// single contiguous copy — column blocks serialized by `wire` stay one
+/// memcpy end to end.
+pub fn encode_frame(kind: FrameKind, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + 4);
+    out.extend_from_slice(&WIRE_MAGIC);
+    out.push(WIRE_VERSION);
+    out.push(kind as u8);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    let crc = crc32(&out[4..]);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Decode one complete frame from `bytes`. Rejects trailing bytes — a
+/// frame is a whole message, so extra bytes mean a framing bug.
+pub fn decode_frame(bytes: &[u8]) -> Result<(FrameKind, Vec<u8>), TransportError> {
+    if bytes.len() < 4 {
+        return Err(TransportError::Truncated { context: "frame magic" });
+    }
+    if bytes[..4] != WIRE_MAGIC {
+        let mut found = [0u8; 4];
+        found.copy_from_slice(&bytes[..4]);
+        return Err(TransportError::BadMagic { found });
+    }
+    if bytes.len() < HEADER_LEN {
+        return Err(TransportError::Truncated { context: "frame header" });
+    }
+    if bytes[4] != WIRE_VERSION {
+        return Err(TransportError::UnsupportedVersion { found: bytes[4] });
+    }
+    let kind = FrameKind::from_u8(bytes[5]).ok_or(TransportError::BadKind { found: bytes[5] })?;
+    let len = u64::from_le_bytes(bytes[6..14].try_into().unwrap());
+    if len > MAX_FRAME_LEN {
+        return Err(TransportError::FrameTooLarge { len, max: MAX_FRAME_LEN });
+    }
+    let len = len as usize;
+    let need = HEADER_LEN + len + 4;
+    if bytes.len() < need {
+        return Err(TransportError::Truncated { context: "frame payload" });
+    }
+    if bytes.len() > need {
+        return Err(TransportError::Corrupt {
+            context: "frame",
+            detail: format!("{} trailing bytes after the frame", bytes.len() - need),
+        });
+    }
+    let stored = u32::from_le_bytes(bytes[need - 4..need].try_into().unwrap());
+    let computed = crc32(&bytes[4..need - 4]);
+    if stored != computed {
+        return Err(TransportError::CrcMismatch { stored, computed });
+    }
+    Ok((kind, bytes[HEADER_LEN..HEADER_LEN + len].to_vec()))
+}
+
+/// Write one frame to a stream. Returns the bytes written (for the wire
+/// throughput counters).
+pub fn write_frame<W: Write>(
+    w: &mut W,
+    kind: FrameKind,
+    payload: &[u8],
+) -> Result<u64, TransportError> {
+    let mut header = [0u8; HEADER_LEN];
+    header[..4].copy_from_slice(&WIRE_MAGIC);
+    header[4] = WIRE_VERSION;
+    header[5] = kind as u8;
+    header[6..14].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    let crc = crc32_update(crc32_update(0xFFFF_FFFF, &header[4..]), payload) ^ 0xFFFF_FFFF;
+    w.write_all(&header).map_err(map_write_err)?;
+    w.write_all(payload).map_err(map_write_err)?;
+    w.write_all(&crc.to_le_bytes()).map_err(map_write_err)?;
+    w.flush().map_err(map_write_err)?;
+    Ok(HEADER_LEN as u64 + payload.len() as u64 + 4)
+}
+
+/// Read one frame from a stream. Returns `(kind, payload, bytes_read)`.
+///
+/// Timeout semantics: a read timeout *before the first magic byte* is the
+/// benign idle case ([`TransportError::ReadTimeout`], the caller re-checks
+/// its stop flag and retries); EOF there is a clean [`TransportError::Closed`].
+/// Once any frame byte has been consumed, EOF or timeout means the peer
+/// died mid-message and surfaces as [`TransportError::Truncated`].
+pub fn read_frame<R: Read>(r: &mut R) -> Result<(FrameKind, Vec<u8>, u64), TransportError> {
+    let mut magic = [0u8; 4];
+    read_exact_at(r, &mut magic, true, "frame magic")?;
+    if magic != WIRE_MAGIC {
+        return Err(TransportError::BadMagic { found: magic });
+    }
+    let mut rest = [0u8; HEADER_LEN - 4];
+    read_exact_at(r, &mut rest, false, "frame header")?;
+    if rest[0] != WIRE_VERSION {
+        return Err(TransportError::UnsupportedVersion { found: rest[0] });
+    }
+    let kind = FrameKind::from_u8(rest[1]).ok_or(TransportError::BadKind { found: rest[1] })?;
+    let len = u64::from_le_bytes(rest[2..10].try_into().unwrap());
+    if len > MAX_FRAME_LEN {
+        return Err(TransportError::FrameTooLarge { len, max: MAX_FRAME_LEN });
+    }
+    let mut payload = vec![0u8; len as usize];
+    read_exact_at(r, &mut payload, false, "frame payload")?;
+    let mut crc_buf = [0u8; 4];
+    read_exact_at(r, &mut crc_buf, false, "frame crc")?;
+    let stored = u32::from_le_bytes(crc_buf);
+    let computed = crc32_update(crc32_update(0xFFFF_FFFF, &rest), &payload) ^ 0xFFFF_FFFF;
+    if stored != computed {
+        return Err(TransportError::CrcMismatch { stored, computed });
+    }
+    let total = HEADER_LEN as u64 + len + 4;
+    Ok((kind, payload, total))
+}
+
+fn read_exact_at<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    frame_start: bool,
+    context: &'static str,
+) -> Result<(), TransportError> {
+    match r.read_exact(buf) {
+        Ok(()) => Ok(()),
+        Err(e) => Err(match e.kind() {
+            std::io::ErrorKind::UnexpectedEof if frame_start => TransportError::Closed,
+            std::io::ErrorKind::UnexpectedEof => TransportError::Truncated { context },
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut if frame_start => {
+                TransportError::ReadTimeout { waited: std::time::Duration::ZERO }
+            }
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                TransportError::Truncated { context }
+            }
+            std::io::ErrorKind::ConnectionReset | std::io::ErrorKind::BrokenPipe
+                if frame_start =>
+            {
+                TransportError::Closed
+            }
+            _ => TransportError::Io(e),
+        }),
+    }
+}
+
+fn map_write_err(e: std::io::Error) -> TransportError {
+    match e.kind() {
+        std::io::ErrorKind::BrokenPipe
+        | std::io::ErrorKind::ConnectionReset
+        | std::io::ErrorKind::ConnectionAborted
+        | std::io::ErrorKind::UnexpectedEof => TransportError::Closed,
+        _ => TransportError::Io(e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrips_through_bytes_and_streams() {
+        let payload: Vec<u8> = (0..=255).collect();
+        let bytes = encode_frame(FrameKind::TrajBundle, &payload);
+        let (kind, back) = decode_frame(&bytes).unwrap();
+        assert_eq!(kind, FrameKind::TrajBundle);
+        assert_eq!(back, payload);
+
+        // streaming writer produces the identical byte sequence
+        let mut streamed = Vec::new();
+        let n = write_frame(&mut streamed, FrameKind::TrajBundle, &payload).unwrap();
+        assert_eq!(streamed, bytes);
+        assert_eq!(n as usize, bytes.len());
+
+        let mut cursor = std::io::Cursor::new(&bytes);
+        let (kind, back, read) = read_frame(&mut cursor).unwrap();
+        assert_eq!(kind, FrameKind::TrajBundle);
+        assert_eq!(back, payload);
+        assert_eq!(read as usize, bytes.len());
+    }
+
+    #[test]
+    fn empty_payload_frames_work() {
+        let bytes = encode_frame(FrameKind::Shutdown, &[]);
+        assert_eq!(bytes.len(), HEADER_LEN + 4);
+        let (kind, payload) = decode_frame(&bytes).unwrap();
+        assert_eq!(kind, FrameKind::Shutdown);
+        assert!(payload.is_empty());
+    }
+
+    #[test]
+    fn eof_between_frames_is_closed_not_truncated() {
+        let mut empty = std::io::Cursor::new(Vec::<u8>::new());
+        assert!(matches!(read_frame(&mut empty), Err(TransportError::Closed)));
+        // ... but EOF inside a frame is a typed truncation
+        let bytes = encode_frame(FrameKind::Params, b"abc");
+        let mut cut = std::io::Cursor::new(bytes[..bytes.len() - 2].to_vec());
+        assert!(matches!(
+            read_frame(&mut cut),
+            Err(TransportError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn hostile_length_is_capped_before_allocation() {
+        let mut bytes = encode_frame(FrameKind::Params, b"xy");
+        bytes[6..14].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(
+            decode_frame(&bytes),
+            Err(TransportError::FrameTooLarge { .. })
+        ));
+    }
+
+    #[test]
+    fn wrong_magic_version_kind_each_get_their_variant() {
+        let good = encode_frame(FrameKind::Hello, b"p");
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(decode_frame(&bad), Err(TransportError::BadMagic { .. })));
+        let mut bad = good.clone();
+        bad[4] = 99;
+        assert!(matches!(
+            decode_frame(&bad),
+            Err(TransportError::UnsupportedVersion { found: 99 })
+        ));
+        let mut bad = good.clone();
+        bad[5] = 0xEE;
+        assert!(matches!(decode_frame(&bad), Err(TransportError::BadKind { found: 0xEE })));
+        let mut bad = good;
+        *bad.last_mut().unwrap() ^= 0x01;
+        assert!(matches!(decode_frame(&bad), Err(TransportError::CrcMismatch { .. })));
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut bytes = encode_frame(FrameKind::Hello, b"p");
+        bytes.push(0);
+        assert!(matches!(decode_frame(&bytes), Err(TransportError::Corrupt { .. })));
+    }
+}

@@ -1,0 +1,246 @@
+//! The in-process transport: channel-backed connections that still move
+//! *encoded frame bytes* (DESIGN.md §15).
+//!
+//! Loopback exists for two reasons. First, it lets the distributed runner
+//! be tested (and bit-exactness-pinned against the in-memory coordinator)
+//! without sockets. Second — and this is deliberate — it does **not**
+//! shortcut the codec: every `send` runs `encode_frame` and every `recv`
+//! runs `decode_frame`, so a loopback run exercises exactly the bytes a
+//! TCP run puts on the wire. Only the pipe differs.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::error::TransportError;
+use super::frame::{decode_frame, encode_frame, FrameKind};
+use super::{ConnectOpts, Connection, Listener, Transport};
+
+type FrameBytes = Vec<u8>;
+
+/// Shared address book: listeners register under a name, connects look the
+/// name up and push their half of a crossed channel pair through it.
+/// Clone-cheap — every pod thread in a test shares one transport.
+#[derive(Clone)]
+pub struct LoopbackTransport {
+    addrs: Arc<Mutex<HashMap<String, mpsc::Sender<LoopConn>>>>,
+    read_timeout: Duration,
+    accept_timeout: Duration,
+}
+
+impl Default for LoopbackTransport {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LoopbackTransport {
+    pub fn new() -> Self {
+        Self {
+            addrs: Arc::default(),
+            read_timeout: Duration::from_secs(5),
+            accept_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+impl Transport for LoopbackTransport {
+    fn listen(&self, addr: &str) -> Result<Box<dyn Listener>, TransportError> {
+        let (tx, rx) = mpsc::channel();
+        let mut addrs = self.addrs.lock().unwrap();
+        if addrs.contains_key(addr) {
+            return Err(TransportError::Io(std::io::Error::new(
+                std::io::ErrorKind::AddrInUse,
+                format!("loopback address {addr:?} already has a listener"),
+            )));
+        }
+        addrs.insert(addr.to_string(), tx);
+        Ok(Box::new(LoopListener {
+            rx,
+            addr: addr.to_string(),
+            accept_timeout: self.accept_timeout,
+        }))
+    }
+
+    fn connect(
+        &self,
+        addr: &str,
+        opts: &ConnectOpts,
+    ) -> Result<Box<dyn Connection>, TransportError> {
+        let attempts = opts.attempts.max(1);
+        for attempt in 1..=attempts {
+            let registered = self.addrs.lock().unwrap().get(addr).cloned();
+            if let Some(accept_tx) = registered {
+                let (c2s_tx, c2s_rx) = mpsc::channel::<FrameBytes>();
+                let (s2c_tx, s2c_rx) = mpsc::channel::<FrameBytes>();
+                let server_side = LoopConn::new(s2c_tx, c2s_rx, self.read_timeout, addr);
+                if accept_tx.send(server_side).is_ok() {
+                    return Ok(Box::new(LoopConn::new(
+                        c2s_tx,
+                        s2c_rx,
+                        self.read_timeout,
+                        addr,
+                    )));
+                }
+                // listener dropped between lookup and send: fall through to retry
+            }
+            if attempt < attempts {
+                std::thread::sleep(opts.backoff * attempt);
+            }
+        }
+        Err(TransportError::ConnectFailed {
+            addr: addr.to_string(),
+            attempts,
+            last: "no loopback listener at this address".to_string(),
+        })
+    }
+}
+
+struct LoopListener {
+    rx: mpsc::Receiver<LoopConn>,
+    addr: String,
+    accept_timeout: Duration,
+}
+
+impl Listener for LoopListener {
+    fn accept(&mut self) -> Result<Box<dyn Connection>, TransportError> {
+        match self.rx.recv_timeout(self.accept_timeout) {
+            Ok(conn) => Ok(Box::new(conn)),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                Err(TransportError::ReadTimeout { waited: self.accept_timeout })
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(TransportError::Closed),
+        }
+    }
+
+    fn local_addr(&self) -> String {
+        self.addr.clone()
+    }
+}
+
+/// One half of a crossed channel pair. Frames travel as encoded bytes;
+/// closing drops our sender (the peer's receiver disconnects → `Closed`)
+/// and flips a flag so our own blocked `recv` also returns promptly.
+struct LoopConn {
+    tx: Mutex<Option<mpsc::Sender<FrameBytes>>>,
+    rx: Mutex<mpsc::Receiver<FrameBytes>>,
+    closed: Arc<AtomicBool>,
+    read_timeout: Duration,
+    peer: String,
+}
+
+impl LoopConn {
+    fn new(
+        tx: mpsc::Sender<FrameBytes>,
+        rx: mpsc::Receiver<FrameBytes>,
+        read_timeout: Duration,
+        peer: &str,
+    ) -> Self {
+        Self {
+            tx: Mutex::new(Some(tx)),
+            rx: Mutex::new(rx),
+            closed: Arc::new(AtomicBool::new(false)),
+            read_timeout,
+            peer: peer.to_string(),
+        }
+    }
+}
+
+impl Connection for LoopConn {
+    fn send(&self, kind: FrameKind, payload: &[u8]) -> Result<u64, TransportError> {
+        let bytes = encode_frame(kind, payload);
+        let n = bytes.len() as u64;
+        let guard = self.tx.lock().unwrap();
+        match guard.as_ref() {
+            Some(tx) => tx.send(bytes).map_err(|_| TransportError::Closed)?,
+            None => return Err(TransportError::Closed),
+        }
+        Ok(n)
+    }
+
+    fn recv(&self) -> Result<(FrameKind, Vec<u8>, u64), TransportError> {
+        if self.closed.load(Ordering::Acquire) {
+            return Err(TransportError::Closed);
+        }
+        let rx = self.rx.lock().unwrap();
+        // Poll in short slices so a local `close()` interrupts a blocked
+        // recv instead of waiting out the full window.
+        let deadline = Instant::now() + self.read_timeout;
+        loop {
+            let slice = Duration::from_millis(20)
+                .min(deadline.saturating_duration_since(Instant::now()));
+            match rx.recv_timeout(slice) {
+                Ok(bytes) => {
+                    let n = bytes.len() as u64;
+                    let (kind, payload) = decode_frame(&bytes)?;
+                    return Ok((kind, payload, n));
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => return Err(TransportError::Closed),
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if self.closed.load(Ordering::Acquire) {
+                        return Err(TransportError::Closed);
+                    }
+                    if Instant::now() >= deadline {
+                        return Err(TransportError::ReadTimeout { waited: self.read_timeout });
+                    }
+                }
+            }
+        }
+    }
+
+    fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        *self.tx.lock().unwrap() = None;
+    }
+
+    fn peer(&self) -> String {
+        format!("loopback:{}", self.peer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_moves_real_frames() {
+        let t = LoopbackTransport::new();
+        let mut l = t.listen("podA").unwrap();
+        let client = t.connect("podA", &ConnectOpts::default()).unwrap();
+        let server = l.accept().unwrap();
+        client.send(FrameKind::Params, b"hello").unwrap();
+        let (kind, payload, n) = server.recv().unwrap();
+        assert_eq!(kind, FrameKind::Params);
+        assert_eq!(payload, b"hello");
+        assert!(n > 5, "frame bytes include header + crc");
+        // and the reverse direction
+        server.send(FrameKind::Shutdown, &[]).unwrap();
+        let (kind, payload, _) = client.recv().unwrap();
+        assert_eq!(kind, FrameKind::Shutdown);
+        assert!(payload.is_empty());
+    }
+
+    #[test]
+    fn connect_without_listener_is_a_typed_bounded_failure() {
+        let t = LoopbackTransport::new();
+        let opts = ConnectOpts {
+            attempts: 2,
+            backoff: Duration::from_millis(1),
+            ..ConnectOpts::default()
+        };
+        let err = t.connect("nowhere", &opts).unwrap_err();
+        assert!(matches!(err, TransportError::ConnectFailed { attempts: 2, .. }), "{err}");
+    }
+
+    #[test]
+    fn close_surfaces_as_closed_on_the_peer() {
+        let t = LoopbackTransport::new();
+        let mut l = t.listen("podB").unwrap();
+        let client = t.connect("podB", &ConnectOpts::default()).unwrap();
+        let server = l.accept().unwrap();
+        client.close();
+        assert!(server.recv().unwrap_err().is_closed());
+        assert!(client.send(FrameKind::Params, b"x").unwrap_err().is_closed());
+    }
+}

@@ -1,0 +1,88 @@
+//! The multi-pod transport seam (DESIGN.md §15).
+//!
+//! Everything above this module speaks [`Transport`] / [`Listener`] /
+//! [`Connection`] — the seam the ROADMAP's "take TensorBus over the wire"
+//! item carves under `coordinator/collective.rs`. Below it live two
+//! interchangeable pipes:
+//!
+//! * [`loopback::LoopbackTransport`] — in-process channels that still move
+//!   encoded frame bytes (the codec runs; only the pipe is fake);
+//! * [`tcp::TcpTransport`] — real sockets, length-prefixed CRC-framed
+//!   messages, connect/read timeouts with bounded retry + backoff.
+//!
+//! On top of the seam, [`dist::DistSebulba`] runs one Sebulba experiment as
+//! a learner pod plus K actor-pod processes: trajectory bundles flow
+//! actor→learner as [`frame::FrameKind::TrajBundle`] frames preserving the
+//! arena's shard-major layout ([`wire`]), and versioned parameters flow
+//! learner→actors as [`frame::FrameKind::Params`] frames with
+//! `latest_if_newer` pub/sub semantics.
+//!
+//! The robustness contract is uniform: every blocking call has a timeout,
+//! every failure is a [`TransportError`] variant, and a dead peer
+//! propagates — never a hang, never a silent drop (the TensorBus poisoning
+//! discipline of DESIGN.md §10, extended over the wire).
+
+pub mod dist;
+pub mod error;
+pub mod frame;
+pub mod loopback;
+pub mod tcp;
+pub mod wire;
+
+pub use dist::DistSebulba;
+pub use error::TransportError;
+pub use frame::FrameKind;
+pub use loopback::LoopbackTransport;
+pub use tcp::TcpTransport;
+
+use std::time::Duration;
+
+/// Dial-side knobs: how long one connect attempt may take, how many
+/// attempts the budget allows, and the (linear) backoff between them.
+#[derive(Clone, Debug)]
+pub struct ConnectOpts {
+    pub connect_timeout: Duration,
+    /// Total attempt budget — retry is bounded by construction.
+    pub attempts: u32,
+    /// Backoff between attempts grows linearly: `backoff * attempt`.
+    pub backoff: Duration,
+}
+
+impl Default for ConnectOpts {
+    fn default() -> Self {
+        Self {
+            connect_timeout: Duration::from_secs(1),
+            attempts: 10,
+            backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+/// A pipe factory: bind a listener or dial a peer. Implementations are
+/// cheap to clone/share across pod threads.
+pub trait Transport: Send + Sync {
+    fn listen(&self, addr: &str) -> Result<Box<dyn Listener>, TransportError>;
+    fn connect(&self, addr: &str, opts: &ConnectOpts)
+        -> Result<Box<dyn Connection>, TransportError>;
+}
+
+/// An accept loop with a deadline: waiting for a pod that never comes is a
+/// typed [`TransportError::ReadTimeout`], not a hang.
+pub trait Listener: Send {
+    fn accept(&mut self) -> Result<Box<dyn Connection>, TransportError>;
+    fn local_addr(&self) -> String;
+}
+
+/// One framed, bidirectional pod-to-pod connection. `send`/`recv` take
+/// `&self` so a receiver thread can block in `recv` while another thread
+/// `send`s (TCP backs this with independently locked socket clones). Both
+/// return the frame's wire size for the throughput counters.
+pub trait Connection: Send + Sync {
+    fn send(&self, kind: FrameKind, payload: &[u8]) -> Result<u64, TransportError>;
+    /// Blocks up to the transport's read timeout; an expired idle window is
+    /// `TransportError::ReadTimeout` (retry after re-checking stop flags).
+    fn recv(&self) -> Result<(FrameKind, Vec<u8>, u64), TransportError>;
+    /// Close both directions; the peer's next `recv` sees `Closed`.
+    fn close(&self);
+    fn peer(&self) -> String;
+}

@@ -1,0 +1,192 @@
+//! The real-socket transport: TCP with length-prefixed CRC-framed messages
+//! (DESIGN.md §15).
+//!
+//! Robustness contract: `connect` retries with linear backoff up to a
+//! bounded attempt budget and returns a typed
+//! [`TransportError::ConnectFailed`] / [`ConnectTimeout`] when the budget
+//! is spent; every read carries the socket read timeout so a stalled peer
+//! surfaces as [`TransportError::ReadTimeout`] instead of a hang; `accept`
+//! polls a nonblocking listener against its own deadline for the same
+//! reason.
+//!
+//! [`ConnectTimeout`]: TransportError::ConnectTimeout
+
+use std::io::ErrorKind;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::error::TransportError;
+use super::frame::{read_frame, write_frame, FrameKind};
+use super::{ConnectOpts, Connection, Listener, Transport};
+
+/// TCP transport. `read_timeout` applies to every `recv` on connections it
+/// creates (both dialed and accepted); `accept_timeout` bounds how long a
+/// listener waits for the next pod to arrive.
+#[derive(Clone, Debug)]
+pub struct TcpTransport {
+    pub read_timeout: Duration,
+    pub accept_timeout: Duration,
+}
+
+impl Default for TcpTransport {
+    fn default() -> Self {
+        Self {
+            read_timeout: Duration::from_secs(5),
+            accept_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+fn resolve(addr: &str) -> Result<SocketAddr, TransportError> {
+    addr.to_socket_addrs()
+        .map_err(|e| TransportError::ConnectFailed {
+            addr: addr.to_string(),
+            attempts: 0,
+            last: format!("address did not resolve: {e}"),
+        })?
+        .next()
+        .ok_or_else(|| TransportError::ConnectFailed {
+            addr: addr.to_string(),
+            attempts: 0,
+            last: "address resolved to nothing".to_string(),
+        })
+}
+
+impl Transport for TcpTransport {
+    fn listen(&self, addr: &str) -> Result<Box<dyn Listener>, TransportError> {
+        let inner = TcpListener::bind(addr)?;
+        // Nonblocking + poll: a plain `accept()` has no timeout, and "never
+        // a hang" includes waiting for pods that will never come.
+        inner.set_nonblocking(true)?;
+        let local = inner.local_addr()?.to_string();
+        Ok(Box::new(TcpPodListener {
+            inner,
+            local,
+            read_timeout: self.read_timeout,
+            accept_timeout: self.accept_timeout,
+        }))
+    }
+
+    fn connect(
+        &self,
+        addr: &str,
+        opts: &ConnectOpts,
+    ) -> Result<Box<dyn Connection>, TransportError> {
+        let sock = resolve(addr)?;
+        let started = Instant::now();
+        let mut last = String::new();
+        for attempt in 1..=opts.attempts.max(1) {
+            match TcpStream::connect_timeout(&sock, opts.connect_timeout) {
+                Ok(stream) => return Ok(Box::new(TcpConn::new(stream, self.read_timeout)?)),
+                Err(e) => {
+                    if e.kind() == ErrorKind::TimedOut {
+                        return Err(TransportError::ConnectTimeout {
+                            addr: addr.to_string(),
+                            waited: started.elapsed(),
+                        });
+                    }
+                    last = e.to_string();
+                }
+            }
+            if attempt < opts.attempts.max(1) {
+                // Linear backoff keeps the total bounded and predictable:
+                // sum = backoff * attempts * (attempts + 1) / 2.
+                std::thread::sleep(opts.backoff * attempt);
+            }
+        }
+        Err(TransportError::ConnectFailed {
+            addr: addr.to_string(),
+            attempts: opts.attempts.max(1),
+            last,
+        })
+    }
+}
+
+struct TcpPodListener {
+    inner: TcpListener,
+    local: String,
+    read_timeout: Duration,
+    accept_timeout: Duration,
+}
+
+impl Listener for TcpPodListener {
+    fn accept(&mut self) -> Result<Box<dyn Connection>, TransportError> {
+        let deadline = Instant::now() + self.accept_timeout;
+        loop {
+            match self.inner.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    return Ok(Box::new(TcpConn::new(stream, self.read_timeout)?));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(TransportError::ReadTimeout { waited: self.accept_timeout });
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(TransportError::Io(e)),
+            }
+        }
+    }
+
+    fn local_addr(&self) -> String {
+        self.local.clone()
+    }
+}
+
+/// One framed TCP connection. Reader and writer halves are independently
+/// locked clones of the same socket, so a receiver thread can block in
+/// `recv` while the publisher thread `send`s.
+struct TcpConn {
+    read: Mutex<TcpStream>,
+    write: Mutex<TcpStream>,
+    peer: String,
+    read_timeout: Duration,
+}
+
+impl TcpConn {
+    fn new(stream: TcpStream, read_timeout: Duration) -> Result<Self, TransportError> {
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(read_timeout))?;
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "<unknown>".to_string());
+        let read = stream.try_clone()?;
+        Ok(Self {
+            read: Mutex::new(read),
+            write: Mutex::new(stream),
+            peer,
+            read_timeout,
+        })
+    }
+}
+
+impl Connection for TcpConn {
+    fn send(&self, kind: FrameKind, payload: &[u8]) -> Result<u64, TransportError> {
+        let mut w = self.write.lock().unwrap();
+        write_frame(&mut *w, kind, payload)
+    }
+
+    fn recv(&self) -> Result<(FrameKind, Vec<u8>, u64), TransportError> {
+        let mut r = self.read.lock().unwrap();
+        read_frame(&mut *r).map_err(|e| match e {
+            // stamp the configured window into the idle-timeout variant
+            TransportError::ReadTimeout { .. } => {
+                TransportError::ReadTimeout { waited: self.read_timeout }
+            }
+            other => other,
+        })
+    }
+
+    fn close(&self) {
+        if let Ok(w) = self.write.lock() {
+            let _ = w.shutdown(Shutdown::Both);
+        }
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+}

@@ -1,0 +1,355 @@
+//! Payload codecs for the pod-to-pod frames: trajectory shard bundles and
+//! versioned parameter snapshots (DESIGN.md §15).
+//!
+//! The trajectory codec preserves the arena's shard-major column layout
+//! (DESIGN.md §11): a bundle is encoded as its geometry header followed by
+//! the five whole columns, each written as one contiguous block, and
+//! decoded by rebuilding an `Arc`-shared [`TrajArena`] with
+//! [`TrajArena::from_columns`] and re-slicing it into zero-copy
+//! [`TrajShard`] views — the receiving learner sees exactly the shards the
+//! sending actor queued, without a per-step or per-shard copy on either
+//! side.
+//!
+//! Decoding is hostile-input safe in the same way the checkpoint reader is:
+//! every slice is length-prefixed, lengths are validated against the
+//! remaining buffer before allocation, arena geometry is re-validated by
+//! `from_columns`, and trailing bytes are rejected.
+
+use std::sync::Arc;
+
+use crate::coordinator::sharder;
+use crate::coordinator::trajectory::{TrajArena, TrajShard};
+
+use super::error::TransportError;
+
+// -- primitive buffer accessors ----------------------------------------------
+
+/// Accumulates one frame payload. Mirrors the checkpoint `SectionWriter`
+/// but stays in the transport's error domain.
+#[derive(Default)]
+pub struct WireWriter {
+    buf: Vec<u8>,
+}
+
+impl WireWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed `u64` slice (used for `obs_shape`).
+    pub fn put_u64s(&mut self, vs: &[u64]) {
+        self.put_u64(vs.len() as u64);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed `f32` column, written as one contiguous block.
+    pub fn put_f32s(&mut self, vs: &[f32]) {
+        self.put_u64(vs.len() as u64);
+        self.buf.reserve(vs.len() * 4);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed `i32` column, written as one contiguous block.
+    pub fn put_i32s(&mut self, vs: &[i32]) {
+        self.put_u64(vs.len() as u64);
+        self.buf.reserve(vs.len() * 4);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Cursor over one frame payload with hostile-length guards: every length
+/// prefix is validated against the remaining bytes *before* allocating.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    context: &'static str,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(context: &'static str, buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0, context }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], TransportError> {
+        if self.buf.len() - self.pos < n {
+            return Err(TransportError::Truncated { context: self.context });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u64(&mut self) -> Result<u64, TransportError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A `u64` that must fit a `usize` (geometry fields).
+    pub fn dim(&mut self) -> Result<usize, TransportError> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| TransportError::Corrupt {
+            context: self.context,
+            detail: format!("dimension {v} does not fit usize"),
+        })
+    }
+
+    fn len_prefix(&mut self, elem_bytes: usize) -> Result<usize, TransportError> {
+        let n = self.dim()?;
+        match n.checked_mul(elem_bytes) {
+            Some(total) if total <= self.buf.len() - self.pos => Ok(n),
+            _ => Err(TransportError::Truncated { context: self.context }),
+        }
+    }
+
+    pub fn u64s(&mut self) -> Result<Vec<u64>, TransportError> {
+        let n = self.len_prefix(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>, TransportError> {
+        let n = self.len_prefix(4)?;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn i32s(&mut self) -> Result<Vec<i32>, TransportError> {
+        let n = self.len_prefix(4)?;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Every payload byte must be consumed — trailing bytes are a codec
+    /// bug or corruption, never ignorable.
+    pub fn done(&self) -> Result<(), TransportError> {
+        if self.pos != self.buf.len() {
+            return Err(TransportError::Corrupt {
+                context: self.context,
+                detail: format!("{} trailing bytes", self.buf.len() - self.pos),
+            });
+        }
+        Ok(())
+    }
+}
+
+// -- parameter snapshots ------------------------------------------------------
+
+/// Encode a versioned parameter snapshot (learner → actor pods).
+pub fn encode_params(version: u64, params: &[f32]) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.put_u64(version);
+    w.put_f32s(params);
+    w.finish()
+}
+
+/// Decode a versioned parameter snapshot.
+pub fn decode_params(buf: &[u8]) -> Result<(u64, Vec<f32>), TransportError> {
+    let mut r = WireReader::new("param-snapshot", buf);
+    let version = r.u64()?;
+    let params = r.f32s()?;
+    r.done()?;
+    Ok((version, params))
+}
+
+// -- trajectory bundles -------------------------------------------------------
+
+/// Encode one actor window's shard bundle. The bundle must be the complete
+/// shard set of one arena, in shard order — exactly what the actor's
+/// `EnvPoolSource` pushes (`sharder::shard(&arena)`), so the whole window
+/// serializes as five contiguous column writes.
+pub fn encode_bundle(shards: &[TrajShard]) -> Result<Vec<u8>, TransportError> {
+    let first = shards.first().ok_or(TransportError::Corrupt {
+        context: "traj-bundle",
+        detail: "empty shard bundle".to_string(),
+    })?;
+    let arena = first.arena();
+    if shards.len() != arena.num_shards
+        || shards
+            .iter()
+            .enumerate()
+            .any(|(i, s)| s.index() != i || !Arc::ptr_eq(s.arena(), arena))
+    {
+        return Err(TransportError::Corrupt {
+            context: "traj-bundle",
+            detail: format!(
+                "bundle of {} shards does not cover its {}-shard arena in order",
+                shards.len(),
+                arena.num_shards
+            ),
+        });
+    }
+    let mut w = WireWriter::new();
+    w.put_u64(arena.t_len as u64);
+    w.put_u64(arena.batch as u64);
+    w.put_u64s(&arena.obs_shape.iter().map(|&d| d as u64).collect::<Vec<_>>());
+    w.put_u64(arena.num_actions as u64);
+    w.put_u64(arena.num_shards as u64);
+    w.put_u64(arena.param_version);
+    w.put_u64(arena.actor_id as u64);
+    w.put_f32s(&arena.obs);
+    w.put_i32s(&arena.actions);
+    w.put_f32s(&arena.rewards);
+    w.put_f32s(&arena.discounts);
+    w.put_f32s(&arena.behaviour_logits);
+    Ok(w.finish())
+}
+
+/// Decode a shard bundle: rebuild the `Arc`-shared arena (geometry
+/// re-validated by [`TrajArena::from_columns`]) and re-slice it into its
+/// zero-copy shard views.
+pub fn decode_bundle(buf: &[u8]) -> Result<Vec<TrajShard>, TransportError> {
+    let mut r = WireReader::new("traj-bundle", buf);
+    let t_len = r.dim()?;
+    let batch = r.dim()?;
+    let obs_shape: Vec<usize> = {
+        let dims = r.u64s()?;
+        let mut out = Vec::with_capacity(dims.len());
+        for d in dims {
+            out.push(usize::try_from(d).map_err(|_| TransportError::Corrupt {
+                context: "traj-bundle",
+                detail: format!("obs dim {d} does not fit usize"),
+            })?);
+        }
+        out
+    };
+    let num_actions = r.dim()?;
+    let num_shards = r.dim()?;
+    let param_version = r.u64()?;
+    let actor_id = r.dim()?;
+    let obs = r.f32s()?;
+    let actions = r.i32s()?;
+    let rewards = r.f32s()?;
+    let discounts = r.f32s()?;
+    let behaviour_logits = r.f32s()?;
+    r.done()?;
+    let arena = TrajArena::from_columns(
+        t_len,
+        batch,
+        &obs_shape,
+        num_actions,
+        num_shards,
+        obs,
+        actions,
+        rewards,
+        discounts,
+        behaviour_logits,
+        param_version,
+        actor_id,
+    )
+    .map_err(|e| TransportError::Corrupt {
+        context: "traj-bundle",
+        detail: format!("{e:#}"),
+    })?;
+    Ok(sharder::shard(&arena))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trajectory::TrajectoryBuilder;
+
+    fn make_bundle(t: usize, b: usize, d: usize, a: usize, n: usize) -> Vec<TrajShard> {
+        let mut builder = TrajectoryBuilder::new(t, b, &[d], a, n);
+        for ti in 0..t {
+            let obs: Vec<f32> = (0..b * d).map(|i| (ti * 100 + i) as f32 * 0.5).collect();
+            let actions: Vec<i32> = (0..b).map(|i| (ti + i) as i32).collect();
+            let logits: Vec<f32> = (0..b * a).map(|i| (ti * 3 + i) as f32 * 0.1).collect();
+            let rewards: Vec<f32> = (0..b).map(|i| i as f32 - 1.0).collect();
+            let discounts = vec![0.99; b];
+            builder.push_step(&obs, &actions, &logits, &rewards, &discounts).unwrap();
+        }
+        let final_obs = vec![0.25; b * d];
+        let arena = builder.finish(&final_obs, 7, 2).unwrap();
+        sharder::shard(&arena)
+    }
+
+    #[test]
+    fn bundle_roundtrips_bit_exactly() {
+        let bundle = make_bundle(3, 6, 2, 3, 3);
+        let bytes = encode_bundle(&bundle).unwrap();
+        let back = decode_bundle(&bytes).unwrap();
+        assert_eq!(back.len(), bundle.len());
+        for (a, b) in bundle.iter().zip(&back) {
+            assert_eq!(a.index(), b.index());
+            assert_eq!(a.obs(), b.obs());
+            assert_eq!(a.actions(), b.actions());
+            assert_eq!(a.rewards(), b.rewards());
+            assert_eq!(a.discounts(), b.discounts());
+            assert_eq!(a.behaviour_logits(), b.behaviour_logits());
+            assert_eq!(a.param_version(), b.param_version());
+            assert_eq!(a.actor_id(), b.actor_id());
+        }
+        // the decoded shards share one rebuilt arena, zero-copy
+        assert!(Arc::ptr_eq(back[0].arena(), back[1].arena()));
+    }
+
+    #[test]
+    fn params_roundtrip() {
+        let params: Vec<f32> = (0..100).map(|i| i as f32 * 0.125 - 3.0).collect();
+        let bytes = encode_params(42, &params);
+        let (v, back) = decode_params(&bytes).unwrap();
+        assert_eq!(v, 42);
+        assert_eq!(back, params);
+    }
+
+    #[test]
+    fn partial_or_reordered_bundles_are_rejected_at_encode() {
+        let mut bundle = make_bundle(2, 4, 1, 2, 2);
+        bundle.swap(0, 1);
+        assert!(matches!(
+            encode_bundle(&bundle),
+            Err(TransportError::Corrupt { .. })
+        ));
+        let partial = make_bundle(2, 4, 1, 2, 2).split_off(1);
+        assert!(matches!(
+            encode_bundle(&partial),
+            Err(TransportError::Corrupt { .. })
+        ));
+        assert!(encode_bundle(&[]).is_err());
+    }
+
+    #[test]
+    fn inconsistent_geometry_is_a_typed_corrupt_error() {
+        let bundle = make_bundle(2, 4, 1, 2, 2);
+        let mut bytes = encode_bundle(&bundle).unwrap();
+        // grow the declared batch: column sizes no longer match the geometry
+        bytes[8..16].copy_from_slice(&8u64.to_le_bytes());
+        assert!(matches!(
+            decode_bundle(&bytes),
+            Err(TransportError::Truncated { .. }) | Err(TransportError::Corrupt { .. })
+        ));
+    }
+
+    #[test]
+    fn trailing_payload_bytes_are_rejected() {
+        let bundle = make_bundle(2, 4, 1, 2, 2);
+        let mut bytes = encode_bundle(&bundle).unwrap();
+        bytes.push(0xAB);
+        assert!(matches!(
+            decode_bundle(&bytes),
+            Err(TransportError::Corrupt { .. })
+        ));
+    }
+}

@@ -335,6 +335,7 @@ fn random_topology(g: &mut Gen) -> Topology {
         learner_pipeline: g.usize(1, 3).max(1),
         env_workers: g.usize(1, 4).max(1),
         queue_capacity: g.usize(1, 8).max(1),
+        pods: std::num::NonZeroUsize::new(g.usize(1, 3).max(1)).unwrap(),
     }
 }
 
@@ -627,4 +628,189 @@ fn prop_rng_streams_are_reproducible() {
             Ok(())
         },
     );
+}
+
+// -- wire frame codec (transport seam, DESIGN.md §15) -------------------------
+//
+// The same hostile-input discipline as the checkpoint fuzz suite above,
+// applied to the pod-to-pod frame format: lossless roundtrip, every
+// truncated prefix a typed error, every flipped byte a typed error.
+
+use podracer::transport::frame::{decode_frame, encode_frame};
+use podracer::transport::wire::{decode_bundle, decode_params, encode_bundle, encode_params};
+use podracer::transport::{ConnectOpts, FrameKind, LoopbackTransport, Transport, TransportError};
+
+#[derive(Debug)]
+struct FrameData {
+    kind: FrameKind,
+    payload: Vec<u8>,
+}
+
+fn random_frame(g: &mut Gen) -> FrameData {
+    let kinds =
+        [FrameKind::Hello, FrameKind::Params, FrameKind::TrajBundle, FrameKind::Shutdown];
+    let kind = *g.pick(&kinds);
+    let n = g.usize(0, 200);
+    FrameData { kind, payload: random_bytes(g, n) }
+}
+
+#[test]
+fn prop_wire_frames_roundtrip_losslessly() {
+    check("frame encode/decode roundtrip", 50, random_frame, |data| {
+        let bytes = encode_frame(data.kind, &data.payload);
+        let (kind, payload) = decode_frame(&bytes).map_err(|e| e.to_string())?;
+        if kind != data.kind || payload != data.payload {
+            return Err("decoded frame differs from the encoded one".into());
+        }
+        // the streaming reader sees the identical message
+        let mut cursor = std::io::Cursor::new(&bytes);
+        let (kind, payload, n) =
+            podracer::transport::frame::read_frame(&mut cursor).map_err(|e| e.to_string())?;
+        if kind != data.kind || payload != data.payload || n as usize != bytes.len() {
+            return Err("streamed frame differs from the buffered one".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_truncated_frame_is_a_typed_error() {
+    check("every frame truncation is TransportError::Truncated", 30, random_frame, |data| {
+        let bytes = encode_frame(data.kind, &data.payload);
+        let mut cuts = vec![0, 1, 3, 4, 5, 6, 13];
+        cuts.extend((14..bytes.len()).step_by(5));
+        cuts.push(bytes.len() - 1);
+        for cut in cuts {
+            if cut >= bytes.len() {
+                continue;
+            }
+            match decode_frame(&bytes[..cut]) {
+                Err(TransportError::Truncated { .. }) => {}
+                Err(other) => return Err(format!("cut {cut}: wrong variant {other}")),
+                Ok(_) => return Err(format!("cut {cut}: a prefix decoded successfully")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flipped_frame_byte_never_decodes_silently() {
+    // Any single-byte flip anywhere in a frame must be rejected: the magic
+    // and version bytes by their own checks, everything after by the CRC.
+    check("single byte flip always rejected", 30, random_frame, |data| {
+        let bytes = encode_frame(data.kind, &data.payload);
+        for pos in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x10;
+            if decode_frame(&bad).is_ok() {
+                return Err(format!("flip at byte {pos} decoded successfully"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_param_snapshots_roundtrip_and_reject_truncation() {
+    check(
+        "param bundle codec",
+        40,
+        |g| (g.usize(0, 10_000) as u64, g.vec_f32(g.usize(0, 256), -100.0, 100.0)),
+        |(version, params)| {
+            let payload = encode_params(*version, params);
+            let (v, back) = decode_params(&payload).map_err(|e| e.to_string())?;
+            if v != *version || back != *params {
+                return Err("param snapshot changed in flight".into());
+            }
+            for cut in 0..payload.len() {
+                match decode_params(&payload[..cut]) {
+                    Err(TransportError::Truncated { .. }) => {}
+                    Err(other) => return Err(format!("cut {cut}: wrong variant {other}")),
+                    Ok(_) => return Err(format!("cut {cut}: a prefix decoded")),
+                }
+            }
+            let mut extra = payload.clone();
+            extra.push(0);
+            if !matches!(decode_params(&extra), Err(TransportError::Corrupt { .. })) {
+                return Err("trailing payload bytes were not rejected".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_traj_bundles_roundtrip_bit_exactly_over_the_codec() {
+    check("traj bundle wire roundtrip", 30, random_traj_data, |data| {
+        let n = (1..=data.b).rev().find(|n| data.b % n == 0).unwrap();
+        let arena = build_arena(data, n);
+        let shards = shard(&arena);
+        let payload = encode_bundle(&shards).map_err(|e| e.to_string())?;
+        let back = decode_bundle(&payload).map_err(|e| e.to_string())?;
+        if back.len() != shards.len() {
+            return Err(format!("{} shards decoded, {} sent", back.len(), shards.len()));
+        }
+        for (a, b) in shards.iter().zip(&back) {
+            if a.obs() != b.obs()
+                || a.actions() != b.actions()
+                || a.rewards() != b.rewards()
+                || a.discounts() != b.discounts()
+                || a.behaviour_logits() != b.behaviour_logits()
+                || a.param_version() != b.param_version()
+                || a.actor_id() != b.actor_id()
+            {
+                return Err(format!("shard {} changed in flight", a.index()));
+            }
+        }
+        // truncation sweep over the *framed* bundle, mirroring the
+        // checkpoint suite (the payload-level sweep runs above for params)
+        let framed = encode_frame(FrameKind::TrajBundle, &payload);
+        for cut in (0..framed.len()).step_by(97) {
+            if decode_frame(&framed[..cut]).is_ok() {
+                return Err(format!("framed cut {cut} decoded"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_loopback_transport_delivers_bundles_bit_exactly() {
+    // The loopback pipe runs the real codec on every frame; what the
+    // receiving side decodes must equal the shard views the in-memory bus
+    // would have handed over directly.
+    check("loopback == in-memory shard views", 15, random_traj_data, |data| {
+        let n = (1..=data.b).rev().find(|n| data.b % n == 0).unwrap();
+        let arena = build_arena(data, n);
+        let shards = shard(&arena);
+
+        let t = LoopbackTransport::new();
+        let mut listener = t.listen("prop-pod").map_err(|e| e.to_string())?;
+        let client = t.connect("prop-pod", &ConnectOpts::default()).map_err(|e| e.to_string())?;
+        let server = listener.accept().map_err(|e| e.to_string())?;
+
+        let payload = encode_bundle(&shards).map_err(|e| e.to_string())?;
+        client.send(FrameKind::TrajBundle, &payload).map_err(|e| e.to_string())?;
+        let (kind, received, _) = server.recv().map_err(|e| e.to_string())?;
+        if kind != FrameKind::TrajBundle {
+            return Err(format!("wrong frame kind {kind:?}"));
+        }
+        let back = decode_bundle(&received).map_err(|e| e.to_string())?;
+        for (a, b) in shards.iter().zip(&back) {
+            if a.obs() != b.obs()
+                || a.actions() != b.actions()
+                || a.rewards() != b.rewards()
+                || a.discounts() != b.discounts()
+                || a.behaviour_logits() != b.behaviour_logits()
+            {
+                return Err(format!("shard {} differs after the wire", a.index()));
+            }
+        }
+        client.close();
+        if !server.recv().unwrap_err().is_closed() {
+            return Err("peer close did not surface as Closed".into());
+        }
+        Ok(())
+    });
 }

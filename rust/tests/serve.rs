@@ -20,7 +20,8 @@ use podracer::experiment::serve_from_args;
 use podracer::runtime::tensor::HostTensor;
 use podracer::runtime::Pod;
 use podracer::serve::{
-    session_channel, spawn_serve_loop, ConnectError, ServeClient, ServeConfig, SessionSource,
+    session_channel, spawn_serve_loop, ConnectError, ServeClient, ServeConfig, ServeError,
+    SessionSource,
 };
 use podracer::util::cli::Args;
 
@@ -52,6 +53,9 @@ fn admission_control_bounds_the_session_backlog() {
 fn requests_validate_observation_length() {
     let (client, _endpoint) = session_channel(2, 4);
     let mut h = client.connect().unwrap();
+    // typed, so callers can branch on the cause...
+    assert_eq!(h.step(&[0.0; 3]).unwrap_err(), ServeError::BadRequest { got: 3, want: 4 });
+    // ...and the message still names the mismatch for humans
     let err = h.step(&[0.0; 3]).unwrap_err().to_string();
     assert!(err.contains("floats"), "{err}");
 }
@@ -72,8 +76,32 @@ fn late_connects_and_steps_fail_fast_once_the_server_is_gone() {
     .unwrap();
     drop(source); // serving loop tears down
     assert!(matches!(client.connect(), Err(ConnectError::Shutdown)));
+    assert_eq!(pre.step(&[0.0; 4]).unwrap_err(), ServeError::Shutdown);
     let err = pre.step(&[0.0; 4]).unwrap_err().to_string();
     assert!(err.contains("shut down"), "{err}");
+}
+
+#[test]
+fn serve_config_splits_losslessly_into_runner_and_topology() {
+    // same contract as SebulbaConfig / MuZeroRunConfig: the workload half
+    // resolved against the core-split half reproduces the config exactly
+    let cfg = ServeConfig {
+        agent: "seb_grid".into(),
+        batch: 16,
+        pipeline_stages: 3,
+        queue: 5,
+        sessions: 9,
+        steps: 13,
+        swap_every: 17,
+        seed: 99,
+        ..ServeConfig::default()
+    };
+    assert_eq!(cfg.runner().resolved(&cfg.topology()), cfg);
+    let topo = cfg.topology();
+    assert_eq!(topo.pipeline_stages, 3);
+    assert_eq!(topo.queue_capacity, 5);
+    // serving is one actor core, no learner slice
+    assert_eq!(topo.total_cores(), 1);
 }
 
 fn drive_session(

@@ -1,0 +1,226 @@
+//! The multi-pod Sebulba oracle (ISSUE 8 acceptance): a distributed run —
+//! one learner pod plus one actor pod exchanging `TrajShard`s and
+//! parameter snapshots over the wire — must produce `final_params`
+//! bit-identical to the single-process in-memory run at the deterministic
+//! `updates=1` anchor.
+//!
+//! Why `updates=1` is bit-exact across transports: the handshake ships the
+//! version-0 snapshot before any acting starts, so the entire first actor
+//! window is generated under identical parameters regardless of wire
+//! latency, and the learner's grad → reduce → apply over that window is
+//! the same arithmetic in both worlds (DESIGN.md §15).
+//!
+//! Two oracles: the in-process `LoopbackTransport` (every byte still runs
+//! the real frame codec) pins the seam itself, and a real `TcpTransport`
+//! run through the public `Experiment` builder (`--role`/`--listen`/
+//! `--connect` equivalent) pins the end-to-end API. Negative cases pin the
+//! "never a hang" contract: a refused dial and a non-plain spec are typed
+//! errors within the bounded retry budget.
+
+use std::net::TcpListener;
+use std::num::NonZeroUsize;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use podracer::checkpoint::CheckpointSpec;
+use podracer::coordinator::Sebulba;
+use podracer::experiment::{
+    Arch, EnvKind, Experiment, ExperimentBuilder, PodRole, Report, RunSpec, Runner, Topology,
+};
+use podracer::runtime::Pod;
+use podracer::transport::{DistSebulba, LoopbackTransport, Transport, TransportError};
+
+fn artifacts() -> PathBuf {
+    let dir = podracer::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    dir
+}
+
+/// The deterministic anchor workload: same knobs as the restore oracle.
+fn workload() -> Sebulba {
+    Sebulba {
+        agent: "seb_catch".into(),
+        env_kind: EnvKind::Catch,
+        actor_batch: 32,
+        unroll: 20,
+        total_updates: 1,
+        seed: 123,
+        ..Sebulba::default()
+    }
+}
+
+/// One actor core, one learner core, no pipelining — the same slice on
+/// both sides of the wire. `pods` picks in-memory (1) vs distributed (2).
+fn topo(pods: usize) -> Topology {
+    Topology {
+        actor_cores: 1,
+        learner_cores: 1,
+        threads_per_actor_core: 1,
+        pipeline_stages: 1,
+        learner_pipeline: 1,
+        queue_capacity: 2,
+        pods: NonZeroUsize::new(pods).unwrap(),
+        ..Topology::default()
+    }
+}
+
+fn bits(params: &[f32]) -> Vec<u32> {
+    params.iter().map(|p| p.to_bits()).collect()
+}
+
+/// Run the learner pod and one actor pod concurrently over `transport`
+/// and return both reports. Each pod sizes its own `Pod` for its role
+/// slice, exactly as two separate processes would.
+fn run_pods(
+    transport: Arc<dyn Transport>,
+    addr: &str,
+) -> (anyhow::Result<Report>, anyhow::Result<Report>) {
+    let art = artifacts();
+    let learner = DistSebulba::learner(workload(), addr, 1).with_transport(transport.clone());
+    let actor = DistSebulba::actor(workload(), addr).with_transport(transport);
+
+    let learner_thread = {
+        let art = art.clone();
+        thread::spawn(move || {
+            let t = topo(2);
+            let mut pod = Pod::new(&art, t.cores_for_role(PodRole::Learner))?;
+            learner.run(&mut pod, &t)
+        })
+    };
+    // Give the learner a head start toward `listen`; the actor's bounded
+    // retry budget absorbs the rest of the race.
+    thread::sleep(Duration::from_millis(100));
+    let actor_thread = thread::spawn(move || {
+        let t = topo(2);
+        let mut pod = Pod::new(&art, t.cores_for_role(PodRole::Actor))?;
+        actor.run(&mut pod, &t)
+    });
+    (learner_thread.join().unwrap(), actor_thread.join().unwrap())
+}
+
+#[test]
+fn loopback_two_pod_run_matches_in_memory_final_params_bitwise() {
+    // In-memory baseline: the plain single-pod Sebulba run.
+    let t1 = topo(1);
+    let mut pod = Pod::new(&artifacts(), t1.total_cores()).unwrap();
+    let baseline = workload().run(&mut pod, &t1).unwrap();
+    assert_eq!(baseline.updates, 1);
+
+    // Distributed run over the in-process seam (real frames, no sockets).
+    let (learner, actor) = run_pods(Arc::new(LoopbackTransport::new()), "oracle-pod");
+    let learner = learner.expect("learner pod completed");
+    let actor = actor.expect("actor pod completed");
+
+    assert_eq!(learner.updates, 1);
+    assert!(actor.steps > 0, "the actor pod must have stepped environments");
+    assert!(!baseline.final_params.is_empty());
+    assert_eq!(
+        bits(&learner.final_params),
+        bits(&baseline.final_params),
+        "distributed final_params must be bit-identical to the in-memory run"
+    );
+}
+
+/// A loopback address with a port that was free a moment ago. The actor's
+/// retry budget tolerates the learner re-binding it slightly later.
+fn free_addr() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+    addr
+}
+
+fn experiment(pods: usize) -> ExperimentBuilder {
+    Experiment::new(Arch::Sebulba)
+        .artifacts(&artifacts())
+        .agent("seb_catch")
+        .env(EnvKind::Catch)
+        .topology(topo(pods))
+        .actor_batch(32)
+        .unroll(20)
+        .updates(1)
+        .seed(123)
+}
+
+#[test]
+fn tcp_two_pod_experiment_matches_in_memory_final_params_bitwise() {
+    // Baseline through the same public builder, single pod, in memory.
+    let baseline = experiment(1).build().unwrap().run().unwrap();
+
+    // The distributed halves through the builder's role API — what
+    // `podracer sebulba --pods 2 --role learner/actor ...` constructs —
+    // over real TCP on a loopback socket.
+    let addr = free_addr();
+    let learner = experiment(2).role(PodRole::Learner).listen(&addr).build().unwrap();
+    let actor = experiment(2).role(PodRole::Actor).connect(&addr).build().unwrap();
+    assert_eq!(learner.role(), PodRole::Learner);
+    assert_eq!(actor.role(), PodRole::Actor);
+
+    let learner_thread = thread::spawn(move || learner.run());
+    thread::sleep(Duration::from_millis(100));
+    let actor_thread = thread::spawn(move || actor.run());
+
+    let learner_report = learner_thread.join().unwrap().expect("learner pod completed");
+    let actor_report = actor_thread.join().unwrap().expect("actor pod completed");
+
+    assert_eq!(learner_report.updates, 1);
+    assert!(actor_report.steps > 0);
+    assert_eq!(
+        bits(&learner_report.final_params),
+        bits(&baseline.final_params),
+        "TCP two-pod run must be bit-identical to the in-memory run"
+    );
+}
+
+#[test]
+fn refused_dial_is_a_typed_error_within_the_retry_budget() {
+    // No listener ever registers "nowhere": the actor must fail with a
+    // typed ConnectFailed after its bounded retries — never hang.
+    let actor = DistSebulba::actor(workload(), "nowhere")
+        .with_transport(Arc::new(LoopbackTransport::new()));
+    let t = topo(2);
+    let mut pod = Pod::new(&artifacts(), t.cores_for_role(PodRole::Actor)).unwrap();
+
+    let start = Instant::now();
+    let err = actor.run(&mut pod, &t).expect_err("dial to nowhere must fail");
+    let elapsed = start.elapsed();
+
+    let transport_err = err
+        .chain()
+        .find_map(|e| e.downcast_ref::<TransportError>())
+        .unwrap_or_else(|| panic!("error chain must carry a TransportError: {err:?}"));
+    match transport_err {
+        TransportError::ConnectFailed { attempts, .. } => assert!(*attempts >= 1),
+        other => panic!("expected ConnectFailed, got {other:?}"),
+    }
+    // 10 attempts x 50ms backoff plus slack: bounded, not a hang.
+    assert!(elapsed < Duration::from_secs(10), "dial must give up quickly, took {elapsed:?}");
+}
+
+#[test]
+fn distributed_runs_reject_non_plain_specs_and_colocated_dispatch() {
+    let t = topo(2);
+    let mut pod = Pod::new(&artifacts(), 1).unwrap();
+
+    // Elasticity knobs don't cross the wire yet: typed rejection, not a
+    // silently ignored checkpoint.
+    let learner = DistSebulba::learner(workload(), "spec-pod", 1)
+        .with_transport(Arc::new(LoopbackTransport::new()));
+    let spec = RunSpec {
+        checkpoint: Some(CheckpointSpec::new(1, std::env::temp_dir().join("dist_oracle.ckpt"))),
+        ..RunSpec::default()
+    };
+    let err = learner.run_checkpointed(&mut pod, &t, &spec).unwrap_err().to_string();
+    assert!(err.contains("checkpoint/restore/fault"), "{err}");
+
+    // Colocated dispatch through DistSebulba is a construction bug.
+    let mut colocated = DistSebulba::learner(workload(), "spec-pod", 1)
+        .with_transport(Arc::new(LoopbackTransport::new()));
+    colocated.role = PodRole::Colocated;
+    let err = colocated.run(&mut pod, &t).unwrap_err().to_string();
+    assert!(err.contains("colocated") || err.contains("Colocated"), "{err}");
+}

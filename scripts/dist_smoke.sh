@@ -1,0 +1,160 @@
+#!/usr/bin/env bash
+# Dist smoke (ISSUE 8): multi-pod Sebulba as real separate processes over
+# loopback TCP. Positive case: one learner pod + two actor pods
+# (`--pods 3`) complete a one-update experiment and the learner prints the
+# unified report line. Negative cases pin the "never a hang, never a
+# silent drop" contract: an actor dialing a dead port must exit nonzero
+# with the typed connect diagnostic within the bounded retry budget; a
+# killed actor pod mid-run must surface as a learner-side hard error
+# naming the lost pod; and inconsistent role/address flags are hard
+# errors, same contract as every other subcommand (DESIGN.md §15).
+#
+# Wired into CI next to cli-smoke/restore-smoke/serve-smoke; run locally
+# with `make dist-smoke`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${PODRACER_BIN:-target/release/podracer}
+if [[ ! -x "$BIN" ]]; then
+    echo "[dist-smoke] $BIN missing — run 'cargo build --release' first" >&2
+    exit 1
+fi
+
+TMP=$(mktemp -d "${TMPDIR:-/tmp}/podracer_dist_smoke.XXXXXX")
+PIDS=()
+cleanup() {
+    for pid in "${PIDS[@]:-}"; do kill "$pid" 2>/dev/null || true; done
+    rm -rf "$TMP"
+}
+trap cleanup EXIT
+
+free_port() {
+    python3 - <<'EOF'
+import socket
+s = socket.socket()
+s.bind(("127.0.0.1", 0))
+print(s.getsockname()[1])
+s.close()
+EOF
+}
+
+fail=0
+
+# The same deterministic anchor the oracle test pins: tiny catch workload,
+# one actor core and one learner core per pod.
+COMMON=(sebulba --agent seb_catch --env catch --actor-cores 1 --learner-cores 1
+        --threads 1 --pipeline-stages 1 --batch 32 --unroll 20 --seed 123)
+
+# --- positive: 1 learner + 2 actor pods, three processes, one update ---------
+ADDR="127.0.0.1:$(free_port)"
+echo "== pods=3 learner+2 actors over $ADDR, one update =="
+timeout 120 "$BIN" "${COMMON[@]}" --updates 1 --pods 3 \
+    --role learner --listen "$ADDR" > "$TMP/learner.log" 2>&1 &
+LEARNER=$!
+PIDS+=("$LEARNER")
+sleep 0.3
+for i in 1 2; do
+    timeout 120 "$BIN" "${COMMON[@]}" --updates 1 --pods 3 \
+        --role actor --connect "$ADDR" > "$TMP/actor$i.log" 2>&1 &
+    PIDS+=("$!")
+done
+
+ok=1
+for pid in "${PIDS[@]}"; do
+    wait "$pid" || ok=0
+done
+PIDS=()
+if [[ "$ok" -ne 1 ]]; then
+    cat "$TMP/learner.log" "$TMP/actor1.log" "$TMP/actor2.log"
+    echo "[dist-smoke] FAILED (pods=3): a pod exited nonzero" >&2
+    fail=1
+fi
+head -n 1 "$TMP/learner.log"
+if ! grep -Eq 'sebulba: .*updates=1' "$TMP/learner.log"; then
+    cat "$TMP/learner.log"
+    echo "[dist-smoke] FAILED (pods=3): learner report line missing" >&2
+    fail=1
+fi
+
+# --- negative: dial a dead port — typed error, bounded time ------------------
+DEAD="127.0.0.1:$(free_port)"
+echo "== actor dials dead $DEAD (must fail fast) =="
+start=$SECONDS
+if timeout 60 "$BIN" "${COMMON[@]}" --updates 1 --pods 2 \
+    --role actor --connect "$DEAD" > "$TMP/refused.log" 2>&1; then
+    cat "$TMP/refused.log"
+    echo "[dist-smoke] FAILED (refused dial): expected nonzero exit" >&2
+    fail=1
+fi
+elapsed=$((SECONDS - start))
+head -n 2 "$TMP/refused.log"
+if ! grep -Eqi 'connect.*attempt|attempt.*connect' "$TMP/refused.log"; then
+    cat "$TMP/refused.log"
+    echo "[dist-smoke] FAILED (refused dial): no typed connect diagnostic" >&2
+    fail=1
+fi
+if (( elapsed > 30 )); then
+    echo "[dist-smoke] FAILED (refused dial): took ${elapsed}s — retry budget must bound it" >&2
+    fail=1
+fi
+
+# --- negative: kill an actor pod mid-run — the learner surfaces the loss -----
+ADDR="127.0.0.1:$(free_port)"
+echo "== pods=3 with one actor killed mid-run over $ADDR =="
+timeout 120 "$BIN" "${COMMON[@]}" --updates 100000 --pods 3 \
+    --role learner --listen "$ADDR" > "$TMP/lossy_learner.log" 2>&1 &
+LEARNER=$!
+PIDS+=("$LEARNER")
+sleep 0.3
+timeout 120 "$BIN" "${COMMON[@]}" --updates 100000 --pods 3 \
+    --role actor --connect "$ADDR" > "$TMP/victim.log" 2>&1 &
+VICTIM=$!
+PIDS+=("$VICTIM")
+timeout 120 "$BIN" "${COMMON[@]}" --updates 100000 --pods 3 \
+    --role actor --connect "$ADDR" > "$TMP/survivor.log" 2>&1 &
+PIDS+=("$!")
+
+sleep 2
+kill -9 "$VICTIM" 2>/dev/null || true
+if wait "$LEARNER"; then
+    cat "$TMP/lossy_learner.log"
+    echo "[dist-smoke] FAILED (actor kill): learner must exit nonzero" >&2
+    fail=1
+fi
+if ! grep -Eqi 'lost|wire failure|closed' "$TMP/lossy_learner.log"; then
+    cat "$TMP/lossy_learner.log"
+    echo "[dist-smoke] FAILED (actor kill): learner did not name the loss" >&2
+    fail=1
+fi
+tail -n 1 "$TMP/lossy_learner.log"
+# the surviving actor is torn down too (shutdown broadcast or learner exit);
+# its status doesn't matter, it just must not linger
+for pid in "${PIDS[@]}"; do wait "$pid" 2>/dev/null || true; done
+PIDS=()
+
+# --- negative: inconsistent role/address flags are hard errors ---------------
+expect_error() {
+    local desc="$1"
+    shift
+    echo "== podracer $* (must fail) =="
+    if timeout 60 "$BIN" "$@" > "$TMP/out.log" 2>&1; then
+        cat "$TMP/out.log"
+        echo "[dist-smoke] FAILED ($desc): expected nonzero exit" >&2
+        fail=1
+        return
+    fi
+    head -n 2 "$TMP/out.log"
+}
+
+expect_error "pods without role"    sebulba --updates 1 --pods 2
+expect_error "bare --listen"        sebulba --updates 1 --pods 2 --role learner --listen
+expect_error "actor without addr"   sebulba --updates 1 --pods 2 --role actor
+expect_error "learner on one pod"   sebulba --updates 1 --role learner --listen 127.0.0.1:1
+expect_error "unknown role"         sebulba --updates 1 --pods 2 --role observer --listen 127.0.0.1:1
+expect_error "pods on anakin"       anakin --outer-iters 1 --pods 2
+
+if [[ "$fail" -ne 0 ]]; then
+    echo "[dist-smoke] FAILURES above" >&2
+    exit 1
+fi
+echo "[dist-smoke] all cases passed"
