@@ -9,7 +9,7 @@ SMOKE_BENCHES := fig4a_anakin_scaling ablation_learner_pipeline ablation_pipelin
 
 .PHONY: all artifacts build test quickstart bench bench-learner-pipeline \
         bench-smoke bench-baseline cli-smoke restore-smoke serve-smoke dist-smoke \
-        fmt clippy
+        elastic-smoke fmt clippy
 
 all: artifacts build
 
@@ -78,6 +78,14 @@ serve-smoke: build
 # smokes.
 dist-smoke: build
 	bash scripts/dist_smoke.sh
+
+# Elastic smoke (ISSUE 9): epoch-based membership as separate processes —
+# an elastic learner rides out a SIGKILLed actor pod, admits a fresh
+# joiner mid-run, finishes every update and reports the churn in its
+# membership counters; elastic flags off the distributed surface are
+# rejected (scripts/elastic_smoke.sh). Runs in CI next to dist-smoke.
+elastic-smoke: build
+	bash scripts/elastic_smoke.sh
 
 # Regenerate the committed baselines from a smoke run on this machine
 # (same PODRACER_BENCH_FAST=1 conditions CI compares under).

@@ -16,6 +16,7 @@
 //! ends up behind `version()` forever and actors keep reading the stale
 //! params as if they were fresh.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
@@ -169,9 +170,73 @@ impl ParamStore {
     }
 }
 
+/// Epoch-aware subscriber registry for the wire Params publisher
+/// (DESIGN.md §16). The publisher thread broadcasts each new snapshot to
+/// exactly the pods registered here; eviction retires an entry, so a dead
+/// pod stops receiving Params frames the moment its membership ends rather
+/// than when its socket finally errors. Each entry remembers the membership
+/// epoch it joined at, purely as a diagnostic anchor — retirement is by pod
+/// index, which the `Membership` registry never reuses.
+#[derive(Default)]
+pub struct SubscriberSet {
+    inner: Mutex<BTreeMap<usize, u64>>,
+}
+
+impl SubscriberSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a pod at its admission epoch. Re-registering an index
+    /// (which `Membership` never hands out twice) just updates the epoch.
+    pub fn register(&self, pod: usize, epoch: u64) {
+        self.inner.lock().unwrap().insert(pod, epoch);
+    }
+
+    /// Retire a pod; returns whether it was registered. Idempotent, like
+    /// `Membership::depart`.
+    pub fn retire(&self, pod: usize) -> bool {
+        self.inner.lock().unwrap().remove(&pod).is_some()
+    }
+
+    pub fn contains(&self, pod: usize) -> bool {
+        self.inner.lock().unwrap().contains_key(&pod)
+    }
+
+    /// Snapshot of the active pod indices, in index order. A snapshot (not
+    /// a held lock) so the publisher never sends frames under the registry
+    /// lock.
+    pub fn active(&self) -> Vec<usize> {
+        self.inner.lock().unwrap().keys().copied().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn subscriber_set_registers_and_retires_by_pod_index() {
+        let subs = SubscriberSet::new();
+        assert!(subs.is_empty());
+        subs.register(0, 1);
+        subs.register(2, 3);
+        assert_eq!(subs.active(), vec![0, 2]);
+        assert!(subs.contains(2));
+        assert!(subs.retire(2));
+        assert!(!subs.retire(2), "retirement is idempotent");
+        assert!(!subs.contains(2));
+        assert_eq!(subs.active(), vec![0]);
+        assert_eq!(subs.len(), 1);
+    }
 
     #[test]
     fn versions_are_monotonic() {

@@ -207,6 +207,12 @@ pub struct RunStats {
     pub wire_rx_frames: AtomicU64,
     pub wire_tx_bytes: AtomicU64,
     pub wire_rx_bytes: AtomicU64,
+    /// Elastic membership accounting (DESIGN.md §16): pods admitted and
+    /// retired over the run, and the final membership epoch. Static runs
+    /// leave all three at 0.
+    pub pods_joined: AtomicU64,
+    pub pods_evicted: AtomicU64,
+    pub membership_epoch: AtomicU64,
 }
 
 impl RunStats {
@@ -412,8 +418,16 @@ impl RunStats {
         f64::from_bits(self.episode_reward_sum_bits.load(Ordering::Relaxed)) / n as f64
     }
 
+    /// Fold a membership snapshot into the counters (learner pod, on every
+    /// change): totals are monotone, so plain stores are fine.
+    pub fn record_membership(&self, joined: u64, evicted: u64, epoch: u64) {
+        self.pods_joined.store(joined, Ordering::Relaxed);
+        self.pods_evicted.store(evicted, Ordering::Relaxed);
+        self.membership_epoch.store(epoch, Ordering::Relaxed);
+    }
+
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "frames={} fps={:.0} updates={} traj={} staleness={:.2} loss={:.4} episodes={} ep_reward={:.3} | infer p50={:.1}ms grad p50={:.1}ms",
             self.env_frames.frames(),
             self.env_frames.fps(),
@@ -425,7 +439,17 @@ impl RunStats {
             self.mean_episode_reward(),
             self.inference_latency.percentile_seconds(50.0) * 1e3,
             self.grad_latency.percentile_seconds(50.0) * 1e3,
-        )
+        );
+        let epoch = self.membership_epoch.load(Ordering::Relaxed);
+        if epoch > 0 {
+            s.push_str(&format!(
+                " | membership epoch={} joined={} evicted={}",
+                epoch,
+                self.pods_joined.load(Ordering::Relaxed),
+                self.pods_evicted.load(Ordering::Relaxed),
+            ));
+        }
+        s
     }
 }
 

@@ -44,6 +44,7 @@ pub mod topology;
 use std::fmt;
 use std::path::{Path, PathBuf};
 use std::str::FromStr;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -191,6 +192,9 @@ pub struct ExperimentBuilder {
     role: Option<PodRole>,
     listen: Option<String>,
     connect: Option<String>,
+    elastic: Option<bool>,
+    min_actor_pods: Option<usize>,
+    heartbeat_ms: Option<u64>,
 }
 
 impl ExperimentBuilder {
@@ -219,6 +223,9 @@ impl ExperimentBuilder {
             role: None,
             listen: None,
             connect: None,
+            elastic: None,
+            min_actor_pods: None,
+            heartbeat_ms: None,
         }
     }
 
@@ -368,6 +375,29 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Epoch-based elastic membership (distributed Sebulba only,
+    /// DESIGN.md §16): the learner admits actor pods whenever they join
+    /// and tolerates departures down to [`Self::min_actor_pods`].
+    pub fn elastic(mut self, on: bool) -> Self {
+        self.elastic = Some(on);
+        self
+    }
+
+    /// Elastic learner: fail closed when active membership drops below
+    /// this floor (requires [`Self::elastic`]).
+    pub fn min_actor_pods(mut self, n: usize) -> Self {
+        self.min_actor_pods = Some(n);
+        self
+    }
+
+    /// Elastic heartbeat window in milliseconds: actors beacon at a third
+    /// of it, the learner evicts after a full silent window (requires
+    /// [`Self::elastic`]).
+    pub fn heartbeat_ms(mut self, ms: u64) -> Self {
+        self.heartbeat_ms = Some(ms);
+        self
+    }
+
     /// Reject knobs that were set but mean nothing for `arch`.
     fn reject_inapplicable(&self, knobs: &[(&str, bool)]) -> Result<()> {
         for (name, set) in knobs {
@@ -421,6 +451,9 @@ impl ExperimentBuilder {
                     ("role", self.role.is_some()),
                     ("listen", self.listen.is_some()),
                     ("connect", self.connect.is_some()),
+                    ("elastic", self.elastic.is_some()),
+                    ("min_actor_pods", self.min_actor_pods.is_some()),
+                    ("heartbeat_ms", self.heartbeat_ms.is_some()),
                 ])?;
                 let defaults = Anakin::default();
                 let topo = self.topo.unwrap_or_else(|| Topology::anakin(2));
@@ -459,8 +492,51 @@ impl ExperimentBuilder {
                     warm_start: self.warm_start,
                 };
                 runner.resolved(&topo).validate()?;
+                let elastic = self.elastic.unwrap_or(false);
+                if !elastic && (self.min_actor_pods.is_some() || self.heartbeat_ms.is_some()) {
+                    bail!(
+                        "`min_actor_pods`/`heartbeat_ms` configure elastic membership; \
+                         add `--elastic`"
+                    );
+                }
+                if elastic && role == PodRole::Colocated {
+                    bail!(
+                        "`elastic` needs a distributed role; add `--role learner` or \
+                         `--role actor`"
+                    );
+                }
+                let min_actor_pods = self.min_actor_pods.unwrap_or(1);
+                let heartbeat_ms = self.heartbeat_ms.unwrap_or(1000);
+                if elastic {
+                    if heartbeat_ms == 0 {
+                        bail!("`heartbeat_ms` must be at least 1");
+                    }
+                    if min_actor_pods == 0 {
+                        bail!("`min_actor_pods` must be at least 1");
+                    }
+                    let actor_pods = topo.pods.get().saturating_sub(1);
+                    if min_actor_pods > actor_pods {
+                        bail!(
+                            "min_actor_pods = {} but the topology provisions {} actor \
+                             pod(s); the floor must be reachable at start-up",
+                            min_actor_pods,
+                            actor_pods
+                        );
+                    }
+                }
+                // Pod-level fault plans ride only on elastic distributed
+                // runs; everything else distributed must stay plain.
+                let dist_fault_ok = spec.fault.as_ref().map_or(true, |f| {
+                    f.is_empty() || (elastic && f.pod_faults_only())
+                });
                 let runner: Box<dyn Runner> = match role {
                     PodRole::Colocated => {
+                        if spec.fault.as_ref().map_or(false, |f| f.has_pod_faults()) {
+                            bail!(
+                                "pod-level fault plans need an elastic distributed run; \
+                                 add `--elastic` and a distributed role"
+                            );
+                        }
                         if self.listen.is_some() || self.connect.is_some() {
                             bail!(
                                 "`listen`/`connect` need a distributed role; add \
@@ -492,13 +568,24 @@ impl ExperimentBuilder {
                                 topo.pods
                             );
                         }
-                        if !spec.is_plain() {
+                        if spec.checkpoint.is_some()
+                            || spec.restore_from.is_some()
+                            || !dist_fault_ok
+                        {
                             bail!(
                                 "distributed runs do not support checkpoint/restore/fault \
-                                 injection yet"
+                                 injection beyond pod-level fault plans on elastic runs"
                             );
                         }
-                        Box::new(DistSebulba::learner(runner, &listen, topo.pods.get() - 1))
+                        let mut dist =
+                            DistSebulba::learner(runner, &listen, topo.pods.get() - 1);
+                        if elastic {
+                            dist = dist.with_elastic(
+                                min_actor_pods,
+                                Duration::from_millis(heartbeat_ms),
+                            );
+                        }
+                        Box::new(dist)
                     }
                     PodRole::Actor => {
                         if self.listen.is_some() {
@@ -515,13 +602,23 @@ impl ExperimentBuilder {
                                 topo.pods
                             );
                         }
-                        if !spec.is_plain() {
+                        if spec.checkpoint.is_some()
+                            || spec.restore_from.is_some()
+                            || !dist_fault_ok
+                        {
                             bail!(
                                 "distributed runs do not support checkpoint/restore/fault \
-                                 injection yet"
+                                 injection beyond pod-level fault plans on elastic runs"
                             );
                         }
-                        Box::new(DistSebulba::actor(runner, &connect))
+                        let mut dist = DistSebulba::actor(runner, &connect);
+                        if elastic {
+                            dist = dist.with_elastic(
+                                min_actor_pods,
+                                Duration::from_millis(heartbeat_ms),
+                            );
+                        }
+                        Box::new(dist)
                     }
                 };
                 (topo, runner)
@@ -538,6 +635,9 @@ impl ExperimentBuilder {
                     ("role", self.role.is_some()),
                     ("listen", self.listen.is_some()),
                     ("connect", self.connect.is_some()),
+                    ("elastic", self.elastic.is_some()),
+                    ("min_actor_pods", self.min_actor_pods.is_some()),
+                    ("heartbeat_ms", self.heartbeat_ms.is_some()),
                 ])?;
                 let defaults = MuZero::default();
                 let topo = self.topo.unwrap_or_else(|| Topology {
@@ -624,6 +724,9 @@ mod from_args {
         "role",
         "listen",
         "connect",
+        "elastic",
+        "min-actor-pods",
+        "heartbeat-ms",
     ];
     const MUZERO_FLAGS: &[&str] = &[
         "agent",
@@ -740,6 +843,20 @@ mod from_args {
                 }
                 if let Some(addr) = addr_flag(args, "connect")? {
                     b = b.connect(&addr);
+                }
+                if args.has("elastic") {
+                    // a bare `--elastic` parses as the value "true"
+                    match args.get_str("elastic", "true").as_str() {
+                        "true" => b = b.elastic(true),
+                        "false" => b = b.elastic(false),
+                        other => bail!("--elastic expects true|false, got {other:?}"),
+                    }
+                }
+                if args.has("min-actor-pods") {
+                    b = b.min_actor_pods(args.get_usize("min-actor-pods", 1)?);
+                }
+                if args.has("heartbeat-ms") {
+                    b = b.heartbeat_ms(args.get_u64("heartbeat-ms", 1000)?);
                 }
                 apply_elasticity(b, args)?.build()
             }
@@ -1038,11 +1155,17 @@ mod tests {
             &parse(&["--pods", "2", "--role", "observer"])
         )
         .is_err());
-        // distributed runs exclude the elastic-pod machinery for now
+        // distributed runs never checkpoint (elastic or not)
         assert!(Experiment::from_args(
             Arch::Sebulba,
             &parse(&["--pods", "2", "--role", "learner", "--listen", "127.0.0.1:0",
                      "--checkpoint-every", "2"])
+        )
+        .is_err());
+        assert!(Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--pods", "2", "--role", "learner", "--listen", "127.0.0.1:0",
+                     "--elastic", "--checkpoint-every", "2"])
         )
         .is_err());
         // the other architectures reject multi-pod flags outright
@@ -1057,6 +1180,77 @@ mod tests {
                                  ..Topology::default() })
             .build()
             .is_err());
+    }
+
+    #[test]
+    fn elastic_membership_flags_build_and_validate() {
+        // both distributed roles accept the full elastic surface
+        let exp = Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--pods", "3", "--role", "learner", "--listen", "127.0.0.1:0",
+                     "--elastic", "--min-actor-pods", "1", "--heartbeat-ms", "250"]),
+        )
+        .unwrap();
+        assert_eq!(exp.role(), PodRole::Learner);
+        Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--pods", "3", "--role", "actor", "--connect", "127.0.0.1:7777",
+                     "--elastic"]),
+        )
+        .unwrap();
+        // `--elastic false` is the static default, spelled out
+        let exp = Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--pods", "2", "--role", "learner", "--listen", "127.0.0.1:0",
+                     "--elastic", "false"]),
+        )
+        .unwrap();
+        assert_eq!(exp.role(), PodRole::Learner);
+        // elastic needs a distributed role
+        assert!(Experiment::from_args(Arch::Sebulba, &parse(&["--elastic"])).is_err());
+        assert!(Experiment::new(Arch::Sebulba).elastic(true).build().is_err());
+        // the floor must be reachable with the provisioned actor pods
+        assert!(Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--pods", "2", "--role", "learner", "--listen", "127.0.0.1:0",
+                     "--elastic", "--min-actor-pods", "2"])
+        )
+        .is_err());
+        // a zero floor or a zero heartbeat window is a config bug
+        assert!(Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--pods", "2", "--role", "learner", "--listen", "127.0.0.1:0",
+                     "--elastic", "--min-actor-pods", "0"])
+        )
+        .is_err());
+        assert!(Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--pods", "2", "--role", "learner", "--listen", "127.0.0.1:0",
+                     "--elastic", "--heartbeat-ms", "0"])
+        )
+        .is_err());
+        // the elastic knobs without --elastic are half-configured
+        let err = Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--pods", "2", "--role", "learner", "--listen", "127.0.0.1:0",
+                     "--min-actor-pods", "1"]),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--elastic"), "{err}");
+        assert!(Experiment::new(Arch::Sebulba).heartbeat_ms(500).build().is_err());
+        // non-boolean --elastic values are parse errors
+        assert!(Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--pods", "2", "--role", "learner", "--listen", "127.0.0.1:0",
+                     "--elastic", "maybe"])
+        )
+        .is_err());
+        // the other architectures reject the elastic surface outright
+        assert!(Experiment::from_args(Arch::Anakin, &parse(&["--elastic"])).is_err());
+        assert!(Experiment::from_args(Arch::MuZero, &parse(&["--elastic"])).is_err());
+        assert!(Experiment::new(Arch::Anakin).elastic(true).build().is_err());
+        assert!(Experiment::new(Arch::MuZero).min_actor_pods(1).build().is_err());
     }
 
     #[test]

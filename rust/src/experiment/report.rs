@@ -97,6 +97,17 @@ pub struct ActorLearnerDetail {
     pub learner_overlap_seconds: f64,
     pub queue_push_block_seconds: f64,
     pub queue_pop_block_seconds: f64,
+    /// Elastic membership accounting (DESIGN.md §16). On a learner pod:
+    /// pods admitted / retired over the run and the final membership
+    /// epoch. On an actor pod: `membership_epoch` is its admission epoch.
+    /// All 0 for in-memory and static distributed runs.
+    pub pods_joined: u64,
+    pub pods_evicted: u64,
+    pub membership_epoch: u64,
+    /// Actor pods only: the params version received in the admission
+    /// handshake (a late joiner sees the learner's *current* version, not
+    /// 0). 0 on learner pods and in-memory runs.
+    pub join_param_version: u64,
     /// Optimiser state of replica 0's learner (for warm-starting).
     pub final_opt_state: Vec<f32>,
 }
@@ -193,6 +204,12 @@ impl Report {
                     d.learner_apply_seconds,
                     d.learner_overlap_seconds
                 ));
+                if d.membership_epoch > 0 {
+                    out.push_str(&format!(
+                        "\n  membership: epoch={} pods_joined={} pods_evicted={}",
+                        d.membership_epoch, d.pods_joined, d.pods_evicted
+                    ));
+                }
             }
         }
         out
@@ -230,6 +247,10 @@ mod tests {
                 learner_overlap_seconds: 0.0,
                 queue_push_block_seconds: 0.0,
                 queue_pop_block_seconds: 0.0,
+                pods_joined: 0,
+                pods_evicted: 0,
+                membership_epoch: 0,
+                join_param_version: 0,
                 final_opt_state: vec![3.0],
             }),
         }

@@ -24,6 +24,18 @@ pub struct KillReplica {
     pub round: u64,
 }
 
+/// A pod-level fault coordinate for elastic distributed runs
+/// (DESIGN.md §16): which actor pod (by join ordinal — the order the
+/// learner admits them, which for self-injected faults is the pod's own
+/// membership index) and at which point in its run (`round` counts the
+/// pod's completed trajectory windows, or for `delay_admit` the learner
+/// update count to wait for).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PodFault {
+    pub pod: usize,
+    pub round: u64,
+}
+
 /// The full set of faults a test can schedule for one run. All fields are
 /// independent; `default()` injects nothing.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -34,6 +46,20 @@ pub struct FaultPlan {
     pub poison_queue_after: Option<u64>,
     /// Truncate the checkpoint file to this many bytes after each save.
     pub truncate_checkpoint_to: Option<u64>,
+    /// Actor pod `pod` dies abruptly after `round` windows: connection
+    /// dropped with no `Leave`, as if the process was killed.
+    pub kill_pod: Option<PodFault>,
+    /// Actor pod `pod` goes silent after `round` windows: stops sending
+    /// bundles *and* heartbeats without closing, so the learner's only
+    /// way out is the heartbeat-timeout eviction.
+    pub hang_pod: Option<PodFault>,
+    /// Actor pod `pod` departs gracefully (a `Leave` frame) after `round`
+    /// windows.
+    pub leave_pod: Option<PodFault>,
+    /// Learner-side: park the `pod`-th join (0-based admission ordinal)
+    /// until the learner has finished `round` updates, then admit it —
+    /// the delayed-join fault for the late-joiner oracle.
+    pub delay_admit: Option<PodFault>,
 }
 
 impl FaultPlan {
@@ -52,9 +78,49 @@ impl FaultPlan {
         Self { truncate_checkpoint_to: Some(len), ..Self::default() }
     }
 
+    /// Schedule an abrupt actor-pod death (no `Leave`) at `(pod, round)`.
+    pub fn kill_pod(pod: usize, round: u64) -> Self {
+        Self { kill_pod: Some(PodFault { pod, round }), ..Self::default() }
+    }
+
+    /// Schedule an actor pod going silent (no frames, no close) at
+    /// `(pod, round)`.
+    pub fn hang_pod(pod: usize, round: u64) -> Self {
+        Self { hang_pod: Some(PodFault { pod, round }), ..Self::default() }
+    }
+
+    /// Schedule a graceful actor-pod departure at `(pod, round)`.
+    pub fn leave_pod(pod: usize, round: u64) -> Self {
+        Self { leave_pod: Some(PodFault { pod, round }), ..Self::default() }
+    }
+
+    /// Schedule the `pod`-th join to be parked until `round` learner
+    /// updates have finished.
+    pub fn delay_admit(pod: usize, round: u64) -> Self {
+        Self { delay_admit: Some(PodFault { pod, round }), ..Self::default() }
+    }
+
     /// True if the kill fault fires for this `(replica, round)`.
     pub fn should_kill(&self, replica: usize, round: u64) -> bool {
         self.kill_replica == Some(KillReplica { replica, round })
+    }
+
+    /// True if the plan carries any pod-level (elastic) fault.
+    pub fn has_pod_faults(&self) -> bool {
+        self.kill_pod.is_some()
+            || self.hang_pod.is_some()
+            || self.leave_pod.is_some()
+            || self.delay_admit.is_some()
+    }
+
+    /// True if the plan carries *only* pod-level faults — the shape an
+    /// elastic distributed run accepts (thread-level faults still need
+    /// the single-process lockstep machinery of DESIGN.md §13).
+    pub fn pod_faults_only(&self) -> bool {
+        self.has_pod_faults()
+            && self.kill_replica.is_none()
+            && self.poison_queue_after.is_none()
+            && self.truncate_checkpoint_to.is_none()
     }
 
     /// True if the plan injects nothing at all.
@@ -91,5 +157,22 @@ mod tests {
         assert_eq!(FaultPlan::poison_queue(5).poison_queue_after, Some(5));
         assert_eq!(FaultPlan::poison_queue(5).kill_replica, None);
         assert_eq!(FaultPlan::truncate_checkpoint(16).truncate_checkpoint_to, Some(16));
+    }
+
+    #[test]
+    fn pod_faults_are_classified_apart_from_thread_faults() {
+        let p = FaultPlan::kill_pod(1, 2);
+        assert_eq!(p.kill_pod, Some(PodFault { pod: 1, round: 2 }));
+        assert!(p.has_pod_faults() && p.pod_faults_only() && !p.is_empty());
+        assert!(FaultPlan::hang_pod(0, 1).pod_faults_only());
+        assert!(FaultPlan::leave_pod(0, 1).pod_faults_only());
+        assert!(FaultPlan::delay_admit(1, 3).pod_faults_only());
+        // thread-level faults are not pod faults, and a mixed plan is
+        // not pod-faults-only
+        assert!(!FaultPlan::kill_replica(0, 1).has_pod_faults());
+        let mixed = FaultPlan { poison_queue_after: Some(2), ..FaultPlan::kill_pod(0, 1) };
+        assert!(mixed.has_pod_faults() && !mixed.pod_faults_only());
+        assert!(!FaultPlan::default().has_pod_faults());
+        assert!(!FaultPlan::default().pod_faults_only());
     }
 }

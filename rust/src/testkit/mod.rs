@@ -14,7 +14,7 @@
 
 pub mod fault;
 
-pub use fault::{FaultPlan, KillReplica};
+pub use fault::{FaultPlan, KillReplica, PodFault};
 
 use crate::util::rng::Xoshiro256;
 

@@ -1,5 +1,6 @@
 //! Multi-pod Sebulba: one experiment as a learner pod plus K actor-pod
-//! processes, glued by the [`Transport`] seam (DESIGN.md §15).
+//! processes, glued by the [`Transport`] seam (DESIGN.md §15), with an
+//! optional epoch-based elastic membership control plane (DESIGN.md §16).
 //!
 //! The decomposition keeps the in-memory coordinator's parts and replaces
 //! exactly one seam with the wire:
@@ -24,36 +25,57 @@
 //!   spawn) against its local queue; per-connection receiver threads feed
 //!   it, and a publisher thread broadcasts every published parameter
 //!   version as a `Params` frame ([`ParamStore::wait_newer`] pub/sub).
-//! * Handshake: the learner accepts K connections and greets each with a
-//!   `Hello` frame (payload: the pod's index, u64 LE) followed by one
-//!   `Params` frame carrying the version-0 snapshot — every pod starts
-//!   from bit-identical parameters, which is what makes the two-process
-//!   `updates=1` run bit-identical to the in-memory one (the oracle in
+//! * **Static handshake** (the default): the learner accepts exactly
+//!   `actor_pods` connections and greets each with a `Hello` frame
+//!   (payload: the pod's index, u64 LE) followed by one `Params` frame
+//!   carrying the version-0 snapshot — every pod starts from bit-identical
+//!   parameters, which is what makes the two-process `updates=1` run
+//!   bit-identical to the in-memory one (the oracle in
 //!   `rust/tests/transport.rs`).
+//! * **Elastic handshake** (`--elastic`): the actor speaks first with a
+//!   `Join` frame carrying its topology fingerprint; the learner's control
+//!   thread verifies it, admits the pod through the [`Membership`]
+//!   registry (monotone epoch, never-reused pod indices and actor-id
+//!   ranges) and replies `Hello` carrying the [`Admission`] grant plus a
+//!   `Params` frame with the *current* snapshot — a late joiner starts
+//!   from the newest published version, not v0. Actors beacon `Heartbeat`
+//!   frames; a monitor thread evicts members whose beacon goes quiet, and
+//!   the run fails closed the moment active membership drops below
+//!   `--min-actor-pods`. With membership that happens to never change, the
+//!   elastic run is bit-identical to the static one: the first pod is
+//!   always admitted before the learner can finish update 1 (no data can
+//!   arrive before an admission), so it is seeded with version 0 exactly
+//!   like the static greeting.
 //! * Teardown: whoever stops first says so. The learner broadcasts a
 //!   `Shutdown` frame when its update budget is spent; an actor pod whose
-//!   threads die sends `Shutdown` up so the learner is never left waiting
-//!   on a producer that will not come back. A connection that drops
-//!   without the frame is a surfaced error, never a silent stall — the
-//!   TensorBus poisoning discipline (DESIGN.md §10) extended over the
+//!   threads die sends `Shutdown` up (or `Leave`, if it is departing
+//!   gracefully) so the learner is never left waiting on a producer that
+//!   will not come back. A connection that drops without the frame is a
+//!   surfaced [`TransportError::peer_lost`] error, never a silent stall —
+//!   the TensorBus poisoning discipline (DESIGN.md §10) extended over the
 //!   wire.
 //!
-//! Distributed v1 deliberately mirrors the in-memory coordinator's plain
-//! path only: `replicas == 1` per pod, and checkpoint/restore/fault specs
-//! are rejected with a typed error rather than half-honoured.
+//! Distributed runs deliberately mirror the in-memory coordinator's plain
+//! path only: `replicas == 1` per pod, and checkpoint/restore specs are
+//! rejected with a typed error rather than half-honoured. Fault plans are
+//! accepted only on elastic runs and only for pod-level faults
+//! (kill/hang/leave/delayed-join) — thread-level faults still need the
+//! single-process lockstep machinery of DESIGN.md §13.
 //!
 //! [`learner_main`]: crate::coordinator::learner
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::coordinator::actor::{spawn_actor, ActorConfig, ShardBundle};
 use crate::coordinator::collective::GradientBus;
 use crate::coordinator::learner::{LearnerConfig, LearnerHandles};
-use crate::coordinator::param_store::ParamStore;
+use crate::coordinator::param_store::{ParamStore, SubscriberSet};
 use crate::coordinator::queue::BoundedQueue;
 use crate::coordinator::sebulba::{join_pod_threads, spawn_guarded_learner, Sebulba};
 use crate::coordinator::stats::RunStats;
@@ -64,16 +86,300 @@ use crate::experiment::{
 };
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::{DeviceHandle, Pod};
+use crate::testkit::FaultPlan;
 
+use super::error::TransportError;
 use super::frame::FrameKind;
+use super::membership::{Departure, Membership, PodSlot};
 use super::tcp::TcpTransport;
-use super::wire::{decode_bundle, decode_params, encode_bundle, encode_params};
+use super::wire::{
+    decode_admit, decode_bundle, decode_join, decode_params, encode_admit, encode_bundle,
+    encode_join, encode_params, Admission,
+};
 use super::{ConnectOpts, Connection, Transport};
 
 /// How long the learner-side publisher parks in [`ParamStore::wait_newer`]
 /// per wait: long enough to sleep between updates, short enough to notice
 /// the stop flag promptly at teardown.
 const PUBLISH_POLL: Duration = Duration::from_millis(50);
+
+/// How long a joining actor pod waits for its admission grant. Much longer
+/// than the per-read idle timeout because the learner may legitimately
+/// park a join (the control thread is busy, or a delayed-admission fault
+/// is staged); the actor keeps re-arming idle timeouts until this budget
+/// is spent.
+const JOIN_REPLY_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// FNV-1a over the geometry fields that must agree between a joiner and
+/// the learner for the joiner's shards to be usable. A mismatched
+/// fingerprint is rejected at admission — before the pod can feed the
+/// learner garbage-shaped bundles.
+fn topology_fingerprint(cfg: &SebulbaConfig) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in [
+        cfg.actor_cores as u64,
+        cfg.learner_cores as u64,
+        cfg.threads_per_actor_core as u64,
+        cfg.actor_batch as u64,
+        cfg.pipeline_stages as u64,
+        cfg.unroll as u64,
+        cfg.micro_batches as u64,
+        cfg.total_updates as u64,
+        cfg.seed as u64,
+    ] {
+        h ^= v;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Everything the learner's control plane tracks per run, behind one lock
+/// so admission, eviction and heartbeat stamping see a consistent view.
+struct PlaneInner {
+    membership: Membership,
+    conns: BTreeMap<usize, Arc<dyn Connection>>,
+    last_heard: BTreeMap<usize, Instant>,
+}
+
+/// The learner-side elastic control plane: the [`Membership`] registry,
+/// the live connections keyed by pod index, heartbeat stamps, and the
+/// epoch-aware [`SubscriberSet`] the publisher broadcasts to. Shared by
+/// the control thread (admissions), the monitor thread (evictions), the
+/// per-pod receivers (departures) and the publisher (broadcast targets).
+struct ControlPlane {
+    inner: Mutex<PlaneInner>,
+    subscribers: SubscriberSet,
+    stats: Arc<RunStats>,
+}
+
+impl ControlPlane {
+    fn new(threads_per_pod: usize, stats: Arc<RunStats>) -> Self {
+        Self {
+            inner: Mutex::new(PlaneInner {
+                membership: Membership::new(threads_per_pod),
+                conns: BTreeMap::new(),
+                last_heard: BTreeMap::new(),
+            }),
+            subscribers: SubscriberSet::new(),
+            stats,
+        }
+    }
+
+    /// Admit a joiner: registry entry, live connection, heartbeat stamp,
+    /// publisher subscription, stats — atomically under the plane lock.
+    fn admit(&self, peer: &str, conn: Arc<dyn Connection>) -> PodSlot {
+        let mut g = self.inner.lock().unwrap();
+        let slot = g.membership.admit(peer);
+        g.conns.insert(slot.pod_index, conn);
+        g.last_heard.insert(slot.pod_index, Instant::now());
+        self.subscribers.register(slot.pod_index, slot.epoch_joined);
+        self.stats.record_membership(
+            g.membership.joined(),
+            g.membership.departed(),
+            g.membership.epoch(),
+        );
+        slot
+    }
+
+    /// Retire a member; returns its slot and how many pods remain active.
+    /// Idempotent (the monitor and a receiver can race to report the same
+    /// death), and closes the connection *outside* the lock.
+    fn depart(&self, pod: usize, why: &Departure) -> Option<(PodSlot, usize)> {
+        let (slot, conn, remaining) = {
+            let mut g = self.inner.lock().unwrap();
+            let slot = g.membership.depart(pod, why)?;
+            let conn = g.conns.remove(&pod);
+            g.last_heard.remove(&pod);
+            self.subscribers.retire(pod);
+            self.stats.record_membership(
+                g.membership.joined(),
+                g.membership.departed(),
+                g.membership.epoch(),
+            );
+            (slot, conn, g.membership.active_count())
+        };
+        if let Some(c) = conn {
+            c.close();
+        }
+        Some((slot, remaining))
+    }
+
+    /// Stamp a liveness signal (any frame counts, not just heartbeats).
+    fn heard(&self, pod: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(t) = g.last_heard.get_mut(&pod) {
+            *t = Instant::now();
+        }
+    }
+
+    /// Members whose last signal is older than `timeout`.
+    fn overdue(&self, timeout: Duration) -> Vec<usize> {
+        let g = self.inner.lock().unwrap();
+        let now = Instant::now();
+        g.last_heard
+            .iter()
+            .filter(|(_, t)| now.duration_since(**t) > timeout)
+            .map(|(p, _)| *p)
+            .collect()
+    }
+
+    /// Total pods ever admitted.
+    fn joined(&self) -> u64 {
+        self.inner.lock().unwrap().membership.joined()
+    }
+
+    /// Snapshot of the live broadcast fan-out — taken so the publisher
+    /// never sends while holding the plane lock.
+    fn broadcast_targets(&self) -> Vec<(usize, Arc<dyn Connection>)> {
+        let g = self.inner.lock().unwrap();
+        self.subscribers
+            .active()
+            .into_iter()
+            .filter_map(|p| g.conns.get(&p).map(|c| (p, c.clone())))
+            .collect()
+    }
+
+    /// Take every remaining connection (final teardown).
+    fn drain_conns(&self) -> Vec<Arc<dyn Connection>> {
+        let mut g = self.inner.lock().unwrap();
+        std::mem::take(&mut g.conns).into_values().collect()
+    }
+}
+
+/// Fail closed: if a departure dropped active membership below the
+/// `--min-actor-pods` floor, surface a peer-lost error naming the pod and
+/// stop the run. Above the floor the run degrades gracefully and this is
+/// a no-op.
+fn enforce_floor(
+    slot: &PodSlot,
+    active: usize,
+    min_pods: usize,
+    detail: &str,
+    wire_errs: &Mutex<Vec<String>>,
+    stop: &AtomicBool,
+    queue: &BoundedQueue<ShardBundle>,
+) {
+    if active >= min_pods || stop.load(Ordering::Relaxed) {
+        return;
+    }
+    wire_errs.lock().unwrap().push(
+        TransportError::peer_lost(
+            slot.pod_index,
+            slot.peer.clone(),
+            format!(
+                "{detail}; {active} active pod(s) is below the --min-actor-pods \
+                 floor of {min_pods}"
+            ),
+        )
+        .to_string(),
+    );
+    stop.store(true, Ordering::Relaxed);
+    queue.shutdown();
+}
+
+/// The elastic per-member receiver: drains one admitted pod's frames into
+/// the learner queue, stamps liveness, and retires the member on `Leave`,
+/// protocol violation or connection loss — enforcing the membership floor
+/// on every departure.
+#[allow(clippy::too_many_arguments)]
+fn spawn_elastic_receiver(
+    slot: PodSlot,
+    conn: Arc<dyn Connection>,
+    plane: Arc<ControlPlane>,
+    queue: Arc<BoundedQueue<ShardBundle>>,
+    stop: Arc<AtomicBool>,
+    stats: Arc<RunStats>,
+    wire_errs: Arc<Mutex<Vec<String>>>,
+    min_pods: usize,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("dist-recv-{}", slot.pod_index))
+        .spawn(move || {
+            let pod = slot.pod_index;
+            let retire = |why: Departure, detail: &str| {
+                if let Some((gone, active)) = plane.depart(pod, &why) {
+                    enforce_floor(&gone, active, min_pods, detail, &wire_errs, &stop, &queue);
+                }
+            };
+            loop {
+                match conn.recv() {
+                    Ok((FrameKind::TrajBundle, payload, n)) => {
+                        stats.record_wire_rx(n);
+                        plane.heard(pod);
+                        match decode_bundle(&payload) {
+                            Ok(shards) => {
+                                if let Some(first) = shards.first() {
+                                    stats.env_frames.add(first.arena().frames() as u64);
+                                    stats.trajectories.fetch_add(1, Ordering::Relaxed);
+                                }
+                                if queue.push(shards).is_err() {
+                                    return; // queue shut: learner done
+                                }
+                            }
+                            Err(e) => {
+                                let why = format!("bad trajectory frame: {e}");
+                                retire(Departure::Evicted { reason: why.clone() }, &why);
+                                return;
+                            }
+                        }
+                    }
+                    Ok((FrameKind::Heartbeat, _, n)) => {
+                        stats.record_wire_rx(n);
+                        plane.heard(pod);
+                    }
+                    Ok((FrameKind::Leave, _, n)) => {
+                        stats.record_wire_rx(n);
+                        retire(Departure::Leave, "left gracefully");
+                        return;
+                    }
+                    Ok((FrameKind::Shutdown, _, n)) => {
+                        stats.record_wire_rx(n);
+                        if !stop.load(Ordering::Relaxed) {
+                            let why = "shut down mid-run".to_string();
+                            retire(Departure::Evicted { reason: why.clone() }, &why);
+                        }
+                        return;
+                    }
+                    Ok((kind, _, n)) => {
+                        stats.record_wire_rx(n);
+                        let why = format!("unexpected {kind:?} frame");
+                        retire(Departure::Evicted { reason: why.clone() }, &why);
+                        return;
+                    }
+                    Err(e) if e.is_idle_timeout() => {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        if !(stop.load(Ordering::Relaxed) && e.is_closed()) {
+                            let why = format!("connection lost: {e}");
+                            retire(Departure::Evicted { reason: why.clone() }, &why);
+                        }
+                        return;
+                    }
+                }
+            }
+        })
+        .expect("spawn dist receiver")
+}
+
+/// Receive with patience: keep re-arming the transport's idle timeout
+/// until `patience` is spent. The admission reply can legitimately take
+/// much longer than one read window (a parked join), and that must not
+/// surface as a dead learner.
+fn recv_admission(
+    conn: &dyn Connection,
+    patience: Duration,
+) -> Result<(FrameKind, Vec<u8>, u64), TransportError> {
+    let start = Instant::now();
+    loop {
+        match conn.recv() {
+            Err(e) if e.is_idle_timeout() && start.elapsed() < patience => continue,
+            other => return other,
+        }
+    }
+}
 
 /// One Sebulba experiment split across processes: a learner pod (listens,
 /// learns, publishes params) or an actor pod (connects, acts, ships
@@ -89,13 +395,23 @@ pub struct DistSebulba {
     pub listen: String,
     /// Actor role: the learner pod's address to connect to.
     pub connect: String,
-    /// Learner role: how many actor pods to accept before training starts.
+    /// Static learner role: how many actor pods to accept before training
+    /// starts. Ignored by elastic runs, where membership is dynamic.
     pub actor_pods: usize,
     /// The pipe. Defaults to [`TcpTransport`]; tests inject
     /// [`super::LoopbackTransport`] to run all pods in one process.
     pub transport: Arc<dyn Transport>,
     /// Dial budget for the actor role (bounded retry + backoff).
     pub connect_opts: ConnectOpts,
+    /// Epoch-based membership (DESIGN.md §16): pods join and leave mid-run
+    /// instead of being fixed at startup.
+    pub elastic: bool,
+    /// Elastic learner: fail closed the moment active membership drops
+    /// below this floor.
+    pub min_actor_pods: usize,
+    /// Elastic: the heartbeat window. Actors beacon at a third of it; the
+    /// learner evicts a member silent for longer than the whole window.
+    pub heartbeat: Duration,
 }
 
 impl DistSebulba {
@@ -109,6 +425,9 @@ impl DistSebulba {
             actor_pods,
             transport: Arc::new(TcpTransport::default()),
             connect_opts: ConnectOpts::default(),
+            elastic: false,
+            min_actor_pods: 1,
+            heartbeat: Duration::from_millis(1000),
         }
     }
 
@@ -122,12 +441,25 @@ impl DistSebulba {
             actor_pods: 0,
             transport: Arc::new(TcpTransport::default()),
             connect_opts: ConnectOpts::default(),
+            elastic: false,
+            min_actor_pods: 1,
+            heartbeat: Duration::from_millis(1000),
         }
     }
 
     /// Swap the pipe (tests: loopback; production: TCP, the default).
     pub fn with_transport(mut self, transport: Arc<dyn Transport>) -> Self {
         self.transport = transport;
+        self
+    }
+
+    /// Switch this pod to elastic membership: joins are accepted whenever
+    /// they arrive, departures are tolerated down to `min_actor_pods`, and
+    /// liveness is policed by `heartbeat`.
+    pub fn with_elastic(mut self, min_actor_pods: usize, heartbeat: Duration) -> Self {
+        self.elastic = true;
+        self.min_actor_pods = min_actor_pods;
+        self.heartbeat = heartbeat;
         self
     }
 
@@ -143,16 +475,13 @@ impl DistSebulba {
         Ok(cfg)
     }
 
-    // ---- learner pod -----------------------------------------------------
-
-    fn run_learner_pod(&self, pod: &mut Pod, topo: &Topology) -> Result<Report> {
-        let cfg = self.resolved(topo)?;
-        topo.validate_for_role(PodRole::Learner, pod.n_cores())?;
-        ensure!(self.actor_pods >= 1, "learner pod needs at least one actor pod");
-        ensure!(!self.listen.is_empty(), "learner pod needs a listen address");
-
-        // Programs: this pod owns only the learner cores; local core ids
-        // 0..learner_cores stand in for the in-memory pod's learner slice.
+    /// Learner-pod setup shared by the static and elastic paths: programs,
+    /// initial params/optimiser state, and the busy-time baseline.
+    fn learner_setup(
+        &self,
+        pod: &mut Pod,
+        cfg: &SebulbaConfig,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f64>)> {
         let grad = cfg.grad_program();
         let apply = cfg.apply_program();
         let init = cfg.init_program();
@@ -174,6 +503,107 @@ impl DistSebulba {
                 (outs[0].clone().into_f32()?, outs[1].clone().into_f32()?)
             }
         };
+        Ok((params0, opt0, busy0))
+    }
+
+    /// The learner-pod report, assembled identically by both paths.
+    #[allow(clippy::too_many_arguments)]
+    fn learner_report(
+        pod: &mut Pod,
+        cfg: &SebulbaConfig,
+        stats: &RunStats,
+        queue: &BoundedQueue<ShardBundle>,
+        busy0: &[f64],
+        t_start: Instant,
+        final_params: Vec<f32>,
+        final_opt_state: Vec<f32>,
+    ) -> Result<Report> {
+        let elapsed = t_start.elapsed().as_secs_f64();
+        let mut learner_busy = 0.0;
+        let mut critical_path: f64 = 1e-12;
+        for cid in 0..cfg.learner_cores {
+            let busy = pod.core(cid)?.busy_seconds() - busy0[cid];
+            learner_busy += busy;
+            critical_path = critical_path.max(busy);
+        }
+        critical_path = critical_path.max(stats.learner_active_max_seconds());
+        let frames = stats.env_frames.frames();
+        log::info!("dist-learner done: {}", stats.summary());
+        Ok(Report {
+            arch: Arch::Sebulba,
+            steps: frames,
+            updates: stats.updates.load(Ordering::Relaxed),
+            elapsed,
+            throughput: frames as f64 / elapsed.max(1e-12),
+            projected_throughput: frames as f64 / critical_path,
+            final_params,
+            detail: Detail::ActorLearner(ActorLearnerDetail {
+                mean_staleness: stats.mean_staleness(),
+                mean_episode_reward: stats.mean_episode_reward(),
+                episodes: stats.episodes.load(Ordering::Relaxed),
+                last_loss: stats.last_loss(),
+                // the acting half lives in other processes; its busy time
+                // is reported by the actor pods themselves
+                actor_busy_seconds: 0.0,
+                learner_busy_seconds: learner_busy,
+                actor_infer_seconds: 0.0,
+                actor_env_step_seconds: 0.0,
+                actor_loop_seconds: 0.0,
+                actor_overlap_seconds: 0.0,
+                learner_grad_seconds: stats.learner_grad_seconds(),
+                learner_collective_seconds: stats.learner_collective_seconds(),
+                learner_apply_seconds: stats.learner_apply_seconds(),
+                learner_active_seconds: stats.learner_active_seconds(),
+                learner_overlap_seconds: stats.learner_overlap_seconds(),
+                queue_push_block_seconds: queue.push_block_seconds(),
+                queue_pop_block_seconds: queue.pop_block_seconds(),
+                pods_joined: stats.pods_joined.load(Ordering::Relaxed),
+                pods_evicted: stats.pods_evicted.load(Ordering::Relaxed),
+                membership_epoch: stats.membership_epoch.load(Ordering::Relaxed),
+                join_param_version: 0,
+                final_opt_state,
+            }),
+        })
+    }
+
+    /// Resolve the learner's verdict against the wire log, lost-peer
+    /// context first: a learner that died because the floor was breached
+    /// should say which pod was lost, not just "queue shut down".
+    fn resolve_learner_errors(
+        learner_res: Result<Option<(Vec<f32>, Vec<f32>)>>,
+        wire_errs: &Mutex<Vec<String>>,
+        params0: Vec<f32>,
+        opt0: Vec<f32>,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        {
+            let errs = wire_errs.lock().unwrap();
+            if !errs.is_empty() {
+                let msg = format!(
+                    "distributed run lost {} actor pod(s): {}",
+                    errs.len(),
+                    errs.join("; ")
+                );
+                return Err(match learner_res {
+                    Err(le) => le.context(msg),
+                    Ok(_) => anyhow!(msg),
+                });
+            }
+        }
+        Ok(match learner_res? {
+            Some(out) => out,
+            None => (params0, opt0),
+        })
+    }
+
+    // ---- learner pod (static membership) ---------------------------------
+
+    fn run_learner_pod(&self, pod: &mut Pod, topo: &Topology) -> Result<Report> {
+        let cfg = self.resolved(topo)?;
+        topo.validate_for_role(PodRole::Learner, pod.n_cores())?;
+        ensure!(self.actor_pods >= 1, "learner pod needs at least one actor pod");
+        ensure!(!self.listen.is_empty(), "learner pod needs a listen address");
+
+        let (params0, opt0, busy0) = self.learner_setup(pod, &cfg)?;
 
         let stats = Arc::new(RunStats::new());
         let stop = Arc::new(AtomicBool::new(false));
@@ -232,8 +662,10 @@ impl DistSebulba {
                 std::thread::Builder::new()
                     .name(format!("dist-recv-{i}"))
                     .spawn(move || {
-                        let mut fail = |msg: String| {
-                            errs.lock().unwrap().push(msg);
+                        let fail = |detail: String| {
+                            errs.lock()
+                                .unwrap()
+                                .push(TransportError::peer_lost(i, conn.peer(), detail).to_string());
                             stop.store(true, Ordering::Relaxed);
                             queue.shutdown();
                         };
@@ -244,9 +676,7 @@ impl DistSebulba {
                                     let shards = match decode_bundle(&payload) {
                                         Ok(s) => s,
                                         Err(e) => {
-                                            fail(format!(
-                                                "actor pod {i}: bad trajectory frame: {e}"
-                                            ));
+                                            fail(format!("bad trajectory frame: {e}"));
                                             return;
                                         }
                                     };
@@ -261,15 +691,13 @@ impl DistSebulba {
                                 Ok((FrameKind::Shutdown, _, n)) => {
                                     stats.record_wire_rx(n);
                                     if !stop.load(Ordering::Relaxed) {
-                                        fail(format!(
-                                            "actor pod {i} shut down before the learner finished"
-                                        ));
+                                        fail("shut down before the learner finished".to_string());
                                     }
                                     return;
                                 }
                                 Ok((kind, _, n)) => {
                                     stats.record_wire_rx(n);
-                                    fail(format!("actor pod {i}: unexpected {kind:?} frame"));
+                                    fail(format!("unexpected {kind:?} frame"));
                                     return;
                                 }
                                 Err(e) if e.is_idle_timeout() => {
@@ -279,7 +707,7 @@ impl DistSebulba {
                                 }
                                 Err(e) => {
                                     if !(stop.load(Ordering::Relaxed) && e.is_closed()) {
-                                        fail(format!("actor pod {i} connection lost: {e}"));
+                                        fail(format!("connection lost: {e}"));
                                     }
                                     return;
                                 }
@@ -321,8 +749,8 @@ impl DistSebulba {
         // ---- the unmodified learner --------------------------------------
         let lcfg = LearnerConfig {
             replica_id: 0,
-            grad_program: grad,
-            apply_program: apply,
+            grad_program: cfg.grad_program(),
+            apply_program: cfg.apply_program(),
             shards_per_round: cfg.learner_cores,
             total_updates: cfg.total_updates,
             pipeline: cfg.learner_pipeline,
@@ -369,69 +797,370 @@ impl DistSebulba {
         for c in &conns {
             c.close();
         }
-        let (final_params, final_opt_state) = match learner_res? {
-            Some(out) => out,
-            None => (params0, opt0),
+        let (final_params, final_opt_state) =
+            Self::resolve_learner_errors(learner_res, &wire_errs, params0, opt0)?;
+
+        Self::learner_report(
+            pod,
+            &cfg,
+            &stats,
+            &queue,
+            &busy0,
+            t_start,
+            final_params,
+            final_opt_state,
+        )
+    }
+
+    // ---- learner pod (elastic membership) --------------------------------
+
+    fn run_learner_pod_elastic(
+        &self,
+        pod: &mut Pod,
+        topo: &Topology,
+        fault: Option<&FaultPlan>,
+    ) -> Result<Report> {
+        let cfg = self.resolved(topo)?;
+        topo.validate_for_role(PodRole::Learner, pod.n_cores())?;
+        ensure!(!self.listen.is_empty(), "learner pod needs a listen address");
+        ensure!(self.min_actor_pods >= 1, "--min-actor-pods must be at least 1");
+        ensure!(!self.heartbeat.is_zero(), "--heartbeat-ms must be at least 1");
+
+        let (params0, opt0, busy0) = self.learner_setup(pod, &cfg)?;
+
+        let stats = Arc::new(RunStats::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let bus = Arc::new(GradientBus::new(1));
+        let store = Arc::new(ParamStore::new(params0.clone()));
+        let queue = Arc::new(BoundedQueue::<ShardBundle>::new(cfg.queue_capacity));
+        let queues = vec![queue.clone()];
+        let wire_errs: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let threads_per_pod = cfg.actor_cores * cfg.threads_per_actor_core;
+        let plane = Arc::new(ControlPlane::new(threads_per_pod, stats.clone()));
+        let fingerprint = topology_fingerprint(&cfg);
+        let heartbeat = self.heartbeat;
+        let min_pods = self.min_actor_pods;
+
+        let mut listener = self
+            .transport
+            .listen(&self.listen)
+            .with_context(|| format!("listening on {}", self.listen))?;
+        let listen_addr = listener.local_addr();
+        log::info!(
+            "dist-learner[{}]: elastic, listening on {listen_addr} \
+             (min_actor_pods={min_pods}, heartbeat={heartbeat:?})",
+            cfg.agent,
+        );
+
+        // Receiver handles accumulate as pods join; the teardown joins
+        // whatever is there once the control thread has exited.
+        let recv_joins: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        // ---- control thread: accept → verify → (maybe park) → admit -----
+        let control_join = {
+            let plane = plane.clone();
+            let stats = stats.clone();
+            let store = store.clone();
+            let stop = stop.clone();
+            let queue = queue.clone();
+            let errs = wire_errs.clone();
+            let recv_joins = recv_joins.clone();
+            let delay = fault.and_then(|f| f.delay_admit);
+            std::thread::Builder::new()
+                .name("dist-control".to_string())
+                .spawn(move || {
+                    let mut ordinal: usize = 0; // admissions so far
+                    loop {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let conn: Arc<dyn Connection> = match listener.accept() {
+                            Ok(c) => Arc::from(c),
+                            Err(e) if e.is_idle_timeout() => {
+                                // A run that never hears a single join is a
+                                // misconfiguration, not something to wait
+                                // out forever.
+                                if plane.joined() == 0 && !stop.load(Ordering::Relaxed) {
+                                    errs.lock().unwrap().push(
+                                        "no actor pod joined within the accept window"
+                                            .to_string(),
+                                    );
+                                    stop.store(true, Ordering::Relaxed);
+                                    queue.shutdown();
+                                    break;
+                                }
+                                continue;
+                            }
+                            Err(e) => {
+                                if !stop.load(Ordering::Relaxed) {
+                                    errs.lock().unwrap().push(format!("accepting a joiner: {e}"));
+                                    stop.store(true, Ordering::Relaxed);
+                                    queue.shutdown();
+                                }
+                                break;
+                            }
+                        };
+                        if stop.load(Ordering::Relaxed) {
+                            conn.close(); // the teardown self-dial, or a too-late joiner
+                            break;
+                        }
+                        // -- Join: the joiner speaks first ----------------
+                        let fp = match conn.recv() {
+                            Ok((FrameKind::Join, payload, n)) => {
+                                stats.record_wire_rx(n);
+                                match decode_join(&payload) {
+                                    Ok(fp) => fp,
+                                    Err(e) => {
+                                        log::warn!(
+                                            "dist-control: bad join from {}: {e}",
+                                            conn.peer()
+                                        );
+                                        conn.close();
+                                        continue;
+                                    }
+                                }
+                            }
+                            Ok((kind, _, _)) => {
+                                log::warn!(
+                                    "dist-control: expected a join from {}, got {kind:?}",
+                                    conn.peer()
+                                );
+                                conn.close();
+                                continue;
+                            }
+                            Err(e) => {
+                                log::warn!(
+                                    "dist-control: joiner {} dropped during the handshake: {e}",
+                                    conn.peer()
+                                );
+                                conn.close();
+                                continue;
+                            }
+                        };
+                        if fp != fingerprint {
+                            log::warn!(
+                                "dist-control: rejecting {}: topology fingerprint {fp:#018x} \
+                                 does not match ours {fingerprint:#018x}",
+                                conn.peer()
+                            );
+                            conn.close();
+                            continue;
+                        }
+                        // -- staged delayed admission (tests) -------------
+                        if delay.map_or(false, |pf| pf.pod == ordinal) {
+                            let round = delay.unwrap().round;
+                            log::info!(
+                                "dist-control: parking joiner {} until {round} update(s) \
+                                 finish (injected fault)",
+                                conn.peer()
+                            );
+                            while stats.updates.load(Ordering::Relaxed) < round
+                                && !stop.load(Ordering::Relaxed)
+                            {
+                                std::thread::sleep(Duration::from_millis(5));
+                            }
+                            if stop.load(Ordering::Relaxed) {
+                                conn.close();
+                                break;
+                            }
+                        }
+                        // -- admit ----------------------------------------
+                        let slot = plane.admit(&conn.peer(), conn.clone());
+                        ordinal += 1;
+                        let grant = Admission {
+                            pod_index: slot.pod_index,
+                            actor_id_base: slot.actor_id_base,
+                            epoch: slot.epoch_joined,
+                            heartbeat_ms: heartbeat.as_millis() as u64,
+                        };
+                        let snap = store.latest();
+                        let greeted = conn
+                            .send(FrameKind::Hello, &encode_admit(&grant))
+                            .and_then(|n| {
+                                stats.record_wire_tx(n);
+                                conn.send(
+                                    FrameKind::Params,
+                                    &encode_params(snap.version, &snap.params),
+                                )
+                            })
+                            .map(|n| stats.record_wire_tx(n));
+                        if let Err(e) = greeted {
+                            let why = format!("died during the admission handshake: {e}");
+                            if let Some((gone, active)) = plane
+                                .depart(slot.pod_index, &Departure::Evicted { reason: why.clone() })
+                            {
+                                enforce_floor(
+                                    &gone, active, min_pods, &why, &errs, &stop, &queue,
+                                );
+                            }
+                            continue;
+                        }
+                        log::info!(
+                            "dist-learner: admitted pod {} from {} at epoch {} (params v{})",
+                            slot.pod_index,
+                            slot.peer,
+                            slot.epoch_joined,
+                            snap.version
+                        );
+                        recv_joins.lock().unwrap().push(spawn_elastic_receiver(
+                            slot,
+                            conn,
+                            plane.clone(),
+                            queue.clone(),
+                            stop.clone(),
+                            stats.clone(),
+                            errs.clone(),
+                            min_pods,
+                        ));
+                    }
+                })
+                .expect("spawn dist control")
         };
-        {
-            let errs = wire_errs.lock().unwrap();
-            if !errs.is_empty() {
-                bail!(
-                    "distributed run lost {} actor pod(s): {}",
-                    errs.len(),
-                    errs.join("; ")
-                );
+
+        // ---- monitor thread: evict members whose beacon went quiet -------
+        let monitor_join = {
+            let plane = plane.clone();
+            let stop = stop.clone();
+            let queue = queue.clone();
+            let errs = wire_errs.clone();
+            std::thread::Builder::new()
+                .name("dist-monitor".to_string())
+                .spawn(move || {
+                    let tick = (heartbeat / 4)
+                        .min(Duration::from_millis(100))
+                        .max(Duration::from_millis(5));
+                    while !stop.load(Ordering::Relaxed) {
+                        std::thread::sleep(tick);
+                        for pod in plane.overdue(heartbeat) {
+                            let why = format!("no heartbeat within {heartbeat:?}");
+                            if let Some((gone, active)) =
+                                plane.depart(pod, &Departure::Evicted { reason: why.clone() })
+                            {
+                                enforce_floor(
+                                    &gone, active, min_pods, &why, &errs, &stop, &queue,
+                                );
+                            }
+                        }
+                    }
+                })
+                .expect("spawn dist monitor")
+        };
+
+        // ---- publisher: broadcast to the current membership --------------
+        let publish_join = {
+            let store = store.clone();
+            let stop = stop.clone();
+            let stats = stats.clone();
+            let plane = plane.clone();
+            std::thread::Builder::new()
+                .name("dist-publish".to_string())
+                .spawn(move || {
+                    let mut last = store.version();
+                    while !stop.load(Ordering::Relaxed) {
+                        if let Some(snap) = store.wait_newer(last, PUBLISH_POLL) {
+                            last = snap.version;
+                            let payload = encode_params(snap.version, &snap.params);
+                            for (_pod, c) in plane.broadcast_targets() {
+                                if let Ok(n) = c.send(FrameKind::Params, &payload) {
+                                    stats.record_wire_tx(n);
+                                }
+                            }
+                        }
+                    }
+                })
+                .expect("spawn dist publisher")
+        };
+
+        // ---- the unmodified learner --------------------------------------
+        // Spawned immediately: it parks in queue.pop() until the first
+        // admitted pod produces, so admission always precedes update 1.
+        let lcfg = LearnerConfig {
+            replica_id: 0,
+            grad_program: cfg.grad_program(),
+            apply_program: cfg.apply_program(),
+            shards_per_round: cfg.learner_cores,
+            total_updates: cfg.total_updates,
+            pipeline: cfg.learner_pipeline,
+            checkpoint: None,
+            fault: None,
+            start_round: 0,
+        };
+        let cores: Vec<DeviceHandle> =
+            (0..cfg.learner_cores).map(|i| pod.core(i)).collect::<Result<_>>()?;
+        let handles = LearnerHandles {
+            cores,
+            store: store.clone(),
+            queue: queue.clone(),
+            stats: stats.clone(),
+            bus: bus.clone(),
+        };
+        let t_start = Instant::now();
+        let learner_join = spawn_guarded_learner(
+            "dist-learner-0".to_string(),
+            lcfg,
+            handles,
+            opt0.clone(),
+            stop.clone(),
+            queues.clone(),
+            bus.clone(),
+        );
+
+        // ---- teardown ----------------------------------------------------
+        let learner_res =
+            join_pod_threads("dist", &stop, &queues, &bus, vec![learner_join], Vec::new());
+        // The control thread may be parked in a blocking accept with no
+        // stop check; a self-dial is the portable way to wake it (the
+        // bounded accept timeout is the fallback).
+        if let Ok(c) = self.transport.connect(
+            &listen_addr,
+            &ConnectOpts {
+                connect_timeout: Duration::from_millis(500),
+                attempts: 1,
+                backoff: Duration::ZERO,
+            },
+        ) {
+            c.close();
+        }
+        let _ = control_join.join();
+        let _ = monitor_join.join();
+        for (_pod, c) in plane.broadcast_targets() {
+            if let Ok(n) = c.send(FrameKind::Shutdown, &[]) {
+                stats.record_wire_tx(n);
             }
         }
-
-        // ---- report ------------------------------------------------------
-        let elapsed = t_start.elapsed().as_secs_f64();
-        let mut learner_busy = 0.0;
-        let mut critical_path: f64 = 1e-12;
-        for cid in 0..cfg.learner_cores {
-            let busy = pod.core(cid)?.busy_seconds() - busy0[cid];
-            learner_busy += busy;
-            critical_path = critical_path.max(busy);
+        let _ = publish_join.join();
+        let receivers: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *recv_joins.lock().unwrap());
+        for j in receivers {
+            let _ = j.join();
         }
-        critical_path = critical_path.max(stats.learner_active_max_seconds());
-        let frames = stats.env_frames.frames();
-        log::info!("dist-learner done: {}", stats.summary());
-        Ok(Report {
-            arch: Arch::Sebulba,
-            steps: frames,
-            updates: stats.updates.load(Ordering::Relaxed),
-            elapsed,
-            throughput: frames as f64 / elapsed.max(1e-12),
-            projected_throughput: frames as f64 / critical_path,
+        for c in plane.drain_conns() {
+            c.close();
+        }
+        let (final_params, final_opt_state) =
+            Self::resolve_learner_errors(learner_res, &wire_errs, params0, opt0)?;
+
+        Self::learner_report(
+            pod,
+            &cfg,
+            &stats,
+            &queue,
+            &busy0,
+            t_start,
             final_params,
-            detail: Detail::ActorLearner(ActorLearnerDetail {
-                mean_staleness: stats.mean_staleness(),
-                mean_episode_reward: stats.mean_episode_reward(),
-                episodes: stats.episodes.load(Ordering::Relaxed),
-                last_loss: stats.last_loss(),
-                // the acting half lives in other processes; its busy time
-                // is reported by the actor pods themselves
-                actor_busy_seconds: 0.0,
-                learner_busy_seconds: learner_busy,
-                actor_infer_seconds: 0.0,
-                actor_env_step_seconds: 0.0,
-                actor_loop_seconds: 0.0,
-                actor_overlap_seconds: 0.0,
-                learner_grad_seconds: stats.learner_grad_seconds(),
-                learner_collective_seconds: stats.learner_collective_seconds(),
-                learner_apply_seconds: stats.learner_apply_seconds(),
-                learner_active_seconds: stats.learner_active_seconds(),
-                learner_overlap_seconds: stats.learner_overlap_seconds(),
-                queue_push_block_seconds: queue.push_block_seconds(),
-                queue_pop_block_seconds: queue.pop_block_seconds(),
-                final_opt_state,
-            }),
-        })
+            final_opt_state,
+        )
     }
 
     // ---- actor pod -------------------------------------------------------
 
-    fn run_actor_pod(&self, pod: &mut Pod, topo: &Topology) -> Result<Report> {
+    fn run_actor_pod(
+        &self,
+        pod: &mut Pod,
+        topo: &Topology,
+        fault: Option<&FaultPlan>,
+    ) -> Result<Report> {
         let cfg = self.resolved(topo)?;
         topo.validate_for_role(PodRole::Actor, pod.n_cores())?;
         ensure!(!self.connect.is_empty(), "actor pod needs a learner address to connect to");
@@ -447,27 +1176,62 @@ impl DistSebulba {
                 .with_context(|| format!("connecting to learner pod at {}", self.connect))?,
         );
 
-        // ---- handshake: Hello (pod index) then the initial Params --------
+        // ---- handshake ---------------------------------------------------
+        // Static: the learner speaks first (Hello with our index + v0
+        // params). Elastic: we speak first (Join with our topology
+        // fingerprint) and the Hello carries the full admission grant and
+        // the learner's *current* params.
         let stats = Arc::new(RunStats::new());
-        let (kind, payload, n) = conn.recv().context("waiting for the learner's hello")?;
-        stats.record_wire_rx(n);
-        ensure!(
-            kind == FrameKind::Hello && payload.len() == 8,
-            "handshake: expected a hello frame with a pod index, got {kind:?} \
-             with {} payload bytes",
-            payload.len()
-        );
-        let pod_index = u64::from_le_bytes(payload.try_into().unwrap()) as usize;
-        let (kind, payload, n) = conn.recv().context("waiting for the initial parameters")?;
-        stats.record_wire_rx(n);
-        ensure!(kind == FrameKind::Params, "handshake: expected a params frame, got {kind:?}");
-        let (version, params) = decode_params(&payload).context("initial parameters")?;
-        let store = Arc::new(ParamStore::with_version(params, version));
-        log::info!(
-            "dist-actor[{}]: joined as pod {pod_index} (params v{version}, {} floats)",
-            cfg.agent,
-            store.latest().params.len()
-        );
+        let (pod_index, join_epoch, join_version, heartbeat_ms, store) = if self.elastic {
+            let n = conn
+                .send(FrameKind::Join, &encode_join(topology_fingerprint(&cfg)))
+                .context("sending the join request")?;
+            stats.record_wire_tx(n);
+            let (kind, payload, n) = recv_admission(conn.as_ref(), JOIN_REPLY_TIMEOUT)
+                .context("waiting for the admission grant")?;
+            stats.record_wire_rx(n);
+            ensure!(
+                kind == FrameKind::Hello,
+                "handshake: expected an admission hello, got {kind:?}"
+            );
+            let grant = decode_admit(&payload).context("admission grant")?;
+            ensure!(grant.heartbeat_ms >= 1, "admission grant carries a zero heartbeat window");
+            let (kind, payload, n) = conn.recv().context("waiting for the initial parameters")?;
+            stats.record_wire_rx(n);
+            ensure!(kind == FrameKind::Params, "handshake: expected a params frame, got {kind:?}");
+            let (version, params) = decode_params(&payload).context("initial parameters")?;
+            let store = Arc::new(ParamStore::with_version(params, version));
+            log::info!(
+                "dist-actor[{}]: admitted as pod {} at epoch {} (params v{version}, \
+                 heartbeat {}ms)",
+                cfg.agent,
+                grant.pod_index,
+                grant.epoch,
+                grant.heartbeat_ms
+            );
+            (grant.pod_index, grant.epoch, version, Some(grant.heartbeat_ms), store)
+        } else {
+            let (kind, payload, n) = conn.recv().context("waiting for the learner's hello")?;
+            stats.record_wire_rx(n);
+            ensure!(
+                kind == FrameKind::Hello && payload.len() == 8,
+                "handshake: expected a hello frame with a pod index, got {kind:?} \
+                 with {} payload bytes",
+                payload.len()
+            );
+            let pod_index = u64::from_le_bytes(payload.try_into().unwrap()) as usize;
+            let (kind, payload, n) = conn.recv().context("waiting for the initial parameters")?;
+            stats.record_wire_rx(n);
+            ensure!(kind == FrameKind::Params, "handshake: expected a params frame, got {kind:?}");
+            let (version, params) = decode_params(&payload).context("initial parameters")?;
+            let store = Arc::new(ParamStore::with_version(params, version));
+            log::info!(
+                "dist-actor[{}]: joined as pod {pod_index} (params v{version}, {} floats)",
+                cfg.agent,
+                store.latest().params.len()
+            );
+            (pod_index, 0, 0, None, store)
+        };
 
         // ---- local acting state ------------------------------------------
         let agent = pod.manifest.agent(&cfg.agent)?.clone();
@@ -483,6 +1247,43 @@ impl DistSebulba {
         let factory: Arc<EnvFactory> = Arc::new(make_factory(cfg.env_kind, cfg.seed));
         let pool = WorkerPool::new(cfg.env_workers);
         let wire_errs: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        // A hang fault mutes the heartbeat thread too — the pod must look
+        // dead to the learner, not merely idle.
+        let muted = Arc::new(AtomicBool::new(false));
+
+        // ---- heartbeat beacon (elastic only) -----------------------------
+        let hb_join = heartbeat_ms.map(|hb_ms| {
+            let conn = conn.clone();
+            let stop = stop.clone();
+            let stats = stats.clone();
+            let muted = muted.clone();
+            std::thread::Builder::new()
+                .name("dist-heartbeat".to_string())
+                .spawn(move || {
+                    // A third of the eviction window: two beacons can be
+                    // lost or late before the learner gives up on us.
+                    let interval = Duration::from_millis((hb_ms / 3).max(1));
+                    while !stop.load(Ordering::Relaxed) {
+                        let mut left = interval;
+                        while !left.is_zero() && !stop.load(Ordering::Relaxed) {
+                            let slice = left.min(Duration::from_millis(50));
+                            std::thread::sleep(slice);
+                            left = left.saturating_sub(slice);
+                        }
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        if muted.load(Ordering::Relaxed) {
+                            continue;
+                        }
+                        match conn.send(FrameKind::Heartbeat, &[]) {
+                            Ok(n) => stats.record_wire_tx(n),
+                            Err(_) => break, // dead socket: the subscriber surfaces it
+                        }
+                    }
+                })
+                .expect("spawn dist heartbeat")
+        });
 
         // ---- subscriber: installs published params, hears Shutdown -------
         let sub_join = {
@@ -548,16 +1349,59 @@ impl DistSebulba {
         };
 
         // ---- forwarder: local queue → TrajBundle frames ------------------
+        // Pod-level faults fire here, between windows: the forwarder is the
+        // one thread that knows how many windows this pod has shipped.
+        let kill_at = fault.and_then(|f| f.kill_pod).filter(|pf| pf.pod == pod_index);
+        let hang_at = fault.and_then(|f| f.hang_pod).filter(|pf| pf.pod == pod_index);
+        let leave_at = fault.and_then(|f| f.leave_pod).filter(|pf| pf.pod == pod_index);
         let fwd_join = {
             let conn = conn.clone();
             let queue = queue.clone();
             let stop = stop.clone();
             let stats = stats.clone();
             let errs = wire_errs.clone();
+            let muted = muted.clone();
             std::thread::Builder::new()
                 .name("dist-forward".to_string())
                 .spawn(move || {
+                    let mut sent: u64 = 0;
+                    // Faulted exits skip the goodbye: the learner must see a
+                    // vanished/silent/departed peer, not an orderly shutdown.
+                    let mut goodbye = true;
                     loop {
+                        if kill_at.map_or(false, |pf| sent >= pf.round) {
+                            errs.lock().unwrap().push(format!(
+                                "injected fault: actor pod {pod_index} killed after \
+                                 {sent} window(s)"
+                            ));
+                            conn.close();
+                            stop.store(true, Ordering::Relaxed);
+                            queue.shutdown();
+                            goodbye = false;
+                            break;
+                        }
+                        if hang_at.map_or(false, |pf| sent >= pf.round) {
+                            log::info!(
+                                "injected fault: actor pod {pod_index} hanging after \
+                                 {sent} window(s)"
+                            );
+                            muted.store(true, Ordering::Relaxed);
+                            goodbye = false;
+                            break; // conn stays open; the learner must evict us
+                        }
+                        if leave_at.map_or(false, |pf| sent >= pf.round) {
+                            log::info!(
+                                "injected fault: actor pod {pod_index} leaving after \
+                                 {sent} window(s)"
+                            );
+                            if let Ok(n) = conn.send(FrameKind::Leave, &[]) {
+                                stats.record_wire_tx(n);
+                            }
+                            stop.store(true, Ordering::Relaxed);
+                            queue.shutdown();
+                            goodbye = false;
+                            break;
+                        }
                         let bundle = match queue.pop() {
                             Ok(b) => b,
                             Err(_) => break, // queue shut: teardown
@@ -574,7 +1418,10 @@ impl DistSebulba {
                             }
                         };
                         match conn.send(FrameKind::TrajBundle, &payload) {
-                            Ok(n) => stats.record_wire_tx(n),
+                            Ok(n) => {
+                                stats.record_wire_tx(n);
+                                sent += 1;
+                            }
                             Err(e) => {
                                 if !stop.load(Ordering::Relaxed) {
                                     errs.lock().unwrap().push(format!(
@@ -590,18 +1437,23 @@ impl DistSebulba {
                     // Best-effort goodbye: tells the learner this pod will
                     // never produce again (prematurely, that is an error on
                     // the learner's side — exactly the contract we want).
-                    if let Ok(n) = conn.send(FrameKind::Shutdown, &[]) {
-                        stats.record_wire_tx(n);
+                    if goodbye {
+                        if let Ok(n) = conn.send(FrameKind::Shutdown, &[]) {
+                            stats.record_wire_tx(n);
+                        }
                     }
                 })
                 .expect("spawn dist forwarder")
         };
 
         // ---- the unmodified actor threads --------------------------------
-        // Actor ids are globally unique across pods (pod_index offsets the
-        // local id), so every thread draws a distinct RNG stream exactly as
-        // its in-memory counterpart would.
+        // Actor ids are globally unique across pods (the admission grant's
+        // id base — or pod_index * threads_per_pod, the same thing — offsets
+        // the local id), so every thread draws a distinct RNG stream exactly
+        // as its in-memory counterpart would; elastic pod indices are never
+        // reused, so neither are id ranges.
         let threads_per_pod = cfg.actor_cores * cfg.threads_per_actor_core;
+        let actor_id_base = pod_index * threads_per_pod;
         let t_start = Instant::now();
         let mut actor_joins = Vec::with_capacity(threads_per_pod);
         for ac in 0..cfg.actor_cores {
@@ -609,7 +1461,7 @@ impl DistSebulba {
             for th in 0..cfg.threads_per_actor_core {
                 let local = ac * cfg.threads_per_actor_core + th;
                 let acfg = ActorConfig {
-                    actor_id: pod_index * threads_per_pod + local,
+                    actor_id: actor_id_base + local,
                     batch: cfg.actor_batch,
                     pipeline_stages: cfg.pipeline_stages,
                     unroll: cfg.unroll,
@@ -661,6 +1513,9 @@ impl DistSebulba {
         queue.shutdown(); // idempotent: guarantees the forwarder unblocks
         let _ = fwd_join.join();
         let _ = sub_join.join();
+        if let Some(j) = hb_join {
+            let _ = j.join();
+        }
         conn.close();
         if let Some(e) = actor_err {
             return Err(e);
@@ -712,6 +1567,10 @@ impl DistSebulba {
                 learner_overlap_seconds: 0.0,
                 queue_push_block_seconds: queue.push_block_seconds(),
                 queue_pop_block_seconds: queue.pop_block_seconds(),
+                pods_joined: 0,
+                pods_evicted: 0,
+                membership_epoch: join_epoch,
+                join_param_version: join_version,
                 final_opt_state: Vec::new(),
             }),
         })
@@ -724,14 +1583,26 @@ impl Runner for DistSebulba {
     }
 
     fn run_checkpointed(&self, pod: &mut Pod, topo: &Topology, spec: &RunSpec) -> Result<Report> {
+        let pod_faults_ok = spec
+            .fault
+            .as_ref()
+            .map_or(true, |f| f.is_empty() || (self.elastic && f.pod_faults_only()));
         ensure!(
-            spec.is_plain(),
+            spec.checkpoint.is_none() && spec.restore_from.is_none() && pod_faults_ok,
             "distributed runs do not support checkpoint/restore/fault injection \
-             yet; run those single-process"
+             beyond pod-level fault plans on elastic runs; run thread-level \
+             faults single-process"
         );
+        let fault = spec.fault.clone().filter(|f| !f.is_empty());
         match self.role {
-            PodRole::Learner => self.run_learner_pod(pod, topo),
-            PodRole::Actor => self.run_actor_pod(pod, topo),
+            PodRole::Learner => {
+                if self.elastic {
+                    self.run_learner_pod_elastic(pod, topo, fault.as_ref())
+                } else {
+                    self.run_learner_pod(pod, topo)
+                }
+            }
+            PodRole::Actor => self.run_actor_pod(pod, topo, fault.as_ref()),
             PodRole::Colocated => bail!(
                 "DistSebulba needs --role learner or --role actor; colocated runs \
                  use the in-memory Sebulba runner"

@@ -48,6 +48,10 @@ pub enum TransportError {
     /// The peer broke the connection-setup protocol (wrong first frame,
     /// bad hello payload).
     Handshake { detail: String },
+    /// A live peer vanished mid-run. The one constructor for every
+    /// lost-pod path ([`TransportError::peer_lost`]) so the message always
+    /// names both the pod index and the peer address.
+    PeerLost { pod: usize, peer: String, detail: String },
 }
 
 impl fmt::Display for TransportError {
@@ -86,6 +90,9 @@ impl fmt::Display for TransportError {
                 write!(f, "corrupt {context} payload: {detail}")
             }
             TransportError::Handshake { detail } => write!(f, "handshake violation: {detail}"),
+            TransportError::PeerLost { pod, peer, detail } => {
+                write!(f, "lost actor pod {pod} at {peer}: {detail}")
+            }
         }
     }
 }
@@ -117,5 +124,13 @@ impl TransportError {
     /// end-of-run signal after a shutdown frame.
     pub fn is_closed(&self) -> bool {
         matches!(self, TransportError::Closed)
+    }
+
+    /// The unified lost-peer constructor: every path that loses a live pod
+    /// mid-run goes through here so the diagnostic always carries both the
+    /// pod index and the peer address (ISSUE 9 satellite — some paths used
+    /// to name only the pod).
+    pub fn peer_lost(pod: usize, peer: impl Into<String>, detail: impl fmt::Display) -> Self {
+        TransportError::PeerLost { pod, peer: peer.into(), detail: detail.to_string() }
     }
 }

@@ -57,6 +57,16 @@ pub enum FrameKind {
     TrajBundle = 3,
     /// Orderly end-of-run; no payload. The sender closes right after.
     Shutdown = 4,
+    /// Elastic admission request: actor → learner, payload =
+    /// `wire::encode_join` (topology fingerprint). The learner answers
+    /// with `Hello` carrying `wire::encode_admit`.
+    Join = 5,
+    /// Graceful departure: actor → learner, no payload. The member is
+    /// retired (epoch bump) without tripping the fail-closed path.
+    Leave = 6,
+    /// Liveness beacon: actor → learner, no payload. Missing beacons past
+    /// the heartbeat timeout evict the member.
+    Heartbeat = 7,
 }
 
 impl FrameKind {
@@ -66,6 +76,9 @@ impl FrameKind {
             2 => Some(FrameKind::Params),
             3 => Some(FrameKind::TrajBundle),
             4 => Some(FrameKind::Shutdown),
+            5 => Some(FrameKind::Join),
+            6 => Some(FrameKind::Leave),
+            7 => Some(FrameKind::Heartbeat),
             _ => None,
         }
     }

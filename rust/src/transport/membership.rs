@@ -1,0 +1,179 @@
+//! The learner-side membership registry for elastic DistSebulba runs
+//! (DESIGN.md §16). Pure bookkeeping — no connections, no threads — so the
+//! epoch rules are unit- and property-testable in isolation:
+//!
+//! - the epoch counter is monotone: every admission and every departure
+//!   bumps it by exactly one, and nothing else touches it;
+//! - pod indices are monotone and never reused, so the actor-id range
+//!   derived from an index (`pod_index * threads_per_pod ..`) is never
+//!   reused either — shards from a dead pod's old ids can never be
+//!   mistaken for a later joiner's;
+//! - departure is idempotent per pod: departing a pod that already left
+//!   (or never existed) is a no-op that does *not* bump the epoch, which
+//!   lets the eviction monitor and the connection receiver race to retire
+//!   the same member safely.
+
+use std::collections::BTreeMap;
+
+/// Why a member left. Carried through to the log line and (for evictions
+/// below the floor) the fail-closed error.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Departure {
+    /// The pod sent a `Leave` frame: graceful, never trips fail-closed
+    /// accounting differently — but the log distinguishes it.
+    Leave,
+    /// The learner gave up on the pod (missed heartbeats, dead
+    /// connection, protocol violation).
+    Evicted { reason: String },
+}
+
+/// One admitted pod's identity: everything the `Hello` admission grant
+/// carries, plus the peer address for diagnostics.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PodSlot {
+    /// Monotone admission index — doubles as the pod's wire identity.
+    pub pod_index: usize,
+    /// Peer address as reported by the transport at accept time.
+    pub peer: String,
+    /// First actor id of this pod's range (`pod_index * threads_per_pod`).
+    pub actor_id_base: usize,
+    /// Membership epoch at the moment of admission.
+    pub epoch_joined: u64,
+}
+
+/// The registry proper. Owned by the learner's control thread; data
+/// threads see it behind a mutex.
+#[derive(Debug)]
+pub struct Membership {
+    /// Actor threads per pod — the stride between consecutive pods'
+    /// actor-id ranges.
+    threads_per_pod: usize,
+    epoch: u64,
+    next_pod: usize,
+    active: BTreeMap<usize, PodSlot>,
+    joined: u64,
+    departed: u64,
+}
+
+impl Membership {
+    pub fn new(threads_per_pod: usize) -> Self {
+        Self {
+            threads_per_pod: threads_per_pod.max(1),
+            epoch: 0,
+            next_pod: 0,
+            active: BTreeMap::new(),
+            joined: 0,
+            departed: 0,
+        }
+    }
+
+    /// Admit a new pod: bump the epoch, hand out the next (never-reused)
+    /// pod index and its actor-id range.
+    pub fn admit(&mut self, peer: &str) -> PodSlot {
+        self.epoch += 1;
+        let pod_index = self.next_pod;
+        self.next_pod += 1;
+        self.joined += 1;
+        let slot = PodSlot {
+            pod_index,
+            peer: peer.to_string(),
+            actor_id_base: pod_index * self.threads_per_pod,
+            epoch_joined: self.epoch,
+        };
+        self.active.insert(pod_index, slot.clone());
+        slot
+    }
+
+    /// Retire a member: bump the epoch and return its slot. Idempotent —
+    /// a pod that is not active is a no-op returning `None` (no epoch
+    /// bump), so the monitor and a receiver can both report the same
+    /// death.
+    pub fn depart(&mut self, pod: usize, why: &Departure) -> Option<PodSlot> {
+        let slot = self.active.remove(&pod)?;
+        self.epoch += 1;
+        self.departed += 1;
+        match why {
+            Departure::Leave => {
+                log::info!("membership: pod {pod} ({}) left at epoch {}", slot.peer, self.epoch)
+            }
+            Departure::Evicted { reason } => log::warn!(
+                "membership: pod {pod} ({}) evicted at epoch {}: {reason}",
+                slot.peer,
+                self.epoch
+            ),
+        }
+        Some(slot)
+    }
+
+    /// Current epoch: bumped by every admission and every departure.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn is_active(&self, pod: usize) -> bool {
+        self.active.contains_key(&pod)
+    }
+
+    /// Total pods ever admitted.
+    pub fn joined(&self) -> u64 {
+        self.joined
+    }
+
+    /// Total pods ever departed (Leave + evictions).
+    pub fn departed(&self) -> u64 {
+        self.departed
+    }
+
+    pub fn active(&self) -> impl Iterator<Item = &PodSlot> {
+        self.active.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admissions_hand_out_monotone_ids_and_disjoint_ranges() {
+        let mut m = Membership::new(3);
+        let a = m.admit("pod-a");
+        let b = m.admit("pod-b");
+        assert_eq!((a.pod_index, a.actor_id_base, a.epoch_joined), (0, 0, 1));
+        assert_eq!((b.pod_index, b.actor_id_base, b.epoch_joined), (1, 3, 2));
+        assert_eq!(m.epoch(), 2);
+        assert_eq!(m.active_count(), 2);
+        assert_eq!(m.joined(), 2);
+    }
+
+    #[test]
+    fn departures_bump_the_epoch_and_never_recycle_indices() {
+        let mut m = Membership::new(2);
+        let a = m.admit("pod-a");
+        m.admit("pod-b");
+        let gone = m.depart(a.pod_index, &Departure::Leave).unwrap();
+        assert_eq!(gone.pod_index, 0);
+        assert_eq!(m.epoch(), 3);
+        assert!(!m.is_active(0));
+        assert_eq!(m.departed(), 1);
+        // the next joiner gets a fresh index past every previous one
+        let c = m.admit("pod-c");
+        assert_eq!(c.pod_index, 2);
+        assert_eq!(c.actor_id_base, 4);
+        assert_eq!(m.epoch(), 4);
+    }
+
+    #[test]
+    fn departing_a_retired_or_unknown_pod_is_a_no_op() {
+        let mut m = Membership::new(1);
+        let a = m.admit("pod-a");
+        assert!(m.depart(a.pod_index, &Departure::Evicted { reason: "t".into() }).is_some());
+        let epoch = m.epoch();
+        assert!(m.depart(a.pod_index, &Departure::Leave).is_none());
+        assert!(m.depart(99, &Departure::Leave).is_none());
+        assert_eq!(m.epoch(), epoch, "no-op departures must not bump the epoch");
+    }
+}

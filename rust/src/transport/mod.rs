@@ -26,6 +26,7 @@ pub mod dist;
 pub mod error;
 pub mod frame;
 pub mod loopback;
+pub mod membership;
 pub mod tcp;
 pub mod wire;
 
@@ -33,6 +34,7 @@ pub use dist::DistSebulba;
 pub use error::TransportError;
 pub use frame::FrameKind;
 pub use loopback::LoopbackTransport;
+pub use membership::{Departure, Membership, PodSlot};
 pub use tcp::TcpTransport;
 
 use std::time::Duration;

@@ -173,6 +173,65 @@ pub fn decode_params(buf: &[u8]) -> Result<(u64, Vec<f32>), TransportError> {
     Ok((version, params))
 }
 
+// -- elastic membership handshake ---------------------------------------------
+
+/// Encode a `Join` request payload (actor → learner): the joiner's
+/// topology fingerprint, so the learner can refuse a pod built from a
+/// different geometry before admitting it into the data path.
+pub fn encode_join(fingerprint: u64) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.put_u64(fingerprint);
+    w.finish()
+}
+
+/// Decode a `Join` request payload.
+pub fn decode_join(buf: &[u8]) -> Result<u64, TransportError> {
+    let mut r = WireReader::new("join-request", buf);
+    let fingerprint = r.u64()?;
+    r.done()?;
+    Ok(fingerprint)
+}
+
+/// What the learner grants an admitted pod: its membership identity. The
+/// `Hello` reply to a `Join` carries this as `encode_admit` (the static
+/// handshake keeps its original 8-byte pod-index payload, so the elastic
+/// and static protocols stay byte-distinguishable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Admission {
+    /// Monotone pod index — never reused across the run, so the actor-id
+    /// range derived from it is never reused either.
+    pub pod_index: usize,
+    /// First actor id of this pod's id range (`pod_index * threads_per_pod`).
+    pub actor_id_base: usize,
+    /// Membership epoch at admission.
+    pub epoch: u64,
+    /// Beacon interval the learner expects; the actor sends `Heartbeat`
+    /// at a fraction of this so one delayed beacon is not an eviction.
+    pub heartbeat_ms: u64,
+}
+
+/// Encode an admission grant (learner → actor, `Hello` payload in elastic
+/// mode).
+pub fn encode_admit(a: &Admission) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.put_u64(a.pod_index as u64);
+    w.put_u64(a.actor_id_base as u64);
+    w.put_u64(a.epoch);
+    w.put_u64(a.heartbeat_ms);
+    w.finish()
+}
+
+/// Decode an admission grant.
+pub fn decode_admit(buf: &[u8]) -> Result<Admission, TransportError> {
+    let mut r = WireReader::new("admission", buf);
+    let pod_index = r.dim()?;
+    let actor_id_base = r.dim()?;
+    let epoch = r.u64()?;
+    let heartbeat_ms = r.u64()?;
+    r.done()?;
+    Ok(Admission { pod_index, actor_id_base, epoch, heartbeat_ms })
+}
+
 // -- trajectory bundles -------------------------------------------------------
 
 /// Encode one actor window's shard bundle. The bundle must be the complete
@@ -312,6 +371,31 @@ mod tests {
         let (v, back) = decode_params(&bytes).unwrap();
         assert_eq!(v, 42);
         assert_eq!(back, params);
+    }
+
+    #[test]
+    fn join_and_admit_roundtrip_and_reject_truncation() {
+        let bytes = encode_join(0xDEAD_BEEF_CAFE_F00D);
+        assert_eq!(decode_join(&bytes).unwrap(), 0xDEAD_BEEF_CAFE_F00D);
+        assert!(matches!(
+            decode_join(&bytes[..bytes.len() - 1]),
+            Err(TransportError::Truncated { .. })
+        ));
+        let mut extra = bytes;
+        extra.push(0);
+        assert!(matches!(decode_join(&extra), Err(TransportError::Corrupt { .. })));
+
+        let grant =
+            Admission { pod_index: 7, actor_id_base: 14, epoch: 9, heartbeat_ms: 250 };
+        let bytes = encode_admit(&grant);
+        assert_eq!(decode_admit(&bytes).unwrap(), grant);
+        assert!(matches!(
+            decode_admit(&bytes[..bytes.len() - 3]),
+            Err(TransportError::Truncated { .. })
+        ));
+        let mut extra = bytes;
+        extra.push(1);
+        assert!(matches!(decode_admit(&extra), Err(TransportError::Corrupt { .. })));
     }
 
     #[test]

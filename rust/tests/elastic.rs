@@ -1,0 +1,317 @@
+//! Elastic membership oracles (ISSUE 9 acceptance): epoch-based
+//! join/leave for distributed Sebulba.
+//!
+//! (a) An elastic run whose membership never changes is bit-identical in
+//!     `final_params` to today's static `DistSebulba` (and so, by the
+//!     ISSUE 8 oracle, to the in-memory single-process run): the first
+//!     admission always precedes update 1, so the whole first window is
+//!     generated under the version-0 snapshot either way.
+//! (b) A pod killed mid-run degrades the run gracefully while the active
+//!     count stays at or above `--min-actor-pods`, and fails the run
+//!     closed — with an error naming the lost pod and the floor — the
+//!     moment it drops below.
+//! (c) A late joiner is admitted against the learner's *current* params
+//!     snapshot and contributes under a fresh actor-id range; epochs are
+//!     monotone across admissions so ids are never reused.
+//!
+//! All runs ride the in-process `LoopbackTransport`: every byte still
+//! passes through the real frame codec, and fault plans inject pod death
+//! at the same seams a real process kill would hit.
+
+use std::num::NonZeroUsize;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use podracer::coordinator::Sebulba;
+use podracer::experiment::{EnvKind, PodRole, Report, RunSpec, Runner, Topology};
+use podracer::runtime::Pod;
+use podracer::testkit::FaultPlan;
+use podracer::transport::{DistSebulba, LoopbackTransport, Transport};
+
+fn artifacts() -> PathBuf {
+    let dir = podracer::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    dir
+}
+
+/// The deterministic anchor workload of the ISSUE 8 oracle, with a
+/// configurable update count (fault tests need room after the fault).
+fn workload(updates: u64) -> Sebulba {
+    Sebulba {
+        agent: "seb_catch".into(),
+        env_kind: EnvKind::Catch,
+        actor_batch: 32,
+        unroll: 20,
+        total_updates: updates,
+        seed: 123,
+        ..Sebulba::default()
+    }
+}
+
+fn topo(pods: usize) -> Topology {
+    Topology {
+        actor_cores: 1,
+        learner_cores: 1,
+        threads_per_actor_core: 1,
+        pipeline_stages: 1,
+        learner_pipeline: 1,
+        queue_capacity: 2,
+        pods: NonZeroUsize::new(pods).unwrap(),
+        ..Topology::default()
+    }
+}
+
+fn bits(params: &[f32]) -> Vec<u32> {
+    params.iter().map(|p| p.to_bits()).collect()
+}
+
+fn fault_spec(fault: FaultPlan) -> RunSpec {
+    RunSpec { fault: Some(fault), ..RunSpec::default() }
+}
+
+fn spawn_learner(
+    dist: DistSebulba,
+    pods: usize,
+    spec: RunSpec,
+) -> thread::JoinHandle<anyhow::Result<Report>> {
+    let art = artifacts();
+    thread::spawn(move || {
+        let t = topo(pods);
+        let mut pod = Pod::new(&art, t.cores_for_role(PodRole::Learner))?;
+        dist.run_checkpointed(&mut pod, &t, &spec)
+    })
+}
+
+fn spawn_actor(
+    dist: DistSebulba,
+    pods: usize,
+    spec: RunSpec,
+) -> thread::JoinHandle<anyhow::Result<Report>> {
+    let art = artifacts();
+    thread::spawn(move || {
+        let t = topo(pods);
+        let mut pod = Pod::new(&art, t.cores_for_role(PodRole::Actor))?;
+        dist.run_checkpointed(&mut pod, &t, &spec)
+    })
+}
+
+// -- (a) unchanged membership == static run ------------------------------
+
+#[test]
+fn elastic_run_with_unchanged_membership_is_bit_identical_to_static() {
+    // In-memory baseline — bit-identical to the static two-pod run by the
+    // ISSUE 8 oracle, so matching it proves elastic == static.
+    let t1 = topo(1);
+    let mut pod = Pod::new(&artifacts(), t1.total_cores()).unwrap();
+    let baseline = workload(1).run(&mut pod, &t1).unwrap();
+    assert_eq!(baseline.updates, 1);
+
+    let transport: Arc<dyn Transport> = Arc::new(LoopbackTransport::new());
+    let hb = Duration::from_millis(1000);
+    let learner = DistSebulba::learner(workload(1), "elastic-oracle", 1)
+        .with_transport(transport.clone())
+        .with_elastic(1, hb);
+    let actor = DistSebulba::actor(workload(1), "elastic-oracle")
+        .with_transport(transport)
+        .with_elastic(1, hb);
+
+    let learner_thread = spawn_learner(learner, 2, RunSpec::default());
+    thread::sleep(Duration::from_millis(100));
+    let actor_thread = spawn_actor(actor, 2, RunSpec::default());
+
+    let learner = learner_thread.join().unwrap().expect("elastic learner completed");
+    let actor = actor_thread.join().unwrap().expect("elastic actor completed");
+
+    assert_eq!(learner.updates, 1);
+    assert!(actor.steps > 0, "the actor pod must have stepped environments");
+    assert!(!baseline.final_params.is_empty());
+    assert_eq!(
+        bits(&learner.final_params),
+        bits(&baseline.final_params),
+        "an elastic run with unchanged membership must be bit-identical to the static run"
+    );
+
+    let ld = learner.as_actor_learner().expect("sebulba detail");
+    assert_eq!(ld.pods_joined, 1);
+    assert_eq!(ld.pods_evicted, 0);
+    assert_eq!(ld.membership_epoch, 1, "one admission, no departures");
+    let ad = actor.as_actor_learner().expect("sebulba detail");
+    assert_eq!(ad.membership_epoch, 1, "the actor carries its admission epoch");
+    assert_eq!(ad.join_param_version, 0, "the first joiner is seeded with the v0 snapshot");
+}
+
+// -- (b) pod death above and below the floor -----------------------------
+
+#[test]
+fn killed_pod_above_the_floor_degrades_gracefully() {
+    let transport: Arc<dyn Transport> = Arc::new(LoopbackTransport::new());
+    let hb = Duration::from_millis(1000);
+    let updates = 4;
+    let learner = DistSebulba::learner(workload(updates), "elastic-degrade", 2)
+        .with_transport(transport.clone())
+        .with_elastic(1, hb);
+    let learner_thread = spawn_learner(learner, 3, RunSpec::default());
+    thread::sleep(Duration::from_millis(100));
+
+    // Both actors carry the same plan targeting admitted pod index 0, so
+    // exactly one of them — whichever was admitted first — dies after its
+    // first window.
+    let kill = FaultPlan::kill_pod(0, 1);
+    let mut actor_threads = Vec::new();
+    for _ in 0..2 {
+        let actor = DistSebulba::actor(workload(updates), "elastic-degrade")
+            .with_transport(transport.clone())
+            .with_elastic(1, hb);
+        actor_threads.push(spawn_actor(actor, 3, fault_spec(kill.clone())));
+        thread::sleep(Duration::from_millis(150));
+    }
+
+    let learner = learner_thread
+        .join()
+        .unwrap()
+        .expect("one death above the floor must not fail the run");
+    assert_eq!(learner.updates, updates, "the survivor feeds the learner to completion");
+    let ld = learner.as_actor_learner().expect("sebulba detail");
+    assert_eq!(ld.pods_joined, 2);
+    assert_eq!(ld.pods_evicted, 1);
+    assert_eq!(ld.membership_epoch, 3, "two admissions + one eviction");
+
+    let results: Vec<_> = actor_threads.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(
+        results.iter().filter(|r| r.is_err()).count(),
+        1,
+        "exactly the targeted pod dies; the survivor completes"
+    );
+    let err = results.into_iter().find_map(|r| r.err()).unwrap().to_string();
+    assert!(err.contains("injected fault"), "{err}");
+}
+
+#[test]
+fn killed_sole_pod_fails_the_run_closed_at_the_floor() {
+    let transport: Arc<dyn Transport> = Arc::new(LoopbackTransport::new());
+    let hb = Duration::from_millis(500);
+    let learner = DistSebulba::learner(workload(4), "elastic-floor", 1)
+        .with_transport(transport.clone())
+        .with_elastic(1, hb);
+    let learner_thread = spawn_learner(learner, 2, RunSpec::default());
+    thread::sleep(Duration::from_millis(100));
+    let actor = DistSebulba::actor(workload(4), "elastic-floor")
+        .with_transport(transport)
+        .with_elastic(1, hb);
+    let start = Instant::now();
+    let actor_thread = spawn_actor(actor, 2, fault_spec(FaultPlan::kill_pod(0, 1)));
+
+    let learner_err = learner_thread
+        .join()
+        .unwrap()
+        .expect_err("0 active pods under a floor of 1 must fail the run closed")
+        .to_string();
+    let elapsed = start.elapsed();
+    assert!(learner_err.contains("below the --min-actor-pods floor"), "{learner_err}");
+    assert!(learner_err.contains("pod 0"), "the error must name the lost pod: {learner_err}");
+    // The dead connection surfaces immediately; the heartbeat window is
+    // the worst case, and even CI slack stays far under this bound.
+    assert!(elapsed < Duration::from_secs(30), "fail-closed must not hang, took {elapsed:?}");
+
+    let actor_err = actor_thread
+        .join()
+        .unwrap()
+        .expect_err("the killed pod itself reports the injected fault")
+        .to_string();
+    assert!(actor_err.contains("injected fault"), "{actor_err}");
+}
+
+// -- (c) late joiner: current params, fresh ids --------------------------
+
+#[test]
+fn late_joiner_receives_current_params_under_fresh_ids() {
+    let transport: Arc<dyn Transport> = Arc::new(LoopbackTransport::new());
+    let hb = Duration::from_millis(1000);
+    let updates = 4;
+    let learner = DistSebulba::learner(workload(updates), "elastic-join", 2)
+        .with_transport(transport.clone())
+        .with_elastic(1, hb);
+    // Park the second join (ordinal 1) until two updates have finished:
+    // the admission snapshot it receives must then be version >= 2.
+    let learner_thread = spawn_learner(learner, 3, fault_spec(FaultPlan::delay_admit(1, 2)));
+    thread::sleep(Duration::from_millis(100));
+
+    let first = DistSebulba::actor(workload(updates), "elastic-join")
+        .with_transport(transport.clone())
+        .with_elastic(1, hb);
+    let first_thread = spawn_actor(first, 3, RunSpec::default());
+    // The head start makes the first actor admission ordinal 0; loopback
+    // accepts in dial order.
+    thread::sleep(Duration::from_millis(300));
+    let late = DistSebulba::actor(workload(updates), "elastic-join")
+        .with_transport(transport)
+        .with_elastic(1, hb);
+    let late_thread = spawn_actor(late, 3, RunSpec::default());
+
+    let learner = learner_thread.join().unwrap().expect("learner completed");
+    let first = first_thread.join().unwrap().expect("first joiner completed");
+    let late = late_thread.join().unwrap().expect("late joiner completed");
+
+    assert_eq!(learner.updates, updates);
+    let ld = learner.as_actor_learner().expect("sebulba detail");
+    assert_eq!(ld.pods_joined, 2);
+    assert_eq!(ld.pods_evicted, 0);
+    assert_eq!(ld.membership_epoch, 2, "two admissions, no departures");
+
+    let fd = first.as_actor_learner().expect("sebulba detail");
+    let td = late.as_actor_learner().expect("sebulba detail");
+    assert_eq!(fd.join_param_version, 0, "the first joiner saw the v0 snapshot");
+    assert!(
+        td.join_param_version >= 2,
+        "the late joiner must be seeded with the learner's current snapshot, got v{}",
+        td.join_param_version
+    );
+    assert!(
+        td.membership_epoch > fd.membership_epoch,
+        "epochs are monotone across admissions ({} then {}), so actor-id ranges are fresh",
+        fd.membership_epoch,
+        td.membership_epoch
+    );
+    assert!(fd.membership_epoch >= 1);
+}
+
+// -- spec gating ---------------------------------------------------------
+
+#[test]
+fn fault_plan_dispatch_is_gated_on_elastic() {
+    let t = topo(2);
+    let mut pod = Pod::new(&artifacts(), 1).unwrap();
+
+    // Pod-level faults on a *static* distributed run are rejected.
+    let learner = DistSebulba::learner(workload(1), "spec-static", 1)
+        .with_transport(Arc::new(LoopbackTransport::new()));
+    let err = learner
+        .run_checkpointed(&mut pod, &t, &fault_spec(FaultPlan::kill_pod(0, 1)))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("checkpoint/restore/fault"), "{err}");
+
+    // Thread-level faults stay rejected even on elastic runs.
+    let learner = DistSebulba::learner(workload(1), "spec-elastic", 1)
+        .with_transport(Arc::new(LoopbackTransport::new()))
+        .with_elastic(1, Duration::from_millis(100));
+    let err = learner
+        .run_checkpointed(&mut pod, &t, &fault_spec(FaultPlan::kill_replica(0, 1)))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("checkpoint/restore/fault"), "{err}");
+
+    // Nonsense elastic knobs are construction-time errors, not hangs.
+    let learner = DistSebulba::learner(workload(1), "spec-bad-floor", 1)
+        .with_transport(Arc::new(LoopbackTransport::new()))
+        .with_elastic(0, Duration::from_millis(100));
+    assert!(learner.run_checkpointed(&mut pod, &t, &RunSpec::default()).is_err());
+    let learner = DistSebulba::learner(workload(1), "spec-bad-heartbeat", 1)
+        .with_transport(Arc::new(LoopbackTransport::new()))
+        .with_elastic(1, Duration::ZERO);
+    assert!(learner.run_checkpointed(&mut pod, &t, &RunSpec::default()).is_err());
+}

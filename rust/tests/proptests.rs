@@ -647,8 +647,15 @@ struct FrameData {
 }
 
 fn random_frame(g: &mut Gen) -> FrameData {
-    let kinds =
-        [FrameKind::Hello, FrameKind::Params, FrameKind::TrajBundle, FrameKind::Shutdown];
+    let kinds = [
+        FrameKind::Hello,
+        FrameKind::Params,
+        FrameKind::TrajBundle,
+        FrameKind::Shutdown,
+        FrameKind::Join,
+        FrameKind::Leave,
+        FrameKind::Heartbeat,
+    ];
     let kind = *g.pick(&kinds);
     let n = g.usize(0, 200);
     FrameData { kind, payload: random_bytes(g, n) }
@@ -813,4 +820,167 @@ fn prop_loopback_transport_delivers_bundles_bit_exactly() {
         }
         Ok(())
     });
+}
+
+// -- elastic membership (control plane, DESIGN.md §16) ------------------------
+
+use podracer::transport::membership::{Departure, Membership};
+use podracer::transport::wire::{decode_admit, decode_join, encode_admit, encode_join, Admission};
+
+#[test]
+fn prop_join_and_admit_codecs_roundtrip_and_reject_truncation() {
+    check(
+        "join/admit wire codecs",
+        40,
+        |g| {
+            let fingerprint = g.usize(0, 1 << 30) as u64 ^ ((g.usize(0, 1 << 30) as u64) << 32);
+            let admission = Admission {
+                pod_index: g.usize(0, 10_000),
+                actor_id_base: g.usize(0, 1_000_000),
+                epoch: g.usize(0, 100_000) as u64,
+                heartbeat_ms: g.usize(1, 60_000) as u64,
+            };
+            (fingerprint, admission)
+        },
+        |(fingerprint, admission)| {
+            let payload = encode_join(*fingerprint);
+            let back = decode_join(&payload).map_err(|e| e.to_string())?;
+            if back != *fingerprint {
+                return Err("join fingerprint changed in flight".into());
+            }
+            for cut in 0..payload.len() {
+                match decode_join(&payload[..cut]) {
+                    Err(TransportError::Truncated { .. }) => {}
+                    Err(other) => return Err(format!("join cut {cut}: wrong variant {other}")),
+                    Ok(_) => return Err(format!("join cut {cut}: a prefix decoded")),
+                }
+            }
+            let mut extra = payload.clone();
+            extra.push(0);
+            if !matches!(decode_join(&extra), Err(TransportError::Corrupt { .. })) {
+                return Err("trailing join bytes were not rejected".into());
+            }
+
+            let payload = encode_admit(admission);
+            let back = decode_admit(&payload).map_err(|e| e.to_string())?;
+            if back != *admission {
+                return Err("admission grant changed in flight".into());
+            }
+            for cut in 0..payload.len() {
+                match decode_admit(&payload[..cut]) {
+                    Err(TransportError::Truncated { .. }) => {}
+                    Err(other) => return Err(format!("admit cut {cut}: wrong variant {other}")),
+                    Ok(_) => return Err(format!("admit cut {cut}: a prefix decoded")),
+                }
+            }
+            let mut extra = payload.clone();
+            extra.push(0);
+            if !matches!(decode_admit(&extra), Err(TransportError::Corrupt { .. })) {
+                return Err("trailing admit bytes were not rejected".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Scripted membership churn: a random interleaving of admissions and
+/// departures (some targeting already-departed or never-admitted pods).
+#[derive(Debug, Clone, Copy)]
+enum ChurnOp {
+    Admit,
+    Depart(usize),
+}
+
+#[test]
+fn prop_membership_epochs_are_monotone_and_ids_never_reused() {
+    check(
+        "membership epoch monotonicity + id non-reuse",
+        40,
+        |g| {
+            let threads_per_pod = g.usize(1, 8).max(1);
+            let n = g.usize(1, 40).max(1);
+            let ops: Vec<ChurnOp> = (0..n)
+                .map(|_| {
+                    if g.bool() {
+                        ChurnOp::Admit
+                    } else {
+                        // target a plausible pod id, sometimes one that was
+                        // never admitted, sometimes a repeat departure
+                        ChurnOp::Depart(g.usize(0, n))
+                    }
+                })
+                .collect();
+            (threads_per_pod, ops)
+        },
+        |(threads_per_pod, ops)| {
+            let mut m = Membership::new(*threads_per_pod);
+            let mut last_epoch = m.epoch();
+            let mut seen_indices = std::collections::BTreeSet::new();
+            let mut live = std::collections::BTreeSet::new();
+            for op in ops {
+                match op {
+                    ChurnOp::Admit => {
+                        let slot = m.admit("prop-peer");
+                        // every admission bumps the epoch by exactly one
+                        if m.epoch() != last_epoch + 1 {
+                            return Err(format!(
+                                "admit bumped epoch {last_epoch} -> {}",
+                                m.epoch()
+                            ));
+                        }
+                        if slot.epoch_joined != m.epoch() {
+                            return Err("slot stamped with a stale epoch".into());
+                        }
+                        // pod indices are never reused, and the actor-id
+                        // range is derived from the index
+                        if !seen_indices.insert(slot.pod_index) {
+                            return Err(format!("pod index {} reused", slot.pod_index));
+                        }
+                        if slot.actor_id_base != slot.pod_index * threads_per_pod {
+                            return Err("actor-id range not derived from pod index".into());
+                        }
+                        live.insert(slot.pod_index);
+                        last_epoch = m.epoch();
+                    }
+                    ChurnOp::Depart(pod) => {
+                        let was_live = live.remove(pod);
+                        let why = Departure::Evicted { reason: "prop churn".into() };
+                        let slot = m.depart(*pod, &why);
+                        if was_live {
+                            // a real departure bumps the epoch by one
+                            if slot.is_none() || m.epoch() != last_epoch + 1 {
+                                return Err(format!("live departure of pod {pod} misbehaved"));
+                            }
+                            last_epoch = m.epoch();
+                        } else {
+                            // idempotent: no slot, no epoch bump
+                            if slot.is_some() || m.epoch() != last_epoch {
+                                return Err(format!(
+                                    "departing absent pod {pod} was not a no-op"
+                                ));
+                            }
+                        }
+                    }
+                }
+                if m.active_count() != live.len() {
+                    return Err(format!(
+                        "active_count {} != tracked {}",
+                        m.active_count(),
+                        live.len()
+                    ));
+                }
+            }
+            // bookkeeping identity: every epoch bump is one join or one
+            // departure
+            if m.epoch() != m.joined() + m.departed() {
+                return Err(format!(
+                    "epoch {} != joined {} + departed {}",
+                    m.epoch(),
+                    m.joined(),
+                    m.departed()
+                ));
+            }
+            Ok(())
+        },
+    );
 }

@@ -116,9 +116,24 @@ PIDS+=("$!")
 
 sleep 2
 kill -9 "$VICTIM" 2>/dev/null || true
-if wait "$LEARNER"; then
+# `wait` alone can't distinguish "failed with the typed error" from "hung
+# until timeout(1) killed it" — both are nonzero. Capture the code: 0 is a
+# miss, 124 (timeout) means the learner blocked past its retry budget.
+start=$SECONDS
+rc=0
+wait "$LEARNER" || rc=$?
+elapsed=$((SECONDS - start))
+if [[ "$rc" -eq 0 ]]; then
     cat "$TMP/lossy_learner.log"
     echo "[dist-smoke] FAILED (actor kill): learner must exit nonzero" >&2
+    fail=1
+elif [[ "$rc" -eq 124 ]]; then
+    cat "$TMP/lossy_learner.log"
+    echo "[dist-smoke] FAILED (actor kill): learner hung until the harness timeout (exit 124) instead of failing within its retry budget" >&2
+    fail=1
+fi
+if (( elapsed > 60 )); then
+    echo "[dist-smoke] FAILED (actor kill): learner took ${elapsed}s after the kill — the retry budget must bound it" >&2
     fail=1
 fi
 if ! grep -Eqi 'lost|wire failure|closed' "$TMP/lossy_learner.log"; then

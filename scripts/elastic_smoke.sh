@@ -1,0 +1,131 @@
+#!/usr/bin/env bash
+# Elastic smoke (ISSUE 9): epoch-based membership for distributed Sebulba
+# as real separate processes over loopback TCP. Positive case: a learner
+# pod with `--elastic` rides out an actor-pod kill (active count stays at
+# the floor) and admits a fresh joiner mid-run; the learner must finish
+# every update and its report must show the churn in the membership
+# counters (pods_joined=3, pods_evicted=1). Negative cases pin the flag
+# validation: elastic knobs are rejected off the distributed roles and on
+# the other architectures (DESIGN.md §16).
+#
+# Wired into CI next to dist-smoke; run locally with `make elastic-smoke`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${PODRACER_BIN:-target/release/podracer}
+if [[ ! -x "$BIN" ]]; then
+    echo "[elastic-smoke] $BIN missing — run 'cargo build --release' first" >&2
+    exit 1
+fi
+
+TMP=$(mktemp -d "${TMPDIR:-/tmp}/podracer_elastic_smoke.XXXXXX")
+PIDS=()
+cleanup() {
+    for pid in "${PIDS[@]:-}"; do kill "$pid" 2>/dev/null || true; done
+    rm -rf "$TMP"
+}
+trap cleanup EXIT
+
+free_port() {
+    python3 - <<'EOF'
+import socket
+s = socket.socket()
+s.bind(("127.0.0.1", 0))
+print(s.getsockname()[1])
+s.close()
+EOF
+}
+
+fail=0
+
+# Same deterministic anchor as dist-smoke; enough updates that the run is
+# still in flight while we kill and rejoin pods (~the first 1.5s).
+UPDATES=600
+COMMON=(sebulba --agent seb_catch --env catch --actor-cores 1 --learner-cores 1
+        --threads 1 --pipeline-stages 1 --batch 32 --unroll 20 --seed 123
+        --updates "$UPDATES" --pods 3 --elastic --heartbeat-ms 500)
+
+# --- positive: kill one actor pod mid-run, rejoin, finish every update -------
+ADDR="127.0.0.1:$(free_port)"
+echo "== elastic pods=3 over $ADDR: kill one actor, admit a replacement =="
+timeout 180 "$BIN" "${COMMON[@]}" --min-actor-pods 1 \
+    --role learner --listen "$ADDR" > "$TMP/learner.log" 2>&1 &
+LEARNER=$!
+PIDS+=("$LEARNER")
+sleep 0.3
+timeout 180 "$BIN" "${COMMON[@]}" \
+    --role actor --connect "$ADDR" > "$TMP/victim.log" 2>&1 &
+VICTIM=$!
+PIDS+=("$VICTIM")
+timeout 180 "$BIN" "${COMMON[@]}" \
+    --role actor --connect "$ADDR" > "$TMP/survivor.log" 2>&1 &
+PIDS+=("$!")
+
+sleep 0.5
+if ! kill -0 "$LEARNER" 2>/dev/null; then
+    cat "$TMP/learner.log"
+    echo "[elastic-smoke] FAILED: learner finished before the churn started — raise UPDATES" >&2
+    fail=1
+fi
+kill -9 "$VICTIM" 2>/dev/null || true
+sleep 0.2
+timeout 180 "$BIN" "${COMMON[@]}" \
+    --role actor --connect "$ADDR" > "$TMP/rejoin.log" 2>&1 &
+PIDS+=("$!")
+
+rc=0
+wait "$LEARNER" || rc=$?
+if [[ "$rc" -ne 0 ]]; then
+    cat "$TMP/learner.log"
+    echo "[elastic-smoke] FAILED: learner exited $rc — one death above the floor must not fail an elastic run" >&2
+    fail=1
+fi
+head -n 1 "$TMP/learner.log"
+if ! grep -Eq "sebulba: .*updates=$UPDATES" "$TMP/learner.log"; then
+    cat "$TMP/learner.log"
+    echo "[elastic-smoke] FAILED: learner did not finish all $UPDATES updates" >&2
+    fail=1
+fi
+if ! grep -Eq 'pods_joined=3' "$TMP/learner.log"; then
+    cat "$TMP/learner.log"
+    echo "[elastic-smoke] FAILED: the rejoined pod is missing from the membership counters" >&2
+    fail=1
+fi
+if ! grep -Eq 'pods_evicted=1' "$TMP/learner.log"; then
+    cat "$TMP/learner.log"
+    echo "[elastic-smoke] FAILED: the killed pod was not evicted exactly once" >&2
+    fail=1
+fi
+grep -E 'membership' "$TMP/learner.log" | head -n 1 || true
+# the victim was SIGKILLed; the other actors are torn down by the learner's
+# shutdown broadcast and must not linger
+for pid in "${PIDS[@]}"; do wait "$pid" 2>/dev/null || true; done
+PIDS=()
+
+# --- negative: elastic flags off the distributed surface are hard errors -----
+expect_error() {
+    local desc="$1"
+    shift
+    echo "== podracer $* (must fail) =="
+    if timeout 60 "$BIN" "$@" > "$TMP/out.log" 2>&1; then
+        cat "$TMP/out.log"
+        echo "[elastic-smoke] FAILED ($desc): expected nonzero exit" >&2
+        fail=1
+        return
+    fi
+    head -n 2 "$TMP/out.log"
+}
+
+expect_error "elastic on colocated"       sebulba --updates 1 --elastic
+expect_error "floor without --elastic"    sebulba --updates 1 --pods 2 --role learner --listen 127.0.0.1:1 --min-actor-pods 1
+expect_error "heartbeat without elastic"  sebulba --updates 1 --pods 2 --role learner --listen 127.0.0.1:1 --heartbeat-ms 250
+expect_error "zero heartbeat"             sebulba --updates 1 --pods 2 --role learner --listen 127.0.0.1:1 --elastic --heartbeat-ms 0
+expect_error "floor above actor pods"     sebulba --updates 1 --pods 2 --role learner --listen 127.0.0.1:1 --elastic --min-actor-pods 2
+expect_error "elastic on anakin"          anakin --outer-iters 1 --elastic
+expect_error "elastic on muzero"          muzero --updates 1 --elastic
+
+if [[ "$fail" -ne 0 ]]; then
+    echo "[elastic-smoke] FAILURES above" >&2
+    exit 1
+fi
+echo "[elastic-smoke] all cases passed"
