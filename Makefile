@@ -5,11 +5,11 @@ ARTIFACTS := artifacts
 BENCHES   := $(notdir $(basename $(wildcard rust/benches/*.rs)))
 # The CI bench-regression gate's smoke set (see scripts/bench_gate.py).
 SMOKE_BENCHES := fig4a_anakin_scaling ablation_learner_pipeline ablation_pipeline_stages \
-                 fig4b_actor_batch serve_continuous_batching
+                 fig4b_actor_batch serve_continuous_batching table_cost_model
 
 .PHONY: all artifacts build test quickstart bench bench-learner-pipeline \
         bench-smoke bench-baseline cli-smoke restore-smoke serve-smoke dist-smoke \
-        elastic-smoke fmt clippy
+        elastic-smoke plan-smoke league-smoke fmt clippy
 
 all: artifacts build
 
@@ -86,6 +86,23 @@ dist-smoke: build
 # rejected (scripts/elastic_smoke.sh). Runs in CI next to dist-smoke.
 elastic-smoke: build
 	bash scripts/elastic_smoke.sh
+
+# Plan smoke (ISSUE 10): `podracer plan --calibrate` bootstraps a cost
+# model, the predicted-best topology must land in the top-2 by measured
+# throughput over the sebulba × {catch, atari_like} × {4, 6}-core grid,
+# and `--topology auto` trains end to end on all three architectures;
+# conflicting split knobs and missing models are hard errors
+# (scripts/plan_smoke.sh). Runs in CI next to cli-smoke.
+plan-smoke: build
+	bash scripts/plan_smoke.sh
+
+# League smoke (ISSUE 10): a 3-player round-robin self-play league where
+# two same-seed runs and a 2-worker concurrent schedule must all produce
+# byte-identical --report-json files (params CRCs included); degenerate
+# leagues are rejected (scripts/league_smoke.sh). Runs in CI next to
+# plan-smoke.
+league-smoke: build
+	bash scripts/league_smoke.sh
 
 # Regenerate the committed baselines from a smoke run on this machine
 # (same PODRACER_BENCH_FAST=1 conditions CI compares under).

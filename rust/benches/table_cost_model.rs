@@ -8,10 +8,16 @@
 //! April-2021 preemptible TPU v3 price ($1.35/h per 8 cores — backed out of
 //! the paper's own $2.88/h figure... the paper's number *is* the hourly
 //! rate x 1h), and prints our rows next to the paper's.
+//!
+//! It also folds every measured run into a [`CostModel`] and writes
+//! `artifacts/cost_model.json` — the planner's bootstrap file (`podracer
+//! plan`, `--topology auto`; DESIGN.md §17). Running in `SMOKE_BENCHES`
+//! keeps the shipped model fresh.
 
 use podracer::benchkit::Bench;
 use podracer::experiment::{Arch, EnvKind, Experiment, Topology};
-use podracer::runtime::Pod;
+use podracer::plan::CostModel;
+use podracer::runtime::{Manifest, Pod};
 
 const FRAMES_TARGET: f64 = 200e6;
 /// Paper's cost basis: $2.88 for ~1h on an 8-core preemptible TPU v3.
@@ -24,6 +30,7 @@ fn main() -> anyhow::Result<()> {
     let updates = if fast { 3 } else { 10 };
 
     let mut bench = Bench::new("cost table: 200M-frame Atari training (paper §Sebulba)");
+    let mut model = CostModel::new();
 
     // --- model-free V-trace on atari_like (the paper's headline row) ------
     let mut pod = Pod::new(&artifacts, 6)?;
@@ -49,6 +56,33 @@ fn main() -> anyhow::Result<()> {
     bench.case("sebulba v-trace atari_like (6 cores)", "frames/s", || {
         let r = exp.run_on(&mut pod).unwrap();
         vtrace_fps = r.throughput;
+        model.fold(&r, EnvKind::AtariLike.as_str(), 32, exp.topology());
+        r.throughput
+    });
+    drop(pod);
+
+    // --- catch row: the planner-smoke bootstrap cell -----------------------
+    let mut pod = Pod::new(&artifacts, 3)?;
+    let catch = Experiment::new(Arch::Sebulba)
+        .artifacts(&artifacts)
+        .agent("seb_catch")
+        .env(EnvKind::Catch)
+        .topology(Topology {
+            actor_cores: 1,
+            learner_cores: 2,
+            threads_per_actor_core: 1,
+            pipeline_stages: 2,
+            learner_pipeline: 1,
+            ..Topology::default()
+        })
+        .actor_batch(32)
+        .unroll(20)
+        .updates(updates)
+        .seed(3)
+        .build()?;
+    bench.case("sebulba v-trace catch (3 cores)", "frames/s", || {
+        let r = catch.run_on(&mut pod).unwrap();
+        model.fold(&r, EnvKind::Catch.as_str(), 32, catch.topology());
         r.throughput
     });
     drop(pod);
@@ -60,10 +94,13 @@ fn main() -> anyhow::Result<()> {
         .num_simulations(if fast { 4 } else { 8 })
         .updates(if fast { 2 } else { 5 })
         .build()?;
+    // MuZero's cost cell is keyed by the manifest's lowered batch.
+    let mz_batch = Manifest::load(&artifacts)?.agent("mz_catch")?.extra_usize("batch")?;
     let mut mz_fps = 0.0;
     bench.case("sebulba muzero catch (4 cores)", "frames/s", || {
         let r = mz.run_on(&mut pod).unwrap();
         mz_fps = r.throughput;
+        model.fold(&r, EnvKind::Catch.as_str(), mz_batch, mz.topology());
         r.throughput
     });
 
@@ -87,6 +124,10 @@ fn main() -> anyhow::Result<()> {
          dominates acting)",
         vtrace_fps / mz_fps.max(1e-9)
     );
+
+    let model_path = artifacts.join("cost_model.json");
+    model.save(&model_path)?;
+    println!("cost model: wrote {} ({} cells)", model_path.display(), model.len());
 
     bench.finish();
     Ok(())

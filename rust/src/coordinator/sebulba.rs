@@ -537,6 +537,10 @@ pub(crate) fn run_resolved(
             learner_overlap_seconds: stats.learner_overlap_seconds(),
             queue_push_block_seconds: queues.iter().map(|q| q.push_block_seconds()).sum(),
             queue_pop_block_seconds: queues.iter().map(|q| q.pop_block_seconds()).sum(),
+            infer_calls: stats.infer_calls(),
+            grad_calls: stats.grad_calls(),
+            apply_calls: stats.apply_calls(),
+            env_step_calls: stats.env_step_calls(),
             pods_joined: 0,
             pods_evicted: 0,
             membership_epoch: 0,

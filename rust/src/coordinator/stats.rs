@@ -402,6 +402,28 @@ impl RunStats {
         f32::from_bits(self.last_loss_bits.load(Ordering::Relaxed) as u32)
     }
 
+    /// Completed inference calls (the inference histogram's sample count —
+    /// the denominator behind its per-call latency, and the call-count
+    /// surface `Report::to_json` exposes to the planner).
+    pub fn infer_calls(&self) -> u64 {
+        self.inference_latency.count()
+    }
+
+    /// Completed learner grad rounds.
+    pub fn grad_calls(&self) -> u64 {
+        self.grad_latency.count()
+    }
+
+    /// Completed apply rounds.
+    pub fn apply_calls(&self) -> u64 {
+        self.apply_latency.count()
+    }
+
+    /// Batched env-step rounds recorded by actor threads.
+    pub fn env_step_calls(&self) -> u64 {
+        self.env_step_latency.count()
+    }
+
     pub fn mean_staleness(&self) -> f64 {
         let u = self.updates.load(Ordering::Relaxed);
         if u == 0 {

@@ -698,6 +698,10 @@ mod from_args {
         "checkpoint-every",
         "checkpoint-path",
         "restore",
+        "topology",
+        "pod-cores",
+        "cost-model",
+        "report-json",
     ];
     const SEBULBA_FLAGS: &[&str] = &[
         "agent",
@@ -727,6 +731,10 @@ mod from_args {
         "elastic",
         "min-actor-pods",
         "heartbeat-ms",
+        "topology",
+        "pod-cores",
+        "cost-model",
+        "report-json",
     ];
     const MUZERO_FLAGS: &[&str] = &[
         "agent",
@@ -745,6 +753,10 @@ mod from_args {
         "checkpoint-every",
         "checkpoint-path",
         "restore",
+        "topology",
+        "pod-cores",
+        "cost-model",
+        "report-json",
     ];
 
     fn check_flags(cmd: &str, args: &Args, accepted: &[&str]) -> Result<()> {
@@ -792,13 +804,112 @@ mod from_args {
         Ok(b)
     }
 
+    /// Parse `--topology auto [--pod-cores N] [--cost-model P]` into a
+    /// planned [`Topology`], or `None` when the run is explicitly shaped.
+    /// Every conflict is a hard error: `--topology` accepts only `auto`,
+    /// the split knobs may not be mixed with it (the planner owns the
+    /// split), and the planner knobs mean nothing without it.
+    fn auto_topology(arch: Arch, args: &Args) -> Result<Option<Topology>> {
+        if !args.has("topology") {
+            for key in ["pod-cores", "cost-model"] {
+                if args.has(key) {
+                    bail!("--{key} only applies with --topology auto");
+                }
+            }
+            return Ok(None);
+        }
+        let value = args.get_str("topology", "");
+        if value != "auto" {
+            bail!(
+                "--topology expects `auto`, got {value:?} (explicit shapes use the \
+                 split flags instead)"
+            );
+        }
+        let conflicting: &[&str] = match arch {
+            Arch::Anakin => &["cores"],
+            Arch::Sebulba => &[
+                "actor-cores",
+                "learner-cores",
+                "threads",
+                "pipeline-stages",
+                "learner-pipeline",
+                "replicas",
+                "env-workers",
+                "queue",
+                "pods",
+                "role",
+                "listen",
+                "connect",
+                "elastic",
+                "min-actor-pods",
+                "heartbeat-ms",
+            ],
+            Arch::MuZero => &[
+                "actor-cores",
+                "learner-cores",
+                "threads",
+                "learner-pipeline",
+                "replicas",
+                "env-workers",
+                "queue",
+            ],
+        };
+        for key in conflicting {
+            if args.has(key) {
+                bail!("--{key} conflicts with --topology auto (the planner owns the split)");
+            }
+        }
+        let pod_cores = args.get_usize("pod-cores", 4)?;
+        if pod_cores == 0 {
+            bail!("--pod-cores expects a positive core count");
+        }
+        let model_path = args
+            .flags
+            .get("cost-model")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| crate::artifacts_dir().join("cost_model.json"));
+        let model = crate::plan::CostModel::load(&model_path).with_context(|| {
+            format!(
+                "loading cost model {} for --topology auto (bootstrap one with \
+                 `podracer plan --calibrate` or `make bench-smoke`)",
+                model_path.display()
+            )
+        })?;
+        let mut req = crate::plan::PlanRequest::new(arch, pod_cores);
+        match arch {
+            Arch::Anakin => {
+                req.agent = args.get_str("agent", "anakin_catch");
+                // Anakin's env is baked into the fused agent program; the
+                // cost cell's env label follows the agent tag.
+                req.env =
+                    if req.agent.contains("grid") { "gridworld" } else { "catch" }.to_string();
+            }
+            Arch::Sebulba => {
+                req.agent = args.get_str("agent", "seb_catch");
+                req.env = parse_flag::<EnvKind>(args, "env", "catch")?.as_str().to_string();
+                req.actor_batch = args.get_usize("batch", 32)?;
+                req.unroll = args.get_usize("unroll", 20)?;
+                req.micro_batches = args.get_usize("micro-batches", 1)?;
+            }
+            Arch::MuZero => {
+                req.agent = args.get_str("agent", "mz_catch");
+                req.env = parse_flag::<EnvKind>(args, "env", "catch")?.as_str().to_string();
+            }
+        }
+        Ok(Some(Topology::auto_for(&req, &model)?))
+    }
+
     pub(super) fn build(arch: Arch, args: &Args) -> Result<Experiment> {
         match arch {
             Arch::Anakin => {
                 check_flags(arch.as_str(), args, ANAKIN_FLAGS)?;
+                let topo = match auto_topology(arch, args)? {
+                    Some(t) => t,
+                    None => Topology::anakin(args.get_usize("cores", 4)?),
+                };
                 let b = Experiment::new(arch)
                     .agent(&args.get_str("agent", "anakin_catch"))
-                    .topology(Topology::anakin(args.get_usize("cores", 4)?))
+                    .topology(topo)
                     .updates(args.get_u64("outer-iters", 20)?)
                     .mode(parse_flag(args, "mode", "bundled")?)
                     .driver(parse_flag(args, "driver", "threaded")?)
@@ -812,22 +923,29 @@ mod from_args {
                     "copy" => true,
                     other => bail!("--data-path expects arena|copy, got {other:?}"),
                 };
-                let pods = NonZeroUsize::new(args.get_usize("pods", 1)?)
-                    .ok_or_else(|| anyhow::anyhow!("--pods expects a positive pod count"))?;
+                let topo = match auto_topology(arch, args)? {
+                    Some(t) => t,
+                    None => {
+                        let pods = NonZeroUsize::new(args.get_usize("pods", 1)?).ok_or_else(
+                            || anyhow::anyhow!("--pods expects a positive pod count"),
+                        )?;
+                        Topology {
+                            actor_cores: args.get_usize("actor-cores", 2)?,
+                            learner_cores: args.get_usize("learner-cores", 2)?,
+                            replicas: args.get_usize("replicas", 1)?,
+                            threads_per_actor_core: args.get_usize("threads", 2)?,
+                            pipeline_stages: args.get_usize("pipeline-stages", 2)?,
+                            learner_pipeline: args.get_usize("learner-pipeline", 2)?,
+                            env_workers: args.get_usize("env-workers", 2)?,
+                            queue_capacity: args.get_usize("queue", 4)?,
+                            pods,
+                        }
+                    }
+                };
                 let mut b = Experiment::new(arch)
                     .agent(&args.get_str("agent", "seb_catch"))
                     .env(parse_flag(args, "env", "catch")?)
-                    .topology(Topology {
-                        actor_cores: args.get_usize("actor-cores", 2)?,
-                        learner_cores: args.get_usize("learner-cores", 2)?,
-                        replicas: args.get_usize("replicas", 1)?,
-                        threads_per_actor_core: args.get_usize("threads", 2)?,
-                        pipeline_stages: args.get_usize("pipeline-stages", 2)?,
-                        learner_pipeline: args.get_usize("learner-pipeline", 2)?,
-                        env_workers: args.get_usize("env-workers", 2)?,
-                        queue_capacity: args.get_usize("queue", 4)?,
-                        pods,
-                    })
+                    .topology(topo)
                     .actor_batch(args.get_usize("batch", 32)?)
                     .unroll(args.get_usize("unroll", 20)?)
                     .micro_batches(args.get_usize("micro-batches", 1)?)
@@ -862,10 +980,9 @@ mod from_args {
             }
             Arch::MuZero => {
                 check_flags(arch.as_str(), args, MUZERO_FLAGS)?;
-                let b = Experiment::new(arch)
-                    .agent(&args.get_str("agent", "mz_catch"))
-                    .env(parse_flag(args, "env", "catch")?)
-                    .topology(Topology {
+                let topo = match auto_topology(arch, args)? {
+                    Some(t) => t,
+                    None => Topology {
                         actor_cores: args.get_usize("actor-cores", 2)?,
                         learner_cores: args.get_usize("learner-cores", 2)?,
                         replicas: args.get_usize("replicas", 1)?,
@@ -875,7 +992,12 @@ mod from_args {
                         env_workers: args.get_usize("env-workers", 2)?,
                         queue_capacity: args.get_usize("queue", 4)?,
                         pods: ONE_POD,
-                    })
+                    },
+                };
+                let b = Experiment::new(arch)
+                    .agent(&args.get_str("agent", "mz_catch"))
+                    .env(parse_flag(args, "env", "catch")?)
+                    .topology(topo)
                     .num_simulations(args.get_usize("simulations", 16)?)
                     .discount(args.get_f64("discount", 0.997)? as f32)
                     .updates(args.get_u64("updates", 20)?)
@@ -895,6 +1017,7 @@ mod from_args {
         "steps",
         "swap-every",
         "seed",
+        "report-json",
     ];
 
     /// `podracer serve` flag parsing: same hard-error discipline as the
@@ -1046,6 +1169,47 @@ mod tests {
         // arch-inapplicable flags are unknown for that arch
         assert!(Experiment::from_args(Arch::Anakin, &parse(&["--env", "catch"])).is_err());
         assert!(Experiment::from_args(Arch::Sebulba, &parse(&["--simulations", "4"])).is_err());
+    }
+
+    #[test]
+    fn topology_auto_flag_conflicts_hard_error() {
+        // --topology accepts only `auto`
+        let err = Experiment::from_args(Arch::Sebulba, &parse(&["--topology", "manual"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("auto"), "{err}");
+        // explicit split knobs conflict with the planner owning the split
+        for (arch, knob) in [
+            (Arch::Sebulba, "--actor-cores"),
+            (Arch::Sebulba, "--pods"),
+            (Arch::MuZero, "--learner-cores"),
+            (Arch::Anakin, "--cores"),
+        ] {
+            let err = Experiment::from_args(arch, &parse(&["--topology", "auto", knob, "2"]))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("conflicts with --topology auto"), "{arch}: {err}");
+        }
+        // planner knobs without --topology auto are rejected, never ignored
+        for knob in ["--pod-cores", "--cost-model"] {
+            let err = Experiment::from_args(Arch::Sebulba, &parse(&[knob, "4"]))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("only applies with --topology auto"), "{err}");
+        }
+        // a zero-core budget is rejected before the model even loads
+        assert!(Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--topology", "auto", "--pod-cores", "0"])
+        )
+        .is_err());
+        // a missing cost model is a hard error naming the bootstrap command
+        let err = Experiment::from_args(
+            Arch::Sebulba,
+            &parse(&["--topology", "auto", "--cost-model", "/nonexistent/cm.json"]),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("--calibrate"), "{err:#}");
     }
 
     #[test]

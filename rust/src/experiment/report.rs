@@ -8,6 +8,8 @@
 //! typed [`Detail`] payload.
 
 use super::Arch;
+use crate::checkpoint::format::crc32_update;
+use crate::util::json::Json;
 
 /// Per-outer-iteration Anakin metrics, averaged over cores and in-graph
 /// updates: `[loss, pg_loss, baseline_loss, entropy, episode_reward]`.
@@ -97,6 +99,14 @@ pub struct ActorLearnerDetail {
     pub learner_overlap_seconds: f64,
     pub queue_push_block_seconds: f64,
     pub queue_pop_block_seconds: f64,
+    /// Completed inference calls (the latency histogram's sample count).
+    pub infer_calls: u64,
+    /// Completed learner grad rounds.
+    pub grad_calls: u64,
+    /// Completed apply rounds.
+    pub apply_calls: u64,
+    /// Batched env-step rounds recorded by actor threads.
+    pub env_step_calls: u64,
     /// Elastic membership accounting (DESIGN.md §16). On a learner pod:
     /// pods admitted / retired over the run and the final membership
     /// epoch. On an actor pod: `membership_epoch` is its admission epoch.
@@ -151,6 +161,85 @@ impl Report {
             Arch::Anakin => "sps",
             Arch::Sebulba | Arch::MuZero => "fps",
         }
+    }
+
+    /// CRC32 over the final params' f32 bit patterns (little-endian) — a
+    /// compact bit-identity fingerprint for oracles and league results.
+    pub fn final_params_crc32(&self) -> u32 {
+        let mut state = 0xFFFF_FFFFu32;
+        for p in &self.final_params {
+            state = crc32_update(state, &p.to_le_bytes());
+        }
+        state ^ 0xFFFF_FFFF
+    }
+
+    /// The machine-readable report (`--report-json`): stable field names,
+    /// every per-stage second the planner's `CostModel::fold` consumes, and
+    /// a params digest instead of the raw parameter vector.
+    pub fn to_json(&self) -> Json {
+        let detail = match &self.detail {
+            Detail::Anakin(d) => {
+                let (first, last) = (d.metrics.first(), d.metrics.last());
+                let row = |r: Option<&MetricRow>, i: usize| match r {
+                    Some(m) => Json::num(m[i]),
+                    None => Json::Null,
+                };
+                Json::obj(vec![
+                    ("kind", Json::str("anakin")),
+                    ("metrics_rows", Json::num(d.metrics.len() as f64)),
+                    ("first_loss", row(first, 0)),
+                    ("last_loss", row(last, 0)),
+                    ("first_reward", row(first, 4)),
+                    ("last_reward", row(last, 4)),
+                    ("replica_device_seconds", Json::num(d.replica_device_seconds)),
+                    ("replica_host_seconds", Json::num(d.replica_host_seconds)),
+                    ("replica_collective_seconds", Json::num(d.replica_collective_seconds)),
+                    ("replica_active_seconds", Json::num(d.replica_active_seconds)),
+                    ("replica_overlap_seconds", Json::num(d.replica_overlap_seconds)),
+                    ("replica_busy_max_seconds", Json::num(d.replica_busy_max_seconds)),
+                ])
+            }
+            Detail::ActorLearner(d) => Json::obj(vec![
+                ("kind", Json::str("actor_learner")),
+                ("mean_staleness", Json::num(d.mean_staleness)),
+                ("mean_episode_reward", Json::num(d.mean_episode_reward)),
+                ("episodes", Json::num(d.episodes as f64)),
+                ("last_loss", Json::num(d.last_loss as f64)),
+                ("actor_busy_seconds", Json::num(d.actor_busy_seconds)),
+                ("learner_busy_seconds", Json::num(d.learner_busy_seconds)),
+                ("actor_infer_seconds", Json::num(d.actor_infer_seconds)),
+                ("actor_env_step_seconds", Json::num(d.actor_env_step_seconds)),
+                ("actor_loop_seconds", Json::num(d.actor_loop_seconds)),
+                ("actor_overlap_seconds", Json::num(d.actor_overlap_seconds)),
+                ("learner_grad_seconds", Json::num(d.learner_grad_seconds)),
+                ("learner_collective_seconds", Json::num(d.learner_collective_seconds)),
+                ("learner_apply_seconds", Json::num(d.learner_apply_seconds)),
+                ("learner_active_seconds", Json::num(d.learner_active_seconds)),
+                ("learner_overlap_seconds", Json::num(d.learner_overlap_seconds)),
+                ("queue_push_block_seconds", Json::num(d.queue_push_block_seconds)),
+                ("queue_pop_block_seconds", Json::num(d.queue_pop_block_seconds)),
+                ("infer_calls", Json::num(d.infer_calls as f64)),
+                ("grad_calls", Json::num(d.grad_calls as f64)),
+                ("apply_calls", Json::num(d.apply_calls as f64)),
+                ("env_step_calls", Json::num(d.env_step_calls as f64)),
+                ("pods_joined", Json::num(d.pods_joined as f64)),
+                ("pods_evicted", Json::num(d.pods_evicted as f64)),
+                ("membership_epoch", Json::num(d.membership_epoch as f64)),
+                ("join_param_version", Json::num(d.join_param_version as f64)),
+                ("final_opt_state_len", Json::num(d.final_opt_state.len() as f64)),
+            ]),
+        };
+        Json::obj(vec![
+            ("arch", Json::str(self.arch.as_str())),
+            ("steps", Json::num(self.steps as f64)),
+            ("updates", Json::num(self.updates as f64)),
+            ("elapsed_seconds", Json::num(self.elapsed)),
+            ("throughput", Json::num(self.throughput)),
+            ("projected_throughput", Json::num(self.projected_throughput)),
+            ("final_params_len", Json::num(self.final_params.len() as f64)),
+            ("final_params_crc32", Json::num(self.final_params_crc32() as f64)),
+            ("detail", detail),
+        ])
     }
 
     /// The multi-line human summary the CLI prints — one code path for all
@@ -247,6 +336,10 @@ mod tests {
                 learner_overlap_seconds: 0.0,
                 queue_push_block_seconds: 0.0,
                 queue_pop_block_seconds: 0.0,
+                infer_calls: 40,
+                grad_calls: 2,
+                apply_calls: 2,
+                env_step_calls: 40,
                 pods_joined: 0,
                 pods_evicted: 0,
                 membership_epoch: 0,
@@ -262,6 +355,45 @@ mod tests {
         assert!(s.starts_with("sebulba: frames=1280"), "{s}");
         assert!(s.contains("fps=2560"), "{s}");
         assert!(s.contains("learner pipeline:"), "{s}");
+    }
+
+    #[test]
+    fn to_json_has_stable_names_and_params_digest() {
+        let r = sebulba_report();
+        let j = r.to_json();
+        assert_eq!(j.get("arch").unwrap().as_str(), Some("sebulba"));
+        assert_eq!(j.get("steps").unwrap().as_usize(), Some(1280));
+        assert_eq!(j.get("final_params_len").unwrap().as_usize(), Some(2));
+        assert_eq!(
+            j.get("final_params_crc32").unwrap().as_f64(),
+            Some(r.final_params_crc32() as f64)
+        );
+        let d = j.get("detail").unwrap();
+        assert_eq!(d.get("kind").unwrap().as_str(), Some("actor_learner"));
+        // the per-stage seconds the planner folds must be present by name
+        for key in [
+            "actor_infer_seconds",
+            "actor_env_step_seconds",
+            "learner_grad_seconds",
+            "learner_collective_seconds",
+            "learner_apply_seconds",
+            "infer_calls",
+            "grad_calls",
+        ] {
+            assert!(d.get(key).is_some(), "missing {key}");
+        }
+        // serialized form must parse back (canonical writer round-trip)
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn params_digest_tracks_bit_identity() {
+        let a = sebulba_report();
+        let mut b = sebulba_report();
+        assert_eq!(a.final_params_crc32(), b.final_params_crc32());
+        b.final_params[0] = f32::from_bits(a.final_params[0].to_bits() ^ 1);
+        assert_ne!(a.final_params_crc32(), b.final_params_crc32());
     }
 
     #[test]

@@ -1,0 +1,109 @@
+//! `podracer league` — the self-play scheduler's CLI surface.
+//!
+//! Same hard-error flag discipline as every other subcommand: unknown
+//! flags and degenerate leagues (`--players 0`) exit nonzero before any
+//! pod is built. `--report-json` writes the deterministic league report
+//! (`scripts/league_smoke.sh` diffs two same-seed runs byte-for-byte).
+
+use anyhow::{bail, Context, Result};
+
+use crate::experiment::{EnvKind, Topology};
+use crate::util::cli::Args;
+
+use super::{League, LeagueConfig};
+
+/// Every flag `podracer league` accepts; anything else is a hard error.
+pub const LEAGUE_FLAGS: &[&str] = &[
+    "agent",
+    "env",
+    "players",
+    "rounds",
+    "updates",
+    "seed",
+    "concurrency",
+    "actor-cores",
+    "learner-cores",
+    "threads",
+    "pipeline-stages",
+    "learner-pipeline",
+    "batch",
+    "unroll",
+    "micro-batches",
+    "report-json",
+];
+
+/// The `podracer league` entrypoint.
+pub fn run(args: &Args) -> Result<()> {
+    args.check_known("league", LEAGUE_FLAGS)?;
+    let defaults = LeagueConfig::default();
+    let topology = Topology {
+        actor_cores: args.get_usize("actor-cores", defaults.topology.actor_cores)?,
+        learner_cores: args.get_usize("learner-cores", defaults.topology.learner_cores)?,
+        threads_per_actor_core: args
+            .get_usize("threads", defaults.topology.threads_per_actor_core)?,
+        pipeline_stages: args.get_usize("pipeline-stages", defaults.topology.pipeline_stages)?,
+        learner_pipeline: args
+            .get_usize("learner-pipeline", defaults.topology.learner_pipeline)?,
+        ..defaults.topology.clone()
+    };
+    let env: EnvKind = args.get_str("env", defaults.env.as_str()).parse()?;
+    let cfg = LeagueConfig {
+        agent: args.get_str("agent", &defaults.agent),
+        env,
+        players: args.get_usize("players", defaults.players)?,
+        rounds: args.get_usize("rounds", defaults.rounds)?,
+        updates: args.get_u64("updates", defaults.updates)?,
+        seed: args.get_u64("seed", defaults.seed)?,
+        concurrency: args.get_usize("concurrency", defaults.concurrency)?,
+        topology,
+        actor_batch: args.get_usize("batch", defaults.actor_batch)?,
+        unroll: args.get_usize("unroll", defaults.unroll)?,
+        micro_batches: args.get_usize("micro-batches", defaults.micro_batches)?,
+        artifacts: crate::artifacts_dir(),
+    };
+    let league = League::new(cfg)?;
+    let cfg = league.config();
+    println!(
+        "league: agent={} env={} players={} rounds={} matches={} concurrency={} topology={}",
+        cfg.agent,
+        cfg.env,
+        cfg.players,
+        cfg.rounds,
+        cfg.total_matches(),
+        cfg.concurrency,
+        crate::plan::topology_label(&cfg.topology),
+    );
+    let report = league.run()?;
+    print!("{}", report.table());
+    if let Some(path) = args.flags.get("report-json") {
+        if path.is_empty() || path == "true" {
+            bail!("--report-json expects a file path");
+        }
+        std::fs::write(path, format!("{}\n", report.to_json()))
+            .with_context(|| format!("writing {path}"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn degenerate_leagues_hard_error_before_any_pod() {
+        for players in ["0", "1"] {
+            let err = run(&parse(&["--players", players])).unwrap_err().to_string();
+            assert!(err.contains("at least 2 players"), "{err}");
+        }
+    }
+
+    #[test]
+    fn unknown_flags_hard_error() {
+        let err = run(&parse(&["--playerz", "4"])).unwrap_err().to_string();
+        assert!(err.contains("--playerz"), "{err}");
+    }
+}

@@ -1,0 +1,569 @@
+//! Round-robin self-play league: many concurrent `Experiment`s against
+//! shared pods (DESIGN.md §17).
+//!
+//! The league is the repo's first multi-agent workload — and deliberately
+//! its nastiest scheduling customer: every worker owns one [`Pod`] and runs
+//! match after match on it, so the shared-pod busy-baseline accounting
+//! (PRs 3–4) and the planner's predictions get exercised under real
+//! contention and core reuse.
+//!
+//! ## Shape
+//!
+//! * `players` agents, all instances of the same manifest agent, made
+//!   distinct by deterministic per-match seeds derived from the league
+//!   seed (`match_seed` — a SplitMix64 mix over round/home/away/side).
+//! * Each round is a full round-robin: every unordered pair `(i, j)` meets
+//!   once. A match runs one short Sebulba training `Experiment` per side
+//!   and scores the higher mean episode reward as the win (exact ties
+//!   draw). Results carry each side's `final_params` CRC so bit-identity
+//!   is checkable across schedules.
+//! * A matchmaking queue feeds `concurrency` worker threads; each worker
+//!   runs its matches on its own long-lived pod. Because results are
+//!   re-sorted into canonical `(round, home, away)` order before ratings
+//!   are computed, the standings are identical however many workers raced
+//!   over the queue — `rust/tests/league.rs` pins concurrent == serial
+//!   down to the params CRCs.
+//! * Ratings are Elo (K = 32) folded over matches in canonical order, so
+//!   the win/return table is a pure function of the match results.
+
+pub mod cli;
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::experiment::{Arch, EnvKind, Experiment, Report, Topology};
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+
+/// Elo K-factor for the post-hoc rating fold.
+const ELO_K: f64 = 32.0;
+/// Every player starts here; ratings are zero-sum around it.
+const ELO_BASE: f64 = 1000.0;
+
+/// A fully-described league: workload, scale and schedule.
+#[derive(Clone, Debug)]
+pub struct LeagueConfig {
+    /// Manifest agent tag every player instantiates (a Sebulba agent).
+    pub agent: String,
+    pub env: EnvKind,
+    /// Number of players (>= 2).
+    pub players: usize,
+    /// Full round-robins to schedule (>= 1).
+    pub rounds: usize,
+    /// Learner updates per match side.
+    pub updates: u64,
+    /// League seed: every per-match seed derives from it.
+    pub seed: u64,
+    /// Worker threads, each owning one shared pod (>= 1).
+    pub concurrency: usize,
+    /// Core split every match runs on.
+    pub topology: Topology,
+    pub actor_batch: usize,
+    pub unroll: usize,
+    pub micro_batches: usize,
+    /// Artifacts directory (defaults to [`crate::artifacts_dir`]).
+    pub artifacts: PathBuf,
+}
+
+impl Default for LeagueConfig {
+    fn default() -> Self {
+        Self {
+            agent: "seb_catch".to_string(),
+            env: EnvKind::Catch,
+            players: 4,
+            rounds: 1,
+            updates: 1,
+            seed: 7,
+            concurrency: 1,
+            topology: Topology {
+                actor_cores: 1,
+                learner_cores: 2,
+                threads_per_actor_core: 1,
+                ..Topology::default()
+            },
+            actor_batch: 16,
+            unroll: 20,
+            micro_batches: 1,
+            artifacts: crate::artifacts_dir(),
+        }
+    }
+}
+
+impl LeagueConfig {
+    /// Hard-error validation: a league with fewer than two players has no
+    /// matches to play and is rejected, never silently completed.
+    pub fn validate(&self) -> Result<()> {
+        if self.players < 2 {
+            bail!("a league needs at least 2 players, got {}", self.players);
+        }
+        if self.rounds == 0 {
+            bail!("--rounds expects a positive round count");
+        }
+        if self.updates == 0 {
+            bail!("--updates expects a positive update count");
+        }
+        if self.concurrency == 0 {
+            bail!("--concurrency expects a positive worker count");
+        }
+        self.topology.validate()?;
+        self.topology.require_split()?;
+        Ok(())
+    }
+
+    /// Matches per full schedule: `rounds * players*(players-1)/2`.
+    pub fn total_matches(&self) -> usize {
+        self.rounds * self.players * (self.players - 1) / 2
+    }
+}
+
+/// The deterministic per-side seed: a SplitMix64 finalizer over the league
+/// seed and the match coordinates. Distinct coordinates give (with
+/// overwhelming probability) distinct, well-mixed seeds; identical
+/// coordinates always give the identical seed — the property the
+/// concurrent == serial oracle rests on.
+pub fn match_seed(league_seed: u64, round: usize, home: usize, away: usize, side: usize) -> u64 {
+    let mut sm = SplitMix64::new(league_seed);
+    let k0 = sm.next_u64();
+    let k1 = sm.next_u64();
+    let k2 = sm.next_u64();
+    let k3 = sm.next_u64();
+    let mixed = league_seed
+        ^ k0.wrapping_mul(round as u64 + 1)
+        ^ k1.wrapping_mul(home as u64 + 1)
+        ^ k2.wrapping_mul(away as u64 + 1)
+        ^ k3.wrapping_mul(side as u64 + 1);
+    SplitMix64::new(mixed).next_u64()
+}
+
+/// One scheduled pairing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct MatchSpec {
+    round: usize,
+    home: usize,
+    away: usize,
+}
+
+/// One finished match. Every field is a pure function of the league config
+/// and the match coordinates — no wall-clock — so two schedules of the
+/// same league produce byte-identical result lists.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatchResult {
+    pub round: usize,
+    pub home: usize,
+    pub away: usize,
+    pub home_reward: f64,
+    pub away_reward: f64,
+    /// CRC32 over each side's `final_params` bits (bit-identity anchor).
+    pub home_params_crc32: u32,
+    pub away_params_crc32: u32,
+    /// Winning player index, `None` on an exact tie.
+    pub winner: Option<usize>,
+}
+
+/// One row of the final win/return table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Standing {
+    pub player: usize,
+    pub wins: usize,
+    pub losses: usize,
+    pub draws: usize,
+    /// Mean of the player's per-match mean episode rewards.
+    pub mean_reward: f64,
+    /// Elo rating after folding every match in canonical order.
+    pub rating: f64,
+}
+
+/// What `League::run` returns: canonical-order results + the table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LeagueReport {
+    pub matches: Vec<MatchResult>,
+    pub standings: Vec<Standing>,
+}
+
+impl LeagueReport {
+    /// The standings + match log table `podracer league` prints.
+    pub fn table(&self) -> String {
+        let mut out = format!(
+            "{:>6} {:>5} {:>7} {:>6} {:>12} {:>8}\n",
+            "player", "wins", "losses", "draws", "mean_reward", "rating"
+        );
+        for s in &self.standings {
+            out.push_str(&format!(
+                "{:>6} {:>5} {:>7} {:>6} {:>12.3} {:>8.1}\n",
+                s.player, s.wins, s.losses, s.draws, s.mean_reward, s.rating
+            ));
+        }
+        out.push_str(&format!("matches={}\n", self.matches.len()));
+        for m in &self.matches {
+            let outcome = match m.winner {
+                Some(w) => format!("winner={w}"),
+                None => "draw".to_string(),
+            };
+            out.push_str(&format!(
+                "  r{} {}v{}: reward {:.3} vs {:.3} ({outcome}) params_crc {:08x}/{:08x}\n",
+                m.round,
+                m.home,
+                m.away,
+                m.home_reward,
+                m.away_reward,
+                m.home_params_crc32,
+                m.away_params_crc32,
+            ));
+        }
+        out
+    }
+
+    /// Machine-readable form (`--report-json`). Deterministic for a fixed
+    /// league config: no timing fields, so `diff` doubles as the
+    /// reproducibility oracle in `scripts/league_smoke.sh`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "matches",
+                Json::Arr(
+                    self.matches
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("round", Json::num(m.round as f64)),
+                                ("home", Json::num(m.home as f64)),
+                                ("away", Json::num(m.away as f64)),
+                                ("home_reward", Json::num(m.home_reward)),
+                                ("away_reward", Json::num(m.away_reward)),
+                                ("home_params_crc32", Json::num(m.home_params_crc32 as f64)),
+                                ("away_params_crc32", Json::num(m.away_params_crc32 as f64)),
+                                (
+                                    "winner",
+                                    match m.winner {
+                                        Some(w) => Json::num(w as f64),
+                                        None => Json::Null,
+                                    },
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "standings",
+                Json::Arr(
+                    self.standings
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("player", Json::num(s.player as f64)),
+                                ("wins", Json::num(s.wins as f64)),
+                                ("losses", Json::num(s.losses as f64)),
+                                ("draws", Json::num(s.draws as f64)),
+                                ("mean_reward", Json::num(s.mean_reward)),
+                                ("rating", Json::num(s.rating)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The scheduler itself. Construct with a validated [`LeagueConfig`].
+pub struct League {
+    cfg: LeagueConfig,
+}
+
+impl League {
+    pub fn new(cfg: LeagueConfig) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Self { cfg })
+    }
+
+    pub fn config(&self) -> &LeagueConfig {
+        &self.cfg
+    }
+
+    /// Play the full schedule and return canonical-order results.
+    pub fn run(&self) -> Result<LeagueReport> {
+        let cfg = &self.cfg;
+        let mut schedule = VecDeque::new();
+        for round in 0..cfg.rounds {
+            for home in 0..cfg.players {
+                for away in home + 1..cfg.players {
+                    schedule.push_back(MatchSpec { round, home, away });
+                }
+            }
+        }
+        let expected = schedule.len();
+        let queue = Mutex::new(schedule);
+        let results: Mutex<Vec<MatchResult>> = Mutex::new(Vec::with_capacity(expected));
+
+        std::thread::scope(|scope| -> Result<()> {
+            let mut workers = Vec::new();
+            for worker in 0..cfg.concurrency {
+                let queue = &queue;
+                let results = &results;
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("league-worker-{worker}"))
+                        .spawn_scoped(scope, move || self.worker_loop(queue, results))
+                        .context("spawning league worker")?,
+                );
+            }
+            let mut first_err = None;
+            for w in workers {
+                if let Err(e) = w.join().unwrap_or_else(bail_panic) {
+                    first_err.get_or_insert(e);
+                }
+            }
+            match first_err {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
+        })?;
+
+        let mut matches = results.into_inner().expect("league results mutex poisoned");
+        anyhow::ensure!(
+            matches.len() == expected,
+            "league played {} of {expected} scheduled matches",
+            matches.len()
+        );
+        // Canonical order: ratings and standings must not depend on which
+        // worker finished first.
+        matches.sort_by_key(|m| (m.round, m.home, m.away));
+        let standings = standings(cfg.players, &matches);
+        Ok(LeagueReport { matches, standings })
+    }
+
+    /// One worker: own pod, drain the matchmaking queue.
+    fn worker_loop(
+        &self,
+        queue: &Mutex<VecDeque<MatchSpec>>,
+        results: &Mutex<Vec<MatchResult>>,
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        // One long-lived pod per worker, reused across matches — each run
+        // re-baselines against the pod's accumulated busy counters, which
+        // is exactly the shared-pod stats path PRs 3–4 fixed.
+        let mut pod = crate::runtime::Pod::new(&cfg.artifacts, cfg.topology.total_cores())?;
+        loop {
+            let spec = match queue.lock().expect("league queue mutex poisoned").pop_front() {
+                Some(spec) => spec,
+                None => return Ok(()),
+            };
+            let result = self.play(&mut pod, spec)?;
+            results.lock().expect("league results mutex poisoned").push(result);
+        }
+    }
+
+    fn play(&self, pod: &mut crate::runtime::Pod, spec: MatchSpec) -> Result<MatchResult> {
+        let home = self.run_side(pod, spec, 0, spec.home)?;
+        let away = self.run_side(pod, spec, 1, spec.away)?;
+        let reward = |r: &Report| {
+            r.as_actor_learner().map(|d| d.mean_episode_reward).unwrap_or(0.0)
+        };
+        let (home_reward, away_reward) = (reward(&home), reward(&away));
+        let winner = if home_reward > away_reward {
+            Some(spec.home)
+        } else if away_reward > home_reward {
+            Some(spec.away)
+        } else {
+            None
+        };
+        Ok(MatchResult {
+            round: spec.round,
+            home: spec.home,
+            away: spec.away,
+            home_reward,
+            away_reward,
+            home_params_crc32: home.final_params_crc32(),
+            away_params_crc32: away.final_params_crc32(),
+            winner,
+        })
+    }
+
+    fn run_side(
+        &self,
+        pod: &mut crate::runtime::Pod,
+        spec: MatchSpec,
+        side: usize,
+        player: usize,
+    ) -> Result<Report> {
+        let cfg = &self.cfg;
+        let seed = match_seed(cfg.seed, spec.round, spec.home, spec.away, side);
+        Experiment::new(Arch::Sebulba)
+            .artifacts(&cfg.artifacts)
+            .agent(&cfg.agent)
+            .env(cfg.env)
+            .topology(cfg.topology.clone())
+            .actor_batch(cfg.actor_batch)
+            .unroll(cfg.unroll)
+            .micro_batches(cfg.micro_batches)
+            .updates(cfg.updates)
+            .seed(seed)
+            .build()
+            .with_context(|| format!("building match r{} {}v{}", spec.round, spec.home, spec.away))?
+            .run_on(pod)
+            .with_context(|| {
+                format!("match r{} {}v{} side of player {player}", spec.round, spec.home, spec.away)
+            })
+    }
+}
+
+fn bail_panic(payload: Box<dyn std::any::Any + Send>) -> Result<()> {
+    let msg = payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "league worker panicked".to_string());
+    Err(anyhow::anyhow!("league worker panicked: {msg}"))
+}
+
+/// Fold canonical-order results into the win/return table + Elo ratings.
+fn standings(players: usize, matches: &[MatchResult]) -> Vec<Standing> {
+    let mut wins = vec![0usize; players];
+    let mut losses = vec![0usize; players];
+    let mut draws = vec![0usize; players];
+    let mut reward_sum = vec![0.0f64; players];
+    let mut played = vec![0usize; players];
+    let mut rating = vec![ELO_BASE; players];
+
+    for m in matches {
+        reward_sum[m.home] += m.home_reward;
+        reward_sum[m.away] += m.away_reward;
+        played[m.home] += 1;
+        played[m.away] += 1;
+        let home_score = match m.winner {
+            Some(w) if w == m.home => {
+                wins[m.home] += 1;
+                losses[m.away] += 1;
+                1.0
+            }
+            Some(_) => {
+                wins[m.away] += 1;
+                losses[m.home] += 1;
+                0.0
+            }
+            None => {
+                draws[m.home] += 1;
+                draws[m.away] += 1;
+                0.5
+            }
+        };
+        let expected_home =
+            1.0 / (1.0 + 10f64.powf((rating[m.away] - rating[m.home]) / 400.0));
+        let delta = ELO_K * (home_score - expected_home);
+        rating[m.home] += delta;
+        rating[m.away] -= delta;
+    }
+
+    let mut table: Vec<Standing> = (0..players)
+        .map(|p| Standing {
+            player: p,
+            wins: wins[p],
+            losses: losses[p],
+            draws: draws[p],
+            mean_reward: if played[p] > 0 { reward_sum[p] / played[p] as f64 } else { 0.0 },
+            rating: rating[p],
+        })
+        .collect();
+    table.sort_by(|a, b| {
+        b.rating
+            .partial_cmp(&a.rating)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.player.cmp(&b.player))
+    });
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_rejects_degenerate_leagues() {
+        for players in [0usize, 1] {
+            let cfg = LeagueConfig { players, ..LeagueConfig::default() };
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains("at least 2 players"), "{err}");
+        }
+        assert!(LeagueConfig { rounds: 0, ..Default::default() }.validate().is_err());
+        assert!(LeagueConfig { concurrency: 0, ..Default::default() }.validate().is_err());
+        assert!(LeagueConfig { updates: 0, ..Default::default() }.validate().is_err());
+        assert!(LeagueConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn match_seeds_are_deterministic_and_distinct() {
+        let a = match_seed(7, 0, 0, 1, 0);
+        assert_eq!(a, match_seed(7, 0, 0, 1, 0));
+        let mut seen = std::collections::BTreeSet::new();
+        for round in 0..3 {
+            for home in 0..4 {
+                for away in home + 1..4 {
+                    for side in 0..2 {
+                        assert!(
+                            seen.insert(match_seed(7, round, home, away, side)),
+                            "seed collision at r{round} {home}v{away} side {side}"
+                        );
+                    }
+                }
+            }
+        }
+        assert_ne!(match_seed(7, 0, 0, 1, 0), match_seed(8, 0, 0, 1, 0));
+    }
+
+    #[test]
+    fn total_matches_counts_round_robin_pairs() {
+        let cfg = LeagueConfig { players: 4, rounds: 2, ..Default::default() };
+        assert_eq!(cfg.total_matches(), 12);
+    }
+
+    fn result(round: usize, home: usize, away: usize, hr: f64, ar: f64) -> MatchResult {
+        MatchResult {
+            round,
+            home,
+            away,
+            home_reward: hr,
+            away_reward: ar,
+            home_params_crc32: 0,
+            away_params_crc32: 0,
+            winner: if hr > ar {
+                Some(home)
+            } else if ar > hr {
+                Some(away)
+            } else {
+                None
+            },
+        }
+    }
+
+    #[test]
+    fn standings_are_consistent_and_rating_sorted() {
+        // 3 players, one round-robin: 0 beats 1 and 2; 1 beats 2.
+        let matches =
+            vec![result(0, 0, 1, 1.0, 0.0), result(0, 0, 2, 1.0, 0.0), result(0, 1, 2, 1.0, 0.0)];
+        let table = standings(3, &matches);
+        assert_eq!(table[0].player, 0);
+        assert_eq!((table[0].wins, table[0].losses), (2, 0));
+        assert_eq!((table[2].wins, table[2].losses), (0, 2));
+        // every player's results sum to their match count
+        for s in &table {
+            assert_eq!(s.wins + s.losses + s.draws, 2);
+        }
+        // Elo is zero-sum around the base
+        let total: f64 = table.iter().map(|s| s.rating).sum();
+        assert!((total - 3.0 * 1000.0).abs() < 1e-9);
+        assert!(table[0].rating > table[1].rating && table[1].rating > table[2].rating);
+    }
+
+    #[test]
+    fn report_json_is_deterministic() {
+        let matches = vec![result(0, 0, 1, 0.5, 0.5)];
+        let report =
+            LeagueReport { standings: standings(2, &matches), matches };
+        assert_eq!(report.to_json().to_string(), report.to_json().to_string());
+        assert!(report.table().contains("draw"));
+    }
+}

@@ -32,6 +32,11 @@
 //! * [`transport`] — the multi-pod seam: `Transport`/`Connection` traits,
 //!   the CRC-framed wire format, TCP + loopback pipes, and the
 //!   `DistSebulba` learner-pod/actor-pod runner (DESIGN.md §15).
+//! * [`plan`] — the cost-model-driven topology planner: measured per-stage
+//!   costs in, ranked feasible topologies out (`Topology::auto`,
+//!   `podracer plan` — DESIGN.md §17).
+//! * [`league`] — round-robin self-play league: concurrent experiments
+//!   scheduled over shared pods with deterministic per-match seeds.
 //! * [`benchkit`] / [`testkit`] — bench harness and property-test support.
 //!
 //! ## Quickstart
@@ -60,6 +65,8 @@ pub mod checkpoint;
 pub mod coordinator;
 pub mod envs;
 pub mod experiment;
+pub mod league;
+pub mod plan;
 pub mod runtime;
 pub mod search;
 pub mod serve;

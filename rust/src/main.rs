@@ -11,11 +11,17 @@
 //! podracer muzero   [--env catch] [--updates 20] [--simulations 16]
 //! podracer serve    [--agent seb_catch] [--env catch] [--batch 8] [--pipeline-stages 1]
 //!                   [--queue 8] [--sessions 8] [--steps 40] [--swap-every 100]
+//! podracer plan     [--arch sebulba] [--env catch] [--pod-cores 4] [--calibrate] [--measure]
+//!                   # ranked feasible topologies from the cost model (DESIGN.md §17)
+//! podracer league   [--agent seb_catch] [--players 4] [--rounds 1] [--concurrency 1]
+//!                   # round-robin self-play over shared pods
 //! podracer info     # list artifacts & agents
 //!
 //! all training subcommands also take the elasticity knobs (DESIGN.md §13):
 //!                   [--checkpoint-every N] [--checkpoint-path run.ckpt]
 //!                   [--restore run.ckpt]
+//! the planner knobs: [--topology auto] [--pod-cores 4] [--cost-model artifacts/cost_model.json]
+//! and machine-readable reports: [--report-json report.json]
 //! ```
 //!
 //! Every architecture goes through one declarative path
@@ -23,13 +29,15 @@
 //! parses to an `Arch`, the flags to a typed `Topology`/`EnvKind`/workload,
 //! and the unified `Report` prints itself. `podracer serve` drives the
 //! policy-serving frontend (DESIGN.md §14) through the same hard-error
-//! flag parsing (`experiment::serve_from_args`). Unknown subcommands, flag
-//! names and flag values all exit nonzero with a diagnostic
-//! (`podracer help` shows usage).
+//! flag parsing (`experiment::serve_from_args`); `podracer plan` and
+//! `podracer league` route through `plan::cli` / `league::cli`. Unknown
+//! subcommands, flag names and flag values all exit nonzero with a
+//! diagnostic (`podracer help` shows usage).
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 use podracer::experiment::{Arch, Experiment};
 use podracer::util::cli::Args;
+use podracer::util::json::Json;
 
 fn main() {
     podracer::util::logging::init();
@@ -45,20 +53,34 @@ fn main() {
     std::process::exit(code);
 }
 
+/// Write a report's JSON form when `--report-json <path>` was given. A
+/// bare flag is a hard error — never a silently skipped report.
+fn write_report_json(args: &Args, json: &Json) -> Result<()> {
+    let Some(path) = args.flags.get("report-json") else {
+        return Ok(());
+    };
+    if path.is_empty() || path == "true" {
+        anyhow::bail!("--report-json expects a file path");
+    }
+    std::fs::write(path, format!("{json}\n")).with_context(|| format!("writing {path}"))
+}
+
 fn run(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "anakin" | "sebulba" | "muzero" => {
             let arch: Arch = cmd.parse()?;
             let report = Experiment::from_args(arch, args)?.run()?;
             println!("{}", report.summary());
-            Ok(())
+            write_report_json(args, &report.to_json())
         }
         "serve" => {
             let cfg = podracer::experiment::serve_from_args(args)?;
             let report = podracer::serve::run(&podracer::artifacts_dir(), &cfg)?;
             println!("{}", report.summary(&cfg.agent));
-            Ok(())
+            write_report_json(args, &report.to_json())
         }
+        "plan" => podracer::plan::cli::run(args),
+        "league" => podracer::league::cli::run(args),
         "info" => {
             let artifacts = podracer::artifacts_dir();
             let manifest = podracer::runtime::Manifest::load(&artifacts)?;
@@ -78,7 +100,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         }
         "help" => {
             println!(
-                "usage: podracer <anakin|sebulba|muzero|serve|info> [--flags]\n\
+                "usage: podracer <anakin|sebulba|muzero|serve|plan|league|info> [--flags]\n\
                  run `podracer info` to list available agents/artifacts"
             );
             Ok(())
@@ -87,7 +109,8 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             // unknown subcommands are hard errors like unknown flags are —
             // a typo'd CI step must not exit 0 having trained nothing
             anyhow::bail!(
-                "unknown command {other:?} (valid: anakin, sebulba, muzero, serve, info, help)"
+                "unknown command {other:?} (valid: anakin, sebulba, muzero, serve, plan, \
+                 league, info, help)"
             )
         }
     }

@@ -1,0 +1,266 @@
+//! `podracer plan` — the planner's CLI surface (DESIGN.md §17).
+//!
+//! Prints the ranked candidate table for an `(arch, agent, env, pod)`
+//! request. `--calibrate` bootstraps the cost model with one short real
+//! run on a conservative topology; `--measure` re-runs the top-ranked
+//! candidates for real and reports where the predicted best actually
+//! landed (`measured-rank=1/k` means the prediction was spot on —
+//! `scripts/plan_smoke.sh` gates on top-2).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::experiment::{Arch, EnvKind, Experiment, Report, Topology};
+use crate::runtime::Manifest;
+use crate::util::cli::Args;
+
+use super::{topology_label, CostModel, PlanRequest, Planner};
+
+/// Every flag `podracer plan` accepts; anything else is a hard error.
+pub const PLAN_FLAGS: &[&str] = &[
+    "arch",
+    "agent",
+    "env",
+    "pod-cores",
+    "batch",
+    "unroll",
+    "micro-batches",
+    "cost-model",
+    "calibrate",
+    "measure",
+    "top",
+    "report-json",
+];
+
+/// Learner updates (or Anakin outer iterations) per calibration run —
+/// enough to average past first-touch jitter, short enough for CI.
+const CALIBRATE_UPDATES: u64 = 3;
+/// Updates per `--measure` run.
+const MEASURE_UPDATES: u64 = 3;
+/// How many top-ranked candidates `--measure` actually runs.
+const MEASURE_CANDIDATES: usize = 3;
+
+/// The `podracer plan` entrypoint.
+pub fn run(args: &Args) -> Result<()> {
+    args.check_known("plan", PLAN_FLAGS)?;
+    let arch: Arch = args.get_str("arch", "sebulba").parse()?;
+    let env: EnvKind = args.get_str("env", "catch").parse()?;
+    let pod_cores = args.get_usize("pod-cores", 4)?;
+    if arch == Arch::Anakin {
+        for knob in ["batch", "unroll", "micro-batches"] {
+            if args.has(knob) {
+                bail!("--{knob} does not apply to the anakin architecture");
+            }
+        }
+    }
+    let mut req = PlanRequest::new(arch, pod_cores);
+    req.env = env.as_str().to_string();
+    req.agent = args.get_str("agent", &default_agent(arch, env));
+    req.actor_batch = args.get_usize("batch", req.actor_batch)?;
+    req.unroll = args.get_usize("unroll", req.unroll)?;
+    req.micro_batches = args.get_usize("micro-batches", req.micro_batches)?;
+
+    let model_path = args
+        .flags
+        .get("cost-model")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| crate::artifacts_dir().join("cost_model.json"));
+    let calibrate = args.get_bool("calibrate", false)?;
+    let measure = args.get_bool("measure", false)?;
+    let top = args.get_usize("top", 8)?;
+    if top == 0 {
+        bail!("--top expects a positive candidate count");
+    }
+
+    let mut model = if model_path.exists() {
+        CostModel::load(&model_path)
+            .with_context(|| format!("loading cost model {}", model_path.display()))?
+    } else if calibrate {
+        CostModel::new()
+    } else {
+        bail!(
+            "no cost model at {} — bootstrap one with `podracer plan --calibrate` \
+             or `make bench-smoke`",
+            model_path.display()
+        );
+    };
+
+    if calibrate {
+        // A model-free planner still carries the full feasibility oracle
+        // (manifest program gate + topology validation) — exactly what
+        // picking a bootstrap topology needs.
+        let probe = planner_with_manifest(CostModel::new());
+        let topo = calibration_topology(&probe, &req)?;
+        println!("calibrate: {} ({CALIBRATE_UPDATES} updates)", topology_label(&topo));
+        let report = run_once(&req, env, &topo, CALIBRATE_UPDATES)?;
+        model.fold(&report, &req.env, probe.cell_batch(&req), &topo);
+        model.save(&model_path)
+            .with_context(|| format!("writing cost model {}", model_path.display()))?;
+        println!("calibrated: {} ({} cells)", model_path.display(), model.len());
+    }
+
+    let planner = planner_with_manifest(model);
+    let mut plan = planner.plan(&req)?;
+    plan.candidates.truncate(top);
+
+    if measure {
+        let k = plan.candidates.len().min(MEASURE_CANDIDATES);
+        for i in 0..k {
+            let topo = plan.candidates[i].topology.clone();
+            let report = run_once(&req, env, &topo, MEASURE_UPDATES)
+                .with_context(|| format!("measuring {}", topology_label(&topo)))?;
+            plan.candidates[i].measured_fps = Some(report.throughput);
+        }
+        let best = plan.candidates[0].measured_fps.unwrap_or(0.0);
+        let rank = 1
+            + plan.candidates[..k]
+                .iter()
+                .filter(|c| c.measured_fps.unwrap_or(0.0) > best)
+                .count();
+        println!("measure: predicted-best measured-rank={rank}/{k}");
+    }
+
+    print!("{}", plan.table());
+    println!("best: {}", topology_label(&plan.best().topology));
+
+    if let Some(path) = args.flags.get("report-json") {
+        if path.is_empty() || path == "true" {
+            bail!("--report-json expects a file path");
+        }
+        std::fs::write(path, format!("{}\n", plan.to_json()))
+            .with_context(|| format!("writing {path}"))?;
+    }
+    Ok(())
+}
+
+/// The shipped agent tag for `(arch, env)` — mirrors the training CLI's
+/// defaults, extended across the env matrix.
+fn default_agent(arch: Arch, env: EnvKind) -> String {
+    match arch {
+        // Anakin's env is baked into the agent program; only the shipped
+        // fused agents are reachable by default.
+        Arch::Anakin => match env {
+            EnvKind::Gridworld => "anakin_grid".to_string(),
+            _ => "anakin_catch".to_string(),
+        },
+        Arch::Sebulba => format!("seb_{}", short_env(env)),
+        Arch::MuZero => format!("mz_{}", short_env(env)),
+    }
+}
+
+/// The env's short tag inside agent names (`seb_atari`, `mz_grid`, ...).
+fn short_env(env: EnvKind) -> &'static str {
+    match env {
+        EnvKind::Catch => "catch",
+        EnvKind::Gridworld => "grid",
+        EnvKind::Cartpole => "cartpole",
+        EnvKind::Chain => "chain",
+        EnvKind::AtariLike => "atari",
+    }
+}
+
+fn planner_with_manifest(model: CostModel) -> Planner {
+    let mut p = Planner::new(model);
+    if let Ok(m) = Manifest::load(&crate::artifacts_dir()) {
+        p = p.with_manifest(m);
+    }
+    p
+}
+
+/// First feasible bootstrap topology from a fixed preference list of
+/// modest splits — deterministic, and checked with the same oracle the
+/// enumeration uses.
+fn calibration_topology(planner: &Planner, req: &PlanRequest) -> Result<Topology> {
+    let prefs: Vec<Topology> = match req.arch {
+        // widest replica slice first: more parallel samples per second
+        Arch::Anakin => (1..=req.pod_cores.min(4)).rev().map(Topology::anakin).collect(),
+        Arch::Sebulba => [(1, 2, 1, 2, 1), (1, 1, 1, 2, 1), (1, 2, 1, 1, 1), (1, 1, 1, 1, 1)]
+            .iter()
+            .map(|&(a, l, t, s, lp)| Topology {
+                actor_cores: a,
+                learner_cores: l,
+                threads_per_actor_core: t,
+                pipeline_stages: s,
+                learner_pipeline: lp,
+                ..Topology::default()
+            })
+            .collect(),
+        Arch::MuZero => [(1usize, 1usize), (1, 2)]
+            .iter()
+            .map(|&(a, l)| Topology {
+                actor_cores: a,
+                learner_cores: l,
+                threads_per_actor_core: 1,
+                pipeline_stages: 1,
+                learner_pipeline: 1,
+                ..Topology::default()
+            })
+            .collect(),
+    };
+    prefs.into_iter().find(|t| planner.is_feasible(req, t)).ok_or_else(|| {
+        anyhow::anyhow!(
+            "no feasible calibration topology for {} agent {:?} within {} cores \
+             (try --batch matching a compiled inference geometry)",
+            req.arch,
+            req.agent,
+            req.pod_cores
+        )
+    })
+}
+
+/// One short real run of the request's workload on `topo`.
+fn run_once(req: &PlanRequest, env: EnvKind, topo: &Topology, updates: u64) -> Result<Report> {
+    let mut b = Experiment::new(req.arch)
+        .agent(&req.agent)
+        .topology(topo.clone())
+        .updates(updates)
+        .seed(17);
+    match req.arch {
+        Arch::Anakin => {}
+        Arch::Sebulba => {
+            b = b
+                .env(env)
+                .actor_batch(req.actor_batch)
+                .unroll(req.unroll)
+                .micro_batches(req.micro_batches);
+        }
+        Arch::MuZero => b = b.env(env),
+    }
+    b.build()?.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_agents_cover_the_matrix() {
+        assert_eq!(default_agent(Arch::Sebulba, EnvKind::AtariLike), "seb_atari");
+        assert_eq!(default_agent(Arch::Sebulba, EnvKind::Catch), "seb_catch");
+        assert_eq!(default_agent(Arch::MuZero, EnvKind::Gridworld), "mz_grid");
+        assert_eq!(default_agent(Arch::Anakin, EnvKind::Gridworld), "anakin_grid");
+        assert_eq!(default_agent(Arch::Anakin, EnvKind::Catch), "anakin_catch");
+    }
+
+    #[test]
+    fn calibration_topology_is_feasible_by_the_planner_oracle() {
+        for arch in Arch::ALL {
+            let planner = Planner::new(CostModel::new());
+            let req = PlanRequest::new(arch, 4);
+            let topo = calibration_topology(&planner, &req).unwrap();
+            assert!(planner.is_feasible(&req, &topo));
+            topo.validate_for_pod(4).unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_flags_and_anakin_batch_hard_error() {
+        let args = Args::parse(["--bogus".to_string(), "1".to_string()]);
+        assert!(run(&args).unwrap_err().to_string().contains("--bogus"));
+        let args =
+            Args::parse(["--arch".to_string(), "anakin".to_string(), "--batch".to_string(), "8".to_string()]);
+        let err = run(&args).unwrap_err().to_string();
+        assert!(err.contains("--batch") && err.contains("anakin"), "{err}");
+    }
+}

@@ -1,0 +1,494 @@
+//! The versioned, serializable per-stage cost model the planner consumes.
+//!
+//! A [`CostModel`] maps `(arch, env, batch)` to measured per-stage costs
+//! ([`StageCosts`]): core-seconds per frame for env stepping, actor
+//! inference and learner grads, and seconds per update for the collective
+//! and the apply. Entries are populated by folding the per-stage seconds
+//! every [`Report`] already carries (`fold`), so any run — a calibration
+//! run, a bench, a production job — can teach the model.
+//!
+//! The on-disk format follows the checkpoint discipline (DESIGN.md §13):
+//! versioned, CRC-checked, and fail-closed. The CRC is computed over the
+//! *canonical* serialization of the entries (the in-house writer prints
+//! sorted keys, no whitespace), so any truncation or byte flip is a typed
+//! [`CostModelError`] — corruption never panics and never silently loads.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::checkpoint::format::crc32;
+use crate::experiment::{Arch, Detail, Report, Topology};
+use crate::util::json::Json;
+
+/// On-disk format version; bump on any incompatible layout change.
+pub const COST_MODEL_VERSION: u64 = 1;
+
+/// Typed load/store failures. `Io` is the filesystem layer; everything else
+/// means the bytes were read but rejected before any entry was trusted.
+#[derive(Debug, thiserror::Error)]
+pub enum CostModelError {
+    #[error("cost model io: {0}")]
+    Io(#[from] std::io::Error),
+    /// Not parseable as JSON at all (covers every truncation).
+    #[error("cost model parse: {0}")]
+    Parse(String),
+    #[error("cost model format version {found} unsupported (expected {expected})")]
+    UnsupportedVersion { found: u64, expected: u64 },
+    /// Parsed, but the structure or a field value is wrong.
+    #[error("cost model corrupt: {0}")]
+    Corrupt(String),
+    #[error("cost model crc mismatch: stored {stored:#010x}, computed {computed:#010x}")]
+    CrcMismatch { stored: u32, computed: u32 },
+}
+
+/// Measured per-stage costs for one `(arch, env, batch)` cell.
+///
+/// Frame-denominated fields are *core*-seconds per frame (summed device
+/// time over the threads that produced the frames, divided by the frames),
+/// so a candidate's rate per core is `1 / cost` regardless of how many
+/// cores the calibration run used. Update-denominated fields are wall
+/// seconds per learner update.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StageCosts {
+    /// Host env stepping, core-seconds per frame.
+    pub env_step_s: f64,
+    /// Actor inference (MCTS-inclusive for MuZero), core-seconds per frame.
+    pub actor_infer_s: f64,
+    /// Learner grads, core-seconds per frame (round wall × learner cores).
+    pub learner_grad_s: f64,
+    /// Gradient collective, seconds per update.
+    pub learner_collective_s: f64,
+    /// Optimizer apply, seconds per update.
+    pub learner_apply_s: f64,
+    /// Runs folded into this cell (weighted-mean denominator).
+    pub samples: u64,
+}
+
+impl StageCosts {
+    /// Merge one observation in as a sample-weighted running mean.
+    fn observe(&mut self, obs: &StageCosts) {
+        let n = self.samples as f64;
+        let m = obs.samples.max(1) as f64;
+        let mix = |old: f64, new: f64| (old * n + new * m) / (n + m);
+        self.env_step_s = mix(self.env_step_s, obs.env_step_s);
+        self.actor_infer_s = mix(self.actor_infer_s, obs.actor_infer_s);
+        self.learner_grad_s = mix(self.learner_grad_s, obs.learner_grad_s);
+        self.learner_collective_s = mix(self.learner_collective_s, obs.learner_collective_s);
+        self.learner_apply_s = mix(self.learner_apply_s, obs.learner_apply_s);
+        self.samples += obs.samples.max(1);
+    }
+
+    fn finite_nonneg(&self) -> bool {
+        [
+            self.env_step_s,
+            self.actor_infer_s,
+            self.learner_grad_s,
+            self.learner_collective_s,
+            self.learner_apply_s,
+        ]
+        .iter()
+        .all(|s| s.is_finite() && *s >= 0.0)
+    }
+}
+
+/// The model: `(arch, env, batch)` → [`StageCosts`]. BTreeMap keys give the
+/// canonical (sorted) serialization order for free.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CostModel {
+    entries: BTreeMap<(String, String, usize), StageCosts>,
+}
+
+impl CostModel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Iterate `(arch, env, batch, costs)` in canonical order.
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str, usize, &StageCosts)> {
+        self.entries
+            .iter()
+            .map(|((a, e, b), c)| (a.as_str(), e.as_str(), *b, c))
+    }
+
+    /// Merge one measured observation into the `(arch, env, batch)` cell.
+    pub fn insert(&mut self, arch: Arch, env: &str, batch: usize, costs: StageCosts) {
+        self.entries
+            .entry((arch.as_str().to_string(), env.to_string(), batch))
+            .or_default()
+            .observe(&costs);
+    }
+
+    /// Fold the per-stage seconds a finished [`Report`] carries into the
+    /// model. `topo` must be the topology the run actually used (the grad
+    /// round wall is scaled by its learner cores back to core-seconds);
+    /// `batch` keys the cell (the actor batch for Sebulba/MuZero, 1 for
+    /// Anakin's per-core loop). Empty runs (zero frames) fold to nothing.
+    pub fn fold(&mut self, report: &Report, env: &str, batch: usize, topo: &Topology) {
+        let frames = report.steps as f64;
+        let updates = report.updates as f64;
+        if frames <= 0.0 {
+            return;
+        }
+        let costs = match &report.detail {
+            Detail::Anakin(d) => StageCosts {
+                env_step_s: d.replica_host_seconds / frames,
+                actor_infer_s: d.replica_device_seconds / frames,
+                learner_grad_s: 0.0,
+                learner_collective_s: if updates > 0.0 {
+                    d.replica_collective_seconds / updates
+                } else {
+                    0.0
+                },
+                learner_apply_s: 0.0,
+                samples: 1,
+            },
+            Detail::ActorLearner(d) => {
+                // MuZero actors are search-bound and report their device
+                // time as busy seconds rather than per-call infer latency;
+                // fall back so the cell still captures the actor cost.
+                let infer = if d.actor_infer_seconds > 0.0 {
+                    d.actor_infer_seconds
+                } else {
+                    d.actor_busy_seconds
+                };
+                StageCosts {
+                    env_step_s: d.actor_env_step_seconds / frames,
+                    actor_infer_s: infer / frames,
+                    learner_grad_s: d.learner_grad_seconds * topo.learner_cores as f64 / frames,
+                    learner_collective_s: if updates > 0.0 {
+                        d.learner_collective_seconds / updates
+                    } else {
+                        0.0
+                    },
+                    learner_apply_s: if updates > 0.0 {
+                        d.learner_apply_seconds / updates
+                    } else {
+                        0.0
+                    },
+                    samples: 1,
+                }
+            }
+        };
+        self.insert(report.arch, env, batch, costs);
+    }
+
+    /// Look up the cell for `(arch, env)` nearest to `batch`: an exact hit,
+    /// else the smallest batch distance, ties to the smaller batch (so the
+    /// fallback is deterministic). Returns the batch actually matched.
+    pub fn lookup(&self, arch: Arch, env: &str, batch: usize) -> Option<(usize, &StageCosts)> {
+        let mut best: Option<(usize, &StageCosts)> = None;
+        for ((a, e, b), c) in &self.entries {
+            if a != arch.as_str() || e != env {
+                continue;
+            }
+            let dist = b.abs_diff(batch);
+            let better = match best {
+                None => true,
+                Some((cur, _)) => {
+                    let cur_dist = cur.abs_diff(batch);
+                    dist < cur_dist || (dist == cur_dist && *b < cur)
+                }
+            };
+            if better {
+                best = Some((*b, c));
+            }
+        }
+        best
+    }
+
+    // -- serialization ------------------------------------------------------
+
+    fn entry_json(arch: &str, env: &str, batch: usize, c: &StageCosts) -> Json {
+        Json::obj(vec![
+            ("arch", Json::str(arch)),
+            ("env", Json::str(env)),
+            ("batch", Json::num(batch as f64)),
+            ("env_step_s", Json::num(c.env_step_s)),
+            ("actor_infer_s", Json::num(c.actor_infer_s)),
+            ("learner_grad_s", Json::num(c.learner_grad_s)),
+            ("learner_collective_s", Json::num(c.learner_collective_s)),
+            ("learner_apply_s", Json::num(c.learner_apply_s)),
+            ("samples", Json::num(c.samples as f64)),
+        ])
+    }
+
+    fn entries_json(&self) -> Json {
+        Json::Arr(
+            self.entries
+                .iter()
+                .map(|((a, e, b), c)| Self::entry_json(a, e, *b, c))
+                .collect(),
+        )
+    }
+
+    /// Canonical serialized form: entries in key order, CRC over the
+    /// canonical entries array, version stamp.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let entries = self.entries_json();
+        let crc = crc32(entries.to_string().as_bytes());
+        Json::obj(vec![
+            ("format_version", Json::num(COST_MODEL_VERSION as f64)),
+            ("crc32", Json::num(crc as f64)),
+            ("entries", entries),
+        ])
+        .to_string()
+        .into_bytes()
+    }
+
+    /// Strict load: parse → version gate → field-by-field validation → CRC
+    /// over the re-canonicalized entries. Every failure is a typed
+    /// [`CostModelError`]; nothing partial ever escapes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, CostModelError> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|e| CostModelError::Parse(format!("not utf-8: {e}")))?;
+        let doc = Json::parse(text).map_err(|e| CostModelError::Parse(e.to_string()))?;
+        let obj = doc
+            .as_obj()
+            .ok_or_else(|| CostModelError::Corrupt("top level is not an object".into()))?;
+        for key in obj.keys() {
+            if !matches!(key.as_str(), "format_version" | "crc32" | "entries") {
+                return Err(CostModelError::Corrupt(format!("unknown top-level key {key:?}")));
+            }
+        }
+        let version = read_u64(&doc, "format_version")?;
+        if version != COST_MODEL_VERSION {
+            return Err(CostModelError::UnsupportedVersion {
+                found: version,
+                expected: COST_MODEL_VERSION,
+            });
+        }
+        let stored = read_u64(&doc, "crc32")?;
+        let stored = u32::try_from(stored)
+            .map_err(|_| CostModelError::Corrupt(format!("crc32 {stored} out of range")))?;
+        let entries = doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| CostModelError::Corrupt("entries is not an array".into()))?;
+
+        let mut model = CostModel::new();
+        for (i, entry) in entries.iter().enumerate() {
+            let (key, costs) = parse_entry(entry)
+                .map_err(|msg| CostModelError::Corrupt(format!("entry {i}: {msg}")))?;
+            if model.entries.insert(key.clone(), costs).is_some() {
+                return Err(CostModelError::Corrupt(format!(
+                    "duplicate entry for ({}, {}, {})",
+                    key.0, key.1, key.2
+                )));
+            }
+        }
+        let computed = crc32(model.entries_json().to_string().as_bytes());
+        if computed != stored {
+            return Err(CostModelError::CrcMismatch { stored, computed });
+        }
+        Ok(model)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), CostModelError> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self, CostModelError> {
+        Self::from_bytes(&std::fs::read(path)?)
+    }
+}
+
+fn read_u64(doc: &Json, key: &str) -> Result<u64, CostModelError> {
+    let n = doc
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| CostModelError::Corrupt(format!("missing numeric key {key:?}")))?;
+    if n.fract() != 0.0 || n < 0.0 || n > u64::MAX as f64 {
+        return Err(CostModelError::Corrupt(format!("{key} is not a non-negative integer: {n}")));
+    }
+    Ok(n as u64)
+}
+
+fn parse_entry(entry: &Json) -> Result<((String, String, usize), StageCosts), String> {
+    const KEYS: [&str; 9] = [
+        "arch",
+        "env",
+        "batch",
+        "env_step_s",
+        "actor_infer_s",
+        "learner_grad_s",
+        "learner_collective_s",
+        "learner_apply_s",
+        "samples",
+    ];
+    let obj = entry.as_obj().ok_or("not an object")?;
+    for key in obj.keys() {
+        if !KEYS.contains(&key.as_str()) {
+            return Err(format!("unknown key {key:?}"));
+        }
+    }
+    let str_field = |key: &str| -> Result<String, String> {
+        entry
+            .get(key)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| format!("missing string key {key:?}"))
+    };
+    let num_field = |key: &str| -> Result<f64, String> {
+        entry
+            .get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("missing numeric key {key:?}"))
+    };
+    let int_field = |key: &str| -> Result<u64, String> {
+        let n = num_field(key)?;
+        if n.fract() != 0.0 || n < 0.0 || n > u64::MAX as f64 {
+            return Err(format!("{key} is not a non-negative integer: {n}"));
+        }
+        Ok(n as u64)
+    };
+
+    let arch = str_field("arch")?;
+    if !Arch::ALL.iter().any(|a| a.as_str() == arch) {
+        return Err(format!("unknown arch {arch:?}"));
+    }
+    let env = str_field("env")?;
+    let batch = int_field("batch")?;
+    if batch == 0 {
+        return Err("batch must be >= 1".into());
+    }
+    let costs = StageCosts {
+        env_step_s: num_field("env_step_s")?,
+        actor_infer_s: num_field("actor_infer_s")?,
+        learner_grad_s: num_field("learner_grad_s")?,
+        learner_collective_s: num_field("learner_collective_s")?,
+        learner_apply_s: num_field("learner_apply_s")?,
+        samples: int_field("samples")?,
+    };
+    if !costs.finite_nonneg() {
+        return Err("stage seconds must be finite and non-negative".into());
+    }
+    Ok(((arch, env, batch as usize), costs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_model() -> CostModel {
+        let mut m = CostModel::new();
+        m.insert(
+            Arch::Sebulba,
+            "catch",
+            16,
+            StageCosts {
+                env_step_s: 1e-5,
+                actor_infer_s: 2e-5,
+                learner_grad_s: 3e-5,
+                learner_collective_s: 4e-4,
+                learner_apply_s: 5e-4,
+                samples: 1,
+            },
+        );
+        m.insert(
+            Arch::Anakin,
+            "catch",
+            1,
+            StageCosts { actor_infer_s: 1e-4, env_step_s: 2e-5, samples: 1, ..Default::default() },
+        );
+        m
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = sample_model();
+        let loaded = CostModel::from_bytes(&m.to_bytes()).unwrap();
+        assert_eq!(loaded, m);
+    }
+
+    #[test]
+    fn observe_is_weighted_mean() {
+        let mut m = CostModel::new();
+        let obs = |infer: f64| StageCosts { actor_infer_s: infer, samples: 1, ..Default::default() };
+        m.insert(Arch::Sebulba, "catch", 16, obs(1.0));
+        m.insert(Arch::Sebulba, "catch", 16, obs(3.0));
+        let (_, c) = m.lookup(Arch::Sebulba, "catch", 16).unwrap();
+        assert_eq!(c.actor_infer_s, 2.0);
+        assert_eq!(c.samples, 2);
+    }
+
+    #[test]
+    fn lookup_nearest_batch_ties_to_smaller() {
+        let mut m = CostModel::new();
+        let c = StageCosts { samples: 1, ..Default::default() };
+        m.insert(Arch::Sebulba, "catch", 8, c);
+        m.insert(Arch::Sebulba, "catch", 32, c);
+        assert_eq!(m.lookup(Arch::Sebulba, "catch", 8).unwrap().0, 8);
+        assert_eq!(m.lookup(Arch::Sebulba, "catch", 30).unwrap().0, 32);
+        // equidistant from 8 and 32: the smaller batch wins, deterministically
+        assert_eq!(m.lookup(Arch::Sebulba, "catch", 20).unwrap().0, 8);
+        assert!(m.lookup(Arch::Sebulba, "atari_like", 8).is_none());
+        assert!(m.lookup(Arch::MuZero, "catch", 8).is_none());
+    }
+
+    #[test]
+    fn version_gate_is_typed() {
+        let text = String::from_utf8(sample_model().to_bytes()).unwrap();
+        let bumped = text.replace("\"format_version\":1", "\"format_version\":99");
+        match CostModel::from_bytes(bumped.as_bytes()) {
+            Err(CostModelError::UnsupportedVersion { found: 99, expected: 1 }) => {}
+            other => panic!("expected UnsupportedVersion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_is_typed_parse_error() {
+        let bytes = sample_model().to_bytes();
+        for cut in [0, 1, bytes.len() / 2, bytes.len() - 1] {
+            match CostModel::from_bytes(&bytes[..cut]) {
+                Err(CostModelError::Parse(_)) => {}
+                other => panic!("truncation at {cut} should be Parse, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn value_flip_is_crc_mismatch() {
+        let text = String::from_utf8(sample_model().to_bytes()).unwrap();
+        // Flip one digit inside a stored stage cost: still valid JSON, still
+        // a valid schema — only the CRC can catch it.
+        let flipped = text.replace("\"samples\":1", "\"samples\":7");
+        match CostModel::from_bytes(flipped.as_bytes()) {
+            Err(CostModelError::CrcMismatch { .. }) => {}
+            other => panic!("expected CrcMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_key_is_corrupt() {
+        let text = String::from_utf8(sample_model().to_bytes()).unwrap();
+        let renamed = text.replace("\"env_step_s\"", "\"env_stop_s\"");
+        match CostModel::from_bytes(renamed.as_bytes()) {
+            Err(CostModelError::Corrupt(_)) => {}
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn save_load_file() {
+        let dir = std::env::temp_dir().join(format!("podracer_cm_{}", std::process::id()));
+        let path = dir.join("cost_model.json");
+        let m = sample_model();
+        m.save(&path).unwrap();
+        assert_eq!(CostModel::load(&path).unwrap(), m);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,692 @@
+//! Cost-model-driven topology planning (DESIGN.md §17).
+//!
+//! The repo measures per-stage costs everywhere (`RunStats`,
+//! `table_cost_model`, every [`Report`](crate::experiment::Report)) and has
+//! a typed [`Topology`] with a feasibility oracle (`validate_for_pod`) —
+//! this module closes the loop. A [`CostModel`] stores measured per-stage
+//! seconds/item keyed by `(arch, env, batch)`; the [`Planner`] enumerates
+//! every feasible topology for a pod, predicts each candidate's
+//! steady-state throughput as the bottleneck stage's rate under the
+//! pipeline-overlap model (DESIGN.md §§1, 9), and returns the ranked
+//! candidates. Surfaced three ways:
+//!
+//! * [`Topology::auto`] — library entrypoint: the argmax topology.
+//! * `--topology auto` on the training subcommands (`experiment::from_args`).
+//! * `podracer plan` — the ranked candidate table, with `--calibrate` to
+//!   bootstrap a model from short runs and `--measure` to check the
+//!   prediction against real runs ([`cli`]).
+//!
+//! ## The prediction model
+//!
+//! All costs are *core*-seconds per frame (or wall seconds per update for
+//! the collective/apply), so rates compose linearly in cores:
+//!
+//! * **actor rate** = `actor_cores / actor_infer_s` when env stepping is
+//!   hidden behind the device (threads > 1 or pipeline_stages > 1 — the
+//!   split-batch overlap of DESIGN.md §1), else
+//!   `actor_cores / (actor_infer_s + env_step_s)`.
+//! * **learner rate**: one update consumes `stage_batch × unroll /
+//!   micro_batches` frames; its grad round walls
+//!   `learner_grad_s × frames / learner_cores`, and the
+//!   collective+apply overhead overlaps the next round's grads when
+//!   `learner_pipeline > 1` (DESIGN.md §9) — so the update wall is
+//!   `max(grad, overhead)` pipelined, `grad + overhead` serial.
+//! * **predicted throughput** = `min(actor rate, learner rate)`; the argmin
+//!   is reported as the bottleneck stage.
+//!
+//! Anakin has a single fused stage: `cores / (device_s + host_s)`.
+
+pub mod cli;
+mod cost_model;
+
+pub use cost_model::{CostModel, CostModelError, StageCosts, COST_MODEL_VERSION};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::Sebulba;
+use crate::experiment::{Arch, EnvKind, Topology};
+use crate::runtime::Manifest;
+use crate::search::MuZero;
+
+/// What to plan for: the workload half of the question. The topology half
+/// is the planner's output.
+#[derive(Clone, Debug)]
+pub struct PlanRequest {
+    pub arch: Arch,
+    /// Agent tag in the artifact manifest.
+    pub agent: String,
+    /// Cost-model cell label (an [`EnvKind::as_str`] name).
+    pub env: String,
+    /// Core budget the topology must fit (`validate_for_pod`'s bound).
+    pub pod_cores: usize,
+    /// Actor batch (Sebulba; MuZero reads its batch from the manifest,
+    /// Anakin's per-core loop is keyed as batch 1).
+    pub actor_batch: usize,
+    pub unroll: usize,
+    pub micro_batches: usize,
+}
+
+impl PlanRequest {
+    /// Per-arch default workload, mirroring the CLI defaults.
+    pub fn new(arch: Arch, pod_cores: usize) -> Self {
+        let (agent, batch, unroll) = match arch {
+            Arch::Anakin => ("anakin_catch", 1, 1),
+            Arch::Sebulba => ("seb_catch", 32, 20),
+            Arch::MuZero => ("mz_catch", 8, 16),
+        };
+        Self {
+            arch,
+            agent: agent.to_string(),
+            env: EnvKind::Catch.as_str().to_string(),
+            pod_cores,
+            actor_batch: batch,
+            unroll,
+            micro_batches: 1,
+        }
+    }
+}
+
+/// One enumerated topology with its predicted throughput.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub topology: Topology,
+    /// Predicted steady-state frames/sec (the bottleneck stage's rate).
+    pub predicted_fps: f64,
+    /// Which stage bounds the prediction ("actor" | "learner" | "replica").
+    pub bottleneck: &'static str,
+    /// Filled by `podracer plan --measure` (short real runs).
+    pub measured_fps: Option<f64>,
+}
+
+/// The ranked plan: `candidates[0]` is the argmax prediction.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub arch: Arch,
+    pub env: String,
+    pub pod_cores: usize,
+    /// The cost-model batch cell the prediction used (nearest match).
+    pub model_batch: usize,
+    /// Feasible candidates, best predicted first; never empty.
+    pub candidates: Vec<Candidate>,
+}
+
+impl Plan {
+    pub fn best(&self) -> &Candidate {
+        &self.candidates[0]
+    }
+
+    /// The ranked table `podracer plan` prints.
+    pub fn table(&self) -> String {
+        let mut out = format!(
+            "plan: {} env={} pod_cores={} (cost cell: batch {})\n\
+             {:>4}  {:<28} {:>14}  {:<10} {:>12}\n",
+            self.arch, self.env, self.pod_cores, self.model_batch,
+            "rank", "topology", "predicted fps", "bottleneck", "measured fps",
+        );
+        for (i, c) in self.candidates.iter().enumerate() {
+            let measured = match c.measured_fps {
+                Some(fps) => format!("{fps:.1}"),
+                None => "-".to_string(),
+            };
+            out.push_str(&format!(
+                "{:>4}  {:<28} {:>14.1}  {:<10} {:>12}\n",
+                i + 1,
+                topology_label(&c.topology),
+                c.predicted_fps,
+                c.bottleneck,
+                measured,
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("arch", Json::str(self.arch.as_str())),
+            ("env", Json::str(&self.env)),
+            ("pod_cores", Json::num(self.pod_cores as f64)),
+            ("model_batch", Json::num(self.model_batch as f64)),
+            (
+                "candidates",
+                Json::Arr(
+                    self.candidates
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("topology", Json::str(&topology_label(&c.topology))),
+                                ("actor_cores", Json::num(c.topology.actor_cores as f64)),
+                                ("learner_cores", Json::num(c.topology.learner_cores as f64)),
+                                (
+                                    "threads",
+                                    Json::num(c.topology.threads_per_actor_core as f64),
+                                ),
+                                (
+                                    "pipeline_stages",
+                                    Json::num(c.topology.pipeline_stages as f64),
+                                ),
+                                (
+                                    "learner_pipeline",
+                                    Json::num(c.topology.learner_pipeline as f64),
+                                ),
+                                ("predicted_fps", Json::num(c.predicted_fps)),
+                                ("bottleneck", Json::str(c.bottleneck)),
+                                (
+                                    "measured_fps",
+                                    match c.measured_fps {
+                                        Some(fps) => Json::num(fps),
+                                        None => Json::Null,
+                                    },
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Compact one-line topology description for tables and logs.
+pub fn topology_label(t: &Topology) -> String {
+    if t.actor_cores == 0 {
+        format!("anakin({}c)", t.learner_cores)
+    } else {
+        format!(
+            "{}a+{}l t{} s{} lp{}",
+            t.actor_cores,
+            t.learner_cores,
+            t.threads_per_actor_core,
+            t.pipeline_stages,
+            t.learner_pipeline
+        )
+    }
+}
+
+/// Enumerates feasible topologies and ranks them by predicted throughput.
+pub struct Planner {
+    model: CostModel,
+    manifest: Option<Manifest>,
+}
+
+impl Planner {
+    pub fn new(model: CostModel) -> Self {
+        Self { model, manifest: None }
+    }
+
+    /// Gate candidates on AOT program availability: a topology whose
+    /// inference/grad geometry has no compiled program is infeasible even
+    /// if the shape validates.
+    pub fn with_manifest(mut self, manifest: Manifest) -> Self {
+        self.manifest = Some(manifest);
+        self
+    }
+
+    /// Enumerate feasible topologies for the request, predict each one's
+    /// throughput from the cost model, and return them ranked (ties break
+    /// deterministically: fewer cores, then topology fingerprint).
+    pub fn plan(&self, req: &PlanRequest) -> Result<Plan> {
+        if req.pod_cores == 0 {
+            bail!("pod_cores must be >= 1");
+        }
+        let Some((model_batch, costs)) = self.model.lookup(
+            req.arch,
+            &req.env,
+            self.lookup_batch(req),
+        ) else {
+            bail!(
+                "no cost-model entry for arch={} env={} — bootstrap one with \
+                 `make bench-smoke` or `podracer plan --calibrate`",
+                req.arch,
+                req.env
+            );
+        };
+        let costs = *costs;
+        let mut candidates: Vec<Candidate> = match req.arch {
+            Arch::Anakin => self.anakin_candidates(req, &costs),
+            Arch::Sebulba => self.sebulba_candidates(req, &costs),
+            Arch::MuZero => self.muzero_candidates(req, &costs),
+        };
+        if candidates.is_empty() {
+            bail!(
+                "no feasible {} topology for agent {:?} within {} cores",
+                req.arch,
+                req.agent,
+                req.pod_cores
+            );
+        }
+        candidates.sort_by(|a, b| {
+            b.predicted_fps
+                .partial_cmp(&a.predicted_fps)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.topology.total_cores().cmp(&b.topology.total_cores()))
+                .then_with(|| a.topology.fingerprint().cmp(&b.topology.fingerprint()))
+        });
+        Ok(Plan {
+            arch: req.arch,
+            env: req.env.clone(),
+            pod_cores: req.pod_cores,
+            model_batch,
+            candidates,
+        })
+    }
+
+    /// The batch the cost cell is keyed by (public so `podracer plan
+    /// --calibrate` folds its measurement into the same cell `plan` reads).
+    pub fn cell_batch(&self, req: &PlanRequest) -> usize {
+        self.lookup_batch(req)
+    }
+
+    /// The same feasibility oracle the enumeration applies, for one
+    /// concrete topology — `--calibrate` probes its bootstrap candidates
+    /// with this before any cost cell exists.
+    pub fn is_feasible(&self, req: &PlanRequest, topo: &Topology) -> bool {
+        match req.arch {
+            Arch::Anakin => {
+                let agent_ok = match &self.manifest {
+                    None => true,
+                    Some(m) => m.agent(&req.agent).is_ok(),
+                };
+                agent_ok
+                    && topo.actor_cores == 0
+                    && topo.validate_for_pod(req.pod_cores).is_ok()
+            }
+            Arch::Sebulba => self.sebulba_feasible(&self.sebulba_runner(req), topo, req.pod_cores),
+            Arch::MuZero => {
+                let (batch, unroll) =
+                    self.muzero_geometry(&req.agent).unwrap_or((req.actor_batch, req.unroll));
+                let runner = MuZero { agent: req.agent.clone(), ..MuZero::default() };
+                topo.validate_for_pod(req.pod_cores).is_ok()
+                    && MuZero::check_topology(topo).is_ok()
+                    && runner.resolved(topo).validate().is_ok()
+                    && self.muzero_programs_exist(&req.agent, batch, unroll, topo.learner_cores)
+            }
+        }
+    }
+
+    /// The batch the cost cell is keyed by: MuZero's batch comes from the
+    /// manifest when available, Anakin's per-core loop is keyed as 1.
+    fn lookup_batch(&self, req: &PlanRequest) -> usize {
+        match req.arch {
+            Arch::Anakin => 1,
+            Arch::Sebulba => req.actor_batch,
+            Arch::MuZero => self
+                .muzero_geometry(&req.agent)
+                .map(|(batch, _)| batch)
+                .unwrap_or(req.actor_batch),
+        }
+    }
+
+    fn anakin_candidates(&self, req: &PlanRequest, costs: &StageCosts) -> Vec<Candidate> {
+        if let Some(m) = &self.manifest {
+            if m.agent(&req.agent).is_err() {
+                return Vec::new();
+            }
+        }
+        (1..=req.pod_cores)
+            .filter_map(|cores| {
+                let topo = Topology::anakin(cores);
+                topo.validate_for_pod(req.pod_cores).ok()?;
+                let per_step = costs.actor_infer_s + costs.env_step_s;
+                Some(Candidate {
+                    topology: topo,
+                    predicted_fps: rate(cores as f64, per_step),
+                    bottleneck: "replica",
+                    measured_fps: None,
+                })
+            })
+            .collect()
+    }
+
+    /// The request's workload half as a [`Sebulba`] runner, for geometry
+    /// validation (env-agnostic — the env only matters at run time).
+    fn sebulba_runner(&self, req: &PlanRequest) -> Sebulba {
+        Sebulba {
+            agent: req.agent.clone(),
+            env_kind: EnvKind::Catch, // geometry validation only; env-agnostic
+            actor_batch: req.actor_batch,
+            unroll: req.unroll,
+            micro_batches: req.micro_batches,
+            ..Sebulba::default()
+        }
+    }
+
+    fn sebulba_candidates(&self, req: &PlanRequest, costs: &StageCosts) -> Vec<Candidate> {
+        let runner = self.sebulba_runner(req);
+        let mut out = Vec::new();
+        for actor_cores in 1..req.pod_cores {
+            for learner_cores in 1..=(req.pod_cores - actor_cores) {
+                for threads in [1usize, 2] {
+                    for stages in [1usize, 2] {
+                        for lpipe in [1usize, 2] {
+                            let topo = Topology {
+                                actor_cores,
+                                learner_cores,
+                                threads_per_actor_core: threads,
+                                pipeline_stages: stages,
+                                learner_pipeline: lpipe,
+                                ..Topology::default()
+                            };
+                            if !self.sebulba_feasible(&runner, &topo, req.pod_cores) {
+                                continue;
+                            }
+                            let (fps, bottleneck) = predict_actor_learner(
+                                costs,
+                                &topo,
+                                req.actor_batch,
+                                req.unroll,
+                                req.micro_batches,
+                            );
+                            out.push(Candidate {
+                                topology: topo,
+                                predicted_fps: fps,
+                                bottleneck,
+                                measured_fps: None,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn sebulba_feasible(&self, runner: &Sebulba, topo: &Topology, pod_cores: usize) -> bool {
+        if topo.validate_for_pod(pod_cores).is_err() {
+            return false;
+        }
+        let cfg = runner.resolved(topo);
+        if cfg.validate().is_err() {
+            return false;
+        }
+        match &self.manifest {
+            None => true,
+            Some(m) => [
+                cfg.infer_program(),
+                cfg.grad_program(),
+                cfg.apply_program(),
+                cfg.init_program(),
+            ]
+            .iter()
+            .all(|p| m.programs.contains_key(p)),
+        }
+    }
+
+    /// MuZero's `(batch, unroll)` come from the agent's manifest entry.
+    fn muzero_geometry(&self, agent: &str) -> Option<(usize, usize)> {
+        let meta = self.manifest.as_ref()?.agent(agent).ok()?;
+        Some((meta.extra_usize("batch").ok()?, meta.extra_usize("unroll").ok()?))
+    }
+
+    fn muzero_candidates(&self, req: &PlanRequest, costs: &StageCosts) -> Vec<Candidate> {
+        let geometry = self.muzero_geometry(&req.agent);
+        let (batch, unroll) = geometry.unwrap_or((req.actor_batch, req.unroll));
+        let runner = MuZero { agent: req.agent.clone(), ..MuZero::default() };
+        let mut out = Vec::new();
+        for actor_cores in 1..req.pod_cores {
+            for learner_cores in 1..=(req.pod_cores - actor_cores) {
+                for lpipe in [1usize, 2] {
+                    let topo = Topology {
+                        actor_cores,
+                        learner_cores,
+                        threads_per_actor_core: 1,
+                        pipeline_stages: 1,
+                        learner_pipeline: lpipe,
+                        ..Topology::default()
+                    };
+                    if topo.validate_for_pod(req.pod_cores).is_err()
+                        || MuZero::check_topology(&topo).is_err()
+                        || runner.resolved(&topo).validate().is_err()
+                        || !self.muzero_programs_exist(&req.agent, batch, unroll, learner_cores)
+                    {
+                        continue;
+                    }
+                    let (fps, bottleneck) = predict_actor_learner(costs, &topo, batch, unroll, 1);
+                    out.push(Candidate {
+                        topology: topo,
+                        predicted_fps: fps,
+                        bottleneck,
+                        measured_fps: None,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    fn muzero_programs_exist(
+        &self,
+        agent: &str,
+        batch: usize,
+        unroll: usize,
+        learner_cores: usize,
+    ) -> bool {
+        let Some(m) = &self.manifest else {
+            return true;
+        };
+        if batch % learner_cores != 0 {
+            return false;
+        }
+        let shard = batch / learner_cores;
+        [
+            format!("{agent}_represent_b{batch}"),
+            format!("{agent}_dynpred_b{batch}"),
+            format!("{agent}_predict_b{batch}"),
+            format!("{agent}_grad_t{unroll}_b{shard}"),
+            format!("{agent}_apply"),
+            format!("{agent}_init"),
+        ]
+        .iter()
+        .all(|p| m.programs.contains_key(p))
+    }
+}
+
+/// `cores / per_item_cost`, infinite when the model has no cost for the
+/// stage (a zero cell never vetoes a candidate, it just can't rank it).
+fn rate(cores: f64, per_item: f64) -> f64 {
+    if per_item > 0.0 {
+        cores / per_item
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// The decomposed actor/learner prediction (module docs; DESIGN.md §17).
+fn predict_actor_learner(
+    costs: &StageCosts,
+    topo: &Topology,
+    batch: usize,
+    unroll: usize,
+    micro_batches: usize,
+) -> (f64, &'static str) {
+    let env_hidden = topo.threads_per_actor_core > 1 || topo.pipeline_stages > 1;
+    let actor_cost = if env_hidden {
+        costs.actor_infer_s
+    } else {
+        costs.actor_infer_s + costs.env_step_s
+    };
+    let actor_rate = rate(topo.actor_cores as f64, actor_cost);
+
+    let stage_batch = batch / topo.pipeline_stages.max(1);
+    let frames_per_update = (stage_batch * unroll) as f64 / micro_batches.max(1) as f64;
+    let grad_wall = costs.learner_grad_s * frames_per_update / topo.learner_cores as f64;
+    let overhead = costs.learner_collective_s + costs.learner_apply_s;
+    let update_wall =
+        if topo.learner_pipeline > 1 { grad_wall.max(overhead) } else { grad_wall + overhead };
+    let learner_rate =
+        if update_wall > 0.0 { frames_per_update / update_wall } else { f64::INFINITY };
+
+    if actor_rate <= learner_rate {
+        (actor_rate, "actor")
+    } else {
+        (learner_rate, "learner")
+    }
+}
+
+impl Topology {
+    /// Pick the best topology for `(arch, agent, env)` within `pod_cores`
+    /// from measured costs: enumerate with [`Planner::plan`] under the
+    /// default workload knobs and return the argmax. The artifact manifest
+    /// (when loadable) gates candidates on compiled-program availability.
+    pub fn auto(
+        arch: Arch,
+        agent: &str,
+        env: EnvKind,
+        pod_cores: usize,
+        model: &CostModel,
+    ) -> Result<Topology> {
+        let mut req = PlanRequest::new(arch, pod_cores);
+        req.agent = agent.to_string();
+        req.env = env.as_str().to_string();
+        Self::auto_for(&req, model)
+    }
+
+    /// [`Self::auto`] with full control over the workload knobs — what
+    /// `--topology auto` uses so the planned split matches the batch,
+    /// unroll and micro-batch geometry the run will actually execute.
+    pub fn auto_for(req: &PlanRequest, model: &CostModel) -> Result<Topology> {
+        let mut planner = Planner::new(model.clone());
+        if let Ok(m) = Manifest::load(&crate::artifacts_dir()) {
+            planner = planner.with_manifest(m);
+        }
+        Ok(planner.plan(req)?.best().topology.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model_with(arch: Arch, env: &str, batch: usize, costs: StageCosts) -> CostModel {
+        let mut m = CostModel::new();
+        m.insert(arch, env, batch, costs);
+        m
+    }
+
+    fn seb_costs() -> StageCosts {
+        StageCosts {
+            env_step_s: 2e-5,
+            actor_infer_s: 4e-5,
+            learner_grad_s: 1e-5,
+            learner_collective_s: 2e-4,
+            learner_apply_s: 1e-4,
+            samples: 1,
+        }
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let model = model_with(Arch::Sebulba, "catch", 32, seb_costs());
+        let planner = Planner::new(model);
+        let req = PlanRequest::new(Arch::Sebulba, 4);
+        let a = planner.plan(&req).unwrap();
+        let b = planner.plan(&req).unwrap();
+        let shape = |p: &Plan| {
+            p.candidates
+                .iter()
+                .map(|c| (c.topology.fingerprint(), c.predicted_fps.to_bits()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(shape(&a), shape(&b));
+        assert!(!a.candidates.is_empty());
+    }
+
+    #[test]
+    fn every_candidate_validates_for_pod() {
+        for (arch, env, batch) in
+            [(Arch::Sebulba, "catch", 32), (Arch::Anakin, "catch", 1), (Arch::MuZero, "catch", 8)]
+        {
+            let model = model_with(arch, env, batch, seb_costs());
+            let planner = Planner::new(model);
+            for pod_cores in [2usize, 4, 6] {
+                let req = PlanRequest::new(arch, pod_cores);
+                let plan = planner.plan(&req).unwrap();
+                for c in &plan.candidates {
+                    c.topology.validate_for_pod(pod_cores).unwrap_or_else(|e| {
+                        panic!("{arch} candidate {} infeasible: {e}", topology_label(&c.topology))
+                    });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hidden_env_stepping_beats_serial_actor() {
+        // With env cost comparable to infer cost, the planner must prefer a
+        // topology that hides env stepping (threads or stages > 1).
+        let costs = StageCosts {
+            env_step_s: 4e-5,
+            actor_infer_s: 4e-5,
+            learner_grad_s: 1e-6,
+            ..seb_costs()
+        };
+        let model = model_with(Arch::Sebulba, "catch", 32, costs);
+        let plan = Planner::new(model).plan(&PlanRequest::new(Arch::Sebulba, 4)).unwrap();
+        let best = &plan.best().topology;
+        assert!(
+            best.threads_per_actor_core > 1 || best.pipeline_stages > 1,
+            "expected env-hiding topology, got {}",
+            topology_label(best)
+        );
+    }
+
+    #[test]
+    fn learner_bound_request_gets_learner_cores() {
+        // Make grads overwhelmingly expensive: the best split must give the
+        // learner more cores than the actor side.
+        let costs = StageCosts {
+            env_step_s: 1e-7,
+            actor_infer_s: 1e-7,
+            learner_grad_s: 1e-3,
+            learner_collective_s: 0.0,
+            learner_apply_s: 0.0,
+            samples: 1,
+        };
+        let model = model_with(Arch::Sebulba, "catch", 32, costs);
+        let plan = Planner::new(model).plan(&PlanRequest::new(Arch::Sebulba, 6)).unwrap();
+        let best = &plan.best().topology;
+        assert!(
+            best.learner_cores > best.actor_cores,
+            "expected learner-heavy split, got {}",
+            topology_label(best)
+        );
+        assert_eq!(plan.best().bottleneck, "learner");
+    }
+
+    #[test]
+    fn missing_cell_is_a_hard_error() {
+        let model = model_with(Arch::Sebulba, "catch", 32, seb_costs());
+        let req = PlanRequest {
+            env: "atari_like".to_string(),
+            ..PlanRequest::new(Arch::Sebulba, 4)
+        };
+        let err = Planner::new(model).plan(&req).unwrap_err().to_string();
+        assert!(err.contains("no cost-model entry"), "{err}");
+    }
+
+    #[test]
+    fn anakin_prediction_scales_with_cores() {
+        let costs = StageCosts {
+            env_step_s: 5e-5,
+            actor_infer_s: 5e-5,
+            ..Default::default()
+        };
+        let model = model_with(Arch::Anakin, "catch", 1, costs);
+        let plan = Planner::new(model).plan(&PlanRequest::new(Arch::Anakin, 4)).unwrap();
+        // All-core replica wins and the prediction is cores / per-step cost.
+        assert_eq!(plan.best().topology.learner_cores, 4);
+        let expected = 4.0 / 1e-4;
+        assert!((plan.best().predicted_fps - expected).abs() < 1e-6 * expected);
+    }
+
+    #[test]
+    fn auto_returns_the_argmax() {
+        let model = model_with(Arch::Sebulba, "catch", 32, seb_costs());
+        let topo = Topology::auto(Arch::Sebulba, "seb_catch", EnvKind::Catch, 4, &model).unwrap();
+        let plan = Planner::new(model).plan(&PlanRequest::new(Arch::Sebulba, 4)).unwrap();
+        // `auto` loads the manifest when present, which can only prune the
+        // candidate list — with the default geometry both agree here.
+        assert!(topo.total_cores() <= 4);
+        assert!(plan.candidates.iter().any(|c| c.topology == topo));
+    }
+}

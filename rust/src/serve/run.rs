@@ -202,6 +202,24 @@ impl ServeReport {
             self.rejected_retries,
         )
     }
+
+    /// Machine-readable form (`--report-json`) — stable field names.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("sessions", Json::num(self.sessions as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("admitted", Json::num(self.admitted as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("rejected_retries", Json::num(self.rejected_retries as f64)),
+            ("elapsed_seconds", Json::num(self.elapsed_seconds)),
+            ("rps", Json::num(self.rps)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("mean_ms", Json::num(self.mean_ms)),
+            ("swaps", Json::num(self.swaps as f64)),
+        ])
+    }
 }
 
 /// Spawn the serving loop on `core`: builds the [`SessionSource`] over

@@ -557,6 +557,10 @@ impl DistSebulba {
                 learner_overlap_seconds: stats.learner_overlap_seconds(),
                 queue_push_block_seconds: queue.push_block_seconds(),
                 queue_pop_block_seconds: queue.pop_block_seconds(),
+                infer_calls: stats.infer_calls(),
+                grad_calls: stats.grad_calls(),
+                apply_calls: stats.apply_calls(),
+                env_step_calls: stats.env_step_calls(),
                 pods_joined: stats.pods_joined.load(Ordering::Relaxed),
                 pods_evicted: stats.pods_evicted.load(Ordering::Relaxed),
                 membership_epoch: stats.membership_epoch.load(Ordering::Relaxed),
@@ -1567,6 +1571,10 @@ impl DistSebulba {
                 learner_overlap_seconds: 0.0,
                 queue_push_block_seconds: queue.push_block_seconds(),
                 queue_pop_block_seconds: queue.pop_block_seconds(),
+                infer_calls: stats.infer_calls(),
+                grad_calls: stats.grad_calls(),
+                apply_calls: stats.apply_calls(),
+                env_step_calls: stats.env_step_calls(),
                 pods_joined: 0,
                 pods_evicted: 0,
                 membership_epoch: join_epoch,

@@ -45,6 +45,20 @@ impl Args {
         self.flags.contains_key(key)
     }
 
+    /// Hard-error on flag names the subcommand does not accept — every
+    /// `podracer` surface honours or rejects, never silently ignores.
+    pub fn check_known(&self, cmd: &str, accepted: &[&str]) -> anyhow::Result<()> {
+        for key in self.flags.keys() {
+            if !accepted.contains(&key.as_str()) {
+                anyhow::bail!(
+                    "unknown flag --{key} for `podracer {cmd}` (accepted: {})",
+                    accepted.iter().map(|f| format!("--{f}")).collect::<Vec<_>>().join(" ")
+                );
+            }
+        }
+        Ok(())
+    }
+
     pub fn get_str(&self, key: &str, default: &str) -> String {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
@@ -116,6 +130,14 @@ mod tests {
         let a = parse(&["--a", "--b", "2"]);
         assert_eq!(a.get_str("a", ""), "true");
         assert_eq!(a.get_usize("b", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn check_known_rejects_unknown_flags() {
+        let a = parse(&["--steps", "1"]);
+        assert!(a.check_known("train", &["steps"]).is_ok());
+        let err = a.check_known("train", &["updates"]).unwrap_err().to_string();
+        assert!(err.contains("--steps") && err.contains("--updates"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,83 @@
+//! League integration on real artifacts: the concurrent schedule must be
+//! bit-identical to the serial one — down to the `final_params` CRCs — and
+//! the whole report a pure function of the league config (DESIGN.md §17).
+
+use podracer::league::{League, LeagueConfig};
+
+fn artifacts() -> std::path::PathBuf {
+    let dir = podracer::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    dir
+}
+
+fn small_league(concurrency: usize) -> LeagueConfig {
+    LeagueConfig {
+        players: 3,
+        rounds: 1,
+        updates: 1,
+        seed: 42,
+        concurrency,
+        artifacts: artifacts(),
+        ..LeagueConfig::default()
+    }
+}
+
+#[test]
+fn concurrent_league_is_bit_identical_to_serial() {
+    let serial = League::new(small_league(1)).unwrap().run().unwrap();
+    let concurrent = League::new(small_league(2)).unwrap().run().unwrap();
+    // Whole-report equality: match results (rewards + params CRCs), winner
+    // calls and the standings table must not depend on worker scheduling.
+    assert_eq!(serial.matches, concurrent.matches);
+    assert_eq!(serial.standings, concurrent.standings);
+    assert_eq!(serial.to_json().to_string(), concurrent.to_json().to_string());
+}
+
+#[test]
+fn same_seed_reruns_reproduce_the_report() {
+    // The oracle `scripts/league_smoke.sh` diffs: two runs of the same
+    // config produce byte-identical `--report-json` output.
+    let a = League::new(small_league(2)).unwrap().run().unwrap();
+    let b = League::new(small_league(2)).unwrap().run().unwrap();
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+}
+
+#[test]
+fn league_seed_drives_the_match_outcomes() {
+    let a = League::new(small_league(1)).unwrap().run().unwrap();
+    let b = League::new(LeagueConfig { seed: 43, ..small_league(1) })
+        .unwrap()
+        .run()
+        .unwrap();
+    // A different league seed reseeds every match side, so the trained
+    // params (and their CRCs) must change.
+    assert_ne!(a.matches, b.matches);
+}
+
+#[test]
+fn report_shape_is_a_full_round_robin() {
+    let cfg = small_league(1);
+    let expected = cfg.total_matches();
+    let report = League::new(cfg).unwrap().run().unwrap();
+    assert_eq!(report.matches.len(), expected);
+    assert_eq!(report.standings.len(), 3);
+    // every player appears in players-1 matches per round
+    for s in &report.standings {
+        assert_eq!(s.wins + s.losses + s.draws, 2, "player {}", s.player);
+    }
+    let wins: usize = report.standings.iter().map(|s| s.wins).sum();
+    let losses: usize = report.standings.iter().map(|s| s.losses).sum();
+    assert_eq!(wins, losses);
+}
+
+#[test]
+fn degenerate_league_is_rejected() {
+    for players in [0usize, 1] {
+        let err = League::new(LeagueConfig { players, ..small_league(1) })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("at least 2 players"), "{err}");
+    }
+}

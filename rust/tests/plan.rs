@@ -1,0 +1,138 @@
+//! Planner integration on real artifacts: calibrate a cost model from a
+//! real run, plan against the real manifest, and run the argmax topology
+//! end-to-end (DESIGN.md §17).
+
+use podracer::experiment::{Arch, EnvKind, Experiment, Topology};
+use podracer::plan::{CostModel, PlanRequest, Planner};
+use podracer::runtime::Manifest;
+
+fn artifacts() -> std::path::PathBuf {
+    let dir = podracer::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    dir
+}
+
+/// A short real Sebulba run folded into a fresh model — what
+/// `podracer plan --calibrate` does.
+fn calibrated_model() -> CostModel {
+    let topo = Topology {
+        actor_cores: 1,
+        learner_cores: 2,
+        threads_per_actor_core: 1,
+        pipeline_stages: 2,
+        learner_pipeline: 1,
+        ..Topology::default()
+    };
+    let report = Experiment::new(Arch::Sebulba)
+        .artifacts(&artifacts())
+        .agent("seb_catch")
+        .env(EnvKind::Catch)
+        .topology(topo.clone())
+        .actor_batch(32)
+        .unroll(20)
+        .updates(3)
+        .seed(11)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let mut model = CostModel::new();
+    model.fold(&report, EnvKind::Catch.as_str(), 32, &topo);
+    assert_eq!(model.len(), 1, "calibration run must fold into one cell");
+    model
+}
+
+fn planner(model: CostModel) -> Planner {
+    Planner::new(model).with_manifest(Manifest::load(&artifacts()).unwrap())
+}
+
+#[test]
+fn calibrated_plan_is_deterministic_ranked_and_feasible() {
+    let planner = planner(calibrated_model());
+    let req = PlanRequest::new(Arch::Sebulba, 4);
+    let a = planner.plan(&req).unwrap();
+    let b = planner.plan(&req).unwrap();
+    let shape = |p: &podracer::plan::Plan| {
+        p.candidates
+            .iter()
+            .map(|c| (c.topology.fingerprint(), c.predicted_fps.to_bits()))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(shape(&a), shape(&b), "planning is not deterministic");
+    assert!(!a.candidates.is_empty());
+    for pair in a.candidates.windows(2) {
+        assert!(pair[0].predicted_fps >= pair[1].predicted_fps, "candidates not ranked");
+    }
+    // Every candidate passes the same oracle the runtime applies, with the
+    // manifest gating on compiled-program availability.
+    for c in &a.candidates {
+        c.topology.validate_for_pod(4).unwrap();
+        assert!(planner.is_feasible(&req, &c.topology));
+    }
+}
+
+#[test]
+fn planned_topology_runs_end_to_end() {
+    let planner = planner(calibrated_model());
+    let req = PlanRequest::new(Arch::Sebulba, 4);
+    let best = planner.plan(&req).unwrap().best().topology.clone();
+    // The argmax must not just validate — it must train with the exact
+    // workload knobs the request carried.
+    let report = Experiment::new(Arch::Sebulba)
+        .artifacts(&artifacts())
+        .agent(&req.agent)
+        .env(EnvKind::Catch)
+        .topology(best)
+        .actor_batch(req.actor_batch)
+        .unroll(req.unroll)
+        .updates(2)
+        .seed(5)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(report.updates, 2);
+    assert!(report.throughput > 0.0);
+}
+
+#[test]
+fn auto_for_returns_the_plan_argmax() {
+    let model = calibrated_model();
+    let req = PlanRequest::new(Arch::Sebulba, 4);
+    let auto = Topology::auto_for(&req, &model).unwrap();
+    // `auto_for` loads the same manifest from the artifacts dir, so it must
+    // agree with an explicit manifest-gated plan.
+    let best = planner(model).plan(&req).unwrap().best().topology.clone();
+    assert_eq!(auto, best);
+}
+
+#[test]
+fn calibrated_model_survives_the_file_roundtrip() {
+    let model = calibrated_model();
+    let dir = std::env::temp_dir().join(format!("podracer_plan_it_{}", std::process::id()));
+    let path = dir.join("cost_model.json");
+    model.save(&path).unwrap();
+    let loaded = CostModel::load(&path).unwrap();
+    assert_eq!(loaded, model);
+    // and the loaded model plans identically
+    let req = PlanRequest::new(Arch::Sebulba, 4);
+    let a = planner(model).plan(&req).unwrap();
+    let b = planner(loaded).plan(&req).unwrap();
+    assert_eq!(a.best().topology, b.best().topology);
+    assert_eq!(a.best().predicted_fps.to_bits(), b.best().predicted_fps.to_bits());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn missing_cell_stays_a_hard_error_with_real_manifest() {
+    let planner = planner(calibrated_model());
+    let req = PlanRequest {
+        env: "atari_like".to_string(),
+        agent: "seb_atari".to_string(),
+        ..PlanRequest::new(Arch::Sebulba, 4)
+    };
+    let err = planner.plan(&req).unwrap_err().to_string();
+    assert!(err.contains("no cost-model entry"), "{err}");
+}

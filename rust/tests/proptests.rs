@@ -10,6 +10,7 @@ use podracer::coordinator::sharder::{shard, shard_copying, unshard};
 use podracer::coordinator::trajectory::{TrajArena, TrajectoryBuilder};
 use podracer::envs::{make_factory, BatchedEnv, EnvKind, WorkerPool};
 use podracer::experiment::{Arch, Topology};
+use podracer::plan::{CostModel, CostModelError, StageCosts};
 use podracer::testkit::{check, Gen};
 use podracer::util::math::softmax;
 use podracer::util::rng::Xoshiro256;
@@ -981,6 +982,73 @@ fn prop_membership_epochs_are_monotone_and_ids_never_reused() {
                 ));
             }
             Ok(())
+        },
+    );
+}
+
+// -- cost model (plan::CostModel — DESIGN.md §17) ---------------------------
+
+fn random_cost_model(g: &mut Gen) -> CostModel {
+    let archs = [Arch::Anakin, Arch::Sebulba, Arch::MuZero];
+    let envs = ["catch", "gridworld", "cartpole", "chain", "atari_like"];
+    let batches = [1usize, 4, 8, 16, 32, 64];
+    let mut m = CostModel::new();
+    for _ in 0..g.usize(1, 6).max(1) {
+        let costs = StageCosts {
+            env_step_s: g.f64(0.0, 1e-3),
+            actor_infer_s: g.f64(0.0, 1e-3),
+            learner_grad_s: g.f64(0.0, 1e-3),
+            learner_collective_s: g.f64(0.0, 1e-2),
+            learner_apply_s: g.f64(0.0, 1e-2),
+            samples: g.usize(1, 5).max(1) as u64,
+        };
+        m.insert(*g.pick(&archs), g.pick(&envs), *g.pick(&batches), costs);
+    }
+    m
+}
+
+#[test]
+fn prop_cost_model_roundtrip() {
+    check("cost model serialize/load roundtrip", 60, random_cost_model, |m| {
+        let loaded = CostModel::from_bytes(&m.to_bytes())
+            .map_err(|e| format!("canonical bytes rejected: {e}"))?;
+        if &loaded != m {
+            return Err("roundtrip changed the model".into());
+        }
+        // canonical form is a fixpoint: re-serializing is byte-identical
+        if loaded.to_bytes() != m.to_bytes() {
+            return Err("re-serialization is not canonical".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cost_model_corruption_is_fail_closed() {
+    // Truncations and bit flips must never panic and never silently load a
+    // model other than the one that was saved — every rejection is a typed
+    // CostModelError (the checkpoint discipline, DESIGN.md §13).
+    check(
+        "cost model truncation/flip rejection",
+        60,
+        |g: &mut Gen| (random_cost_model(g), g.usize(0, 1 << 20), g.usize(0, 1 << 20), g.usize(0, 7)),
+        |(m, cut, flip_pos, flip_bit)| {
+            let bytes = m.to_bytes();
+            // any strict prefix is unbalanced JSON: a typed Parse error
+            match CostModel::from_bytes(&bytes[..cut % bytes.len()]) {
+                Err(CostModelError::Parse(_)) => {}
+                other => return Err(format!("truncation not a Parse error: {other:?}")),
+            }
+            // a single bit flip either fails typed, or — when the damaged
+            // text still parses to the identical entries (e.g. a digit
+            // beyond f64 round-trip precision) — loads the identical model
+            let mut flipped = bytes.clone();
+            flipped[flip_pos % bytes.len()] ^= 1 << flip_bit;
+            match CostModel::from_bytes(&flipped) {
+                Err(_) => Ok(()),
+                Ok(loaded) if &loaded == m => Ok(()),
+                Ok(_) => Err("bit flip silently loaded a different model".into()),
+            }
         },
     );
 }

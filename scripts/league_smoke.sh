@@ -1,0 +1,98 @@
+#!/usr/bin/env bash
+# League smoke (ISSUE 10): a 3-player round-robin self-play league through
+# `podracer league`, with determinism as the oracle — two runs of the same
+# seed must produce byte-identical `--report-json` files, and a concurrent
+# schedule (two workers racing over the matchmaking queue on their own
+# pods) must reproduce the serial report exactly, params CRCs included.
+# Degenerate leagues (0 or 1 players) and unknown flags are hard errors.
+#
+# Wired into CI next to plan-smoke; run locally with `make league-smoke`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${PODRACER_BIN:-target/release/podracer}
+if [[ ! -x "$BIN" ]]; then
+    echo "[league-smoke] $BIN missing — run 'cargo build --release' first" >&2
+    exit 1
+fi
+
+TMP=$(mktemp -d)
+trap 'rm -rf "$TMP"' EXIT
+
+fail=0
+
+run_case() {
+    local desc="$1" expect="$2"
+    shift 2
+    echo "== podracer $* =="
+    local out
+    if ! out="$("$BIN" "$@" 2>&1)"; then
+        echo "$out"
+        echo "[league-smoke] FAILED ($desc): nonzero exit" >&2
+        fail=1
+        return
+    fi
+    echo "$out" | head -n 2
+    if ! echo "$out" | grep -Eq "$expect"; then
+        echo "$out"
+        echo "[league-smoke] FAILED ($desc): missing /$expect/" >&2
+        fail=1
+    fi
+}
+
+expect_error() {
+    local desc="$1"
+    shift
+    echo "== podracer $* (must fail) =="
+    local out
+    if out="$("$BIN" "$@" 2>&1)"; then
+        echo "$out"
+        echo "[league-smoke] FAILED ($desc): expected nonzero exit" >&2
+        fail=1
+        return
+    fi
+    echo "$out" | head -n 2
+}
+
+LEAGUE=(league --players 3 --rounds 1 --updates 1 --seed 42)
+
+# --- the league completes and reports a full round-robin ---------------------
+run_case "serial league" 'matches=3' "${LEAGUE[@]}" --report-json "$TMP/serial.json"
+
+# --- determinism: same seed, same report, byte for byte ----------------------
+run_case "serial rerun" 'matches=3' "${LEAGUE[@]}" --report-json "$TMP/rerun.json"
+if ! cmp -s "$TMP/serial.json" "$TMP/rerun.json"; then
+    diff "$TMP/serial.json" "$TMP/rerun.json" || true
+    echo "[league-smoke] FAILED: same-seed reruns differ" >&2
+    fail=1
+fi
+
+# --- concurrent == serial: scheduling must not leak into the results ---------
+run_case "concurrent league" 'matches=3' \
+    "${LEAGUE[@]}" --concurrency 2 --report-json "$TMP/concurrent.json"
+if ! cmp -s "$TMP/serial.json" "$TMP/concurrent.json"; then
+    diff "$TMP/serial.json" "$TMP/concurrent.json" || true
+    echo "[league-smoke] FAILED: concurrent league diverged from serial" >&2
+    fail=1
+fi
+
+# --- a different seed is a different league ----------------------------------
+run_case "reseeded league" 'matches=3' \
+    league --players 3 --rounds 1 --updates 1 --seed 43 --report-json "$TMP/reseeded.json"
+if cmp -s "$TMP/serial.json" "$TMP/reseeded.json"; then
+    echo "[league-smoke] FAILED: seed 42 and 43 produced identical leagues" >&2
+    fail=1
+fi
+
+# --- negative cases ----------------------------------------------------------
+expect_error "zero players"      league --players 0
+expect_error "one player"        league --players 1
+expect_error "zero rounds"       league --players 3 --rounds 0
+expect_error "unknown flag"      league --playerz 4
+expect_error "bare report-json"  league --players 2 --updates 1 --report-json
+
+if [[ "$fail" -ne 0 ]]; then
+    echo "[league-smoke] FAILURES above" >&2
+    exit 1
+fi
+echo "[league-smoke] all cases passed"

@@ -1,0 +1,118 @@
+#!/usr/bin/env bash
+# Planner smoke (ISSUE 10): bootstrap a cost model with `podracer plan
+# --calibrate`, then gate the prediction quality — over the sebulba ×
+# {catch, atari_like} × {4, 6}-core grid the predicted-best topology must
+# land in the top-2 by *measured* throughput (`measured-rank=[12]`). Then
+# drive `--topology auto` end-to-end through all three training
+# architectures against the same model file, and pin the negative cases:
+# conflicting split knobs, bad `--topology` values, planner knobs without
+# `--topology auto`, and a missing cost model are all hard errors.
+#
+# Wired into CI next to cli-smoke; run locally with `make plan-smoke`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${PODRACER_BIN:-target/release/podracer}
+if [[ ! -x "$BIN" ]]; then
+    echo "[plan-smoke] $BIN missing — run 'cargo build --release' first" >&2
+    exit 1
+fi
+
+TMP=$(mktemp -d)
+trap 'rm -rf "$TMP"' EXIT
+CM="$TMP/cost_model.json"
+
+fail=0
+
+run_case() {
+    local desc="$1" expect="$2"
+    shift 2
+    echo "== podracer $* =="
+    local out
+    if ! out="$("$BIN" "$@" 2>&1)"; then
+        echo "$out"
+        echo "[plan-smoke] FAILED ($desc): nonzero exit" >&2
+        fail=1
+        return
+    fi
+    echo "$out" | head -n 2
+    if ! echo "$out" | grep -Eq "$expect"; then
+        echo "$out"
+        echo "[plan-smoke] FAILED ($desc): missing /$expect/" >&2
+        fail=1
+    fi
+}
+
+expect_error() {
+    local desc="$1"
+    shift
+    echo "== podracer $* (must fail) =="
+    local out
+    if out="$("$BIN" "$@" 2>&1)"; then
+        echo "$out"
+        echo "[plan-smoke] FAILED ($desc): expected nonzero exit" >&2
+        fail=1
+        return
+    fi
+    echo "$out" | head -n 2
+}
+
+# --- calibrate: one cell per (arch, env) the grid and auto runs need ---------
+run_case "calibrate sebulba catch" "calibrated:" \
+    plan --calibrate --arch sebulba --env catch --cost-model "$CM"
+run_case "calibrate sebulba atari" "calibrated:" \
+    plan --calibrate --arch sebulba --env atari_like --cost-model "$CM"
+run_case "calibrate anakin" "calibrated:" \
+    plan --calibrate --arch anakin --cost-model "$CM"
+run_case "calibrate muzero" "calibrated:" \
+    plan --calibrate --arch muzero --cost-model "$CM"
+
+# --- the prediction-quality grid: predicted best within top-2 measured -------
+for env in catch atari_like; do
+    for cores in 4 6; do
+        run_case "measure sebulba $env ${cores}c" 'measured-rank=[12]/' \
+            plan --arch sebulba --env "$env" --pod-cores "$cores" \
+            --cost-model "$CM" --measure
+    done
+done
+
+# --- machine-readable plan ---------------------------------------------------
+run_case "plan report-json" "best:" \
+    plan --arch sebulba --env catch --cost-model "$CM" --report-json "$TMP/plan.json"
+if ! grep -q '"candidates"' "$TMP/plan.json"; then
+    echo "[plan-smoke] FAILED: $TMP/plan.json has no candidates" >&2
+    fail=1
+fi
+
+# --- --topology auto end-to-end, all three architectures ---------------------
+run_case "auto sebulba" '(steps|frames)=[1-9]' \
+    sebulba --topology auto --pod-cores 4 --cost-model "$CM" --updates 1
+run_case "auto anakin" '(steps|frames)=[1-9]' \
+    anakin --topology auto --pod-cores 4 --cost-model "$CM" --outer-iters 1
+run_case "auto muzero" '(steps|frames)=[1-9]' \
+    muzero --topology auto --pod-cores 4 --cost-model "$CM" --updates 1 --simulations 4
+run_case "auto sebulba report-json" '(steps|frames)=[1-9]' \
+    sebulba --topology auto --pod-cores 4 --cost-model "$CM" --updates 1 \
+    --report-json "$TMP/run.json"
+if ! grep -q '"throughput"' "$TMP/run.json"; then
+    echo "[plan-smoke] FAILED: $TMP/run.json has no throughput" >&2
+    fail=1
+fi
+
+# --- negative cases: the planner owns the split ------------------------------
+expect_error "auto + split knob"   sebulba --topology auto --actor-cores 2 --cost-model "$CM" --updates 1
+expect_error "auto + pods"         sebulba --topology auto --pods 2 --cost-model "$CM" --updates 1
+expect_error "auto + anakin cores" anakin --topology auto --cores 4 --cost-model "$CM" --outer-iters 1
+expect_error "bad topology value"  sebulba --topology manual --updates 1
+expect_error "pod-cores sans auto" sebulba --pod-cores 4 --updates 1
+expect_error "missing cost model"  sebulba --topology auto --cost-model "$TMP/nope.json" --updates 1
+expect_error "plan missing model"  plan --cost-model "$TMP/nope.json"
+expect_error "anakin batch knob"   plan --arch anakin --batch 8 --cost-model "$CM"
+expect_error "unknown plan flag"   plan --podcores 4 --cost-model "$CM"
+expect_error "bare report-json"    plan --cost-model "$CM" --report-json
+
+if [[ "$fail" -ne 0 ]]; then
+    echo "[plan-smoke] FAILURES above" >&2
+    exit 1
+fi
+echo "[plan-smoke] all cases passed"
